@@ -1,0 +1,32 @@
+//! §Perf: isolate PJRT compute from engine coordination.
+use hetu::engine::{Engine, EngineStrategy};
+use hetu::runtime::HostTensor;
+use std::time::Instant;
+fn main() {
+    let eng = Engine::new("artifacts", EngineStrategy::uniform("solo",1,1,1,8,1), 42, 1e-3).unwrap();
+    let c = eng.runtime.config;
+    let dev = &eng.mesh.devices[0];
+    let mut inputs: Vec<&HostTensor> = vec![];
+    for p in hetu::engine::BLOCK_PARAMS { inputs.push(dev.get(&format!("L0.{p}")).unwrap()); }
+    let x = HostTensor::zeros(vec![c.batch, c.seq, c.hidden]);
+    inputs.push(&x);
+    eng.runtime.call_refs("block_fwd_tp1", &inputs).unwrap();
+    let t = Instant::now();
+    let n = 16;
+    for _ in 0..n { eng.runtime.call_refs("block_fwd_tp1", &inputs).unwrap(); }
+    println!("block_fwd_tp1: {:.1}ms/call", t.elapsed().as_secs_f64()*1e3/n as f64);
+    // bwd
+    let dy = HostTensor::zeros(vec![c.batch, c.seq, c.hidden]);
+    let mut binp = inputs.clone(); binp.push(&dy);
+    eng.runtime.call_refs("block_bwd_tp1", &binp).unwrap();
+    let t = Instant::now();
+    for _ in 0..n { eng.runtime.call_refs("block_bwd_tp1", &binp).unwrap(); }
+    println!("block_bwd_tp1: {:.1}ms/call", t.elapsed().as_secs_f64()*1e3/n as f64);
+    // head
+    let tgt = HostTensor::i32(vec![c.batch, c.seq], vec![1; c.batch*c.seq]).unwrap();
+    let hin = vec![dev.get("gf").unwrap(), dev.get("wout").unwrap(), &x, &tgt];
+    eng.runtime.call_refs("head_step", &hin).unwrap();
+    let t = Instant::now();
+    for _ in 0..n { eng.runtime.call_refs("head_step", &hin).unwrap(); }
+    println!("head_step: {:.1}ms/call", t.elapsed().as_secs_f64()*1e3/n as f64);
+}

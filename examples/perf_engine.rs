@@ -1,0 +1,26 @@
+//! §Perf harness: engine step latency + conversion overhead breakdown.
+use hetu::engine::{Engine, EngineStrategy};
+use hetu::coordinator::SyntheticCorpus;
+use std::time::Instant;
+fn main() {
+    let which = std::env::args().nth(1).unwrap_or_else(|| "solo".into());
+    let strat = match which.as_str() {
+        "tp2" => EngineStrategy::uniform("tp2", 1, 2, 1, 8, 1),
+        "pp2" => EngineStrategy::uniform("pp2", 1, 1, 2, 8, 1),
+        _ => EngineStrategy::uniform("solo", 1, 1, 1, 8, 1),
+    };
+    let mut eng = Engine::new("artifacts", strat, 42, 1e-3).unwrap();
+    let cfg = eng.runtime.config;
+    let mut corpus = SyntheticCorpus::new(7, cfg.vocab);
+    // warmup
+    eng.train_step(&mut |_,_| corpus.microbatch(cfg.batch, cfg.seq)).unwrap();
+    let mut best = f64::INFINITY; let mut total = 0.0;
+    let iters = 3;
+    for _ in 0..iters {
+        let t = Instant::now();
+        eng.train_step(&mut |_,_| corpus.microbatch(cfg.batch, cfg.seq)).unwrap();
+        let dt = t.elapsed().as_secs_f64();
+        best = best.min(dt); total += dt;
+    }
+    println!("{which}: mean {:.3}s best {:.3}s (wire {} elems/step)", total/iters as f64, best, eng.mesh.wire_elems / (iters as u64 + 1));
+}

@@ -1,0 +1,137 @@
+"""AOT exporter: lower the L2 model to HLO **text** artifacts for the Rust
+runtime.
+
+Interchange is HLO text, not a serialized ``HloModuleProto``: jax >= 0.5
+emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    python -m compile.aot --out ../artifacts [--batch 2] [--seq 128]
+
+Emits one ``<name>.hlo.txt`` per exported function plus ``manifest.json``
+describing input shapes/dtypes and output arity (the Rust runtime validates
+against it).
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+TP_DEGREES = (1, 2, 4)
+
+
+def to_hlo_text(fn, specs):
+    """Lower a function at the given ShapeDtypeStructs to HLO text."""
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def export_all(out_dir: str, batch: int, seq: int, cfg: M.ModelCfg):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "config": {
+            "layers": cfg.layers,
+            "hidden": cfg.hidden,
+            "ffn": cfg.ffn,
+            "heads": cfg.heads,
+            "vocab": cfg.vocab,
+            "batch": batch,
+            "seq": seq,
+            "tp_degrees": list(TP_DEGREES),
+        },
+        "artifacts": {},
+    }
+
+    def emit(name, fn, specs, n_outputs):
+        text = to_hlo_text(fn, specs)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                [list(s.shape), "i32" if s.dtype == jnp.int32 else "f32"] for s in specs
+            ],
+            "outputs": n_outputs,
+        }
+        print(f"  {name}: {len(text) / 1024:.0f} KiB, {len(specs)} inputs")
+
+    h = cfg.hidden
+    x_spec = spec((batch, seq, h))
+    tok_spec = spec((batch, seq), jnp.int32)
+
+    # embedding
+    emit(
+        "embed_fwd",
+        lambda emb, tok: (M.embed_fwd(emb, tok),),
+        [spec((cfg.vocab, h)), tok_spec],
+        1,
+    )
+    emit(
+        "embed_bwd",
+        lambda tok, dx: (M.embed_bwd(tok, dx, cfg.vocab),),
+        [tok_spec, x_spec],
+        1,
+    )
+
+    # blocks per TP degree
+    for tp in TP_DEGREES:
+        pshapes = [spec(s) for _, s in M.block_param_shapes(cfg, tp)]
+        emit(
+            f"block_fwd_tp{tp}",
+            functools.partial(
+                lambda tp_, *a: (M.block_fwd(cfg, tp_, True, *a),), tp
+            ),
+            pshapes + [x_spec],
+            1,
+        )
+        emit(
+            f"block_bwd_tp{tp}",
+            functools.partial(lambda tp_, *a: M.block_bwd(cfg, tp_, *a), tp),
+            pshapes + [x_spec, x_spec],
+            9,
+        )
+
+    # head: loss + every gradient in one fused backward (§Perf, L2)
+    emit(
+        "head_step",
+        lambda gf, wout, x, t: M.head_step(cfg, gf, wout, x, t),
+        [spec((h,)), spec((h, cfg.vocab)), x_spec, tok_spec],
+        4,
+    )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {out_dir}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    # Compiled micro-batch shape. Small by default: the validation image is
+    # a single CPU core, and the ~100M-param model costs ~0.6 GFLOP/token.
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+    export_all(args.out, args.batch, args.seq, M.TINY)
+
+
+if __name__ == "__main__":
+    main()

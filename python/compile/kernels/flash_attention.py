@@ -1,0 +1,113 @@
+"""L1 Pallas kernel: causal flash attention (online softmax).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): FlashAttention's GPU
+threadblock schedule is re-expressed as a Pallas grid over
+``(batch, head, q-tile)``. Each grid point holds one ``[block_q, HD]`` query
+tile plus the head's K/V panels in VMEM and streams over K-tiles with the
+running-max/denominator recurrence, accumulating in fp32 — the MXU sees
+``[block_q, HD] x [HD, block_k]`` contractions (128-aligned when
+``block_q = block_k = 128``, HD = 64/128). The softmax never materializes
+the ``S x S`` score matrix in HBM.
+
+``interpret=True`` is mandatory on CPU PJRT (Mosaic custom-calls cannot run
+there); real-TPU perf is estimated from the VMEM/MXU structure in
+EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, causal):
+    qi = pl.program_id(2)
+    q = q_ref[0, :, 0, :]  # [block_q, HD]
+    k = k_ref[0, :, 0, :]  # [S, HD]
+    v = v_ref[0, :, 0, :]  # [S, HD]
+    seq = k.shape[0]
+    hd = q.shape[-1]
+    scale = (1.0 / (hd ** 0.5)).astype(q.dtype) if hasattr(hd, "astype") else 1.0 / (hd ** 0.5)
+    qs = (q * scale).astype(jnp.float32)
+    q_idx = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    num_kb = seq // block_k
+
+    def body(j, carry):
+        acc, m, l = carry
+        kk = jax.lax.dynamic_slice(k, (j * block_k, 0), (block_k, hd)).astype(jnp.float32)
+        vv = jax.lax.dynamic_slice(v, (j * block_k, 0), (block_k, hd)).astype(jnp.float32)
+        s = qs @ kk.T  # [block_q, block_k] on the MXU
+        if causal:
+            k_idx = j * block_k + jax.lax.iota(jnp.int32, block_k)
+            mask = q_idx[:, None] >= k_idx[None, :]
+            s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + p @ vv
+        return acc_new, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, hd), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, num_kb, body, (acc0, m0, l0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+
+
+def flash_attention(
+    q,
+    k,
+    v,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+):
+    """Causal flash attention.
+
+    Args:
+      q, k, v: ``[B, S, NH, HD]``.
+      causal: apply the causal mask.
+      block_q / block_k: VMEM tile sizes (128 aligns with the MXU).
+      interpret: interpret mode (required on CPU PJRT).
+
+    Returns:
+      ``[B, S, NH, HD]``, same dtype as ``q``.
+    """
+    b, s, nh, hd = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    if s % block_q != 0 or s % block_k != 0:
+        raise ValueError(f"sequence {s} must be divisible by blocks {block_q}/{block_k}")
+
+    grid = (b, nh, s // block_q)
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel, block_q=block_q, block_k=block_k, causal=causal
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd), lambda bb, hh, qq: (bb, qq, hh, 0)),
+            pl.BlockSpec((1, s, 1, hd), lambda bb, hh, qq: (bb, 0, hh, 0)),
+            pl.BlockSpec((1, s, 1, hd), lambda bb, hh, qq: (bb, 0, hh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd), lambda bb, hh, qq: (bb, qq, hh, 0)),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def vmem_bytes(s: int, hd: int, block_q: int = 128, block_k: int = 128, elem: int = 4) -> int:
+    """Estimated VMEM residency per grid point (perf-model helper):
+    Q tile + K/V panels + fp32 accumulator + softmax state."""
+    q_tile = block_q * hd * elem
+    kv = 2 * s * hd * elem
+    acc = block_q * hd * 4
+    state = 2 * block_q * 4
+    return q_tile + kv + acc + state

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel is compared
+against its oracle in ``python/tests``, and the backward-pass artifacts are
+built by differentiating *these* (Pallas interpret-mode kernels are not
+generally differentiable without a custom VJP; the math is identical).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, g, eps: float = 1e-6):
+    """RMSNorm over the last dim: ``x / rms(x) * g``.
+
+    Args:
+      x: ``[..., H]`` activations.
+      g: ``[H]`` gain.
+      eps: numerical floor.
+    """
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """Multi-head scaled-dot-product attention.
+
+    Args:
+      q, k, v: ``[B, S, NH, HD]``.
+      causal: apply a causal mask.
+
+    Returns:
+      ``[B, S, NH, HD]`` attention output.
+    """
+    b, s, nh, hd = q.shape
+    scale = 1.0 / jnp.sqrt(hd).astype(q.dtype)
+    # [B, NH, S, S]
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask[None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def softmax_xent_ref(logits, targets):
+    """Mean softmax cross-entropy.
+
+    Args:
+      logits: ``[N, V]``.
+      targets: ``[N]`` int32 class ids.
+    """
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: fused RMSNorm.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): one grid row per (batch,
+sequence-tile); the ``[block_rows, H]`` tile is resident in VMEM, the
+mean-of-squares reduction and the scale are fused in a single pass on the
+VPU — no extra HBM round-trip for the variance. ``interpret=True`` is
+mandatory on the CPU PJRT backend (Mosaic custom-calls cannot run there).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = x * jax.lax.rsqrt(ms + eps) * g_ref[...]
+
+
+def rmsnorm(x, g, eps: float = 1e-6, block_rows: int = 128, interpret: bool = True):
+    """Fused RMSNorm via Pallas.
+
+    Args:
+      x: ``[..., H]`` activations (flattened to rows internally).
+      g: ``[H]`` gain.
+      eps: numerical floor.
+      block_rows: rows per VMEM tile (sublane-aligned; 128 suits the 8x128
+        vector registers and keeps the tile ≤ 128·H·4 bytes of VMEM).
+      interpret: run in interpret mode (required on CPU).
+
+    Returns:
+      Same shape/dtype as ``x``.
+    """
+    orig_shape = x.shape
+    h = x.shape[-1]
+    rows = 1
+    for d in x.shape[:-1]:
+        rows *= d
+    x2 = x.reshape(rows, h)
+
+    rows_padded = ((rows + block_rows - 1) // block_rows) * block_rows
+    if rows_padded != rows:
+        x2 = jnp.pad(x2, ((0, rows_padded - rows), (0, 0)))
+
+    grid = (rows_padded // block_rows,)
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        out_shape=jax.ShapeDtypeStruct((rows_padded, h), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, h), lambda i: (i, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, h), lambda i: (i, 0)),
+        interpret=interpret,
+    )(x2, g)
+    return out[:rows].reshape(orig_shape)

@@ -1,0 +1,172 @@
+"""L2: the JAX model — a parallel-block (GPT-J/PaLM-style) Llama variant.
+
+The residual form ``y = x + Attn(LN(x)) + MLP(LN(x))`` is chosen so that
+Megatron-style tensor parallelism needs exactly **one all-reduce per block
+per direction**, and that all-reduce is *owned by the Rust engine* (L3):
+the per-shard forward returns a partial sum, Rust all-reduces across the TP
+group and adds the residual. The backward artifact recomputes the block
+forward from the saved input (per-block activation checkpointing) and
+returns `(dx_partial, dparams_shard)`; Rust all-reduces `dx_partial` and
+adds `dy`.
+
+Exported functions (AOT-lowered by ``aot.py``):
+
+* ``embed_fwd(emb, tokens) -> x``
+* ``block_fwd_tp{d}(g1, wq, wk, wv, wo, g2, w1, w2, x) -> y_partial``
+* ``block_bwd_tp{d}(params..., x, dy) -> (dx_partial, dparams...)``
+* ``head_fwd(gf, wout, x, targets) -> (loss, dx_seed)`` where ``dx_seed``
+  is ``dL/dx`` (head backward fused into the forward for one fewer
+  artifact round-trip)
+* ``head_grads(gf, wout, x, targets) -> (dgf, dwout)``
+* ``embed_bwd(tokens, dx) -> demb``
+
+The forward uses the L1 Pallas kernels (flash attention, fused RMSNorm);
+backward passes differentiate the jnp oracles (same math — Pallas interpret
+kernels carry no VJP), which keeps gradients exact w.r.t. the reference.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.flash_attention import flash_attention
+from compile.kernels.ref import attention_ref, rmsnorm_ref, softmax_xent_ref
+from compile.kernels.rmsnorm import rmsnorm
+
+
+class ModelCfg:
+    """Tiny-100M architecture (matches rust `ModelCfg::tiny_100m`)."""
+
+    def __init__(self, layers=8, hidden=768, ffn=3072, heads=12, vocab=32000):
+        self.layers = layers
+        self.hidden = hidden
+        self.ffn = ffn
+        self.heads = heads
+        self.vocab = vocab
+        assert hidden % heads == 0
+        self.head_dim = hidden // heads
+
+    def params_per_layer(self):
+        return 4 * self.hidden * self.hidden + 2 * self.hidden * self.ffn
+
+
+TINY = ModelCfg()
+
+
+def block_param_shapes(cfg: ModelCfg, tp: int):
+    """Shard shapes of one block's parameters at TP degree ``tp``."""
+    h, f = cfg.hidden, cfg.ffn
+    assert cfg.heads % tp == 0 and f % tp == 0
+    return [
+        ("g1", (h,)),
+        ("wq", (h, h // tp)),
+        ("wk", (h, h // tp)),
+        ("wv", (h, h // tp)),
+        ("wo", (h // tp, h)),
+        ("g2", (h,)),
+        ("w1", (h, f // tp)),
+        ("w2", (f // tp, h)),
+    ]
+
+
+def block_fwd(cfg: ModelCfg, tp: int, use_pallas: bool, g1, wq, wk, wv, wo, g2, w1, w2, x):
+    """One parallel block's *partial* output for a TP shard.
+
+    ``sum over shards + x`` equals the full block output. The attention
+    heads and FFN columns are Megatron-sharded; RMSNorm gains are
+    replicated.
+    """
+    b, s, h = x.shape
+    nh = cfg.heads // tp
+    norm = rmsnorm if use_pallas else rmsnorm_ref
+    attn_fn = flash_attention if use_pallas else attention_ref
+
+    xn = norm(x, g1)
+    q = (xn @ wq).reshape(b, s, nh, cfg.head_dim)
+    k = (xn @ wk).reshape(b, s, nh, cfg.head_dim)
+    v = (xn @ wv).reshape(b, s, nh, cfg.head_dim)
+    att = attn_fn(q, k, v, causal=True).reshape(b, s, h // tp)
+    att_out = att @ wo  # partial over TP
+
+    xn2 = norm(x, g2)
+    hh = jax.nn.gelu(xn2 @ w1)
+    mlp_out = hh @ w2  # partial over TP
+
+    return att_out + mlp_out
+
+
+def block_bwd(cfg: ModelCfg, tp: int, g1, wq, wk, wv, wo, g2, w1, w2, x, dy):
+    """VJP of the (reference-math) partial block forward.
+
+    Returns ``(dx_partial, dg1, dwq, dwk, dwv, dwo, dg2, dw1, dw2)``.
+    The engine computes ``dx = dy + AllReduce(dx_partial)``.
+    """
+
+    def f(params, xx):
+        return block_fwd(cfg, tp, False, *params, xx)
+
+    params = (g1, wq, wk, wv, wo, g2, w1, w2)
+    _, vjp = jax.vjp(f, params, x)
+    dparams, dx = vjp(dy)
+    return (dx,) + tuple(dparams)
+
+
+def embed_fwd(emb, tokens):
+    """Token embedding lookup: ``[V,H],[B,S] -> [B,S,H]``."""
+    return jnp.take(emb, tokens, axis=0)
+
+
+def embed_bwd(tokens, dx, vocab: int):
+    """Embedding gradient (scatter-add)."""
+    b, s, h = dx.shape
+    flat_tok = tokens.reshape(-1)
+    flat_dx = dx.reshape(-1, h)
+    return jnp.zeros((vocab, h), flat_dx.dtype).at[flat_tok].add(flat_dx)
+
+
+def head_fwd(cfg: ModelCfg, gf, wout, x, targets):
+    """Final RMSNorm + LM head + mean softmax-xent, fused with its own
+    input-gradient (the backward seed Rust feeds into the last block)."""
+
+    def loss_fn(xx):
+        xn = rmsnorm_ref(xx, gf)
+        logits = (xn @ wout).reshape(-1, cfg.vocab)
+        return softmax_xent_ref(logits, targets.reshape(-1))
+
+    loss, dx = jax.value_and_grad(loss_fn)(x)
+    return loss, dx
+
+
+def head_grads(cfg: ModelCfg, gf, wout, x, targets):
+    """Parameter gradients of the head (gain + output matrix)."""
+
+    def loss_fn(gg, ww):
+        xn = rmsnorm_ref(x, gg)
+        logits = (xn @ ww).reshape(-1, cfg.vocab)
+        return softmax_xent_ref(logits, targets.reshape(-1))
+
+    dgf, dwout = jax.grad(loss_fn, argnums=(0, 1))(gf, wout)
+    return dgf, dwout
+
+
+def head_step(cfg: ModelCfg, gf, wout, x, targets):
+    """Fused head: loss + ALL gradients (dx, dgf, dwout) in one backward
+    pass — one PJRT round-trip and one shared forward instead of the
+    separate `head_fwd`/`head_grads` pair (§Perf, L2)."""
+
+    def loss_fn(xx, gg, ww):
+        xn = rmsnorm_ref(xx, gg)
+        logits = (xn @ ww).reshape(-1, cfg.vocab)
+        return softmax_xent_ref(logits, targets.reshape(-1))
+
+    loss, (dx, dgf, dwout) = jax.value_and_grad(loss_fn, argnums=(0, 1, 2))(x, gf, wout)
+    return loss, dx, dgf, dwout
+
+
+def reference_loss(cfg: ModelCfg, params, emb, gf, wout, tokens, targets):
+    """Whole-model single-device loss (oracle for the engine's distributed
+    execution): ``params`` is a list of per-layer tuples at TP=1."""
+    x = embed_fwd(emb, tokens)
+    for layer in params:
+        x = x + block_fwd(cfg, 1, False, *layer, x)
+    loss, _ = head_fwd(cfg, gf, wout, x, targets)
+    return loss

@@ -1,0 +1,133 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracles.
+
+`hypothesis` is unavailable in this image, so the shape/dtype sweeps are
+explicit parameterized grids — same methodology (many distinct cases, each
+asserting allclose against the oracle).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.flash_attention import flash_attention, vmem_bytes
+from compile.kernels.ref import attention_ref, rmsnorm_ref, softmax_xent_ref
+from compile.kernels.rmsnorm import rmsnorm
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ------------------------------------------------------------------ rmsnorm
+
+RMS_SHAPES = [
+    (4, 8),
+    (2, 16, 32),
+    (1, 128, 768),
+    (3, 5, 64),  # rows not a multiple of block_rows → padding path
+    (2, 200, 96),
+]
+
+
+@pytest.mark.parametrize("shape", RMS_SHAPES)
+def test_rmsnorm_matches_ref(shape):
+    key = jax.random.PRNGKey(hash(shape) % (2**31))
+    k1, k2 = jax.random.split(key)
+    x = rand(k1, shape)
+    g = rand(k2, shape[-1:]) + 1.0
+    got = rmsnorm(x, g)
+    want = rmsnorm_ref(x, g)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("block_rows", [8, 32, 128])
+def test_rmsnorm_block_size_invariance(block_rows):
+    key = jax.random.PRNGKey(7)
+    x = rand(key, (4, 96, 64))
+    g = jnp.ones((64,))
+    got = rmsnorm(x, g, block_rows=block_rows)
+    np.testing.assert_allclose(got, rmsnorm_ref(x, g), rtol=1e-5, atol=1e-5)
+
+
+def test_rmsnorm_gain_scales_output():
+    x = rand(jax.random.PRNGKey(0), (2, 8, 16))
+    g = jnp.ones((16,))
+    a = rmsnorm(x, g)
+    b = rmsnorm(x, 2.0 * g)
+    np.testing.assert_allclose(2.0 * a, b, rtol=1e-6)
+
+
+def test_rmsnorm_rms_is_unit():
+    x = rand(jax.random.PRNGKey(1), (3, 4, 256), scale=5.0)
+    out = rmsnorm(x, jnp.ones((256,)))
+    rms = jnp.sqrt(jnp.mean(out**2, axis=-1))
+    np.testing.assert_allclose(rms, jnp.ones_like(rms), rtol=1e-3)
+
+
+# ----------------------------------------------------------- flash attention
+
+ATTN_CASES = [
+    # (B, S, NH, HD, block_q, block_k)
+    (1, 64, 2, 16, 32, 32),
+    (2, 128, 4, 32, 64, 64),
+    (1, 128, 12, 64, 128, 128),
+    (2, 128, 3, 64, 128, 64),
+    (1, 256, 2, 32, 64, 128),
+    (3, 64, 1, 8, 64, 16),
+]
+
+
+@pytest.mark.parametrize("b,s,nh,hd,bq,bk", ATTN_CASES)
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_ref(b, s, nh, hd, bq, bk, causal):
+    key = jax.random.PRNGKey((b * 1000 + s + nh * 7 + hd) % (2**31))
+    kq, kk, kv = jax.random.split(key, 3)
+    q = rand(kq, (b, s, nh, hd))
+    k = rand(kk, (b, s, nh, hd))
+    v = rand(kv, (b, s, nh, hd))
+    got = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    want = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_first_token_is_value():
+    # causal: position 0 attends only to itself → output = v[0]
+    q = rand(jax.random.PRNGKey(3), (1, 64, 2, 16))
+    k = rand(jax.random.PRNGKey(4), (1, 64, 2, 16))
+    v = rand(jax.random.PRNGKey(5), (1, 64, 2, 16))
+    out = flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
+    np.testing.assert_allclose(out[:, 0], v[:, 0], rtol=1e-5, atol=1e-5)
+
+
+def test_flash_attention_softmax_rows_sum_to_one():
+    # uniform q,k → each row's output is the (masked) mean of v
+    s = 64
+    q = jnp.zeros((1, s, 1, 8))
+    k = jnp.zeros((1, s, 1, 8))
+    v = rand(jax.random.PRNGKey(6), (1, s, 1, 8))
+    out = flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
+    want = jnp.cumsum(v[0, :, 0, :], axis=0) / jnp.arange(1, s + 1)[:, None]
+    np.testing.assert_allclose(out[0, :, 0, :], want, rtol=1e-4, atol=1e-5)
+
+
+def test_flash_attention_rejects_ragged_blocks():
+    q = jnp.zeros((1, 100, 1, 8))
+    with pytest.raises(ValueError):
+        flash_attention(q, q, q, block_q=64, block_k=64)
+
+
+def test_vmem_estimate_is_sane():
+    # S=2048, HD=128 fp32: K/V panels dominate; must stay under 16 MiB VMEM
+    assert vmem_bytes(2048, 128) < 16 * 1024 * 1024
+
+
+# ------------------------------------------------------------------ softmax
+
+def test_xent_matches_manual():
+    logits = rand(jax.random.PRNGKey(9), (32, 50))
+    targets = jax.random.randint(jax.random.PRNGKey(10), (32,), 0, 50)
+    got = softmax_xent_ref(logits, targets)
+    p = jax.nn.log_softmax(logits)
+    want = -jnp.mean(jnp.take_along_axis(p, targets[:, None], axis=-1))
+    np.testing.assert_allclose(got, want, rtol=1e-6)

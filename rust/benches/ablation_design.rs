@@ -1,0 +1,109 @@
+//! Bench: ablations of the design choices DESIGN.md calls out.
+//!
+//! 1. BSR planner ablation — heuristics × fusion over the C1→C2 transition
+//!    (max per-sender volume, message count, estimated wall time);
+//! 2. schedule ablation — GPipe vs 1F1B makespan across micro-batch counts;
+//! 3. strategy-search ablation — generated heterogeneous layouts vs the
+//!    paper's hand-tuned Table 5 entries vs uniform Megatron.
+
+use hetu::cluster::Cluster;
+use hetu::comm::BsrOptions;
+use hetu::costmodel::{CostModel, ModelCfg};
+use hetu::metrics::{fmt_s, Table};
+use hetu::sim::simulate_step;
+use hetu::spec::schedule::ScheduleKind;
+use hetu::strategy::{generate, tables, uniform};
+use hetu::switch::plan_strategy_switch_avoiding;
+
+fn main() {
+    let cluster = Cluster::h20(32);
+    let cm = CostModel::new(ModelCfg::llama_32b());
+    let c1 = tables::hetu_c1_32h20();
+    let c2 = tables::hetu_c2_31h20();
+
+    // ---- 1. BSR planner ablation
+    let mut t1 = Table::new(
+        "Ablation — BSR planner (C1→C2, rank 31 failed)",
+        &["planner", "messages", "max sender MB", "est time"],
+    );
+    for (label, heuristics, fuse) in [
+        ("no heuristics, unfused", false, false),
+        ("no heuristics, fused", false, true),
+        ("heuristics, unfused", true, false),
+        ("heuristics, fused (Hetu)", true, true),
+    ] {
+        let rep = plan_strategy_switch_avoiding(
+            &c1,
+            &c2,
+            &cm,
+            &cluster,
+            BsrOptions { heuristics },
+            fuse,
+            &[31],
+        )
+        .unwrap();
+        let max_sender = rep
+            .plan
+            .sender_volumes(&cluster)
+            .values()
+            .map(|&(a, b)| a + b)
+            .max()
+            .unwrap_or(0);
+        t1.row(vec![
+            label.into(),
+            rep.num_messages.to_string(),
+            (max_sender / (1 << 20)).to_string(),
+            fmt_s(rep.est_seconds),
+        ]);
+    }
+    println!("{}", t1.markdown());
+
+    // ---- 2. schedule ablation
+    let mut t2 = Table::new(
+        "Ablation — schedule × micro-batches (TP4 PP4, 16 H20)",
+        &["microbatches", "GPipe", "1F1B", "GPipe peak act (rel)", "1F1B peak act (rel)"],
+    );
+    let ranks: Vec<u32> = (0..16).collect();
+    for m in [4u64, 8, 16, 32, 64] {
+        let mk = |k| uniform("x", &ranks, 1, 4, 4, 60, m, 1, 4096, k, true, false).unwrap();
+        let cl16 = Cluster::h20(16);
+        let tg = simulate_step(&cl16, &cm, &mk(ScheduleKind::GPipe)).unwrap().step_s;
+        let t1f = simulate_step(&cl16, &cm, &mk(ScheduleKind::OneFOneB)).unwrap().step_s;
+        let rg =
+            hetu::strategy::memory::resident_microbatches(ScheduleKind::GPipe, 4, 0, m as u32);
+        let r1 =
+            hetu::strategy::memory::resident_microbatches(ScheduleKind::OneFOneB, 4, 0, m as u32);
+        t2.row(vec![
+            m.to_string(),
+            fmt_s(tg),
+            fmt_s(t1f),
+            format!("{rg}x"),
+            format!("{r1}x"),
+        ]);
+    }
+    println!("{}", t2.markdown());
+
+    // ---- 3. strategy-search ablation
+    let mut t3 = Table::new(
+        "Ablation — layout source (32B, 16xH800+16xH20)",
+        &["layout", "step time"],
+    );
+    let hetero = Cluster::h800_16_h20_16();
+    let t_table5 =
+        simulate_step(&hetero, &cm, &tables::hetu_32b_16h800_16h20()).unwrap().step_s;
+    let (gen_best, t_gen) = generate::search_best(&hetero, &cm, 64, 4096).unwrap();
+    let mcfg = hetu::baselines::megatron::table4("llama-32b", 16, 16).unwrap();
+    let t_uniform = hetu::baselines::megatron::step_time(&hetero, &cm, mcfg, 64, 4096).unwrap();
+    t3.row(vec!["paper Table 5 (hand-tuned)".into(), fmt_s(t_table5)]);
+    t3.row(vec![format!("cost-model search ({})", gen_best.name), fmt_s(t_gen)]);
+    t3.row(vec!["uniform Megatron".into(), fmt_s(t_uniform)]);
+    println!("{}", t3.markdown());
+    println!(
+        "note: the search optimizes *our* cost model, so it can edge out the\n\
+         paper's layout (which is optimal on the authors' real profiles);\n\
+         both sit far below uniform Megatron — the claim under test.\n\
+         BSR note: with rank 31 dead, the largest single flow has exactly one\n\
+         surviving owner, so every planner shares the same bottleneck sender;\n\
+         heuristics still shift aggregate traffic onto NVLink (see Table 2)."
+    );
+}

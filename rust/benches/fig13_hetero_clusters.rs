@@ -1,0 +1,23 @@
+//! Bench: regenerate Fig 13 (per-step training time across model sizes and
+//! cluster configurations, all four systems). `cargo bench --bench
+//! fig13_hetero_clusters`.
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let (table, rows) = hetu::figures::fig13().expect("fig13");
+    println!("{}", table.markdown());
+    // headline check: Hetu wins every heterogeneous scenario
+    for r in &rows {
+        if !r.label.contains('+') {
+            continue;
+        }
+        let hetu = r.times.iter().find(|(s, _)| *s == "Hetu").unwrap().1;
+        for (sys, t) in &r.times {
+            if *sys != "Hetu" {
+                let verdict = if hetu <= *t { "ok" } else { "VIOLATION" };
+                println!("  {}: Hetu {hetu:.2}s vs {sys} {t:.2}s [{verdict}]", r.label);
+            }
+        }
+    }
+    println!("\n(fig13 generated in {:.2}s)", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,12 @@
+//! Bench: regenerate Fig 14 (elastic training traces on homogeneous and
+//! heterogeneous clusters, with per-configuration step times and
+//! reconfiguration overheads).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    for (name, table) in hetu::figures::fig14().expect("fig14") {
+        let _ = name;
+        println!("{}", table.markdown());
+    }
+    println!("(fig14 generated in {:.2}s)", t0.elapsed().as_secs_f64());
+}

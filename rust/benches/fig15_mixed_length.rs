@@ -1,0 +1,26 @@
+//! Bench: regenerate Fig 15 (mixed-length per-step time distributions for
+//! DeepSpeed / Megatron / HotSPa / Hetu-A / Hetu-B over CommonCrawl- and
+//! GitHub-like workloads at 32K and 16K context).
+
+fn main() {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(30);
+    let t0 = std::time::Instant::now();
+    let (table, cells) = hetu::figures::fig15(steps).expect("fig15");
+    println!("{}", table.markdown());
+    for c in &cells {
+        let mean = |v: &Vec<f64>| v.iter().sum::<f64>() / v.len() as f64;
+        let hetu_b = c.samples.iter().find(|(s, _)| *s == "Hetu-B").unwrap();
+        let hotspa = c.samples.iter().find(|(s, _)| *s == "HotSPa").unwrap();
+        println!(
+            "  {}: Hetu-B {:.2}s vs HotSPa {:.2}s [{}]",
+            c.label,
+            mean(&hetu_b.1),
+            mean(&hotspa.1),
+            if mean(&hetu_b.1) <= mean(&hotspa.1) * 1.02 { "ok" } else { "VIOLATION" }
+        );
+    }
+    println!("\n({} steps/cell, generated in {:.1}s)", steps, t0.elapsed().as_secs_f64());
+}

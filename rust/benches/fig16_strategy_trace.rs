@@ -1,0 +1,19 @@
+//! Bench: regenerate Fig 16 (per-step sequence-length variation and the
+//! heterogeneous strategy Hetu-B selects each step).
+
+fn main() {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100);
+    let table = hetu::figures::fig16(steps).expect("fig16");
+    println!("{}", table.markdown());
+    // distribution check: the paper reports 97% of sequences under 8K
+    let pct: Vec<f64> = table
+        .rows
+        .iter()
+        .map(|r| r[4].trim_end_matches('%').parse::<f64>().unwrap())
+        .collect();
+    let mean = pct.iter().sum::<f64>() / pct.len() as f64;
+    println!("mean %<8K across steps: {mean:.1}% (paper: 97%)");
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate Fig 17 (the C2 deployment's resolved communication
+//! pattern: AG/RS within stages, SR/BSR between, AR/SplitAR for gradient
+//! synchronization).
+
+fn main() {
+    let table = hetu::figures::fig17().expect("fig17");
+    println!("{}", table.markdown());
+}

@@ -1,0 +1,9 @@
+//! Bench: regenerate Fig 18 — left (per-rank time breakdown under C1/C2)
+//! and right (C1→C2 transition overhead with the three BSR planners).
+
+fn main() {
+    let left = hetu::figures::fig18_left().expect("fig18 left");
+    println!("{}", left.markdown());
+    let right = hetu::figures::fig18_right().expect("fig18 right");
+    println!("{}", right.markdown());
+}

@@ -1,0 +1,70 @@
+//! Bench: L3 hot-path micro-benchmarks (the §Perf targets) — BSR planning,
+//! fused transition planning, annotation deduction, full specialization of
+//! a 48-rank 60-layer graph, and the discrete-event simulator.
+
+use hetu::cluster::Cluster;
+use hetu::comm::BsrOptions;
+use hetu::costmodel::{CostModel, ModelCfg};
+use hetu::metrics::bench;
+use hetu::strategy::tables;
+
+fn report(name: &str, iters: u32, f: impl FnMut()) {
+    let (mean, best) = bench(iters, f);
+    println!("{name:<44} mean {:>10.3}ms   best {:>10.3}ms", mean * 1e3, best * 1e3);
+}
+
+fn main() {
+    let cluster = Cluster::h20(32);
+    let cm = CostModel::new(ModelCfg::llama_32b());
+    let c1 = tables::hetu_c1_32h20();
+    let c2 = tables::hetu_c2_31h20();
+    let hetero = Cluster::h800_16_h20_32();
+    let big = tables::hetu_32b_16h800_32h20();
+
+    report("simulate_step C1 (32 ranks, 60 layers)", 50, || {
+        std::hint::black_box(hetu::sim::simulate_step(&cluster, &cm, &c1).unwrap());
+    });
+    report("simulate_step hetero 48-rank strategy", 50, || {
+        std::hint::black_box(hetu::sim::simulate_step(&hetero, &cm, &big).unwrap());
+    });
+    report("plan_strategy_switch C1->C2 (fused)", 20, || {
+        std::hint::black_box(
+            hetu::switch::plan_strategy_switch(&c1, &c2, &cm, &cluster, BsrOptions::default(), true)
+                .unwrap(),
+        );
+    });
+    report("plan_strategy_switch C1->C2 (unfused)", 20, || {
+        std::hint::black_box(
+            hetu::switch::plan_strategy_switch(&c1, &c2, &cm, &cluster, BsrOptions::default(), false)
+                .unwrap(),
+        );
+    });
+
+    // full specialization pipeline on a 60-layer two-strategy graph
+    report("specialize 60-layer graph (deduce+resolve)", 20, || {
+        let (mut g, binding) = hetu::figures::build_strategy_graph(&[&c1, &c2]).unwrap();
+        let spec = hetu::spec::instantiate::specialize(
+            &mut g,
+            1,
+            &binding,
+            &cluster,
+            BsrOptions::default(),
+        )
+        .unwrap();
+        std::hint::black_box(spec.graphs.len());
+    });
+
+    // deduction-only over a wide graph
+    report("deduce 60-layer graph", 50, || {
+        let (mut g, _) = hetu::figures::build_strategy_graph(&[&c1, &c2]).unwrap();
+        hetu::graph::deduce::deduce(&mut g, 0).unwrap();
+        std::hint::black_box(g.ops.len());
+    });
+
+    // Hetu-B per-step planning (dispatch + sim)
+    let mut rng = hetu::testutil::Rng::new(1);
+    let batch = hetu::data::sample_step(&mut rng, hetu::data::Corpus::CommonCrawl, 200_000, 32768);
+    report("hetu_b_step (dispatch + sim)", 20, || {
+        std::hint::black_box(hetu::figures::hetu_b_step(&cluster, &cm, &batch, 32768).unwrap());
+    });
+}

@@ -1,0 +1,28 @@
+//! Bench: regenerate Table 2 (C1→C2 per-sender communication volumes over
+//! NVLink vs InfiniBand, unfused-no-heuristics vs fused BSR planning).
+
+fn main() {
+    let table = hetu::figures::table2().expect("table2");
+    println!("{}", table.markdown());
+
+    // Invariant the paper highlights: both planners move the same total
+    // volume; the fused planner spreads it and prefers NVLink.
+    let sum = |planner: &str, col: usize| -> u64 {
+        table
+            .rows
+            .iter()
+            .filter(|r| r[0] == planner)
+            .map(|r| r[col].parse::<u64>().unwrap_or(0))
+            .sum()
+    };
+    let (u_nv, u_ib) = (sum("unfused w/o heuristics", 2), sum("unfused w/o heuristics", 3));
+    let (f_nv, f_ib) = (sum("fused", 2), sum("fused", 3));
+    println!("unfused totals: NVLink {u_nv} MB + IB {u_ib} MB = {} MB", u_nv + u_ib);
+    println!("fused   totals: NVLink {f_nv} MB + IB {f_ib} MB = {} MB", f_nv + f_ib);
+    println!(
+        "fused NVLink share {:.0}% vs unfused {:.0}% [{}]",
+        100.0 * f_nv as f64 / (f_nv + f_ib).max(1) as f64,
+        100.0 * u_nv as f64 / (u_nv + u_ib).max(1) as f64,
+        if f_nv >= u_nv { "ok" } else { "VIOLATION" }
+    );
+}

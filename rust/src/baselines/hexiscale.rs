@@ -1,0 +1,71 @@
+//! HexiScale baseline (§7.1-II).
+//!
+//! HexiScale supports heterogeneous tensor-parallel grouping and
+//! non-uniform pipeline layering, but: (1) only GPipe scheduling (its tight
+//! coupling of expression and execution blocks 1F1B under non-uniform
+//! partitioning), (2) coarse-grained broadcast for inter-stage activation
+//! transfer, and (3) no ZeRO-series sharding. We model it as the Hetu
+//! heterogeneous layout with those three handicaps applied.
+
+use crate::cluster::Cluster;
+use crate::costmodel::CostModel;
+use crate::sim::{simulate_step_opts, SimOptions};
+use crate::spec::schedule::ScheduleKind;
+use crate::strategy::ParallelStrategy;
+use crate::Result;
+
+/// Transform a Hetu heterogeneous strategy into its HexiScale-expressible
+/// counterpart: GPipe schedule, ZeRO off. Without ZeRO-1 the fp32 optimizer
+/// states stay unsharded, so the memory budget forces activation
+/// checkpointing (backward recompute) — the performance channel through
+/// which the paper's "cannot support ZeRO-series partitioning" materializes.
+pub fn restrict(hetu: &ParallelStrategy) -> ParallelStrategy {
+    let mut s = hetu.clone();
+    s.name = format!("hexiscale({})", hetu.name);
+    s.schedule = ScheduleKind::GPipe;
+    s.zero1 = false;
+    s.ac = true;
+    s
+}
+
+/// HexiScale's simulator options: activation transfer between stages is a
+/// broadcast to every member of the destination TP group rather than a
+/// sharded send (§7.1-II "coarse-grained broadcast"). With TP degree 4 this
+/// is a 4× boundary penalty.
+pub fn sim_options(typical_tp: u32) -> SimOptions {
+    SimOptions { boundary_factor: typical_tp as f64 }
+}
+
+/// Per-step time of the restricted strategy.
+pub fn step_time(cluster: &Cluster, cm: &CostModel, hetu: &ParallelStrategy) -> Result<f64> {
+    let s = restrict(hetu);
+    let tp = s.pipelines[0].stages[0].tp();
+    Ok(simulate_step_opts(cluster, cm, &s, sim_options(tp))?.step_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::ModelCfg;
+    use crate::sim::simulate_step;
+    use crate::strategy::tables;
+
+    #[test]
+    fn hexiscale_is_slower_than_hetu_same_layout() {
+        let cluster = Cluster::h800_16_h20_16();
+        let cm = CostModel::new(ModelCfg::llama_32b());
+        let hetu = tables::hetu_32b_16h800_16h20();
+        let t_hetu = simulate_step(&cluster, &cm, &hetu).unwrap().step_s;
+        let t_hexi = step_time(&cluster, &cm, &hetu).unwrap();
+        assert!(t_hexi > t_hetu, "hexiscale {t_hexi} must trail hetu {t_hetu}");
+    }
+
+    #[test]
+    fn restriction_flips_schedule_and_zero() {
+        let hetu = tables::hetu_32b_16h800_16h20();
+        let r = restrict(&hetu);
+        assert_eq!(r.schedule, ScheduleKind::GPipe);
+        assert!(!r.zero1);
+        assert_eq!(r.pipelines.len(), hetu.pipelines.len());
+    }
+}

@@ -1,0 +1,147 @@
+//! Megatron baseline: uniform DP × TP × PP (× CP) with ZeRO-1.
+//!
+//! Strategies come straight from Tables 4/6/9; they run on the shared
+//! simulator as [`crate::strategy::uniform`] layouts with contiguous rank
+//! assignment — which is exactly why the H20 pipeline throttles the H800
+//! one on heterogeneous clusters (uniform partitioning, §7.1-I).
+
+use crate::cluster::Cluster;
+use crate::costmodel::CostModel;
+use crate::sim::simulate_step;
+use crate::spec::schedule::ScheduleKind;
+use crate::strategy::{uniform, ParallelStrategy};
+use crate::Result;
+
+/// A Megatron configuration row: `DP{dp}TP{tp}PP{pp}(CP{cp}), bs{bs}`.
+#[derive(Clone, Copy, Debug)]
+pub struct MgConfig {
+    /// Data parallel degree.
+    pub dp: u32,
+    /// Tensor parallel degree.
+    pub tp: u32,
+    /// Pipeline parallel degree.
+    pub pp: u32,
+    /// Context parallel degree (sequence sharded; modeled as a TP-like
+    /// multiplier on the group size with ring-attention comm).
+    pub cp: u32,
+    /// Micro-batch size.
+    pub bs: u32,
+}
+
+/// Table 4 rows (heterogeneous clusters).
+pub fn table4(model: &str, h800: u32, h20: u32) -> Option<MgConfig> {
+    let c = |dp, tp, pp, bs| Some(MgConfig { dp, tp, pp, cp: 1, bs });
+    match (model, h800, h20) {
+        ("llama-32b", 16, 0) | ("llama-32b", 0, 16) => c(1, 4, 4, 1),
+        ("llama-32b", 16, 16) => c(2, 4, 4, 2),
+        ("llama-32b", 16, 24) => c(2, 4, 5, 2),
+        ("llama-32b", 16, 32) => c(4, 4, 3, 2),
+        ("llama-70b", 16, 16) => c(1, 8, 4, 1),
+        ("llama-70b", 16, 24) => c(1, 8, 5, 1),
+        ("llama-70b", 16, 32) => c(1, 8, 6, 1),
+        _ => None,
+    }
+}
+
+/// Table 6 rows (elastic training).
+pub fn table6(config: &str) -> Option<MgConfig> {
+    let c = |dp, tp, pp, bs| Some(MgConfig { dp, tp, pp, cp: 1, bs });
+    match config {
+        "C1" => c(2, 4, 4, 2),
+        "C2" | "C3" => c(1, 4, 6, 1),
+        "C4" => c(4, 4, 3, 2),
+        "C5" => c(1, 8, 5, 1),
+        "C6" | "C7" => c(2, 4, 4, 2),
+        _ => None,
+    }
+}
+
+/// Table 9 rows (mixed-length, 32 H20).
+pub fn table9(ctx: u64) -> Option<MgConfig> {
+    match ctx {
+        32768 => Some(MgConfig { dp: 2, tp: 8, pp: 1, cp: 2, bs: 1 }),
+        16384 => Some(MgConfig { dp: 1, tp: 8, pp: 4, cp: 1, bs: 1 }),
+        _ => None,
+    }
+}
+
+/// Build the uniform strategy over the first `dp·tp·pp·cp` alive ranks.
+/// CP is folded into the TP group size for simulation (both shard the
+/// per-layer work across the group with per-layer collectives).
+pub fn strategy(
+    cluster: &Cluster,
+    cfg: MgConfig,
+    layers: u32,
+    global_batch: u64,
+    seq_len: u64,
+) -> Result<ParallelStrategy> {
+    let ranks = cluster.alive_ranks();
+    uniform(
+        &format!("megatron-dp{}tp{}pp{}cp{}", cfg.dp, cfg.tp, cfg.pp, cfg.cp),
+        &ranks,
+        cfg.dp,
+        cfg.tp * cfg.cp,
+        cfg.pp,
+        layers,
+        global_batch,
+        cfg.bs,
+        seq_len,
+        ScheduleKind::OneFOneB,
+        true,
+        false,
+    )
+}
+
+/// Per-step time on the shared simulator.
+pub fn step_time(
+    cluster: &Cluster,
+    cm: &CostModel,
+    cfg: MgConfig,
+    global_batch: u64,
+    seq_len: u64,
+) -> Result<f64> {
+    let s = strategy(cluster, cfg, cm.model.layers, global_batch, seq_len)?;
+    Ok(simulate_step(cluster, cm, &s)?.step_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::ModelCfg;
+
+    #[test]
+    fn uniform_on_hetero_is_slower_than_homo_per_gpu() {
+        let cm = CostModel::new(ModelCfg::llama_32b());
+        // 16 H800 homo
+        let homo = Cluster::h800(16);
+        let t_homo = step_time(&homo, &cm, table4("llama-32b", 16, 0).unwrap(), 64, 4096).unwrap();
+        // 32 mixed: uniform partitioning wastes the H800s
+        let hetero = Cluster::h800_16_h20_16();
+        let t_hetero =
+            step_time(&hetero, &cm, table4("llama-32b", 16, 16).unwrap(), 64, 4096).unwrap();
+        // doubling GPU count with uniform sharding gives much less than 2x
+        assert!(
+            t_hetero > t_homo * 0.6,
+            "uniform megatron barely gains from slow extra GPUs: {t_homo} -> {t_hetero}"
+        );
+    }
+
+    #[test]
+    fn strategies_validate() {
+        let c = Cluster::h800_16_h20_32();
+        for (m, h8, h2) in [("llama-32b", 16u32, 16u32), ("llama-32b", 16, 32), ("llama-70b", 16, 32)] {
+            let cfg = table4(m, h8, h2).unwrap();
+            let layers = if m == "llama-32b" { 60 } else { 80 };
+            let s = strategy(&c, cfg, layers, 64, 4096).unwrap();
+            s.validate(layers).unwrap();
+        }
+    }
+
+    #[test]
+    fn elastic_c2_discards_partial_node() {
+        // C2 (31 GPUs): Megatron can only use 24 (TP4PP6×DP1) — the
+        // paper's uniform-partitioning penalty.
+        let cfg = table6("C2").unwrap();
+        assert_eq!(cfg.dp * cfg.tp * cfg.pp, 24);
+    }
+}

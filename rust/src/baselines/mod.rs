@@ -1,0 +1,23 @@
+//! Baseline systems (§7 comparisons), reimplemented as strategy generators
+//! + behavioural restrictions on the shared simulator.
+//!
+//! The paper's comparisons hinge on each baseline's *expressiveness
+//! restrictions*, which we encode directly:
+//!
+//! * [`deepspeed`] — uniform DP×Ulysses-SP with ZeRO-3 (all-gather weights
+//!   every layer); no heterogeneous sharding; checkpoint-restart on
+//!   failures.
+//! * [`megatron`] — uniform DP×TP×PP(×CP) with ZeRO-1; no heterogeneous
+//!   sharding; checkpoint-restart on failures.
+//! * [`hexiscale`] — heterogeneous pipelines, but GPipe-only scheduling,
+//!   coarse-grained broadcast between stages, no ZeRO (§7.1-II).
+//! * [`oobleck`] — elastic training via pre-defined pipeline templates;
+//!   transitions by naïve model broadcasting (§7.2-II).
+//! * [`hotspa`] — mixed-length training by switching between homogeneous
+//!   strategies *within* a step, with gradient accumulation (§7.3).
+
+pub mod deepspeed;
+pub mod hexiscale;
+pub mod hotspa;
+pub mod megatron;
+pub mod oobleck;

@@ -1,0 +1,159 @@
+//! Oobleck baseline (§7.2-II).
+//!
+//! Oobleck provides restart-free elasticity through *pre-defined pipeline
+//! templates*: the live GPU set must be covered by template instances, and
+//! transitions re-instantiate templates with naïve model broadcasting.
+//! Both restrictions cost performance: template granularity wastes GPUs
+//! that don't fit a template, and the strategy space excludes asymmetric
+//! stages (no C2-style 2-GPU/1-GPU tail).
+
+use crate::cluster::Cluster;
+use crate::costmodel::CostModel;
+use crate::sim::simulate_step;
+use crate::spec::schedule::ScheduleKind;
+use crate::strategy::{ParallelStrategy, PipelineSpec, StageSpec};
+use crate::{Error, Result};
+
+/// A pipeline template: `gpus = tp × stages` per instance.
+#[derive(Clone, Copy, Debug)]
+pub struct Template {
+    /// TP degree per stage.
+    pub tp: u32,
+    /// Stage count.
+    pub stages: u32,
+}
+
+/// Oobleck's template set for the 32B model: 4-stage and 3-stage TP4
+/// pipelines (16 / 12 GPUs per instance).
+pub fn default_templates() -> Vec<Template> {
+    vec![Template { tp: 4, stages: 4 }, Template { tp: 4, stages: 3 }]
+}
+
+/// Cover the alive GPUs with template instances (largest first), splitting
+/// layers evenly per stage. GPUs that fit no template are *wasted* — the
+/// core restriction the paper exploits.
+pub fn strategy(
+    cluster: &Cluster,
+    templates: &[Template],
+    layers: u32,
+    global_batch: u64,
+    seq_len: u64,
+) -> Result<ParallelStrategy> {
+    let alive = cluster.alive_ranks();
+    let mut remaining: &[u32] = &alive;
+    let mut pipelines: Vec<PipelineSpec> = vec![];
+    let mut sorted: Vec<Template> = templates.to_vec();
+    sorted.sort_by_key(|t| std::cmp::Reverse(t.tp * t.stages));
+    while !remaining.is_empty() {
+        let Some(t) = sorted.iter().find(|t| (t.tp * t.stages) as usize <= remaining.len()) else {
+            break; // leftover GPUs wasted
+        };
+        let need = (t.tp * t.stages) as usize;
+        let ranks = &remaining[..need];
+        let mut stages = vec![];
+        let mut l = 0u32;
+        for s in 0..t.stages {
+            let hi = layers * (s + 1) / t.stages;
+            stages.push(StageSpec {
+                ranks: ranks[(s * t.tp) as usize..((s + 1) * t.tp) as usize].to_vec(),
+                layers: (l, hi),
+            });
+            l = hi;
+        }
+        pipelines.push(PipelineSpec { stages, num_microbatches: 1, microbatch_size: 1 });
+        remaining = &remaining[need..];
+    }
+    if pipelines.is_empty() {
+        return Err(Error::Strategy("no template fits the alive GPU set".into()));
+    }
+    // distribute the global batch over pipelines proportionally to GPU count
+    let total_gpus: u64 = pipelines.iter().map(|p| p.ranks().len() as u64).sum();
+    let mut assigned = 0u64;
+    let np = pipelines.len();
+    for (i, p) in pipelines.iter_mut().enumerate() {
+        let share = if i + 1 == np {
+            global_batch - assigned
+        } else {
+            (global_batch * p.ranks().len() as u64 / total_gpus).max(1)
+        };
+        assigned += share;
+        p.num_microbatches = share.max(1) as u32;
+        p.microbatch_size = 1;
+    }
+    Ok(ParallelStrategy {
+        name: "oobleck".into(),
+        pipelines,
+        zero1: false, // fault tolerance requires unsharded optimizer states
+        schedule: ScheduleKind::OneFOneB,
+        seq_len,
+        ac: false,
+    })
+}
+
+/// Per-step time of the template strategy.
+pub fn step_time(
+    cluster: &Cluster,
+    cm: &CostModel,
+    global_batch: u64,
+    seq_len: u64,
+) -> Result<f64> {
+    let s = strategy(cluster, &default_templates(), cm.model.layers, global_batch, seq_len)?;
+    Ok(simulate_step(cluster, cm, &s)?.step_s)
+}
+
+/// Transition overhead: naïve broadcast of the full (bf16) model weights
+/// from one surviving replica to all others, over the slowest link, plus
+/// template re-instantiation.
+pub fn transition_overhead_s(cluster: &Cluster, cm: &CostModel, instantiate_s: f64) -> f64 {
+    let bytes = cm.model.params() as f64 * cm.params.elem_bytes;
+    let alive = cluster.alive_ranks();
+    let min_gbps = alive
+        .iter()
+        .flat_map(|&a| alive.iter().map(move |&b| (a, b)))
+        .filter(|(a, b)| a != b)
+        .map(|(a, b)| cluster.link_gbps(a, b))
+        .fold(f64::INFINITY, f64::min);
+    bytes / (min_gbps * 1e9) + instantiate_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::ModelCfg;
+
+    #[test]
+    fn templates_waste_leftover_gpus() {
+        let mut cluster = Cluster::h20(32);
+        cluster.fail_gpu(31); // 31 left
+        let s = strategy(&cluster, &default_templates(), 60, 64, 4096).unwrap();
+        let used: usize = s.pipelines.iter().map(|p| p.ranks().len()).sum();
+        assert!(used < 31, "templates (16/12 GPUs) cannot cover 31: used {used}");
+        assert_eq!(used, 28); // 16 + 12
+    }
+
+    #[test]
+    fn oobleck_slower_than_hetu_on_c2() {
+        let mut cluster = Cluster::h20(32);
+        cluster.fail_gpu(31);
+        let cm = CostModel::new(ModelCfg::llama_32b());
+        let t_oob = step_time(&cluster, &cm, 64, 4096).unwrap();
+        let hetu = crate::strategy::tables::hetu_c2_31h20();
+        let t_hetu = crate::sim::simulate_step(&cluster, &cm, &hetu).unwrap().step_s;
+        assert!(t_oob > t_hetu, "oobleck {t_oob} vs hetu {t_hetu}");
+    }
+
+    #[test]
+    fn broadcast_transition_is_expensive() {
+        let cluster = Cluster::h20(32);
+        let cm = CostModel::new(ModelCfg::llama_32b());
+        let t = transition_overhead_s(&cluster, &cm, 10.0);
+        assert!(t > 10.0);
+    }
+
+    #[test]
+    fn batch_is_fully_distributed() {
+        let cluster = Cluster::h20(32);
+        let s = strategy(&cluster, &default_templates(), 60, 64, 4096).unwrap();
+        assert_eq!(s.global_batch(), 64);
+    }
+}

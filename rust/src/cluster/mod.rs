@@ -1,0 +1,261 @@
+//! The (simulated) heterogeneous GPU cluster — Appendix A.1, Table 3.
+//!
+//! The paper's testbed is 16×H800 + 32×H20 (ranks 0–15 are H800, 16–47 are
+//! H20), 8 GPUs per node, NVLink intra-node, InfiniBand inter-node. We model
+//! devices by their Table 3 characteristics (BF16 tensor-core TFLOPS, HBM
+//! capacity, NVLink bandwidth) and links by fabric bandwidth + latency; the
+//! [`crate::sim`] discrete-event simulator and the BSR planner's bandwidth
+//! heuristic both read this topology through the [`Bandwidth`] trait.
+
+use crate::comm::Bandwidth;
+use crate::hspmd::dg::Rank;
+
+/// GPUs per node in the paper's cluster.
+pub const GPUS_PER_NODE: u32 = 8;
+/// Inter-node InfiniBand bandwidth (GB/s per GPU direction). The paper does
+/// not state it; 400 Gb/s NDR ≈ 50 GB/s is the contemporary H800/H20
+/// deployment default (substitution documented in DESIGN.md).
+pub const IB_GBPS: f64 = 50.0;
+/// Link latency for point-to-point messages (s).
+pub const LINK_LATENCY_S: f64 = 10e-6;
+
+/// A device model (Table 3 row).
+#[derive(Clone, Copy, PartialEq, Debug)]
+pub struct DeviceKind {
+    /// Marketing name.
+    pub name: &'static str,
+    /// HBM capacity in GiB.
+    pub mem_gib: f64,
+    /// BF16 tensor-core peak TFLOPS.
+    pub bf16_tflops: f64,
+    /// NVLink bandwidth, GB/s (per direction, intra-node).
+    pub nvlink_gbps: f64,
+}
+
+/// NVIDIA H800 (Table 3): 80 GB, 990 TFLOPS BF16, 400 GB/s NVLink.
+pub const H800: DeviceKind =
+    DeviceKind { name: "H800", mem_gib: 80.0, bf16_tflops: 990.0, nvlink_gbps: 400.0 };
+/// NVIDIA H20 (Table 3): 96 GB, 148 TFLOPS BF16, 900 GB/s NVLink.
+pub const H20: DeviceKind =
+    DeviceKind { name: "H20", mem_gib: 96.0, bf16_tflops: 148.0, nvlink_gbps: 900.0 };
+
+/// One physical device slot in the cluster.
+#[derive(Clone, Copy, Debug)]
+pub struct Device {
+    /// Global rank.
+    pub rank: Rank,
+    /// Hardware model.
+    pub kind: DeviceKind,
+    /// Node index (8 GPUs per node).
+    pub node: u32,
+    /// False once failed/removed (elastic scenarios).
+    pub alive: bool,
+}
+
+/// The cluster: an ordered device table plus fabric parameters.
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    /// All device slots (including failed ones, marked dead).
+    pub devices: Vec<Device>,
+    /// Inter-node bandwidth (GB/s).
+    pub ib_gbps: f64,
+}
+
+impl Cluster {
+    /// Build a cluster from homogeneous blocks: `(kind, count)` in rank
+    /// order, packed into nodes of [`GPUS_PER_NODE`].
+    pub fn from_blocks(blocks: &[(DeviceKind, u32)]) -> Cluster {
+        let mut devices = vec![];
+        let mut rank: Rank = 0;
+        for &(kind, count) in blocks {
+            for _ in 0..count {
+                devices.push(Device { rank, kind, node: rank / GPUS_PER_NODE, alive: true });
+                rank += 1;
+            }
+        }
+        Cluster { devices, ib_gbps: IB_GBPS }
+    }
+
+    /// The paper's full testbed: 16×H800 (ranks 0–15) + 32×H20 (16–47).
+    pub fn h800_16_h20_32() -> Cluster {
+        Cluster::from_blocks(&[(H800, 16), (H20, 32)])
+    }
+
+    /// 16×H800 + 24×H20 (three H20 nodes).
+    pub fn h800_16_h20_24() -> Cluster {
+        Cluster::from_blocks(&[(H800, 16), (H20, 24)])
+    }
+
+    /// 16×H800 + 16×H20.
+    pub fn h800_16_h20_16() -> Cluster {
+        Cluster::from_blocks(&[(H800, 16), (H20, 16)])
+    }
+
+    /// Homogeneous H20 cluster of `n` GPUs.
+    pub fn h20(n: u32) -> Cluster {
+        Cluster::from_blocks(&[(H20, n)])
+    }
+
+    /// Homogeneous H800 cluster of `n` GPUs.
+    pub fn h800(n: u32) -> Cluster {
+        Cluster::from_blocks(&[(H800, n)])
+    }
+
+    /// Number of device slots (alive or not).
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// True if no devices.
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Device by rank.
+    pub fn device(&self, rank: Rank) -> &Device {
+        &self.devices[rank as usize]
+    }
+
+    /// Alive ranks, ascending.
+    pub fn alive_ranks(&self) -> Vec<Rank> {
+        self.devices.iter().filter(|d| d.alive).map(|d| d.rank).collect()
+    }
+
+    /// Mark a single GPU failed (elastic trace events).
+    pub fn fail_gpu(&mut self, rank: Rank) {
+        self.devices[rank as usize].alive = false;
+    }
+
+    /// Mark a whole node (8 GPUs) failed.
+    pub fn fail_node(&mut self, node: u32) {
+        for d in &mut self.devices {
+            if d.node == node {
+                d.alive = false;
+            }
+        }
+    }
+
+    /// Restore a rank (rejoin after repair).
+    pub fn restore_gpu(&mut self, rank: Rank) {
+        self.devices[rank as usize].alive = true;
+    }
+
+    /// Effective point-to-point bandwidth between two ranks (GB/s).
+    pub fn link_gbps(&self, a: Rank, b: Rank) -> f64 {
+        if a == b {
+            return f64::INFINITY;
+        }
+        let da = self.device(a);
+        let db = self.device(b);
+        if da.node == db.node {
+            da.kind.nvlink_gbps.min(db.kind.nvlink_gbps)
+        } else {
+            self.ib_gbps
+        }
+    }
+
+    /// Time to move `bytes` between two ranks (s).
+    pub fn transfer_s(&self, a: Rank, b: Rank, bytes: u64) -> f64 {
+        if a == b {
+            return 0.0;
+        }
+        LINK_LATENCY_S + bytes as f64 / (self.link_gbps(a, b) * 1e9)
+    }
+
+    /// Ring-collective time estimate for a group (s): `2(n-1)/n · bytes`
+    /// over the slowest link for all-reduce, `(n-1)/n` for RS/AG.
+    pub fn collective_s(&self, group: &[Rank], bytes: u64, all_reduce: bool) -> f64 {
+        let n = group.len();
+        if n <= 1 {
+            return 0.0;
+        }
+        let mut min_gbps = f64::INFINITY;
+        for w in 0..n {
+            let a = group[w];
+            let b = group[(w + 1) % n];
+            min_gbps = min_gbps.min(self.link_gbps(a, b));
+        }
+        let factor = if all_reduce { 2.0 } else { 1.0 };
+        let steps = (n - 1) as f64;
+        factor * steps / n as f64 * bytes as f64 / (min_gbps * 1e9) + steps * LINK_LATENCY_S
+    }
+}
+
+impl Bandwidth for Cluster {
+    fn gbps(&self, from: Rank, to: Rank) -> f64 {
+        self.link_gbps(from, to)
+    }
+    fn intra_node(&self, from: Rank, to: Rank) -> bool {
+        self.device(from).node == self.device(to).node
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_layout() {
+        let c = Cluster::h800_16_h20_32();
+        assert_eq!(c.len(), 48);
+        assert_eq!(c.device(0).kind.name, "H800");
+        assert_eq!(c.device(15).kind.name, "H800");
+        assert_eq!(c.device(16).kind.name, "H20");
+        assert_eq!(c.device(47).kind.name, "H20");
+        // node packing: 8 per node
+        assert_eq!(c.device(7).node, 0);
+        assert_eq!(c.device(8).node, 1);
+        assert_eq!(c.device(16).node, 2);
+    }
+
+    #[test]
+    fn intra_vs_inter_node_bandwidth() {
+        let c = Cluster::h800_16_h20_32();
+        // both H800, same node → 400 GB/s NVLink
+        assert_eq!(c.link_gbps(0, 1), 400.0);
+        // H20 same node → 900
+        assert_eq!(c.link_gbps(16, 17), 900.0);
+        // cross-node → IB
+        assert_eq!(c.link_gbps(0, 8), IB_GBPS);
+        assert_eq!(c.link_gbps(15, 16), IB_GBPS);
+    }
+
+    #[test]
+    fn failures_update_alive_set() {
+        let mut c = Cluster::h20(32);
+        assert_eq!(c.alive_ranks().len(), 32);
+        c.fail_gpu(31);
+        assert_eq!(c.alive_ranks().len(), 31);
+        c.fail_node(0);
+        assert_eq!(c.alive_ranks().len(), 23);
+        c.restore_gpu(31);
+        assert_eq!(c.alive_ranks().len(), 24);
+        assert!(c.device(31).alive);
+    }
+
+    #[test]
+    fn collective_time_scales_with_group() {
+        let c = Cluster::h20(8);
+        let t2 = c.collective_s(&[0, 1], 1 << 30, true);
+        let t8 = c.collective_s(&[0, 1, 2, 3, 4, 5, 6, 7], 1 << 30, true);
+        assert!(t8 > t2); // (n-1)/n grows
+        let rs = c.collective_s(&[0, 1, 2, 3], 1 << 30, false);
+        let ar = c.collective_s(&[0, 1, 2, 3], 1 << 30, true);
+        assert!((ar / rs - 2.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn transfer_time_includes_latency() {
+        let c = Cluster::h20(16);
+        assert!(c.transfer_s(0, 8, 0) > 0.0);
+        assert_eq!(c.transfer_s(3, 3, 1 << 20), 0.0);
+    }
+
+    #[test]
+    fn bandwidth_trait_consistency() {
+        let c = Cluster::h800_16_h20_32();
+        assert!(c.intra_node(16, 17));
+        assert!(!c.intra_node(15, 16));
+        assert_eq!(c.gbps(16, 17), 900.0);
+    }
+}

@@ -1,0 +1,363 @@
+//! §4.3 — Batched-send-receive (BSR).
+//!
+//! When neither bottom-tier nor top-tier collectives apply, any
+//! re-partitioning that involves no `Partial` values decomposes into point-
+//! to-point transfers of the finest-grained slices. The plan is built from a
+//! *BSR table* (slice → owners → needers) and the paper's three sender-
+//! selection heuristics:
+//!
+//! 1. **local copy** for slices the needer already owns;
+//! 2. prefer the owner with the **highest bandwidth** to the receiver;
+//! 3. tie-break on the **lowest cumulative send load** (then lowest rank id
+//!    for determinism).
+
+use std::collections::HashMap;
+
+use crate::hspmd::dg::Rank;
+use crate::hspmd::slices::{region_elems, regions, DeviceRegion, Region, SliceGrid};
+use crate::hspmd::Annotation;
+use crate::{Error, Result};
+
+/// Bandwidth oracle used by heuristic (2). Implemented by
+/// [`crate::cluster::Topology`]; [`UniformBandwidth`] is the trivial stand-in.
+pub trait Bandwidth {
+    /// Link bandwidth in GB/s between two devices (same-device = +inf
+    /// conceptually; callers never query self-links).
+    fn gbps(&self, from: Rank, to: Rank) -> f64;
+
+    /// True if the pair communicates over the intra-node fabric (NVLink in
+    /// the paper's cluster) rather than the inter-node network (IB).
+    fn intra_node(&self, from: Rank, to: Rank) -> bool;
+}
+
+/// All links equal — reduces heuristic (2) to a no-op.
+pub struct UniformBandwidth;
+
+impl Bandwidth for UniformBandwidth {
+    fn gbps(&self, _from: Rank, _to: Rank) -> f64 {
+        1.0
+    }
+    fn intra_node(&self, _from: Rank, _to: Rank) -> bool {
+        true
+    }
+}
+
+/// One point-to-point slice transfer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Transfer {
+    /// Slice of the global tensor being moved.
+    pub slice: Region,
+    /// Sender rank.
+    pub from: Rank,
+    /// Receiver rank.
+    pub to: Rank,
+}
+
+impl Transfer {
+    /// Payload size in elements.
+    pub fn elems(&self) -> u64 {
+        region_elems(&self.slice)
+    }
+}
+
+/// Planner options — the Fig 18-right / Table 2 ablation axes.
+#[derive(Clone, Copy, Debug)]
+pub struct BsrOptions {
+    /// Apply heuristics (2) bandwidth and (3) load balancing. When false,
+    /// the sender is always the minimal rank id (the paper's "w/o
+    /// heuristics" baseline). Heuristic (1) — local copy — always applies:
+    /// it is a correctness-level optimization.
+    pub heuristics: bool,
+}
+
+impl Default for BsrOptions {
+    fn default() -> Self {
+        BsrOptions { heuristics: true }
+    }
+}
+
+/// A complete BSR plan for one tensor.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct BsrPlan {
+    /// Cross-device transfers.
+    pub transfers: Vec<Transfer>,
+    /// Slices satisfied by local memory copy (heuristic 1).
+    pub local_copies: Vec<(Rank, Region)>,
+}
+
+impl BsrPlan {
+    /// Total elements moved across devices.
+    pub fn wire_elems(&self) -> u64 {
+        self.transfers.iter().map(|t| t.elems()).sum()
+    }
+
+    /// Per-sender wire volume in elements, split (intra-node, inter-node).
+    pub fn sender_volumes(&self, bw: &dyn Bandwidth) -> HashMap<Rank, (u64, u64)> {
+        let mut out: HashMap<Rank, (u64, u64)> = HashMap::new();
+        for t in &self.transfers {
+            let e = out.entry(t.from).or_insert((0, 0));
+            if bw.intra_node(t.from, t.to) {
+                e.0 += t.elems();
+            } else {
+                e.1 += t.elems();
+            }
+        }
+        out
+    }
+}
+
+/// Mutable sender-load state; shared across tensors by the §6.2 fused
+/// planner so heuristic (3) balances the *whole* transition.
+#[derive(Default, Clone, Debug)]
+pub struct LoadTracker {
+    send_elems: HashMap<Rank, u64>,
+}
+
+impl LoadTracker {
+    /// Current cumulative load of `rank` in elements.
+    pub fn load(&self, rank: Rank) -> u64 {
+        self.send_elems.get(&rank).copied().unwrap_or(0)
+    }
+
+    /// Account `elems` sent by `rank`.
+    pub fn add(&mut self, rank: Rank, elems: u64) {
+        *self.send_elems.entry(rank).or_insert(0) += elems;
+    }
+}
+
+/// Build the BSR table and plan for a single tensor.
+///
+/// Errors with [`Error::UnsupportedComm`] if either side involves `Partial`
+/// values (§4.3 *Discussions*: BSR cannot reduce).
+pub fn plan_bsr(
+    src: &Annotation,
+    dst: &Annotation,
+    shape: &[u64],
+    bw: &dyn Bandwidth,
+    opts: BsrOptions,
+    loads: &mut LoadTracker,
+) -> Result<BsrPlan> {
+    plan_bsr_excluding(src, dst, shape, bw, opts, loads, &[])
+}
+
+/// [`plan_bsr`] with `dead` ranks removed from the *source* side (failed
+/// devices cannot send; surviving replicas must cover their slices).
+pub fn plan_bsr_excluding(
+    src: &Annotation,
+    dst: &Annotation,
+    shape: &[u64],
+    bw: &dyn Bandwidth,
+    opts: BsrOptions,
+    loads: &mut LoadTracker,
+    dead: &[Rank],
+) -> Result<BsrPlan> {
+    if src.has_partial() || dst.has_partial() {
+        return Err(Error::UnsupportedComm(format!(
+            "BSR cannot handle Partial tensors (src {}, dst {})",
+            src.describe(),
+            dst.describe()
+        )));
+    }
+    let mut src_regions = regions(src, shape)?;
+    if !dead.is_empty() {
+        src_regions.retain(|r| !dead.contains(&r.rank));
+    }
+    let dst_regions = regions(dst, shape)?;
+    plan_bsr_regions(&src_regions, &dst_regions, shape, bw, opts, loads)
+}
+
+/// BSR planning over precomputed region lists (used by the fused planner).
+pub fn plan_bsr_regions(
+    src_regions: &[DeviceRegion],
+    dst_regions: &[DeviceRegion],
+    shape: &[u64],
+    bw: &dyn Bandwidth,
+    opts: BsrOptions,
+    loads: &mut LoadTracker,
+) -> Result<BsrPlan> {
+    let grid = SliceGrid::build(shape, &[src_regions, dst_regions]);
+    let mut plan = BsrPlan::default();
+    for slice in grid.slices() {
+        let owners = SliceGrid::holders(&slice, src_regions);
+        let needers = SliceGrid::holders(&slice, dst_regions);
+        if needers.is_empty() {
+            continue; // slice dropped by the destination sharding
+        }
+        if owners.is_empty() {
+            return Err(Error::UnsupportedComm(format!(
+                "slice {slice:?} required by destination but owned by no source device"
+            )));
+        }
+        let elems = region_elems(&slice);
+        for needer in needers {
+            // Heuristic (1): local copy.
+            if owners.iter().any(|o| o.rank == needer.rank) {
+                plan.local_copies.push((needer.rank, slice.clone()));
+                continue;
+            }
+            let sender = if opts.heuristics {
+                select_sender(&owners, needer.rank, bw, loads)
+            } else {
+                owners.iter().map(|o| o.rank).min().unwrap()
+            };
+            loads.add(sender, elems);
+            plan.transfers.push(Transfer { slice: slice.clone(), from: sender, to: needer.rank });
+        }
+    }
+    Ok(plan)
+}
+
+/// Heuristics (2)+(3): highest bandwidth to the receiver, then lowest
+/// cumulative send load, then lowest rank id.
+fn select_sender(
+    owners: &[&DeviceRegion],
+    to: Rank,
+    bw: &dyn Bandwidth,
+    loads: &LoadTracker,
+) -> Rank {
+    let mut best: Option<(f64, u64, Rank)> = None;
+    for o in owners {
+        let g = bw.gbps(o.rank, to);
+        let l = loads.load(o.rank);
+        let cand = (g, l, o.rank);
+        best = Some(match best {
+            None => cand,
+            Some(b) => {
+                // prefer higher bandwidth; then lower load; then lower rank
+                if cand.0 > b.0 || (cand.0 == b.0 && (cand.1 < b.1 || (cand.1 == b.1 && cand.2 < b.2))) {
+                    cand
+                } else {
+                    b
+                }
+            }
+        });
+    }
+    best.unwrap().2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hspmd::{DeviceGroup, DistStates};
+
+    fn spmd(ranks: Vec<Rank>, ds: DistStates) -> Annotation {
+        Annotation::spmd(DeviceGroup::new(ranks).unwrap(), ds).unwrap()
+    }
+
+    struct TwoNodes;
+    impl Bandwidth for TwoNodes {
+        fn gbps(&self, from: Rank, to: Rank) -> f64 {
+            if self.intra_node(from, to) {
+                400.0
+            } else {
+                25.0
+            }
+        }
+        fn intra_node(&self, from: Rank, to: Rank) -> bool {
+            (from < 8) == (to < 8)
+        }
+    }
+
+    #[test]
+    fn rejects_partial() {
+        let src = spmd(vec![0, 1], DistStates::partial(2));
+        let dst = spmd(vec![0, 1], DistStates::duplicate(2));
+        let mut lt = LoadTracker::default();
+        assert!(plan_bsr(&src, &dst, &[4], &UniformBandwidth, BsrOptions::default(), &mut lt).is_err());
+    }
+
+    #[test]
+    fn local_copy_when_owned() {
+        // split 2 -> same split 2 on same devices: all local copies
+        let src = spmd(vec![0, 1], DistStates::split(0, 2));
+        let dst = spmd(vec![0, 1], DistStates::split(0, 2));
+        let mut lt = LoadTracker::default();
+        let plan =
+            plan_bsr(&src, &dst, &[8], &UniformBandwidth, BsrOptions::default(), &mut lt).unwrap();
+        assert!(plan.transfers.is_empty());
+        assert_eq!(plan.local_copies.len(), 2);
+    }
+
+    #[test]
+    fn repartition_2_to_4() {
+        // split 2 over {0,1} -> split 4 over {0,1,2,3}
+        let src = spmd(vec![0, 1], DistStates::split(0, 2));
+        let dst = spmd(vec![0, 1, 2, 3], DistStates::split(0, 4));
+        let mut lt = LoadTracker::default();
+        let plan =
+            plan_bsr(&src, &dst, &[8], &UniformBandwidth, BsrOptions::default(), &mut lt).unwrap();
+        // dst quarters: rank0 [0,2) local; rank1 [2,4) from rank0;
+        // rank2 [4,6) and rank3 [6,8) from rank1.
+        assert_eq!(plan.local_copies.len(), 1);
+        assert_eq!(plan.local_copies[0].0, 0);
+        assert_eq!(plan.transfers.len(), 3);
+        let mut tos: Vec<Rank> = plan.transfers.iter().map(|t| t.to).collect();
+        tos.sort_unstable();
+        assert_eq!(tos, vec![1, 2, 3]);
+        assert_eq!(plan.wire_elems(), 6);
+    }
+
+    #[test]
+    fn bandwidth_heuristic_prefers_intra_node() {
+        // slice replicated on ranks 1 (node 0) and 9 (node 1); needer 8 (node 1)
+        // → rank 9 should send (Fig 8 heuristic 2).
+        let src = spmd(vec![1, 9], DistStates::duplicate(2));
+        let dst = spmd(vec![8], DistStates::trivial());
+        let mut lt = LoadTracker::default();
+        let plan = plan_bsr(&src, &dst, &[4], &TwoNodes, BsrOptions::default(), &mut lt).unwrap();
+        assert_eq!(plan.transfers.len(), 1);
+        assert_eq!(plan.transfers[0].from, 9);
+    }
+
+    #[test]
+    fn no_heuristics_picks_min_rank() {
+        let src = spmd(vec![1, 9], DistStates::duplicate(2));
+        let dst = spmd(vec![8], DistStates::trivial());
+        let mut lt = LoadTracker::default();
+        let plan =
+            plan_bsr(&src, &dst, &[4], &TwoNodes, BsrOptions { heuristics: false }, &mut lt)
+                .unwrap();
+        assert_eq!(plan.transfers[0].from, 1);
+    }
+
+    #[test]
+    fn load_balancing_tiebreak() {
+        // Fig 8 heuristic 3: two equal-bandwidth owners {0,1}, two needers
+        // {2,3} of two different slices → senders alternate.
+        let src = spmd(vec![0, 1], DistStates::duplicate(2));
+        let dst = spmd(vec![2, 3], DistStates::split(0, 2));
+        let mut lt = LoadTracker::default();
+        let plan =
+            plan_bsr(&src, &dst, &[8], &UniformBandwidth, BsrOptions::default(), &mut lt).unwrap();
+        assert_eq!(plan.transfers.len(), 2);
+        let froms: std::collections::BTreeSet<Rank> =
+            plan.transfers.iter().map(|t| t.from).collect();
+        assert_eq!(froms.len(), 2, "load should balance across both owners: {plan:?}");
+    }
+
+    #[test]
+    fn volume_accounting_splits_fabrics() {
+        let src = spmd(vec![0], DistStates::trivial());
+        let dst = spmd(vec![1, 9], DistStates::split(0, 2));
+        let mut lt = LoadTracker::default();
+        let plan = plan_bsr(&src, &dst, &[8], &TwoNodes, BsrOptions::default(), &mut lt).unwrap();
+        let vols = plan.sender_volumes(&TwoNodes);
+        let (nv, ib) = vols[&0];
+        assert_eq!(nv, 4); // to rank 1, intra-node
+        assert_eq!(ib, 4); // to rank 9, inter-node
+    }
+
+    #[test]
+    fn destination_fully_covered() {
+        // random-ish repartition: every dst element must be produced exactly once
+        let src = spmd(vec![0, 1, 2], DistStates::split(0, 3));
+        let dst = spmd(vec![3, 4], DistStates::split(1, 2));
+        let mut lt = LoadTracker::default();
+        let plan =
+            plan_bsr(&src, &dst, &[6, 4], &UniformBandwidth, BsrOptions::default(), &mut lt)
+                .unwrap();
+        let moved: u64 = plan.wire_elems()
+            + plan.local_copies.iter().map(|(_, r)| region_elems(r)).sum::<u64>();
+        assert_eq!(moved, 24); // 6*4 elements, each delivered once
+    }
+}

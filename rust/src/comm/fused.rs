@@ -1,0 +1,263 @@
+//! §6.2 — Fused BSR: one global plan for multi-tensor repartitioning.
+//!
+//! Strategy switching repartitions *every* parameter tensor at once. Instead
+//! of planning each tensor's BSR independently, the fused planner:
+//!
+//! 1. consolidates all per-tensor BSR tables into one, sharing the
+//!    cumulative-send-load tracker so heuristic (3) balances the entire
+//!    transition, and
+//! 2. fuses all slice transfers between the same `(sender, receiver)` pair
+//!    into a single message, minimizing kernel-launch latency.
+
+use std::collections::HashMap;
+
+use crate::hspmd::dg::Rank;
+use crate::hspmd::slices::Region;
+use crate::hspmd::Annotation;
+use crate::Result;
+
+use super::bsr::{Bandwidth, BsrOptions, LoadTracker};
+
+/// One tensor that must move from its source sharding to its destination
+/// sharding during a strategy switch.
+#[derive(Clone, Debug)]
+pub struct TensorMove {
+    /// Stable tensor name (parameter path).
+    pub name: String,
+    /// Source annotation (current strategy).
+    pub src: Annotation,
+    /// Destination annotation (next strategy).
+    pub dst: Annotation,
+    /// Global tensor shape.
+    pub shape: Vec<u64>,
+    /// Bytes per element (2 = bf16, 4 = fp32).
+    pub elem_bytes: u64,
+}
+
+/// A fused message: every slice (possibly of many tensors) moving between
+/// one device pair, sent as a single batched send-receive.
+#[derive(Clone, Debug)]
+pub struct FusedMessage {
+    /// Sender rank.
+    pub from: Rank,
+    /// Receiver rank.
+    pub to: Rank,
+    /// `(tensor index, slice)` payload items.
+    pub items: Vec<(usize, Region)>,
+    /// Total payload bytes.
+    pub bytes: u64,
+}
+
+/// The full transition plan.
+#[derive(Clone, Debug, Default)]
+pub struct FusedBsrPlan {
+    /// Cross-device messages (fused per device pair when `fuse` is on).
+    pub messages: Vec<FusedMessage>,
+    /// `(rank, tensor index, slice)` satisfied locally.
+    pub local_copies: Vec<(Rank, usize, Region)>,
+}
+
+impl FusedBsrPlan {
+    /// Total bytes on the wire.
+    pub fn wire_bytes(&self) -> u64 {
+        self.messages.iter().map(|m| m.bytes).sum()
+    }
+
+    /// Number of send-receive launches (the fusion objective).
+    pub fn num_messages(&self) -> usize {
+        self.messages.len()
+    }
+
+    /// Per-sender `(intra-node bytes, inter-node bytes)` — the Table 2 rows.
+    pub fn sender_volumes(&self, bw: &dyn Bandwidth) -> HashMap<Rank, (u64, u64)> {
+        let mut out: HashMap<Rank, (u64, u64)> = HashMap::new();
+        for m in &self.messages {
+            let e = out.entry(m.from).or_insert((0, 0));
+            if bw.intra_node(m.from, m.to) {
+                e.0 += m.bytes;
+            } else {
+                e.1 += m.bytes;
+            }
+        }
+        out
+    }
+
+    /// The transition's bottleneck: the maximum per-link transfer time, in
+    /// seconds, assuming per-message serialization on each directed link
+    /// plus a fixed per-message launch overhead.
+    pub fn bottleneck_seconds(&self, bw: &dyn Bandwidth, launch_overhead_s: f64) -> f64 {
+        let mut per_link: HashMap<(Rank, Rank), f64> = HashMap::new();
+        for m in &self.messages {
+            let t = m.bytes as f64 / (bw.gbps(m.from, m.to) * 1e9) + launch_overhead_s;
+            *per_link.entry((m.from, m.to)).or_insert(0.0) += t;
+        }
+        // A device sends sequentially: sum over its outgoing links, then the
+        // slowest device bounds the transition.
+        let mut per_sender: HashMap<Rank, f64> = HashMap::new();
+        for ((from, _), t) in per_link {
+            *per_sender.entry(from).or_insert(0.0) += t;
+        }
+        per_sender.values().copied().fold(0.0, f64::max)
+    }
+}
+
+/// Plan a multi-tensor transition.
+///
+/// * `opts.heuristics` — enable sender-selection heuristics (2)+(3);
+/// * `fuse` — share the load tracker across tensors and merge same-pair
+///   transfers into single messages (the paper's optimized planner). With
+///   `fuse = false` each tensor is planned in isolation and every slice is
+///   its own message (the "unfused" baseline of Fig 18-right).
+pub fn plan_transition(
+    moves: &[TensorMove],
+    bw: &dyn Bandwidth,
+    opts: BsrOptions,
+    fuse: bool,
+) -> Result<FusedBsrPlan> {
+    plan_transition_avoiding(moves, bw, opts, fuse, &[])
+}
+
+/// [`plan_transition`] with failed devices excluded as senders (§7.2: a
+/// dead rank's slices are sourced from surviving replicas).
+pub fn plan_transition_avoiding(
+    moves: &[TensorMove],
+    bw: &dyn Bandwidth,
+    opts: BsrOptions,
+    fuse: bool,
+    dead: &[Rank],
+) -> Result<FusedBsrPlan> {
+    let mut plan = FusedBsrPlan::default();
+    let mut shared_loads = LoadTracker::default();
+    let mut pair_index: HashMap<(Rank, Rank), usize> = HashMap::new();
+
+    for (ti, mv) in moves.iter().enumerate() {
+        let mut local_loads = LoadTracker::default();
+        let loads = if fuse { &mut shared_loads } else { &mut local_loads };
+        let tensor_plan =
+            super::bsr::plan_bsr_excluding(&mv.src, &mv.dst, &mv.shape, bw, opts, loads, dead)?;
+        for (rank, slice) in tensor_plan.local_copies {
+            plan.local_copies.push((rank, ti, slice));
+        }
+        for t in tensor_plan.transfers {
+            let bytes = t.elems() * mv.elem_bytes;
+            if fuse {
+                let idx = *pair_index.entry((t.from, t.to)).or_insert_with(|| {
+                    plan.messages.push(FusedMessage {
+                        from: t.from,
+                        to: t.to,
+                        items: vec![],
+                        bytes: 0,
+                    });
+                    plan.messages.len() - 1
+                });
+                plan.messages[idx].items.push((ti, t.slice));
+                plan.messages[idx].bytes += bytes;
+            } else {
+                plan.messages.push(FusedMessage {
+                    from: t.from,
+                    to: t.to,
+                    items: vec![(ti, t.slice)],
+                    bytes,
+                });
+            }
+        }
+    }
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::UniformBandwidth;
+    use crate::hspmd::{DeviceGroup, DistStates};
+
+    fn mv(name: &str, src_ranks: Vec<Rank>, dst_ranks: Vec<Rank>, n: u64) -> TensorMove {
+        TensorMove {
+            name: name.into(),
+            src: Annotation::spmd(
+                DeviceGroup::new(src_ranks.clone()).unwrap(),
+                DistStates::split(0, src_ranks.len() as u32),
+            )
+            .unwrap(),
+            dst: Annotation::spmd(
+                DeviceGroup::new(dst_ranks.clone()).unwrap(),
+                DistStates::split(0, dst_ranks.len() as u32),
+            )
+            .unwrap(),
+            shape: vec![n],
+            elem_bytes: 4,
+        }
+    }
+
+    #[test]
+    fn fusion_reduces_message_count_not_volume() {
+        let moves = vec![
+            mv("w1", vec![0, 1], vec![2, 3], 8),
+            mv("w2", vec![0, 1], vec![2, 3], 8),
+            mv("w3", vec![0, 1], vec![2, 3], 8),
+        ];
+        let unfused =
+            plan_transition(&moves, &UniformBandwidth, BsrOptions::default(), false).unwrap();
+        let fused = plan_transition(&moves, &UniformBandwidth, BsrOptions::default(), true).unwrap();
+        assert_eq!(unfused.wire_bytes(), fused.wire_bytes());
+        assert!(fused.num_messages() < unfused.num_messages());
+        // fused: at most one message per (from,to) pair
+        let mut pairs: Vec<(Rank, Rank)> = fused.messages.iter().map(|m| (m.from, m.to)).collect();
+        pairs.sort_unstable();
+        let len = pairs.len();
+        pairs.dedup();
+        assert_eq!(pairs.len(), len);
+    }
+
+    #[test]
+    fn shared_loads_balance_across_tensors() {
+        // Two owners replicated; many single-needer tensors. With fusion the
+        // load tracker alternates senders; unfused always picks the same one
+        // (both have zero load at the start of each tensor's plan).
+        let dup = |ranks: Vec<Rank>| {
+            Annotation::spmd(
+                DeviceGroup::new(ranks.clone()).unwrap(),
+                DistStates::duplicate(ranks.len() as u32),
+            )
+            .unwrap()
+        };
+        let single =
+            |r: Rank| Annotation::spmd(DeviceGroup::new(vec![r]).unwrap(), DistStates::trivial()).unwrap();
+        let moves: Vec<TensorMove> = (0..6)
+            .map(|i| TensorMove {
+                name: format!("t{i}"),
+                src: dup(vec![0, 1]),
+                dst: single(5),
+                shape: vec![16],
+                elem_bytes: 4,
+            })
+            .collect();
+        let fused = plan_transition(&moves, &UniformBandwidth, BsrOptions::default(), true).unwrap();
+        let vols = fused.sender_volumes(&UniformBandwidth);
+        let v0 = vols.get(&0).map(|v| v.0).unwrap_or(0);
+        let v1 = vols.get(&1).map(|v| v.0).unwrap_or(0);
+        assert_eq!(v0, v1, "fused planner should balance senders: {vols:?}");
+
+        let unfused =
+            plan_transition(&moves, &UniformBandwidth, BsrOptions::default(), false).unwrap();
+        let uvols = unfused.sender_volumes(&UniformBandwidth);
+        assert!(
+            uvols.get(&1).is_none() || uvols.get(&0).is_none(),
+            "unfused planner lacks cross-tensor balance: {uvols:?}"
+        );
+    }
+
+    #[test]
+    fn bottleneck_improves_with_fusion() {
+        let moves: Vec<TensorMove> =
+            (0..8).map(|i| mv(&format!("w{i}"), vec![0, 1], vec![2, 3], 1 << 16)).collect();
+        let unfused =
+            plan_transition(&moves, &UniformBandwidth, BsrOptions::default(), false).unwrap();
+        let fused = plan_transition(&moves, &UniformBandwidth, BsrOptions::default(), true).unwrap();
+        let overhead = 1e-3;
+        assert!(
+            fused.bottleneck_seconds(&UniformBandwidth, overhead)
+                < unfused.bottleneck_seconds(&UniformBandwidth, overhead)
+        );
+    }
+}

@@ -1,0 +1,28 @@
+//! §4 — Hierarchical communication resolution.
+//!
+//! Given a pair of HSPMD annotations (source sharding → destination
+//! sharding) over a concrete tensor shape, derive the communication plan
+//! that realizes the transformation:
+//!
+//! * **bottom tier** (§4.1) — same `HSize`/`HDim`: each sharding subgroup
+//!   resolves independently to Identity / Send-Recv / AllReduce /
+//!   ReduceScatter / AllGather / BSR ([`bottom`]);
+//! * **top tier** (§4.2) — same `HSize` and DG union, different `HDim`:
+//!   SplitAllReduce / SplitReduceScatter / SplitAllGather over the finest-
+//!   grained slices, optionally preceded by a bottom-tier DS-alignment pass
+//!   (Fig 7) ([`top`]);
+//! * **fallback** (§4.3) — batched-send-receive with the paper's three
+//!   sender-selection heuristics ([`bsr`]), and the §6.2 multi-tensor
+//!   *fused* BSR used by graph switching ([`fused`]).
+
+pub mod bottom;
+pub mod bsr;
+pub mod fused;
+pub mod plan;
+pub mod resolve;
+pub mod top;
+
+pub use bsr::{Bandwidth, BsrOptions, BsrPlan, Transfer, UniformBandwidth};
+pub use fused::{plan_transition, FusedBsrPlan, FusedMessage, TensorMove};
+pub use plan::{CollKind, CollectiveOp, CommPlan, ResolvedKind};
+pub use resolve::{resolve, Resolution};

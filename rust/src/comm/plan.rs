@@ -1,0 +1,158 @@
+//! Communication plan representation shared by the resolver, the simulator
+//! and the real-numerics engine.
+
+use crate::hspmd::dg::Rank;
+use crate::hspmd::slices::{region_elems, Region};
+
+use super::bsr::BsrPlan;
+
+/// Collective kinds used by bottom- and top-tier resolution.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum CollKind {
+    /// `Partial → Duplicate` (Fig 5 AR).
+    AllReduce,
+    /// `Partial → Split(d)` (Fig 5 RS).
+    ReduceScatter,
+    /// `Split(d) → Duplicate` (Fig 5 AG).
+    AllGather,
+}
+
+impl std::fmt::Display for CollKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            CollKind::AllReduce => "AR",
+            CollKind::ReduceScatter => "RS",
+            CollKind::AllGather => "AG",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// One collective over an explicit device group and a tensor slice.
+///
+/// For bottom-tier ops the slice is the subgroup box the group shares; for
+/// top-tier `Split*` ops it is one finest-grained slice (Fig 6) and the
+/// group has one or more member per subgroup.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CollectiveOp {
+    /// What to run.
+    pub kind: CollKind,
+    /// Participating ranks, deterministic order.
+    pub group: Vec<Rank>,
+    /// The slice of the global tensor the group communicates.
+    pub slice: Region,
+    /// Physical dim being scattered/gathered (RS/AG only).
+    pub dim: Option<u32>,
+}
+
+impl CollectiveOp {
+    /// Payload elements moved per participant (ring-model accounting):
+    /// AR ≈ 2·(n-1)/n·|slice|, RS/AG ≈ (n-1)/n·|slice|.
+    pub fn elems_on_wire(&self) -> u64 {
+        let n = self.group.len() as u64;
+        if n <= 1 {
+            return 0;
+        }
+        let e = region_elems(&self.slice);
+        match self.kind {
+            CollKind::AllReduce => 2 * e * (n - 1) / n,
+            CollKind::ReduceScatter | CollKind::AllGather => e * (n - 1) / n,
+        }
+    }
+}
+
+/// A resolved communication plan.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CommPlan {
+    /// No data movement (annotations identical).
+    Identity,
+    /// Point-to-point shard transfers (same DS, different device lists).
+    SendRecv(Vec<super::bsr::Transfer>),
+    /// A set of collectives. `top_tier = true` marks the §4.2 `Split*`
+    /// variants (the ops then run *across* sharding subgroups).
+    Collective {
+        /// The collective ops (independent groups; can run concurrently).
+        ops: Vec<CollectiveOp>,
+        /// True for SplitAR/SplitRS/SplitAG.
+        top_tier: bool,
+    },
+    /// Batched-send-receive fallback (§4.3).
+    Bsr(BsrPlan),
+    /// Independent per-subgroup plans (bottom tier, §4.1) — execute
+    /// concurrently.
+    Parallel(Vec<CommPlan>),
+    /// Ordered phases (Fig 7: bottom-tier alignment then top-tier).
+    Seq(Vec<CommPlan>),
+}
+
+impl CommPlan {
+    /// Total elements on the wire (recursive accounting).
+    pub fn elems_on_wire(&self) -> u64 {
+        match self {
+            CommPlan::Identity => 0,
+            CommPlan::SendRecv(ts) => ts.iter().map(|t| t.elems()).sum(),
+            CommPlan::Collective { ops, .. } => ops.iter().map(|o| o.elems_on_wire()).sum(),
+            CommPlan::Bsr(p) => p.transfers.iter().map(|t| t.elems()).sum(),
+            CommPlan::Parallel(ps) | CommPlan::Seq(ps) => {
+                ps.iter().map(|p| p.elems_on_wire()).sum()
+            }
+        }
+    }
+
+    /// Flatten to the leaf plans (for inspection / execution scheduling).
+    pub fn leaves(&self) -> Vec<&CommPlan> {
+        match self {
+            CommPlan::Parallel(ps) | CommPlan::Seq(ps) => {
+                ps.iter().flat_map(|p| p.leaves()).collect()
+            }
+            leaf => vec![leaf],
+        }
+    }
+}
+
+/// Classification label (Fig 4) — what the resolver decided. Used by the
+/// Fig 17 case study and golden tests.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum ResolvedKind {
+    /// No communication.
+    Identity,
+    /// Bottom-tier send-receive.
+    SendRecv,
+    /// Bottom-tier all-reduce.
+    AllReduce,
+    /// Bottom-tier reduce-scatter.
+    ReduceScatter,
+    /// Bottom-tier all-gather.
+    AllGather,
+    /// Bottom-tier batched-send-receive.
+    Bsr,
+    /// Mixed bottom-tier kinds across subgroups.
+    MixedBottom,
+    /// Top-tier split-all-reduce.
+    SplitAllReduce,
+    /// Top-tier split-reduce-scatter.
+    SplitReduceScatter,
+    /// Top-tier split-all-gather.
+    SplitAllGather,
+    /// Bottom-tier alignment followed by a top-tier split collective (Fig 7).
+    BottomThenTop,
+}
+
+impl std::fmt::Display for ResolvedKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            ResolvedKind::Identity => "Identity",
+            ResolvedKind::SendRecv => "SR",
+            ResolvedKind::AllReduce => "AR",
+            ResolvedKind::ReduceScatter => "RS",
+            ResolvedKind::AllGather => "AG",
+            ResolvedKind::Bsr => "BSR",
+            ResolvedKind::MixedBottom => "BC-mixed",
+            ResolvedKind::SplitAllReduce => "SplitAR",
+            ResolvedKind::SplitReduceScatter => "SplitRS",
+            ResolvedKind::SplitAllGather => "SplitAG",
+            ResolvedKind::BottomThenTop => "BC+Split*",
+        };
+        write!(f, "{s}")
+    }
+}

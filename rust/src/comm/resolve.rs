@@ -1,0 +1,201 @@
+//! The Fig 4 classification pipeline: annotation pair → communication plan.
+
+use crate::hspmd::Annotation;
+use crate::{Error, Result};
+
+use super::bottom::resolve_subgroup;
+use super::bsr::{plan_bsr, Bandwidth, BsrOptions, LoadTracker};
+use super::plan::{CommPlan, ResolvedKind};
+use super::top::{alignment_midpoint, split_collectives, split_kind, top_plan};
+
+/// The resolver's output: a plan plus its Fig 4 classification.
+#[derive(Clone, Debug)]
+pub struct Resolution {
+    /// Executable communication plan.
+    pub plan: CommPlan,
+    /// Classification label (for the Fig 17 case study and tests).
+    pub kind: ResolvedKind,
+}
+
+/// Resolve the communication realizing `src → dst` over a tensor of
+/// concrete `shape` (§4). Follows the heuristic classification of Fig 4:
+///
+/// 1. same `HSize` + same `HDim` → bottom-tier per subgroup (§4.1);
+/// 2. same `HSize` + set-equal `DG Union`, different `HDim`:
+///    * equal `DS Union` → SplitAR/SplitRS/SplitAG (§4.2-I);
+///    * different `DS Union` → bottom-tier alignment, then split collective
+///      (§4.2-II);
+/// 3. anything else → BSR (§4.3), which requires `Partial`-free tensors.
+pub fn resolve(
+    src: &Annotation,
+    dst: &Annotation,
+    shape: &[u64],
+    bw: &dyn Bandwidth,
+    opts: BsrOptions,
+) -> Result<Resolution> {
+    // Case 1 — top tier unchanged: resolve each subgroup independently.
+    if src.hsize() == dst.hsize() && src.hdim == dst.hdim && src.hsplit == dst.hsplit {
+        let mut plans = Vec::with_capacity(src.hsize());
+        let mut kinds = Vec::with_capacity(src.hsize());
+        for g in 0..src.hsize() {
+            let (p, k) = resolve_subgroup(src, dst, g, shape, bw, opts)?;
+            if k != ResolvedKind::Identity {
+                plans.push(p);
+            }
+            kinds.push(k);
+        }
+        if plans.is_empty() {
+            return Ok(Resolution { plan: CommPlan::Identity, kind: ResolvedKind::Identity });
+        }
+        let non_id: Vec<ResolvedKind> =
+            kinds.into_iter().filter(|k| *k != ResolvedKind::Identity).collect();
+        let kind = if non_id.iter().all(|k| *k == non_id[0]) {
+            non_id[0]
+        } else {
+            ResolvedKind::MixedBottom
+        };
+        let plan = if plans.len() == 1 { plans.pop().unwrap() } else { CommPlan::Parallel(plans) };
+        return Ok(Resolution { plan, kind });
+    }
+
+    // Case 2 — HDim changed over the same DG union.
+    if src.hsize() == dst.hsize() && src.same_dg_union(dst) && split_kind(src.hdim, dst.hdim).is_some()
+    {
+        if src.same_ds_union(dst) {
+            let (ops, kind) = split_collectives(src, dst, shape)?;
+            return Ok(Resolution { plan: top_plan(ops), kind });
+        }
+        // Fig 7: align DS unions first (bottom tier), then split collective.
+        let mid = alignment_midpoint(src, dst)?;
+        let bottom = resolve(src, &mid, shape, bw, opts)?;
+        let (ops, _) = split_collectives(&mid, dst, shape)?;
+        let plan = CommPlan::Seq(vec![bottom.plan, top_plan(ops)]);
+        return Ok(Resolution { plan, kind: ResolvedKind::BottomThenTop });
+    }
+
+    // Case 3 — BSR fallback (different DG unions or HSize, or an HDim
+    // change with no split collective).
+    if src.has_partial() || dst.has_partial() {
+        return Err(Error::UnsupportedComm(format!(
+            "transformation {} -> {} requires BSR but involves Partial values",
+            src.describe(),
+            dst.describe()
+        )));
+    }
+    let mut loads = LoadTracker::default();
+    let plan = plan_bsr(src, dst, shape, bw, opts, &mut loads)?;
+    Ok(Resolution { plan: CommPlan::Bsr(plan), kind: ResolvedKind::Bsr })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::UniformBandwidth;
+    use crate::hspmd::ds::{DUPLICATE, PARTIAL};
+    use crate::hspmd::{DeviceGroup, DistStates, Subgroup};
+
+    fn r(src: &Annotation, dst: &Annotation, shape: &[u64]) -> Resolution {
+        resolve(src, dst, shape, &UniformBandwidth, BsrOptions::default()).unwrap()
+    }
+
+    fn spmd(ranks: Vec<u32>, ds: DistStates) -> Annotation {
+        Annotation::spmd(DeviceGroup::new(ranks).unwrap(), ds).unwrap()
+    }
+
+    #[test]
+    fn fig2_left_tp_allreduce() {
+        // Fig 2 (left): Y partial over 2 TP workers ×2 DP groups → all-reduce.
+        let ds_src = DistStates::new(&[(DUPLICATE, 2), (PARTIAL, 2)], &[-1, -2]).unwrap();
+        let ds_dst = DistStates::new(&[(DUPLICATE, 4)], &[-1]).unwrap();
+        let src = spmd(vec![0, 1, 2, 3], ds_src);
+        let dst = spmd(vec![0, 1, 2, 3], ds_dst);
+        let res = r(&src, &dst, &[8, 8]);
+        // dup2*partial2 -> dup4 is a single relabel PARTIAL->DUP (merging) —
+        // that merge isn't a single_transition, so it resolves via... AR with
+        // groups along PARTIAL is the right answer; check we at least get a
+        // legal plan (AR or BSR is rejected due to partial => must be AR).
+        assert!(matches!(res.kind, ResolvedKind::AllReduce | ResolvedKind::MixedBottom), "{:?}", res.kind);
+    }
+
+    #[test]
+    fn hetero_dp_grad_sync_splitar() {
+        // Two subgroups with different TP degrees holding partial grads
+        // (hdim=-2) → replicated grads (hdim=-1): SplitAllReduce (§4.2-I).
+        let g0 = Subgroup::new(DeviceGroup::new(vec![0, 1]).unwrap(), DistStates::split(0, 2)).unwrap();
+        let g1 = Subgroup::new(DeviceGroup::new(vec![2]).unwrap(), DistStates::trivial()).unwrap();
+        let src = Annotation::new(vec![g0.clone(), g1.clone()], PARTIAL).unwrap();
+        let dst = Annotation::new(vec![g0, g1], DUPLICATE).unwrap();
+        let res = r(&src, &dst, &[16]);
+        assert_eq!(res.kind, ResolvedKind::SplitAllReduce);
+    }
+
+    #[test]
+    fn bottom_then_top_combined() {
+        // Fig 7: DS unions differ AND hdim changes: subgroup 0 must first
+        // reduce-scatter its bottom partial, then SplitAR across subgroups.
+        let g0s = Subgroup::new(DeviceGroup::new(vec![0, 1]).unwrap(), DistStates::partial(2)).unwrap();
+        let g1s = Subgroup::new(DeviceGroup::new(vec![2, 3]).unwrap(), DistStates::split(0, 2)).unwrap();
+        let src = Annotation::new(vec![g0s, g1s], PARTIAL).unwrap();
+        let g0d = Subgroup::new(DeviceGroup::new(vec![0, 1]).unwrap(), DistStates::split(0, 2)).unwrap();
+        let g1d = Subgroup::new(DeviceGroup::new(vec![2, 3]).unwrap(), DistStates::split(0, 2)).unwrap();
+        let dst = Annotation::new(vec![g0d, g1d], DUPLICATE).unwrap();
+        let res = r(&src, &dst, &[8]);
+        assert_eq!(res.kind, ResolvedKind::BottomThenTop);
+        match res.plan {
+            CommPlan::Seq(phases) => assert_eq!(phases.len(), 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn hsize_change_falls_to_bsr() {
+        let one = spmd(vec![0, 1], DistStates::split(0, 2));
+        let g0 = Subgroup::new(DeviceGroup::new(vec![2]).unwrap(), DistStates::trivial()).unwrap();
+        let g1 = Subgroup::new(DeviceGroup::new(vec![3]).unwrap(), DistStates::trivial()).unwrap();
+        let two = Annotation::new(vec![g0, g1], 0).unwrap();
+        let res = r(&one, &two, &[8]);
+        assert_eq!(res.kind, ResolvedKind::Bsr);
+    }
+
+    #[test]
+    fn hsize_change_with_partial_is_unsupported() {
+        let one = spmd(vec![0, 1], DistStates::partial(2));
+        let g0 = Subgroup::new(DeviceGroup::new(vec![2]).unwrap(), DistStates::trivial()).unwrap();
+        let g1 = Subgroup::new(DeviceGroup::new(vec![3]).unwrap(), DistStates::trivial()).unwrap();
+        let two = Annotation::new(vec![g0, g1], 0).unwrap();
+        assert!(resolve(&one, &two, &[8], &UniformBandwidth, BsrOptions::default()).is_err());
+    }
+
+    #[test]
+    fn identity_roundtrip() {
+        let a = spmd(vec![0, 1, 2, 3], DistStates::split(0, 4));
+        let res = r(&a, &a.clone(), &[8]);
+        assert_eq!(res.kind, ResolvedKind::Identity);
+        assert_eq!(res.plan.elems_on_wire(), 0);
+    }
+
+    #[test]
+    fn mixed_bottom_kinds_labelled() {
+        // subgroup 0: identity; subgroup 1: resplit (BSR) → MixedBottom? —
+        // identity entries are filtered, single non-identity kind remains.
+        let g0 = Subgroup::new(DeviceGroup::new(vec![0]).unwrap(), DistStates::trivial()).unwrap();
+        let g1s = Subgroup::new(DeviceGroup::new(vec![1, 2]).unwrap(), DistStates::split(0, 2)).unwrap();
+        let g1d = Subgroup::new(DeviceGroup::new(vec![1, 2]).unwrap(), DistStates::split(1, 2)).unwrap();
+        let src = Annotation::new(vec![g0.clone(), g1s], 0).unwrap();
+        let dst = Annotation::new(vec![g0, g1d], 0).unwrap();
+        let res = r(&src, &dst, &[8, 4]);
+        assert_eq!(res.kind, ResolvedKind::Bsr);
+    }
+
+    #[test]
+    fn wire_volume_is_conserved_under_planner_options() {
+        // §8/Table 2: heuristics change the *distribution*, not the total.
+        let src = spmd(vec![0, 1, 2, 3], DistStates::split(0, 4));
+        let dst = spmd(vec![4, 5], DistStates::split(1, 2));
+        let a = resolve(&src, &dst, &[8, 8], &UniformBandwidth, BsrOptions { heuristics: true })
+            .unwrap();
+        let b = resolve(&src, &dst, &[8, 8], &UniformBandwidth, BsrOptions { heuristics: false })
+            .unwrap();
+        assert_eq!(a.plan.elems_on_wire(), b.plan.elems_on_wire());
+    }
+}

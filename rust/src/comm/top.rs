@@ -1,0 +1,225 @@
+//! §4.2 — Top-tier communication (across sharding subgroups).
+//!
+//! Applies when `HSize` matches and the `DG Union`s are set-equivalent but
+//! `HDim` differs. With equal `DS Union`s the transformation is a *split
+//! collective* over the finest-grained slices (Fig 6); otherwise a
+//! bottom-tier DS-alignment pass runs first (Fig 7).
+
+use crate::hspmd::ds::{DUPLICATE, PARTIAL};
+use crate::hspmd::slices::{regions, DeviceRegion, SliceGrid};
+use crate::hspmd::Annotation;
+use crate::{Error, Result};
+
+use super::plan::{CollKind, CollectiveOp, CommPlan, ResolvedKind};
+
+/// Which split collective (if any) realizes an `HDim` change with unchanged
+/// `DS Union` (the Fig 6 table; other combinations are unsupported and fall
+/// through to BSR).
+pub fn split_kind(src_hdim: i32, dst_hdim: i32) -> Option<CollKind> {
+    match (src_hdim, dst_hdim) {
+        (PARTIAL, DUPLICATE) => Some(CollKind::AllReduce),
+        (PARTIAL, d) if d >= 0 => Some(CollKind::ReduceScatter),
+        (d, DUPLICATE) if d >= 0 => Some(CollKind::AllGather),
+        _ => None,
+    }
+}
+
+/// Build the slice-granularity cross-subgroup collectives for an `HDim`
+/// change with equal `DS Union`s.
+///
+/// For every finest-grained slice, the participating devices are matched
+/// *by replica index within each subgroup* (replicas of the same slice in
+/// different subgroups form one collective group). Returns
+/// [`Error::UnsupportedComm`] if subgroups hold unequal replica counts for
+/// some slice — such layouts have no symmetric collective decomposition.
+pub fn split_collectives(
+    src: &Annotation,
+    dst: &Annotation,
+    shape: &[u64],
+) -> Result<(Vec<CollectiveOp>, ResolvedKind)> {
+    let kind = split_kind(src.hdim, dst.hdim).ok_or_else(|| {
+        Error::UnsupportedComm(format!(
+            "no split collective for hdim {} -> {}",
+            src.hdim, dst.hdim
+        ))
+    })?;
+    let resolved = match kind {
+        CollKind::AllReduce => ResolvedKind::SplitAllReduce,
+        CollKind::ReduceScatter => ResolvedKind::SplitReduceScatter,
+        CollKind::AllGather => ResolvedKind::SplitAllGather,
+    };
+    let dim = match kind {
+        CollKind::ReduceScatter => Some(dst.hdim as u32),
+        CollKind::AllGather => Some(src.hdim as u32),
+        CollKind::AllReduce => None,
+    };
+    let src_regions = regions(src, shape)?;
+    let dst_regions = regions(dst, shape)?;
+    let grid = SliceGrid::build(shape, &[&src_regions, &dst_regions]);
+
+    let mut ops = Vec::new();
+    for slice in grid.slices() {
+        // Participants per subgroup: devices whose src (for reductions) or
+        // src∪dst (for gathers) region contains the slice.
+        let mut per_group: Vec<Vec<&DeviceRegion>> = vec![vec![]; src.hsize()];
+        match kind {
+            CollKind::AllReduce | CollKind::ReduceScatter => {
+                for dr in &src_regions {
+                    if covers(dr, &slice) {
+                        per_group[dr.subgroup].push(dr);
+                    }
+                }
+            }
+            CollKind::AllGather => {
+                // gather: the owner subgroup contributes the slice, every
+                // subgroup that needs it (dst) participates.
+                for dr in &src_regions {
+                    if covers(dr, &slice) {
+                        per_group[dr.subgroup].push(dr);
+                    }
+                }
+                for dr in &dst_regions {
+                    if covers(dr, &slice)
+                        && !per_group[dr.subgroup].iter().any(|x| x.rank == dr.rank)
+                    {
+                        per_group[dr.subgroup].push(dr);
+                    }
+                }
+            }
+        }
+        let active: Vec<&Vec<&DeviceRegion>> =
+            per_group.iter().filter(|v| !v.is_empty()).collect();
+        if active.len() <= 1 {
+            continue; // slice lives in a single subgroup — no cross-group op
+        }
+        let replicas = active[0].len();
+        if kind != CollKind::AllGather && active.iter().any(|v| v.len() != replicas) {
+            return Err(Error::UnsupportedComm(format!(
+                "unequal replica counts across subgroups for slice {slice:?}"
+            )));
+        }
+        let max_rep = active.iter().map(|v| v.len()).max().unwrap();
+        for j in 0..max_rep {
+            let mut group: Vec<u32> = active
+                .iter()
+                .filter_map(|v| v.get(j.min(v.len() - 1)).map(|d| d.rank))
+                .collect();
+            group.sort_unstable();
+            group.dedup();
+            if group.len() > 1 {
+                ops.push(CollectiveOp { kind, group, slice: slice.clone(), dim });
+            }
+            if kind == CollKind::AllGather && max_rep == 1 {
+                break;
+            }
+        }
+    }
+    Ok((ops, resolved))
+}
+
+fn covers(dr: &DeviceRegion, slice: &crate::hspmd::slices::Region) -> bool {
+    dr.region.iter().zip(slice.iter()).all(|(a, b)| a.contains(b))
+}
+
+/// Fig 7 — the intermediate annotation for a combined transformation:
+/// destination `DS Union` under the *source* top tier.
+pub fn alignment_midpoint(src: &Annotation, dst: &Annotation) -> Result<Annotation> {
+    let groups = src
+        .groups
+        .iter()
+        .zip(dst.groups.iter())
+        .map(|(s, d)| crate::hspmd::Subgroup::new(s.dg.clone(), d.ds.clone()))
+        .collect::<Result<Vec<_>>>()?;
+    Annotation::with_weights(groups, src.hdim, src.hsplit.clone())
+}
+
+/// Expose [`CommPlan`] assembly for the resolver: a pure top-tier plan.
+pub fn top_plan(ops: Vec<CollectiveOp>) -> CommPlan {
+    CommPlan::Collective { ops, top_tier: true }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hspmd::{DeviceGroup, DistStates, Subgroup};
+
+    /// Two subgroups of 2 devices each, bottom split on dim0.
+    fn pair(hdim: i32) -> Annotation {
+        let g0 = Subgroup::new(DeviceGroup::new(vec![0, 1]).unwrap(), DistStates::split(0, 2)).unwrap();
+        let g1 = Subgroup::new(DeviceGroup::new(vec![2, 3]).unwrap(), DistStates::split(0, 2)).unwrap();
+        Annotation::new(vec![g0, g1], hdim).unwrap()
+    }
+
+    #[test]
+    fn split_kind_table() {
+        assert_eq!(split_kind(PARTIAL, DUPLICATE), Some(CollKind::AllReduce));
+        assert_eq!(split_kind(PARTIAL, 1), Some(CollKind::ReduceScatter));
+        assert_eq!(split_kind(0, DUPLICATE), Some(CollKind::AllGather));
+        assert_eq!(split_kind(0, 1), None);
+        assert_eq!(split_kind(DUPLICATE, PARTIAL), None);
+    }
+
+    #[test]
+    fn split_allreduce_pairs_matching_shards() {
+        // hdim -2 → -1 with identical bottom sharding: device i of each
+        // subgroup holds the same slice → AR groups {0,2} and {1,3}.
+        let src = pair(PARTIAL);
+        let dst = pair(DUPLICATE);
+        let (ops, kind) = split_collectives(&src, &dst, &[8, 4]).unwrap();
+        assert_eq!(kind, ResolvedKind::SplitAllReduce);
+        let groups: Vec<Vec<u32>> = ops.iter().map(|o| o.group.clone()).collect();
+        assert!(groups.contains(&vec![0, 2]), "{groups:?}");
+        assert!(groups.contains(&vec![1, 3]), "{groups:?}");
+    }
+
+    #[test]
+    fn split_allreduce_finest_granularity_mismatched_ds() {
+        // subgroup 0 splits dim0 in 2, subgroup 1 holds it whole (1 device):
+        // the single device of subgroup 1 joins both slice-level ARs (Fig 6).
+        let g0 = Subgroup::new(DeviceGroup::new(vec![0, 1]).unwrap(), DistStates::split(0, 2)).unwrap();
+        let g1 = Subgroup::new(DeviceGroup::new(vec![5]).unwrap(), DistStates::trivial()).unwrap();
+        let src = Annotation::new(vec![g0.clone(), g1.clone()], PARTIAL).unwrap();
+        let dst = Annotation::new(vec![g0, g1], DUPLICATE).unwrap();
+        let (ops, _) = split_collectives(&src, &dst, &[8]).unwrap();
+        assert_eq!(ops.len(), 2);
+        assert!(ops.iter().all(|o| o.group.contains(&5)));
+        assert!(ops.iter().any(|o| o.group.contains(&0)));
+        assert!(ops.iter().any(|o| o.group.contains(&1)));
+    }
+
+    #[test]
+    fn split_reduce_scatter_targets_dst_dim() {
+        let src = pair(PARTIAL);
+        let dst = pair(1);
+        let (ops, kind) = split_collectives(&src, &dst, &[8, 4]).unwrap();
+        assert_eq!(kind, ResolvedKind::SplitReduceScatter);
+        assert!(ops.iter().all(|o| o.kind == CollKind::ReduceScatter && o.dim == Some(1)));
+    }
+
+    #[test]
+    fn split_allgather_spans_subgroups() {
+        let src = pair(1); // subgroups own halves of dim1
+        let dst = pair(DUPLICATE);
+        let (ops, kind) = split_collectives(&src, &dst, &[8, 4]).unwrap();
+        assert_eq!(kind, ResolvedKind::SplitAllGather);
+        assert!(!ops.is_empty());
+        for op in &ops {
+            assert!(op.group.len() >= 2);
+        }
+    }
+
+    #[test]
+    fn alignment_midpoint_swaps_ds() {
+        let src = pair(PARTIAL);
+        let mut dst = pair(DUPLICATE);
+        dst.groups[0] = Subgroup::new(
+            DeviceGroup::new(vec![0, 1]).unwrap(),
+            DistStates::split(1, 2),
+        )
+        .unwrap();
+        let mid = alignment_midpoint(&src, &dst).unwrap();
+        assert_eq!(mid.hdim, PARTIAL);
+        assert_eq!(mid.groups[0].ds, DistStates::split(1, 2));
+        assert_eq!(mid.groups[1].ds, DistStates::split(0, 2));
+    }
+}

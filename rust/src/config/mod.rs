@@ -1,0 +1,170 @@
+//! Run configuration + dependency-free CLI parsing.
+//!
+//! The build image cannot fetch `clap`, so the launcher uses a small
+//! hand-rolled parser: `--key value` / `--key=value` / bare flags, with
+//! typed accessors and helpful errors.
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// Parsed command line: a subcommand plus options.
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    /// First positional argument (subcommand).
+    pub command: String,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+    /// `--key value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag`s.
+    pub flags: Vec<String>,
+}
+
+impl Cli {
+    /// Parse from an argument list (excluding argv[0]).
+    pub fn parse(args: &[String]) -> Cli {
+        let mut cli = Cli::default();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    cli.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    cli.options.insert(stripped.to_string(), args[i + 1].clone());
+                    i += 1;
+                } else {
+                    cli.flags.push(stripped.to_string());
+                }
+            } else if cli.command.is_empty() {
+                cli.command = a.clone();
+            } else {
+                cli.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        cli
+    }
+
+    /// String option with default.
+    pub fn str_opt(&self, key: &str, default: &str) -> String {
+        self.options.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Integer option with default.
+    pub fn u64_opt(&self, key: &str, default: u64) -> Result<u64> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key} expects an integer, got `{v}`"))),
+        }
+    }
+
+    /// Float option with default.
+    pub fn f64_opt(&self, key: &str, default: f64) -> Result<f64> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key} expects a number, got `{v}`"))),
+        }
+    }
+
+    /// Flag presence.
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// Training-run configuration for the engine/coordinator.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Artifact directory (HLO text files).
+    pub artifacts_dir: String,
+    /// Model preset name.
+    pub model: String,
+    /// Steps to run.
+    pub steps: u64,
+    /// Global batch (samples per step).
+    pub global_batch: u64,
+    /// Sequence length.
+    pub seq_len: u64,
+    /// Learning rate.
+    pub lr: f64,
+    /// Simulated devices for the engine.
+    pub num_devices: u32,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            artifacts_dir: "artifacts".into(),
+            model: "tiny-100m".into(),
+            steps: 20,
+            global_batch: 8,
+            seq_len: 128,
+            lr: 3e-4,
+            num_devices: 4,
+            seed: 42,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Build from CLI options.
+    pub fn from_cli(cli: &Cli) -> Result<RunConfig> {
+        let d = RunConfig::default();
+        Ok(RunConfig {
+            artifacts_dir: cli.str_opt("artifacts", &d.artifacts_dir),
+            model: cli.str_opt("model", &d.model),
+            steps: cli.u64_opt("steps", d.steps)?,
+            global_batch: cli.u64_opt("global-batch", d.global_batch)?,
+            seq_len: cli.u64_opt("seq-len", d.seq_len)?,
+            lr: cli.f64_opt("lr", d.lr)?,
+            num_devices: cli.u64_opt("devices", d.num_devices as u64)? as u32,
+            seed: cli.u64_opt("seed", d.seed)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let cli = Cli::parse(&args(&["train", "--steps", "100", "--model=tiny", "--verbose"]));
+        assert_eq!(cli.command, "train");
+        assert_eq!(cli.u64_opt("steps", 0).unwrap(), 100);
+        assert_eq!(cli.str_opt("model", ""), "tiny");
+        assert!(cli.has_flag("verbose"));
+    }
+
+    #[test]
+    fn bad_int_errors() {
+        let cli = Cli::parse(&args(&["x", "--steps", "abc"]));
+        assert!(cli.u64_opt("steps", 0).is_err());
+    }
+
+    #[test]
+    fn run_config_defaults() {
+        let cli = Cli::parse(&args(&["train"]));
+        let rc = RunConfig::from_cli(&cli).unwrap();
+        assert_eq!(rc.steps, 20);
+        assert_eq!(rc.num_devices, 4);
+    }
+
+    #[test]
+    fn positional_args_collected() {
+        let cli = Cli::parse(&args(&["bench", "fig13", "fig14"]));
+        assert_eq!(cli.positional, vec!["fig13", "fig14"]);
+    }
+}

@@ -1,0 +1,137 @@
+//! The top-level trainer: config → strategy → engine → training loop, with
+//! dynamic strategy switching (the Hetu-B loop) and loss-curve logging.
+
+use crate::config::RunConfig;
+use crate::engine::{Engine, EngineStrategy, MicroBatch, StepStats};
+use crate::testutil::Rng;
+use crate::{Error, Result};
+
+/// One completed step's log line.
+#[derive(Clone, Debug)]
+pub struct StepLog {
+    /// Step index.
+    pub step: u64,
+    /// Strategy name the step ran under.
+    pub strategy: String,
+    /// Mean loss.
+    pub loss: f32,
+    /// Wall-clock seconds.
+    pub wall_s: f64,
+    /// Elements on the (simulated) wire.
+    pub wire_elems: u64,
+}
+
+/// Synthetic next-token corpus: a fixed bank of token motifs shared across
+/// the whole corpus (so transitions are *learnable*), each sequence
+/// repeating one motif with light noise. Deterministic per seed.
+pub struct SyntheticCorpus {
+    rng: Rng,
+    vocab: i32,
+    motifs: Vec<Vec<i32>>,
+}
+
+/// Motif bank size (distinct learnable patterns).
+const NUM_MOTIFS: usize = 32;
+/// Motif length.
+const MOTIF_LEN: usize = 5;
+
+impl SyntheticCorpus {
+    /// New corpus over `vocab` tokens.
+    pub fn new(seed: u64, vocab: usize) -> SyntheticCorpus {
+        let mut rng = Rng::new(seed);
+        let motifs = (0..NUM_MOTIFS)
+            .map(|_| (0..MOTIF_LEN).map(|_| rng.below(vocab as u64) as i32).collect())
+            .collect();
+        SyntheticCorpus { rng, vocab: vocab as i32, motifs }
+    }
+
+    /// One `[b, s]` micro-batch (tokens + shifted targets).
+    pub fn microbatch(&mut self, b: usize, s: usize) -> MicroBatch {
+        let mut inp = Vec::with_capacity(b * s);
+        let mut tgt = Vec::with_capacity(b * s);
+        for _ in 0..b {
+            let motif = self.rng.pick(&self.motifs).clone();
+            let phase = self.rng.range(0, MOTIF_LEN - 1);
+            let mut row = Vec::with_capacity(s + 1);
+            for i in 0..s + 1 {
+                if self.rng.chance(0.02) {
+                    row.push(self.rng.below(self.vocab as u64) as i32);
+                } else {
+                    row.push(motif[(i + phase) % MOTIF_LEN]);
+                }
+            }
+            inp.extend_from_slice(&row[..s]);
+            tgt.extend_from_slice(&row[1..s + 1]);
+        }
+        MicroBatch { tokens: inp, targets: tgt }
+    }
+}
+
+/// The trainer.
+pub struct Trainer {
+    /// Engine (owns runtime + mesh).
+    pub engine: Engine,
+    corpus: SyntheticCorpus,
+    cfg: RunConfig,
+    logs: Vec<StepLog>,
+}
+
+impl Trainer {
+    /// Build a trainer from a run config and an initial strategy.
+    pub fn new(cfg: RunConfig, strategy: EngineStrategy) -> Result<Trainer> {
+        let engine = Engine::new(&cfg.artifacts_dir, strategy, cfg.seed, cfg.lr as f32)?;
+        let corpus = SyntheticCorpus::new(cfg.seed ^ 0xDA7A, engine.runtime.config.vocab);
+        Ok(Trainer { engine, corpus, cfg, logs: vec![] })
+    }
+
+    /// Run `steps` training steps; returns the per-step logs.
+    pub fn train(&mut self, steps: u64) -> Result<&[StepLog]> {
+        let b = self.engine.runtime.config.batch;
+        let s = self.engine.runtime.config.seq;
+        for _ in 0..steps {
+            let t0 = std::time::Instant::now();
+            let corpus = &mut self.corpus;
+            let stats: StepStats = self
+                .engine
+                .train_step(&mut |_pipe, _mb| corpus.microbatch(b, s))?;
+            let step = self.logs.len() as u64;
+            self.logs.push(StepLog {
+                step,
+                strategy: self.engine.strategy.name.clone(),
+                loss: stats.loss,
+                wall_s: t0.elapsed().as_secs_f64(),
+                wire_elems: stats.wire_elems,
+            });
+        }
+        Ok(&self.logs)
+    }
+
+    /// Switch the running strategy (graph switching §6 at engine level).
+    /// Returns `(messages, elems moved)`.
+    pub fn switch(&mut self, new: EngineStrategy) -> Result<(u64, u64)> {
+        self.engine.switch_to(new)
+    }
+
+    /// All logs so far.
+    pub fn logs(&self) -> &[StepLog] {
+        &self.logs
+    }
+
+    /// The run config.
+    pub fn config(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    /// Verify the loss curve decreased (end-to-end sanity used by the
+    /// examples and EXPERIMENTS.md).
+    pub fn loss_improved(&self) -> Result<(f32, f32)> {
+        if self.logs.len() < 2 {
+            return Err(Error::Engine("not enough steps to assess loss".into()));
+        }
+        let k = (self.logs.len() / 4).max(1);
+        let head: f32 = self.logs[..k].iter().map(|l| l.loss).sum::<f32>() / k as f32;
+        let tail: f32 =
+            self.logs[self.logs.len() - k..].iter().map(|l| l.loss).sum::<f32>() / k as f32;
+        Ok((head, tail))
+    }
+}

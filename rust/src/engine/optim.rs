@@ -1,0 +1,118 @@
+//! AdamW optimizer, applied by each device to its local parameter shards.
+//!
+//! Elementwise math runs in Rust (f32): the optimizer has no matmuls, so
+//! keeping it on the L3 side avoids one AOT artifact per distinct parameter
+//! shape while preserving the "Python never on the training path" property.
+
+use crate::collectives::DeviceMem;
+use crate::runtime::HostTensor;
+use crate::Result;
+
+/// AdamW with decoupled weight decay.
+#[derive(Clone, Copy, Debug)]
+pub struct AdamW {
+    /// Learning rate.
+    pub lr: f32,
+    /// β1.
+    pub beta1: f32,
+    /// β2.
+    pub beta2: f32,
+    /// ε.
+    pub eps: f32,
+    /// Decoupled weight decay.
+    pub weight_decay: f32,
+}
+
+impl AdamW {
+    /// Default hyperparameters at a given learning rate.
+    pub fn new(lr: f32) -> AdamW {
+        AdamW { lr, beta1: 0.9, beta2: 0.95, eps: 1e-8, weight_decay: 0.01 }
+    }
+
+    /// Update `param_key` on `dev` using `grad_key` (consumed). Moments are
+    /// lazily initialized as `m.<param>` / `v.<param>`. No-op if the grad
+    /// is absent (device does not own this parameter).
+    pub fn update(&self, dev: &mut DeviceMem, param_key: &str, grad_key: &str, step: u64) -> Result<()> {
+        if !dev.has(grad_key) {
+            return Ok(());
+        }
+        let grad = dev.take(grad_key)?;
+        let mkey = format!("m.{param_key}");
+        let vkey = format!("v.{param_key}");
+        if !dev.has(&mkey) {
+            dev.put(&mkey, HostTensor::zeros(grad.shape.clone()));
+            dev.put(&vkey, HostTensor::zeros(grad.shape.clone()));
+        }
+        let g = grad.as_f32()?;
+        let bc1 = 1.0 - self.beta1.powi(step as i32);
+        let bc2 = 1.0 - self.beta2.powi(step as i32);
+
+        // split borrows: take moments out, update, put back
+        let mut m = dev.take(&mkey)?;
+        let mut v = dev.take(&vkey)?;
+        {
+            let mm = m.as_f32_mut()?;
+            let vv = v.as_f32_mut()?;
+            let p = dev.get_mut(param_key)?.as_f32_mut()?;
+            for i in 0..g.len() {
+                mm[i] = self.beta1 * mm[i] + (1.0 - self.beta1) * g[i];
+                vv[i] = self.beta2 * vv[i] + (1.0 - self.beta2) * g[i] * g[i];
+                let mhat = mm[i] / bc1;
+                let vhat = vv[i] / bc2;
+                p[i] -= self.lr * (mhat / (vhat.sqrt() + self.eps) + self.weight_decay * p[i]);
+            }
+        }
+        dev.put(&mkey, m);
+        dev.put(&vkey, v);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adamw_descends_a_quadratic() {
+        // minimize f(x) = x² via its gradient 2x
+        let mut dev = DeviceMem::default();
+        dev.put("x", HostTensor::f32(vec![1], vec![5.0]).unwrap());
+        let opt = AdamW { weight_decay: 0.0, ..AdamW::new(0.1) };
+        for step in 1..=200 {
+            let x = dev.get("x").unwrap().as_f32().unwrap()[0];
+            dev.put("g", HostTensor::f32(vec![1], vec![2.0 * x]).unwrap());
+            opt.update(&mut dev, "x", "g", step).unwrap();
+        }
+        let x = dev.get("x").unwrap().as_f32().unwrap()[0];
+        assert!(x.abs() < 0.5, "x = {x}");
+    }
+
+    #[test]
+    fn missing_grad_is_noop() {
+        let mut dev = DeviceMem::default();
+        dev.put("x", HostTensor::f32(vec![1], vec![1.0]).unwrap());
+        AdamW::new(0.1).update(&mut dev, "x", "g", 1).unwrap();
+        assert_eq!(dev.get("x").unwrap().as_f32().unwrap(), &[1.0]);
+    }
+
+    #[test]
+    fn grad_is_consumed_and_moments_created() {
+        let mut dev = DeviceMem::default();
+        dev.put("x", HostTensor::f32(vec![2], vec![1.0, 2.0]).unwrap());
+        dev.put("g", HostTensor::f32(vec![2], vec![0.1, 0.2]).unwrap());
+        AdamW::new(0.01).update(&mut dev, "x", "g", 1).unwrap();
+        assert!(!dev.has("g"));
+        assert!(dev.has("m.x") && dev.has("v.x"));
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let mut dev = DeviceMem::default();
+        dev.put("x", HostTensor::f32(vec![1], vec![10.0]).unwrap());
+        dev.put("g", HostTensor::f32(vec![1], vec![0.0]).unwrap());
+        let opt = AdamW { weight_decay: 0.1, ..AdamW::new(0.1) };
+        opt.update(&mut dev, "x", "g", 1).unwrap();
+        let x = dev.get("x").unwrap().as_f32().unwrap()[0];
+        assert!(x < 10.0);
+    }
+}

@@ -1,0 +1,59 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for all Hetu subsystems.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Invalid HSPMD annotation (ill-formed DS/DG/union).
+    #[error("invalid annotation: {0}")]
+    InvalidAnnotation(String),
+
+    /// Communication resolution cannot handle the requested transformation
+    /// (e.g. BSR over `Partial` tensors — unsupported by design, §4.3).
+    #[error("unsupported communication: {0}")]
+    UnsupportedComm(String),
+
+    /// Annotation deduction failure (§5.2) — the user must insert a CommOp.
+    #[error("deduction error: {0}")]
+    Deduction(String),
+
+    /// Symbolic-shape binding/verification failure (§5.5).
+    #[error("symbolic shape error: {0}")]
+    SymbolicShape(String),
+
+    /// Graph construction / topology errors.
+    #[error("graph error: {0}")]
+    Graph(String),
+
+    /// Strategy specification errors (rank/layer coverage, memory fit).
+    #[error("strategy error: {0}")]
+    Strategy(String),
+
+    /// Runtime (PJRT / artifact) errors.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Engine execution errors (worker panic, channel closure, shape
+    /// mismatch between artifacts and plan).
+    #[error("engine error: {0}")]
+    Engine(String),
+
+    /// Configuration / CLI errors.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// I/O errors (artifact files, traces, reports).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl Error {
+    /// Shorthand constructor used throughout deduction code.
+    pub fn ded(msg: impl Into<String>) -> Self {
+        Error::Deduction(msg.into())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,671 @@
+//! Regenerators for every table and figure in the paper's evaluation.
+//!
+//! Each function reproduces one artifact of §7/§8 as a [`Table`] (plus any
+//! series data), on the simulated Table-3 cluster. Bench harnesses
+//! (`rust/benches/`) print these; tests assert the qualitative *shape*
+//! (who wins, by roughly what factor) matches the paper.
+
+use crate::baselines::{deepspeed, hexiscale, hotspa, megatron};
+use crate::cluster::Cluster;
+use crate::comm::BsrOptions;
+use crate::costmodel::{CostModel, ModelCfg};
+use crate::data::{sample_step, Corpus};
+use crate::elastic::{self, System};
+use crate::metrics::{fmt_s, Stats, Table};
+use crate::sim::simulate_step;
+use crate::strategy::tables as stables;
+use crate::strategy::ParallelStrategy;
+use crate::switch::{plan_strategy_switch, plan_strategy_switch_avoiding};
+use crate::testutil::Rng;
+use crate::Result;
+
+/// Global batch used throughout §7.1–7.2.
+pub const GBS: u64 = 64;
+/// Context length of §7.1–7.2.
+pub const SEQ: u64 = 4096;
+
+/// One Fig 13 cell: per-step time of every system on one (model, cluster).
+pub struct Fig13Row {
+    /// Scenario label.
+    pub label: String,
+    /// (system, seconds) pairs.
+    pub times: Vec<(&'static str, f64)>,
+}
+
+/// Fig 13 — training time per step across model sizes and clusters.
+pub fn fig13() -> Result<(Table, Vec<Fig13Row>)> {
+    let mut table = Table::new(
+        "Fig 13 — per-step training time (s), heterogeneous clusters",
+        &["scenario", "DeepSpeed", "Megatron", "HexiScale", "Hetu"],
+    );
+    let mut rows = vec![];
+
+    struct Case {
+        label: &'static str,
+        model: ModelCfg,
+        cluster: Cluster,
+        h800: u32,
+        h20: u32,
+        hetu: Option<ParallelStrategy>,
+    }
+    let cases = vec![
+        Case {
+            label: "32B 16xH800",
+            model: ModelCfg::llama_32b(),
+            cluster: Cluster::h800(16),
+            h800: 16,
+            h20: 0,
+            hetu: None, // homogeneous: Hetu == Megatron layout
+        },
+        Case {
+            label: "32B 16xH20",
+            model: ModelCfg::llama_32b(),
+            cluster: Cluster::h20(16),
+            h800: 0,
+            h20: 16,
+            hetu: None,
+        },
+        Case {
+            label: "32B 16xH800+16xH20",
+            model: ModelCfg::llama_32b(),
+            cluster: Cluster::h800_16_h20_16(),
+            h800: 16,
+            h20: 16,
+            hetu: Some(stables::hetu_32b_16h800_16h20()),
+        },
+        Case {
+            label: "32B 16xH800+24xH20",
+            model: ModelCfg::llama_32b(),
+            cluster: Cluster::h800_16_h20_24(),
+            h800: 16,
+            h20: 24,
+            hetu: Some(stables::hetu_32b_16h800_24h20()),
+        },
+        Case {
+            label: "32B 16xH800+32xH20",
+            model: ModelCfg::llama_32b(),
+            cluster: Cluster::h800_16_h20_32(),
+            h800: 16,
+            h20: 32,
+            hetu: Some(stables::hetu_32b_16h800_32h20()),
+        },
+        Case {
+            label: "70B 16xH800+16xH20",
+            model: ModelCfg::llama_70b(),
+            cluster: Cluster::h800_16_h20_16(),
+            h800: 16,
+            h20: 16,
+            hetu: Some(stables::hetu_70b_16h800_16h20()),
+        },
+        Case {
+            label: "70B 16xH800+24xH20",
+            model: ModelCfg::llama_70b(),
+            cluster: Cluster::h800_16_h20_24(),
+            h800: 16,
+            h20: 24,
+            hetu: Some(stables::hetu_70b_16h800_24h20()),
+        },
+        Case {
+            label: "70B 16xH800+32xH20",
+            model: ModelCfg::llama_70b(),
+            cluster: Cluster::h800_16_h20_32(),
+            h800: 16,
+            h20: 32,
+            hetu: Some(stables::hetu_70b_16h800_32h20()),
+        },
+    ];
+
+    for c in cases {
+        let cm = CostModel::new(c.model);
+        let ds = deepspeed::table4(c.model.name, c.h800, c.h20)
+            .map(|cfg| deepspeed::step_time(&c.cluster, &cm, cfg, GBS, SEQ));
+        let mg = megatron::table4(c.model.name, c.h800, c.h20)
+            .map(|cfg| megatron::step_time(&c.cluster, &cm, cfg, GBS, SEQ))
+            .transpose()?;
+        let (hetu_t, hexi_t) = match &c.hetu {
+            Some(h) => (
+                simulate_step(&c.cluster, &cm, h)?.step_s,
+                Some(hexiscale::step_time(&c.cluster, &cm, h)?),
+            ),
+            None => {
+                // homogeneous cluster: Hetu runs the optimal uniform layout
+                let cfg = megatron::table4(c.model.name, c.h800, c.h20).unwrap();
+                (megatron::step_time(&c.cluster, &cm, cfg, GBS, SEQ)?, None)
+            }
+        };
+        let fmt = |x: Option<f64>| x.map(fmt_s).unwrap_or_else(|| "-".into());
+        table.row(vec![
+            c.label.to_string(),
+            fmt(ds),
+            fmt(mg),
+            fmt(hexi_t),
+            fmt_s(hetu_t),
+        ]);
+        let mut times: Vec<(&'static str, f64)> = vec![("Hetu", hetu_t)];
+        if let Some(t) = ds {
+            times.push(("DeepSpeed", t));
+        }
+        if let Some(t) = mg {
+            times.push(("Megatron", t));
+        }
+        if let Some(t) = hexi_t {
+            times.push(("HexiScale", t));
+        }
+        rows.push(Fig13Row { label: c.label.to_string(), times });
+    }
+    Ok((table, rows))
+}
+
+/// Fig 14 — elastic traces: per-configuration step time + reconfiguration
+/// overhead for all four systems, on both traces.
+pub fn fig14() -> Result<Vec<(String, Table)>> {
+    let cm = CostModel::new(ModelCfg::llama_32b());
+    let mut out = vec![];
+    for (name, scenario) in [
+        ("homogeneous (32xH20)", elastic::homogeneous_trace()),
+        ("heterogeneous (16xH800+32xH20)", elastic::heterogeneous_trace()),
+    ] {
+        let mut table = Table::new(
+            &format!("Fig 14 — elastic training, {name}"),
+            &["config", "GPUs", "Hetu", "Hetu reconf", "DeepSpeed", "DS reconf", "Megatron", "Mg reconf", "Oobleck", "Oob reconf"],
+        );
+        let hetu = elastic::run_scenario(&scenario, &cm, System::Hetu, GBS, SEQ)?;
+        let ds = elastic::run_scenario(&scenario, &cm, System::DeepSpeed, GBS, SEQ)?;
+        let mg = elastic::run_scenario(&scenario, &cm, System::Megatron, GBS, SEQ)?;
+        let oob = elastic::run_scenario(&scenario, &cm, System::Oobleck, GBS, SEQ)?;
+        for i in 0..hetu.len() {
+            table.row(vec![
+                hetu[i].name.clone(),
+                hetu[i].gpus.to_string(),
+                fmt_s(hetu[i].step_s),
+                fmt_s(hetu[i].reconfig_s),
+                fmt_s(ds[i].step_s),
+                fmt_s(ds[i].reconfig_s),
+                fmt_s(mg[i].step_s),
+                fmt_s(mg[i].reconfig_s),
+                fmt_s(oob[i].step_s),
+                fmt_s(oob[i].reconfig_s),
+            ]);
+        }
+        out.push((name.to_string(), table));
+    }
+    Ok(out)
+}
+
+/// Per-step times of one mixed-length configuration for all five systems.
+pub struct Fig15Cell {
+    /// e.g. "CommonCrawl 32K".
+    pub label: String,
+    /// System → per-step time samples over the simulated steps.
+    pub samples: Vec<(&'static str, Vec<f64>)>,
+}
+
+/// Fig 15 — mixed-length per-step time distributions (box-plot data).
+pub fn fig15(steps: usize) -> Result<(Table, Vec<Fig15Cell>)> {
+    let cluster = Cluster::h20(32);
+    let cm = CostModel::new(ModelCfg::llama_32b());
+    let mut table = Table::new(
+        "Fig 15 — mixed-length per-step time (mean [p25,p75] s), 32B on 32xH20, 200K tok/step",
+        &["workload", "DeepSpeed", "Megatron", "HotSPa", "Hetu-A", "Hetu-B"],
+    );
+    let mut cells = vec![];
+    for corpus in [Corpus::CommonCrawl, Corpus::GitHub] {
+        for ctx in [32768u64, 16384] {
+            let label = format!(
+                "{} {}K",
+                if corpus == Corpus::CommonCrawl { "CommonCrawl" } else { "GitHub" },
+                ctx / 1024
+            );
+            let mut rng = Rng::new(0xF15 ^ ctx);
+            // per-pair switch costs for HotSPa (unfused) / Hetu-A (fused)
+            let cfgs = hotspa::table10(ctx);
+            let mut sw_unfused = vec![vec![0.0; cfgs.len()]; cfgs.len()];
+            let mut sw_fused = vec![vec![0.0; cfgs.len()]; cfgs.len()];
+            for i in 0..cfgs.len() {
+                for j in 0..cfgs.len() {
+                    if i == j {
+                        continue;
+                    }
+                    let a = hotspa::bucket_strategy(&cluster, cfgs[i], cm.model.layers, GBS)?;
+                    let b = hotspa::bucket_strategy(&cluster, cfgs[j], cm.model.layers, GBS)?;
+                    sw_unfused[i][j] =
+                        plan_strategy_switch(&a, &b, &cm, &cluster, BsrOptions { heuristics: false }, false)?
+                            .est_seconds;
+                    sw_fused[i][j] =
+                        plan_strategy_switch(&a, &b, &cm, &cluster, BsrOptions::default(), true)?
+                            .est_seconds;
+                }
+            }
+
+            let mut ds_t = vec![];
+            let mut mg_t = vec![];
+            let mut hotspa_t = vec![];
+            let mut hetu_a_t = vec![];
+            let mut hetu_b_t = vec![];
+            for _ in 0..steps {
+                let batch = sample_step(&mut rng, corpus, 200_000, ctx);
+                // packed baselines
+                let packed = crate::data::pack_sequences(&batch.seq_lens, ctx);
+                let ds_cfg = deepspeed::table9(ctx).unwrap();
+                ds_t.push(deepspeed::step_time(&cluster, &cm, ds_cfg, packed, ctx));
+                let mg_cfg = megatron::table9(ctx).unwrap();
+                mg_t.push(megatron::step_time(&cluster, &cm, mg_cfg, packed, ctx)?);
+                // bucket-switching systems
+                hotspa_t.push(hotspa::step_time(&cluster, &cm, &batch, ctx, &|a, b| {
+                    sw_unfused[a][b]
+                })?);
+                hetu_a_t.push(hotspa::step_time(&cluster, &cm, &batch, ctx, &|a, b| {
+                    sw_fused[a][b]
+                })?);
+                // Hetu-B: heterogeneous strategies selected per step
+                hetu_b_t.push(hetu_b_step(&cluster, &cm, &batch, ctx)?);
+            }
+            let f = |v: &[f64]| {
+                let s = Stats::of(v);
+                format!("{:.2} [{:.2},{:.2}]", s.mean, s.p25, s.p75)
+            };
+            table.row(vec![
+                label.clone(),
+                f(&ds_t),
+                f(&mg_t),
+                f(&hotspa_t),
+                f(&hetu_a_t),
+                f(&hetu_b_t),
+            ]);
+            cells.push(Fig15Cell {
+                label,
+                samples: vec![
+                    ("DeepSpeed", ds_t),
+                    ("Megatron", mg_t),
+                    ("HotSPa", hotspa_t),
+                    ("Hetu-A", hetu_a_t),
+                    ("Hetu-B", hetu_b_t),
+                ],
+            });
+        }
+    }
+    Ok((table, cells))
+}
+
+/// One Hetu-B step: select Strategy 1/2 by the batch's max sequence length
+/// (Tables 11/12), dispatch sequences to pipelines by the cost model, and
+/// simulate the heterogeneous strategy with per-pipeline micro-batching.
+pub fn hetu_b_step(
+    cluster: &Cluster,
+    cm: &CostModel,
+    batch: &crate::data::StepBatch,
+    ctx: u64,
+) -> Result<f64> {
+    let max_len = batch.max_len();
+    // Short-pipeline sequence caps: the paper distributes "sequences of
+    // varying lengths across machines with different parallelisms" — the
+    // TP4(±PP2) short pipelines take anything their memory allows (≤16K;
+    // cf. Table 11's TP4 L0-59 pipelines on 96-GB H20s), so only the true
+    // long tail lands on the wide pipeline.
+    let (strat, long_seq, short_seq) = match (ctx, max_len) {
+        (32768, l) if l > 16384 => (stables::hetu_b_32k_strategy1(32768), 32768u64, 16384u64),
+        (32768, _) => (stables::hetu_b_32k_strategy2(16384), 16384, 16384),
+        (16384, l) if l > 4096 => (stables::hetu_b_16k_strategy1(16384), 16384, 16384),
+        (16384, _) => (stables::hetu_b_16k_strategy2(4096), 4096, 4096),
+        _ => return Err(crate::Error::Strategy(format!("no Hetu-B table for ctx {ctx}"))),
+    };
+    // dispatch sequences: pipeline 0 is the long-sequence pipeline
+    let classes: Vec<crate::data::PipeClass> = strat
+        .pipelines
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let gpus: f64 = p.ranks().len() as f64;
+            crate::data::PipeClass {
+                max_seq: if i == 0 { long_seq } else { short_seq },
+                tokens_per_s: gpus,
+            }
+        })
+        .collect();
+    let assign = crate::data::dispatch_hetu_b(&batch.seq_lens, &classes);
+    // Each pipeline processes its assignment as ONE stream of variable-shape
+    // micro-batches (§5.5 symbolic shapes): short sequences pack into
+    // 4K-token micro-batches, longer sequences become their own
+    // micro-batch of their actual length. The pipeline bubble is paid once
+    // per step, not once per length class. The simulator takes a uniform
+    // per-mb shape, so we feed it the token-matched average micro-batch.
+    let mut worst = 0f64;
+    for (i, seqs) in assign.iter().enumerate() {
+        if seqs.is_empty() {
+            continue;
+        }
+        let shorts: Vec<u64> = seqs.iter().copied().filter(|&l| l <= 4096).collect();
+        let longs = seqs.iter().filter(|&&l| l > 4096).count() as u64;
+        let num_mb = (crate::data::pack_sequences(&shorts, 4096) + longs).max(1);
+        let total_tokens: u64 = seqs.iter().sum();
+        let avg_seq = (total_tokens / num_mb).clamp(256, classes[i].max_seq);
+        let mut p = strat.pipelines[i].clone();
+        p.num_microbatches = num_mb as u32;
+        p.microbatch_size = 1;
+        let solo = ParallelStrategy {
+            name: format!("{}-p{i}", strat.name),
+            pipelines: vec![p],
+            zero1: strat.zero1,
+            schedule: strat.schedule,
+            seq_len: avg_seq,
+            ac: strat.ac,
+        };
+        worst = worst.max(simulate_step(cluster, cm, &solo)?.step_s);
+    }
+    // cross-pipeline gradient sync (SplitAR path): one AR of a layer-shard
+    // volume across pipeline representatives
+    let reps: Vec<u32> = strat.pipelines.iter().map(|p| p.ranks()[0]).collect();
+    let bytes = (cm.model.params_per_layer() as f64 * cm.params.elem_bytes) as u64
+        * cm.model.layers as u64
+        / strat.pipelines[0].stages[0].tp() as u64;
+    let sync = cluster.collective_s(&reps, bytes, true);
+    Ok(worst + sync)
+}
+
+/// Fig 16 — the per-step max-seq-len trace and Hetu-B's strategy choice.
+pub fn fig16(steps: usize) -> Result<Table> {
+    let mut table = Table::new(
+        "Fig 16 — 32K CommonCrawl: per-step length stats and Hetu-B strategy",
+        &["step", "#seqs", "max len", "p99", "%<8K", "strategy"],
+    );
+    let mut rng = Rng::new(0xF16);
+    for step in 0..steps {
+        let b = sample_step(&mut rng, Corpus::CommonCrawl, 200_000, 32768);
+        let mut lens = b.seq_lens.clone();
+        lens.sort_unstable();
+        let p99 = lens[(0.99 * (lens.len() - 1) as f64) as usize];
+        let under8k = lens.iter().filter(|&&l| l < 8192).count() as f64 / lens.len() as f64;
+        let strategy = if b.max_len() > 16384 { "Strategy 1" } else { "Strategy 2" };
+        table.row(vec![
+            step.to_string(),
+            b.seq_lens.len().to_string(),
+            b.max_len().to_string(),
+            p99.to_string(),
+            format!("{:.1}%", under8k * 100.0),
+            strategy.to_string(),
+        ]);
+    }
+    Ok(table)
+}
+
+/// Fig 17 — the C2 deployment's resolved communication pattern.
+pub fn fig17() -> Result<Table> {
+    use crate::hspmd::ds::DUPLICATE;
+    use crate::hspmd::{Annotation, DeviceGroup, DistStates, Subgroup};
+
+    let cluster = Cluster::h20(32);
+    let c2 = stables::hetu_c2_31h20();
+    let mut table = Table::new(
+        "Fig 17 — C2 strategy: resolved communication per edge",
+        &["edge", "resolution", "detail"],
+    );
+    // Within-stage TP sync: partial -> dup on each stage (AG/RS pair in the
+    // paper's Megatron formulation; our resolver reports the AR-class op).
+    for (pi, p) in c2.pipelines.iter().enumerate() {
+        for (si, s) in p.stages.iter().enumerate() {
+            if s.tp() > 1 {
+                let dg = DeviceGroup::new(s.ranks.clone())?;
+                let src = Annotation::spmd(dg.clone(), DistStates::partial(s.tp()))?;
+                let dst = Annotation::spmd(dg, DistStates::duplicate(s.tp()))?;
+                let res = crate::comm::resolve(&src, &dst, &[4096, 6400], &cluster, BsrOptions::default())?;
+                table.row(vec![
+                    format!("P{pi} stage {si} TP sync"),
+                    res.kind.to_string(),
+                    format!("ranks {:?}", s.ranks),
+                ]);
+            }
+            if si > 0 {
+                let prev = &p.stages[si - 1];
+                let src = Annotation::spmd(
+                    DeviceGroup::new(prev.ranks.clone())?,
+                    DistStates::duplicate(prev.tp()),
+                )?;
+                let dst = Annotation::spmd(
+                    DeviceGroup::new(s.ranks.clone())?,
+                    DistStates::duplicate(s.tp()),
+                )?;
+                let res = crate::comm::resolve(&src, &dst, &[4096, 6400], &cluster, BsrOptions::default())?;
+                table.row(vec![
+                    format!("P{pi} stage {}->{} activation", si - 1, si),
+                    res.kind.to_string(),
+                    format!("{} -> {} ranks", prev.tp(), s.tp()),
+                ]);
+            }
+        }
+    }
+    // Cross-pipeline gradient sync per layer region: equal TP -> AR
+    // (SplitAR when subgroup DSs differ, §4.2).
+    for l in [0u32, 50, 59] {
+        let holders = c2.holders_of_layer(l);
+        if holders.len() < 2 {
+            continue;
+        }
+        let groups: Vec<Subgroup> = holders
+            .iter()
+            .map(|h| {
+                Subgroup::new(
+                    DeviceGroup::new(h.ranks.clone()).unwrap(),
+                    DistStates::split(0, h.tp()),
+                )
+                .unwrap()
+            })
+            .collect();
+        let src = Annotation::new(groups.clone(), crate::hspmd::ds::PARTIAL)?;
+        let dst = Annotation::new(groups, DUPLICATE)?;
+        let shape = vec![crate::costmodel::ModelCfg::llama_32b().params_per_layer()];
+        let res = crate::comm::resolve(&src, &dst, &shape, &cluster, BsrOptions::default())?;
+        table.row(vec![
+            format!("grad sync layer {l}"),
+            res.kind.to_string(),
+            format!(
+                "{} subgroups, tp {:?}",
+                holders.len(),
+                holders.iter().map(|h| h.tp()).collect::<Vec<_>>()
+            ),
+        ]);
+    }
+    Ok(table)
+}
+
+/// Fig 18 left — per-rank compute/comm/bubble breakdown under C1 and C2.
+pub fn fig18_left() -> Result<Table> {
+    let cluster = Cluster::h20(32);
+    let cm = CostModel::new(ModelCfg::llama_32b());
+    let mut table = Table::new(
+        "Fig 18 (left) — time breakdown by rank",
+        &["config", "rank", "compute", "comm", "bubble", "step"],
+    );
+    for (name, strat) in [("C1", stables::hetu_c1_32h20()), ("C2", stables::hetu_c2_31h20())] {
+        let rep = simulate_step(&cluster, &cm, &strat)?;
+        for rank in [0u32, 29] {
+            if let Some(b) = rep.per_rank.get(&rank) {
+                table.row(vec![
+                    name.into(),
+                    rank.to_string(),
+                    fmt_s(b.compute_s),
+                    fmt_s(b.comm_s),
+                    fmt_s(b.bubble_s),
+                    fmt_s(rep.step_s),
+                ]);
+            }
+        }
+    }
+    Ok(table)
+}
+
+/// Fig 18 right — C1→C2 transition: specialization phases + switching time
+/// under the three BSR planners.
+pub fn fig18_right() -> Result<Table> {
+    let cluster = Cluster::h20(32);
+    let cm = CostModel::new(ModelCfg::llama_32b());
+    let c1 = stables::hetu_c1_32h20();
+    let c2 = stables::hetu_c2_31h20();
+
+    let mut table = Table::new(
+        "Fig 18 (right) — C1→C2 transition overhead",
+        &["component", "time", "notes"],
+    );
+
+    // Graph specialization phases, measured on a real 60-layer graph.
+    let t0 = std::time::Instant::now();
+    let (mut g, binding) = crate::figures::build_strategy_graph(&[&c1, &c2])?;
+    let build_s = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    let spec = crate::spec::instantiate::specialize(&mut g, 1, &binding, &cluster, BsrOptions::default())?;
+    let spec_s = t1.elapsed().as_secs_f64();
+    let t2 = std::time::Instant::now();
+    let ranks: Vec<u32> = c2.ranks();
+    let pipes = crate::spec::pipeline::build_pipelines(&g, 1, &spec.comm_resolutions, &ranks)?;
+    let pipe_s = t2.elapsed().as_secs_f64();
+    table.row(vec!["graph build".into(), fmt_s(build_s), format!("{} ops", g.ops.len())]);
+    table.row(vec![
+        "deduction+instantiation".into(),
+        fmt_s(spec_s),
+        format!("{} device graphs", spec.graphs.len()),
+    ]);
+    table.row(vec![
+        "pipeline construction".into(),
+        fmt_s(pipe_s),
+        format!("{} pipelines", pipes.pipelines.len()),
+    ]);
+    table.row(vec![
+        "NCCL group init (charged)".into(),
+        fmt_s(elastic::HETU_GROUP_INIT_S),
+        "constant; no real NCCL here".into(),
+    ]);
+
+    // Switching under the three planners.
+    for (label, opts, fuse) in [
+        ("switch: BSR w/o heuristics", BsrOptions { heuristics: false }, false),
+        ("switch: unfused BSR", BsrOptions { heuristics: true }, false),
+        ("switch: fused BSR", BsrOptions { heuristics: true }, true),
+    ] {
+        let t = std::time::Instant::now();
+        // rank 31 just failed: it cannot source any shard
+        let rep = plan_strategy_switch_avoiding(&c1, &c2, &cm, &cluster, opts, fuse, &[31])?;
+        let plan_s = t.elapsed().as_secs_f64();
+        table.row(vec![
+            label.into(),
+            fmt_s(rep.est_seconds),
+            format!(
+                "{} msgs, {} MB wire, planned in {}",
+                rep.num_messages,
+                rep.wire_bytes / (1 << 20),
+                fmt_s(plan_s)
+            ),
+        ]);
+    }
+    Ok(table)
+}
+
+/// Table 2 — C1→C2 per-sender communication volumes (NVLink | IB), under
+/// the unfused-no-heuristics planner vs the fused planner.
+pub fn table2() -> Result<Table> {
+    let cluster = Cluster::h20(32);
+    let cm = CostModel::new(ModelCfg::llama_32b());
+    let c1 = stables::hetu_c1_32h20();
+    let c2 = stables::hetu_c2_31h20();
+    let mut table = Table::new(
+        "Table 2 — C1→C2 send volumes per rank: NVLink MB | IB MB",
+        &["planner", "rank", "NVLink MB", "IB MB"],
+    );
+    for (label, opts, fuse) in [
+        ("unfused w/o heuristics", BsrOptions { heuristics: false }, false),
+        ("fused", BsrOptions { heuristics: true }, true),
+    ] {
+        // rank 31 just failed: its replicas source the moved shards
+        let rep = plan_strategy_switch_avoiding(&c1, &c2, &cm, &cluster, opts, fuse, &[31])?;
+        let vols = rep.plan.sender_volumes(&cluster);
+        let mut ranks: Vec<u32> = vols.keys().copied().collect();
+        ranks.sort_unstable();
+        for r in ranks {
+            let (nv, ib) = vols[&r];
+            table.row(vec![
+                label.into(),
+                format!("R{r}"),
+                (nv / (1 << 20)).to_string(),
+                (ib / (1 << 20)).to_string(),
+            ]);
+        }
+    }
+    Ok(table)
+}
+
+/// Build a layer-level annotated graph for a set of strategies (shared by
+/// Fig 18 and the specialization benches):
+///
+/// * per layer: a parameter + CommOp to the strategy's weight annotation
+///   (Fig 9's CommOp id=1 — runs once, excluded from scheduling);
+/// * per pipeline position: a TP-sync probe (placeholder `Partial` →
+///   `Duplicate`, the per-microbatch AR that merges a TP group into one
+///   stage) and a boundary CommOp to the next position (SR/BSR chaining
+///   stages) — the scheduled comms §5.4's pipeline construction consumes.
+pub fn build_strategy_graph(
+    strategies: &[&ParallelStrategy],
+) -> Result<(crate::graph::Graph, crate::graph::Binding)> {
+    use crate::graph::{lits, DType, Graph};
+    use crate::hspmd::{Annotation, DeviceGroup, DistStates, Subgroup};
+    let layers = strategies
+        .iter()
+        .flat_map(|s| s.pipelines.iter().flat_map(|p| p.stages.iter().map(|st| st.layers.1)))
+        .max()
+        .unwrap_or(0);
+    let mut g = Graph::new(strategies.len());
+    let pl = crate::costmodel::ModelCfg::llama_32b().params_per_layer();
+    for l in 0..layers {
+        let anns: Vec<crate::hspmd::Annotation> = strategies
+            .iter()
+            .map(|s| s.weight_annotation(l, 0))
+            .collect::<Result<_>>()?;
+        let w = g.parameter(
+            &format!("w{l}"),
+            lits(&[pl]),
+            DType::Bf16,
+            vec![anns[0].clone(); strategies.len()],
+        )?;
+        let _wc = g.comm(w, anns)?;
+    }
+
+    // activation path: per pipeline position, one TP-sync probe + boundary
+    let max_stages = strategies
+        .iter()
+        .flat_map(|s| s.pipelines.iter().map(|p| p.stages.len()))
+        .max()
+        .unwrap_or(1);
+    let stage_ann = |k: usize, j: usize, partial: bool| -> Result<Annotation> {
+        let s = strategies[k];
+        let groups = s
+            .pipelines
+            .iter()
+            .map(|p| {
+                let st = &p.stages[j.min(p.stages.len() - 1)];
+                let ds = if partial {
+                    DistStates::partial(st.tp())
+                } else {
+                    DistStates::duplicate(st.tp())
+                };
+                Subgroup::new(DeviceGroup::new(st.ranks.clone())?, ds)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        // activations are batch-split across pipelines (hdim 0)
+        Annotation::new(groups, if strategies[k].pipelines.len() > 1 { 0 } else { -1 })
+    };
+    let act_shape = lits(&[4096, 6400]);
+    let mut prev: Option<crate::graph::TensorId> = None;
+    for j in 0..max_stages {
+        // TP-sync probe: Partial -> Duplicate within each stage subgroup
+        let partials: Vec<Annotation> =
+            (0..strategies.len()).map(|k| stage_ann(k, j, true)).collect::<Result<_>>()?;
+        let dups: Vec<Annotation> =
+            (0..strategies.len()).map(|k| stage_ann(k, j, false)).collect::<Result<_>>()?;
+        let probe =
+            g.placeholder(&format!("act_partial_{j}"), act_shape.clone(), DType::Bf16, partials)?;
+        let synced = g.comm(probe, dups.clone())?;
+        // boundary: chain from the previous position's synced activation
+        if let Some(p) = prev {
+            let _boundary = g.comm(p, dups)?;
+        }
+        prev = Some(synced);
+    }
+    Ok((g, crate::graph::Binding::new()))
+}

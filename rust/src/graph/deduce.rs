@@ -1,0 +1,412 @@
+//! §5.2 — Annotation deduction.
+//!
+//! Leaf ops and CommOps declare their outputs' annotations; everything else
+//! is deduced in topological order:
+//!
+//! * `DG Union`/`HSize` unification (Fig 10): inputs with smaller `HSize`
+//!   are *refined* (semantic-preserving subgroup split) to the largest
+//!   `HSize`; post-conversion the DG unions must align, otherwise the user
+//!   must insert a CommOp;
+//! * `DS Union` deduction reduces to per-subgroup SPMD deduction once the
+//!   unions align;
+//! * `HDim` deduction follows per-operator rules (Fig 11 for `Dot`).
+
+use crate::hspmd::ds::{DistStates, DUPLICATE, PARTIAL};
+use crate::hspmd::{Annotation, Subgroup};
+use crate::{Error, Result};
+
+use super::{Graph, OpKind, TensorId};
+
+/// Deduce annotations for every tensor of `g` under strategy `k` (§5.2).
+pub fn deduce(g: &mut Graph, k: usize) -> Result<()> {
+    if k >= g.num_strategies {
+        return Err(Error::ded(format!("strategy {k} out of range")));
+    }
+    for op_idx in 0..g.ops.len() {
+        let op = g.ops[op_idx].clone();
+        let out_ann: Annotation = match &op.kind {
+            OpKind::Placeholder | OpKind::Parameter | OpKind::Comm => {
+                op.declared.get(k).and_then(|a| a.clone()).ok_or_else(|| {
+                    Error::ded(format!(
+                        "op {} (`{}`) has no declared annotation for strategy {k}",
+                        op.id,
+                        g.tensors[op.outputs[0]].name
+                    ))
+                })?
+            }
+            OpKind::Unary(_) | OpKind::ArtifactCall { .. } => input_ann(g, &op.inputs, 0, k)?,
+            OpKind::Add => {
+                let a = input_ann(g, &op.inputs, 0, k)?;
+                let b = input_ann(g, &op.inputs, 1, k)?;
+                let (a, b) = unify(&a, &b)?;
+                if a.same_ds_union(&b) && a.hdim == b.hdim {
+                    a
+                } else {
+                    return Err(Error::ded(format!(
+                        "add: incompatible annotations {} vs {} — insert a CommOp",
+                        a.describe(),
+                        b.describe()
+                    )));
+                }
+            }
+            OpKind::Dot => {
+                let x = input_ann(g, &op.inputs, 0, k)?;
+                let w = input_ann(g, &op.inputs, 1, k)?;
+                let x_rank = g.tensors[op.inputs[0]].shape.len();
+                let (x, w) = unify(&x, &w)?;
+                deduce_dot(&x, &w, x_rank)?
+            }
+            OpKind::Sum { dim } => {
+                let x = input_ann(g, &op.inputs, 0, k)?;
+                deduce_sum(&x, *dim)?
+            }
+            OpKind::Reshape => {
+                let x = input_ann(g, &op.inputs, 0, k)?;
+                let ok = x.hdim <= 0
+                    && x.groups.iter().all(|s| s.ds.splits().iter().all(|&(d, _)| d == 0));
+                if !ok {
+                    return Err(Error::ded(
+                        "reshape only supports dim-0 sharding (insert a CommOp first)",
+                    ));
+                }
+                x
+            }
+        };
+        for &out in &op.outputs {
+            g.tensors[out].annotations[k] = Some(out_ann.clone());
+        }
+    }
+    Ok(())
+}
+
+fn input_ann(g: &Graph, inputs: &[TensorId], idx: usize, k: usize) -> Result<Annotation> {
+    let t = inputs
+        .get(idx)
+        .ok_or_else(|| Error::ded(format!("missing input {idx}")))?;
+    g.tensors[*t]
+        .annotation(k)
+        .cloned()
+        .ok_or_else(|| Error::ded(format!("input `{}` not yet annotated", g.tensors[*t].name)))
+}
+
+/// Fig 10 — unify `HSize`/`DG Union` of two input annotations by refining
+/// the smaller-`HSize` side. Errors if no semantic-preserving refinement
+/// aligns the unions (the user must insert a CommOp).
+pub fn unify(a: &Annotation, b: &Annotation) -> Result<(Annotation, Annotation)> {
+    use std::cmp::Ordering;
+    match a.hsize().cmp(&b.hsize()) {
+        Ordering::Equal => {
+            if a.same_dg_union(b) {
+                Ok((a.clone(), b.clone()))
+            } else {
+                Err(Error::ded(format!(
+                    "DG unions do not align: {} vs {} — insert a CommOp",
+                    a.describe(),
+                    b.describe()
+                )))
+            }
+        }
+        Ordering::Less => {
+            let a2 = refine_to_match(a, b)?;
+            Ok((a2, b.clone()))
+        }
+        Ordering::Greater => {
+            let b2 = refine_to_match(b, a)?;
+            Ok((a.clone(), b2))
+        }
+    }
+}
+
+/// Refine `small` to `large.hsize()` subgroups such that the DG unions
+/// align, trying every logical dim of the DS as the split axis.
+fn refine_to_match(small: &Annotation, large: &Annotation) -> Result<Annotation> {
+    if large.hsize() % small.hsize() != 0 {
+        return Err(Error::ded(format!(
+            "HSize {} does not divide {}",
+            small.hsize(),
+            large.hsize()
+        )));
+    }
+    let k = (large.hsize() / small.hsize()) as u32;
+    // candidate logical dims: those present in every subgroup's DS
+    let mut candidates: Vec<i32> = vec![DUPLICATE, PARTIAL];
+    for sub in &small.groups {
+        for &(d, _) in sub.ds.entries() {
+            if d >= 0 && !candidates.contains(&d) {
+                candidates.push(d);
+            }
+        }
+    }
+    for ld in candidates {
+        if let Ok(refined) = small.refine(ld, k) {
+            if refined.same_dg_union(large) {
+                return Ok(refined);
+            }
+        }
+    }
+    Err(Error::ded(format!(
+        "no semantic-preserving refinement of {} aligns with {} — insert a CommOp",
+        small.describe(),
+        large.describe()
+    )))
+}
+
+/// Fig 11 — Dot deduction for `X[..., c] @ W[c, d]` once unions align.
+pub fn deduce_dot(x: &Annotation, w: &Annotation, x_rank: usize) -> Result<Annotation> {
+    if x_rank < 1 {
+        return Err(Error::ded("dot: X rank must be >= 1"));
+    }
+    let contract = (x_rank - 1) as i32;
+    let mut groups = Vec::with_capacity(x.hsize());
+    for (sx, sw) in x.groups.iter().zip(w.groups.iter()) {
+        if !sx.dg.same_set(&sw.dg) {
+            return Err(Error::ded("dot: subgroup DGs differ — insert a CommOp"));
+        }
+        let n = sx.dg.len() as u32;
+        let c = sx.ds.shards(contract);
+        if c != sw.ds.shards(0) {
+            return Err(Error::ded(format!(
+                "dot: contraction sharding mismatch X:{c} vs W:{}",
+                sw.ds.shards(0)
+            )));
+        }
+        // Y entries: X's batch splits, W's output split, partial from the
+        // contraction (times any incoming partials).
+        let mut entries: Vec<(i32, u32)> = vec![];
+        for &(d, s) in sx.ds.entries() {
+            if d >= 0 && d < contract {
+                entries.push((d, s));
+            }
+        }
+        let out_split = sw.ds.shards(1);
+        if out_split > 1 {
+            entries.push((contract, out_split));
+        }
+        let partial = c * sx.ds.shards(PARTIAL) * sw.ds.shards(PARTIAL);
+        if partial > 1 {
+            entries.push((PARTIAL, partial));
+        }
+        let used: u32 = entries.iter().map(|&(_, s)| s).product();
+        if n % used != 0 {
+            return Err(Error::ded(format!(
+                "dot: sharding covers {used} of {n} devices non-divisibly"
+            )));
+        }
+        let dup = n / used;
+        if dup > 1 {
+            entries.push((DUPLICATE, dup));
+        }
+        let ds = DistStates::with_default_order(&entries)?;
+        // Keep the *device order* consistent with the input X ordering: the
+        // deduction result uses canonical order; strategy lowering declares
+        // explicit orders where it matters (see DESIGN.md).
+        groups.push(Subgroup::new(sx.dg.clone(), ds)?);
+    }
+    // HDim rule (Fig 11-right).
+    let hdim = match (x.hdim, w.hdim) {
+        (DUPLICATE, DUPLICATE) => DUPLICATE,
+        (d, DUPLICATE) if d >= 0 && d < contract => d,
+        (d, 0) if d == contract => PARTIAL,
+        (DUPLICATE, 1) => contract,
+        (PARTIAL, DUPLICATE) | (DUPLICATE, PARTIAL) | (PARTIAL, PARTIAL) => PARTIAL,
+        (xd, wd) => {
+            return Err(Error::ded(format!(
+                "dot: unsupported HDim combination X:{xd} W:{wd}"
+            )))
+        }
+    };
+    Annotation::with_weights(groups, hdim, if hdim == x.hdim { x.hsplit.clone() } else { None })
+}
+
+/// Sum deduction: a split on the reduced dim becomes `Partial`; splits on
+/// higher dims shift down.
+pub fn deduce_sum(x: &Annotation, dim: u32) -> Result<Annotation> {
+    let d = dim as i32;
+    let mut groups = Vec::with_capacity(x.hsize());
+    for sub in &x.groups {
+        let mut entries: Vec<(i32, u32)> = vec![];
+        let mut partial = sub.ds.shards(PARTIAL);
+        for &(ld, s) in sub.ds.entries() {
+            match ld {
+                PARTIAL => {}
+                DUPLICATE => entries.push((DUPLICATE, s)),
+                x if x == d => partial *= s,
+                x if x > d => entries.push((x - 1, s)),
+                x => entries.push((x, s)),
+            }
+        }
+        if partial > 1 {
+            entries.push((PARTIAL, partial));
+        }
+        groups.push(Subgroup::new(sub.dg.clone(), DistStates::with_default_order(&entries)?)?);
+    }
+    let hdim = if x.hdim == d {
+        PARTIAL
+    } else if x.hdim > d {
+        x.hdim - 1
+    } else {
+        x.hdim
+    };
+    Annotation::with_weights(groups, hdim, if hdim == x.hdim { x.hsplit.clone() } else { None })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{lits, DType, UnaryKind};
+    use crate::hspmd::DeviceGroup;
+
+    fn spmd(ranks: std::ops::Range<u32>, entries: &[(i32, u32)], order: &[i32]) -> Annotation {
+        Annotation::spmd(
+            DeviceGroup::range(ranks.start, ranks.end),
+            DistStates::new(entries, order).unwrap(),
+        )
+        .unwrap()
+    }
+
+    /// Fig 2 (left): DP2 × TP2 over GPUs 0-3. X split on batch + contraction
+    /// sharded to match W's row split → Y becomes Partial over TP.
+    #[test]
+    fn fig2_left_dot_produces_partial() {
+        let mut g = Graph::new(1);
+        let x = g
+            .placeholder(
+                "X",
+                lits(&[8, 16]),
+                DType::F32,
+                vec![spmd(0..4, &[(0, 2), (1, 2)], &[0, 1])],
+            )
+            .unwrap();
+        let w = g
+            .parameter(
+                "W",
+                lits(&[16, 32]),
+                DType::F32,
+                vec![spmd(0..4, &[(DUPLICATE, 2), (0, 2)], &[-1, 0])],
+            )
+            .unwrap();
+        let xg = g.unary(UnaryKind::Gelu, x);
+        let y = g.dot(xg, w).unwrap();
+        deduce(&mut g, 0).unwrap();
+        let ann = g.tensor(y).annotation(0).unwrap();
+        assert_eq!(ann.hsize(), 1);
+        let ds = &ann.groups[0].ds;
+        assert_eq!(ds.shards(0), 2, "batch split preserved: {}", ds.describe());
+        assert_eq!(ds.shards(PARTIAL), 2, "contraction became partial: {}", ds.describe());
+        assert_eq!(ds.shards(1), 1);
+    }
+
+    /// Fig 11 golden: 3-D X (a,b,c splits) × 2-D W (c,d splits) → Y with
+    /// partial = c, splits a,b,d.
+    #[test]
+    fn fig11_ds_rule() {
+        // n = 16 devices: a=2, b=1, c=2, d=2, dup... X uses a*c*dupx, W c*d*dupw.
+        let x = spmd(0..16, &[(0, 2), (2, 2), (DUPLICATE, 4)], &[0, 2, -1]);
+        let w = spmd(0..16, &[(0, 2), (1, 2), (DUPLICATE, 4)], &[0, 1, -1]);
+        let y = deduce_dot(&x, &w, 3).unwrap();
+        let ds = &y.groups[0].ds;
+        assert_eq!(ds.shards(0), 2); // a
+        assert_eq!(ds.shards(1), 1); // b unsharded
+        assert_eq!(ds.shards(2), 2); // d
+        assert_eq!(ds.shards(PARTIAL), 2); // c
+        assert_eq!(ds.shards(DUPLICATE), 2); // n/(a*c*d) = 16/8
+    }
+
+    /// Fig 11 (right) HDim table.
+    #[test]
+    fn fig11_hdim_rules() {
+        let mk = |hdim: i32, entries: &[(i32, u32)]| {
+            let g0 = Subgroup::new(
+                DeviceGroup::range(0, 2),
+                DistStates::with_default_order(entries).unwrap(),
+            )
+            .unwrap();
+            let g1 = Subgroup::new(
+                DeviceGroup::range(2, 4),
+                DistStates::with_default_order(entries).unwrap(),
+            )
+            .unwrap();
+            Annotation::new(vec![g0, g1], hdim).unwrap()
+        };
+        let dup = |hdim: i32| mk(hdim, &[(DUPLICATE, 2)]);
+        // (X -1, W -1) -> -1
+        assert_eq!(deduce_dot(&dup(-1), &dup(-1), 3).unwrap().hdim, -1);
+        // (X 0, W -1) -> 0
+        assert_eq!(deduce_dot(&dup(0), &dup(-1), 3).unwrap().hdim, 0);
+        // (X 1, W -1) -> 1
+        assert_eq!(deduce_dot(&dup(1), &dup(-1), 3).unwrap().hdim, 1);
+        // (X 2 = contraction, W 0) -> -2 (partial across subgroups)
+        assert_eq!(deduce_dot(&dup(2), &mk(0, &[(DUPLICATE, 2)]), 3).unwrap().hdim, -2);
+        // (X -1, W 1) -> 2 (output split across subgroups)
+        assert_eq!(deduce_dot(&dup(-1), &mk(1, &[(DUPLICATE, 2)]), 3).unwrap().hdim, 2);
+        // unsupported combination errors
+        assert!(deduce_dot(&dup(0), &mk(1, &[(DUPLICATE, 2)]), 3).is_err());
+    }
+
+    #[test]
+    fn unify_refines_smaller_hsize() {
+        // Fig 10: W with hsize 1 replicated over 4 devices unifies with an
+        // X split into 2 subgroups of 2.
+        let w = spmd(0..4, &[(DUPLICATE, 2), (0, 2)], &[-1, 0]);
+        let g0 = Subgroup::new(DeviceGroup::range(0, 2), DistStates::split(0, 2)).unwrap();
+        let g1 = Subgroup::new(DeviceGroup::range(2, 4), DistStates::split(0, 2)).unwrap();
+        let x = Annotation::new(vec![g0, g1], 0).unwrap();
+        let (x2, w2) = unify(&x, &w).unwrap();
+        assert_eq!(x2.hsize(), 2);
+        assert_eq!(w2.hsize(), 2);
+        assert!(w2.same_dg_union(&x2));
+    }
+
+    #[test]
+    fn unify_fails_without_alignment() {
+        let a = spmd(0..2, &[(0, 2)], &[0]);
+        let b = spmd(2..4, &[(0, 2)], &[0]);
+        assert!(unify(&a, &b).is_err());
+    }
+
+    #[test]
+    fn sum_turns_split_into_partial() {
+        let x = spmd(0..4, &[(0, 2), (1, 2)], &[0, 1]);
+        let y = deduce_sum(&x, 0).unwrap();
+        let ds = &y.groups[0].ds;
+        assert_eq!(ds.shards(PARTIAL), 2);
+        assert_eq!(ds.shards(0), 2, "dim1 shifted to dim0: {}", ds.describe());
+    }
+
+    #[test]
+    fn sum_shifts_hdim() {
+        let g0 = Subgroup::new(DeviceGroup::range(0, 1), DistStates::trivial()).unwrap();
+        let g1 = Subgroup::new(DeviceGroup::range(1, 2), DistStates::trivial()).unwrap();
+        let x = Annotation::new(vec![g0, g1], 2).unwrap();
+        assert_eq!(deduce_sum(&x, 0).unwrap().hdim, 1);
+        let x2 = Annotation::new(x.groups.clone(), 1).unwrap();
+        assert_eq!(deduce_sum(&x2, 1).unwrap().hdim, PARTIAL);
+    }
+
+    #[test]
+    fn comm_op_declares_new_annotation() {
+        let mut g = Graph::new(1);
+        let w = g
+            .parameter("W", lits(&[16, 32]), DType::F32, vec![spmd(0..2, &[(0, 2)], &[0])])
+            .unwrap();
+        let target = spmd(0..2, &[(1, 2)], &[1]);
+        let w2 = g.comm(w, vec![target.clone()]).unwrap();
+        deduce(&mut g, 0).unwrap();
+        assert_eq!(g.tensor(w2).annotation(0).unwrap(), &target);
+    }
+
+    #[test]
+    fn deduction_requires_declared_leaves() {
+        let mut g = Graph::new(2);
+        let x = g
+            .placeholder("X", lits(&[4]), DType::F32, vec![
+                spmd(0..2, &[(0, 2)], &[0]),
+                spmd(0..2, &[(0, 2)], &[0]),
+            ])
+            .unwrap();
+        let _ = g.unary(UnaryKind::Gelu, x);
+        // strategy 2 added but never declared
+        g.add_strategy();
+        assert!(deduce(&mut g, 2).is_err());
+    }
+}

@@ -1,0 +1,439 @@
+//! §5.1–5.2 — The user-defined computation graph and its annotation state.
+//!
+//! A [`Graph`] is a DAG of [`Op`]s over [`Tensor`]s. Leaf ops (placeholders,
+//! parameters) and [`OpKind::Comm`] ops carry *explicit* HSPMD annotations —
+//! one per parallel strategy (§6.1 multiple annotations); all other tensors'
+//! annotations are *deduced* ([`deduce`]). Specialization (§5.3–5.4) then
+//! turns the annotated graph into per-device executable graphs.
+
+pub mod deduce;
+pub mod symbolic;
+
+pub use symbolic::{lits, Binding, SymDim};
+
+use crate::hspmd::Annotation;
+use crate::{Error, Result};
+
+/// Tensor handle.
+pub type TensorId = usize;
+/// Operator handle.
+pub type OpId = usize;
+
+/// Element types we track (compute artifacts are f32 on the CPU path;
+/// bf16 is modeled for volume accounting).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum DType {
+    /// 32-bit float.
+    F32,
+    /// bfloat16 (modeled; PJRT CPU artifacts run f32).
+    Bf16,
+    /// 32-bit int (token ids).
+    I32,
+}
+
+impl DType {
+    /// Bytes per element.
+    pub fn bytes(&self) -> u64 {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::Bf16 => 2,
+        }
+    }
+}
+
+/// Unary elementwise operators (annotation-transparent).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum UnaryKind {
+    /// GELU activation (the paper's running example).
+    Gelu,
+    /// RMSNorm (block-level marker; sharding-transparent on the batch dims).
+    RmsNorm,
+    /// Softmax over the last dim (transparent unless last dim is sharded).
+    Softmax,
+}
+
+/// Operator kinds. The set mirrors the paper's discussion: most ops
+/// propagate annotations unchanged; `Dot`, `Sum` and `Reshape` have
+/// specialized deduction; `Comm` explicitly re-annotates (§5.1).
+#[derive(Clone, Debug)]
+pub enum OpKind {
+    /// Graph input (leaf; explicitly annotated).
+    Placeholder,
+    /// Trainable parameter (leaf; explicitly annotated).
+    Parameter,
+    /// Explicit annotation transformation — the CommOp (§5.1).
+    Comm,
+    /// Elementwise unary op.
+    Unary(UnaryKind),
+    /// Elementwise binary add (annotations must match).
+    Add,
+    /// Matrix product `X[..., k] @ W[k, n]` (Fig 11 deduction).
+    Dot,
+    /// Reduction over one physical dimension.
+    Sum {
+        /// Reduced dim.
+        dim: u32,
+    },
+    /// Shape change; sharding must be preserved on dim 0 (the only case the
+    /// deduction supports — matching Hetu's "specialized deduction logic").
+    Reshape,
+    /// Engine-level compute backed by an AOT artifact (treated as
+    /// annotation-transparent; its sharding contract is set via CommOps).
+    ArtifactCall {
+        /// Artifact name in the registry.
+        artifact: String,
+    },
+}
+
+/// A tensor: metadata plus per-strategy annotations.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    /// Stable name.
+    pub name: String,
+    /// Symbolic shape (§5.5).
+    pub shape: Vec<SymDim>,
+    /// Element type.
+    pub dtype: DType,
+    /// Producing op (`None` for leaves until wired).
+    pub producer: Option<OpId>,
+    /// Per-strategy annotations. `annotations[k]` is `Some` once declared
+    /// (leaves/CommOps) or deduced (§5.2).
+    pub annotations: Vec<Option<Annotation>>,
+}
+
+impl Tensor {
+    /// The annotation under strategy `k`, if available.
+    pub fn annotation(&self, k: usize) -> Option<&Annotation> {
+        self.annotations.get(k).and_then(|a| a.as_ref())
+    }
+}
+
+/// An operator node.
+#[derive(Clone, Debug)]
+pub struct Op {
+    /// Node id.
+    pub id: OpId,
+    /// Kind + attributes.
+    pub kind: OpKind,
+    /// Input tensor ids.
+    pub inputs: Vec<TensorId>,
+    /// Output tensor ids.
+    pub outputs: Vec<TensorId>,
+    /// For leaves and CommOps: the explicit per-strategy annotations of the
+    /// output (§6.1 multiple annotations).
+    pub declared: Vec<Option<Annotation>>,
+}
+
+/// The computation graph (ops are stored in topological construction order).
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    /// All ops.
+    pub ops: Vec<Op>,
+    /// All tensors.
+    pub tensors: Vec<Tensor>,
+    /// Number of strategies annotated so far.
+    pub num_strategies: usize,
+}
+
+impl Graph {
+    /// Empty graph supporting `num_strategies` parallel strategies.
+    pub fn new(num_strategies: usize) -> Self {
+        Graph { ops: vec![], tensors: vec![], num_strategies }
+    }
+
+    fn add_tensor(&mut self, name: &str, shape: Vec<SymDim>, dtype: DType) -> TensorId {
+        let id = self.tensors.len();
+        self.tensors.push(Tensor {
+            name: name.to_string(),
+            shape,
+            dtype,
+            producer: None,
+            annotations: vec![None; self.num_strategies],
+        });
+        id
+    }
+
+    fn add_op(&mut self, kind: OpKind, inputs: Vec<TensorId>, out: TensorId) -> OpId {
+        let id = self.ops.len();
+        self.ops.push(Op { id, kind, inputs, outputs: vec![out], declared: vec![] });
+        self.tensors[out].producer = Some(id);
+        id
+    }
+
+    fn check_strategies(&self, anns: &[Annotation]) -> Result<()> {
+        if anns.len() != self.num_strategies {
+            return Err(Error::Graph(format!(
+                "expected {} per-strategy annotations, got {}",
+                self.num_strategies,
+                anns.len()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Add a placeholder (graph input) with explicit per-strategy
+    /// annotations.
+    pub fn placeholder(
+        &mut self,
+        name: &str,
+        shape: Vec<SymDim>,
+        dtype: DType,
+        anns: Vec<Annotation>,
+    ) -> Result<TensorId> {
+        self.check_strategies(&anns)?;
+        let t = self.add_tensor(name, shape, dtype);
+        let op = self.add_op(OpKind::Placeholder, vec![], t);
+        self.tensors[t].annotations = anns.iter().cloned().map(Some).collect();
+        self.ops[op].declared = anns.into_iter().map(Some).collect();
+        Ok(t)
+    }
+
+    /// Add a parameter with explicit per-strategy annotations.
+    pub fn parameter(
+        &mut self,
+        name: &str,
+        shape: Vec<SymDim>,
+        dtype: DType,
+        anns: Vec<Annotation>,
+    ) -> Result<TensorId> {
+        self.check_strategies(&anns)?;
+        let t = self.add_tensor(name, shape, dtype);
+        let op = self.add_op(OpKind::Parameter, vec![], t);
+        self.tensors[t].annotations = anns.iter().cloned().map(Some).collect();
+        self.ops[op].declared = anns.into_iter().map(Some).collect();
+        Ok(t)
+    }
+
+    /// Insert a CommOp re-annotating `input` to the per-strategy targets
+    /// (§5.1, `hetu.comm(x, new_annotation)`).
+    pub fn comm(&mut self, input: TensorId, targets: Vec<Annotation>) -> Result<TensorId> {
+        self.check_strategies(&targets)?;
+        let (name, shape, dtype) = {
+            let t = &self.tensors[input];
+            (format!("{}'", t.name), t.shape.clone(), t.dtype)
+        };
+        let out = self.add_tensor(&name, shape, dtype);
+        let op = self.add_op(OpKind::Comm, vec![input], out);
+        self.tensors[out].annotations = targets.iter().cloned().map(Some).collect();
+        self.ops[op].declared = targets.into_iter().map(Some).collect();
+        Ok(out)
+    }
+
+    /// Elementwise unary op.
+    pub fn unary(&mut self, kind: UnaryKind, input: TensorId) -> TensorId {
+        let (name, shape, dtype) = {
+            let t = &self.tensors[input];
+            (format!("{kind:?}({})", t.name), t.shape.clone(), t.dtype)
+        };
+        let out = self.add_tensor(&name, shape, dtype);
+        self.add_op(OpKind::Unary(kind), vec![input], out);
+        out
+    }
+
+    /// Elementwise add.
+    pub fn add(&mut self, a: TensorId, b: TensorId) -> Result<TensorId> {
+        if self.tensors[a].shape != self.tensors[b].shape {
+            return Err(Error::Graph(format!(
+                "add shape mismatch: {:?} vs {:?}",
+                self.tensors[a].shape, self.tensors[b].shape
+            )));
+        }
+        let (name, shape, dtype) = {
+            let t = &self.tensors[a];
+            (format!("({}+{})", t.name, self.tensors[b].name), t.shape.clone(), t.dtype)
+        };
+        let out = self.add_tensor(&name, shape, dtype);
+        self.add_op(OpKind::Add, vec![a, b], out);
+        Ok(out)
+    }
+
+    /// Matrix product `X[..., k] @ W[k, n]` (W must be 2-D).
+    pub fn dot(&mut self, x: TensorId, w: TensorId) -> Result<TensorId> {
+        let xs = self.tensors[x].shape.clone();
+        let ws = self.tensors[w].shape.clone();
+        if ws.len() != 2 {
+            return Err(Error::Graph("dot: W must be 2-D".into()));
+        }
+        if xs.is_empty() {
+            return Err(Error::Graph("dot: X must have rank >= 1".into()));
+        }
+        if xs[xs.len() - 1] != ws[0] {
+            return Err(Error::Graph(format!(
+                "dot: contraction mismatch {} vs {}",
+                xs[xs.len() - 1],
+                ws[0]
+            )));
+        }
+        let mut out_shape = xs[..xs.len() - 1].to_vec();
+        out_shape.push(ws[1].clone());
+        let name = format!("({}@{})", self.tensors[x].name, self.tensors[w].name);
+        let out = self.add_tensor(&name, out_shape, self.tensors[x].dtype);
+        self.add_op(OpKind::Dot, vec![x, w], out);
+        Ok(out)
+    }
+
+    /// Reduce over `dim`.
+    pub fn sum(&mut self, input: TensorId, dim: u32) -> Result<TensorId> {
+        let shape = self.tensors[input].shape.clone();
+        if dim as usize >= shape.len() {
+            return Err(Error::Graph(format!("sum dim {dim} out of rank {}", shape.len())));
+        }
+        let mut out_shape = shape;
+        out_shape.remove(dim as usize);
+        let name = format!("sum({}, {dim})", self.tensors[input].name);
+        let dtype = self.tensors[input].dtype;
+        let out = self.add_tensor(&name, out_shape, dtype);
+        self.add_op(OpKind::Sum { dim }, vec![input], out);
+        Ok(out)
+    }
+
+    /// Reshape (sharding restricted to dim 0, see [`OpKind::Reshape`]).
+    pub fn reshape(&mut self, input: TensorId, new_shape: Vec<SymDim>) -> TensorId {
+        let name = format!("reshape({})", self.tensors[input].name);
+        let dtype = self.tensors[input].dtype;
+        let out = self.add_tensor(&name, new_shape, dtype);
+        self.add_op(OpKind::Reshape, vec![input], out);
+        out
+    }
+
+    /// Artifact-backed compute (engine path): annotation-transparent on its
+    /// first input.
+    pub fn artifact_call(
+        &mut self,
+        artifact: &str,
+        inputs: Vec<TensorId>,
+        out_name: &str,
+        out_shape: Vec<SymDim>,
+        dtype: DType,
+    ) -> TensorId {
+        let out = self.add_tensor(out_name, out_shape, dtype);
+        self.add_op(OpKind::ArtifactCall { artifact: artifact.to_string() }, inputs, out);
+        out
+    }
+
+    /// §6.1 — register an additional strategy (appends one annotation slot
+    /// to every tensor; leaves/CommOps must then be given their new
+    /// annotation via [`Graph::declare_for_strategy`]).
+    pub fn add_strategy(&mut self) -> usize {
+        let k = self.num_strategies;
+        self.num_strategies += 1;
+        for t in &mut self.tensors {
+            t.annotations.push(None);
+        }
+        for op in &mut self.ops {
+            if !op.declared.is_empty() {
+                op.declared.push(None);
+            }
+        }
+        k
+    }
+
+    /// Declare the annotation of a leaf/CommOp output for a (new) strategy.
+    pub fn declare_for_strategy(
+        &mut self,
+        tensor: TensorId,
+        strategy: usize,
+        ann: Annotation,
+    ) -> Result<()> {
+        let op_id = self.tensors[tensor]
+            .producer
+            .ok_or_else(|| Error::Graph("tensor has no producer".into()))?;
+        if strategy >= self.num_strategies {
+            return Err(Error::Graph(format!("strategy {strategy} out of range")));
+        }
+        let n = self.num_strategies;
+        let op = &mut self.ops[op_id];
+        match op.kind {
+            OpKind::Placeholder | OpKind::Parameter | OpKind::Comm => {
+                if op.declared.len() < n {
+                    op.declared.resize(n, None);
+                }
+                op.declared[strategy] = Some(ann.clone());
+                self.tensors[tensor].annotations[strategy] = Some(ann);
+                Ok(())
+            }
+            _ => Err(Error::Graph("only leaves and CommOps carry declared annotations".into())),
+        }
+    }
+
+    /// All ops in topological order (construction order is topological by
+    /// builder invariant; verified in debug builds).
+    pub fn topo(&self) -> &[Op] {
+        #[cfg(debug_assertions)]
+        for op in &self.ops {
+            for &i in &op.inputs {
+                debug_assert!(
+                    self.tensors[i].producer.map(|p| p < op.id).unwrap_or(true),
+                    "graph not topologically ordered"
+                );
+            }
+        }
+        &self.ops
+    }
+
+    /// Tensor accessor.
+    pub fn tensor(&self, id: TensorId) -> &Tensor {
+        &self.tensors[id]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hspmd::{DeviceGroup, DistStates};
+
+    fn dp2(name_dim: u32) -> Annotation {
+        Annotation::spmd(DeviceGroup::range(0, 2), DistStates::split(name_dim, 2)).unwrap()
+    }
+
+    #[test]
+    fn builder_wires_producers() {
+        let mut g = Graph::new(1);
+        let x = g
+            .placeholder("X", lits(&[4, 8]), DType::F32, vec![dp2(0)])
+            .unwrap();
+        let y = g.unary(UnaryKind::Gelu, x);
+        assert_eq!(g.tensor(y).producer, Some(1));
+        assert_eq!(g.ops[1].inputs, vec![x]);
+    }
+
+    #[test]
+    fn dot_shape_inference() {
+        let mut g = Graph::new(1);
+        let x = g
+            .placeholder("X", lits(&[2, 4, 8]), DType::F32, vec![dp2(0)])
+            .unwrap();
+        let w = g
+            .parameter("W", lits(&[8, 16]), DType::F32, vec![dp2(1)])
+            .unwrap();
+        let y = g.dot(x, w).unwrap();
+        assert_eq!(g.tensor(y).shape, lits(&[2, 4, 16]));
+    }
+
+    #[test]
+    fn dot_rejects_contraction_mismatch() {
+        let mut g = Graph::new(1);
+        let x = g.placeholder("X", lits(&[2, 4]), DType::F32, vec![dp2(0)]).unwrap();
+        let w = g.parameter("W", lits(&[8, 16]), DType::F32, vec![dp2(1)]).unwrap();
+        assert!(g.dot(x, w).is_err());
+    }
+
+    #[test]
+    fn strategy_addition_extends_slots() {
+        let mut g = Graph::new(1);
+        let x = g.placeholder("X", lits(&[4]), DType::F32, vec![dp2(0)]).unwrap();
+        let k = g.add_strategy();
+        assert_eq!(k, 1);
+        assert_eq!(g.tensor(x).annotations.len(), 2);
+        g.declare_for_strategy(x, 1, dp2(0)).unwrap();
+        assert!(g.ops[0].declared[1].is_some());
+    }
+
+    #[test]
+    fn sum_drops_dim() {
+        let mut g = Graph::new(1);
+        let x = g.placeholder("X", lits(&[2, 4, 8]), DType::F32, vec![dp2(0)]).unwrap();
+        let s = g.sum(x, 1).unwrap();
+        assert_eq!(g.tensor(s).shape, lits(&[2, 8]));
+    }
+}

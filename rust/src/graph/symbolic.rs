@@ -1,0 +1,189 @@
+//! §5.5 — Symbolic shapes.
+//!
+//! Annotations define the *pattern* of sharding; the concrete shapes of the
+//! shards are resolved at runtime. Tensor metadata therefore carries
+//! [`SymDim`]s — either literal extents or a named symbol with a rational
+//! scale (`B`, `B/2`, `3*S/4`, …). Symbols are bound to arithmetic values
+//! when concrete inputs arrive; binding *verifies* divisibility so invalid
+//! symbol usage is rejected instead of silently mis-sharding (footnote 3).
+
+use std::collections::HashMap;
+
+use crate::{Error, Result};
+
+/// A symbolic dimension: `Lit(n)` or `sym * num / den`.
+#[derive(Clone, PartialEq, Eq, Debug, Hash)]
+pub enum SymDim {
+    /// A concrete extent.
+    Lit(u64),
+    /// A scaled symbol (`name * num / den`).
+    Sym {
+        /// Symbol name, e.g. `"B"` (batch) or `"S"` (sequence).
+        name: String,
+        /// Numerator scale.
+        num: u64,
+        /// Denominator scale.
+        den: u64,
+    },
+}
+
+impl SymDim {
+    /// A fresh unscaled symbol.
+    pub fn sym(name: &str) -> SymDim {
+        SymDim::Sym { name: name.to_string(), num: 1, den: 1 }
+    }
+
+    /// Constraint-preserving division (e.g. splitting the batch dimension
+    /// `B` two ways yields `B/2`, §5.5).
+    pub fn div(&self, k: u64) -> Result<SymDim> {
+        if k == 0 {
+            return Err(Error::SymbolicShape("division by zero".into()));
+        }
+        match self {
+            SymDim::Lit(n) => {
+                if n % k != 0 {
+                    return Err(Error::SymbolicShape(format!("{n} not divisible by {k}")));
+                }
+                Ok(SymDim::Lit(n / k))
+            }
+            SymDim::Sym { name, num, den } => Ok(SymDim::Sym {
+                name: name.clone(),
+                num: *num,
+                den: den.checked_mul(k).ok_or_else(|| Error::SymbolicShape("overflow".into()))?,
+            }),
+        }
+    }
+
+    /// Multiplication by a constant.
+    pub fn mul(&self, k: u64) -> SymDim {
+        match self {
+            SymDim::Lit(n) => SymDim::Lit(n * k),
+            SymDim::Sym { name, num, den } => {
+                SymDim::Sym { name: name.clone(), num: num * k, den: *den }
+            }
+        }
+    }
+
+    /// Bind against a symbol table, verifying integrality.
+    pub fn resolve(&self, binding: &Binding) -> Result<u64> {
+        match self {
+            SymDim::Lit(n) => Ok(*n),
+            SymDim::Sym { name, num, den } => {
+                let v = binding.get(name).ok_or_else(|| {
+                    Error::SymbolicShape(format!("unbound symbol `{name}`"))
+                })?;
+                let scaled = v.checked_mul(*num).ok_or_else(|| {
+                    Error::SymbolicShape(format!("overflow binding `{name}`"))
+                })?;
+                if scaled % den != 0 {
+                    return Err(Error::SymbolicShape(format!(
+                        "symbol `{name}`={v} scaled by {num}/{den} is not integral \
+                         (invalid symbol usage would cause a shape mismatch)"
+                    )));
+                }
+                Ok(scaled / den)
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for SymDim {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SymDim::Lit(n) => write!(f, "{n}"),
+            SymDim::Sym { name, num: 1, den: 1 } => write!(f, "{name}"),
+            SymDim::Sym { name, num, den: 1 } => write!(f, "{num}{name}"),
+            SymDim::Sym { name, num: 1, den } => write!(f, "{name}/{den}"),
+            SymDim::Sym { name, num, den } => write!(f, "{num}{name}/{den}"),
+        }
+    }
+}
+
+/// Symbol table bound at runtime when concrete inputs arrive.
+#[derive(Clone, Debug, Default)]
+pub struct Binding {
+    values: HashMap<String, u64>,
+}
+
+impl Binding {
+    /// Empty binding.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bind `name = value` (overwrites).
+    pub fn set(&mut self, name: &str, value: u64) -> &mut Self {
+        self.values.insert(name.to_string(), value);
+        self
+    }
+
+    /// Look up a symbol.
+    pub fn get(&self, name: &str) -> Option<u64> {
+        self.values.get(name).copied()
+    }
+
+    /// Resolve a whole symbolic shape.
+    pub fn shape(&self, dims: &[SymDim]) -> Result<Vec<u64>> {
+        dims.iter().map(|d| d.resolve(self)).collect()
+    }
+}
+
+/// Convenience constructor for literal shapes.
+pub fn lits(dims: &[u64]) -> Vec<SymDim> {
+    dims.iter().map(|&d| SymDim::Lit(d)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_resolution() {
+        let b = Binding::new();
+        assert_eq!(SymDim::Lit(7).resolve(&b).unwrap(), 7);
+    }
+
+    #[test]
+    fn symbol_binding_and_scaling() {
+        let mut b = Binding::new();
+        b.set("B", 64);
+        let half = SymDim::sym("B").div(2).unwrap();
+        assert_eq!(half.resolve(&b).unwrap(), 32);
+        assert_eq!(half.mul(4).resolve(&b).unwrap(), 128);
+    }
+
+    #[test]
+    fn rejects_non_integral() {
+        let mut b = Binding::new();
+        b.set("B", 10);
+        let third = SymDim::sym("B").div(3).unwrap();
+        assert!(third.resolve(&b).is_err());
+    }
+
+    #[test]
+    fn rejects_unbound() {
+        let b = Binding::new();
+        assert!(SymDim::sym("S").resolve(&b).is_err());
+    }
+
+    #[test]
+    fn literal_div_checks() {
+        assert!(SymDim::Lit(9).div(2).is_err());
+        assert_eq!(SymDim::Lit(8).div(2).unwrap(), SymDim::Lit(4));
+    }
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(SymDim::sym("B").to_string(), "B");
+        assert_eq!(SymDim::sym("B").div(2).unwrap().to_string(), "B/2");
+        assert_eq!(SymDim::sym("B").mul(3).to_string(), "3B");
+    }
+
+    #[test]
+    fn shape_resolution() {
+        let mut b = Binding::new();
+        b.set("B", 4).set("S", 128);
+        let shape = vec![SymDim::sym("B"), SymDim::sym("S"), SymDim::Lit(512)];
+        assert_eq!(b.shape(&shape).unwrap(), vec![4, 128, 512]);
+    }
+}

@@ -1,0 +1,420 @@
+//! Full HSPMD tensor annotations (§3.2): DG Union + DS Union + HDim/HSize.
+
+use super::dg::{DeviceGroup, Rank};
+use super::ds::{DistStates, DUPLICATE, PARTIAL};
+use super::slices::Interval;
+use crate::{Error, Result};
+
+/// One *sharding subgroup*: a device group with its bottom-tier sharding.
+#[derive(Clone, PartialEq, Eq, Debug, Hash)]
+pub struct Subgroup {
+    /// Devices of this subgroup (bottom-tier DG).
+    pub dg: DeviceGroup,
+    /// Bottom-tier sharding within the subgroup.
+    pub ds: DistStates,
+}
+
+impl Subgroup {
+    /// Construct and validate `|dg| == ds.num_devices()`.
+    pub fn new(dg: DeviceGroup, ds: DistStates) -> Result<Self> {
+        if dg.len() != ds.num_devices() as usize {
+            return Err(Error::InvalidAnnotation(format!(
+                "subgroup: |DG|={} but DS covers {} devices ({})",
+                dg.len(),
+                ds.num_devices(),
+                ds.describe()
+            )));
+        }
+        Ok(Subgroup { dg, ds })
+    }
+}
+
+/// A full HSPMD annotation: the list of sharding subgroups (`DG Union` +
+/// `DS Union`, top-tier index = position in the list), the heterogeneous
+/// dimension `HDim`, and optional non-uniform split weights along `HDim`
+/// (§5.5 allows the actual proportions to be bound at runtime; `hsplit`
+/// carries the currently-bound weights, `None` = uniform).
+///
+/// `HSize` is implicit: `groups.len()`.
+#[derive(Clone, PartialEq, Eq, Debug, Hash)]
+pub struct Annotation {
+    /// Sharding subgroups, in top-tier order (subgroup `g` owns the `g`-th
+    /// interval along `hdim` when `hdim >= 0`).
+    pub groups: Vec<Subgroup>,
+    /// Top-tier semantic: `-2` partial, `-1` replicate, `>= 0` split along
+    /// that tensor dimension.
+    pub hdim: i32,
+    /// Optional per-subgroup weights for non-uniform `hdim` splits.
+    pub hsplit: Option<Vec<u64>>,
+}
+
+impl Annotation {
+    /// Construct and validate: non-empty, mutually-exclusive subgroups,
+    /// weight vector length, legal `hdim`.
+    pub fn new(groups: Vec<Subgroup>, hdim: i32) -> Result<Self> {
+        Self::with_weights(groups, hdim, None)
+    }
+
+    /// [`Annotation::new`] with explicit non-uniform `hdim` weights.
+    pub fn with_weights(
+        groups: Vec<Subgroup>,
+        hdim: i32,
+        hsplit: Option<Vec<u64>>,
+    ) -> Result<Self> {
+        if groups.is_empty() {
+            return Err(Error::InvalidAnnotation("annotation with 0 subgroups".into()));
+        }
+        if hdim < PARTIAL {
+            return Err(Error::InvalidAnnotation(format!("hdim {hdim} < -2")));
+        }
+        for i in 0..groups.len() {
+            for j in (i + 1)..groups.len() {
+                if !groups[i].dg.disjoint_with(&groups[j].dg) {
+                    return Err(Error::InvalidAnnotation(format!(
+                        "subgroups {i} and {j} share devices"
+                    )));
+                }
+            }
+        }
+        if let Some(w) = &hsplit {
+            if w.len() != groups.len() {
+                return Err(Error::InvalidAnnotation(format!(
+                    "hsplit has {} weights for {} subgroups",
+                    w.len(),
+                    groups.len()
+                )));
+            }
+            if hdim < 0 {
+                return Err(Error::InvalidAnnotation(
+                    "hsplit weights are only meaningful when hdim >= 0".into(),
+                ));
+            }
+            if w.iter().any(|&x| x == 0) {
+                return Err(Error::InvalidAnnotation("zero hsplit weight".into()));
+            }
+        }
+        Ok(Annotation { groups, hdim, hsplit })
+    }
+
+    /// Classic (non-hierarchical) SPMD annotation: one subgroup, `hdim=-1`.
+    pub fn spmd(dg: DeviceGroup, ds: DistStates) -> Result<Self> {
+        Self::new(vec![Subgroup::new(dg, ds)?], DUPLICATE)
+    }
+
+    /// Number of sharding subgroups (`HSize`, §3.2).
+    pub fn hsize(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// All devices across the union, in union order.
+    pub fn all_ranks(&self) -> Vec<Rank> {
+        self.groups.iter().flat_map(|g| g.dg.ranks().iter().copied()).collect()
+    }
+
+    /// Total device count.
+    pub fn num_devices(&self) -> usize {
+        self.groups.iter().map(|g| g.dg.len()).sum()
+    }
+
+    /// Subgroup index and in-group position of `rank`, if it participates.
+    pub fn locate(&self, rank: Rank) -> Option<(usize, usize)> {
+        for (g, sub) in self.groups.iter().enumerate() {
+            if let Some(p) = sub.dg.position(rank) {
+                return Some((g, p));
+            }
+        }
+        None
+    }
+
+    /// True if any values (bottom-tier or top-tier) are partial sums.
+    pub fn has_partial(&self) -> bool {
+        self.hdim == PARTIAL || self.groups.iter().any(|g| g.ds.has_partial())
+    }
+
+    /// Same `DG Union` (paper §4.2: "every DG in the union is equivalent"),
+    /// compared as *sets* per position.
+    pub fn same_dg_union(&self, other: &Annotation) -> bool {
+        self.hsize() == other.hsize()
+            && self
+                .groups
+                .iter()
+                .zip(other.groups.iter())
+                .all(|(a, b)| a.dg.same_set(&b.dg))
+    }
+
+    /// Identical `DG Union` including device order (stronger than
+    /// [`same_dg_union`](Self::same_dg_union); identity/no-comm requires it).
+    pub fn identical_dg_union(&self, other: &Annotation) -> bool {
+        self.hsize() == other.hsize()
+            && self
+                .groups
+                .iter()
+                .zip(other.groups.iter())
+                .all(|(a, b)| a.dg == b.dg)
+    }
+
+    /// Same `DS Union` (elementwise DS equality).
+    pub fn same_ds_union(&self, other: &Annotation) -> bool {
+        self.hsize() == other.hsize()
+            && self
+                .groups
+                .iter()
+                .zip(other.groups.iter())
+                .all(|(a, b)| a.ds == b.ds)
+    }
+
+    /// Top-tier interval of subgroup `g` along `hdim` for a tensor of
+    /// extent `len` on that dim. Uniform unless `hsplit` weights are bound.
+    /// For `hdim < 0` this is the full `[0, len)` range for every subgroup.
+    pub fn top_interval(&self, g: usize, len: u64) -> Interval {
+        if self.hdim < 0 {
+            return Interval { lo: 0, hi: len };
+        }
+        let h = self.hsize() as u64;
+        match &self.hsplit {
+            None => Interval {
+                lo: len * g as u64 / h,
+                hi: len * (g as u64 + 1) / h,
+            },
+            Some(w) => {
+                let total: u64 = w.iter().sum();
+                let before: u64 = w[..g].iter().sum();
+                Interval {
+                    lo: len * before / total,
+                    hi: len * (before + w[g]) / total,
+                }
+            }
+        }
+    }
+
+    /// Fig 10 — semantic-preserving `HSize` refinement: split every subgroup
+    /// into `k` subgroups along logical dim `split_ld` of its DS, producing
+    /// an annotation with `HSize * k` subgroups.
+    ///
+    /// Validity (checked): every subgroup's DS must shard `split_ld` with a
+    /// count divisible by `k`, and the refinement must be expressible with a
+    /// single top-tier `HDim`:
+    /// * `split_ld == -1` requires `hdim == -1` (replica groups split into
+    ///   replica subgroups) — `hdim` stays `-1`;
+    /// * `split_ld == -2` requires `hdim ∈ {-1, -2}` with `hsize == 1` when
+    ///   `hdim == -1` — result `hdim = -2`;
+    /// * `split_ld == d >= 0` requires `hdim == d`, or `hsize == 1` and
+    ///   `hdim == -1` — result `hdim = d`.
+    pub fn refine(&self, split_ld: i32, k: u32) -> Result<Annotation> {
+        if k == 0 {
+            return Err(Error::InvalidAnnotation("refine by k=0".into()));
+        }
+        if k == 1 {
+            return Ok(self.clone());
+        }
+        let new_hdim = match split_ld {
+            DUPLICATE => {
+                if self.hdim != DUPLICATE {
+                    return Err(Error::InvalidAnnotation(format!(
+                        "refine along DUP requires hdim=-1, have {}",
+                        self.hdim
+                    )));
+                }
+                DUPLICATE
+            }
+            PARTIAL => {
+                if !(self.hdim == PARTIAL || (self.hdim == DUPLICATE && self.hsize() == 1)) {
+                    return Err(Error::InvalidAnnotation(format!(
+                        "refine along PARTIAL requires hdim=-2 (or hsize=1), have {}",
+                        self.hdim
+                    )));
+                }
+                PARTIAL
+            }
+            d => {
+                if !(self.hdim == d || (self.hdim == DUPLICATE && self.hsize() == 1)) {
+                    return Err(Error::InvalidAnnotation(format!(
+                        "refine along dim {d} requires hdim={d} (or hsize=1), have {}",
+                        self.hdim
+                    )));
+                }
+                d
+            }
+        };
+        if self.hsplit.is_some() {
+            return Err(Error::InvalidAnnotation(
+                "refine with bound non-uniform weights is not supported".into(),
+            ));
+        }
+        let mut groups = Vec::with_capacity(self.groups.len() * k as usize);
+        for sub in &self.groups {
+            let s = sub.ds.shards(split_ld);
+            if s % k != 0 {
+                return Err(Error::InvalidAnnotation(format!(
+                    "subgroup DS shards {s} on dim {split_ld} not divisible by {k}"
+                )));
+            }
+            let per = s / k; // remaining shards on split_ld inside each new subgroup
+            // Partition device positions by coord(split_ld) / per.
+            let mut buckets: Vec<Vec<Rank>> = vec![vec![]; k as usize];
+            for (pos, &rank) in sub.dg.ranks().iter().enumerate() {
+                let coord = sub
+                    .ds
+                    .coords_of(pos)
+                    .iter()
+                    .find(|&&(d, _)| d == split_ld)
+                    .map(|&(_, c)| c)
+                    .unwrap_or(0);
+                buckets[(coord / per) as usize].push(rank);
+            }
+            // New DS: split_ld count reduced to `per`.
+            let entries: Vec<(i32, u32)> = sub
+                .ds
+                .entries()
+                .iter()
+                .map(|&(d, n)| if d == split_ld { (d, per) } else { (d, n) })
+                .collect();
+            let order: Vec<i32> = sub
+                .ds
+                .order()
+                .iter()
+                .copied()
+                .filter(|&d| d != split_ld || per > 1)
+                .collect();
+            let ds = DistStates::new(&entries, &order)?;
+            for b in buckets {
+                groups.push(Subgroup::new(DeviceGroup::new(b)?, ds.clone())?);
+            }
+        }
+        Annotation::new(groups, new_hdim)
+    }
+
+    /// Short human-readable description.
+    pub fn describe(&self) -> String {
+        let subs: Vec<String> = self
+            .groups
+            .iter()
+            .map(|g| format!("{}×{}", g.dg, g.ds.describe()))
+            .collect();
+        format!("hdim={} hsize={} [{}]", self.hdim, self.hsize(), subs.join("; "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hspmd::slices::regions;
+
+    fn ann(groups: Vec<(Vec<Rank>, DistStates)>, hdim: i32) -> Annotation {
+        Annotation::new(
+            groups
+                .into_iter()
+                .map(|(r, ds)| Subgroup::new(DeviceGroup::new(r).unwrap(), ds).unwrap())
+                .collect(),
+            hdim,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn rejects_overlapping_subgroups() {
+        let g1 = Subgroup::new(DeviceGroup::new(vec![0, 1]).unwrap(), DistStates::split(0, 2)).unwrap();
+        let g2 = Subgroup::new(DeviceGroup::new(vec![1, 2]).unwrap(), DistStates::split(0, 2)).unwrap();
+        assert!(Annotation::new(vec![g1, g2], 0).is_err());
+    }
+
+    #[test]
+    fn rejects_dg_ds_size_mismatch() {
+        assert!(Subgroup::new(DeviceGroup::new(vec![0, 1, 2]).unwrap(), DistStates::split(0, 2)).is_err());
+    }
+
+    #[test]
+    fn top_interval_uniform_and_weighted() {
+        let a = ann(
+            vec![
+                (vec![0], DistStates::trivial()),
+                (vec![1], DistStates::trivial()),
+            ],
+            0,
+        );
+        assert_eq!(a.top_interval(0, 10), Interval { lo: 0, hi: 5 });
+        assert_eq!(a.top_interval(1, 10), Interval { lo: 5, hi: 10 });
+
+        let w = Annotation::with_weights(a.groups.clone(), 0, Some(vec![3, 1])).unwrap();
+        assert_eq!(w.top_interval(0, 8), Interval { lo: 0, hi: 6 });
+        assert_eq!(w.top_interval(1, 8), Interval { lo: 6, hi: 8 });
+    }
+
+    #[test]
+    fn locate_finds_rank() {
+        let a = ann(
+            vec![
+                (vec![4, 5], DistStates::split(0, 2)),
+                (vec![9], DistStates::trivial()),
+            ],
+            DUPLICATE,
+        );
+        assert_eq!(a.locate(5), Some((0, 1)));
+        assert_eq!(a.locate(9), Some((1, 0)));
+        assert_eq!(a.locate(0), None);
+    }
+
+    #[test]
+    fn refine_hsize1_along_physical_dim_preserves_regions() {
+        // DG [0,1,2,3], DS {0:2, -1:2} order [0,-1]: dim0 split outer.
+        let ds = DistStates::new(&[(0, 2), (DUPLICATE, 2)], &[0, -1]).unwrap();
+        let a = Annotation::spmd(DeviceGroup::range(0, 4), ds).unwrap();
+        let r = a.refine(0, 2).unwrap();
+        assert_eq!(r.hsize(), 2);
+        assert_eq!(r.hdim, 0);
+        // devices [0,1] take first half of dim0, [2,3] second half
+        assert_eq!(r.groups[0].dg.ranks(), &[0, 1]);
+        assert_eq!(r.groups[1].dg.ranks(), &[2, 3]);
+        // geometry must be preserved exactly
+        let shape = vec![8u64, 6u64];
+        let before = regions(&a, &shape).unwrap();
+        let after = regions(&r, &shape).unwrap();
+        for (x, y) in before.iter().zip(after.iter()) {
+            assert_eq!(x.rank, y.rank);
+            assert_eq!(x.region, y.region, "rank {}", x.rank);
+            assert_eq!(x.partial, y.partial);
+        }
+    }
+
+    #[test]
+    fn refine_along_dup_keeps_replication() {
+        let ds = DistStates::new(&[(DUPLICATE, 2), (0, 2)], &[-1, 0]).unwrap();
+        let a = Annotation::spmd(DeviceGroup::range(0, 4), ds).unwrap();
+        let r = a.refine(DUPLICATE, 2).unwrap();
+        assert_eq!(r.hsize(), 2);
+        assert_eq!(r.hdim, DUPLICATE);
+        assert_eq!(r.groups[0].dg.ranks(), &[0, 1]);
+        assert_eq!(r.groups[1].dg.ranks(), &[2, 3]);
+        assert_eq!(r.groups[0].ds.entries(), &[(0, 2)]);
+    }
+
+    #[test]
+    fn refine_strided_inner_dim() {
+        // order [-1, 0]: dup outer, dim0 inner. Refining along dim0 yields
+        // strided subgroups {0,2} and {1,3}.
+        let ds = DistStates::new(&[(DUPLICATE, 2), (0, 2)], &[-1, 0]).unwrap();
+        let a = Annotation::spmd(DeviceGroup::range(0, 4), ds).unwrap();
+        let r = a.refine(0, 2).unwrap();
+        assert_eq!(r.groups[0].dg.ranks(), &[0, 2]);
+        assert_eq!(r.groups[1].dg.ranks(), &[1, 3]);
+    }
+
+    #[test]
+    fn refine_rejects_indivisible() {
+        let a = Annotation::spmd(DeviceGroup::range(0, 3), DistStates::split(0, 3)).unwrap();
+        assert!(a.refine(0, 2).is_err());
+    }
+
+    #[test]
+    fn refine_rejects_mismatched_hdim() {
+        let a = ann(
+            vec![
+                (vec![0, 1], DistStates::split(0, 2)),
+                (vec![2, 3], DistStates::split(0, 2)),
+            ],
+            1, // top-tier split on dim 1
+        );
+        // splitting along dim 0 would need hdim 0
+        assert!(a.refine(0, 2).is_err());
+    }
+}

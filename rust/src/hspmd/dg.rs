@@ -1,0 +1,113 @@
+//! Device Groups (DG) — ordered device lists (§3.1).
+
+use crate::{Error, Result};
+
+/// Global device rank (index into the cluster's device table).
+pub type Rank = u32;
+
+/// An ordered list of device ranks holding a tensor. Order matters: the
+/// position of a device inside the group determines which shard it owns
+/// (via [`DistStates::coords_of`](crate::hspmd::DistStates::coords_of)).
+#[derive(Clone, PartialEq, Eq, Debug, Hash)]
+pub struct DeviceGroup {
+    ranks: Vec<Rank>,
+}
+
+impl DeviceGroup {
+    /// Build from an explicit rank list. Ranks must be distinct.
+    pub fn new(ranks: Vec<Rank>) -> Result<Self> {
+        let mut seen = std::collections::BTreeSet::new();
+        for &r in &ranks {
+            if !seen.insert(r) {
+                return Err(Error::InvalidAnnotation(format!(
+                    "device group contains rank {r} twice"
+                )));
+            }
+        }
+        Ok(DeviceGroup { ranks })
+    }
+
+    /// Contiguous rank range `[lo, hi)` — the common case in the paper's
+    /// appendix tables ("R16-19" etc., inclusive notation there).
+    pub fn range(lo: Rank, hi: Rank) -> Self {
+        DeviceGroup { ranks: (lo..hi).collect() }
+    }
+
+    /// Number of devices.
+    pub fn len(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// True when empty (an empty DG is only legal transiently).
+    pub fn is_empty(&self) -> bool {
+        self.ranks.is_empty()
+    }
+
+    /// Ordered ranks.
+    pub fn ranks(&self) -> &[Rank] {
+        &self.ranks
+    }
+
+    /// Position of `rank` inside the group, if present.
+    pub fn position(&self, rank: Rank) -> Option<usize> {
+        self.ranks.iter().position(|&r| r == rank)
+    }
+
+    /// Membership test.
+    pub fn contains(&self, rank: Rank) -> bool {
+        self.position(rank).is_some()
+    }
+
+    /// Set-disjointness (sharding subgroups must be mutually exclusive, §3.2).
+    pub fn disjoint_with(&self, other: &DeviceGroup) -> bool {
+        self.ranks.iter().all(|r| !other.contains(*r))
+    }
+
+    /// Same device *set* (order-insensitive comparison, used by the §4
+    /// resolver: "if every DG in the union is equivalent").
+    pub fn same_set(&self, other: &DeviceGroup) -> bool {
+        if self.len() != other.len() {
+            return false;
+        }
+        let mut a = self.ranks.clone();
+        let mut b = other.ranks.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        a == b
+    }
+}
+
+impl std::fmt::Display for DeviceGroup {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "DG{:?}", self.ranks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn range_and_position() {
+        let dg = DeviceGroup::range(4, 8);
+        assert_eq!(dg.len(), 4);
+        assert_eq!(dg.position(6), Some(2));
+        assert_eq!(dg.position(9), None);
+    }
+
+    #[test]
+    fn rejects_duplicates() {
+        assert!(DeviceGroup::new(vec![1, 2, 1]).is_err());
+    }
+
+    #[test]
+    fn disjoint_and_same_set() {
+        let a = DeviceGroup::new(vec![0, 1]).unwrap();
+        let b = DeviceGroup::new(vec![2, 3]).unwrap();
+        let c = DeviceGroup::new(vec![1, 0]).unwrap();
+        assert!(a.disjoint_with(&b));
+        assert!(!a.disjoint_with(&c));
+        assert!(a.same_set(&c));
+        assert!(!a.same_set(&b));
+    }
+}

@@ -1,0 +1,461 @@
+//! Distributed States (DS) — bottom-tier SPMD sharding description (§3.1).
+
+use crate::{Error, Result};
+
+/// Logical distributed dimension for **Duplicate** semantics.
+pub const DUPLICATE: i32 = -1;
+/// Logical distributed dimension for **Partial** semantics.
+pub const PARTIAL: i32 = -2;
+
+/// The three SPMD sharding semantics of a logical distributed dimension.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum Semantic {
+    /// Tensor is uniformly split along physical dimension `dim`.
+    Split { dim: u32 },
+    /// Tensor is fully replicated.
+    Duplicate,
+    /// Tensor values are partial sums (must be reduced to materialize).
+    Partial,
+}
+
+impl Semantic {
+    /// Map a logical dimension key (`-2`, `-1`, `>= 0`) to its semantic.
+    pub fn of(key: i32) -> Semantic {
+        match key {
+            PARTIAL => Semantic::Partial,
+            DUPLICATE => Semantic::Duplicate,
+            d if d >= 0 => Semantic::Split { dim: d as u32 },
+            other => panic!("invalid logical dim {other}"),
+        }
+    }
+}
+
+/// Distributed States: an ordered dictionary `logical dim -> #shards`.
+///
+/// `entries` is kept sorted by key (`-2` first, then `-1`, then physical
+/// dims ascending) as the canonical form; `order` is the *device order* —
+/// the sequence of logical dims used to decompose a device's position in its
+/// [`super::DeviceGroup`](crate::hspmd::DeviceGroup) into per-dim shard
+/// coordinates (row-major: first entry of `order` varies slowest).
+///
+/// Invariants (checked by [`DistStates::new`]):
+/// * all shard counts are ≥ 2 (count-1 entries are omitted — they carry no
+///   information);
+/// * `order` contains exactly the keys of `entries`, each once;
+/// * the product of shard counts equals the number of devices the DS is
+///   meant to cover ([`DistStates::num_devices`]).
+#[derive(Clone, PartialEq, Eq, Debug, Hash)]
+pub struct DistStates {
+    entries: Vec<(i32, u32)>,
+    order: Vec<i32>,
+}
+
+impl DistStates {
+    /// Build a DS from `(logical dim, #shards)` pairs plus a device order.
+    pub fn new(entries: &[(i32, u32)], order: &[i32]) -> Result<Self> {
+        let mut es: Vec<(i32, u32)> = entries
+            .iter()
+            .copied()
+            .filter(|&(_, n)| n != 1)
+            .collect();
+        es.sort_by_key(|&(d, _)| d);
+        for w in es.windows(2) {
+            if w[0].0 == w[1].0 {
+                return Err(Error::InvalidAnnotation(format!(
+                    "duplicate logical dim {} in DS",
+                    w[0].0
+                )));
+            }
+        }
+        for &(d, n) in &es {
+            if d < PARTIAL {
+                return Err(Error::InvalidAnnotation(format!("logical dim {d} < -2")));
+            }
+            if n == 0 {
+                return Err(Error::InvalidAnnotation(format!("dim {d} has 0 shards")));
+            }
+        }
+        let ord: Vec<i32> = order.iter().copied().filter(|d| es.iter().any(|&(k, _)| k == *d)).collect();
+        let mut sorted_ord = ord.clone();
+        sorted_ord.sort_unstable();
+        let keys: Vec<i32> = es.iter().map(|&(d, _)| d).collect();
+        if sorted_ord != keys {
+            return Err(Error::InvalidAnnotation(format!(
+                "order {ord:?} must be a permutation of DS keys {keys:?}"
+            )));
+        }
+        Ok(DistStates { entries: es, order: ord })
+    }
+
+    /// DS with default order (sorted keys: Partial, Duplicate, dims asc).
+    pub fn with_default_order(entries: &[(i32, u32)]) -> Result<Self> {
+        let keys: Vec<i32> = {
+            let mut ks: Vec<i32> = entries.iter().filter(|&&(_, n)| n != 1).map(|&(d, _)| d).collect();
+            ks.sort_unstable();
+            ks
+        };
+        Self::new(entries, &keys)
+    }
+
+    /// A DS over a single device (no sharding at all).
+    pub fn trivial() -> Self {
+        DistStates { entries: vec![], order: vec![] }
+    }
+
+    /// Pure data/tensor split along one physical dim.
+    pub fn split(dim: u32, shards: u32) -> Self {
+        if shards <= 1 {
+            return Self::trivial();
+        }
+        DistStates { entries: vec![(dim as i32, shards)], order: vec![dim as i32] }
+    }
+
+    /// Fully replicated over `n` devices.
+    pub fn duplicate(n: u32) -> Self {
+        if n <= 1 {
+            return Self::trivial();
+        }
+        DistStates { entries: vec![(DUPLICATE, n)], order: vec![DUPLICATE] }
+    }
+
+    /// Partial-sum over `n` devices.
+    pub fn partial(n: u32) -> Self {
+        if n <= 1 {
+            return Self::trivial();
+        }
+        DistStates { entries: vec![(PARTIAL, n)], order: vec![PARTIAL] }
+    }
+
+    /// Canonical `(dim, shards)` view, sorted by dim.
+    pub fn entries(&self) -> &[(i32, u32)] {
+        &self.entries
+    }
+
+    /// Device order (sequence of logical dims, slowest-varying first).
+    pub fn order(&self) -> &[i32] {
+        &self.order
+    }
+
+    /// Shard count along a logical dim (1 if not present).
+    pub fn shards(&self, dim: i32) -> u32 {
+        self.entries
+            .iter()
+            .find(|&&(d, _)| d == dim)
+            .map(|&(_, n)| n)
+            .unwrap_or(1)
+    }
+
+    /// Number of devices this DS covers (product of shard counts).
+    pub fn num_devices(&self) -> u32 {
+        self.entries.iter().map(|&(_, n)| n).product()
+    }
+
+    /// True if any values are partial sums.
+    pub fn has_partial(&self) -> bool {
+        self.shards(PARTIAL) > 1
+    }
+
+    /// True if the tensor is replicated on ≥ 2 devices.
+    pub fn has_duplicate(&self) -> bool {
+        self.shards(DUPLICATE) > 1
+    }
+
+    /// Physical split dims (ascending) with their shard counts.
+    pub fn splits(&self) -> Vec<(u32, u32)> {
+        self.entries
+            .iter()
+            .filter(|&&(d, _)| d >= 0)
+            .map(|&(d, n)| (d as u32, n))
+            .collect()
+    }
+
+    /// Decompose a device position (index into the DG, `0..num_devices`)
+    /// into per-logical-dim shard coordinates, following `order` row-major.
+    pub fn coords_of(&self, pos: usize) -> Vec<(i32, u32)> {
+        debug_assert!(pos < self.num_devices() as usize);
+        let mut coords = vec![0u32; self.order.len()];
+        let mut rem = pos as u64;
+        // strides: last dim in order varies fastest
+        for i in (0..self.order.len()).rev() {
+            let n = self.shards(self.order[i]) as u64;
+            coords[i] = (rem % n) as u32;
+            rem /= n;
+        }
+        self.order.iter().copied().zip(coords).collect()
+    }
+
+    /// Inverse of [`coords_of`](Self::coords_of): coords (aligned with
+    /// `order`) back to a device position.
+    pub fn pos_of(&self, coords: &[(i32, u32)]) -> usize {
+        let mut pos: u64 = 0;
+        for &d in &self.order {
+            let n = self.shards(d) as u64;
+            let c = coords
+                .iter()
+                .find(|&&(dim, _)| dim == d)
+                .map(|&(_, c)| c as u64)
+                .unwrap_or(0);
+            pos = pos * n + c;
+        }
+        pos as usize
+    }
+
+    /// Positions grouped along one logical dim: the devices in each returned
+    /// group differ only in their coordinate on `dim`. This is the group
+    /// structure of collectives (AR over `PARTIAL`, AG/RS over a split dim).
+    pub fn groups_along(&self, dim: i32) -> Vec<Vec<usize>> {
+        let n = self.num_devices() as usize;
+        let k = self.shards(dim) as usize;
+        if k <= 1 {
+            return (0..n).map(|p| vec![p]).collect();
+        }
+        let mut map: std::collections::BTreeMap<Vec<(i32, u32)>, Vec<(u32, usize)>> =
+            std::collections::BTreeMap::new();
+        for pos in 0..n {
+            let coords = self.coords_of(pos);
+            let key: Vec<(i32, u32)> = coords.iter().copied().filter(|&(d, _)| d != dim).collect();
+            let on_dim = coords.iter().find(|&&(d, _)| d == dim).map(|&(_, c)| c).unwrap_or(0);
+            map.entry(key).or_default().push((on_dim, pos));
+        }
+        map.into_values()
+            .map(|mut v| {
+                v.sort_unstable();
+                v.into_iter().map(|(_, p)| p).collect()
+            })
+            .collect()
+    }
+
+    /// Compute the local (per-shard) shape given the tensor's global shape.
+    /// Non-divisible extents round like `len * (i+1)/n - len * i/n` (the
+    /// shard of coordinate `i`); this returns the shape of shard coord 0.
+    pub fn local_shape(&self, global: &[u64]) -> Vec<u64> {
+        let mut shape = global.to_vec();
+        for (dim, n) in self.splits() {
+            let d = dim as usize;
+            assert!(d < shape.len(), "split dim {d} out of rank {}", shape.len());
+            shape[d] = shape[d] / n as u64 + u64::from(shape[d] % n as u64 != 0);
+        }
+        shape
+    }
+
+    /// Replace logical dim `from` with `to`, keeping the shard count and the
+    /// position in `order`. Used by the resolver to model AR/RS/AG effects
+    /// (e.g. `PARTIAL -> dim d` is the reduce-scatter post-state).
+    pub fn relabel(&self, from: i32, to: i32) -> Result<DistStates> {
+        if self.shards(from) == 1 {
+            return Err(Error::InvalidAnnotation(format!("dim {from} not present")));
+        }
+        if to != DUPLICATE && self.shards(to) > 1 {
+            return Err(Error::InvalidAnnotation(format!("dim {to} already present")));
+        }
+        let mut entries = self.entries.clone();
+        let mut order = self.order.clone();
+        for e in entries.iter_mut() {
+            if e.0 == from {
+                e.0 = to;
+            }
+        }
+        for o in order.iter_mut() {
+            if *o == from {
+                *o = to;
+            }
+        }
+        // merge if `to` now appears twice (e.g. relabel onto DUPLICATE which existed)
+        let mut merged: Vec<(i32, u32)> = vec![];
+        for (d, n) in entries {
+            if let Some(e) = merged.iter_mut().find(|e| e.0 == d) {
+                e.1 *= n;
+            } else {
+                merged.push((d, n));
+            }
+        }
+        // `order` may now contain `to` twice; keep both occurrences only if
+        // merged kept distinct entries (it didn't), so dedupe while keeping
+        // the first occurrence.
+        if merged.len() != order.len() {
+            let mut seen = std::collections::BTreeSet::new();
+            order.retain(|d| seen.insert(*d));
+        }
+        merged.sort_by_key(|&(d, _)| d);
+        // re-validate order vs keys
+        DistStates::new(&merged, &order)
+    }
+
+    /// Human-readable form, e.g. `{-1:2, 0:4 | order=[-1,0]}`.
+    pub fn describe(&self) -> String {
+        let body: Vec<String> = self.entries.iter().map(|(d, n)| format!("{d}:{n}")).collect();
+        format!("{{{} | order={:?}}}", body.join(", "), self.order)
+    }
+}
+
+/// The single-entry difference between two DS with identical shard counts —
+/// the pattern that triggers bottom-tier collectives (Fig 5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DsTransition {
+    /// Logical dim in the source.
+    pub from: i32,
+    /// Logical dim in the destination.
+    pub to: i32,
+    /// Shard count (same on both sides).
+    pub shards: u32,
+}
+
+/// If `src` and `dst` differ by exactly one logical-dim relabel with equal
+/// shard counts (and identical `order` positions), return that transition.
+pub fn single_transition(src: &DistStates, dst: &DistStates) -> Option<DsTransition> {
+    if src.num_devices() != dst.num_devices() {
+        return None;
+    }
+    let se = src.entries();
+    let de = dst.entries();
+    if se.len() != de.len() {
+        return None;
+    }
+    // Match multiset of shard counts; find the single key change.
+    let mut diff_from: Vec<(i32, u32)> = vec![];
+    let mut diff_to: Vec<(i32, u32)> = vec![];
+    for &e in se {
+        if !de.contains(&e) {
+            diff_from.push(e);
+        }
+    }
+    for &e in de {
+        if !se.contains(&e) {
+            diff_to.push(e);
+        }
+    }
+    if diff_from.len() != 1 || diff_to.len() != 1 {
+        return None;
+    }
+    let (f, nf) = diff_from[0];
+    let (t, nt) = diff_to[0];
+    if nf != nt {
+        return None;
+    }
+    // order must be consistent: src.order with f->t equals dst.order
+    let mapped: Vec<i32> = src
+        .order()
+        .iter()
+        .map(|&d| if d == f { t } else { d })
+        .collect();
+    if mapped != dst.order() {
+        return None;
+    }
+    Some(DsTransition { from: f, to: t, shards: nf })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let ds = DistStates::new(&[(0, 2), (DUPLICATE, 4)], &[-1, 0]).unwrap();
+        assert_eq!(ds.num_devices(), 8);
+        assert_eq!(ds.shards(0), 2);
+        assert_eq!(ds.shards(DUPLICATE), 4);
+        assert_eq!(ds.shards(1), 1);
+        assert!(ds.has_duplicate());
+        assert!(!ds.has_partial());
+        assert_eq!(ds.splits(), vec![(0, 2)]);
+    }
+
+    #[test]
+    fn rejects_bad_order() {
+        // missing a sharded dim in the order
+        assert!(DistStates::new(&[(0, 2), (1, 2)], &[0]).is_err());
+        // dims with shard count 1 are dropped from entries AND order
+        let ds = DistStates::new(&[(0, 2), (1, 1)], &[0, 1]).unwrap();
+        assert_eq!(ds.order(), &[0]);
+    }
+
+    #[test]
+    fn rejects_duplicate_dim() {
+        assert!(DistStates::new(&[(0, 2), (0, 3)], &[0]).is_err());
+    }
+
+    #[test]
+    fn count1_entries_dropped() {
+        let ds = DistStates::new(&[(0, 1), (1, 2)], &[1]).unwrap();
+        assert_eq!(ds.entries(), &[(1, 2)]);
+    }
+
+    #[test]
+    fn coords_roundtrip() {
+        let ds = DistStates::new(&[(DUPLICATE, 2), (0, 2), (1, 3)], &[0, -1, 1]).unwrap();
+        for pos in 0..ds.num_devices() as usize {
+            let coords = ds.coords_of(pos);
+            assert_eq!(ds.pos_of(&coords), pos);
+        }
+    }
+
+    #[test]
+    fn coords_row_major_over_order() {
+        // order = [0, -1]: dim0 varies slowest.
+        let ds = DistStates::new(&[(0, 2), (DUPLICATE, 2)], &[0, -1]).unwrap();
+        assert_eq!(ds.coords_of(0), vec![(0, 0), (-1, 0)]);
+        assert_eq!(ds.coords_of(1), vec![(0, 0), (-1, 1)]);
+        assert_eq!(ds.coords_of(2), vec![(0, 1), (-1, 0)]);
+        assert_eq!(ds.coords_of(3), vec![(0, 1), (-1, 1)]);
+    }
+
+    #[test]
+    fn groups_along_partial() {
+        // TP-style: partial over 2, split dim0 over 2, order=[−2,0]
+        let ds = DistStates::new(&[(PARTIAL, 2), (0, 2)], &[-2, 0]).unwrap();
+        let groups = ds.groups_along(PARTIAL);
+        assert_eq!(groups.len(), 2);
+        // each group holds one device per partial coord
+        for g in &groups {
+            assert_eq!(g.len(), 2);
+        }
+        // positions: order [-2,0] → pos = p*2 + s
+        assert!(groups.contains(&vec![0, 2]));
+        assert!(groups.contains(&vec![1, 3]));
+    }
+
+    #[test]
+    fn local_shape_divides() {
+        let ds = DistStates::new(&[(0, 4), (1, 2)], &[0, 1]).unwrap();
+        assert_eq!(ds.local_shape(&[8, 6, 5]), vec![2, 3, 5]);
+        // non-divisible rounds up (shard 0 size)
+        assert_eq!(ds.local_shape(&[9, 6, 5]), vec![3, 3, 5]);
+    }
+
+    #[test]
+    fn relabel_partial_to_split() {
+        let ds = DistStates::new(&[(PARTIAL, 4)], &[-2]).unwrap();
+        let rs = ds.relabel(PARTIAL, 0).unwrap();
+        assert_eq!(rs.entries(), &[(0, 4)]);
+        assert_eq!(rs.order(), &[0]);
+    }
+
+    #[test]
+    fn relabel_split_to_dup_merges() {
+        let ds = DistStates::new(&[(DUPLICATE, 2), (0, 2)], &[-1, 0]).unwrap();
+        let ag = ds.relabel(0, DUPLICATE).unwrap();
+        assert_eq!(ag.entries(), &[(DUPLICATE, 4)]);
+    }
+
+    #[test]
+    fn single_transition_detects_ar() {
+        let src = DistStates::new(&[(PARTIAL, 4), (0, 2)], &[-2, 0]).unwrap();
+        let dst = DistStates::new(&[(DUPLICATE, 4), (0, 2)], &[-1, 0]).unwrap();
+        let t = single_transition(&src, &dst).unwrap();
+        assert_eq!(t, DsTransition { from: PARTIAL, to: DUPLICATE, shards: 4 });
+    }
+
+    #[test]
+    fn single_transition_rejects_reorder() {
+        let src = DistStates::new(&[(PARTIAL, 2), (0, 2)], &[-2, 0]).unwrap();
+        let dst = DistStates::new(&[(DUPLICATE, 2), (0, 2)], &[0, -1]).unwrap();
+        assert!(single_transition(&src, &dst).is_none());
+    }
+
+    #[test]
+    fn single_transition_rejects_multi_change() {
+        let src = DistStates::new(&[(PARTIAL, 2), (0, 2)], &[-2, 0]).unwrap();
+        let dst = DistStates::new(&[(DUPLICATE, 2), (1, 2)], &[-1, 1]).unwrap();
+        assert!(single_transition(&src, &dst).is_none());
+    }
+}

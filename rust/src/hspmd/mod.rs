@@ -1,0 +1,35 @@
+//! §3 — HSPMD sharding annotations.
+//!
+//! The fundamental data model of the paper: every tensor in the computation
+//! graph carries an [`Annotation`] describing *where* it lives and *how* it
+//! is sharded.
+//!
+//! * Bottom tier (classic SPMD, §3.1): a [`DeviceGroup`] (ordered device
+//!   list) plus [`DistStates`] — an ordered map from a *logical distributed
+//!   dimension* to a shard count, with the three sharding semantics
+//!   **Split** (`d ≥ 0`), **Duplicate** (`d = -1`) and **Partial**
+//!   (`d = -2`).
+//! * Top tier (§3.2): a [`DgUnion`]/[`DsUnion`] of *sharding subgroups*,
+//!   related along a single heterogeneous dimension [`HDim`] with
+//!   [`HSize`] = number of subgroups. `HDim ≥ 0` splits that tensor
+//!   dimension across subgroups (optionally non-uniformly, §5.5),
+//!   `HDim = -1` replicates across subgroups, and `HDim = -2` marks a
+//!   partial-sum relation across subgroups (appears in deduction, Fig 11).
+//!
+//! [`slices`] turns annotations into concrete per-device *regions* of a
+//! tensor, the geometry on which the §4 communication resolver and the BSR
+//! planner operate.
+
+pub mod annot;
+pub mod dg;
+pub mod ds;
+pub mod slices;
+
+pub use annot::{Annotation, Subgroup};
+pub use dg::DeviceGroup;
+pub use ds::{DistStates, Semantic, DUPLICATE, PARTIAL};
+pub use slices::{DeviceRegion, Interval, Region, SliceGrid};
+
+/// Heterogeneous dimension marker type (`-2` partial, `-1` replicate,
+/// `>= 0` split along that tensor dimension).
+pub type HDim = i32;

@@ -1,0 +1,58 @@
+//! # Hetu v2 / HSPMD — reproduction library
+//!
+//! This crate reproduces the system described in *"Hetu v2: A General and
+//! Scalable Deep Learning System with Hierarchical and Heterogeneous Single
+//! Program Multiple Data Annotations"* (The Hetu Team @ PKU, cs.DC 2025).
+//!
+//! The paper's contribution — **HSPMD**, a hierarchical/heterogeneous
+//! extension of SPMD sharding annotations, together with hierarchical
+//! communication resolution, progressive graph specialization, and dynamic
+//! graph switching — lives in the Rust layer (L3). Model compute (L2 JAX) and
+//! the attention/RMSNorm hot-spots (L1 Pallas) are AOT-compiled to HLO text
+//! at build time and executed through the PJRT CPU client at runtime; Python
+//! is never on the training path.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! - [`hspmd`] — §3 sharding annotations: `DistStates`, `DeviceGroup`,
+//!   unions, `HDim`/`HSize`, slice geometry.
+//! - [`comm`] — §4 hierarchical communication resolution + batched
+//!   send-receive (BSR) planning, §6.2 fused BSR.
+//! - [`graph`] — §5.1–5.2 computation graph, CommOp, annotation deduction,
+//!   §5.5 symbolic shapes.
+//! - [`spec`] — §5.3–5.4 operator instantiation (per-device executable
+//!   graphs) and pipeline construction + GPipe/1F1B schedules.
+//! - [`switch`] — §6 multi-annotation graphs and fused-BSR strategy
+//!   transitions.
+//! - [`cluster`], [`sim`], [`costmodel`] — the simulated heterogeneous
+//!   testbed (Table 3) and discrete-event execution timeline.
+//! - [`strategy`], [`data`], [`baselines`] — Appendix-A strategy encodings,
+//!   mixed-length data substrate, and the five comparison systems.
+//! - [`runtime`], [`collectives`], [`engine`] — PJRT artifact execution and
+//!   the real-numerics distributed engine (threads = devices).
+//! - [`elastic`], [`coordinator`], [`config`], [`metrics`] — failure traces
+//!   and reconfiguration, the top-level trainer, CLI/config, reporting.
+
+pub mod baselines;
+pub mod cluster;
+pub mod collectives;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod data;
+pub mod elastic;
+pub mod engine;
+pub mod error;
+pub mod figures;
+pub mod graph;
+pub mod hspmd;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod spec;
+pub mod strategy;
+pub mod switch;
+pub mod testutil;
+
+pub use error::{Error, Result};

@@ -1,0 +1,152 @@
+//! `hetu` — the launcher CLI.
+//!
+//! Subcommands:
+//!
+//! * `train`    — run the real-numerics distributed engine on the tiny
+//!   model artifacts (`--steps`, `--devices`, `--dp/--tp/--pp`, `--lr`).
+//! * `figures`  — regenerate paper tables/figures (`fig13 fig14 fig15
+//!   fig16 fig17 fig18 table2`, or `all`).
+//! * `info`     — show artifact registry + cluster presets.
+
+use hetu::config::{Cli, RunConfig};
+use hetu::coordinator::Trainer;
+use hetu::engine::EngineStrategy;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = Cli::parse(&args);
+    let code = match cli.command.as_str() {
+        "train" => cmd_train(&cli),
+        "figures" => cmd_figures(&cli),
+        "info" => cmd_info(&cli),
+        "" | "help" => {
+            usage();
+            0
+        }
+        other => {
+            eprintln!("unknown command `{other}`");
+            usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() {
+    eprintln!(
+        "hetu — HSPMD distributed training (Hetu v2 reproduction)\n\
+         \n\
+         USAGE:\n\
+           hetu train   [--steps N] [--dp N] [--tp N] [--pp N] [--microbatches N] [--lr F] [--artifacts DIR]\n\
+           hetu figures [fig13|fig14|fig15|fig16|fig17|fig18|table2|all] [--steps N]\n\
+           hetu info    [--artifacts DIR]"
+    );
+}
+
+fn cmd_train(cli: &Cli) -> i32 {
+    let run = || -> hetu::Result<()> {
+        let cfg = RunConfig::from_cli(cli)?;
+        let dp = cli.u64_opt("dp", 1)? as usize;
+        let tp = cli.u64_opt("tp", 1)? as usize;
+        let pp = cli.u64_opt("pp", 2)? as usize;
+        let mb = cli.u64_opt("microbatches", 4)? as usize;
+        // layers come from the artifact manifest at Engine::new; use the
+        // tiny default (8) for strategy construction and let validation
+        // correct us.
+        let strategy = EngineStrategy::uniform("cli", dp, tp, pp, 8, mb);
+        println!("strategy: dp{dp} tp{tp} pp{pp}, {mb} microbatches/pipeline");
+        let mut trainer = Trainer::new(cfg.clone(), strategy)?;
+        trainer.train(cfg.steps)?;
+        for log in trainer.logs() {
+            println!(
+                "step {:>4}  loss {:.4}  {:>8.1}ms  wire {:>10} elems  [{}]",
+                log.step,
+                log.loss,
+                log.wall_s * 1e3,
+                log.wire_elems,
+                log.strategy
+            );
+        }
+        let (head, tail) = trainer.loss_improved()?;
+        println!("loss: first-quarter mean {head:.4} -> last-quarter mean {tail:.4}");
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_figures(cli: &Cli) -> i32 {
+    let what = cli.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let steps = cli.u64_opt("steps", 20).unwrap_or(20) as usize;
+    let run = || -> hetu::Result<()> {
+        let all = what == "all";
+        if all || what == "fig13" {
+            println!("{}", hetu::figures::fig13()?.0.markdown());
+        }
+        if all || what == "fig14" {
+            for (_, t) in hetu::figures::fig14()? {
+                println!("{}", t.markdown());
+            }
+        }
+        if all || what == "fig15" {
+            println!("{}", hetu::figures::fig15(steps)?.0.markdown());
+        }
+        if all || what == "fig16" {
+            println!("{}", hetu::figures::fig16(steps)?.markdown());
+        }
+        if all || what == "fig17" {
+            println!("{}", hetu::figures::fig17()?.markdown());
+        }
+        if all || what == "fig18" {
+            println!("{}", hetu::figures::fig18_left()?.markdown());
+            println!("{}", hetu::figures::fig18_right()?.markdown());
+        }
+        if all || what == "table2" {
+            println!("{}", hetu::figures::table2()?.markdown());
+        }
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_info(cli: &Cli) -> i32 {
+    let dir = cli.str_opt("artifacts", "artifacts");
+    match hetu::runtime::Runtime::open(&dir) {
+        Ok(rt) => {
+            let c = rt.config;
+            println!(
+                "model: {} layers, hidden {}, ffn {}, {} heads, vocab {} (compiled B={} S={})",
+                c.layers, c.hidden, c.ffn, c.heads, c.vocab, c.batch, c.seq
+            );
+            println!("artifacts:");
+            for name in rt.artifact_names() {
+                let m = rt.meta(&name).unwrap();
+                println!("  {:<16} {} inputs, {} outputs", name, m.inputs.len(), m.outputs);
+            }
+            let cluster = hetu::cluster::Cluster::h800_16_h20_32();
+            println!(
+                "\nsimulated testbed: {} devices ({} nodes), e.g. R0={} R16={}",
+                cluster.len(),
+                cluster.len() as u32 / hetu::cluster::GPUS_PER_NODE,
+                cluster.device(0).kind.name,
+                cluster.device(16).kind.name
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}

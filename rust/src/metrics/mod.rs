@@ -1,0 +1,212 @@
+//! Reporting utilities: markdown/CSV tables and wall-clock timers used by
+//! the bench harnesses to regenerate the paper's tables and figures.
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// A simple column-aligned table that renders to markdown or CSV.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    /// Table title.
+    pub title: String,
+    /// Column headers.
+    pub headers: Vec<String>,
+    /// Rows of cells.
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table.
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    /// Append a row.
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render as GitHub-flavoured markdown.
+    pub fn markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "\n### {}\n", self.title);
+        let widths: Vec<usize> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| {
+                self.rows
+                    .iter()
+                    .map(|r| r[i].len())
+                    .chain(std::iter::once(h.len()))
+                    .max()
+                    .unwrap_or(1)
+            })
+            .collect();
+        let line = |cells: &[String], out: &mut String| {
+            let padded: Vec<String> = cells
+                .iter()
+                .zip(widths.iter())
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect();
+            let _ = writeln!(out, "| {} |", padded.join(" | "));
+        };
+        line(&self.headers, &mut out);
+        let dashes: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        let _ = writeln!(out, "|-{}-|", dashes.join("-|-"));
+        for r in &self.rows {
+            line(r, &mut out);
+        }
+        out
+    }
+
+    /// Render as CSV.
+    pub fn csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.headers.join(","));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", r.join(","));
+        }
+        out
+    }
+}
+
+/// Format seconds with adaptive precision.
+pub fn fmt_s(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{s:.0}s")
+    } else if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+/// Format byte counts as MB (the Table 2 unit).
+pub fn fmt_mb(bytes: u64) -> String {
+    format!("{}", bytes / (1 << 20))
+}
+
+/// Simple statistics over a sample (for the Fig 15 box plots).
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    /// Minimum.
+    pub min: f64,
+    /// 25th percentile.
+    pub p25: f64,
+    /// Median.
+    pub p50: f64,
+    /// 75th percentile.
+    pub p75: f64,
+    /// Maximum.
+    pub max: f64,
+    /// Mean.
+    pub mean: f64,
+}
+
+impl Stats {
+    /// Compute from samples (panics on empty input).
+    pub fn of(samples: &[f64]) -> Stats {
+        assert!(!samples.is_empty());
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| {
+            let idx = (p * (s.len() - 1) as f64).round() as usize;
+            s[idx]
+        };
+        Stats {
+            min: s[0],
+            p25: q(0.25),
+            p50: q(0.50),
+            p75: q(0.75),
+            max: s[s.len() - 1],
+            mean: s.iter().sum::<f64>() / s.len() as f64,
+        }
+    }
+}
+
+/// Wall-clock stopwatch for §Perf measurements.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    /// Start timing.
+    pub fn start() -> Stopwatch {
+        Stopwatch { start: Instant::now() }
+    }
+
+    /// Elapsed seconds.
+    pub fn s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Time a closure over `iters` iterations, returning (mean_s, best_s).
+pub fn bench<F: FnMut()>(iters: u32, mut f: F) -> (f64, f64) {
+    let mut best = f64::INFINITY;
+    let mut total = 0.0;
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        let dt = t.elapsed().as_secs_f64();
+        best = best.min(dt);
+        total += dt;
+    }
+    (total / iters as f64, best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_markdown_and_csv() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| 1 | 2 |"));
+        let csv = t.csv();
+        assert!(csv.starts_with("a,b\n1,2"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn stats_quartiles() {
+        let s = Stats::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.p50, 3.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.mean, 3.0);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_s(2.5), "2.50s");
+        assert_eq!(fmt_s(0.0025), "2.50ms");
+        assert_eq!(fmt_mb(10 << 20), "10");
+    }
+
+    #[test]
+    fn bench_returns_positive() {
+        let (mean, best) = bench(3, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(mean >= best && best >= 0.0);
+    }
+}

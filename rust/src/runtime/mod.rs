@@ -1,0 +1,509 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! the L3 hot path. Python never runs here.
+//!
+//! The interchange format is HLO **text** (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `PjRtClient::compile`. Host tensors are
+//! [`HostTensor`] (shape + f32/i32 payload); conversion to/from
+//! `xla::Literal` happens at the call boundary.
+
+pub mod tensor;
+
+pub use tensor::HostTensor;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::{Error, Result};
+
+/// Artifact metadata parsed from `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    /// File name relative to the artifact dir.
+    pub file: String,
+    /// Input shapes + dtypes (`"f32"`/`"i32"`).
+    pub inputs: Vec<(Vec<usize>, String)>,
+    /// Number of outputs in the result tuple.
+    pub outputs: usize,
+}
+
+/// Model configuration recorded by the exporter.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ManifestConfig {
+    /// Transformer layers.
+    pub layers: u32,
+    /// Hidden size.
+    pub hidden: usize,
+    /// FFN inner size.
+    pub ffn: usize,
+    /// Attention heads.
+    pub heads: usize,
+    /// Vocabulary.
+    pub vocab: usize,
+    /// Compiled micro-batch size.
+    pub batch: usize,
+    /// Compiled sequence length.
+    pub seq: usize,
+}
+
+/// The artifact registry: a PJRT CPU client plus lazily-compiled
+/// executables keyed by artifact name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    metas: HashMap<String, ArtifactMeta>,
+    /// Exporter-recorded model config.
+    pub config: ManifestConfig,
+    executables: std::sync::Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open an artifact directory (must contain `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let (metas, config) = parse_manifest(&text)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PJRT CPU client: {e}")))?;
+        Ok(Runtime {
+            client,
+            dir,
+            metas,
+            config,
+            executables: std::sync::Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Artifact names available.
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.metas.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Metadata of one artifact.
+    pub fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.metas
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("unknown artifact `{name}`")))
+    }
+
+    fn compiled(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        {
+            let cache = self.executables.lock().unwrap();
+            if let Some(e) = cache.get(name) {
+                return Ok(e.clone());
+            }
+        }
+        let meta = self.meta(name)?;
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| Error::Runtime(format!("parse {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {name}: {e}")))?;
+        let exe = std::sync::Arc::new(exe);
+        self.executables.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of artifacts (engine startup).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.compiled(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact on host tensors; returns the flattened output
+    /// tuple. Validates arity + shapes against the manifest.
+    pub fn call(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let refs: Vec<&HostTensor> = inputs.iter().collect();
+        self.call_refs(name, &refs)
+    }
+
+    /// [`Runtime::call`] over borrowed tensors — the engine's hot path
+    /// (§Perf L3): parameters stay in the device stores; no per-call clone.
+    pub fn call_refs(&self, name: &str, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let meta = self.meta(name)?.clone();
+        if inputs.len() != meta.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: expected {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (i, (t, (shape, dtype))) in inputs.iter().zip(meta.inputs.iter()).enumerate() {
+            if &t.shape != shape || t.dtype_str() != dtype {
+                return Err(Error::Runtime(format!(
+                    "{name}: input {i} is {:?}/{} but manifest wants {:?}/{}",
+                    t.shape,
+                    t.dtype_str(),
+                    shape,
+                    dtype
+                )));
+            }
+        }
+        let exe = self.compiled(name)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("execute {name}: {e}")))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch {name}: {e}")))?;
+        let parts = out
+            .to_tuple()
+            .map_err(|e| Error::Runtime(format!("untuple {name}: {e}")))?;
+        if parts.len() != meta.outputs {
+            return Err(Error::Runtime(format!(
+                "{name}: manifest promises {} outputs, got {}",
+                meta.outputs,
+                parts.len()
+            )));
+        }
+        parts.into_iter().map(HostTensor::from_literal).collect()
+    }
+}
+
+/// Minimal JSON parsing for the exporter's manifest (no serde offline).
+/// The format is fully under our control (`aot.py`), so a hand-rolled
+/// recursive-descent parser over the small grammar is safe and dependency-
+/// free.
+fn parse_manifest(text: &str) -> Result<(HashMap<String, ArtifactMeta>, ManifestConfig)> {
+    let v = json::parse(text)?;
+    let cfg = v.get("config").ok_or_else(|| Error::Runtime("manifest: no config".into()))?;
+    let num = |k: &str| -> Result<usize> {
+        cfg.get(k)
+            .and_then(|x| x.as_f64())
+            .map(|f| f as usize)
+            .ok_or_else(|| Error::Runtime(format!("manifest config missing `{k}`")))
+    };
+    let config = ManifestConfig {
+        layers: num("layers")? as u32,
+        hidden: num("hidden")?,
+        ffn: num("ffn")?,
+        heads: num("heads")?,
+        vocab: num("vocab")?,
+        batch: num("batch")?,
+        seq: num("seq")?,
+    };
+    let arts = v
+        .get("artifacts")
+        .and_then(|a| a.as_object())
+        .ok_or_else(|| Error::Runtime("manifest: no artifacts".into()))?;
+    let mut metas = HashMap::new();
+    for (name, m) in arts {
+        let file = m
+            .get("file")
+            .and_then(|f| f.as_str())
+            .ok_or_else(|| Error::Runtime(format!("artifact {name}: no file")))?
+            .to_string();
+        let outputs = m
+            .get("outputs")
+            .and_then(|o| o.as_f64())
+            .ok_or_else(|| Error::Runtime(format!("artifact {name}: no outputs")))?
+            as usize;
+        let mut inputs = vec![];
+        for inp in m
+            .get("inputs")
+            .and_then(|i| i.as_array())
+            .ok_or_else(|| Error::Runtime(format!("artifact {name}: no inputs")))?
+        {
+            let pair = inp.as_array().ok_or_else(|| Error::Runtime("bad input entry".into()))?;
+            let dims: Vec<usize> = pair[0]
+                .as_array()
+                .ok_or_else(|| Error::Runtime("bad input dims".into()))?
+                .iter()
+                .map(|d| d.as_f64().unwrap_or(0.0) as usize)
+                .collect();
+            let dtype =
+                pair[1].as_str().ok_or_else(|| Error::Runtime("bad input dtype".into()))?;
+            inputs.push((dims, dtype.to_string()));
+        }
+        metas.insert(name.clone(), ArtifactMeta { file, inputs, outputs });
+    }
+    Ok((metas, config))
+}
+
+/// Tiny JSON value + parser (objects, arrays, strings, numbers, bools).
+pub mod json {
+    use crate::{Error, Result};
+    use std::collections::BTreeMap;
+
+    /// A parsed JSON value.
+    #[derive(Clone, Debug, PartialEq)]
+    pub enum Value {
+        /// null
+        Null,
+        /// boolean
+        Bool(bool),
+        /// number (f64)
+        Num(f64),
+        /// string
+        Str(String),
+        /// array
+        Arr(Vec<Value>),
+        /// object (ordered)
+        Obj(BTreeMap<String, Value>),
+    }
+
+    impl Value {
+        /// Object field lookup.
+        pub fn get(&self, key: &str) -> Option<&Value> {
+            match self {
+                Value::Obj(m) => m.get(key),
+                _ => None,
+            }
+        }
+        /// As f64.
+        pub fn as_f64(&self) -> Option<f64> {
+            match self {
+                Value::Num(n) => Some(*n),
+                _ => None,
+            }
+        }
+        /// As str.
+        pub fn as_str(&self) -> Option<&str> {
+            match self {
+                Value::Str(s) => Some(s),
+                _ => None,
+            }
+        }
+        /// As array.
+        pub fn as_array(&self) -> Option<&Vec<Value>> {
+            match self {
+                Value::Arr(a) => Some(a),
+                _ => None,
+            }
+        }
+        /// As object.
+        pub fn as_object(&self) -> Option<&BTreeMap<String, Value>> {
+            match self {
+                Value::Obj(o) => Some(o),
+                _ => None,
+            }
+        }
+    }
+
+    /// Parse a JSON document.
+    pub fn parse(text: &str) -> Result<Value> {
+        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            return Err(Error::Runtime("json: trailing garbage".into()));
+        }
+        Ok(v)
+    }
+
+    struct Parser<'a> {
+        b: &'a [u8],
+        i: usize,
+    }
+
+    impl<'a> Parser<'a> {
+        fn ws(&mut self) {
+            while self.i < self.b.len() && (self.b[self.i] as char).is_whitespace() {
+                self.i += 1;
+            }
+        }
+        fn peek(&mut self) -> Result<u8> {
+            self.ws();
+            self.b
+                .get(self.i)
+                .copied()
+                .ok_or_else(|| Error::Runtime("json: unexpected end".into()))
+        }
+        fn eat(&mut self, c: u8) -> Result<()> {
+            if self.peek()? != c {
+                return Err(Error::Runtime(format!(
+                    "json: expected `{}` at {}",
+                    c as char, self.i
+                )));
+            }
+            self.i += 1;
+            Ok(())
+        }
+        fn value(&mut self) -> Result<Value> {
+            match self.peek()? {
+                b'{' => self.object(),
+                b'[' => self.array(),
+                b'"' => Ok(Value::Str(self.string()?)),
+                b't' => self.lit("true", Value::Bool(true)),
+                b'f' => self.lit("false", Value::Bool(false)),
+                b'n' => self.lit("null", Value::Null),
+                _ => self.number(),
+            }
+        }
+        fn lit(&mut self, s: &str, v: Value) -> Result<Value> {
+            if self.b[self.i..].starts_with(s.as_bytes()) {
+                self.i += s.len();
+                Ok(v)
+            } else {
+                Err(Error::Runtime(format!("json: bad literal at {}", self.i)))
+            }
+        }
+        fn number(&mut self) -> Result<Value> {
+            let start = self.i;
+            while self.i < self.b.len()
+                && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+            {
+                self.i += 1;
+            }
+            std::str::from_utf8(&self.b[start..self.i])
+                .ok()
+                .and_then(|s| s.parse().ok())
+                .map(Value::Num)
+                .ok_or_else(|| Error::Runtime(format!("json: bad number at {start}")))
+        }
+        fn string(&mut self) -> Result<String> {
+            self.eat(b'"')?;
+            let mut out = String::new();
+            while self.i < self.b.len() {
+                let c = self.b[self.i];
+                self.i += 1;
+                match c {
+                    b'"' => return Ok(out),
+                    b'\\' => {
+                        let e = self.b.get(self.i).copied().unwrap_or(b'"');
+                        self.i += 1;
+                        out.push(match e {
+                            b'n' => '\n',
+                            b't' => '\t',
+                            b'r' => '\r',
+                            other => other as char,
+                        });
+                    }
+                    other => out.push(other as char),
+                }
+            }
+            Err(Error::Runtime("json: unterminated string".into()))
+        }
+        fn array(&mut self) -> Result<Value> {
+            self.eat(b'[')?;
+            let mut out = vec![];
+            if self.peek()? == b']' {
+                self.i += 1;
+                return Ok(Value::Arr(out));
+            }
+            loop {
+                out.push(self.value()?);
+                match self.peek()? {
+                    b',' => self.i += 1,
+                    b']' => {
+                        self.i += 1;
+                        return Ok(Value::Arr(out));
+                    }
+                    c => {
+                        return Err(Error::Runtime(format!(
+                            "json: expected , or ] got `{}`",
+                            c as char
+                        )))
+                    }
+                }
+            }
+        }
+        fn object(&mut self) -> Result<Value> {
+            self.eat(b'{')?;
+            let mut out = BTreeMap::new();
+            if self.peek()? == b'}' {
+                self.i += 1;
+                return Ok(Value::Obj(out));
+            }
+            loop {
+                self.ws();
+                let key = self.string()?;
+                self.eat(b':')?;
+                out.insert(key, self.value()?);
+                match self.peek()? {
+                    b',' => self.i += 1,
+                    b'}' => {
+                        self.i += 1;
+                        return Ok(Value::Obj(out));
+                    }
+                    c => {
+                        return Err(Error::Runtime(format!(
+                            "json: expected , or }} got `{}`",
+                            c as char
+                        )))
+                    }
+                }
+            }
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn parses_manifest_like_json() {
+            let v = parse(
+                r#"{"config": {"layers": 8}, "artifacts": {"a": {"inputs": [[[2, 3], "f32"]], "outputs": 1, "file": "a.hlo.txt"}}}"#,
+            )
+            .unwrap();
+            assert_eq!(v.get("config").unwrap().get("layers").unwrap().as_f64(), Some(8.0));
+            let a = v.get("artifacts").unwrap().get("a").unwrap();
+            assert_eq!(a.get("outputs").unwrap().as_f64(), Some(1.0));
+            let inp = a.get("inputs").unwrap().as_array().unwrap();
+            assert_eq!(inp[0].as_array().unwrap()[1].as_str(), Some("f32"));
+        }
+
+        #[test]
+        fn rejects_garbage() {
+            assert!(parse("{").is_err());
+            assert!(parse("{}x").is_err());
+        }
+
+        #[test]
+        fn parses_nested_arrays_and_escapes() {
+            let v = parse(r#"{"s": "a\nb", "a": [1, [2, 3], true, null]}"#).unwrap();
+            assert_eq!(v.get("s").unwrap().as_str(), Some("a\nb"));
+            assert_eq!(v.get("a").unwrap().as_array().unwrap().len(), 4);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing_roundtrip() {
+        let text = r#"{
+            "config": {"layers": 8, "hidden": 768, "ffn": 3072, "heads": 12,
+                       "vocab": 32000, "batch": 2, "seq": 128, "tp_degrees": [1, 2, 4]},
+            "artifacts": {
+                "embed_fwd": {"file": "embed_fwd.hlo.txt",
+                               "inputs": [[[32000, 768], "f32"], [[2, 128], "i32"]],
+                               "outputs": 1}
+            }
+        }"#;
+        let (metas, cfg) = parse_manifest(text).unwrap();
+        assert_eq!(cfg.layers, 8);
+        assert_eq!(cfg.seq, 128);
+        let m = &metas["embed_fwd"];
+        assert_eq!(m.outputs, 1);
+        assert_eq!(m.inputs[0].0, vec![32000, 768]);
+        assert_eq!(m.inputs[1].1, "i32");
+    }
+
+    #[test]
+    fn open_missing_dir_is_friendly() {
+        let err = match Runtime::open("/nonexistent-artifacts") {
+            Err(e) => e,
+            Ok(_) => panic!("open should fail"),
+        };
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,194 @@
+//! Host-side tensors: the engine's in-memory representation, convertible
+//! to/from `xla::Literal` at the PJRT call boundary.
+
+use crate::{Error, Result};
+
+/// Payload storage.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// f32 buffer.
+    F32(Vec<f32>),
+    /// i32 buffer (token ids).
+    I32(Vec<i32>),
+}
+
+/// A dense row-major host tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    /// Dimensions.
+    pub shape: Vec<usize>,
+    /// Data.
+    pub data: Payload,
+}
+
+impl HostTensor {
+    /// f32 tensor from data.
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Result<HostTensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::Runtime(format!(
+                "shape {shape:?} wants {n} elements, got {}",
+                data.len()
+            )));
+        }
+        Ok(HostTensor { shape, data: Payload::F32(data) })
+    }
+
+    /// i32 tensor from data.
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Result<HostTensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::Runtime(format!(
+                "shape {shape:?} wants {n} elements, got {}",
+                data.len()
+            )));
+        }
+        Ok(HostTensor { shape, data: Payload::I32(data) })
+    }
+
+    /// Zero-filled f32 tensor.
+    pub fn zeros(shape: Vec<usize>) -> HostTensor {
+        let n: usize = shape.iter().product();
+        HostTensor { shape, data: Payload::F32(vec![0.0; n]) }
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// dtype tag matching the exporter manifest.
+    pub fn dtype_str(&self) -> &'static str {
+        match self.data {
+            Payload::F32(_) => "f32",
+            Payload::I32(_) => "i32",
+        }
+    }
+
+    /// Borrow f32 data.
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Payload::F32(v) => Ok(v),
+            _ => Err(Error::Runtime("tensor is not f32".into())),
+        }
+    }
+
+    /// Mutable f32 data.
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            Payload::F32(v) => Ok(v),
+            _ => Err(Error::Runtime("tensor is not f32".into())),
+        }
+    }
+
+    /// Borrow i32 data.
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Payload::I32(v) => Ok(v),
+            _ => Err(Error::Runtime("tensor is not i32".into())),
+        }
+    }
+
+    /// In-place elementwise add (the engine's AllReduce combiner).
+    pub fn add_assign(&mut self, other: &HostTensor) -> Result<()> {
+        if self.shape != other.shape {
+            return Err(Error::Runtime(format!(
+                "add_assign shape mismatch {:?} vs {:?}",
+                self.shape, other.shape
+            )));
+        }
+        let b = other.as_f32()?;
+        for (x, y) in self.as_f32_mut()?.iter_mut().zip(b.iter()) {
+            *x += y;
+        }
+        Ok(())
+    }
+
+    /// In-place scale.
+    pub fn scale(&mut self, s: f32) -> Result<()> {
+        for x in self.as_f32_mut()? {
+            *x *= s;
+        }
+        Ok(())
+    }
+
+    /// Convert to an XLA literal. Single-copy path (§Perf L3): allocate the
+    /// literal at its final shape and `copy_raw_from` — the original
+    /// `vec1().reshape()` route copied every payload twice.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<usize> = self.shape.clone();
+        match &self.data {
+            Payload::F32(v) => {
+                let mut lit =
+                    xla::Literal::create_from_shape(xla::PrimitiveType::F32, &dims);
+                lit.copy_raw_from(v.as_slice())
+                    .map_err(|e| Error::Runtime(format!("literal copy: {e}")))?;
+                Ok(lit)
+            }
+            Payload::I32(v) => {
+                let mut lit =
+                    xla::Literal::create_from_shape(xla::PrimitiveType::S32, &dims);
+                lit.copy_raw_from(v.as_slice())
+                    .map_err(|e| Error::Runtime(format!("literal copy: {e}")))?;
+                Ok(lit)
+            }
+        }
+    }
+
+    /// Convert from an XLA literal (f32/f64/i32/i64/scalars supported).
+    pub fn from_literal(lit: xla::Literal) -> Result<HostTensor> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| Error::Runtime(format!("literal shape: {e}")))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                let v = lit.to_vec::<f32>().map_err(|e| Error::Runtime(e.to_string()))?;
+                HostTensor::f32(dims, v)
+            }
+            xla::ElementType::S32 => {
+                let v = lit.to_vec::<i32>().map_err(|e| Error::Runtime(e.to_string()))?;
+                HostTensor::i32(dims, v)
+            }
+            other => Err(Error::Runtime(format!("unsupported literal type {other:?}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_checks_arity() {
+        assert!(HostTensor::f32(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::f32(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn add_assign_and_scale() {
+        let mut a = HostTensor::f32(vec![4], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = HostTensor::f32(vec![4], vec![10.0; 4]).unwrap();
+        a.add_assign(&b).unwrap();
+        a.scale(0.5).unwrap();
+        assert_eq!(a.as_f32().unwrap(), &[5.5, 6.0, 6.5, 7.0]);
+    }
+
+    #[test]
+    fn add_assign_rejects_shape_mismatch() {
+        let mut a = HostTensor::zeros(vec![2]);
+        let b = HostTensor::zeros(vec![3]);
+        assert!(a.add_assign(&b).is_err());
+    }
+
+    #[test]
+    fn dtype_tags() {
+        assert_eq!(HostTensor::zeros(vec![1]).dtype_str(), "f32");
+        assert_eq!(HostTensor::i32(vec![1], vec![7]).unwrap().dtype_str(), "i32");
+    }
+}

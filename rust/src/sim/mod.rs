@@ -1,0 +1,417 @@
+//! Discrete-event per-step training simulator.
+//!
+//! Evaluates a [`ParallelStrategy`] on a [`Cluster`] under the
+//! [`CostModel`]: per-stage forward/backward task durations (compute + TP
+//! collectives), cross-stage activation transfers, 1F1B/GPipe dependency
+//! structure, and the end-of-step gradient synchronization across pipelines
+//! (including the hetero-DP SplitAR case where pipelines shard layers at
+//! different TP degrees).
+//!
+//! Output is a [`StepReport`]: total step time plus the per-rank
+//! compute/comm/bubble breakdown the paper shows in Fig 18 (left).
+
+use std::collections::BTreeMap;
+
+use crate::cluster::Cluster;
+use crate::costmodel::CostModel;
+use crate::hspmd::dg::Rank;
+use crate::spec::schedule::{stage_schedule, Task, TaskKind};
+use crate::strategy::ParallelStrategy;
+use crate::{Error, Result};
+
+/// Per-rank time breakdown over one step (Fig 18-left).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RankBreakdown {
+    /// Seconds of dense compute.
+    pub compute_s: f64,
+    /// Seconds of communication the rank participates in (TP sync, PP
+    /// boundaries, gradient sync).
+    pub comm_s: f64,
+    /// Idle (pipeline bubble + waiting for stragglers).
+    pub bubble_s: f64,
+}
+
+impl RankBreakdown {
+    /// Busy + idle = step time.
+    pub fn total_s(&self) -> f64 {
+        self.compute_s + self.comm_s + self.bubble_s
+    }
+}
+
+/// Simulation result for one training step.
+#[derive(Clone, Debug)]
+pub struct StepReport {
+    /// End-to-end step seconds (slowest pipeline + gradient sync).
+    pub step_s: f64,
+    /// Per-pipeline makespan (before gradient sync).
+    pub pipeline_s: Vec<f64>,
+    /// Gradient synchronization seconds (max over ranks).
+    pub grad_sync_s: f64,
+    /// Per-rank breakdown.
+    pub per_rank: BTreeMap<Rank, RankBreakdown>,
+}
+
+/// Simulator options (baseline-system handicaps).
+#[derive(Clone, Copy, Debug)]
+pub struct SimOptions {
+    /// Multiplier on pipeline-boundary transfer time (HexiScale's
+    /// coarse-grained broadcast between stages = destination TP degree).
+    pub boundary_factor: f64,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions { boundary_factor: 1.0 }
+    }
+}
+
+/// Per-stage derived timing quantities.
+struct StageTiming {
+    fwd_compute: f64,
+    bwd_compute: f64,
+    fwd_comm: f64,
+    bwd_comm: f64,
+    boundary_in_s: f64, // transfer time from previous stage
+}
+
+fn stage_timings(
+    cluster: &Cluster,
+    cm: &CostModel,
+    strat: &ParallelStrategy,
+    p: usize,
+    opts: SimOptions,
+) -> Vec<StageTiming> {
+    let pipe = &strat.pipelines[p];
+    let tokens_mb = pipe.microbatch_size as u64 * strat.seq_len;
+    let mut out = Vec::with_capacity(pipe.stages.len());
+    for (si, s) in pipe.stages.iter().enumerate() {
+        // slowest member bounds the TP group
+        let dev = s
+            .ranks
+            .iter()
+            .map(|&r| cluster.device(r).kind)
+            .min_by(|a, b| a.bf16_tflops.partial_cmp(&b.bf16_tflops).unwrap())
+            .unwrap();
+        let fwd_compute = cm.fwd_s(&dev, s.num_layers(), tokens_mb, strat.seq_len, s.tp());
+        let bwd_compute = cm.bwd_s(&dev, s.num_layers(), tokens_mb, strat.seq_len, s.tp());
+        let tp_comm = if s.tp() > 1 {
+            s.num_layers() as f64
+                * cluster.collective_s(&s.ranks, cm.tp_sync_bytes(tokens_mb), true)
+        } else {
+            0.0
+        };
+        let boundary_in_s = if si == 0 {
+            0.0
+        } else {
+            let prev = &pipe.stages[si - 1];
+            opts.boundary_factor
+                * cluster.transfer_s(
+                    *prev.ranks.last().unwrap(),
+                    *s.ranks.first().unwrap(),
+                    cm.pp_boundary_bytes(tokens_mb),
+                )
+        };
+        out.push(StageTiming {
+            fwd_compute,
+            bwd_compute,
+            fwd_comm: tp_comm,
+            bwd_comm: tp_comm,
+            boundary_in_s,
+        });
+    }
+    out
+}
+
+/// Simulate one pipeline's makespan; fills per-rank busy accounting.
+fn simulate_pipeline(
+    strat: &ParallelStrategy,
+    timings: &[StageTiming],
+    p: usize,
+    busy: &mut BTreeMap<Rank, (f64, f64)>, // rank -> (compute_s, comm_s)
+) -> Result<f64> {
+    let pipe = &strat.pipelines[p];
+    let num_stages = pipe.stages.len();
+    let m = pipe.num_microbatches as usize;
+    let queues: Vec<Vec<Task>> = (0..num_stages)
+        .map(|s| stage_schedule(strat.schedule, num_stages, s, m))
+        .collect();
+    let mut q_head = vec![0usize; num_stages];
+    let mut clock = vec![0f64; num_stages];
+    let mut fwd_done = vec![vec![f64::NAN; num_stages]; m];
+    let mut bwd_done = vec![vec![f64::NAN; num_stages]; m];
+
+    let total: usize = queues.iter().map(|q| q.len()).sum();
+    let mut executed = 0usize;
+    loop {
+        let mut progressed = false;
+        for s in 0..num_stages {
+            while q_head[s] < queues[s].len() {
+                let task = queues[s][q_head[s]];
+                let ready = match task.kind {
+                    TaskKind::Fwd => {
+                        if s == 0 {
+                            Some(0.0)
+                        } else {
+                            let d = fwd_done[task.microbatch][s - 1];
+                            if d.is_nan() {
+                                None
+                            } else {
+                                Some(d + timings[s].boundary_in_s)
+                            }
+                        }
+                    }
+                    TaskKind::Bwd => {
+                        if s == num_stages - 1 {
+                            let f = fwd_done[task.microbatch][s];
+                            if f.is_nan() {
+                                None
+                            } else {
+                                Some(f)
+                            }
+                        } else {
+                            let d = bwd_done[task.microbatch][s + 1];
+                            if d.is_nan() {
+                                None
+                            } else {
+                                Some(d + timings[s + 1].boundary_in_s)
+                            }
+                        }
+                    }
+                };
+                let Some(ready) = ready else { break };
+                let (compute, comm) = match task.kind {
+                    TaskKind::Fwd => (timings[s].fwd_compute, timings[s].fwd_comm),
+                    TaskKind::Bwd => (timings[s].bwd_compute, timings[s].bwd_comm),
+                };
+                let start = clock[s].max(ready);
+                let finish = start + compute + comm;
+                clock[s] = finish;
+                match task.kind {
+                    TaskKind::Fwd => fwd_done[task.microbatch][s] = finish,
+                    TaskKind::Bwd => bwd_done[task.microbatch][s] = finish,
+                }
+                for &r in &pipe.stages[s].ranks {
+                    let e = busy.entry(r).or_insert((0.0, 0.0));
+                    e.0 += compute;
+                    e.1 += comm;
+                }
+                q_head[s] += 1;
+                executed += 1;
+                progressed = true;
+            }
+        }
+        if executed == total {
+            break;
+        }
+        if !progressed {
+            return Err(Error::Strategy(format!(
+                "pipeline {p}: schedule deadlock at {executed}/{total} tasks"
+            )));
+        }
+    }
+    Ok(clock.iter().copied().fold(0.0, f64::max))
+}
+
+/// Gradient synchronization time: for every layer held by >1 pipeline, an
+/// all-reduce (ring model) among one TP-shard-matched group per layer.
+/// Hetero TP degrees across pipelines correspond to the §4.2 SplitAR path;
+/// the ring volume model is identical at equal total bytes.
+fn grad_sync(
+    cluster: &Cluster,
+    cm: &CostModel,
+    strat: &ParallelStrategy,
+    comm: &mut BTreeMap<Rank, f64>,
+) -> f64 {
+    let layers = strat
+        .pipelines
+        .iter()
+        .flat_map(|p| p.stages.iter().map(|s| s.layers.1))
+        .max()
+        .unwrap_or(0);
+    for l in 0..layers {
+        let holders = strat.holders_of_layer(l);
+        if holders.len() <= 1 {
+            continue;
+        }
+        // Bytes each rank must reduce for this layer: its own shard.
+        for s in &holders {
+            let bytes =
+                (cm.model.params_per_layer() as f64 / s.tp() as f64 * cm.params.elem_bytes) as u64;
+            // ring across the DP group: one representative per holder stage
+            let group: Vec<Rank> = holders.iter().map(|h| h.ranks[0]).collect();
+            let t = cluster.collective_s(&group, bytes, true);
+            for &r in &s.ranks {
+                *comm.entry(r).or_insert(0.0) += t;
+            }
+        }
+    }
+    comm.values().copied().fold(0.0, f64::max)
+}
+
+/// Simulate one training step of `strat` on `cluster` (default options).
+pub fn simulate_step(
+    cluster: &Cluster,
+    cm: &CostModel,
+    strat: &ParallelStrategy,
+) -> Result<StepReport> {
+    simulate_step_opts(cluster, cm, strat, SimOptions::default())
+}
+
+/// Simulate one training step with explicit [`SimOptions`].
+pub fn simulate_step_opts(
+    cluster: &Cluster,
+    cm: &CostModel,
+    strat: &ParallelStrategy,
+    opts: SimOptions,
+) -> Result<StepReport> {
+    let layers = strat
+        .pipelines
+        .iter()
+        .flat_map(|p| p.stages.iter().map(|s| s.layers.1))
+        .max()
+        .unwrap_or(0);
+    strat.validate(layers)?;
+
+    // activation checkpointing: backward recomputes the forward
+    let mut cm_eff = *cm;
+    if strat.ac {
+        cm_eff.params.ac_recompute = 2.0;
+    }
+    let cm = &cm_eff;
+
+    let mut busy: BTreeMap<Rank, (f64, f64)> = BTreeMap::new();
+    let mut pipeline_s = Vec::with_capacity(strat.pipelines.len());
+    for p in 0..strat.pipelines.len() {
+        let timings = stage_timings(cluster, cm, strat, p, opts);
+        pipeline_s.push(simulate_pipeline(strat, &timings, p, &mut busy)?);
+    }
+    let compute_span = pipeline_s.iter().copied().fold(0.0, f64::max);
+
+    let mut grad_comm: BTreeMap<Rank, f64> = BTreeMap::new();
+    let grad_sync_s = grad_sync(cluster, cm, strat, &mut grad_comm);
+    let step_s = compute_span + grad_sync_s;
+
+    let mut per_rank = BTreeMap::new();
+    for &r in &strat.ranks() {
+        let (c, m) = busy.get(&r).copied().unwrap_or((0.0, 0.0));
+        let g = grad_comm.get(&r).copied().unwrap_or(0.0);
+        let comm_s = m + g;
+        per_rank.insert(
+            r,
+            RankBreakdown {
+                compute_s: c,
+                comm_s,
+                bubble_s: (step_s - c - comm_s).max(0.0),
+            },
+        );
+    }
+    Ok(StepReport { step_s, pipeline_s, grad_sync_s, per_rank })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::ModelCfg;
+    use crate::spec::schedule::ScheduleKind;
+    use crate::strategy::{tables, uniform};
+
+    fn cm32() -> CostModel {
+        CostModel::new(ModelCfg::llama_32b())
+    }
+
+    #[test]
+    fn uniform_tp4pp4_simulates() {
+        let cluster = Cluster::h20(16);
+        let ranks: Vec<Rank> = (0..16).collect();
+        let s = uniform("tp4pp4", &ranks, 1, 4, 4, 60, 64, 1, 4096, ScheduleKind::OneFOneB, true, false)
+            .unwrap();
+        let rep = simulate_step(&cluster, &cm32(), &s).unwrap();
+        assert!(rep.step_s > 0.0);
+        assert_eq!(rep.per_rank.len(), 16);
+        // conservation: compute+comm+bubble == step for every rank
+        for (_, b) in &rep.per_rank {
+            assert!((b.total_s() - rep.step_s).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn one_f_one_b_beats_gpipe_bubble() {
+        let cluster = Cluster::h20(16);
+        let ranks: Vec<Rank> = (0..16).collect();
+        let mk = |k| {
+            uniform("x", &ranks, 1, 4, 4, 60, 64, 1, 4096, k, true, false).unwrap()
+        };
+        let t_1f1b = simulate_step(&cluster, &cm32(), &mk(ScheduleKind::OneFOneB)).unwrap().step_s;
+        let t_gpipe = simulate_step(&cluster, &cm32(), &mk(ScheduleKind::GPipe)).unwrap().step_s;
+        // both schedules have the same total work and near-identical
+        // makespan (1F1B's win is activation memory, not speed)
+        assert!(t_1f1b <= t_gpipe * 1.01, "1F1B {t_1f1b} vs GPipe {t_gpipe}");
+    }
+
+    #[test]
+    fn more_microbatches_amortize_bubble() {
+        let cluster = Cluster::h20(16);
+        let ranks: Vec<Rank> = (0..16).collect();
+        let few = uniform("few", &ranks, 1, 4, 4, 60, 4, 1, 4096, ScheduleKind::OneFOneB, true, false).unwrap();
+        let many = uniform("many", &ranks, 1, 4, 4, 60, 64, 1, 4096, ScheduleKind::OneFOneB, true, false).unwrap();
+        let t_few = simulate_step(&cluster, &cm32(), &few).unwrap();
+        let t_many = simulate_step(&cluster, &cm32(), &many).unwrap();
+        // per-sample time is better with more microbatches
+        assert!(t_many.step_s / 64.0 < t_few.step_s / 4.0);
+    }
+
+    #[test]
+    fn hetero_strategy_beats_uniform_on_hetero_cluster() {
+        // The headline claim (Fig 13): on 16 H800 + 16 H20, Hetu's
+        // heterogeneous layout beats the best uniform Megatron layout.
+        let cluster = Cluster::h800_16_h20_16();
+        let cm = cm32();
+        let hetu = tables::hetu_32b_16h800_16h20();
+        let t_hetu = simulate_step(&cluster, &cm, &hetu).unwrap().step_s;
+        // Megatron optimum from Table 4: DP2 TP4 PP4, bs2
+        let ranks: Vec<Rank> = (0..32).collect();
+        let mega = uniform("megatron", &ranks, 2, 4, 4, 60, 64, 2, 4096, ScheduleKind::OneFOneB, true, false)
+            .unwrap();
+        let t_mega = simulate_step(&cluster, &cm, &mega).unwrap().step_s;
+        assert!(
+            t_hetu < t_mega,
+            "hetu {t_hetu:.2}s should beat uniform megatron {t_mega:.2}s on hetero cluster"
+        );
+    }
+
+    #[test]
+    fn h800_heavy_stages_are_balanced() {
+        // In the hetero strategy, H800 stages hold ~3x layers; per-stage
+        // forward times should be within 2x of each other (balance).
+        let cluster = Cluster::h800_16_h20_16();
+        let cm = cm32();
+        let s = tables::hetu_32b_16h800_16h20();
+        let timings = super::stage_timings(&cluster, &cm, &s, 0, SimOptions::default());
+        let fwd: Vec<f64> = timings.iter().map(|t| t.fwd_compute).collect();
+        let max = fwd.iter().copied().fold(0.0, f64::max);
+        let min = fwd.iter().copied().fold(f64::INFINITY, f64::min);
+        assert!(max / min < 2.5, "stage fwd times {fwd:?}");
+    }
+
+    #[test]
+    fn grad_sync_zero_for_single_pipeline() {
+        let cluster = Cluster::h800_16_h20_16();
+        let s = tables::hetu_70b_16h800_16h20();
+        let cm = CostModel::new(ModelCfg::llama_70b());
+        let rep = simulate_step(&cluster, &cm, &s).unwrap();
+        assert_eq!(rep.grad_sync_s, 0.0);
+    }
+
+    #[test]
+    fn c2_step_close_to_c1() {
+        // Fig 14: losing 1 of 32 GPUs should degrade throughput by far less
+        // than the 25% a whole-node discard costs.
+        let cluster = Cluster::h20(32);
+        let cm = cm32();
+        let t1 = simulate_step(&cluster, &cm, &tables::hetu_c1_32h20()).unwrap().step_s;
+        let t2 = simulate_step(&cluster, &cm, &tables::hetu_c2_31h20()).unwrap().step_s;
+        let t3 = simulate_step(&cluster, &cm, &tables::hetu_c3_24h20()).unwrap().step_s;
+        assert!(t2 > t1, "C2 slower than C1");
+        assert!(t2 < t3, "C2 (31 GPUs) must beat C3 (24 GPUs): t2={t2:.2} t3={t3:.2}");
+    }
+}

@@ -1,0 +1,18 @@
+//! §5.3–5.4 — Progressive graph specialization.
+//!
+//! From the annotated graph, Hetu instantiates one *executable graph per
+//! device*: ops whose tensors never touch the device are pruned
+//! (**non-local operator removal**), and every CommOp is replaced by the
+//! communication operators the §4 resolver derives (**CommOp
+//! substitution**). Pipelines are then discovered from the scheduled
+//! CommOps' communication patterns (collective peers merge into a stage,
+//! P2P peers chain into successive stages), and per-stage GPipe/1F1B task
+//! schedules are emitted.
+
+pub mod instantiate;
+pub mod pipeline;
+pub mod schedule;
+
+pub use instantiate::{specialize, Action, ExecOp, ExecutableGraph, SpecReport, Specialized};
+pub use pipeline::{build_pipelines, Pipeline, PipelineSet};
+pub use schedule::{stage_schedule, PipelineSchedule, ScheduleKind, Task, TaskKind};

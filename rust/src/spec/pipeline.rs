@@ -1,0 +1,327 @@
+//! §5.4 — Pipeline construction.
+//!
+//! A *pipeline* is the minimal device set needed for complete dataflow
+//! execution. Construction starts with one pipeline per device and merges
+//! step by step from the scheduled CommOps' communication patterns:
+//! devices joined by **collective** communication merge into the same
+//! stage; **P2P** (send-receive / BSR) chains stages into successor stages.
+//! CommOps that execute only once per run (pure parameter-side transforms,
+//! e.g. Fig 9's CommOp id=1) are excluded from the analysis.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+
+use crate::comm::{CommPlan, Resolution};
+use crate::graph::{Graph, OpId, OpKind};
+use crate::hspmd::dg::Rank;
+use crate::Result;
+
+/// One pipeline: ordered stages, each a set of devices.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Pipeline {
+    /// Stages in dataflow order; each stage lists its member ranks.
+    pub stages: Vec<Vec<Rank>>,
+}
+
+impl Pipeline {
+    /// All ranks of the pipeline.
+    pub fn ranks(&self) -> Vec<Rank> {
+        self.stages.iter().flatten().copied().collect()
+    }
+
+    /// Stage index of `rank`, if a member.
+    pub fn stage_of(&self, rank: Rank) -> Option<usize> {
+        self.stages.iter().position(|s| s.contains(&rank))
+    }
+}
+
+/// All pipelines discovered in a specialized graph.
+#[derive(Clone, Debug, Default)]
+pub struct PipelineSet {
+    /// Independent pipelines (may process different microbatch counts).
+    pub pipelines: Vec<Pipeline>,
+}
+
+/// Union-find over ranks (stage merging).
+struct Uf {
+    parent: HashMap<Rank, Rank>,
+}
+
+impl Uf {
+    fn new() -> Self {
+        Uf { parent: HashMap::new() }
+    }
+    fn find(&mut self, x: Rank) -> Rank {
+        let p = *self.parent.get(&x).unwrap_or(&x);
+        if p == x {
+            x
+        } else {
+            let root = self.find(p);
+            self.parent.insert(x, root);
+            root
+        }
+    }
+    fn union(&mut self, a: Rank, b: Rank) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra != rb {
+            self.parent.insert(ra, rb);
+        }
+    }
+}
+
+/// Whether a CommOp participates in per-microbatch scheduling: true iff its
+/// input depends (transitively) on a `Placeholder` — parameter-only
+/// transforms run once and are excluded (§5.4).
+pub fn is_scheduled_comm(g: &Graph, op: OpId) -> bool {
+    fn depends_on_placeholder(g: &Graph, t: usize, memo: &mut HashMap<usize, bool>) -> bool {
+        if let Some(&v) = memo.get(&t) {
+            return v;
+        }
+        let v = match g.tensors[t].producer {
+            None => false,
+            Some(p) => match g.ops[p].kind {
+                OpKind::Placeholder => true,
+                _ => g.ops[p]
+                    .inputs
+                    .clone()
+                    .into_iter()
+                    .any(|i| depends_on_placeholder(g, i, memo)),
+            },
+        };
+        memo.insert(t, v);
+        v
+    }
+    let mut memo = HashMap::new();
+    g.ops[op].inputs.iter().any(|&t| depends_on_placeholder(g, t, &mut memo))
+}
+
+/// Build pipelines from the resolved CommOps (§5.4) under strategy `k`.
+///
+/// `resolutions` maps CommOp ids → their §4 resolutions; `all_ranks` is the
+/// full device set of the strategy (devices that never communicate form
+/// single-device pipelines).
+pub fn build_pipelines(
+    g: &Graph,
+    k: usize,
+    resolutions: &HashMap<OpId, Resolution>,
+    all_ranks: &[Rank],
+) -> Result<PipelineSet> {
+    let mut uf = Uf::new();
+    // edges between stage roots (P2P: predecessor → successor)
+    let mut edges: BTreeSet<(Rank, Rank)> = BTreeSet::new();
+
+    let merge_collective = |uf: &mut Uf, plan: &CommPlan| {
+        for leaf in plan.leaves() {
+            if let CommPlan::Collective { ops, top_tier } = leaf {
+                if *top_tier {
+                    continue; // cross-subgroup sync does not merge pipelines
+                }
+                for op in ops {
+                    for w in op.group.windows(2) {
+                        uf.union(w[0], w[1]);
+                    }
+                }
+            }
+        }
+    };
+
+    // First pass: merge collective peers into stages. TP/CP groups are
+    // joined by their activation-sync collectives (AR/RS/AG); DP replicas
+    // never share a bottom-tier collective on the activation path, so they
+    // correctly remain in separate pipelines.
+    let _ = k;
+    for (&op_id, res) in resolutions.iter() {
+        if !is_scheduled_comm(g, op_id) {
+            continue;
+        }
+        merge_collective(&mut uf, &res.plan);
+    }
+
+    // Second pass: P2P chains become stage successors.
+    for (&op_id, res) in resolutions.iter() {
+        if !is_scheduled_comm(g, op_id) {
+            continue;
+        }
+        for leaf in res.plan.leaves() {
+            let pairs: Vec<(Rank, Rank)> = match leaf {
+                CommPlan::SendRecv(ts) => ts.iter().map(|t| (t.from, t.to)).collect(),
+                CommPlan::Bsr(p) => p.transfers.iter().map(|t| (t.from, t.to)).collect(),
+                _ => vec![],
+            };
+            for (from, to) in pairs {
+                let (rf, rt) = (uf.find(from), uf.find(to));
+                if rf != rt {
+                    edges.insert((rf, rt));
+                }
+            }
+        }
+    }
+
+    // Collect stages: root → members.
+    let mut stages: BTreeMap<Rank, Vec<Rank>> = BTreeMap::new();
+    for &r in all_ranks {
+        stages.entry(uf.find(r)).or_default().push(r);
+    }
+    for members in stages.values_mut() {
+        members.sort_unstable();
+    }
+
+    // Re-root edges after all unions.
+    let edges: BTreeSet<(Rank, Rank)> = edges
+        .into_iter()
+        .map(|(a, b)| (uf.find(a), uf.find(b)))
+        .filter(|(a, b)| a != b)
+        .collect();
+
+    // Weakly-connected components of the stage graph = pipelines; order
+    // stages inside each component topologically (Kahn, deterministic).
+    let mut comp_uf = Uf::new();
+    for &(a, b) in &edges {
+        comp_uf.union(a, b);
+    }
+    let mut components: BTreeMap<Rank, Vec<Rank>> = BTreeMap::new();
+    for &root in stages.keys() {
+        components.entry(comp_uf.find(root)).or_default().push(root);
+    }
+
+    let mut pipelines = vec![];
+    for (_, mut roots) in components {
+        roots.sort_unstable();
+        // topological order by P2P edges
+        let mut indeg: BTreeMap<Rank, usize> = roots.iter().map(|&r| (r, 0)).collect();
+        for &(a, b) in &edges {
+            if indeg.contains_key(&a) && indeg.contains_key(&b) {
+                *indeg.get_mut(&b).unwrap() += 1;
+                let _ = a;
+            }
+        }
+        let mut ready: Vec<Rank> =
+            indeg.iter().filter(|&(_, &d)| d == 0).map(|(&r, _)| r).collect();
+        ready.sort_unstable();
+        let mut order = vec![];
+        while let Some(r) = ready.first().copied() {
+            ready.remove(0);
+            order.push(r);
+            for &(a, b) in &edges {
+                if a == r {
+                    if let Some(d) = indeg.get_mut(&b) {
+                        *d -= 1;
+                        if *d == 0 {
+                            ready.push(b);
+                            ready.sort_unstable();
+                        }
+                    }
+                }
+            }
+        }
+        // cycles (e.g. bidirectional P2P) — fall back to root order
+        if order.len() != roots.len() {
+            order = roots.clone();
+        }
+        pipelines.push(Pipeline {
+            stages: order.into_iter().map(|r| stages[&r].clone()).collect(),
+        });
+    }
+    Ok(PipelineSet { pipelines })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{resolve, BsrOptions, UniformBandwidth};
+    use crate::graph::{lits, DType};
+    use crate::hspmd::ds::{DUPLICATE, PARTIAL};
+    use crate::hspmd::{Annotation, DeviceGroup, DistStates};
+
+    /// Build a 2-stage TP2 pipeline graph: stage0 = {0,1} (TP pair),
+    /// stage1 = {2,3} (TP pair); activations AR within stage, SR between.
+    fn two_stage_graph() -> (Graph, HashMap<OpId, Resolution>, Vec<Rank>) {
+        let mut g = Graph::new(1);
+        let s0 = |entries: &[(i32, u32)], order: &[i32]| {
+            Annotation::spmd(DeviceGroup::range(0, 2), DistStates::new(entries, order).unwrap())
+                .unwrap()
+        };
+        let s1 = |entries: &[(i32, u32)], order: &[i32]| {
+            Annotation::spmd(DeviceGroup::range(2, 4), DistStates::new(entries, order).unwrap())
+                .unwrap()
+        };
+        let x = g
+            .placeholder("X", lits(&[8, 16]), DType::F32, vec![s0(&[(PARTIAL, 2)], &[-2])])
+            .unwrap();
+        // stage-0 TP output sync: partial -> dup on {0,1} (AllReduce)
+        let x_sync = g.comm(x, vec![s0(&[(DUPLICATE, 2)], &[-1])]).unwrap();
+        // stage boundary: scatter the activation to stage 1's TP pair (SR/BSR)
+        let x_next = g.comm(x_sync, vec![s1(&[(0, 2)], &[0])]).unwrap();
+        // stage-1 TP input gather: split -> dup on {2,3} (AllGather)
+        let x_gathered = g.comm(x_next, vec![s1(&[(DUPLICATE, 2)], &[-1])]).unwrap();
+        let _ = x_gathered;
+        let mut resolutions = HashMap::new();
+
+        crate::graph::deduce::deduce(&mut g, 0).unwrap();
+        for op in g.topo().to_vec() {
+            if matches!(op.kind, OpKind::Comm) {
+                let src = g.tensor(op.inputs[0]).annotation(0).unwrap().clone();
+                let dst = g.tensor(op.outputs[0]).annotation(0).unwrap().clone();
+                let res =
+                    resolve(&src, &dst, &[8, 16], &UniformBandwidth, BsrOptions::default())
+                        .unwrap();
+                resolutions.insert(op.id, res);
+            }
+        }
+        (g, resolutions, vec![0, 1, 2, 3])
+    }
+
+    #[test]
+    fn collective_merges_p2p_chains() {
+        let (g, res, ranks) = two_stage_graph();
+        let ps = build_pipelines(&g, 0, &res, &ranks).unwrap();
+        assert_eq!(ps.pipelines.len(), 1, "{ps:?}");
+        let p = &ps.pipelines[0];
+        assert_eq!(p.stages.len(), 2, "{p:?}");
+        assert_eq!(p.stages[0], vec![0, 1]);
+        assert_eq!(p.stages[1], vec![2, 3]);
+    }
+
+    #[test]
+    fn independent_devices_form_own_pipelines() {
+        let g = Graph::new(1);
+        let res = HashMap::new();
+        let ps = build_pipelines(&g, 0, &res, &[0, 1, 2]).unwrap();
+        assert_eq!(ps.pipelines.len(), 3);
+        assert!(ps.pipelines.iter().all(|p| p.stages.len() == 1));
+    }
+
+    #[test]
+    fn parameter_only_comm_excluded() {
+        // A parameter-side CommOp (no placeholder dependency) must not
+        // merge devices.
+        let mut g = Graph::new(1);
+        let a = Annotation::spmd(DeviceGroup::range(0, 2), DistStates::duplicate(2)).unwrap();
+        let w = g.parameter("W", lits(&[4]), DType::F32, vec![a]).unwrap();
+        let b = Annotation::spmd(DeviceGroup::range(0, 2), DistStates::split(0, 2)).unwrap();
+        let wc = g.comm(w, vec![b]).unwrap();
+        let _ = wc;
+        crate::graph::deduce::deduce(&mut g, 0).unwrap();
+        let comm_id = g
+            .topo()
+            .iter()
+            .find(|o| matches!(o.kind, OpKind::Comm))
+            .unwrap()
+            .id;
+        assert!(!is_scheduled_comm(&g, comm_id));
+        let src = g.tensor(g.ops[comm_id].inputs[0]).annotation(0).unwrap().clone();
+        let dst = g.tensor(g.ops[comm_id].outputs[0]).annotation(0).unwrap().clone();
+        let res = resolve(&src, &dst, &[4], &UniformBandwidth, BsrOptions::default()).unwrap();
+        let mut m = HashMap::new();
+        m.insert(comm_id, res);
+        let ps = build_pipelines(&g, 0, &m, &[0, 1]).unwrap();
+        assert_eq!(ps.pipelines.len(), 2);
+    }
+
+    #[test]
+    fn stage_of_lookup() {
+        let p = Pipeline { stages: vec![vec![0, 1], vec![2]] };
+        assert_eq!(p.stage_of(1), Some(0));
+        assert_eq!(p.stage_of(2), Some(1));
+        assert_eq!(p.stage_of(9), None);
+    }
+}

@@ -1,0 +1,176 @@
+//! Pipeline schedules: GPipe and 1F1B (§5.4).
+//!
+//! Hetu supports various scheduling schemes and lets independent pipelines
+//! process different numbers of micro-batches with varying sizes. The
+//! schedule here is the per-stage *task order*; actual timing (bubble
+//! structure) emerges in the simulator / engine from the cross-stage
+//! dependencies `Fwd(m, s)` ⇐ `Fwd(m, s-1)` and `Bwd(m, s)` ⇐ `Bwd(m, s+1)`.
+
+/// Scheduling scheme.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ScheduleKind {
+    /// All forwards, then all backwards (high activation memory).
+    GPipe,
+    /// One-forward-one-backward steady state (PipeDream-flush).
+    OneFOneB,
+}
+
+/// Task kind.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum TaskKind {
+    /// Forward pass of one micro-batch through this stage.
+    Fwd,
+    /// Backward pass of one micro-batch through this stage.
+    Bwd,
+}
+
+/// One scheduled task of a stage.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub struct Task {
+    /// Fwd or Bwd.
+    pub kind: TaskKind,
+    /// Micro-batch index.
+    pub microbatch: usize,
+}
+
+/// A full pipeline schedule: per-stage ordered task lists.
+#[derive(Clone, Debug)]
+pub struct PipelineSchedule {
+    /// `tasks[stage]` = ordered tasks for that stage.
+    pub tasks: Vec<Vec<Task>>,
+    /// Scheme used.
+    pub kind: ScheduleKind,
+    /// Number of micro-batches.
+    pub num_microbatches: usize,
+}
+
+/// Emit the task order for one stage.
+pub fn stage_schedule(
+    kind: ScheduleKind,
+    num_stages: usize,
+    stage: usize,
+    num_microbatches: usize,
+) -> Vec<Task> {
+    let m = num_microbatches;
+    let mut out = Vec::with_capacity(2 * m);
+    match kind {
+        ScheduleKind::GPipe => {
+            for i in 0..m {
+                out.push(Task { kind: TaskKind::Fwd, microbatch: i });
+            }
+            for i in (0..m).rev() {
+                out.push(Task { kind: TaskKind::Bwd, microbatch: i });
+            }
+        }
+        ScheduleKind::OneFOneB => {
+            // warmup forwards: deeper stages run fewer
+            let warmup = (num_stages - stage).min(m);
+            for i in 0..warmup {
+                out.push(Task { kind: TaskKind::Fwd, microbatch: i });
+            }
+            for j in 0..(m - warmup) {
+                out.push(Task { kind: TaskKind::Bwd, microbatch: j });
+                out.push(Task { kind: TaskKind::Fwd, microbatch: j + warmup });
+            }
+            for j in (m - warmup)..m {
+                out.push(Task { kind: TaskKind::Bwd, microbatch: j });
+            }
+        }
+    }
+    out
+}
+
+/// Build the full schedule for a pipeline.
+pub fn full_schedule(
+    kind: ScheduleKind,
+    num_stages: usize,
+    num_microbatches: usize,
+) -> PipelineSchedule {
+    PipelineSchedule {
+        tasks: (0..num_stages)
+            .map(|s| stage_schedule(kind, num_stages, s, num_microbatches))
+            .collect(),
+        kind,
+        num_microbatches,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counts(tasks: &[Task], m: usize) {
+        let fwd = tasks.iter().filter(|t| t.kind == TaskKind::Fwd).count();
+        let bwd = tasks.iter().filter(|t| t.kind == TaskKind::Bwd).count();
+        assert_eq!(fwd, m);
+        assert_eq!(bwd, m);
+        // each microbatch appears exactly once per kind
+        for i in 0..m {
+            assert_eq!(
+                tasks.iter().filter(|t| t.kind == TaskKind::Fwd && t.microbatch == i).count(),
+                1
+            );
+        }
+    }
+
+    #[test]
+    fn gpipe_order() {
+        let t = stage_schedule(ScheduleKind::GPipe, 4, 0, 3);
+        counts(&t, 3);
+        assert_eq!(t[0], Task { kind: TaskKind::Fwd, microbatch: 0 });
+        assert_eq!(t[3], Task { kind: TaskKind::Bwd, microbatch: 2 });
+    }
+
+    #[test]
+    fn one_f_one_b_last_stage_alternates() {
+        // last stage: warmup = 1 → F0 B0 F1 B1 ...
+        let t = stage_schedule(ScheduleKind::OneFOneB, 4, 3, 4);
+        counts(&t, 4);
+        assert_eq!(t[0], Task { kind: TaskKind::Fwd, microbatch: 0 });
+        assert_eq!(t[1], Task { kind: TaskKind::Bwd, microbatch: 0 });
+        assert_eq!(t[2], Task { kind: TaskKind::Fwd, microbatch: 1 });
+    }
+
+    #[test]
+    fn one_f_one_b_first_stage_warmup() {
+        // first of 4 stages, 8 microbatches: warmup = 4 forwards
+        let t = stage_schedule(ScheduleKind::OneFOneB, 4, 0, 8);
+        counts(&t, 8);
+        for i in 0..4 {
+            assert_eq!(t[i].kind, TaskKind::Fwd);
+        }
+        assert_eq!(t[4].kind, TaskKind::Bwd);
+    }
+
+    #[test]
+    fn warmup_capped_by_microbatches() {
+        // more stages than microbatches: warmup = m, pure GPipe-like
+        let t = stage_schedule(ScheduleKind::OneFOneB, 8, 0, 2);
+        counts(&t, 2);
+        assert_eq!(t[0].kind, TaskKind::Fwd);
+        assert_eq!(t[1].kind, TaskKind::Fwd);
+        assert_eq!(t[2].kind, TaskKind::Bwd);
+    }
+
+    #[test]
+    fn full_schedule_shape() {
+        let s = full_schedule(ScheduleKind::OneFOneB, 4, 6);
+        assert_eq!(s.tasks.len(), 4);
+        for st in &s.tasks {
+            counts(st, 6);
+        }
+    }
+
+    #[test]
+    fn bwd_fifo_in_1f1b() {
+        let t = stage_schedule(ScheduleKind::OneFOneB, 4, 1, 6);
+        let bwds: Vec<usize> = t
+            .iter()
+            .filter(|x| x.kind == TaskKind::Bwd)
+            .map(|x| x.microbatch)
+            .collect();
+        let mut sorted = bwds.clone();
+        sorted.sort_unstable();
+        assert_eq!(bwds, sorted, "1F1B backwards complete in FIFO order");
+    }
+}

@@ -1,0 +1,149 @@
+//! Per-device memory planning.
+//!
+//! A faithful account of what bounds the paper's strategy choices: weights
+//! + gradients + optimizer states (ZeRO-sharded or not, App. A: disabling
+//! ZeRO-1 for fault tolerance costs ~15% because the memory headroom
+//! shrinks) + activations under the schedule's liveness profile (1F1B keeps
+//! ≤ `num_stages − stage` micro-batches resident; GPipe keeps all of them).
+
+use crate::cluster::Cluster;
+use crate::costmodel::CostModel;
+use crate::strategy::ParallelStrategy;
+
+/// Memory breakdown for one stage's devices (GiB).
+#[derive(Clone, Copy, Debug)]
+pub struct StageMemory {
+    /// bf16 weights.
+    pub weights_gib: f64,
+    /// bf16 gradients.
+    pub grads_gib: f64,
+    /// fp32 master + Adam moments (ZeRO-sharded if enabled).
+    pub optimizer_gib: f64,
+    /// Activations at peak liveness.
+    pub activations_gib: f64,
+}
+
+impl StageMemory {
+    /// Total GiB.
+    pub fn total_gib(&self) -> f64 {
+        self.weights_gib + self.grads_gib + self.optimizer_gib + self.activations_gib
+    }
+}
+
+/// Peak resident micro-batches for a stage under the schedule.
+pub fn resident_microbatches(
+    schedule: crate::spec::schedule::ScheduleKind,
+    num_stages: usize,
+    stage: usize,
+    num_microbatches: u32,
+) -> u32 {
+    match schedule {
+        crate::spec::schedule::ScheduleKind::GPipe => num_microbatches,
+        crate::spec::schedule::ScheduleKind::OneFOneB => {
+            ((num_stages - stage) as u32).min(num_microbatches)
+        }
+    }
+}
+
+/// Memory breakdown of pipeline `p`, stage `s` of a strategy.
+pub fn stage_memory(cm: &CostModel, strat: &ParallelStrategy, p: usize, s: usize) -> StageMemory {
+    let pipe = &strat.pipelines[p];
+    let stage = &pipe.stages[s];
+    let params = cm.model.params_per_layer() as f64 * stage.num_layers() as f64 / stage.tp() as f64;
+    let zero_dp = if strat.zero1 { strat.pipelines.len().max(1) as f64 } else { 1.0 };
+    let tokens_mb = pipe.microbatch_size as u64 * strat.seq_len;
+    let resident =
+        resident_microbatches(strat.schedule, pipe.stages.len(), s, pipe.num_microbatches);
+    let act_per_token = if strat.ac { 2.0 } else { 34.0 } * cm.model.hidden as f64
+        / stage.tp() as f64;
+    let gib = (1u64 << 30) as f64;
+    StageMemory {
+        weights_gib: 2.0 * params / gib,
+        grads_gib: 2.0 * params / gib,
+        optimizer_gib: 12.0 * params / zero_dp / gib,
+        activations_gib: act_per_token * tokens_mb as f64 * stage.num_layers() as f64
+            * resident as f64
+            / gib,
+    }
+}
+
+/// The strategy's peak per-device memory and whether it fits the cluster.
+pub fn plan(cm: &CostModel, cluster: &Cluster, strat: &ParallelStrategy) -> (f64, bool) {
+    let mut peak = 0f64;
+    let mut fits = true;
+    for (pi, p) in strat.pipelines.iter().enumerate() {
+        for (si, s) in p.stages.iter().enumerate() {
+            let m = stage_memory(cm, strat, pi, si).total_gib();
+            peak = peak.max(m);
+            let have = s
+                .ranks
+                .iter()
+                .map(|&r| cluster.device(r).kind.mem_gib)
+                .fold(f64::INFINITY, f64::min);
+            if m > have {
+                fits = false;
+            }
+        }
+    }
+    (peak, fits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::ModelCfg;
+    use crate::spec::schedule::ScheduleKind;
+    use crate::strategy::{tables, uniform};
+
+    #[test]
+    fn one_f_one_b_caps_activation_liveness() {
+        assert_eq!(resident_microbatches(ScheduleKind::OneFOneB, 4, 0, 32), 4);
+        assert_eq!(resident_microbatches(ScheduleKind::OneFOneB, 4, 3, 32), 1);
+        assert_eq!(resident_microbatches(ScheduleKind::GPipe, 4, 0, 32), 32);
+    }
+
+    #[test]
+    fn gpipe_needs_more_activation_memory_than_1f1b() {
+        let cm = CostModel::new(ModelCfg::llama_32b());
+        let ranks: Vec<u32> = (0..16).collect();
+        let mut s =
+            uniform("x", &ranks, 1, 4, 4, 60, 32, 1, 4096, ScheduleKind::OneFOneB, true, false)
+                .unwrap();
+        let m_1f1b = stage_memory(&cm, &s, 0, 0);
+        s.schedule = ScheduleKind::GPipe;
+        let m_gpipe = stage_memory(&cm, &s, 0, 0);
+        assert!(m_gpipe.activations_gib > 4.0 * m_1f1b.activations_gib);
+    }
+
+    #[test]
+    fn zero1_shards_optimizer_states() {
+        let cm = CostModel::new(ModelCfg::llama_32b());
+        let mut c1 = tables::hetu_c1_32h20();
+        let m_off = stage_memory(&cm, &c1, 0, 0);
+        c1.zero1 = true;
+        let m_on = stage_memory(&cm, &c1, 0, 0);
+        assert!(m_on.optimizer_gib < m_off.optimizer_gib);
+        assert_eq!(m_on.weights_gib, m_off.weights_gib);
+    }
+
+    #[test]
+    fn paper_strategies_fit_their_devices() {
+        let cm = CostModel::new(ModelCfg::llama_32b());
+        let cluster = Cluster::h20(32);
+        for s in [tables::hetu_c1_32h20(), tables::hetu_c2_31h20(), tables::hetu_c3_24h20()] {
+            let (peak, fits) = plan(&cm, &cluster, &s);
+            assert!(fits, "{} peak {peak:.1} GiB must fit 96 GiB H20s", s.name);
+        }
+    }
+
+    #[test]
+    fn whole_32b_on_one_gpu_does_not_fit() {
+        let cm = CostModel::new(ModelCfg::llama_32b());
+        let cluster = Cluster::h20(1);
+        let ranks = vec![0u32];
+        let s = uniform("solo", &ranks, 1, 1, 1, 60, 1, 1, 4096, ScheduleKind::OneFOneB, false, true)
+            .unwrap();
+        let (_, fits) = plan(&cm, &cluster, &s);
+        assert!(!fits);
+    }
+}

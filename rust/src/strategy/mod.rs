@@ -1,0 +1,321 @@
+//! Parallel strategy specifications.
+//!
+//! A [`ParallelStrategy`] is the coarse, human-readable form of the
+//! Appendix-A tables: a set of pipelines, each a chain of stages, each
+//! stage a TP group of ranks owning a contiguous layer range. Strategies
+//! lower to HSPMD annotations ([`ParallelStrategy::weight_annotation`]) for
+//! switch planning, and are evaluated by the [`crate::sim`] discrete-event
+//! simulator.
+
+pub mod generate;
+pub mod memory;
+pub mod search;
+pub mod tables;
+
+use crate::hspmd::dg::Rank;
+use crate::hspmd::{Annotation, DeviceGroup, DistStates, Subgroup};
+use crate::spec::schedule::ScheduleKind;
+use crate::{Error, Result};
+
+/// One pipeline stage: a TP group holding a contiguous layer range.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageSpec {
+    /// Member ranks (TP group; degree = `ranks.len()`).
+    pub ranks: Vec<Rank>,
+    /// Layer range `[lo, hi)`.
+    pub layers: (u32, u32),
+}
+
+impl StageSpec {
+    /// Convenience constructor from inclusive rank/layer bounds (the
+    /// notation of the paper's tables: "R16-19 / L0-6").
+    pub fn r_l(r_lo: Rank, r_hi: Rank, l_lo: u32, l_hi: u32) -> StageSpec {
+        StageSpec { ranks: (r_lo..=r_hi).collect(), layers: (l_lo, l_hi + 1) }
+    }
+
+    /// Tensor-parallel degree.
+    pub fn tp(&self) -> u32 {
+        self.ranks.len() as u32
+    }
+
+    /// Number of layers.
+    pub fn num_layers(&self) -> u32 {
+        self.layers.1 - self.layers.0
+    }
+}
+
+/// One pipeline: ordered stages plus its micro-batching.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PipelineSpec {
+    /// Stages in order.
+    pub stages: Vec<StageSpec>,
+    /// Number of micro-batches this pipeline processes per step.
+    pub num_microbatches: u32,
+    /// Micro-batch size (samples).
+    pub microbatch_size: u32,
+}
+
+impl PipelineSpec {
+    /// All ranks in the pipeline.
+    pub fn ranks(&self) -> Vec<Rank> {
+        self.stages.iter().flat_map(|s| s.ranks.iter().copied()).collect()
+    }
+
+    /// Samples processed per step.
+    pub fn samples(&self) -> u64 {
+        self.num_microbatches as u64 * self.microbatch_size as u64
+    }
+}
+
+/// A complete parallel strategy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParallelStrategy {
+    /// Human-readable name ("C2", "32B 16H800+32H20", …).
+    pub name: String,
+    /// Pipelines (data parallelism across them).
+    pub pipelines: Vec<PipelineSpec>,
+    /// ZeRO-1 optimizer-state sharding across data parallelism.
+    pub zero1: bool,
+    /// Pipeline schedule.
+    pub schedule: ScheduleKind,
+    /// Sequence length per sample.
+    pub seq_len: u64,
+    /// Activation checkpointing.
+    pub ac: bool,
+}
+
+impl ParallelStrategy {
+    /// Validate: each pipeline's stages cover `[0, layers)` contiguously,
+    /// ranks are globally disjoint, every pipeline has ≥1 micro-batch.
+    pub fn validate(&self, layers: u32) -> Result<()> {
+        let mut seen = std::collections::BTreeSet::new();
+        for (pi, p) in self.pipelines.iter().enumerate() {
+            if p.num_microbatches == 0 || p.microbatch_size == 0 {
+                return Err(Error::Strategy(format!("pipeline {pi}: zero micro-batches")));
+            }
+            let mut next = 0u32;
+            for (si, s) in p.stages.iter().enumerate() {
+                if s.layers.0 != next {
+                    return Err(Error::Strategy(format!(
+                        "pipeline {pi} stage {si}: layers start at {} expected {next}",
+                        s.layers.0
+                    )));
+                }
+                if s.layers.1 <= s.layers.0 {
+                    return Err(Error::Strategy(format!("pipeline {pi} stage {si}: empty layers")));
+                }
+                next = s.layers.1;
+                if s.ranks.is_empty() {
+                    return Err(Error::Strategy(format!("pipeline {pi} stage {si}: no ranks")));
+                }
+                for &r in &s.ranks {
+                    if !seen.insert(r) {
+                        return Err(Error::Strategy(format!("rank {r} used twice")));
+                    }
+                }
+            }
+            if next != layers {
+                return Err(Error::Strategy(format!(
+                    "pipeline {pi} covers {next} of {layers} layers"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// All ranks used by the strategy.
+    pub fn ranks(&self) -> Vec<Rank> {
+        let mut v: Vec<Rank> = self.pipelines.iter().flat_map(|p| p.ranks()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Total samples per step (global batch).
+    pub fn global_batch(&self) -> u64 {
+        self.pipelines.iter().map(|p| p.samples()).sum()
+    }
+
+    /// Stages (across pipelines) holding layer `l`.
+    pub fn holders_of_layer(&self, l: u32) -> Vec<&StageSpec> {
+        self.pipelines
+            .iter()
+            .flat_map(|p| p.stages.iter())
+            .filter(|s| s.layers.0 <= l && l < s.layers.1)
+            .collect()
+    }
+
+    /// The HSPMD annotation of one layer's weight matrix under this
+    /// strategy: every pipeline that holds layer `l` contributes a sharding
+    /// subgroup (TP split along `tp_dim`), and subgroups replicate the
+    /// weight across pipelines (`HDim = -1`, data parallelism).
+    pub fn weight_annotation(&self, l: u32, tp_dim: u32) -> Result<Annotation> {
+        let mut groups = vec![];
+        for s in self.holders_of_layer(l) {
+            let dg = DeviceGroup::new(s.ranks.clone())?;
+            let ds = DistStates::split(tp_dim, s.tp());
+            groups.push(Subgroup::new(dg, ds)?);
+        }
+        if groups.is_empty() {
+            return Err(Error::Strategy(format!("no stage holds layer {l}")));
+        }
+        Annotation::new(groups, crate::hspmd::ds::DUPLICATE)
+    }
+
+    /// Compact description (for reports).
+    pub fn describe(&self) -> String {
+        let pipes: Vec<String> = self
+            .pipelines
+            .iter()
+            .map(|p| {
+                let st: Vec<String> = p
+                    .stages
+                    .iter()
+                    .map(|s| {
+                        format!(
+                            "R{}-{}·L{}-{}",
+                            s.ranks.first().unwrap(),
+                            s.ranks.last().unwrap(),
+                            s.layers.0,
+                            s.layers.1 - 1
+                        )
+                    })
+                    .collect();
+                format!("{}×bs{} [{}]", p.num_microbatches, p.microbatch_size, st.join(" | "))
+            })
+            .collect();
+        format!("{}: {}", self.name, pipes.join(" ;; "))
+    }
+}
+
+/// Build a *uniform* strategy (the Megatron/DeepSpeed shape): `dp` identical
+/// pipelines of `pp` stages × `tp` ranks, ranks assigned contiguously from
+/// `ranks`, layers split evenly.
+pub fn uniform(
+    name: &str,
+    ranks: &[Rank],
+    dp: u32,
+    tp: u32,
+    pp: u32,
+    layers: u32,
+    global_batch: u64,
+    microbatch_size: u32,
+    seq_len: u64,
+    schedule: ScheduleKind,
+    zero1: bool,
+    ac: bool,
+) -> Result<ParallelStrategy> {
+    let need = (dp * tp * pp) as usize;
+    if ranks.len() < need {
+        return Err(Error::Strategy(format!(
+            "uniform {name}: need {need} ranks, have {}",
+            ranks.len()
+        )));
+    }
+    let per_dp = global_batch / dp as u64;
+    let num_mb = (per_dp / microbatch_size as u64).max(1) as u32;
+    let mut pipelines = vec![];
+    let mut idx = 0usize;
+    for _ in 0..dp {
+        let mut stages = vec![];
+        let mut l = 0u32;
+        for s in 0..pp {
+            let hi = layers * (s + 1) / pp;
+            stages.push(StageSpec {
+                ranks: ranks[idx..idx + tp as usize].to_vec(),
+                layers: (l, hi),
+            });
+            idx += tp as usize;
+            l = hi;
+        }
+        pipelines.push(PipelineSpec { stages, num_microbatches: num_mb, microbatch_size });
+    }
+    Ok(ParallelStrategy {
+        name: name.to_string(),
+        pipelines,
+        zero1,
+        schedule,
+        seq_len,
+        ac,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_constructs_and_validates() {
+        let ranks: Vec<Rank> = (0..32).collect();
+        let s = uniform("dp2tp4pp4", &ranks, 2, 4, 4, 60, 64, 2, 4096, ScheduleKind::OneFOneB, true, false)
+            .unwrap();
+        s.validate(60).unwrap();
+        assert_eq!(s.pipelines.len(), 2);
+        assert_eq!(s.pipelines[0].stages.len(), 4);
+        assert_eq!(s.global_batch(), 64);
+        assert_eq!(s.ranks().len(), 32);
+    }
+
+    #[test]
+    fn validation_catches_gaps() {
+        let s = ParallelStrategy {
+            name: "bad".into(),
+            pipelines: vec![PipelineSpec {
+                stages: vec![StageSpec::r_l(0, 3, 0, 29), StageSpec::r_l(4, 7, 31, 59)],
+                num_microbatches: 4,
+                microbatch_size: 1,
+            }],
+            zero1: false,
+            schedule: ScheduleKind::OneFOneB,
+            seq_len: 4096,
+            ac: false,
+        };
+        assert!(s.validate(60).is_err());
+    }
+
+    #[test]
+    fn validation_catches_rank_reuse() {
+        let s = ParallelStrategy {
+            name: "bad".into(),
+            pipelines: vec![
+                PipelineSpec {
+                    stages: vec![StageSpec::r_l(0, 3, 0, 59)],
+                    num_microbatches: 4,
+                    microbatch_size: 1,
+                },
+                PipelineSpec {
+                    stages: vec![StageSpec::r_l(3, 6, 0, 59)],
+                    num_microbatches: 4,
+                    microbatch_size: 1,
+                },
+            ],
+            zero1: false,
+            schedule: ScheduleKind::OneFOneB,
+            seq_len: 4096,
+            ac: false,
+        };
+        assert!(s.validate(60).is_err());
+    }
+
+    #[test]
+    fn weight_annotation_spans_pipelines() {
+        let ranks: Vec<Rank> = (0..16).collect();
+        let s = uniform("dp2tp4pp2", &ranks, 2, 4, 2, 60, 64, 2, 4096, ScheduleKind::OneFOneB, true, false)
+            .unwrap();
+        let ann = s.weight_annotation(0, 0).unwrap();
+        assert_eq!(ann.hsize(), 2); // two pipelines hold layer 0
+        assert_eq!(ann.hdim, crate::hspmd::ds::DUPLICATE);
+        assert_eq!(ann.groups[0].ds.shards(0), 4);
+        // heterogeneous second stage holds layer 59
+        let ann59 = s.weight_annotation(59, 0).unwrap();
+        assert_eq!(ann59.groups[0].dg.ranks(), &[4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn stage_shorthand_is_inclusive() {
+        let st = StageSpec::r_l(16, 19, 0, 6);
+        assert_eq!(st.ranks, vec![16, 17, 18, 19]);
+        assert_eq!(st.layers, (0, 7));
+        assert_eq!(st.tp(), 4);
+        assert_eq!(st.num_layers(), 7);
+    }
+}

@@ -1,0 +1,89 @@
+//! Cost-model-driven strategy selection.
+//!
+//! The paper selects strategies "using pre-profiled results combined with a
+//! cost model" (App. A.3). We reproduce that: candidate strategies are
+//! filtered by per-device memory feasibility and ranked by simulated step
+//! time.
+
+use crate::cluster::Cluster;
+use crate::costmodel::CostModel;
+use crate::sim::simulate_step;
+use crate::strategy::ParallelStrategy;
+use crate::{Error, Result};
+
+/// Check every stage of `strat` fits its devices' memory (delegates to the
+/// per-stage planner in [`crate::strategy::memory`], which models schedule-
+/// dependent activation liveness).
+pub fn memory_feasible(cluster: &Cluster, cm: &CostModel, strat: &ParallelStrategy) -> bool {
+    crate::strategy::memory::plan(cm, cluster, strat).1
+}
+
+/// Pick the memory-feasible candidate with the lowest simulated step time.
+pub fn choose_best(
+    cluster: &Cluster,
+    cm: &CostModel,
+    candidates: &[ParallelStrategy],
+) -> Result<(ParallelStrategy, f64)> {
+    let mut best: Option<(ParallelStrategy, f64)> = None;
+    for c in candidates {
+        if !memory_feasible(cluster, cm, c) {
+            continue;
+        }
+        // strategies must only use alive devices
+        let alive = cluster.alive_ranks();
+        if !c.ranks().iter().all(|r| alive.contains(r)) {
+            continue;
+        }
+        let t = match simulate_step(cluster, cm, c) {
+            Ok(rep) => rep.step_s,
+            Err(_) => continue,
+        };
+        if best.as_ref().map(|(_, bt)| t < *bt).unwrap_or(true) {
+            best = Some((c.clone(), t));
+        }
+    }
+    best.ok_or_else(|| Error::Strategy("no feasible candidate strategy".into()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::ModelCfg;
+    use crate::spec::schedule::ScheduleKind;
+    use crate::strategy::{tables, uniform};
+
+    #[test]
+    fn infeasible_strategies_filtered() {
+        // 32B on a single H20: cannot fit.
+        let cluster = Cluster::h20(1);
+        let cm = CostModel::new(ModelCfg::llama_32b());
+        let s = uniform("solo", &[0], 1, 1, 1, 60, 1, 1, 4096, ScheduleKind::OneFOneB, false, true)
+            .unwrap();
+        assert!(!memory_feasible(&cluster, &cm, &s));
+        assert!(choose_best(&cluster, &cm, &[s]).is_err());
+    }
+
+    #[test]
+    fn chooser_prefers_faster_strategy() {
+        let cluster = Cluster::h20(32);
+        let cm = CostModel::new(ModelCfg::llama_32b());
+        let ranks: Vec<u32> = (0..32).collect();
+        let good = tables::hetu_c1_32h20();
+        let bad = uniform("tp32", &ranks, 1, 32, 1, 60, 64, 1, 4096, ScheduleKind::OneFOneB, false, false)
+            .unwrap();
+        let (best, t) = choose_best(&cluster, &cm, &[bad, good.clone()]).unwrap();
+        assert_eq!(best.name, good.name);
+        assert!(t > 0.0);
+    }
+
+    #[test]
+    fn dead_ranks_disqualify() {
+        let mut cluster = Cluster::h20(32);
+        cluster.fail_gpu(31);
+        let cm = CostModel::new(ModelCfg::llama_32b());
+        let c1 = tables::hetu_c1_32h20(); // uses rank 31
+        let c2 = tables::hetu_c2_31h20();
+        let (best, _) = choose_best(&cluster, &cm, &[c1, c2.clone()]).unwrap();
+        assert_eq!(best.name, c2.name);
+    }
+}

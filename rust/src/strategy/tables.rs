@@ -1,0 +1,521 @@
+//! Appendix-A strategy tables, encoded.
+//!
+//! Every Hetu strategy the paper reports (Tables 5, 7, 8, 11, 12) is
+//! reproduced here as a constructor. Rank numbering follows the paper:
+//! in heterogeneous clusters ranks 0–15 are H800 and 16–47 are H20; in the
+//! homogeneous (mixed-length / elastic C1–C3) experiments all ranks are H20.
+
+use super::{ParallelStrategy, PipelineSpec, StageSpec};
+use crate::spec::schedule::ScheduleKind;
+
+fn strat(name: &str, pipelines: Vec<PipelineSpec>, zero1: bool, seq: u64) -> ParallelStrategy {
+    ParallelStrategy {
+        name: name.to_string(),
+        pipelines,
+        zero1,
+        schedule: ScheduleKind::OneFOneB,
+        seq_len: seq,
+        ac: false,
+    }
+}
+
+fn pipe(stages: Vec<StageSpec>, num_mb: u32, bs: u32) -> PipelineSpec {
+    PipelineSpec { stages, num_microbatches: num_mb, microbatch_size: bs }
+}
+
+// ---------------------------------------------------------------- Table 5
+
+/// Table 5 — 32B on 16 H800 + 16 H20 (two 4.5-stage pipelines, 32×bs1).
+pub fn hetu_32b_16h800_16h20() -> ParallelStrategy {
+    strat(
+        "hetu-32b-16h800-16h20",
+        vec![
+            pipe(
+                vec![
+                    StageSpec::r_l(16, 19, 0, 6),
+                    StageSpec::r_l(20, 23, 7, 13),
+                    StageSpec::r_l(0, 3, 14, 36),
+                    StageSpec::r_l(4, 7, 37, 59),
+                ],
+                32,
+                1,
+            ),
+            pipe(
+                vec![
+                    StageSpec::r_l(24, 27, 0, 6),
+                    StageSpec::r_l(28, 31, 7, 13),
+                    StageSpec::r_l(8, 11, 14, 36),
+                    StageSpec::r_l(12, 15, 37, 59),
+                ],
+                32,
+                1,
+            ),
+        ],
+        true,
+        4096,
+    )
+}
+
+/// Table 5 — 32B on 16 H800 + 24 H20 (two 5.5-stage pipelines, 32×bs1).
+pub fn hetu_32b_16h800_24h20() -> ParallelStrategy {
+    strat(
+        "hetu-32b-16h800-24h20",
+        vec![
+            pipe(
+                vec![
+                    StageSpec::r_l(16, 19, 0, 5),
+                    StageSpec::r_l(20, 23, 6, 11),
+                    StageSpec::r_l(24, 27, 12, 17),
+                    StageSpec::r_l(0, 3, 18, 38),
+                    StageSpec::r_l(4, 7, 39, 59),
+                ],
+                32,
+                1,
+            ),
+            pipe(
+                vec![
+                    StageSpec::r_l(28, 31, 0, 5),
+                    StageSpec::r_l(32, 35, 6, 11),
+                    StageSpec::r_l(36, 39, 12, 17),
+                    StageSpec::r_l(8, 11, 18, 38),
+                    StageSpec::r_l(12, 15, 39, 59),
+                ],
+                32,
+                1,
+            ),
+        ],
+        true,
+        4096,
+    )
+}
+
+/// Table 5 — 32B on 16 H800 + 32 H20 (four 3-stage pipelines, 16×bs1).
+pub fn hetu_32b_16h800_32h20() -> ParallelStrategy {
+    let mk = |h20a: u32, h20b: u32, h800: u32| {
+        pipe(
+            vec![
+                StageSpec::r_l(h20a, h20a + 3, 0, 10),
+                StageSpec::r_l(h20b, h20b + 3, 11, 21),
+                StageSpec::r_l(h800, h800 + 3, 22, 59),
+            ],
+            16,
+            1,
+        )
+    };
+    strat(
+        "hetu-32b-16h800-32h20",
+        vec![mk(16, 20, 0), mk(24, 28, 4), mk(32, 36, 8), mk(40, 44, 12)],
+        true,
+        4096,
+    )
+}
+
+/// Table 5 — 70B on 16 H800 + 16 H20 (one 4-stage TP8 pipeline, 64×bs1).
+pub fn hetu_70b_16h800_16h20() -> ParallelStrategy {
+    strat(
+        "hetu-70b-16h800-16h20",
+        vec![pipe(
+            vec![
+                StageSpec::r_l(16, 23, 0, 10),
+                StageSpec::r_l(24, 31, 11, 21),
+                StageSpec::r_l(0, 7, 22, 50),
+                StageSpec::r_l(8, 15, 51, 79),
+            ],
+            64,
+            1,
+        )],
+        true,
+        4096,
+    )
+}
+
+/// Table 5 — 70B on 16 H800 + 24 H20 (one 5-stage TP8 pipeline, 64×bs1).
+pub fn hetu_70b_16h800_24h20() -> ParallelStrategy {
+    strat(
+        "hetu-70b-16h800-24h20",
+        vec![pipe(
+            vec![
+                StageSpec::r_l(16, 23, 0, 9),
+                StageSpec::r_l(24, 31, 10, 19),
+                StageSpec::r_l(32, 39, 20, 29),
+                StageSpec::r_l(0, 7, 30, 54),
+                StageSpec::r_l(8, 15, 55, 79),
+            ],
+            64,
+            1,
+        )],
+        true,
+        4096,
+    )
+}
+
+/// Table 5 — 70B on 16 H800 + 32 H20 (two 3-stage TP8 pipelines, 32×bs1).
+pub fn hetu_70b_16h800_32h20() -> ParallelStrategy {
+    strat(
+        "hetu-70b-16h800-32h20",
+        vec![
+            pipe(
+                vec![
+                    StageSpec::r_l(16, 23, 0, 16),
+                    StageSpec::r_l(24, 31, 17, 33),
+                    StageSpec::r_l(0, 7, 34, 79),
+                ],
+                32,
+                1,
+            ),
+            pipe(
+                vec![
+                    StageSpec::r_l(32, 39, 0, 16),
+                    StageSpec::r_l(40, 47, 17, 33),
+                    StageSpec::r_l(8, 15, 34, 79),
+                ],
+                32,
+                1,
+            ),
+        ],
+        true,
+        4096,
+    )
+}
+
+// ---------------------------------------------------------------- Table 7
+
+/// Table 7 — C1: 32 H20, two 4-stage TP4 pipelines, 16×bs2. ZeRO-1 disabled
+/// for restart-free fault tolerance (§7.2).
+pub fn hetu_c1_32h20() -> ParallelStrategy {
+    let mk = |base: u32| {
+        pipe(
+            vec![
+                StageSpec::r_l(base, base + 3, 0, 14),
+                StageSpec::r_l(base + 4, base + 7, 15, 29),
+                StageSpec::r_l(base + 8, base + 11, 30, 44),
+                StageSpec::r_l(base + 12, base + 15, 45, 59),
+            ],
+            16,
+            2,
+        )
+    };
+    strat("C1", vec![mk(0), mk(16)], false, 4096)
+}
+
+/// Table 7 — C2: 31 H20 (rank 31 failed): a 4-stage pipeline (33×bs1) plus
+/// an asymmetric 5-stage pipeline ending in a 2-GPU and a 1-GPU stage
+/// (31×bs1).
+pub fn hetu_c2_31h20() -> ParallelStrategy {
+    strat(
+        "C2",
+        vec![
+            pipe(
+                vec![
+                    StageSpec::r_l(0, 3, 0, 14),
+                    StageSpec::r_l(4, 7, 15, 29),
+                    StageSpec::r_l(8, 11, 30, 44),
+                    StageSpec::r_l(12, 15, 45, 59),
+                ],
+                33,
+                1,
+            ),
+            pipe(
+                vec![
+                    StageSpec::r_l(16, 19, 0, 15),
+                    StageSpec::r_l(20, 23, 16, 31),
+                    StageSpec::r_l(24, 27, 32, 47),
+                    StageSpec::r_l(28, 29, 48, 55),
+                    StageSpec::r_l(30, 30, 56, 59),
+                ],
+                31,
+                1,
+            ),
+        ],
+        false,
+        4096,
+    )
+}
+
+/// Table 7 — C3: 24 H20, two 3-stage TP4 pipelines, 32×bs1.
+pub fn hetu_c3_24h20() -> ParallelStrategy {
+    let mk = |base: u32| {
+        pipe(
+            vec![
+                StageSpec::r_l(base, base + 3, 0, 19),
+                StageSpec::r_l(base + 4, base + 7, 20, 39),
+                StageSpec::r_l(base + 8, base + 11, 40, 59),
+            ],
+            32,
+            1,
+        )
+    };
+    strat("C3", vec![mk(0), mk(12)], false, 4096)
+}
+
+// ---------------------------------------------------------------- Table 8
+
+/// Table 8 — C4: 16 H800 + 32 H20, two 6-stage pipelines, 32×bs1.
+pub fn hetu_c4() -> ParallelStrategy {
+    strat(
+        "C4",
+        vec![
+            pipe(
+                vec![
+                    StageSpec::r_l(16, 19, 0, 4),
+                    StageSpec::r_l(20, 23, 5, 10),
+                    StageSpec::r_l(24, 27, 11, 16),
+                    StageSpec::r_l(28, 31, 17, 22),
+                    StageSpec::r_l(0, 3, 23, 40),
+                    StageSpec::r_l(4, 7, 41, 59),
+                ],
+                32,
+                1,
+            ),
+            pipe(
+                vec![
+                    StageSpec::r_l(32, 35, 0, 4),
+                    StageSpec::r_l(36, 39, 5, 10),
+                    StageSpec::r_l(40, 43, 11, 16),
+                    StageSpec::r_l(44, 47, 17, 22),
+                    StageSpec::r_l(8, 11, 23, 40),
+                    StageSpec::r_l(12, 15, 41, 59),
+                ],
+                32,
+                1,
+            ),
+        ],
+        false,
+        4096,
+    )
+}
+
+/// Table 8 — C5: 16 H800 + 24 H20, two 5-stage pipelines, 32×bs1.
+pub fn hetu_c5() -> ParallelStrategy {
+    strat(
+        "C5",
+        vec![
+            pipe(
+                vec![
+                    StageSpec::r_l(16, 19, 0, 5),
+                    StageSpec::r_l(20, 23, 6, 11),
+                    StageSpec::r_l(24, 27, 12, 17),
+                    StageSpec::r_l(0, 3, 18, 38),
+                    StageSpec::r_l(4, 7, 39, 59),
+                ],
+                32,
+                1,
+            ),
+            pipe(
+                vec![
+                    StageSpec::r_l(28, 31, 0, 5),
+                    StageSpec::r_l(32, 35, 6, 11),
+                    StageSpec::r_l(36, 39, 12, 17),
+                    StageSpec::r_l(8, 11, 18, 38),
+                    StageSpec::r_l(12, 15, 39, 59),
+                ],
+                32,
+                1,
+            ),
+        ],
+        false,
+        4096,
+    )
+}
+
+/// Table 8 — C6: 15 H800 + 24 H20 (rank 15 failed): a 5-stage pipeline
+/// (33×bs1) plus a 6-stage pipeline whose tail degrades to 2- and 1-GPU
+/// stages (31×bs1).
+pub fn hetu_c6() -> ParallelStrategy {
+    strat(
+        "C6",
+        vec![
+            pipe(
+                vec![
+                    StageSpec::r_l(16, 19, 0, 5),
+                    StageSpec::r_l(20, 23, 6, 11),
+                    StageSpec::r_l(24, 27, 12, 17),
+                    StageSpec::r_l(0, 3, 18, 38),
+                    StageSpec::r_l(4, 7, 39, 59),
+                ],
+                33,
+                1,
+            ),
+            pipe(
+                vec![
+                    StageSpec::r_l(28, 31, 0, 5),
+                    StageSpec::r_l(32, 35, 6, 11),
+                    StageSpec::r_l(36, 39, 12, 17),
+                    StageSpec::r_l(8, 11, 18, 39),
+                    StageSpec::r_l(12, 13, 40, 52),
+                    StageSpec::r_l(14, 14, 53, 59),
+                ],
+                31,
+                1,
+            ),
+        ],
+        false,
+        4096,
+    )
+}
+
+/// Table 8 — C7: 8 H800 + 24 H20 (node 1 failed), two 4-stage pipelines,
+/// 32×bs1.
+pub fn hetu_c7() -> ParallelStrategy {
+    strat(
+        "C7",
+        vec![
+            pipe(
+                vec![
+                    StageSpec::r_l(16, 19, 0, 8),
+                    StageSpec::r_l(20, 23, 9, 18),
+                    StageSpec::r_l(24, 27, 19, 28),
+                    StageSpec::r_l(0, 3, 29, 59),
+                ],
+                32,
+                1,
+            ),
+            pipe(
+                vec![
+                    StageSpec::r_l(28, 31, 0, 8),
+                    StageSpec::r_l(32, 35, 9, 18),
+                    StageSpec::r_l(36, 39, 19, 28),
+                    StageSpec::r_l(4, 7, 29, 59),
+                ],
+                32,
+                1,
+            ),
+        ],
+        false,
+        4096,
+    )
+}
+
+// ----------------------------------------------------- Tables 11/12 (Hetu-B)
+
+/// Table 11 — Hetu-B Strategy 1 (32K ctx, MaxSeqLen ∈ (16K, 32K]): one
+/// TP16 long-sequence pipeline (R0–15) + four TP4 short-sequence pipelines.
+/// Micro-batch counts are bound at dispatch time; the defaults here carry a
+/// placeholder of 1 (callers override per step).
+pub fn hetu_b_32k_strategy1(seq: u64) -> ParallelStrategy {
+    let mut pipelines = vec![pipe(vec![StageSpec::r_l(0, 15, 0, 59)], 1, 1)];
+    for base in [16u32, 20, 24, 28] {
+        pipelines.push(pipe(vec![StageSpec::r_l(base, base + 3, 0, 59)], 1, 1));
+    }
+    strat("hetu-b-32k-s1", pipelines, true, seq)
+}
+
+/// Table 11 — Hetu-B Strategy 2 (32K ctx, MaxSeqLen ∈ (0, 16K]): one TP8
+/// long-sequence pipeline (R0–7) + three 2-stage TP4 short pipelines.
+pub fn hetu_b_32k_strategy2(seq: u64) -> ParallelStrategy {
+    let mut pipelines = vec![pipe(vec![StageSpec::r_l(0, 7, 0, 59)], 1, 1)];
+    for base in [8u32, 16, 24] {
+        pipelines.push(pipe(
+            vec![StageSpec::r_l(base, base + 3, 0, 29), StageSpec::r_l(base + 4, base + 7, 30, 59)],
+            1,
+            1,
+        ));
+    }
+    strat("hetu-b-32k-s2", pipelines, true, seq)
+}
+
+/// Table 12 — Hetu-B Strategy 1 (16K ctx, MaxSeqLen ∈ (4K, 16K]): same
+/// shape as the 32K Strategy 2.
+pub fn hetu_b_16k_strategy1(seq: u64) -> ParallelStrategy {
+    let mut s = hetu_b_32k_strategy2(seq);
+    s.name = "hetu-b-16k-s1".into();
+    s
+}
+
+/// Table 12 — Hetu-B Strategy 2 (16K ctx, MaxSeqLen ∈ (0, 4K]): uniform
+/// DP4 TP4 PP2.
+pub fn hetu_b_16k_strategy2(seq: u64) -> ParallelStrategy {
+    let ranks: Vec<u32> = (0..32).collect();
+    let mut s = super::uniform(
+        "hetu-b-16k-s2",
+        &ranks,
+        4,
+        4,
+        2,
+        60,
+        4,
+        1,
+        seq,
+        ScheduleKind::OneFOneB,
+        true,
+        false,
+    )
+    .unwrap();
+    s.zero1 = true;
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_32b_strategies_validate() {
+        for s in [
+            hetu_32b_16h800_16h20(),
+            hetu_32b_16h800_24h20(),
+            hetu_32b_16h800_32h20(),
+            hetu_c1_32h20(),
+            hetu_c2_31h20(),
+            hetu_c3_24h20(),
+            hetu_c4(),
+            hetu_c5(),
+            hetu_c6(),
+            hetu_c7(),
+            hetu_b_32k_strategy1(32768),
+            hetu_b_32k_strategy2(16384),
+            hetu_b_16k_strategy1(16384),
+            hetu_b_16k_strategy2(4096),
+        ] {
+            s.validate(60).unwrap_or_else(|e| panic!("{}: {e}", s.name));
+        }
+    }
+
+    #[test]
+    fn all_70b_strategies_validate() {
+        for s in [hetu_70b_16h800_16h20(), hetu_70b_16h800_24h20(), hetu_70b_16h800_32h20()] {
+            s.validate(80).unwrap_or_else(|e| panic!("{}: {e}", s.name));
+        }
+    }
+
+    #[test]
+    fn c2_uses_31_gpus_with_asymmetric_tail() {
+        let c2 = hetu_c2_31h20();
+        assert_eq!(c2.ranks().len(), 31);
+        assert!(!c2.ranks().contains(&31));
+        let p2 = &c2.pipelines[1];
+        assert_eq!(p2.stages.len(), 5);
+        assert_eq!(p2.stages[3].tp(), 2);
+        assert_eq!(p2.stages[4].tp(), 1);
+        // GBS preserved: 33 + 31 = 64
+        assert_eq!(c2.global_batch(), 64);
+    }
+
+    #[test]
+    fn hetero_strategies_put_more_layers_on_h800() {
+        // In the 32B 16+16 strategy, H800 stages (R0-7) hold 23 layers vs 7
+        // for H20 stages — the workload-balancing core of Fig 1(a).
+        let s = hetu_32b_16h800_16h20();
+        let p = &s.pipelines[0];
+        assert_eq!(p.stages[0].num_layers(), 7); // H20
+        assert_eq!(p.stages[2].num_layers(), 23); // H800
+    }
+
+    #[test]
+    fn elastic_strategies_keep_gbs_64() {
+        for s in [hetu_c1_32h20(), hetu_c2_31h20(), hetu_c3_24h20(), hetu_c4(), hetu_c5(), hetu_c6(), hetu_c7()] {
+            assert_eq!(s.global_batch(), 64, "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn c1_to_c2_weight_annotations_differ() {
+        let c1 = hetu_c1_32h20();
+        let c2 = hetu_c2_31h20();
+        let a1 = c1.weight_annotation(59, 0).unwrap();
+        let a2 = c2.weight_annotation(59, 0).unwrap();
+        assert_ne!(a1, a2);
+        // C2's last layer lives on TP4 {12..15} and the single GPU 30
+        assert!(a2.groups.iter().any(|g| g.dg.ranks() == [30]));
+    }
+}

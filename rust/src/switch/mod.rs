@@ -1,0 +1,211 @@
+//! §6 — Dynamic graph switching.
+//!
+//! Temporal heterogeneity (failures, shifting sequence-length mixes)
+//! requires *changing* the parallel strategy at runtime. With §6.1 multiple
+//! annotations, each strategy is an annotated view of the same user graph;
+//! switching from strategy `a` to strategy `b` re-partitions every
+//! parameter from its `a`-annotation to its `b`-annotation — planned here
+//! as one §6.2 **fused BSR** over all weights.
+
+use crate::comm::{plan_transition, Bandwidth, BsrOptions, FusedBsrPlan, TensorMove};
+use crate::graph::{Binding, Graph, OpKind};
+use crate::Result;
+
+/// Per-message launch overhead used for transition-time estimates
+/// (kernel-launch + handshake; NCCL-style p2p setup is ~10s of µs, we use a
+/// conservative value that also covers message framing).
+pub const LAUNCH_OVERHEAD_S: f64 = 50e-6;
+
+/// Summary of one strategy transition (Fig 18-right, Table 2).
+#[derive(Clone, Debug)]
+pub struct SwitchReport {
+    /// The fused (or per-tensor) BSR plan.
+    pub plan: FusedBsrPlan,
+    /// Total bytes on the wire.
+    pub wire_bytes: u64,
+    /// Number of send-receive launches.
+    pub num_messages: usize,
+    /// Estimated transition time (bottleneck sender, serialized links).
+    pub est_seconds: f64,
+}
+
+/// Plan the weight re-partitioning for a strategy switch `from → to`.
+///
+/// * `fuse = true`, `opts.heuristics = true` — the paper's optimized planner;
+/// * `fuse = false` — per-tensor planning (no cross-tensor balancing, one
+///   message per slice);
+/// * `opts.heuristics = false` — minimal-rank sender baseline.
+pub fn plan_switch(
+    g: &Graph,
+    from: usize,
+    to: usize,
+    binding: &Binding,
+    bw: &dyn Bandwidth,
+    opts: BsrOptions,
+    fuse: bool,
+) -> Result<SwitchReport> {
+    let moves = parameter_moves(g, from, to, binding)?;
+    let plan = plan_transition(&moves, bw, opts, fuse)?;
+    let wire_bytes = plan.wire_bytes();
+    let num_messages = plan.num_messages();
+    let est_seconds = plan.bottleneck_seconds(bw, LAUNCH_OVERHEAD_S);
+    Ok(SwitchReport { plan, wire_bytes, num_messages, est_seconds })
+}
+
+/// Plan a switch between two [`crate::strategy::ParallelStrategy`]s
+/// directly: every layer's weight bundle moves from its `from`-annotation
+/// to its `to`-annotation (1-D geometry of `params_per_layer` elements,
+/// TP-split along dim 0 — the layout the engine actually uses).
+pub fn plan_strategy_switch(
+    from: &crate::strategy::ParallelStrategy,
+    to: &crate::strategy::ParallelStrategy,
+    cm: &crate::costmodel::CostModel,
+    bw: &dyn Bandwidth,
+    opts: BsrOptions,
+    fuse: bool,
+) -> Result<SwitchReport> {
+    plan_strategy_switch_avoiding(from, to, cm, bw, opts, fuse, &[])
+}
+
+/// [`plan_strategy_switch`] with failed devices excluded as *sources*:
+/// a dead rank cannot send, so every source subgroup containing one is
+/// dropped — its surviving DP replica(s) supply the weights. This is the
+/// fault-tolerance contract of §7.2 (ZeRO-1 disabled so each weight shard
+/// has at least one full replica outside any single failure domain);
+/// errors if a weight has no surviving replica.
+pub fn plan_strategy_switch_avoiding(
+    from: &crate::strategy::ParallelStrategy,
+    to: &crate::strategy::ParallelStrategy,
+    cm: &crate::costmodel::CostModel,
+    bw: &dyn Bandwidth,
+    opts: BsrOptions,
+    fuse: bool,
+    dead: &[crate::hspmd::dg::Rank],
+) -> Result<SwitchReport> {
+    let layers = cm.model.layers;
+    let mut moves = vec![];
+    for l in 0..layers {
+        let src = from.weight_annotation(l, 0)?;
+        let dst = to.weight_annotation(l, 0)?;
+        if src == dst && dead.is_empty() {
+            continue;
+        }
+        moves.push(TensorMove {
+            name: format!("layer{l}.weights"),
+            src,
+            dst,
+            shape: vec![cm.model.params_per_layer()],
+            elem_bytes: cm.params.elem_bytes as u64,
+        });
+    }
+    let plan = crate::comm::fused::plan_transition_avoiding(&moves, bw, opts, fuse, dead)?;
+    let wire_bytes = plan.wire_bytes();
+    let num_messages = plan.num_messages();
+    let est_seconds = plan.bottleneck_seconds(bw, LAUNCH_OVERHEAD_S);
+    Ok(SwitchReport { plan, wire_bytes, num_messages, est_seconds })
+}
+
+/// Collect the [`TensorMove`]s of all parameters whose annotation changes
+/// between the two strategies.
+pub fn parameter_moves(
+    g: &Graph,
+    from: usize,
+    to: usize,
+    binding: &Binding,
+) -> Result<Vec<TensorMove>> {
+    let mut moves = vec![];
+    for op in &g.ops {
+        if !matches!(op.kind, OpKind::Parameter) {
+            continue;
+        }
+        let t = &g.tensors[op.outputs[0]];
+        let src = t.annotation(from).ok_or_else(|| {
+            crate::Error::Graph(format!("parameter `{}` lacks strategy-{from} annotation", t.name))
+        })?;
+        let dst = t.annotation(to).ok_or_else(|| {
+            crate::Error::Graph(format!("parameter `{}` lacks strategy-{to} annotation", t.name))
+        })?;
+        if src == dst {
+            continue;
+        }
+        moves.push(TensorMove {
+            name: t.name.clone(),
+            src: src.clone(),
+            dst: dst.clone(),
+            shape: binding.shape(&t.shape)?,
+            elem_bytes: t.dtype.bytes(),
+        });
+    }
+    Ok(moves)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::UniformBandwidth;
+    use crate::graph::{lits, DType};
+    use crate::hspmd::{Annotation, DeviceGroup, DistStates};
+
+    /// Two strategies over 4 devices: TP4 (all params split 4-way on dim 0)
+    /// vs TP2×DP2 (split 2-way, duplicated on the other pair).
+    fn two_strategy_graph(n_params: usize) -> Graph {
+        let mut g = Graph::new(2);
+        let tp4 = Annotation::spmd(DeviceGroup::range(0, 4), DistStates::split(0, 4)).unwrap();
+        let tp2 = Annotation::spmd(
+            DeviceGroup::range(0, 4),
+            DistStates::new(&[(crate::hspmd::ds::DUPLICATE, 2), (0, 2)], &[-1, 0]).unwrap(),
+        )
+        .unwrap();
+        for i in 0..n_params {
+            g.parameter(&format!("w{i}"), lits(&[16, 8]), DType::F32, vec![tp4.clone(), tp2.clone()])
+                .unwrap();
+        }
+        g
+    }
+
+    #[test]
+    fn switch_plans_all_changed_params() {
+        let g = two_strategy_graph(4);
+        let rep = plan_switch(
+            &g,
+            0,
+            1,
+            &Binding::new(),
+            &UniformBandwidth,
+            BsrOptions::default(),
+            true,
+        )
+        .unwrap();
+        assert!(rep.wire_bytes > 0);
+        assert!(rep.num_messages > 0);
+        assert!(rep.est_seconds > 0.0);
+    }
+
+    #[test]
+    fn unchanged_params_skip_movement() {
+        let mut g = Graph::new(2);
+        let a = Annotation::spmd(DeviceGroup::range(0, 2), DistStates::split(0, 2)).unwrap();
+        g.parameter("w", lits(&[8]), DType::F32, vec![a.clone(), a]).unwrap();
+        let moves = parameter_moves(&g, 0, 1, &Binding::new()).unwrap();
+        assert!(moves.is_empty());
+    }
+
+    #[test]
+    fn fused_beats_unfused_messages() {
+        let g = two_strategy_graph(8);
+        let fused = plan_switch(&g, 0, 1, &Binding::new(), &UniformBandwidth, BsrOptions::default(), true).unwrap();
+        let unfused = plan_switch(&g, 0, 1, &Binding::new(), &UniformBandwidth, BsrOptions::default(), false).unwrap();
+        assert_eq!(fused.wire_bytes, unfused.wire_bytes, "volume invariant");
+        assert!(fused.num_messages <= unfused.num_messages);
+        assert!(fused.est_seconds <= unfused.est_seconds);
+    }
+
+    #[test]
+    fn reverse_switch_also_plans() {
+        let g = two_strategy_graph(2);
+        let fwd = plan_switch(&g, 0, 1, &Binding::new(), &UniformBandwidth, BsrOptions::default(), true).unwrap();
+        let rev = plan_switch(&g, 1, 0, &Binding::new(), &UniformBandwidth, BsrOptions::default(), true).unwrap();
+        // TP4→TP2×DP2 replicates (more bytes); reverse narrows (fewer)
+        assert!(fwd.wire_bytes > 0 && rev.wire_bytes > 0);
+    }
+}

@@ -1,0 +1,173 @@
+//! In-repo randomized property-testing harness.
+//!
+//! The build image cannot fetch `proptest`, so this module provides the small
+//! subset we need: a seeded, reproducible PRNG (xorshift64*), generator
+//! helpers, and a [`check`] driver that runs an invariant over many random
+//! cases and reports the seed of the first failing case so it can be replayed
+//! deterministically.
+
+/// Deterministic xorshift64* PRNG. Not cryptographic; stable across
+/// platforms, which is what reproducible property tests need.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Create a PRNG from a seed (0 is remapped to a fixed odd constant).
+    pub fn new(seed: u64) -> Self {
+        Rng {
+            state: if seed == 0 { 0x9E37_79B9_7F4A_7C15 } else { seed },
+        }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform in `[0, n)`. `n` must be > 0.
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Rejection-free modulo is fine for test-case generation.
+        self.next_u64() % n
+    }
+
+    /// Uniform usize in `[lo, hi]` inclusive.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        lo + self.below((hi - lo + 1) as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform f32 in `[-1, 1)` (handy for tensor payloads).
+    pub fn f32_signed(&mut self) -> f32 {
+        (self.f64() * 2.0 - 1.0) as f32
+    }
+
+    /// Bernoulli with probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Pick a random element of a non-empty slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.range(0, xs.len() - 1)]
+    }
+
+    /// Shuffle a slice in place (Fisher–Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.range(0, i);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Log-normal-ish sample via sum of uniforms (Irwin–Hall approximates a
+    /// normal; exp of it gives the heavy-tailed shape we need for sequence
+    /// lengths). `mu`/`sigma` are in log space.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        let mut s = 0.0;
+        for _ in 0..12 {
+            s += self.f64();
+        }
+        let z = s - 6.0; // ~N(0,1)
+        (mu + sigma * z).exp()
+    }
+}
+
+/// Run `cases` random checks of `prop`, feeding each a fresh seeded [`Rng`].
+/// Panics with the failing seed on first failure, so
+/// `check_seed(<seed>, prop)` replays it.
+pub fn check<F: FnMut(&mut Rng) -> std::result::Result<(), String>>(
+    name: &str,
+    cases: u64,
+    mut prop: F,
+) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property `{name}` failed (case {case}, seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single seed against a property (debugging helper).
+pub fn check_seed<F: FnMut(&mut Rng) -> std::result::Result<(), String>>(seed: u64, mut prop: F) {
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property failed at seed {seed:#x}: {msg}");
+    }
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs();
+        assert!(
+            (x - y).abs() <= tol,
+            "{what}: element {i} differs: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn range_bounds_hold() {
+        check("range bounds", 200, |rng| {
+            let lo = rng.range(0, 50);
+            let hi = lo + rng.range(0, 50);
+            let v = rng.range(lo, hi);
+            if v < lo || v > hi {
+                return Err(format!("{v} outside [{lo},{hi}]"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        check("shuffle permutation", 100, |rng| {
+            let n = rng.range(1, 30);
+            let mut xs: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut xs);
+            let mut sorted = xs.clone();
+            sorted.sort_unstable();
+            if sorted != (0..n).collect::<Vec<_>>() {
+                return Err("not a permutation".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn lognormal_is_positive() {
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            assert!(rng.lognormal(2.0, 1.0) > 0.0);
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! Integration: the distributed engine against real AOT artifacts.
+//!
+//! These tests require `make artifacts` to have run (they are skipped with
+//! a notice otherwise) and verify the paper's core execution property on
+//! real numerics: *the parallelization strategy does not change the
+//! computation*. TP/PP/DP layouts and graph switching must produce the same
+//! losses as the single-device oracle.
+
+use hetu::config::RunConfig;
+use hetu::coordinator::{SyntheticCorpus, Trainer};
+use hetu::engine::{Engine, EngineStage, EngineStrategy, EnginePipeline, MicroBatch};
+
+fn artifacts_ready() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+/// A fixed pool of microbatches so every strategy sees the same data:
+/// pipeline-major assignment (pipeline p of n gets slots p*per..(p+1)*per).
+struct Pool {
+    mbs: Vec<MicroBatch>,
+    per_pipeline: usize,
+}
+
+impl Pool {
+    fn new(total: usize, b: usize, s: usize, pipelines: usize) -> Pool {
+        let mut corpus = SyntheticCorpus::new(1234, 32000);
+        Pool {
+            mbs: (0..total).map(|_| corpus.microbatch(b, s)).collect(),
+            per_pipeline: total / pipelines,
+        }
+    }
+    fn get(&self, pipe: usize, mb: usize) -> MicroBatch {
+        self.mbs[pipe * self.per_pipeline + mb].clone()
+    }
+}
+
+fn run_one_step(strategy: EngineStrategy, pipelines: usize, total_mb: usize) -> f32 {
+    let mut eng = Engine::new("artifacts", strategy, 42, 1e-3).unwrap();
+    let cfg = eng.runtime.config;
+    let pool = Pool::new(total_mb, cfg.batch, cfg.seq, pipelines);
+    let stats = eng.train_step(&mut |p, m| pool.get(p, m)).unwrap();
+    stats.loss
+}
+
+#[test]
+fn single_device_loss_starts_near_log_vocab() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let s = EngineStrategy::uniform("solo", 1, 1, 1, 8, 2);
+    let loss = run_one_step(s, 1, 2);
+    let logv = (32000f32).ln();
+    assert!((loss - logv).abs() < 1.0, "initial loss {loss} vs ln(V) {logv}");
+}
+
+#[test]
+fn tp_and_pp_match_single_device_loss() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let base = run_one_step(EngineStrategy::uniform("solo", 1, 1, 1, 8, 2), 1, 2);
+    let tp2 = run_one_step(EngineStrategy::uniform("tp2", 1, 2, 1, 8, 2), 1, 2);
+    let pp2 = run_one_step(EngineStrategy::uniform("pp2", 1, 1, 2, 8, 2), 1, 2);
+    let tp2pp2 = run_one_step(EngineStrategy::uniform("tp2pp2", 1, 2, 2, 8, 2), 1, 2);
+    assert!((tp2 - base).abs() < 1e-3, "tp2 {tp2} vs base {base}");
+    assert!((pp2 - base).abs() < 1e-5, "pp2 {pp2} vs base {base}");
+    assert!((tp2pp2 - base).abs() < 1e-3, "tp2pp2 {tp2pp2} vs base {base}");
+}
+
+#[test]
+fn dp_matches_single_device_loss() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    // dp1 with 4 microbatches == dp2 with 2 microbatches each (same pool)
+    let base = run_one_step(EngineStrategy::uniform("solo", 1, 1, 1, 8, 2), 1, 2);
+    let dp2 = run_one_step(EngineStrategy::uniform("dp2", 2, 1, 1, 8, 1), 2, 2);
+    assert!((dp2 - base).abs() < 1e-5, "dp2 {dp2} vs base {base}");
+}
+
+#[test]
+fn training_reduces_loss_and_switching_is_transparent() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    // Reference run: pp2 for 6 steps.
+    let cfg = RunConfig { steps: 4, lr: 3e-3, ..RunConfig::default() };
+    let mut t_ref = Trainer::new(cfg.clone(), EngineStrategy::uniform("pp2", 1, 1, 2, 8, 2)).unwrap();
+    t_ref.train(4).unwrap();
+    let ref_losses: Vec<f32> = t_ref.logs().iter().map(|l| l.loss).collect();
+    // 4 steps x 128 tokens is far too little data for a monotone trend
+    // (the long-horizon loss curve is train_e2e's job); assert sanity only.
+    let (head, tail) = t_ref.loss_improved().unwrap();
+    assert!(tail.is_finite() && head.is_finite() && tail < 20.0, "sane losses: {head} -> {tail}");
+
+    // Switched run: pp2 for 3 steps, graph-switch to pp4, 3 more steps.
+    // Same seed + data stream => identical losses (switching moves state
+    // without changing the computation).
+    let mut t_sw = Trainer::new(cfg, EngineStrategy::uniform("pp2", 1, 1, 2, 8, 2)).unwrap();
+    t_sw.train(2).unwrap();
+    let (msgs, elems) = t_sw.switch(EngineStrategy::uniform("pp4", 1, 1, 4, 8, 2)).unwrap();
+    assert!(msgs > 0 && elems > 0, "switch moved {msgs} msgs / {elems} elems");
+    t_sw.train(2).unwrap();
+    let sw_losses: Vec<f32> = t_sw.logs().iter().map(|l| l.loss).collect();
+    for (i, (a, b)) in ref_losses.iter().zip(sw_losses.iter()).enumerate() {
+        assert!(
+            (a - b).abs() < 2e-4,
+            "step {i}: switched run diverged: {a} vs {b} (all: {ref_losses:?} vs {sw_losses:?})"
+        );
+    }
+}
+
+#[test]
+fn stage_layout_rebalance_switch() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    // Asymmetric re-layering (the Fig 1(b)-style reconfiguration): 4+4 → 6+2.
+    let mk = |l0: u32, name: &str| EngineStrategy {
+        name: name.into(),
+        pipelines: vec![EnginePipeline {
+            stages: vec![
+                EngineStage { devices: vec![0], layers: (0, l0) },
+                EngineStage { devices: vec![1], layers: (l0, 8) },
+            ],
+            num_microbatches: 2,
+        }],
+    };
+    let mut eng = Engine::new("artifacts", mk(4, "even"), 42, 1e-3).unwrap();
+    let cfg = eng.runtime.config;
+    let pool = Pool::new(2, cfg.batch, cfg.seq, 1);
+    let before = eng.train_step(&mut |p, m| pool.get(p, m)).unwrap().loss;
+    let (_, elems) = eng.switch_to(mk(6, "skewed")).unwrap();
+    // layers 4,5 move from device 1 to device 0 (params + opt state)
+    assert!(elems > 0);
+    let after = eng.train_step(&mut |p, m| pool.get(p, m)).unwrap().loss;
+    assert!(after < before + 0.5, "loss sane after rebalance: {before} -> {after}");
+}
+
+#[test]
+fn tp_degree_resharding_switch_is_transparent() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    // tp1 → tp2 reslices every split parameter (the C2-style 4→2→1 tail
+    // reconfiguration at engine scale). Losses must match an unswitched run.
+    let cfg = RunConfig { steps: 2, lr: 1e-3, ..RunConfig::default() };
+    let mut t_ref = Trainer::new(cfg.clone(), EngineStrategy::uniform("tp1", 1, 1, 1, 8, 1)).unwrap();
+    t_ref.train(2).unwrap();
+    let rl: Vec<f32> = t_ref.logs().iter().map(|l| l.loss).collect();
+
+    let mut t_sw = Trainer::new(cfg, EngineStrategy::uniform("tp1", 1, 1, 1, 8, 1)).unwrap();
+    t_sw.train(1).unwrap();
+    let (msgs, elems) = t_sw.switch(EngineStrategy::uniform("tp2", 1, 2, 1, 8, 1)).unwrap();
+    assert!(msgs > 0 && elems > 0, "resharding moved data: {msgs}/{elems}");
+    t_sw.train(1).unwrap();
+    let sl: Vec<f32> = t_sw.logs().iter().map(|l| l.loss).collect();
+    for (i, (a, b)) in rl.iter().zip(sl.iter()).enumerate() {
+        assert!((a - b).abs() < 2e-3, "step {i}: {a} vs {b} ({rl:?} vs {sl:?})");
+    }
+}

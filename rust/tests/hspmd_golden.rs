@@ -1,0 +1,200 @@
+//! Golden tests: the paper's worked examples (Figs 2, 9, 10, 11) verified
+//! end-to-end through the public API.
+
+use hetu::comm::{resolve, BsrOptions, ResolvedKind, UniformBandwidth};
+use hetu::graph::{deduce::deduce, lits, DType, Graph, UnaryKind};
+use hetu::hspmd::ds::{DUPLICATE, PARTIAL};
+use hetu::hspmd::{Annotation, DeviceGroup, DistStates, Subgroup};
+
+fn sub(ranks: Vec<u32>, entries: &[(i32, u32)], order: &[i32]) -> Subgroup {
+    Subgroup::new(DeviceGroup::new(ranks).unwrap(), DistStates::new(entries, order).unwrap())
+        .unwrap()
+}
+
+/// Fig 2 (right): the heterogeneous example — X split across three uneven
+/// subgroups (TP pair {0,3}, single {1}... simplified to the tensor X of
+/// the figure), W replicated across subgroups with different bottom
+/// shardings. Checks that the annotation validates and the geometry covers
+/// the tensor exactly once per replica set.
+#[test]
+fn fig2_right_annotation_is_expressible() {
+    // X: hdim=0, three subgroups: {0,3} split dim1, {1} whole, {2,4} split dim0
+    let x = Annotation::new(
+        vec![
+            sub(vec![0, 3], &[(1, 2)], &[1]),
+            sub(vec![1], &[], &[]),
+            sub(vec![2, 4], &[(0, 2)], &[0]),
+        ],
+        0,
+    )
+    .unwrap();
+    assert_eq!(x.hsize(), 3);
+    let regions = hetu::hspmd::slices::regions(&x, &[12, 8]).unwrap();
+    let total: u64 = regions.iter().map(|r| hetu::hspmd::slices::region_elems(&r.region)).sum();
+    assert_eq!(total, 96, "partition covers the tensor exactly");
+
+    // W: replicated across subgroups (hdim=-1), TP-split within {0,3} and
+    // {5,6}, whole on {1}.
+    let w = Annotation::new(
+        vec![
+            sub(vec![0, 3], &[(0, 2)], &[0]),
+            sub(vec![1], &[], &[]),
+            sub(vec![5, 6], &[(0, 2)], &[0]),
+        ],
+        DUPLICATE,
+    )
+    .unwrap();
+    assert!(w.same_dg_union(&w));
+}
+
+/// Fig 9: the full specialization walk-through — Gelu(X)·Comm(W) → Comm(Y)
+/// with a TP/DP layout; checks CommOp resolutions and per-device graphs.
+#[test]
+fn fig9_specialization_walkthrough() {
+    let mut g = Graph::new(1);
+    let x_ann = Annotation::spmd(
+        DeviceGroup::range(0, 4),
+        DistStates::new(&[(0, 2), (1, 2)], &[0, 1]).unwrap(),
+    )
+    .unwrap();
+    let x = g.placeholder("X", lits(&[8, 16]), DType::F32, vec![x_ann]).unwrap();
+    let w = g
+        .parameter(
+            "W",
+            lits(&[16, 32]),
+            DType::F32,
+            vec![Annotation::spmd(DeviceGroup::range(0, 4), DistStates::duplicate(4)).unwrap()],
+        )
+        .unwrap();
+    // CommOp id=1: replicate -> TP row split
+    let w_tp = Annotation::spmd(
+        DeviceGroup::range(0, 4),
+        DistStates::new(&[(DUPLICATE, 2), (0, 2)], &[-1, 0]).unwrap(),
+    )
+    .unwrap();
+    let wc = g.comm(w, vec![w_tp]).unwrap();
+    let xg = g.unary(UnaryKind::Gelu, x);
+    let y = g.dot(xg, wc).unwrap();
+    // CommOp id=2: partial -> replicated within TP pairs
+    let y_sync = Annotation::spmd(
+        DeviceGroup::range(0, 4),
+        DistStates::new(&[(0, 2), (DUPLICATE, 2)], &[-1, 0]).unwrap(),
+    )
+    .unwrap();
+    let yc = g.comm(y, vec![y_sync]).unwrap();
+    let _ = yc;
+
+    deduce(&mut g, 0).unwrap();
+    // deduction: Y is partial over TP
+    let y_ann = g.tensor(y).annotation(0).unwrap();
+    assert_eq!(y_ann.groups[0].ds.shards(PARTIAL), 2);
+
+    let spec = hetu::spec::instantiate::specialize(
+        &mut g,
+        0,
+        &hetu::graph::Binding::new(),
+        &UniformBandwidth,
+        BsrOptions::default(),
+    )
+    .unwrap();
+    assert_eq!(spec.graphs.len(), 4);
+    let kinds: Vec<ResolvedKind> = spec.comm_resolutions.values().map(|r| r.kind).collect();
+    assert!(kinds.contains(&ResolvedKind::AllReduce), "CommOp id=2 → AR: {kinds:?}");
+}
+
+/// Fig 10: HSize conversion — semantic equivalence of the refined
+/// annotation, verified by geometry.
+#[test]
+fn fig10_hsize_conversion_preserves_geometry() {
+    let ds = DistStates::new(&[(0, 2), (DUPLICATE, 2)], &[0, -1]).unwrap();
+    let a = Annotation::spmd(DeviceGroup::new(vec![2, 4, 5, 6]).unwrap(), ds).unwrap();
+    let refined = a.refine(0, 2).unwrap();
+    assert_eq!(refined.hsize(), 2);
+    let shape = [8u64, 6];
+    let before = hetu::hspmd::slices::regions(&a, &shape).unwrap();
+    let after = hetu::hspmd::slices::regions(&refined, &shape).unwrap();
+    assert_eq!(before.len(), after.len());
+    for (x, y) in before.iter().zip(after.iter()) {
+        assert_eq!(x.rank, y.rank);
+        assert_eq!(x.region, y.region);
+    }
+}
+
+/// Fig 11: the 3D×2D Dot deduction table, via the public graph API.
+#[test]
+fn fig11_dot_deduction_through_graph() {
+    let mut g = Graph::new(1);
+    // X [4, 6, 8] split a=2 on dim0, c=2 on dim2, over 8 devices (dup 2)
+    let x_ann = Annotation::spmd(
+        DeviceGroup::range(0, 8),
+        DistStates::new(&[(0, 2), (2, 2), (DUPLICATE, 2)], &[0, 2, -1]).unwrap(),
+    )
+    .unwrap();
+    let x = g.placeholder("X", lits(&[4, 6, 8]), DType::F32, vec![x_ann]).unwrap();
+    // W [8, 10] split c=2 on dim0, d=2 on dim1
+    let w_ann = Annotation::spmd(
+        DeviceGroup::range(0, 8),
+        DistStates::new(&[(0, 2), (1, 2), (DUPLICATE, 2)], &[0, 1, -1]).unwrap(),
+    )
+    .unwrap();
+    let w = g.parameter("W", lits(&[8, 10]), DType::F32, vec![w_ann]).unwrap();
+    let y = g.dot(x, w).unwrap();
+    deduce(&mut g, 0).unwrap();
+    let ds = &g.tensor(y).annotation(0).unwrap().groups[0].ds;
+    assert_eq!(ds.shards(0), 2, "a preserved");
+    assert_eq!(ds.shards(2), 2, "d from W");
+    assert_eq!(ds.shards(PARTIAL), 2, "c became partial");
+}
+
+/// The full Fig 4 classification matrix, one probe per class.
+#[test]
+fn fig4_classification_matrix() {
+    let bw = UniformBandwidth;
+    let opts = BsrOptions::default();
+    let dg = |lo, hi| DeviceGroup::range(lo, hi);
+
+    // Identity
+    let a = Annotation::spmd(dg(0, 2), DistStates::split(0, 2)).unwrap();
+    assert_eq!(resolve(&a, &a.clone(), &[8], &bw, opts).unwrap().kind, ResolvedKind::Identity);
+
+    // SR: same DS, shifted devices
+    let b = Annotation::spmd(dg(2, 4), DistStates::split(0, 2)).unwrap();
+    assert_eq!(resolve(&a, &b, &[8], &bw, opts).unwrap().kind, ResolvedKind::SendRecv);
+
+    // AR / RS / AG
+    let p = Annotation::spmd(dg(0, 2), DistStates::partial(2)).unwrap();
+    let d = Annotation::spmd(dg(0, 2), DistStates::duplicate(2)).unwrap();
+    let s = Annotation::spmd(dg(0, 2), DistStates::split(0, 2)).unwrap();
+    assert_eq!(resolve(&p, &d, &[8], &bw, opts).unwrap().kind, ResolvedKind::AllReduce);
+    assert_eq!(resolve(&p, &s, &[8], &bw, opts).unwrap().kind, ResolvedKind::ReduceScatter);
+    assert_eq!(resolve(&s, &d, &[8], &bw, opts).unwrap().kind, ResolvedKind::AllGather);
+
+    // bottom BSR: resplit
+    let s1 = Annotation::spmd(dg(0, 2), DistStates::split(1, 2)).unwrap();
+    assert_eq!(resolve(&s, &s1, &[8, 4], &bw, opts).unwrap().kind, ResolvedKind::Bsr);
+
+    // SplitAR / SplitRS / SplitAG across two subgroups
+    let mk = |hdim| {
+        Annotation::new(
+            vec![sub(vec![0, 1], &[(0, 2)], &[0]), sub(vec![2, 3], &[(0, 2)], &[0])],
+            hdim,
+        )
+        .unwrap()
+    };
+    assert_eq!(
+        resolve(&mk(PARTIAL), &mk(DUPLICATE), &[8, 4], &bw, opts).unwrap().kind,
+        ResolvedKind::SplitAllReduce
+    );
+    assert_eq!(
+        resolve(&mk(PARTIAL), &mk(1), &[8, 4], &bw, opts).unwrap().kind,
+        ResolvedKind::SplitReduceScatter
+    );
+    assert_eq!(
+        resolve(&mk(1), &mk(DUPLICATE), &[8, 4], &bw, opts).unwrap().kind,
+        ResolvedKind::SplitAllGather
+    );
+
+    // top-tier BSR: HSize change
+    let one = Annotation::spmd(dg(0, 4), DistStates::split(0, 4)).unwrap();
+    assert_eq!(resolve(&one, &mk(0), &[8, 4], &bw, opts).unwrap().kind, ResolvedKind::Bsr);
+}

@@ -1,0 +1,267 @@
+//! Randomized property sweeps over the HSPMD core (the crate's stand-in for
+//! proptest, see `hetu::testutil`): invariants that must hold for *any*
+//! annotation pair, not just the worked examples.
+
+use hetu::comm::{plan_transition, resolve, BsrOptions, TensorMove, UniformBandwidth};
+use hetu::hspmd::ds::DUPLICATE;
+use hetu::hspmd::slices::{region_elems, regions, SliceGrid};
+use hetu::hspmd::{Annotation, DeviceGroup, DistStates, Subgroup};
+use hetu::testutil::{check, Rng};
+
+/// Generate a random Partial-free annotation over ranks drawn from `pool`,
+/// for a rank-`dims` tensor.
+fn arb_annotation(rng: &mut Rng, pool: &mut Vec<u32>, dims: usize) -> Annotation {
+    let hsize = rng.range(1, 3);
+    let mut groups = vec![];
+    for _ in 0..hsize {
+        // subgroup size: 1, 2 or 4
+        let size = *rng.pick(&[1usize, 2, 2, 4]);
+        let size = size.min(pool.len().saturating_sub(hsize - groups.len() - 1).max(1));
+        let mut ranks = vec![];
+        for _ in 0..size {
+            if pool.is_empty() {
+                break;
+            }
+            let i = rng.range(0, pool.len() - 1);
+            ranks.push(pool.swap_remove(i));
+        }
+        if ranks.is_empty() {
+            break;
+        }
+        let n = ranks.len() as u32;
+        // random DS over the devices: split one dim, dup the rest
+        let ds = if n == 1 {
+            DistStates::trivial()
+        } else if rng.chance(0.4) {
+            DistStates::duplicate(n)
+        } else if rng.chance(0.5) || n == 3 {
+            DistStates::split(rng.range(0, dims - 1) as u32, n)
+        } else {
+            // split 2 × dup n/2
+            let d = rng.range(0, dims - 1) as u32;
+            DistStates::new(&[(d as i32, 2), (DUPLICATE, n / 2)], &[d as i32, -1]).unwrap()
+        };
+        groups.push(Subgroup::new(DeviceGroup::new(ranks).unwrap(), ds).unwrap());
+    }
+    let hdim = if groups.len() == 1 || rng.chance(0.4) {
+        DUPLICATE
+    } else {
+        rng.range(0, dims - 1) as i32
+    };
+    Annotation::new(groups, hdim).unwrap()
+}
+
+fn arb_shape(rng: &mut Rng, dims: usize) -> Vec<u64> {
+    (0..dims).map(|_| 8 * rng.range(1, 6) as u64).collect()
+}
+
+#[test]
+fn prop_regions_cover_every_element() {
+    check("regions cover tensor", 300, |rng| {
+        let dims = rng.range(1, 3);
+        let shape = arb_shape(rng, dims);
+        let mut pool: Vec<u32> = (0..12).collect();
+        let a = arb_annotation(rng, &mut pool, dims);
+        let rs = regions(&a, &shape).map_err(|e| e.to_string())?;
+        // every atomic slice must be held by >= 1 device
+        let grid = SliceGrid::build(&shape, &[&rs]);
+        for slice in grid.slices() {
+            if SliceGrid::holders(&slice, &rs).is_empty() {
+                return Err(format!("uncovered slice {slice:?} in {}", a.describe()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bsr_delivers_every_destination_slice_exactly_once() {
+    check("bsr delivery", 300, |rng| {
+        let dims = rng.range(1, 3);
+        let shape = arb_shape(rng, dims);
+        let mut pool: Vec<u32> = (0..16).collect();
+        let src = arb_annotation(rng, &mut pool.clone(), dims);
+        let dst = arb_annotation(rng, &mut pool, dims);
+        let res = resolve(&src, &dst, &shape, &UniformBandwidth, BsrOptions::default());
+        let res = match res {
+            Ok(r) => r,
+            Err(_) => return Ok(()), // unsupported combos are fine to reject
+        };
+        // delivered volume (wire + local) must equal the destination's
+        // total owned volume whenever the plan is a BSR
+        if let hetu::comm::CommPlan::Bsr(plan) = &res.plan {
+            let delivered: u64 = plan.transfers.iter().map(|t| t.elems()).sum::<u64>()
+                + plan.local_copies.iter().map(|(_, r)| region_elems(r)).sum::<u64>();
+            let needed: u64 = regions(&dst, &shape)
+                .map_err(|e| e.to_string())?
+                .iter()
+                .map(|r| region_elems(&r.region))
+                .sum();
+            if delivered != needed {
+                return Err(format!(
+                    "delivered {delivered} != needed {needed} for {} -> {}",
+                    src.describe(),
+                    dst.describe()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_planner_options_preserve_wire_volume() {
+    check("planner volume invariant", 200, |rng| {
+        let dims = rng.range(1, 2);
+        let shape = arb_shape(rng, dims);
+        let mut pool: Vec<u32> = (0..12).collect();
+        let src = arb_annotation(rng, &mut pool.clone(), dims);
+        let dst = arb_annotation(rng, &mut pool, dims);
+        if src.has_partial() || dst.has_partial() {
+            return Ok(());
+        }
+        let mv = |_: u32| TensorMove {
+            name: "t".into(),
+            src: src.clone(),
+            dst: dst.clone(),
+            shape: shape.clone(),
+            elem_bytes: 2,
+        };
+        let moves: Vec<TensorMove> = (0..3).map(mv).collect();
+        let fused =
+            plan_transition(&moves, &UniformBandwidth, BsrOptions { heuristics: true }, true)
+                .map_err(|e| e.to_string())?;
+        let unfused =
+            plan_transition(&moves, &UniformBandwidth, BsrOptions { heuristics: false }, false)
+                .map_err(|e| e.to_string())?;
+        if fused.wire_bytes() != unfused.wire_bytes() {
+            return Err(format!(
+                "volume changed: fused {} vs unfused {}",
+                fused.wire_bytes(),
+                unfused.wire_bytes()
+            ));
+        }
+        if fused.num_messages() > unfused.num_messages() {
+            return Err("fusion increased message count".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_refine_preserves_geometry() {
+    check("refine geometry", 200, |rng| {
+        // single-subgroup annotation with a composite DS; refine along each
+        // eligible dim and compare regions
+        let dims = 2;
+        let shape = arb_shape(rng, dims);
+        let n = *rng.pick(&[2u32, 4]);
+        let d = rng.range(0, dims - 1) as u32;
+        let ds = if rng.chance(0.5) {
+            DistStates::split(d, n)
+        } else {
+            DistStates::new(&[(d as i32, n), (DUPLICATE, 2)], &[d as i32, -1]).unwrap()
+        };
+        let total = ds.num_devices();
+        let a = Annotation::spmd(DeviceGroup::range(0, total), ds).unwrap();
+        for ld in [d as i32, DUPLICATE] {
+            let k = 2;
+            if a.groups[0].ds.shards(ld) % k != 0 || a.groups[0].ds.shards(ld) < 2 {
+                continue;
+            }
+            let refined = a.refine(ld, k).map_err(|e| e.to_string())?;
+            let before = regions(&a, &shape).map_err(|e| e.to_string())?;
+            let after = regions(&refined, &shape).map_err(|e| e.to_string())?;
+            // geometry per rank must be identical (order may differ)
+            for b in &before {
+                let Some(aa) = after.iter().find(|x| x.rank == b.rank) else {
+                    return Err(format!("rank {} vanished", b.rank));
+                };
+                if aa.region != b.region {
+                    return Err(format!(
+                        "rank {} region changed {:?} -> {:?} (refine {ld})",
+                        b.rank, b.region, aa.region
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_schedules_complete_and_respect_fifo() {
+    use hetu::spec::schedule::{stage_schedule, ScheduleKind, TaskKind};
+    check("schedule completeness", 300, |rng| {
+        let stages = rng.range(1, 8);
+        let m = rng.range(1, 40);
+        let kind = if rng.chance(0.5) { ScheduleKind::GPipe } else { ScheduleKind::OneFOneB };
+        for s in 0..stages {
+            let tasks = stage_schedule(kind, stages, s, m);
+            if tasks.len() != 2 * m {
+                return Err(format!("stage {s}: {} tasks for m={m}", tasks.len()));
+            }
+            for i in 0..m {
+                let f = tasks
+                    .iter()
+                    .position(|t| t.kind == TaskKind::Fwd && t.microbatch == i)
+                    .ok_or(format!("missing fwd {i}"))?;
+                let b = tasks
+                    .iter()
+                    .position(|t| t.kind == TaskKind::Bwd && t.microbatch == i)
+                    .ok_or(format!("missing bwd {i}"))?;
+                if f > b {
+                    return Err(format!("bwd {i} before fwd at stage {s}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simulated_step_time_conserves_rank_budget() {
+    use hetu::cluster::Cluster;
+    use hetu::costmodel::{CostModel, ModelCfg};
+    use hetu::sim::simulate_step;
+    use hetu::spec::schedule::ScheduleKind;
+    use hetu::strategy::uniform;
+    check("sim budget conservation", 40, |rng| {
+        let tp = *rng.pick(&[1u32, 2, 4]);
+        let pp = *rng.pick(&[1u32, 2, 4]);
+        let dp = *rng.pick(&[1u32, 2]);
+        let n = tp * pp * dp;
+        let cluster = Cluster::h20(n.max(8));
+        let ranks: Vec<u32> = (0..n).collect();
+        let strat = uniform(
+            "x",
+            &ranks,
+            dp,
+            tp,
+            pp,
+            12,
+            (dp * 4) as u64,
+            1,
+            2048,
+            if rng.chance(0.5) { ScheduleKind::GPipe } else { ScheduleKind::OneFOneB },
+            true,
+            false,
+        )
+        .map_err(|e| e.to_string())?;
+        let cm = CostModel::new(ModelCfg::llama_7b());
+        let rep = simulate_step(&cluster, &cm, &strat).map_err(|e| e.to_string())?;
+        if !(rep.step_s > 0.0) {
+            return Err("non-positive step".into());
+        }
+        for (r, b) in &rep.per_rank {
+            let sum = b.total_s();
+            if (sum - rep.step_s).abs() > 1e-6 * rep.step_s.max(1.0) {
+                return Err(format!("rank {r}: budget {sum} != step {}", rep.step_s));
+            }
+            if b.bubble_s < -1e-9 {
+                return Err(format!("rank {r}: negative bubble"));
+            }
+        }
+        Ok(())
+    });
+}
