@@ -36,7 +36,9 @@ fn main() -> hetu::Result<()> {
     let mut trainer = Trainer::new(cfg, dp2)?;
     trainer.train(6)?;
     let t0 = std::time::Instant::now();
-    let (msgs, elems) = trainer.switch(survivor)?;
+    // devices 2,3 are dead: they are excluded as weight *sources*, so the
+    // fused-BSR plan pulls every slice from the surviving replica
+    let (msgs, elems) = trainer.switch_avoiding(survivor, &[2, 3])?;
     let reconf = t0.elapsed().as_secs_f64();
     println!(
         "reconfigured in {:.1} ms ({msgs} messages, {elems} elems moved) — no restart",

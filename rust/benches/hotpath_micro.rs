@@ -1,16 +1,40 @@
 //! Bench: L3 hot-path micro-benchmarks (the §Perf targets) — BSR planning,
 //! fused transition planning, annotation deduction, full specialization of
-//! a 48-rank 60-layer graph, and the discrete-event simulator.
+//! a 48-rank 60-layer graph, the discrete-event simulator, and the
+//! real-numerics engine step (native backend).
 
 use hetu::cluster::Cluster;
 use hetu::comm::BsrOptions;
+use hetu::coordinator::SyntheticCorpus;
 use hetu::costmodel::{CostModel, ModelCfg};
+use hetu::engine::{Engine, EngineStrategy, ShardLayout, BLOCK_PARAMS};
 use hetu::metrics::bench;
+use hetu::runtime::{native, Runtime};
 use hetu::strategy::tables;
 
 fn report(name: &str, iters: u32, f: impl FnMut()) {
     let (mean, best) = bench(iters, f);
     println!("{name:<44} mean {:>10.3}ms   best {:>10.3}ms", mean * 1e3, best * 1e3);
+}
+
+/// The seed engine's per-step sync-group rebuild (`BTreeMap` over
+/// `(layer, param, shard)` re-derived from the strategy on every call) —
+/// the *before* baseline for the ShardLayout rows below.
+fn legacy_sync_group_rebuild(strategy: &EngineStrategy) -> usize {
+    let mut groups: std::collections::BTreeMap<(u32, &str, usize), Vec<usize>> =
+        std::collections::BTreeMap::new();
+    for p in &strategy.pipelines {
+        for s in &p.stages {
+            for l in s.layers.0..s.layers.1 {
+                for (j, &d) in s.devices.iter().enumerate() {
+                    for p_name in BLOCK_PARAMS {
+                        groups.entry((l, p_name, j)).or_default().push(d);
+                    }
+                }
+            }
+        }
+    }
+    groups.len()
 }
 
 fn main() {
@@ -66,5 +90,28 @@ fn main() {
     let batch = hetu::data::sample_step(&mut rng, hetu::data::Corpus::CommonCrawl, 200_000, 32768);
     report("hetu_b_step (dispatch + sim)", 20, || {
         std::hint::black_box(hetu::figures::hetu_b_step(&cluster, &cm, &batch, 32768).unwrap());
+    });
+
+    // ---- engine-step micro (the §Perf target of the layout refactor).
+    // Before: `sync_gradients` re-derived its BTreeMap groups + scanned
+    // every device key each step; after: the plan is read from the cached
+    // ShardLayout. The two "sync-group" rows isolate that cost — the
+    // layout builds once per strategy, the legacy rebuild ran every step.
+    let tiny = native::tiny_config();
+    let strat = EngineStrategy::uniform("dp2tp2", 2, 2, 1, tiny.layers, 1);
+    report("sync-group legacy rebuild (per step)", 500, || {
+        std::hint::black_box(legacy_sync_group_rebuild(&strat));
+    });
+    report("sync-group ShardLayout build (per switch)", 500, || {
+        std::hint::black_box(ShardLayout::build(&tiny, &strat).unwrap().sync_ops.len());
+    });
+    let mut eng =
+        Engine::with_runtime(Runtime::native(tiny), strat, 42, 1e-3).unwrap();
+    let mut corpus = SyntheticCorpus::new(7, tiny.vocab);
+    let (b, s) = (tiny.batch, tiny.seq);
+    report("engine train_step dp2tp2 (native tiny-48)", 10, || {
+        std::hint::black_box(
+            eng.train_step(&mut |_p, _m| corpus.microbatch(b, s)).unwrap().loss,
+        );
     });
 }

@@ -15,8 +15,106 @@
 
 use std::collections::HashMap;
 
+use crate::hspmd::slices::{Interval, Region};
 use crate::runtime::HostTensor;
 use crate::{Error, Result};
+
+/// Row-major strides of a shape (last dim stride = 1).
+fn strides(shape: &[usize]) -> Vec<usize> {
+    let mut st = vec![1usize; shape.len()];
+    for d in (0..shape.len().saturating_sub(1)).rev() {
+        st[d] = st[d + 1] * shape[d + 1];
+    }
+    st
+}
+
+fn check_region(t: &HostTensor, r: &Region) -> Result<()> {
+    if r.is_empty() {
+        return Err(Error::Engine("empty region".into()));
+    }
+    if r.len() != t.shape.len() {
+        return Err(Error::Engine(format!(
+            "region rank {} vs tensor rank {}",
+            r.len(),
+            t.shape.len()
+        )));
+    }
+    for (d, iv) in r.iter().enumerate() {
+        if iv.is_empty() || iv.hi as usize > t.shape[d] {
+            return Err(Error::Engine(format!(
+                "region {:?} out of bounds for dim {d} of {:?}",
+                iv, t.shape
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Extract an axis-aligned sub-box of a tensor (region in the tensor's own
+/// local coordinates). Works for any rank; the engine uses rank 1 and 2.
+pub fn extract_region(t: &HostTensor, r: &Region) -> Result<HostTensor> {
+    check_region(t, r)?;
+    let src = t.as_f32()?;
+    let st = strides(&t.shape);
+    let out_shape: Vec<usize> = r.iter().map(|iv| iv.len() as usize).collect();
+    let out_len: usize = out_shape.iter().product();
+    let last = r.len() - 1;
+    let run_len = r[last].len() as usize;
+    let runs = out_len / run_len.max(1);
+    let mut out = Vec::with_capacity(out_len);
+    for run in 0..runs {
+        let mut rem = run;
+        let mut off = r[last].lo as usize; // stride of last dim is 1
+        for d in (0..last).rev() {
+            let ext = r[d].len() as usize;
+            let c = rem % ext;
+            rem /= ext;
+            off += (r[d].lo as usize + c) * st[d];
+        }
+        out.extend_from_slice(&src[off..off + run_len]);
+    }
+    HostTensor::f32(out_shape, out)
+}
+
+/// Write a sub-box back into a tensor (inverse of [`extract_region`]).
+pub fn write_region(t: &mut HostTensor, r: &Region, piece: &HostTensor) -> Result<()> {
+    check_region(t, r)?;
+    let expect: Vec<usize> = r.iter().map(|iv| iv.len() as usize).collect();
+    if piece.shape != expect {
+        return Err(Error::Engine(format!(
+            "write_region: piece shape {:?} vs region extents {:?}",
+            piece.shape, expect
+        )));
+    }
+    let st = strides(&t.shape);
+    let last = r.len() - 1;
+    let run_len = r[last].len() as usize;
+    let runs: usize = expect.iter().product::<usize>() / run_len.max(1);
+    let src = piece.as_f32()?;
+    let dst = t.as_f32_mut()?;
+    for run in 0..runs {
+        let mut rem = run;
+        let mut off = r[last].lo as usize;
+        for d in (0..last).rev() {
+            let ext = r[d].len() as usize;
+            let c = rem % ext;
+            rem /= ext;
+            off += (r[d].lo as usize + c) * st[d];
+        }
+        dst[off..off + run_len].copy_from_slice(&src[run * run_len..(run + 1) * run_len]);
+    }
+    Ok(())
+}
+
+/// Shift a global-coordinate region into the local coordinates of a holder
+/// whose own (global) region is `base`.
+pub fn localize(slice: &Region, base: &Region) -> Region {
+    slice
+        .iter()
+        .zip(base.iter())
+        .map(|(s, b)| Interval { lo: s.lo - b.lo, hi: s.hi - b.lo })
+        .collect()
+}
 
 /// One simulated device's tensor store.
 #[derive(Default, Debug)]
@@ -173,6 +271,31 @@ impl Mesh {
         Ok(())
     }
 
+    /// AllReduce(sum) of a *sub-region* of `key` across holders whose local
+    /// coordinates for the shared slice differ (hetero-TP gradient sync):
+    /// each `(device, local region)` pair contributes its sub-box; after
+    /// the call every holder's sub-box contains the elementwise sum.
+    /// Accounting mirrors [`Mesh::all_reduce`] (gather `(n-1)·elems`,
+    /// scatter `n·elems`, one op).
+    pub fn all_reduce_region(&mut self, parts: &[(usize, Region)], key: &str) -> Result<()> {
+        if parts.len() <= 1 {
+            return Ok(());
+        }
+        let (d0, r0) = &parts[0];
+        let mut acc = extract_region(self.devices[*d0].get(key)?, r0)?;
+        for (d, r) in &parts[1..] {
+            let piece = extract_region(self.devices[*d].get(key)?, r)?;
+            acc.add_assign(&piece)?;
+            self.wire_elems += piece.len() as u64;
+        }
+        for (d, r) in parts {
+            self.wire_elems += acc.len() as u64;
+            write_region(self.devices[*d].get_mut(key)?, r, &acc)?;
+        }
+        self.ops += 1;
+        Ok(())
+    }
+
     /// ReduceScatter along dim 0: every member holds a full tensor under
     /// `key`; afterwards member `i` holds the `i`-th dim-0 slice of the
     /// elementwise sum under `out_key`.
@@ -264,6 +387,54 @@ mod tests {
         m.reduce_scatter0(&[0, 1], "g", "gs").unwrap();
         assert_eq!(m.devices[0].get("gs").unwrap().as_f32().unwrap(), &[11.0, 22.0]);
         assert_eq!(m.devices[1].get("gs").unwrap().as_f32().unwrap(), &[33.0, 44.0]);
+    }
+
+    fn iv(lo: u64, hi: u64) -> Interval {
+        Interval { lo, hi }
+    }
+
+    #[test]
+    fn extract_and_write_region_roundtrip() {
+        let t = HostTensor::f32(vec![4, 6], (0..24).map(|x| x as f32).collect()).unwrap();
+        let r = vec![iv(1, 3), iv(2, 5)];
+        let sub = extract_region(&t, &r).unwrap();
+        assert_eq!(sub.shape, vec![2, 3]);
+        assert_eq!(sub.as_f32().unwrap(), &[8.0, 9.0, 10.0, 14.0, 15.0, 16.0]);
+        let mut dst = HostTensor::zeros(vec![4, 6]);
+        write_region(&mut dst, &r, &sub).unwrap();
+        assert_eq!(extract_region(&dst, &r).unwrap(), sub);
+        // untouched corner stays zero
+        assert_eq!(dst.as_f32().unwrap()[0], 0.0);
+    }
+
+    #[test]
+    fn extract_region_rejects_out_of_bounds() {
+        let t = HostTensor::zeros(vec![2, 2]);
+        assert!(extract_region(&t, &vec![iv(0, 3), iv(0, 2)]).is_err());
+        assert!(extract_region(&t, &vec![iv(0, 2)]).is_err());
+    }
+
+    #[test]
+    fn localize_shifts_to_holder_coords() {
+        let slice = vec![iv(4, 6), iv(0, 3)];
+        let base = vec![iv(4, 8), iv(0, 3)];
+        assert_eq!(localize(&slice, &base), vec![iv(0, 2), iv(0, 3)]);
+    }
+
+    #[test]
+    fn all_reduce_region_sums_shared_slices() {
+        // device 0 holds rows [0,4) of an 8-row tensor; device 1 holds all 8.
+        // The shared slice is rows [0,4): after the reduce both views agree.
+        let mut m = Mesh::new(2);
+        m.devices[0].put("g", HostTensor::f32(vec![4, 2], vec![1.0; 8]).unwrap());
+        m.devices[1].put("g", HostTensor::f32(vec![8, 2], vec![2.0; 16]).unwrap());
+        let parts = vec![(0usize, vec![iv(0, 4), iv(0, 2)]), (1usize, vec![iv(0, 4), iv(0, 2)])];
+        m.all_reduce_region(&parts, "g").unwrap();
+        assert_eq!(m.devices[0].get("g").unwrap().as_f32().unwrap(), &[3.0; 8]);
+        let d1 = m.devices[1].get("g").unwrap().as_f32().unwrap();
+        assert_eq!(&d1[..8], &[3.0; 8]);
+        assert_eq!(&d1[8..], &[2.0; 8]);
+        assert!(m.wire_elems > 0 && m.ops == 1);
     }
 
     #[test]

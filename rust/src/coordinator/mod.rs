@@ -112,6 +112,14 @@ impl Trainer {
         self.engine.switch_to(new)
     }
 
+    /// [`Trainer::switch`] for elastic failover: `dead` devices are
+    /// excluded as weight sources when executing the fused-BSR transition
+    /// (§7.2 — surviving DP replicas supply their slices).
+    pub fn switch_avoiding(&mut self, new: EngineStrategy, dead: &[usize]) -> Result<(u64, u64)> {
+        let report = self.engine.switch_to_avoiding(new, dead)?;
+        Ok((report.messages, report.wire_elems))
+    }
+
     /// All logs so far.
     pub fn logs(&self) -> &[StepLog] {
         &self.logs

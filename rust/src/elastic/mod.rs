@@ -106,6 +106,19 @@ pub fn heterogeneous_trace() -> Scenario {
     }
 }
 
+/// Engine-level failover (§7.2 at real numerics): execute the fused-BSR
+/// transition with the dead devices excluded as weight sources (the engine
+/// itself rejects survivor strategies that still schedule a dead device).
+/// The paper-scale analogue is [`plan_strategy_switch_avoiding`]; this one
+/// actually moves the surviving shards on the engine's mesh.
+pub fn engine_failover(
+    engine: &mut crate::engine::Engine,
+    survivor: crate::engine::EngineStrategy,
+    dead: &[usize],
+) -> Result<crate::engine::EngineSwitchReport> {
+    engine.switch_to_avoiding(survivor, dead)
+}
+
 fn apply(cluster: &mut Cluster, e: &Event) {
     match e {
         Event::FailGpu(r) => cluster.fail_gpu(*r),

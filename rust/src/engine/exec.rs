@@ -1,0 +1,300 @@
+//! The forward/backward interpreter: per-microbatch pipeline execution,
+//! layout-driven parameter init, gradient synchronization, and optimizer
+//! application.
+//!
+//! Execution contract with the model artifacts (PJRT or native — see
+//! `python/compile/model.py` and [`crate::runtime::native`]):
+//!
+//! * block forward returns a *partial* output; the engine all-reduces over
+//!   the TP group and adds the residual;
+//! * block backward returns `(dx_partial, dparams_shard)`; the engine
+//!   computes `dx = dy + AllReduce(dx_partial)`;
+//! * gradient sync runs the [`ShardLayout`]'s cached slice-grid plan: one
+//!   reduction per shared atomic slice (replicated gains reduce raw
+//!   per-device partials across all holders in a single pass), then the
+//!   embedding/head reductions across pipeline roots, then `1/total_mb`
+//!   scaling over the layout's cached gradient-key list — nothing is
+//!   re-derived or scanned per step.
+
+use crate::collectives::{extract_region, DeviceMem, Mesh};
+use crate::runtime::{HostTensor, Runtime};
+use crate::testutil::Rng;
+use crate::Result;
+
+use super::layout::{full_shape, gkey, pkey, ShardLayout, SyncOp};
+use super::{Engine, EnginePipeline, MicroBatch, BLOCK_PARAMS};
+
+/// Deterministic parameter init: full tensors are generated from a
+/// per-tensor seed and region-sliced identically for every replica, so
+/// every strategy (including hetero-TP) starts from the same global
+/// parameters as the single-device oracle.
+pub(crate) fn init_params(
+    runtime: &Runtime,
+    layout: &ShardLayout,
+    mesh: &mut Mesh,
+    seed: u64,
+) -> Result<()> {
+    let cfg = runtime.config;
+    let h = cfg.hidden;
+    for ((l, pidx), hs) in layout.iter_holdings() {
+        let name = BLOCK_PARAMS[*pidx];
+        let shape: Vec<usize> =
+            full_shape(&cfg, name).iter().map(|&n| n as usize).collect();
+        let full = init_tensor(seed, *l, name, &shape, h);
+        for holding in hs {
+            let piece = extract_region(&full, &holding.region)?;
+            mesh.devices[holding.dev].put(&pkey(*l, name), piece);
+        }
+    }
+    let v = cfg.vocab;
+    for (&fr, &lr) in layout.first_roots.iter().zip(layout.last_roots.iter()) {
+        let emb = init_tensor(seed, 10_000, "emb", &[v, h], h);
+        mesh.devices[fr].put("emb", emb);
+        let gf = HostTensor::f32(vec![h], vec![1.0; h])?;
+        let wout = init_tensor(seed, 10_001, "wout", &[h, v], h);
+        mesh.devices[lr].put("gf", gf);
+        mesh.devices[lr].put("wout", wout);
+    }
+    Ok(())
+}
+
+impl Engine {
+    /// One micro-batch through one pipeline (GPipe order inside the
+    /// deterministic interpreter: fwd all stages, then bwd reversed).
+    pub(crate) fn forward_backward(
+        &mut self,
+        pipe: &EnginePipeline,
+        mb: usize,
+        batch: &MicroBatch,
+    ) -> Result<f32> {
+        let cfg = self.runtime.config;
+        let (b, s) = (cfg.batch, cfg.seq);
+        let tok = HostTensor::i32(vec![b, s], batch.tokens.clone())?;
+        let tgt = HostTensor::i32(vec![b, s], batch.targets.clone())?;
+
+        // ---- forward
+        let first = &pipe.stages[0];
+        let root0 = first.devices[0];
+        let x0 = {
+            let emb = self.mesh.devices[root0].get("emb")?;
+            let out = self.runtime.call_refs("embed_fwd", &[emb, &tok])?;
+            out.into_iter().next().unwrap()
+        };
+        self.mesh.devices[root0].put("act", x0);
+        self.mesh.broadcast(root0, &first.devices, "act")?;
+
+        for (si, stage) in pipe.stages.iter().enumerate() {
+            if si > 0 {
+                let prev_root = pipe.stages[si - 1].devices[0];
+                self.mesh.send(prev_root, stage.devices[0], "act")?;
+                self.mesh.broadcast(stage.devices[0], &stage.devices, "act")?;
+            }
+            let tp = stage.tp();
+            let art = format!("block_fwd_tp{tp}");
+            for l in stage.layers.0..stage.layers.1 {
+                // save block input for recompute-in-backward
+                for &d in &stage.devices {
+                    let x = self.mesh.devices[d].get("act")?.clone();
+                    self.mesh.devices[d].put(&format!("save.mb{mb}.L{l}"), x);
+                }
+                for &d in &stage.devices {
+                    let dev = &self.mesh.devices[d];
+                    let mut inputs: Vec<&HostTensor> = Vec::with_capacity(9);
+                    for p in BLOCK_PARAMS {
+                        inputs.push(dev.get(&pkey(l, p))?);
+                    }
+                    inputs.push(dev.get("act")?);
+                    let y_part =
+                        self.runtime.call_refs(&art, &inputs)?.into_iter().next().unwrap();
+                    self.mesh.devices[d].put("part", y_part);
+                }
+                self.mesh.all_reduce(&stage.devices, "part")?;
+                for &d in &stage.devices {
+                    let part = self.mesh.devices[d].get("part")?.clone();
+                    let x = self.mesh.devices[d].get_mut("act")?;
+                    x.add_assign(&part)?;
+                }
+            }
+        }
+
+        // ---- head: loss + all gradients in one fused artifact call
+        let last_stage = pipe.stages.last().unwrap();
+        let last_root = last_stage.devices[0];
+        let (loss, dx) = {
+            let dev = &self.mesh.devices[last_root];
+            let out = self.runtime.call_refs(
+                "head_step",
+                &[dev.get("gf")?, dev.get("wout")?, dev.get("act")?, &tgt],
+            )?;
+            let mut it = out.into_iter();
+            let loss = it.next().unwrap();
+            let dx = it.next().unwrap();
+            accumulate(&mut self.mesh.devices[last_root], "grad.gf", it.next().unwrap())?;
+            accumulate(&mut self.mesh.devices[last_root], "grad.wout", it.next().unwrap())?;
+            (loss.as_f32()?[0], dx)
+        };
+        self.mesh.devices[last_root].put("dact", dx);
+        self.mesh.broadcast(last_root, &last_stage.devices, "dact")?;
+
+        // ---- backward
+        for (si, stage) in pipe.stages.iter().enumerate().rev() {
+            let tp = stage.tp();
+            let art = format!("block_bwd_tp{tp}");
+            for l in (stage.layers.0..stage.layers.1).rev() {
+                for &d in &stage.devices {
+                    let dev = &self.mesh.devices[d];
+                    let mut inputs: Vec<&HostTensor> = Vec::with_capacity(10);
+                    for p in BLOCK_PARAMS {
+                        inputs.push(dev.get(&pkey(l, p))?);
+                    }
+                    inputs.push(dev.get(&format!("save.mb{mb}.L{l}"))?);
+                    inputs.push(dev.get("dact")?);
+                    let outs = self.runtime.call_refs(&art, &inputs)?;
+                    let mut it = outs.into_iter();
+                    let dx_part = it.next().unwrap();
+                    self.mesh.devices[d].put("dpart", dx_part);
+                    for p in BLOCK_PARAMS {
+                        accumulate(&mut self.mesh.devices[d], &gkey(l, p), it.next().unwrap())?;
+                    }
+                    // free the saved activation
+                    let _ = self.mesh.devices[d].take(&format!("save.mb{mb}.L{l}"));
+                }
+                self.mesh.all_reduce(&stage.devices, "dpart")?;
+                for &d in &stage.devices {
+                    let dpart = self.mesh.devices[d].get("dpart")?.clone();
+                    let dx = self.mesh.devices[d].get_mut("dact")?;
+                    dx.add_assign(&dpart)?;
+                }
+            }
+            if si > 0 {
+                let prev = &pipe.stages[si - 1];
+                self.mesh.send(stage.devices[0], prev.devices[0], "dact")?;
+                self.mesh.broadcast(prev.devices[0], &prev.devices, "dact")?;
+            }
+        }
+
+        // ---- embedding gradient
+        let root0 = pipe.stages[0].devices[0];
+        let dx0 = self.mesh.devices[root0].get("dact")?;
+        let demb = self.runtime.call_refs("embed_bwd", &[&tok, dx0])?.into_iter().next().unwrap();
+        accumulate(&mut self.mesh.devices[root0], "grad.emb", demb)?;
+
+        Ok(loss)
+    }
+
+    /// Gradient synchronization from the cached [`ShardLayout`] plan, then
+    /// embedding/head reductions across pipeline roots, then `1/total_mb`
+    /// scaling over the cached gradient-key list.
+    pub(crate) fn sync_gradients(&mut self, total_mb: usize) -> Result<()> {
+        for op in &self.layout.sync_ops {
+            match op {
+                SyncOp::AllReduce { key, devs } => self.mesh.all_reduce(devs, key)?,
+                SyncOp::SliceReduce { key, parts } => {
+                    self.mesh.all_reduce_region(parts, key)?
+                }
+            }
+        }
+        self.mesh.all_reduce(&self.layout.first_roots, "grad.emb")?;
+        self.mesh.all_reduce(&self.layout.last_roots, "grad.gf")?;
+        self.mesh.all_reduce(&self.layout.last_roots, "grad.wout")?;
+
+        let scale = 1.0 / total_mb as f32;
+        for (dev, key) in &self.layout.grad_keys {
+            self.mesh.devices[*dev].get_mut(key)?.scale(scale)?;
+        }
+        Ok(())
+    }
+
+    /// AdamW over the layout's cached `(device, param, grad)` list;
+    /// gradients are consumed.
+    pub(crate) fn apply_updates(&mut self) -> Result<()> {
+        let step = self.step + 1;
+        for (dev, param_key, grad_key) in &self.layout.update_ops {
+            self.opt.update(&mut self.mesh.devices[*dev], param_key, grad_key, step)?;
+        }
+        Ok(())
+    }
+}
+
+/// Accumulate (or initialize) a gradient buffer.
+pub(crate) fn accumulate(dev: &mut DeviceMem, key: &str, t: HostTensor) -> Result<()> {
+    if dev.has(key) {
+        dev.get_mut(key)?.add_assign(&t)
+    } else {
+        dev.put(key, t);
+        Ok(())
+    }
+}
+
+/// Deterministic N(0, 0.02) init for a named tensor (gains = 1).
+pub(crate) fn init_tensor(
+    seed: u64,
+    layer: u32,
+    name: &str,
+    shape: &[usize],
+    _hidden: usize,
+) -> HostTensor {
+    let n: usize = shape.iter().product();
+    if name.starts_with('g') {
+        return HostTensor::f32(shape.to_vec(), vec![1.0; n]).unwrap();
+    }
+    let tag: u64 = name.bytes().fold(0u64, |a, b| a.wrapping_mul(131).wrapping_add(b as u64));
+    let mut rng = Rng::new(seed ^ (layer as u64) << 32 ^ tag);
+    let mut data = Vec::with_capacity(n);
+    // Box–Muller
+    while data.len() < n {
+        let u1 = rng.f64().max(1e-12);
+        let u2 = rng.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let th = 2.0 * std::f64::consts::PI * u2;
+        data.push((r * th.cos() * 0.02) as f32);
+        if data.len() < n {
+            data.push((r * th.sin() * 0.02) as f32);
+        }
+    }
+    HostTensor::f32(shape.to_vec(), data).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_deterministic_and_scaled() {
+        let a = init_tensor(7, 3, "wq", &[32, 32], 32);
+        let b = init_tensor(7, 3, "wq", &[32, 32], 32);
+        assert_eq!(a, b);
+        let c = init_tensor(7, 4, "wq", &[32, 32], 32);
+        assert_ne!(a, c);
+        let mean: f32 = a.as_f32().unwrap().iter().sum::<f32>() / 1024.0;
+        assert!(mean.abs() < 0.01);
+        let g = init_tensor(7, 0, "g1", &[8], 8);
+        assert_eq!(g.as_f32().unwrap(), &[1.0; 8]);
+    }
+
+    #[test]
+    fn region_slicing_tiles_full_tensor() {
+        use super::super::layout::{shard_region, SplitAxis};
+        let full = HostTensor::f32(vec![4, 6], (0..24).map(|x| x as f32).collect()).unwrap();
+        let c0 = extract_region(&full, &shard_region(&[4, 6], SplitAxis::Col, 2, 0)).unwrap();
+        let c1 = extract_region(&full, &shard_region(&[4, 6], SplitAxis::Col, 2, 1)).unwrap();
+        assert_eq!(c0.shape, vec![4, 3]);
+        assert_eq!(c0.as_f32().unwrap()[..3], [0.0, 1.0, 2.0]);
+        assert_eq!(c1.as_f32().unwrap()[..3], [3.0, 4.0, 5.0]);
+        let r1 = extract_region(&full, &shard_region(&[4, 6], SplitAxis::Row, 2, 1)).unwrap();
+        assert_eq!(r1.shape, vec![2, 6]);
+        assert_eq!(r1.as_f32().unwrap()[0], 12.0);
+        let rep = extract_region(&full, &shard_region(&[4, 6], SplitAxis::Replicated, 2, 1))
+            .unwrap();
+        assert_eq!(rep, full);
+    }
+
+    #[test]
+    fn accumulate_initializes_then_adds() {
+        let mut dev = DeviceMem::default();
+        let t = HostTensor::f32(vec![2], vec![1.0, 2.0]).unwrap();
+        accumulate(&mut dev, "g", t.clone()).unwrap();
+        accumulate(&mut dev, "g", t).unwrap();
+        assert_eq!(dev.get("g").unwrap().as_f32().unwrap(), &[2.0, 4.0]);
+    }
+}

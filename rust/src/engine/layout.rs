@@ -1,0 +1,444 @@
+//! The shard-layout layer: a first-class, typed ownership map computed
+//! **once per strategy** and reused by parameter init, gradient sync, the
+//! optimizer, and §6 graph switching.
+//!
+//! The seed engine re-derived "who owns which shard" independently in four
+//! places (init, sync, update, switch), rebuilding `BTreeMap` sync groups
+//! every step and hard-rejecting per-layer heterogeneous TP because the
+//! `(layer, param, shard index)` keying cannot describe it. [`ShardLayout`]
+//! replaces all of that with *region* bookkeeping on the global parameter
+//! tensors (the same `hspmd::slices` geometry the §4 resolver and §4.3 BSR
+//! planner use):
+//!
+//! * every device's holding of every `(layer, param)` is an axis-aligned
+//!   [`Region`] of the full tensor — TP degree is just the region width, so
+//!   different DP replicas may hold the same layer at different TP degrees;
+//! * the DP gradient-sync plan ([`SyncOp`]) is the finest-grained slice
+//!   grid over those regions: slices shared by holders with identical local
+//!   extents reduce with a plain `AllReduce`, ragged sharings reduce
+//!   region-wise ([`crate::collectives::Mesh::all_reduce_region`]);
+//! * [`ShardLayout::annotation`] exports each parameter's holding as an
+//!   HSPMD [`Annotation`] (one sharding subgroup per pipeline), which is
+//!   what lets `Engine::switch_to` hand the §6.2 fused-BSR planner the
+//!   exact engine layout (DESIGN.md §4).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::collectives::localize;
+use crate::hspmd::annot::{Annotation, Subgroup};
+use crate::hspmd::dg::{DeviceGroup, Rank};
+use crate::hspmd::ds::{DistStates, DUPLICATE};
+use crate::hspmd::slices::{DeviceRegion, Interval, Region, SliceGrid};
+use crate::runtime::ManifestConfig;
+use crate::{Error, Result};
+
+use super::{EngineStrategy, BLOCK_PARAMS};
+
+/// Parameter-store key of a block parameter shard.
+pub fn pkey(l: u32, p: &str) -> String {
+    format!("L{l}.{p}")
+}
+
+/// Gradient-store key of a block parameter shard.
+pub fn gkey(l: u32, p: &str) -> String {
+    format!("grad.L{l}.{p}")
+}
+
+/// Megatron sharding axis of a block parameter.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SplitAxis {
+    /// Replicated across the TP group (RMSNorm gains).
+    Replicated,
+    /// Column-split (dim 1): `wq`, `wk`, `wv`, `w1`.
+    Col,
+    /// Row-split (dim 0): `wo`, `w2`.
+    Row,
+}
+
+/// Sharding axis of a named block parameter.
+pub fn split_axis(name: &str) -> SplitAxis {
+    match name {
+        "wq" | "wk" | "wv" | "w1" => SplitAxis::Col,
+        "wo" | "w2" => SplitAxis::Row,
+        _ => SplitAxis::Replicated,
+    }
+}
+
+/// Full (unsharded) shape of a block parameter.
+pub fn full_shape(cfg: &ManifestConfig, name: &str) -> Vec<u64> {
+    let (h, f) = (cfg.hidden as u64, cfg.ffn as u64);
+    match name {
+        "g1" | "g2" => vec![h],
+        "w1" => vec![h, f],
+        "w2" => vec![f, h],
+        _ => vec![h, h], // wq, wk, wv, wo
+    }
+}
+
+/// Full shape of a non-block parameter (`emb`, `gf`, `wout`).
+pub fn special_shape(cfg: &ManifestConfig, name: &str) -> Vec<u64> {
+    let (h, v) = (cfg.hidden as u64, cfg.vocab as u64);
+    match name {
+        "emb" => vec![v, h],
+        "wout" => vec![h, v],
+        _ => vec![h], // gf
+    }
+}
+
+/// The global region shard `j` of `tp` owns under `axis` sharding.
+pub fn shard_region(shape: &[u64], axis: SplitAxis, tp: usize, j: usize) -> Region {
+    let mut r: Region = shape.iter().map(|&n| Interval { lo: 0, hi: n }).collect();
+    let d = match axis {
+        SplitAxis::Replicated => return r,
+        SplitAxis::Col => 1,
+        SplitAxis::Row => 0,
+    };
+    let n = shape[d];
+    let (t, j) = (tp as u64, j as u64);
+    r[d] = Interval { lo: n * j / t, hi: n * (j + 1) / t };
+    r
+}
+
+/// One device's holding of one `(layer, param)`.
+#[derive(Clone, Debug)]
+pub struct Holding {
+    /// Mesh device id.
+    pub dev: usize,
+    /// Pipeline (DP replica) index.
+    pub pipeline: usize,
+    /// TP shard index within the stage.
+    pub shard: usize,
+    /// TP degree of the stage holding this layer.
+    pub tp: usize,
+    /// Owned box of the global parameter tensor.
+    pub region: Region,
+}
+
+/// One gradient-synchronization step of the cached per-strategy plan.
+#[derive(Clone, Debug)]
+pub enum SyncOp {
+    /// Plain all-reduce: every member holds the same extents.
+    AllReduce {
+        /// Gradient key.
+        key: String,
+        /// Participating devices.
+        devs: Vec<usize>,
+    },
+    /// Region-wise all-reduce of one atomic slice shared by holders whose
+    /// local coordinates differ (per-layer heterogeneous TP).
+    SliceReduce {
+        /// Gradient key.
+        key: String,
+        /// `(device, local region)` per holder.
+        parts: Vec<(usize, Region)>,
+    },
+}
+
+/// The typed `(layer, param, shard)` ownership map plus every derived
+/// group the engine needs per step — computed once per strategy.
+#[derive(Clone, Debug)]
+pub struct ShardLayout {
+    holdings: BTreeMap<(u32, usize), Vec<Holding>>,
+    /// DP/TP gradient-reduction plan for block parameters, in deterministic
+    /// `(layer, param)` order.
+    pub sync_ops: Vec<SyncOp>,
+    /// Stage-0 root device of each pipeline (embedding owners).
+    pub first_roots: Vec<usize>,
+    /// Last-stage root device of each pipeline (head owners).
+    pub last_roots: Vec<usize>,
+    /// Every `(device, gradient key)` produced by a step, for scaling
+    /// without scanning device stores.
+    pub grad_keys: Vec<(usize, String)>,
+    /// Every `(device, param key, grad key)` optimizer application.
+    pub update_ops: Vec<(usize, String, String)>,
+    owned: BTreeMap<usize, BTreeSet<String>>,
+}
+
+impl ShardLayout {
+    /// Build the layout for a validated strategy.
+    pub fn build(cfg: &ManifestConfig, strategy: &EngineStrategy) -> Result<ShardLayout> {
+        let mut holdings: BTreeMap<(u32, usize), Vec<Holding>> = BTreeMap::new();
+        for (pi, pipe) in strategy.pipelines.iter().enumerate() {
+            for stage in &pipe.stages {
+                let tp = stage.tp();
+                for l in stage.layers.0..stage.layers.1 {
+                    for (pidx, name) in BLOCK_PARAMS.iter().enumerate() {
+                        let shape = full_shape(cfg, name);
+                        let axis = split_axis(name);
+                        for (j, &dev) in stage.devices.iter().enumerate() {
+                            holdings.entry((l, pidx)).or_default().push(Holding {
+                                dev,
+                                pipeline: pi,
+                                shard: j,
+                                tp,
+                                region: shard_region(&shape, axis, tp, j),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+
+        // Gradient-sync plan: finest-grained slice grid per (layer, param).
+        // Gains are full-region holdings on every TP member, so their single
+        // atomic slice reduces raw per-device partials across *all* holders
+        // (subsuming the seed's separate TP-internal gain pass); split
+        // params reduce per atomic slice across the DP replicas sharing it.
+        let mut sync_ops = vec![];
+        for ((l, pidx), hs) in &holdings {
+            if hs.len() <= 1 {
+                continue;
+            }
+            let name = BLOCK_PARAMS[*pidx];
+            let key = gkey(*l, name);
+            let shape = full_shape(cfg, name);
+            let regs: Vec<DeviceRegion> = hs
+                .iter()
+                .map(|h| DeviceRegion {
+                    rank: h.dev as Rank,
+                    region: h.region.clone(),
+                    partial: false,
+                    subgroup: h.pipeline,
+                })
+                .collect();
+            let grid = SliceGrid::build(&shape, &[regs.as_slice()]);
+            for slice in grid.slices() {
+                let holders = SliceGrid::holders(&slice, &regs);
+                if holders.len() <= 1 {
+                    continue;
+                }
+                if holders.iter().all(|h| h.region == slice) {
+                    sync_ops.push(SyncOp::AllReduce {
+                        key: key.clone(),
+                        devs: holders.iter().map(|h| h.rank as usize).collect(),
+                    });
+                } else {
+                    sync_ops.push(SyncOp::SliceReduce {
+                        key: key.clone(),
+                        parts: holders
+                            .iter()
+                            .map(|h| (h.rank as usize, localize(&slice, &h.region)))
+                            .collect(),
+                    });
+                }
+            }
+        }
+
+        let first_roots: Vec<usize> =
+            strategy.pipelines.iter().map(|p| p.stages[0].devices[0]).collect();
+        let last_roots: Vec<usize> = strategy
+            .pipelines
+            .iter()
+            .map(|p| p.stages.last().unwrap().devices[0])
+            .collect();
+
+        let mut grad_keys = vec![];
+        let mut update_ops = vec![];
+        let mut owned: BTreeMap<usize, BTreeSet<String>> = BTreeMap::new();
+        for ((l, pidx), hs) in &holdings {
+            let name = BLOCK_PARAMS[*pidx];
+            for h in hs {
+                grad_keys.push((h.dev, gkey(*l, name)));
+                update_ops.push((h.dev, pkey(*l, name), gkey(*l, name)));
+                owned.entry(h.dev).or_default().insert(pkey(*l, name));
+            }
+        }
+        for (&fr, &lr) in first_roots.iter().zip(last_roots.iter()) {
+            grad_keys.push((fr, "grad.emb".into()));
+            grad_keys.push((lr, "grad.gf".into()));
+            grad_keys.push((lr, "grad.wout".into()));
+            update_ops.push((fr, "emb".into(), "grad.emb".into()));
+            update_ops.push((lr, "gf".into(), "grad.gf".into()));
+            update_ops.push((lr, "wout".into(), "grad.wout".into()));
+            owned.entry(fr).or_default().insert("emb".into());
+            owned.entry(lr).or_default().insert("gf".into());
+            owned.entry(lr).or_default().insert("wout".into());
+        }
+
+        Ok(ShardLayout {
+            holdings,
+            sync_ops,
+            first_roots,
+            last_roots,
+            grad_keys,
+            update_ops,
+            owned,
+        })
+    }
+
+    /// Holdings of one `(layer, param index)` (empty if uncovered).
+    pub fn holdings_of(&self, l: u32, pidx: usize) -> &[Holding] {
+        self.holdings.get(&(l, pidx)).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Iterate all `(layer, param index) -> holdings` entries.
+    pub fn iter_holdings(
+        &self,
+    ) -> impl Iterator<Item = (&(u32, usize), &Vec<Holding>)> + '_ {
+        self.holdings.iter()
+    }
+
+    /// The region `dev` owns of `(layer, param)`, if any.
+    pub fn region_of(&self, l: u32, pidx: usize, dev: usize) -> Option<&Region> {
+        self.holdings
+            .get(&(l, pidx))?
+            .iter()
+            .find(|h| h.dev == dev)
+            .map(|h| &h.region)
+    }
+
+    /// Parameter keys `dev` owns under this layout (`L*.{param}`, `emb`,
+    /// `gf`, `wout`), or `None` if the device holds nothing.
+    pub fn owned_keys(&self, dev: usize) -> Option<&BTreeSet<String>> {
+        self.owned.get(&dev)
+    }
+
+    /// Export the holding of `(layer, param)` as an HSPMD annotation: one
+    /// sharding subgroup per pipeline (device order = shard order), gains
+    /// replicated, split params `split(axis, tp)`. Different subgroups may
+    /// carry different TP degrees — the paper's asymmetric sharding.
+    pub fn annotation(&self, l: u32, pidx: usize) -> Result<Annotation> {
+        let hs = self
+            .holdings
+            .get(&(l, pidx))
+            .ok_or_else(|| Error::Engine(format!("no holdings for layer {l} param {pidx}")))?;
+        let axis = split_axis(BLOCK_PARAMS[pidx]);
+        let mut per_pipe: BTreeMap<usize, Vec<&Holding>> = BTreeMap::new();
+        for h in hs {
+            per_pipe.entry(h.pipeline).or_default().push(h);
+        }
+        let mut groups = vec![];
+        for (_pi, mut members) in per_pipe {
+            members.sort_by_key(|h| h.shard);
+            let tp = members.len() as u32;
+            let dg = DeviceGroup::new(members.iter().map(|h| h.dev as Rank).collect())?;
+            let ds = match axis {
+                SplitAxis::Replicated => DistStates::duplicate(tp),
+                SplitAxis::Col => DistStates::split(1, tp),
+                SplitAxis::Row => DistStates::split(0, tp),
+            };
+            groups.push(Subgroup::new(dg, ds)?);
+        }
+        Annotation::new(groups, DUPLICATE)
+    }
+
+    /// Annotation of a root-held tensor (`emb`/`gf`/`wout`): replicated
+    /// across the pipeline roots.
+    pub fn root_annotation(roots: &[usize]) -> Result<Annotation> {
+        let dg = DeviceGroup::new(roots.iter().map(|&r| r as Rank).collect())?;
+        Annotation::spmd(dg, DistStates::duplicate(roots.len() as u32))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{EnginePipeline, EngineStage};
+    use crate::runtime::native;
+
+    fn hetero_strategy() -> EngineStrategy {
+        // same 8 layers at TP2 (pipeline 0, devices 0-1) and TP1 (pipeline
+        // 1, device 2) — the previously-rejected asymmetric case.
+        EngineStrategy {
+            name: "hetero".into(),
+            pipelines: vec![
+                EnginePipeline {
+                    stages: vec![EngineStage { devices: vec![0, 1], layers: (0, 8) }],
+                    num_microbatches: 1,
+                },
+                EnginePipeline {
+                    stages: vec![EngineStage { devices: vec![2], layers: (0, 8) }],
+                    num_microbatches: 1,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn homogeneous_sync_plan_uses_plain_allreduce() {
+        let cfg = native::tiny_config();
+        let s = EngineStrategy::uniform("dp2tp2", 2, 2, 1, 8, 1);
+        let layout = ShardLayout::build(&cfg, &s).unwrap();
+        assert!(!layout.sync_ops.is_empty());
+        assert!(layout
+            .sync_ops
+            .iter()
+            .all(|op| matches!(op, SyncOp::AllReduce { .. })));
+        // gains reduce across all 4 holders; split shards across the 2 DP
+        // replicas holding the same shard index.
+        let (mut gain_groups, mut shard_groups) = (0, 0);
+        for op in &layout.sync_ops {
+            if let SyncOp::AllReduce { key, devs } = op {
+                if key.ends_with(".g1") || key.ends_with(".g2") {
+                    assert_eq!(devs.len(), 4, "{key}");
+                    gain_groups += 1;
+                } else {
+                    assert_eq!(devs.len(), 2, "{key}");
+                    shard_groups += 1;
+                }
+            }
+        }
+        assert_eq!(gain_groups, 8 * 2);
+        assert_eq!(shard_groups, 8 * 6 * 2);
+    }
+
+    #[test]
+    fn hetero_tp_sync_plan_is_slice_aware() {
+        let cfg = native::tiny_config();
+        let layout = ShardLayout::build(&cfg, &hetero_strategy()).unwrap();
+        let mut saw_slice = false;
+        for op in &layout.sync_ops {
+            match op {
+                SyncOp::AllReduce { key, devs } => {
+                    // only gains stay whole-tensor (3 holders: 0, 1, 2)
+                    assert!(key.ends_with(".g1") || key.ends_with(".g2"), "{key}");
+                    assert_eq!(devs.len(), 3);
+                }
+                SyncOp::SliceReduce { key, parts } => {
+                    saw_slice = true;
+                    assert_eq!(parts.len(), 2, "{key}: tp2 shard + tp1 sub-slice");
+                    // extents agree across parts
+                    let e0: Vec<u64> =
+                        parts[0].1.iter().map(|iv| iv.len()).collect();
+                    let e1: Vec<u64> =
+                        parts[1].1.iter().map(|iv| iv.len()).collect();
+                    assert_eq!(e0, e1, "{key}");
+                }
+            }
+        }
+        assert!(saw_slice);
+    }
+
+    #[test]
+    fn annotations_describe_asymmetric_sharding() {
+        let cfg = native::tiny_config();
+        let layout = ShardLayout::build(&cfg, &hetero_strategy()).unwrap();
+        // wq (param index 1) is column-split
+        let a = layout.annotation(0, 1).unwrap();
+        assert_eq!(a.hsize(), 2);
+        assert_eq!(a.groups[0].dg.ranks(), &[0, 1]);
+        assert_eq!(a.groups[1].dg.ranks(), &[2]);
+        let shape = full_shape(&cfg, "wq");
+        let regs = crate::hspmd::slices::regions(&a, &shape).unwrap();
+        // pipeline 0 splits columns, pipeline 1 holds the full tensor
+        assert_eq!(regs[0].region[1], Interval { lo: 0, hi: shape[1] / 2 });
+        assert_eq!(regs[2].region[1], Interval { lo: 0, hi: shape[1] });
+    }
+
+    #[test]
+    fn ownership_map_and_roots() {
+        let cfg = native::tiny_config();
+        let s = EngineStrategy::uniform("dp2pp2", 2, 1, 2, 8, 1);
+        let layout = ShardLayout::build(&cfg, &s).unwrap();
+        assert_eq!(layout.first_roots, vec![0, 2]);
+        assert_eq!(layout.last_roots, vec![1, 3]);
+        let d0 = layout.owned_keys(0).unwrap();
+        assert!(d0.contains("emb"));
+        assert!(d0.contains("L0.wq"));
+        assert!(!d0.contains("L7.wq"));
+        assert!(layout.owned_keys(9).is_none());
+        assert!(layout.region_of(0, 1, 0).is_some());
+        assert!(layout.region_of(7, 1, 0).is_none());
+    }
+
+}

@@ -2,32 +2,34 @@
 //!
 //! Executes a distributed training program — TP-sharded parallel blocks,
 //! pipeline stages, data-parallel replicas — over a [`Mesh`] of simulated
-//! devices, with all model compute performed by the AOT artifacts through
-//! PJRT ([`Runtime`]) and every inter-device byte moved by the real
+//! devices, with all model compute performed by artifact calls through the
+//! [`Runtime`] (PJRT AOT artifacts when present, the native Rust reference
+//! backend otherwise) and every inter-device byte moved by the real
 //! [`collectives`](crate::collectives). Distributed numerics are exact:
 //! tests compare multi-device losses/gradients against the single-device
 //! oracle configuration.
 //!
-//! Execution contract with the L2 artifacts (see `python/compile/model.py`):
-//!
-//! * block forward returns a *partial* output; the engine all-reduces over
-//!   the TP group and adds the residual;
-//! * block backward returns `(dx_partial, dparams_shard)`; the engine
-//!   computes `dx = dy + AllReduce(dx_partial)`; replicated RMSNorm gains'
-//!   gradients are all-reduced within the TP group;
-//! * DP replicas all-reduce gradients layer-by-layer, then every device
-//!   runs AdamW locally on its shards.
+//! The engine is layered (DESIGN.md §4): [`layout`] holds the
+//! [`ShardLayout`] — the typed `(layer, param, shard)` ownership map with
+//! cached sync/update/ownership plans, computed once per strategy, whose
+//! region-based bookkeeping also enables per-layer heterogeneous TP;
+//! [`exec`] is the forward/backward interpreter plus the layout-driven
+//! per-step passes; [`switch`] executes §6 strategy transitions from a
+//! [`comm::FusedBsrPlan`](crate::comm::FusedBsrPlan); [`optim`] is AdamW
+//! on each device's local shards.
 
+pub mod exec;
+pub mod layout;
 pub mod optim;
-
-use std::collections::BTreeMap;
+pub mod switch;
 
 use crate::collectives::Mesh;
-use crate::runtime::{HostTensor, ManifestConfig, Runtime};
-use crate::testutil::Rng;
+use crate::runtime::{ManifestConfig, Runtime};
 use crate::{Error, Result};
 
+pub use layout::{ShardLayout, SyncOp};
 pub use optim::AdamW;
+pub use switch::EngineSwitchReport;
 
 /// The 8 per-block parameter names, artifact input order.
 pub const BLOCK_PARAMS: [&str; 8] = ["g1", "wq", "wk", "wv", "wo", "g2", "w1", "w2"];
@@ -91,9 +93,10 @@ impl EngineStrategy {
         self.pipelines.iter().flat_map(|p| p.stages.iter()).map(|s| s.devices.len()).sum()
     }
 
-    /// Validate against the model config + supported TP degrees.
+    /// Validate against the model config + supported TP degrees. Per-layer
+    /// heterogeneous TP across DP replicas is allowed: the [`ShardLayout`]
+    /// reduces shared slices region-wise (DESIGN.md §4).
     pub fn validate(&self, cfg: &ManifestConfig, tp_degrees: &[usize]) -> Result<()> {
-        let mut tp_of_layer: BTreeMap<u32, usize> = BTreeMap::new();
         for p in &self.pipelines {
             let mut next = 0u32;
             for s in &p.stages {
@@ -110,20 +113,6 @@ impl EngineStrategy {
                         self.name,
                         s.tp()
                     )));
-                }
-                for l in s.layers.0..s.layers.1 {
-                    if let Some(&prev) = tp_of_layer.get(&l) {
-                        if prev != s.tp() {
-                            return Err(Error::Engine(format!(
-                                "{}: layer {l} held at tp {prev} and {} — hetero TP per layer \
-                                 is plan-level only (DESIGN.md §2)",
-                                self.name,
-                                s.tp()
-                            )));
-                        }
-                    } else {
-                        tp_of_layer.insert(l, s.tp());
-                    }
                 }
             }
             if next != cfg.layers {
@@ -160,7 +149,7 @@ pub struct StepStats {
     pub comm_ops: u64,
 }
 
-/// The engine: runtime + mesh + strategy + optimizer.
+/// The engine: runtime + mesh + strategy + cached layout + optimizer.
 pub struct Engine {
     /// Artifact runtime.
     pub runtime: Runtime,
@@ -168,88 +157,56 @@ pub struct Engine {
     pub mesh: Mesh,
     /// Current strategy.
     pub strategy: EngineStrategy,
+    /// Ownership/sync/update plans for the current strategy (rebuilt only
+    /// on [`Engine::switch_to`]).
+    pub layout: ShardLayout,
+    /// TP degrees the runtime has block artifacts for.
+    pub tp_degrees: Vec<usize>,
     /// Optimizer.
     pub opt: AdamW,
-    step: u64,
-}
-
-fn pkey(l: u32, p: &str) -> String {
-    format!("L{l}.{p}")
-}
-fn gkey(l: u32, p: &str) -> String {
-    format!("grad.L{l}.{p}")
+    pub(crate) step: u64,
 }
 
 impl Engine {
-    /// Build an engine: open artifacts, validate the strategy, initialize
-    /// parameters deterministically (identical across DP replicas).
+    /// Build an engine: open artifacts (native-backend fallback when
+    /// `artifacts_dir` has no manifest), validate the strategy, and
+    /// initialize parameters deterministically across DP replicas.
     pub fn new(artifacts_dir: &str, strategy: EngineStrategy, seed: u64, lr: f32) -> Result<Engine> {
-        let runtime = Runtime::open(artifacts_dir)?;
+        let runtime = Runtime::open_or_native(artifacts_dir)?;
+        Engine::with_runtime(runtime, strategy, seed, lr)
+    }
+
+    /// Build an engine over an explicit [`Runtime`] (tests and benches use
+    /// this with [`Runtime::native`]).
+    pub fn with_runtime(
+        runtime: Runtime,
+        strategy: EngineStrategy,
+        seed: u64,
+        lr: f32,
+    ) -> Result<Engine> {
         let cfg = runtime.config;
         let tp_degrees: Vec<usize> = [1usize, 2, 4]
             .into_iter()
             .filter(|d| runtime.metas_has(&format!("block_fwd_tp{d}")))
             .collect();
         strategy.validate(&cfg, &tp_degrees)?;
-        let mut mesh = Mesh::new(strategy.num_devices().max(
-            strategy
-                .pipelines
-                .iter()
-                .flat_map(|p| p.stages.iter().flat_map(|s| s.devices.iter().copied()))
-                .max()
-                .map(|m| m + 1)
-                .unwrap_or(0),
-        ));
-        let mut eng = Engine {
+        let layout = ShardLayout::build(&cfg, &strategy)?;
+        let max_dev = strategy
+            .pipelines
+            .iter()
+            .flat_map(|p| p.stages.iter().flat_map(|s| s.devices.iter().copied()))
+            .max();
+        let mut mesh = Mesh::new(strategy.num_devices().max(max_dev.map(|m| m + 1).unwrap_or(0)));
+        exec::init_params(&runtime, &layout, &mut mesh, seed)?;
+        Ok(Engine {
             runtime,
-            mesh: Mesh::new(0),
-            strategy: strategy.clone(),
+            mesh,
+            strategy,
+            layout,
+            tp_degrees,
             opt: AdamW::new(lr),
             step: 0,
-        };
-        eng.init_params(&mut mesh, seed)?;
-        eng.mesh = mesh;
-        Ok(eng)
-    }
-
-    /// Deterministic parameter init: full tensors are generated from a
-    /// per-tensor seed and sharded identically for every DP replica.
-    fn init_params(&self, mesh: &mut Mesh, seed: u64) -> Result<()> {
-        let cfg = self.runtime.config;
-        let (h, f, v) = (cfg.hidden, cfg.ffn, cfg.vocab);
-        let full_shapes: [(&str, Vec<usize>); 8] = [
-            ("g1", vec![h]),
-            ("wq", vec![h, h]),
-            ("wk", vec![h, h]),
-            ("wv", vec![h, h]),
-            ("wo", vec![h, h]),
-            ("g2", vec![h]),
-            ("w1", vec![h, f]),
-            ("w2", vec![f, h]),
-        ];
-        for p in &self.strategy.pipelines {
-            for s in &p.stages {
-                let tp = s.tp();
-                for l in s.layers.0..s.layers.1 {
-                    for (name, shape) in &full_shapes {
-                        let full = init_tensor(seed, l, name, shape, h);
-                        for (j, &d) in s.devices.iter().enumerate() {
-                            let shard = shard_param(&full, name, tp, j)?;
-                            mesh.devices[d].put(&pkey(l, name), shard);
-                        }
-                    }
-                }
-            }
-            // embedding on stage-0 rank 0; head on last-stage rank 0
-            let emb = init_tensor(seed, 10_000, "emb", &vec![v, h], h);
-            mesh.devices[p.stages[0].devices[0]].put("emb", emb);
-            let gf = HostTensor::f32(vec![h], vec![1.0; h])?;
-            let wout = init_tensor(seed, 10_001, "wout", &vec![h, v], h);
-            let last = *p.stages.last().unwrap().devices.first().unwrap();
-            mesh.devices[last].put("gf", gf);
-            mesh.devices[last].put("wout", wout);
-        }
-        Ok(())
+        })
     }
 
     /// Run one training step over per-pipeline micro-batch providers.
@@ -259,7 +216,6 @@ impl Engine {
         &mut self,
         data: &mut dyn FnMut(usize, usize) -> MicroBatch,
     ) -> Result<StepStats> {
-        let cfg = self.runtime.config;
         let wire0 = self.mesh.wire_elems;
         let ops0 = self.mesh.ops;
         let mut total_loss = 0f32;
@@ -275,554 +231,14 @@ impl Engine {
             }
         }
 
-        self.sync_gradients(&pipelines, total_mb)?;
-        self.apply_updates(&pipelines)?;
+        self.sync_gradients(total_mb)?;
+        self.apply_updates()?;
         self.step += 1;
-        let _ = cfg;
         Ok(StepStats {
             loss: total_loss / total_mb as f32,
             wire_elems: self.mesh.wire_elems - wire0,
             comm_ops: self.mesh.ops - ops0,
         })
-    }
-
-    /// One micro-batch through one pipeline (GPipe order inside the
-    /// deterministic interpreter: fwd all stages, then bwd reversed).
-    fn forward_backward(
-        &mut self,
-        pipe: &EnginePipeline,
-        mb: usize,
-        batch: &MicroBatch,
-    ) -> Result<f32> {
-        let cfg = self.runtime.config;
-        let (b, s) = (cfg.batch, cfg.seq);
-        let tok = HostTensor::i32(vec![b, s], batch.tokens.clone())?;
-        let tgt = HostTensor::i32(vec![b, s], batch.targets.clone())?;
-
-        // ---- forward
-        let first = &pipe.stages[0];
-        let root0 = first.devices[0];
-        let x0 = {
-            let emb = self.mesh.devices[root0].get("emb")?;
-            let out = self.runtime.call_refs("embed_fwd", &[emb, &tok])?;
-            out.into_iter().next().unwrap()
-        };
-        self.mesh.devices[root0].put("act", x0);
-        self.mesh.broadcast(root0, &first.devices, "act")?;
-
-        for (si, stage) in pipe.stages.iter().enumerate() {
-            if si > 0 {
-                let prev_root = pipe.stages[si - 1].devices[0];
-                self.mesh.send(prev_root, stage.devices[0], "act")?;
-                self.mesh.broadcast(stage.devices[0], &stage.devices, "act")?;
-            }
-            let tp = stage.tp();
-            let art = format!("block_fwd_tp{tp}");
-            for l in stage.layers.0..stage.layers.1 {
-                // save block input for recompute-in-backward
-                for &d in &stage.devices {
-                    let x = self.mesh.devices[d].get("act")?.clone();
-                    self.mesh.devices[d].put(&format!("save.mb{mb}.L{l}"), x);
-                }
-                for &d in &stage.devices {
-                    let dev = &self.mesh.devices[d];
-                    let mut inputs: Vec<&HostTensor> = Vec::with_capacity(9);
-                    for p in BLOCK_PARAMS {
-                        inputs.push(dev.get(&pkey(l, p))?);
-                    }
-                    inputs.push(dev.get("act")?);
-                    let y_part =
-                        self.runtime.call_refs(&art, &inputs)?.into_iter().next().unwrap();
-                    self.mesh.devices[d].put("part", y_part);
-                }
-                self.mesh.all_reduce(&stage.devices, "part")?;
-                for &d in &stage.devices {
-                    let part = self.mesh.devices[d].get("part")?.clone();
-                    let x = self.mesh.devices[d].get_mut("act")?;
-                    x.add_assign(&part)?;
-                }
-            }
-        }
-
-        // ---- head: loss + all gradients in one fused artifact call
-        let last_stage = pipe.stages.last().unwrap();
-        let last_root = last_stage.devices[0];
-        let (loss, dx) = {
-            let dev = &self.mesh.devices[last_root];
-            let out = self.runtime.call_refs(
-                "head_step",
-                &[dev.get("gf")?, dev.get("wout")?, dev.get("act")?, &tgt],
-            )?;
-            let mut it = out.into_iter();
-            let loss = it.next().unwrap();
-            let dx = it.next().unwrap();
-            accumulate(&mut self.mesh.devices[last_root], "grad.gf", it.next().unwrap())?;
-            accumulate(&mut self.mesh.devices[last_root], "grad.wout", it.next().unwrap())?;
-            (loss.as_f32()?[0], dx)
-        };
-        self.mesh.devices[last_root].put("dact", dx);
-        self.mesh.broadcast(last_root, &last_stage.devices, "dact")?;
-
-        // ---- backward
-        for (si, stage) in pipe.stages.iter().enumerate().rev() {
-            let tp = stage.tp();
-            let art = format!("block_bwd_tp{tp}");
-            for l in (stage.layers.0..stage.layers.1).rev() {
-                for &d in &stage.devices {
-                    let dev = &self.mesh.devices[d];
-                    let mut inputs: Vec<&HostTensor> = Vec::with_capacity(10);
-                    for p in BLOCK_PARAMS {
-                        inputs.push(dev.get(&pkey(l, p))?);
-                    }
-                    inputs.push(dev.get(&format!("save.mb{mb}.L{l}"))?);
-                    inputs.push(dev.get("dact")?);
-                    let outs = self.runtime.call_refs(&art, &inputs)?;
-                    let mut it = outs.into_iter();
-                    let dx_part = it.next().unwrap();
-                    self.mesh.devices[d].put("dpart", dx_part);
-                    for p in BLOCK_PARAMS {
-                        accumulate(&mut self.mesh.devices[d], &gkey(l, p), it.next().unwrap())?;
-                    }
-                    // free the saved activation
-                    let _ = self.mesh.devices[d].take(&format!("save.mb{mb}.L{l}"));
-                }
-                self.mesh.all_reduce(&stage.devices, "dpart")?;
-                for &d in &stage.devices {
-                    let dpart = self.mesh.devices[d].get("dpart")?.clone();
-                    let dx = self.mesh.devices[d].get_mut("dact")?;
-                    dx.add_assign(&dpart)?;
-                }
-            }
-            if si > 0 {
-                let prev = &pipe.stages[si - 1];
-                self.mesh.send(stage.devices[0], prev.devices[0], "dact")?;
-                self.mesh.broadcast(prev.devices[0], &prev.devices, "dact")?;
-            }
-        }
-
-        // ---- embedding gradient
-        let root0 = pipe.stages[0].devices[0];
-        let dx0 = self.mesh.devices[root0].get("dact")?;
-        let demb = self.runtime.call_refs("embed_bwd", &[&tok, dx0])?.into_iter().next().unwrap();
-        accumulate(&mut self.mesh.devices[root0], "grad.emb", demb)?;
-
-        Ok(loss)
-    }
-
-    /// Gradient synchronization: replicated RMSNorm gains all-reduce within
-    /// each TP group; every (layer, shard) all-reduces across the pipelines
-    /// holding it; embedding/head across pipeline roots. All grads scale by
-    /// `1/total_microbatches`.
-    fn sync_gradients(&mut self, pipelines: &[EnginePipeline], total_mb: usize) -> Result<()> {
-        // TP-internal gain sync (per stage)
-        for p in pipelines {
-            for s in &p.stages {
-                if s.tp() > 1 {
-                    for l in s.layers.0..s.layers.1 {
-                        for p_name in ["g1", "g2"] {
-                            self.mesh.all_reduce(&s.devices, &gkey(l, p_name))?;
-                        }
-                    }
-                }
-            }
-        }
-        // DP sync: group devices by (layer, param, shard index)
-        let mut groups: BTreeMap<(u32, &str, usize), Vec<usize>> = BTreeMap::new();
-        for p in pipelines {
-            for s in &p.stages {
-                for l in s.layers.0..s.layers.1 {
-                    for (j, &d) in s.devices.iter().enumerate() {
-                        for p_name in BLOCK_PARAMS {
-                            groups.entry((l, p_name, j)).or_default().push(d);
-                        }
-                    }
-                }
-            }
-        }
-        for ((l, p_name, _), devs) in groups {
-            if devs.len() > 1 {
-                self.mesh.all_reduce(&devs, &gkey(l, p_name))?;
-            }
-        }
-        // embedding / head across pipeline roots
-        let first_roots: Vec<usize> =
-            pipelines.iter().map(|p| p.stages[0].devices[0]).collect();
-        let last_roots: Vec<usize> =
-            pipelines.iter().map(|p| p.stages.last().unwrap().devices[0]).collect();
-        self.mesh.all_reduce(&first_roots, "grad.emb")?;
-        self.mesh.all_reduce(&last_roots, "grad.gf")?;
-        self.mesh.all_reduce(&last_roots, "grad.wout")?;
-
-        // scale by 1/total_mb
-        let scale = 1.0 / total_mb as f32;
-        for d in 0..self.mesh.len() {
-            for key in self.mesh.devices[d].keys() {
-                if key.starts_with("grad.") {
-                    self.mesh.devices[d].get_mut(&key)?.scale(scale)?;
-                }
-            }
-        }
-        Ok(())
-    }
-
-    /// AdamW on every device's owned parameters; gradients are consumed.
-    fn apply_updates(&mut self, pipelines: &[EnginePipeline]) -> Result<()> {
-        let step = self.step + 1;
-        for p in pipelines {
-            for s in &p.stages {
-                for l in s.layers.0..s.layers.1 {
-                    for &d in &s.devices {
-                        for p_name in BLOCK_PARAMS {
-                            self.opt.update(&mut self.mesh.devices[d], &pkey(l, p_name), &gkey(l, p_name), step)?;
-                        }
-                    }
-                }
-            }
-            let root0 = p.stages[0].devices[0];
-            self.opt.update(&mut self.mesh.devices[root0], "emb", "grad.emb", step)?;
-            let last = p.stages.last().unwrap().devices[0];
-            self.opt.update(&mut self.mesh.devices[last], "gf", "grad.gf", step)?;
-            self.opt.update(&mut self.mesh.devices[last], "wout", "grad.wout", step)?;
-        }
-        Ok(())
-    }
-
-    /// §6 graph switching at engine level: repartition every parameter
-    /// (and optimizer state) from the current strategy's layout to `new`.
-    /// Senders are chosen by lowest cumulative load among replicas (the
-    /// fused-BSR heuristics over the mesh). Returns `(messages, elems)`.
-    pub fn switch_to(&mut self, new: EngineStrategy) -> Result<(u64, u64)> {
-        let cfg = self.runtime.config;
-        let tp_degrees = [1usize, 2, 4];
-        new.validate(&cfg, &tp_degrees)?;
-        // grow the mesh if the new strategy brings devices online
-        let need = new
-            .pipelines
-            .iter()
-            .flat_map(|p| p.stages.iter().flat_map(|s| s.devices.iter().copied()))
-            .max()
-            .map(|m| m + 1)
-            .unwrap_or(0);
-        while self.mesh.devices.len() < need {
-            self.mesh.devices.push(Default::default());
-        }
-        // owners under the old strategy: (layer, param, shard) -> devices
-        let mut owners: BTreeMap<(u32, String, usize), Vec<usize>> = BTreeMap::new();
-        let old = self.strategy.clone();
-        for p in &old.pipelines {
-            for s in &p.stages {
-                for l in s.layers.0..s.layers.1 {
-                    for (j, &d) in s.devices.iter().enumerate() {
-                        for p_name in BLOCK_PARAMS {
-                            owners.entry((l, p_name.to_string(), j)).or_default().push(d);
-                        }
-                    }
-                }
-            }
-        }
-        let wire0 = self.mesh.wire_elems;
-        let ops0 = self.mesh.ops;
-        let mut load: BTreeMap<usize, u64> = BTreeMap::new();
-        let mut staged: Vec<(usize, String, HostTensor)> = vec![];
-        for p in &new.pipelines {
-            for s in &p.stages {
-                for l in s.layers.0..s.layers.1 {
-                    let old_tp = old_tp_of_layer(&old, l).ok_or_else(|| {
-                        Error::Engine(format!("switch: no prior owner of layer {l}"))
-                    })?;
-                    let new_tp = s.tp();
-                    for (j, &d) in s.devices.iter().enumerate() {
-                        for p_name in BLOCK_PARAMS {
-                            let key = pkey(l, p_name);
-                            if old_tp == new_tp {
-                                // same sharding: whole-shard move (heuristic
-                                // 1 local copy; 3 lowest-load sender)
-                                if self.mesh.devices[d].has(&key) {
-                                    continue;
-                                }
-                                let own = owners
-                                    .get(&(l, p_name.to_string(), j))
-                                    .ok_or_else(|| {
-                                        Error::Engine(format!(
-                                            "no owner for layer {l} shard {j}"
-                                        ))
-                                    })?
-                                    .clone();
-                                let from = *own
-                                    .iter()
-                                    .min_by_key(|&&o| (load.get(&o).copied().unwrap_or(0), o))
-                                    .unwrap();
-                                self.mesh.send(from, d, &key)?;
-                                *load.entry(from).or_insert(0) +=
-                                    self.mesh.devices[d].get(&key)?.len() as u64;
-                                for st in ["m", "v"] {
-                                    let skey = format!("{st}.{key}");
-                                    if self.mesh.devices[from].has(&skey) {
-                                        self.mesh.send(from, d, &skey)?;
-                                    }
-                                }
-                            } else {
-                                // TP degree changed: reslice (the C2-style
-                                // 4→2→1 tail reconfiguration), for the
-                                // parameter and its optimizer moments alike.
-                                // Writes are staged and committed after the
-                                // whole plan so sources are never clobbered
-                                // mid-switch.
-                                for prefix in ["", "m.", "v."] {
-                                    self.reshard_param(
-                                        &owners, &mut load, l, p_name, prefix, old_tp, new_tp,
-                                        j, d, &mut staged,
-                                    )?;
-                                }
-                            }
-                        }
-                    }
-                }
-            }
-            // embedding/head to new roots
-            let old_r0 = old.pipelines[0].stages[0].devices[0];
-            let new_r0 = p.stages[0].devices[0];
-            for key in ["emb", "m.emb", "v.emb"] {
-                if self.mesh.devices[old_r0].has(key) && !self.mesh.devices[new_r0].has(key) {
-                    self.mesh.send(old_r0, new_r0, key)?;
-                }
-            }
-            let old_last = old.pipelines[0].stages.last().unwrap().devices[0];
-            let new_last = p.stages.last().unwrap().devices[0];
-            for key in ["gf", "wout", "m.gf", "v.gf", "m.wout", "v.wout"] {
-                if self.mesh.devices[old_last].has(key) && !self.mesh.devices[new_last].has(key) {
-                    self.mesh.send(old_last, new_last, key)?;
-                }
-            }
-        }
-        // commit resharded tensors (deferred so every source read during
-        // planning saw the pre-switch state)
-        for (d, key, t) in staged {
-            self.mesh.devices[d].put(&key, t);
-        }
-        self.strategy = new;
-        Ok((self.mesh.ops - ops0, self.mesh.wire_elems - wire0))
-    }
-}
-
-impl Engine {
-    /// Move one resliced shard during a TP-degree-changing switch: new
-    /// shard `j` of `new_tp` assembles its slice range from the old
-    /// `old_tp` shards (replicated gains copy whole; split tensors take
-    /// the overlapping row/column segments from each old owner).
-    #[allow(clippy::too_many_arguments)]
-    fn reshard_param(
-        &mut self,
-        owners: &BTreeMap<(u32, String, usize), Vec<usize>>,
-        load: &mut BTreeMap<usize, u64>,
-        l: u32,
-        p_name: &str,
-        prefix: &str,
-        old_tp: usize,
-        new_tp: usize,
-        j: usize,
-        dst: usize,
-        staged: &mut Vec<(usize, String, HostTensor)>,
-    ) -> Result<()> {
-        let key = format!("{prefix}{}", pkey(l, p_name));
-        let pick = |owners: &Vec<usize>, load: &BTreeMap<usize, u64>| {
-            *owners.iter().min_by_key(|&&o| (load.get(&o).copied().unwrap_or(0), o)).unwrap()
-        };
-        // replicated gains: copy from any old shard-0 owner
-        if p_name.starts_with('g') {
-            let own = owners
-                .get(&(l, p_name.to_string(), 0))
-                .ok_or_else(|| Error::Engine(format!("no owner for layer {l}")))?;
-            let from = pick(own, load);
-            if !self.mesh.devices[from].has(&key) {
-                return Ok(()); // moments may not exist before the first step
-            }
-            if from != dst || !self.mesh.devices[dst].has(&key) {
-                let t = self.mesh.devices[from].get(&key)?.clone();
-                *load.entry(from).or_insert(0) += t.len() as u64;
-                if from != dst {
-                    self.mesh.wire_elems += t.len() as u64;
-                    self.mesh.ops += 1;
-                }
-                staged.push((dst, key, t));
-            }
-            return Ok(());
-        }
-        let col_split = matches!(p_name, "wq" | "wk" | "wv" | "w1");
-        // global extent of the split axis = old shard extent × old_tp
-        let probe_own = owners
-            .get(&(l, p_name.to_string(), 0))
-            .ok_or_else(|| Error::Engine(format!("no owner for layer {l}")))?;
-        let probe_dev = probe_own[0];
-        if !self.mesh.devices[probe_dev].has(&key) {
-            return Ok(()); // optimizer moments absent before step 1
-        }
-        let old_shape = self.mesh.devices[probe_dev].get(&key)?.shape.clone();
-        let (rows, cols) = (old_shape[0], old_shape[1]);
-        let global = if col_split { cols * old_tp } else { rows * old_tp };
-        let (lo, hi) = (j * global / new_tp, (j + 1) * global / new_tp);
-        // assemble the [lo, hi) range from overlapping old shards
-        let mut parts: Vec<HostTensor> = vec![];
-        let per_old = global / old_tp;
-        let mut pos = lo;
-        while pos < hi {
-            let i = pos / per_old; // old shard index
-            let seg_hi = hi.min((i + 1) * per_old);
-            let own = owners
-                .get(&(l, p_name.to_string(), i))
-                .ok_or_else(|| Error::Engine(format!("no owner for layer {l} old shard {i}")))?;
-            let from = pick(own, load);
-            let src = self.mesh.devices[from].get(&key)?;
-            let (a, b) = (pos - i * per_old, seg_hi - i * per_old);
-            let piece = if col_split {
-                extract_cols(src, a, b)?
-            } else {
-                extract_rows(src, a, b)?
-            };
-            *load.entry(from).or_insert(0) += piece.len() as u64;
-            if from != dst {
-                self.mesh.wire_elems += piece.len() as u64;
-                self.mesh.ops += 1;
-            }
-            parts.push(piece);
-            pos = seg_hi;
-        }
-        let assembled = if col_split { concat_cols(&parts)? } else { concat_rows(&parts)? };
-        staged.push((dst, key, assembled));
-        Ok(())
-    }
-}
-
-/// Columns `[lo, hi)` of a 2-D tensor.
-fn extract_cols(t: &HostTensor, lo: usize, hi: usize) -> Result<HostTensor> {
-    let (r, c) = (t.shape[0], t.shape[1]);
-    let src = t.as_f32()?;
-    let w = hi - lo;
-    let mut out = Vec::with_capacity(r * w);
-    for row in 0..r {
-        out.extend_from_slice(&src[row * c + lo..row * c + hi]);
-    }
-    HostTensor::f32(vec![r, w], out)
-}
-
-/// Rows `[lo, hi)` of a 2-D tensor.
-fn extract_rows(t: &HostTensor, lo: usize, hi: usize) -> Result<HostTensor> {
-    let c = t.shape[1];
-    let src = t.as_f32()?;
-    HostTensor::f32(vec![hi - lo, c], src[lo * c..hi * c].to_vec())
-}
-
-/// Horizontal concatenation of equal-row 2-D tensors.
-fn concat_cols(parts: &[HostTensor]) -> Result<HostTensor> {
-    if parts.len() == 1 {
-        return Ok(parts[0].clone());
-    }
-    let r = parts[0].shape[0];
-    let total_c: usize = parts.iter().map(|p| p.shape[1]).sum();
-    let mut out = Vec::with_capacity(r * total_c);
-    for row in 0..r {
-        for p in parts {
-            let c = p.shape[1];
-            out.extend_from_slice(&p.as_f32()?[row * c..(row + 1) * c]);
-        }
-    }
-    HostTensor::f32(vec![r, total_c], out)
-}
-
-/// Vertical concatenation of equal-column 2-D tensors.
-fn concat_rows(parts: &[HostTensor]) -> Result<HostTensor> {
-    if parts.len() == 1 {
-        return Ok(parts[0].clone());
-    }
-    let c = parts[0].shape[1];
-    let total_r: usize = parts.iter().map(|p| p.shape[0]).sum();
-    let mut out = Vec::with_capacity(total_r * c);
-    for p in parts {
-        out.extend_from_slice(p.as_f32()?);
-    }
-    HostTensor::f32(vec![total_r, c], out)
-}
-
-fn old_tp_of_layer(s: &EngineStrategy, l: u32) -> Option<usize> {
-    for p in &s.pipelines {
-        for st in &p.stages {
-            if st.layers.0 <= l && l < st.layers.1 {
-                return Some(st.tp());
-            }
-        }
-    }
-    None
-}
-
-/// Accumulate (or initialize) a gradient buffer.
-fn accumulate(dev: &mut crate::collectives::DeviceMem, key: &str, t: HostTensor) -> Result<()> {
-    if dev.has(key) {
-        dev.get_mut(key)?.add_assign(&t)
-    } else {
-        dev.put(key, t);
-        Ok(())
-    }
-}
-
-/// Deterministic N(0, 0.02) init for a named tensor (gains = 1).
-fn init_tensor(seed: u64, layer: u32, name: &str, shape: &[usize], _hidden: usize) -> HostTensor {
-    let n: usize = shape.iter().product();
-    if name.starts_with('g') {
-        return HostTensor::f32(shape.to_vec(), vec![1.0; n]).unwrap();
-    }
-    let tag: u64 = name.bytes().fold(0u64, |a, b| a.wrapping_mul(131).wrapping_add(b as u64));
-    let mut rng = Rng::new(seed ^ (layer as u64) << 32 ^ tag);
-    let mut data = Vec::with_capacity(n);
-    // Box–Muller
-    while data.len() < n {
-        let u1 = rng.f64().max(1e-12);
-        let u2 = rng.f64();
-        let r = (-2.0 * u1.ln()).sqrt();
-        let th = 2.0 * std::f64::consts::PI * u2;
-        data.push((r * th.cos() * 0.02) as f32);
-        if data.len() < n {
-            data.push((r * th.sin() * 0.02) as f32);
-        }
-    }
-    HostTensor::f32(shape.to_vec(), data).unwrap()
-}
-
-/// Slice a full parameter into its Megatron TP shard `j` of `tp`.
-fn shard_param(full: &HostTensor, name: &str, tp: usize, j: usize) -> Result<HostTensor> {
-    if tp == 1 {
-        return Ok(full.clone());
-    }
-    match name {
-        "g1" | "g2" => Ok(full.clone()), // replicated gains
-        "wq" | "wk" | "wv" | "w1" => slice_cols(full, tp, j),
-        "wo" | "w2" => slice_rows(full, tp, j),
-        other => Err(Error::Engine(format!("unknown param `{other}`"))),
-    }
-}
-
-fn slice_cols(t: &HostTensor, tp: usize, j: usize) -> Result<HostTensor> {
-    let (r, c) = (t.shape[0], t.shape[1]);
-    let w = c / tp;
-    let src = t.as_f32()?;
-    let mut out = Vec::with_capacity(r * w);
-    for row in 0..r {
-        out.extend_from_slice(&src[row * c + j * w..row * c + (j + 1) * w]);
-    }
-    HostTensor::f32(vec![r, w], out)
-}
-
-fn slice_rows(t: &HostTensor, tp: usize, j: usize) -> Result<HostTensor> {
-    let (r, c) = (t.shape[0], t.shape[1]);
-    let h = r / tp;
-    let src = t.as_f32()?;
-    HostTensor::f32(vec![h, c], src[j * h * c..(j + 1) * h * c].to_vec())
-}
-
-/// Helper: does the runtime have an artifact? (used during validation)
-impl Runtime {
-    /// True if the manifest lists `name`.
-    pub fn metas_has(&self, name: &str) -> bool {
-        self.meta(name).is_ok()
     }
 }
 
@@ -849,38 +265,12 @@ mod tests {
     }
 
     #[test]
-    fn shard_slicing_tiles_full_tensor() {
-        let full = HostTensor::f32(vec![4, 6], (0..24).map(|x| x as f32).collect()).unwrap();
-        // columns
-        let c0 = slice_cols(&full, 2, 0).unwrap();
-        let c1 = slice_cols(&full, 2, 1).unwrap();
-        assert_eq!(c0.shape, vec![4, 3]);
-        assert_eq!(c0.as_f32().unwrap()[..3], [0.0, 1.0, 2.0]);
-        assert_eq!(c1.as_f32().unwrap()[..3], [3.0, 4.0, 5.0]);
-        // rows
-        let r1 = slice_rows(&full, 2, 1).unwrap();
-        assert_eq!(r1.shape, vec![2, 6]);
-        assert_eq!(r1.as_f32().unwrap()[0], 12.0);
-    }
-
-    #[test]
-    fn init_is_deterministic_and_scaled() {
-        let a = init_tensor(7, 3, "wq", &[32, 32], 32);
-        let b = init_tensor(7, 3, "wq", &[32, 32], 32);
-        assert_eq!(a, b);
-        let c = init_tensor(7, 4, "wq", &[32, 32], 32);
-        assert_ne!(a, c);
-        let mean: f32 = a.as_f32().unwrap().iter().sum::<f32>() / 1024.0;
-        assert!(mean.abs() < 0.01);
-        let g = init_tensor(7, 0, "g1", &[8], 8);
-        assert_eq!(g.as_f32().unwrap(), &[1.0; 8]);
-    }
-
-    #[test]
-    fn validate_catches_hetero_tp_per_layer() {
+    fn validate_allows_hetero_tp_per_layer() {
+        // the same layers held at TP2 and TP1 across DP replicas used to be
+        // "plan-level only"; the shard-layout layer executes it now.
         let cfg = ManifestConfig { layers: 4, ..Default::default() };
         let s = EngineStrategy {
-            name: "bad".into(),
+            name: "hetero".into(),
             pipelines: vec![
                 EnginePipeline {
                     stages: vec![EngineStage { devices: vec![0, 1], layers: (0, 4) }],
@@ -892,6 +282,15 @@ mod tests {
                 },
             ],
         };
+        s.validate(&cfg, &[1, 2, 4]).unwrap();
+    }
+
+    #[test]
+    fn validate_catches_partial_layer_coverage() {
+        let cfg = ManifestConfig { layers: 8, ..Default::default() };
+        let stages = vec![EngineStage { devices: vec![0], layers: (0, 6) }];
+        let pipelines = vec![EnginePipeline { stages, num_microbatches: 1 }];
+        let s = EngineStrategy { name: "short".into(), pipelines };
         assert!(s.validate(&cfg, &[1, 2, 4]).is_err());
     }
 }

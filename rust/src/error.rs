@@ -1,51 +1,77 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (the build image cannot fetch
+//! `thiserror`; the derive would be the only use of proc macros in the
+//! whole tree).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error for all Hetu subsystems.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Invalid HSPMD annotation (ill-formed DS/DG/union).
-    #[error("invalid annotation: {0}")]
     InvalidAnnotation(String),
 
     /// Communication resolution cannot handle the requested transformation
     /// (e.g. BSR over `Partial` tensors — unsupported by design, §4.3).
-    #[error("unsupported communication: {0}")]
     UnsupportedComm(String),
 
     /// Annotation deduction failure (§5.2) — the user must insert a CommOp.
-    #[error("deduction error: {0}")]
     Deduction(String),
 
     /// Symbolic-shape binding/verification failure (§5.5).
-    #[error("symbolic shape error: {0}")]
     SymbolicShape(String),
 
     /// Graph construction / topology errors.
-    #[error("graph error: {0}")]
     Graph(String),
 
     /// Strategy specification errors (rank/layer coverage, memory fit).
-    #[error("strategy error: {0}")]
     Strategy(String),
 
     /// Runtime (PJRT / artifact) errors.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Engine execution errors (worker panic, channel closure, shape
     /// mismatch between artifacts and plan).
-    #[error("engine error: {0}")]
     Engine(String),
 
     /// Configuration / CLI errors.
-    #[error("config error: {0}")]
     Config(String),
 
     /// I/O errors (artifact files, traces, reports).
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidAnnotation(m) => write!(f, "invalid annotation: {m}"),
+            Error::UnsupportedComm(m) => write!(f, "unsupported communication: {m}"),
+            Error::Deduction(m) => write!(f, "deduction error: {m}"),
+            Error::SymbolicShape(m) => write!(f, "symbolic shape error: {m}"),
+            Error::Graph(m) => write!(f, "graph error: {m}"),
+            Error::Strategy(m) => write!(f, "strategy error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Engine(m) => write!(f, "engine error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl Error {

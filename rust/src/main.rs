@@ -122,9 +122,13 @@ fn cmd_figures(cli: &Cli) -> i32 {
 
 fn cmd_info(cli: &Cli) -> i32 {
     let dir = cli.str_opt("artifacts", "artifacts");
-    match hetu::runtime::Runtime::open(&dir) {
+    match hetu::runtime::Runtime::open_or_native(&dir) {
         Ok(rt) => {
             let c = rt.config;
+            println!(
+                "backend: {}",
+                if rt.is_native() { "native reference (no artifacts found)" } else { "PJRT artifacts" }
+            );
             println!(
                 "model: {} layers, hidden {}, ffn {}, {} heads, vocab {} (compiled B={} S={})",
                 c.layers, c.hidden, c.ffn, c.heads, c.vocab, c.batch, c.seq

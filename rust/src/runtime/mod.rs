@@ -7,6 +7,7 @@
 //! [`HostTensor`] (shape + f32/i32 payload); conversion to/from
 //! `xla::Literal` happens at the call boundary.
 
+pub mod native;
 pub mod tensor;
 
 pub use tensor::HostTensor;
@@ -46,15 +47,30 @@ pub struct ManifestConfig {
     pub seq: usize,
 }
 
-/// The artifact registry: a PJRT CPU client plus lazily-compiled
-/// executables keyed by artifact name.
+/// Execution backend behind the artifact registry.
+enum Backend {
+    /// PJRT client + lazily-compiled HLO-text executables.
+    Pjrt {
+        /// The PJRT CPU client.
+        client: xla::PjRtClient,
+        /// Artifact directory.
+        dir: PathBuf,
+        /// Compiled-executable cache.
+        executables: std::sync::Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    },
+    /// Pure-Rust reference implementations ([`native`]).
+    Native,
+}
+
+/// The artifact registry: named model-compute entry points executed either
+/// through PJRT (AOT HLO artifacts) or the in-crate [`native`] reference
+/// backend. Both expose the same artifact names, shapes, and semantics, so
+/// the engine is backend-agnostic.
 pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
+    backend: Backend,
     metas: HashMap<String, ArtifactMeta>,
     /// Exporter-recorded model config.
     pub config: ManifestConfig,
-    executables: std::sync::Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
 }
 
 impl Runtime {
@@ -72,12 +88,47 @@ impl Runtime {
         let client = xla::PjRtClient::cpu()
             .map_err(|e| Error::Runtime(format!("PJRT CPU client: {e}")))?;
         Ok(Runtime {
-            client,
-            dir,
+            backend: Backend::Pjrt {
+                client,
+                dir,
+                executables: std::sync::Mutex::new(HashMap::new()),
+            },
             metas,
             config,
-            executables: std::sync::Mutex::new(HashMap::new()),
         })
+    }
+
+    /// A runtime served entirely by the native Rust reference backend
+    /// (no artifacts, no PJRT): same artifact names/shapes as the exporter.
+    pub fn native(config: ManifestConfig) -> Runtime {
+        Runtime { backend: Backend::Native, metas: native::artifact_metas(&config), config }
+    }
+
+    /// Open `dir` if it holds a manifest, otherwise fall back to the
+    /// native backend at the tiny-48 configuration. This is the engine's
+    /// default entry point: real AOT artifacts when present, reference
+    /// numerics everywhere else.
+    pub fn open_or_native(dir: impl AsRef<Path>) -> Result<Runtime> {
+        if dir.as_ref().join("manifest.json").exists() {
+            Runtime::open(dir)
+        } else {
+            eprintln!(
+                "note: no manifest at `{}` — using the native reference backend \
+                 (tiny-48 model); run `make artifacts` for the compiled model",
+                dir.as_ref().display()
+            );
+            Ok(Runtime::native(native::tiny_config()))
+        }
+    }
+
+    /// True when running on the native reference backend.
+    pub fn is_native(&self) -> bool {
+        matches!(self.backend, Backend::Native)
+    }
+
+    /// True if the registry lists artifact `name`.
+    pub fn metas_has(&self, name: &str) -> bool {
+        self.metas.contains_key(name)
     }
 
     /// Artifact names available.
@@ -95,28 +146,39 @@ impl Runtime {
     }
 
     fn compiled(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let (client, dir, executables) = match &self.backend {
+            Backend::Pjrt { client, dir, executables } => (client, dir, executables),
+            Backend::Native => {
+                return Err(Error::Runtime(format!(
+                    "artifact `{name}` is served natively; nothing to compile"
+                )))
+            }
+        };
         {
-            let cache = self.executables.lock().unwrap();
+            let cache = executables.lock().unwrap();
             if let Some(e) = cache.get(name) {
                 return Ok(e.clone());
             }
         }
         let meta = self.meta(name)?;
-        let path = self.dir.join(&meta.file);
+        let path = dir.join(&meta.file);
         let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
             .map_err(|e| Error::Runtime(format!("parse {}: {e}", path.display())))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
+        let exe = client
             .compile(&comp)
             .map_err(|e| Error::Runtime(format!("compile {name}: {e}")))?;
         let exe = std::sync::Arc::new(exe);
-        self.executables.lock().unwrap().insert(name.to_string(), exe.clone());
+        executables.lock().unwrap().insert(name.to_string(), exe.clone());
         Ok(exe)
     }
 
-    /// Pre-compile a set of artifacts (engine startup).
+    /// Pre-compile a set of artifacts (engine startup). No-op on the
+    /// native backend.
     pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        if self.is_native() {
+            return Ok(());
+        }
         for n in names {
             self.compiled(n)?;
         }
@@ -151,6 +213,17 @@ impl Runtime {
                     dtype
                 )));
             }
+        }
+        if self.is_native() {
+            let out = native::call(&self.config, name, inputs)?;
+            if out.len() != meta.outputs {
+                return Err(Error::Runtime(format!(
+                    "{name}: native backend produced {} outputs, manifest promises {}",
+                    out.len(),
+                    meta.outputs
+                )));
+            }
+            return Ok(out);
         }
         let exe = self.compiled(name)?;
         let literals: Vec<xla::Literal> =
@@ -505,5 +578,28 @@ mod tests {
             Ok(_) => panic!("open should fail"),
         };
         assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn open_or_native_falls_back() {
+        let rt = Runtime::open_or_native("/nonexistent-artifacts").unwrap();
+        assert!(rt.is_native());
+        assert!(rt.metas_has("head_step"));
+        assert!(rt.metas_has("block_fwd_tp4"));
+        assert_eq!(rt.config.layers, native::tiny_config().layers);
+    }
+
+    #[test]
+    fn native_call_validates_shapes_and_runs() {
+        let rt = Runtime::native(native::tiny_config());
+        let cfg = rt.config;
+        let emb = HostTensor::zeros(vec![cfg.vocab, cfg.hidden]);
+        let tok =
+            HostTensor::i32(vec![cfg.batch, cfg.seq], vec![1; cfg.batch * cfg.seq]).unwrap();
+        let out = rt.call("embed_fwd", &[emb.clone(), tok.clone()]).unwrap();
+        assert_eq!(out[0].shape, vec![cfg.batch, cfg.seq, cfg.hidden]);
+        // wrong shape is rejected by the manifest check
+        let bad = HostTensor::zeros(vec![cfg.vocab, cfg.hidden + 1]);
+        assert!(rt.call("embed_fwd", &[bad, tok]).is_err());
     }
 }

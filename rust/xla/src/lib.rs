@@ -1,0 +1,275 @@
+//! In-tree **stub** of the PJRT/XLA binding surface used by
+//! `hetu::runtime`.
+//!
+//! The build image has no XLA toolchain and no network access, so this
+//! crate provides the exact API shape the runtime compiles against:
+//! [`Literal`] is fully functional (host-side shape + payload container),
+//! while the compile/execute entry points ([`HloModuleProto::from_text_file`],
+//! [`PjRtClient::compile`], [`PjRtLoadedExecutable::execute`]) return a
+//! descriptive error at runtime. The `hetu` runtime detects missing
+//! artifacts up front and falls back to its native Rust reference backend
+//! (`hetu::runtime::native`), so the stub paths are only reached when a
+//! user points the runtime at real HLO artifacts without a real PJRT
+//! client linked in.
+//!
+//! Swapping this path dependency for an actual PJRT binding restores GPU /
+//! compiled-CPU execution without touching `hetu` itself.
+
+use std::fmt;
+
+/// Stub error: every unavailable operation reports through this.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT/XLA backend is not linked into this build (in-tree stub); \
+         the hetu runtime uses its native reference backend instead"
+    ))
+}
+
+/// Element types of array literals (subset used by the runtime).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ElementType {
+    /// 32-bit float.
+    F32,
+    /// 32-bit signed integer.
+    S32,
+}
+
+/// Primitive type tags accepted by [`Literal::create_from_shape`].
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum PrimitiveType {
+    /// 32-bit float.
+    F32,
+    /// 32-bit signed integer.
+    S32,
+}
+
+/// Array shape: dimensions + element type.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    /// Dimension extents.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Element type.
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Literal payload storage.
+#[derive(Clone, Debug)]
+enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A host-side literal: dense row-major array with shape + payload.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    dims: Vec<usize>,
+    payload: Payload,
+}
+
+/// Types that can be copied raw into / out of a [`Literal`].
+pub trait NativeType: Copy {
+    /// Write a raw buffer into the literal (must match its element type).
+    fn write(lit: &mut Literal, data: &[Self]) -> Result<(), Error>;
+    /// Read the literal's payload as this type.
+    fn read(lit: &Literal) -> Result<Vec<Self>, Error>;
+}
+
+impl NativeType for f32 {
+    fn write(lit: &mut Literal, data: &[Self]) -> Result<(), Error> {
+        match &mut lit.payload {
+            Payload::F32(v) => {
+                if v.len() != data.len() {
+                    return Err(Error(format!(
+                        "copy_raw_from: literal holds {} f32s, got {}",
+                        v.len(),
+                        data.len()
+                    )));
+                }
+                v.copy_from_slice(data);
+                Ok(())
+            }
+            Payload::I32(_) => Err(Error("copy_raw_from: literal is i32, data is f32".into())),
+        }
+    }
+
+    fn read(lit: &Literal) -> Result<Vec<Self>, Error> {
+        match &lit.payload {
+            Payload::F32(v) => Ok(v.clone()),
+            Payload::I32(_) => Err(Error("to_vec::<f32>: literal is i32".into())),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn write(lit: &mut Literal, data: &[Self]) -> Result<(), Error> {
+        match &mut lit.payload {
+            Payload::I32(v) => {
+                if v.len() != data.len() {
+                    return Err(Error(format!(
+                        "copy_raw_from: literal holds {} i32s, got {}",
+                        v.len(),
+                        data.len()
+                    )));
+                }
+                v.copy_from_slice(data);
+                Ok(())
+            }
+            Payload::F32(_) => Err(Error("copy_raw_from: literal is f32, data is i32".into())),
+        }
+    }
+
+    fn read(lit: &Literal) -> Result<Vec<Self>, Error> {
+        match &lit.payload {
+            Payload::I32(v) => Ok(v.clone()),
+            Payload::F32(_) => Err(Error("to_vec::<i32>: literal is f32".into())),
+        }
+    }
+}
+
+impl Literal {
+    /// Zero-initialized literal of the given type and shape.
+    pub fn create_from_shape(ty: PrimitiveType, dims: &[usize]) -> Literal {
+        let n: usize = dims.iter().product();
+        let payload = match ty {
+            PrimitiveType::F32 => Payload::F32(vec![0.0; n]),
+            PrimitiveType::S32 => Payload::I32(vec![0; n]),
+        };
+        Literal { dims: dims.to_vec(), payload }
+    }
+
+    /// Copy a raw host buffer into the literal.
+    pub fn copy_raw_from<T: NativeType>(&mut self, data: &[T]) -> Result<(), Error> {
+        T::write(self, data)
+    }
+
+    /// Shape of the literal as an array.
+    pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+        let ty = match self.payload {
+            Payload::F32(_) => ElementType::F32,
+            Payload::I32(_) => ElementType::S32,
+        };
+        Ok(ArrayShape { dims: self.dims.iter().map(|&d| d as i64).collect(), ty })
+    }
+
+    /// Payload as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        T::read(self)
+    }
+
+    /// Decompose a tuple literal into its elements (stub literals are never
+    /// tuples, so this always errors).
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module (stub: cannot be constructed).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file (unavailable in the stub).
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto, Error> {
+        Err(unavailable(&format!("HloModuleProto::from_text_file({path})")))
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    /// Wrap a parsed proto.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A loaded (compiled) executable (stub: execution unavailable).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+/// An on-device buffer handle returned by execution.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Fetch the buffer back to the host as a literal.
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with host inputs (unavailable in the stub).
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A PJRT client handle.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// The CPU client. Constructing the handle always succeeds so callers
+    /// can defer the unavailability error to compile/execute time.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    /// Compile a computation (unavailable in the stub).
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let mut lit = Literal::create_from_shape(PrimitiveType::F32, &[2, 3]);
+        lit.copy_raw_from(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn execute_paths_error_cleanly() {
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let client = PjRtClient::cpu().unwrap();
+        let comp = XlaComputation { _private: () };
+        assert!(client.compile(&comp).is_err());
+    }
+}
