@@ -32,6 +32,7 @@ fn main() -> hetu::Result<()> {
             ],
             num_microbatches: 2,
         }],
+        schedule: hetu::spec::schedule::ScheduleKind::GPipe,
     };
     let mut trainer = Trainer::new(cfg, dp2)?;
     trainer.train(6)?;

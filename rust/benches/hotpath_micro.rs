@@ -1,7 +1,11 @@
 //! Bench: L3 hot-path micro-benchmarks (the §Perf targets) — BSR planning,
 //! fused transition planning, annotation deduction, full specialization of
-//! a 48-rank 60-layer graph, the discrete-event simulator, and the
-//! real-numerics engine step (native backend).
+//! a 48-rank 60-layer graph, the discrete-event simulator, strategy
+//! lowering, the native GEMM kernels, and the real-numerics engine step
+//! (native backend) under both schedules.
+//!
+//! `--test` (the CI smoke mode) runs every row once, just proving the
+//! harness executes.
 
 use hetu::cluster::Cluster;
 use hetu::comm::BsrOptions;
@@ -10,7 +14,8 @@ use hetu::costmodel::{CostModel, ModelCfg};
 use hetu::engine::{Engine, EngineStrategy, ShardLayout, BLOCK_PARAMS};
 use hetu::metrics::bench;
 use hetu::runtime::{native, Runtime};
-use hetu::strategy::tables;
+use hetu::spec::schedule::ScheduleKind;
+use hetu::strategy::{tables, LowerOptions};
 
 fn report(name: &str, iters: u32, f: impl FnMut()) {
     let (mean, best) = bench(iters, f);
@@ -38,6 +43,9 @@ fn legacy_sync_group_rebuild(strategy: &EngineStrategy) -> usize {
 }
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
+    let it = |n: u32| if smoke { 1 } else { n };
+
     let cluster = Cluster::h20(32);
     let cm = CostModel::new(ModelCfg::llama_32b());
     let c1 = tables::hetu_c1_32h20();
@@ -45,19 +53,19 @@ fn main() {
     let hetero = Cluster::h800_16_h20_32();
     let big = tables::hetu_32b_16h800_32h20();
 
-    report("simulate_step C1 (32 ranks, 60 layers)", 50, || {
+    report("simulate_step C1 (32 ranks, 60 layers)", it(50), || {
         std::hint::black_box(hetu::sim::simulate_step(&cluster, &cm, &c1).unwrap());
     });
-    report("simulate_step hetero 48-rank strategy", 50, || {
+    report("simulate_step hetero 48-rank strategy", it(50), || {
         std::hint::black_box(hetu::sim::simulate_step(&hetero, &cm, &big).unwrap());
     });
-    report("plan_strategy_switch C1->C2 (fused)", 20, || {
+    report("plan_strategy_switch C1->C2 (fused)", it(20), || {
         std::hint::black_box(
             hetu::switch::plan_strategy_switch(&c1, &c2, &cm, &cluster, BsrOptions::default(), true)
                 .unwrap(),
         );
     });
-    report("plan_strategy_switch C1->C2 (unfused)", 20, || {
+    report("plan_strategy_switch C1->C2 (unfused)", it(20), || {
         std::hint::black_box(
             hetu::switch::plan_strategy_switch(&c1, &c2, &cm, &cluster, BsrOptions::default(), false)
                 .unwrap(),
@@ -65,7 +73,7 @@ fn main() {
     });
 
     // full specialization pipeline on a 60-layer two-strategy graph
-    report("specialize 60-layer graph (deduce+resolve)", 20, || {
+    report("specialize 60-layer graph (deduce+resolve)", it(20), || {
         let (mut g, binding) = hetu::figures::build_strategy_graph(&[&c1, &c2]).unwrap();
         let spec = hetu::spec::instantiate::specialize(
             &mut g,
@@ -79,7 +87,7 @@ fn main() {
     });
 
     // deduction-only over a wide graph
-    report("deduce 60-layer graph", 50, || {
+    report("deduce 60-layer graph", it(50), || {
         let (mut g, _) = hetu::figures::build_strategy_graph(&[&c1, &c2]).unwrap();
         hetu::graph::deduce::deduce(&mut g, 0).unwrap();
         std::hint::black_box(g.ops.len());
@@ -88,8 +96,24 @@ fn main() {
     // Hetu-B per-step planning (dispatch + sim)
     let mut rng = hetu::testutil::Rng::new(1);
     let batch = hetu::data::sample_step(&mut rng, hetu::data::Corpus::CommonCrawl, 200_000, 32768);
-    report("hetu_b_step (dispatch + sim)", 20, || {
+    report("hetu_b_step (dispatch + sim)", it(20), || {
         std::hint::black_box(hetu::figures::hetu_b_step(&cluster, &cm, &batch, 32768).unwrap());
+    });
+
+    // strategy lowering: Table-row encodings -> runnable EngineStrategy
+    let tiny = native::tiny_config();
+    let lopts = LowerOptions { total_microbatches: 8, tp_degrees: vec![1, 2, 4] };
+    report("lower C2 encoding -> EngineStrategy", it(500), || {
+        std::hint::black_box(hetu::strategy::lower(&c2, &tiny, &lopts).unwrap().num_devices());
+    });
+
+    // native GEMM kernels (the blocked-matmul guard: the head GEMM
+    // dominates the tiny-48 step, so this row tracks the debug-mode
+    // <100 ms step budget at release granularity)
+    let a: Vec<f32> = (0..32 * 48).map(|i| (i % 7) as f32 * 0.1).collect();
+    let b: Vec<f32> = (0..48 * 512).map(|i| (i % 5) as f32 * 0.1).collect();
+    report("native matmul 32x48x512 (head shape)", it(2000), || {
+        std::hint::black_box(native::matmul(&a, &b, 32, 48, 512));
     });
 
     // ---- engine-step micro (the §Perf target of the layout refactor).
@@ -97,21 +121,31 @@ fn main() {
     // every device key each step; after: the plan is read from the cached
     // ShardLayout. The two "sync-group" rows isolate that cost — the
     // layout builds once per strategy, the legacy rebuild ran every step.
-    let tiny = native::tiny_config();
     let strat = EngineStrategy::uniform("dp2tp2", 2, 2, 1, tiny.layers, 1);
-    report("sync-group legacy rebuild (per step)", 500, || {
+    report("sync-group legacy rebuild (per step)", it(500), || {
         std::hint::black_box(legacy_sync_group_rebuild(&strat));
     });
-    report("sync-group ShardLayout build (per switch)", 500, || {
+    report("sync-group ShardLayout build (per switch)", it(500), || {
         std::hint::black_box(ShardLayout::build(&tiny, &strat).unwrap().sync_ops.len());
     });
     let mut eng =
         Engine::with_runtime(Runtime::native(tiny), strat, 42, 1e-3).unwrap();
     let mut corpus = SyntheticCorpus::new(7, tiny.vocab);
-    let (b, s) = (tiny.batch, tiny.seq);
-    report("engine train_step dp2tp2 (native tiny-48)", 10, || {
+    let (b_sz, s_sz) = (tiny.batch, tiny.seq);
+    report("engine train_step dp2tp2 (native tiny-48)", it(10), || {
         std::hint::black_box(
-            eng.train_step(&mut |_p, _m| corpus.microbatch(b, s)).unwrap().loss,
+            eng.train_step(&mut |_p, _m| corpus.microbatch(b_sz, s_sz)).unwrap().loss,
+        );
+    });
+
+    // the same step under 1F1B through the unified schedule interpreter
+    let strat_1f1b = EngineStrategy::uniform("pp2x4mb", 1, 1, 2, tiny.layers, 4)
+        .with_schedule(ScheduleKind::OneFOneB);
+    let mut eng2 = Engine::with_runtime(Runtime::native(tiny), strat_1f1b, 42, 1e-3).unwrap();
+    let mut corpus2 = SyntheticCorpus::new(8, tiny.vocab);
+    report("engine train_step pp2 1F1B (native tiny-48)", it(10), || {
+        std::hint::black_box(
+            eng2.train_step(&mut |_p, _m| corpus2.microbatch(b_sz, s_sz)).unwrap().loss,
         );
     });
 }

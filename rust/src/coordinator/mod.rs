@@ -1,6 +1,7 @@
 //! The top-level trainer: config → strategy → engine → training loop, with
 //! dynamic strategy switching (the Hetu-B loop) and loss-curve logging.
 
+use crate::cluster::Cluster;
 use crate::config::RunConfig;
 use crate::engine::{Engine, EngineStrategy, MicroBatch, StepStats};
 use crate::testutil::Rng;
@@ -17,6 +18,10 @@ pub struct StepLog {
     pub loss: f32,
     /// Wall-clock seconds.
     pub wall_s: f64,
+    /// Estimated parallel step seconds (measured per-task durations
+    /// replayed through the schedule — see
+    /// [`StepStats::makespan_s`](crate::engine::StepStats)).
+    pub makespan_s: f64,
     /// Elements on the (simulated) wire.
     pub wire_elems: u64,
 }
@@ -100,10 +105,17 @@ impl Trainer {
                 strategy: self.engine.strategy.name.clone(),
                 loss: stats.loss,
                 wall_s: t0.elapsed().as_secs_f64(),
+                makespan_s: stats.makespan_s,
                 wire_elems: stats.wire_elems,
             });
         }
         Ok(&self.logs)
+    }
+
+    /// Attach the physical topology behind the engine's device ids so
+    /// switches use bandwidth-aware sender selection (BSR heuristic 2).
+    pub fn set_topology(&mut self, topology: Cluster) {
+        self.engine.set_topology(topology);
     }
 
     /// Switch the running strategy (graph switching §6 at engine level).

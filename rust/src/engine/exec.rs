@@ -1,6 +1,7 @@
-//! The forward/backward interpreter: per-microbatch pipeline execution,
-//! layout-driven parameter init, gradient synchronization, and optimizer
-//! application.
+//! The schedule-driven forward/backward interpreter: per-stage pipeline
+//! tasks ordered by [`crate::spec::schedule`] (GPipe *and* 1F1B), layout-
+//! driven parameter init, token-weighted gradient synchronization, and
+//! optimizer application.
 //!
 //! Execution contract with the model artifacts (PJRT or native — see
 //! `python/compile/model.py` and [`crate::runtime::native`]):
@@ -9,17 +10,35 @@
 //!   the TP group and adds the residual;
 //! * block backward returns `(dx_partial, dparams_shard)`; the engine
 //!   computes `dx = dy + AllReduce(dx_partial)`;
+//! * the per-pipeline task order comes from
+//!   [`stage_schedule`](crate::spec::schedule::stage_schedule): the same
+//!   orders the simulator replays, so GPipe and 1F1B run through one code
+//!   path with identical numerics (losses bit-identical, gradients equal up
+//!   to f32 accumulation order);
 //! * gradient sync runs the [`ShardLayout`]'s cached slice-grid plan: one
 //!   reduction per shared atomic slice (replicated gains reduce raw
 //!   per-device partials across all holders in a single pass), then the
-//!   embedding/head reductions across pipeline roots, then `1/total_mb`
-//!   scaling over the layout's cached gradient-key list — nothing is
-//!   re-derived or scanned per step.
+//!   embedding/head reductions across pipeline roots, then **token-
+//!   weighted** scaling over the layout's cached gradient-key list. Each
+//!   micro-batch's loss-side gradient is pre-scaled by its token count and
+//!   the final pass divides by the step's total tokens, so pipelines
+//!   running *different* micro-batch counts (uneven apportioning, §5) still
+//!   produce the exact global-mean gradient.
+//!
+//! While interpreting, the engine measures per-device compute seconds for
+//! every task and replays them through the cross-stage dependencies
+//! (`Fwd(m,s)` ⇐ `Fwd(m,s-1)`, `Bwd(m,s)` ⇐ `Bwd(m,s+1)`) — TP members
+//! concurrent, pipelines concurrent — yielding the measured-makespan
+//! estimate reported in [`StepStats`](super::StepStats) and cross-validated
+//! against the [`crate::sim`] step ranking.
+
+use std::time::Instant;
 
 use crate::collectives::{extract_region, DeviceMem, Mesh};
 use crate::runtime::{HostTensor, Runtime};
+use crate::spec::schedule::{stage_schedule, ScheduleKind, Task, TaskKind};
 use crate::testutil::Rng;
-use crate::Result;
+use crate::{Error, Result};
 
 use super::layout::{full_shape, gkey, pkey, ShardLayout, SyncOp};
 use super::{Engine, EnginePipeline, MicroBatch, BLOCK_PARAMS};
@@ -58,134 +77,292 @@ pub(crate) fn init_params(
     Ok(())
 }
 
+/// Outcome of one pipeline's scheduled execution within a step.
+pub(crate) struct PipelineRun {
+    /// Σ over micro-batches of `tokens · mean loss`.
+    pub weighted_loss: f64,
+    /// Tokens processed by this pipeline.
+    pub tokens: u64,
+    /// Critical-path seconds from measured per-task durations replayed
+    /// through the schedule's dependency structure.
+    pub makespan_s: f64,
+}
+
 impl Engine {
-    /// One micro-batch through one pipeline (GPipe order inside the
-    /// deterministic interpreter: fwd all stages, then bwd reversed).
-    pub(crate) fn forward_backward(
+    /// Execute one pipeline's full step in the task order its schedule
+    /// prescribes. Tasks run as soon as their cross-stage dependency is
+    /// satisfied, exactly like the discrete-event simulator; per-stage
+    /// clocks accumulate the *measured* task durations to produce the
+    /// pipeline makespan.
+    pub(crate) fn run_pipeline(
         &mut self,
         pipe: &EnginePipeline,
+        batches: &[MicroBatch],
+        kind: ScheduleKind,
+    ) -> Result<PipelineRun> {
+        let s_count = pipe.stages.len();
+        let m = pipe.num_microbatches;
+        let queues: Vec<Vec<Task>> =
+            (0..s_count).map(|s| stage_schedule(kind, s_count, s, m)).collect();
+        let total: usize = queues.iter().map(|q| q.len()).sum();
+        let mut q_head = vec![0usize; s_count];
+        let mut clock = vec![0f64; s_count];
+        let mut fwd_done = vec![vec![f64::NAN; s_count]; m];
+        let mut bwd_done = vec![vec![f64::NAN; s_count]; m];
+
+        let mut weighted_loss = 0f64;
+        let mut tokens = 0u64;
+        let mut executed = 0usize;
+        while executed < total {
+            let mut progressed = false;
+            for s in 0..s_count {
+                while q_head[s] < queues[s].len() {
+                    let task = queues[s][q_head[s]];
+                    let mbi = task.microbatch;
+                    let ready = match task.kind {
+                        TaskKind::Fwd if s == 0 => Some(0.0),
+                        TaskKind::Fwd => {
+                            let d = fwd_done[mbi][s - 1];
+                            if d.is_nan() {
+                                None
+                            } else {
+                                Some(d)
+                            }
+                        }
+                        TaskKind::Bwd if s == s_count - 1 => {
+                            let f = fwd_done[mbi][s];
+                            if f.is_nan() {
+                                None
+                            } else {
+                                Some(f)
+                            }
+                        }
+                        TaskKind::Bwd => {
+                            let d = bwd_done[mbi][s + 1];
+                            if d.is_nan() {
+                                None
+                            } else {
+                                Some(d)
+                            }
+                        }
+                    };
+                    let Some(ready) = ready else { break };
+                    let dur = match task.kind {
+                        TaskKind::Fwd => self.fwd_task(pipe, s, mbi, &batches[mbi])?,
+                        TaskKind::Bwd => {
+                            let (dur, head) = self.bwd_task(pipe, s, mbi, &batches[mbi])?;
+                            if let Some((loss, n)) = head {
+                                weighted_loss += loss as f64 * n as f64;
+                                tokens += n;
+                            }
+                            dur
+                        }
+                    };
+                    let finish = clock[s].max(ready) + dur;
+                    clock[s] = finish;
+                    match task.kind {
+                        TaskKind::Fwd => fwd_done[mbi][s] = finish,
+                        TaskKind::Bwd => bwd_done[mbi][s] = finish,
+                    }
+                    q_head[s] += 1;
+                    executed += 1;
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                return Err(Error::Engine(format!(
+                    "schedule deadlock at {executed}/{total} tasks ({kind:?}, {s_count} stages)"
+                )));
+            }
+        }
+        let makespan_s = clock.iter().copied().fold(0.0, f64::max);
+        Ok(PipelineRun { weighted_loss, tokens, makespan_s })
+    }
+
+    /// Forward of micro-batch `mb` through stage `si`: receive (or embed)
+    /// the stage input, run the stage's layers with TP partial-sum
+    /// all-reduces, and leave the stage output under `act.mb{mb}`. Returns
+    /// the task-duration estimate (slowest TP member's compute plus the
+    /// serial comm/root remainder).
+    fn fwd_task(
+        &mut self,
+        pipe: &EnginePipeline,
+        si: usize,
         mb: usize,
         batch: &MicroBatch,
-    ) -> Result<f32> {
+    ) -> Result<f64> {
         let cfg = self.runtime.config;
         let (b, s) = (cfg.batch, cfg.seq);
-        let tok = HostTensor::i32(vec![b, s], batch.tokens.clone())?;
-        let tgt = HostTensor::i32(vec![b, s], batch.targets.clone())?;
+        let stage = &pipe.stages[si];
+        let akey = format!("act.mb{mb}");
+        let t_task = Instant::now();
+        let mut compute = vec![0f64; stage.devices.len()];
 
-        // ---- forward
-        let first = &pipe.stages[0];
-        let root0 = first.devices[0];
-        let x0 = {
-            let emb = self.mesh.devices[root0].get("emb")?;
-            let out = self.runtime.call_refs("embed_fwd", &[emb, &tok])?;
-            out.into_iter().next().unwrap()
-        };
-        self.mesh.devices[root0].put("act", x0);
-        self.mesh.broadcast(root0, &first.devices, "act")?;
-
-        for (si, stage) in pipe.stages.iter().enumerate() {
-            if si > 0 {
-                let prev_root = pipe.stages[si - 1].devices[0];
-                self.mesh.send(prev_root, stage.devices[0], "act")?;
-                self.mesh.broadcast(stage.devices[0], &stage.devices, "act")?;
-            }
-            let tp = stage.tp();
-            let art = format!("block_fwd_tp{tp}");
-            for l in stage.layers.0..stage.layers.1 {
-                // save block input for recompute-in-backward
-                for &d in &stage.devices {
-                    let x = self.mesh.devices[d].get("act")?.clone();
-                    self.mesh.devices[d].put(&format!("save.mb{mb}.L{l}"), x);
-                }
-                for &d in &stage.devices {
-                    let dev = &self.mesh.devices[d];
-                    let mut inputs: Vec<&HostTensor> = Vec::with_capacity(9);
-                    for p in BLOCK_PARAMS {
-                        inputs.push(dev.get(&pkey(l, p))?);
-                    }
-                    inputs.push(dev.get("act")?);
-                    let y_part =
-                        self.runtime.call_refs(&art, &inputs)?.into_iter().next().unwrap();
-                    self.mesh.devices[d].put("part", y_part);
-                }
-                self.mesh.all_reduce(&stage.devices, "part")?;
-                for &d in &stage.devices {
-                    let part = self.mesh.devices[d].get("part")?.clone();
-                    let x = self.mesh.devices[d].get_mut("act")?;
-                    x.add_assign(&part)?;
+        if si == 0 {
+            let root = stage.devices[0];
+            let tok = HostTensor::i32(vec![b, s], batch.tokens.clone())?;
+            let x0 = {
+                let emb = self.mesh.devices[root].get("emb")?;
+                let out = self.runtime.call_refs("embed_fwd", &[emb, &tok])?;
+                out.into_iter().next().unwrap()
+            };
+            self.mesh.devices[root].put(&akey, x0);
+        } else {
+            let prev = &pipe.stages[si - 1];
+            self.mesh.send(prev.devices[0], stage.devices[0], &akey)?;
+            // the producer's copies are no longer needed
+            for &d in &prev.devices {
+                if !stage.devices.contains(&d) {
+                    let _ = self.mesh.devices[d].take(&akey);
                 }
             }
         }
+        self.mesh.broadcast(stage.devices[0], &stage.devices, &akey)?;
 
-        // ---- head: loss + all gradients in one fused artifact call
-        let last_stage = pipe.stages.last().unwrap();
-        let last_root = last_stage.devices[0];
-        let (loss, dx) = {
-            let dev = &self.mesh.devices[last_root];
-            let out = self.runtime.call_refs(
-                "head_step",
-                &[dev.get("gf")?, dev.get("wout")?, dev.get("act")?, &tgt],
-            )?;
-            let mut it = out.into_iter();
-            let loss = it.next().unwrap();
-            let dx = it.next().unwrap();
-            accumulate(&mut self.mesh.devices[last_root], "grad.gf", it.next().unwrap())?;
-            accumulate(&mut self.mesh.devices[last_root], "grad.wout", it.next().unwrap())?;
-            (loss.as_f32()?[0], dx)
-        };
-        self.mesh.devices[last_root].put("dact", dx);
-        self.mesh.broadcast(last_root, &last_stage.devices, "dact")?;
-
-        // ---- backward
-        for (si, stage) in pipe.stages.iter().enumerate().rev() {
-            let tp = stage.tp();
-            let art = format!("block_bwd_tp{tp}");
-            for l in (stage.layers.0..stage.layers.1).rev() {
-                for &d in &stage.devices {
-                    let dev = &self.mesh.devices[d];
-                    let mut inputs: Vec<&HostTensor> = Vec::with_capacity(10);
-                    for p in BLOCK_PARAMS {
-                        inputs.push(dev.get(&pkey(l, p))?);
-                    }
-                    inputs.push(dev.get(&format!("save.mb{mb}.L{l}"))?);
-                    inputs.push(dev.get("dact")?);
-                    let outs = self.runtime.call_refs(&art, &inputs)?;
-                    let mut it = outs.into_iter();
-                    let dx_part = it.next().unwrap();
-                    self.mesh.devices[d].put("dpart", dx_part);
-                    for p in BLOCK_PARAMS {
-                        accumulate(&mut self.mesh.devices[d], &gkey(l, p), it.next().unwrap())?;
-                    }
-                    // free the saved activation
-                    let _ = self.mesh.devices[d].take(&format!("save.mb{mb}.L{l}"));
+        let tp = stage.tp();
+        let art = format!("block_fwd_tp{tp}");
+        for l in stage.layers.0..stage.layers.1 {
+            // save block input for recompute-in-backward
+            for &d in &stage.devices {
+                let x = self.mesh.devices[d].get(&akey)?.clone();
+                self.mesh.devices[d].put(&format!("save.mb{mb}.L{l}"), x);
+            }
+            for (j, &d) in stage.devices.iter().enumerate() {
+                let dev = &self.mesh.devices[d];
+                let mut inputs: Vec<&HostTensor> = Vec::with_capacity(9);
+                for p in BLOCK_PARAMS {
+                    inputs.push(dev.get(&pkey(l, p))?);
                 }
-                self.mesh.all_reduce(&stage.devices, "dpart")?;
-                for &d in &stage.devices {
-                    let dpart = self.mesh.devices[d].get("dpart")?.clone();
-                    let dx = self.mesh.devices[d].get_mut("dact")?;
-                    dx.add_assign(&dpart)?;
+                inputs.push(dev.get(&akey)?);
+                let t0 = Instant::now();
+                let y_part =
+                    self.runtime.call_refs(&art, &inputs)?.into_iter().next().unwrap();
+                compute[j] += t0.elapsed().as_secs_f64();
+                self.mesh.devices[d].put("part", y_part);
+            }
+            self.mesh.all_reduce(&stage.devices, "part")?;
+            for &d in &stage.devices {
+                let part = self.mesh.devices[d].get("part")?.clone();
+                let x = self.mesh.devices[d].get_mut(&akey)?;
+                x.add_assign(&part)?;
+            }
+        }
+        Ok(task_duration(t_task.elapsed().as_secs_f64(), &compute))
+    }
+
+    /// Backward of micro-batch `mb` through stage `si`. On the last stage
+    /// this starts with the fused head artifact (loss + head gradients,
+    /// pre-scaled by the micro-batch's token count for the token-weighted
+    /// sync); on stage 0 it ends with the embedding gradient. Returns the
+    /// task-duration estimate and, on the last stage, `(mean loss, tokens)`.
+    fn bwd_task(
+        &mut self,
+        pipe: &EnginePipeline,
+        si: usize,
+        mb: usize,
+        batch: &MicroBatch,
+    ) -> Result<(f64, Option<(f32, u64)>)> {
+        let cfg = self.runtime.config;
+        let (b, s) = (cfg.batch, cfg.seq);
+        let stage = &pipe.stages[si];
+        let last = pipe.stages.len() - 1;
+        let akey = format!("act.mb{mb}");
+        let dkey = format!("dact.mb{mb}");
+        let t_task = Instant::now();
+        let mut compute = vec![0f64; stage.devices.len()];
+        let mut head_out = None;
+
+        if si == last {
+            let tokens = batch.tokens.len() as u64;
+            let w = tokens as f32;
+            let root = stage.devices[0];
+            let tgt = HostTensor::i32(vec![b, s], batch.targets.clone())?;
+            let (loss, mut dx, mut dgf, mut dwout) = {
+                let dev = &self.mesh.devices[root];
+                let out = self.runtime.call_refs(
+                    "head_step",
+                    &[dev.get("gf")?, dev.get("wout")?, dev.get(&akey)?, &tgt],
+                )?;
+                let mut it = out.into_iter();
+                let loss = it.next().unwrap().as_f32()?[0];
+                (loss, it.next().unwrap(), it.next().unwrap(), it.next().unwrap())
+            };
+            // token weighting: the head emits the gradient of this
+            // micro-batch's *mean* loss; scale by its token count here and
+            // divide by the step's total tokens in `sync_gradients`.
+            dx.scale(w)?;
+            dgf.scale(w)?;
+            dwout.scale(w)?;
+            accumulate(&mut self.mesh.devices[root], "grad.gf", dgf)?;
+            accumulate(&mut self.mesh.devices[root], "grad.wout", dwout)?;
+            self.mesh.devices[root].put(&dkey, dx);
+            for &d in &stage.devices {
+                let _ = self.mesh.devices[d].take(&akey);
+            }
+            head_out = Some((loss, tokens));
+        } else {
+            let next = &pipe.stages[si + 1];
+            self.mesh.send(next.devices[0], stage.devices[0], &dkey)?;
+            for &d in &next.devices {
+                if !stage.devices.contains(&d) {
+                    let _ = self.mesh.devices[d].take(&dkey);
                 }
             }
-            if si > 0 {
-                let prev = &pipe.stages[si - 1];
-                self.mesh.send(stage.devices[0], prev.devices[0], "dact")?;
-                self.mesh.broadcast(prev.devices[0], &prev.devices, "dact")?;
+        }
+        self.mesh.broadcast(stage.devices[0], &stage.devices, &dkey)?;
+
+        let tp = stage.tp();
+        let art = format!("block_bwd_tp{tp}");
+        for l in (stage.layers.0..stage.layers.1).rev() {
+            for (j, &d) in stage.devices.iter().enumerate() {
+                let dev = &self.mesh.devices[d];
+                let mut inputs: Vec<&HostTensor> = Vec::with_capacity(10);
+                for p in BLOCK_PARAMS {
+                    inputs.push(dev.get(&pkey(l, p))?);
+                }
+                inputs.push(dev.get(&format!("save.mb{mb}.L{l}"))?);
+                inputs.push(dev.get(&dkey)?);
+                let t0 = Instant::now();
+                let outs = self.runtime.call_refs(&art, &inputs)?;
+                compute[j] += t0.elapsed().as_secs_f64();
+                let mut it = outs.into_iter();
+                let dx_part = it.next().unwrap();
+                self.mesh.devices[d].put("dpart", dx_part);
+                for p in BLOCK_PARAMS {
+                    accumulate(&mut self.mesh.devices[d], &gkey(l, p), it.next().unwrap())?;
+                }
+                // free the saved activation
+                let _ = self.mesh.devices[d].take(&format!("save.mb{mb}.L{l}"));
+            }
+            self.mesh.all_reduce(&stage.devices, "dpart")?;
+            for &d in &stage.devices {
+                let dpart = self.mesh.devices[d].get("dpart")?.clone();
+                let dx = self.mesh.devices[d].get_mut(&dkey)?;
+                dx.add_assign(&dpart)?;
             }
         }
 
-        // ---- embedding gradient
-        let root0 = pipe.stages[0].devices[0];
-        let dx0 = self.mesh.devices[root0].get("dact")?;
-        let demb = self.runtime.call_refs("embed_bwd", &[&tok, dx0])?.into_iter().next().unwrap();
-        accumulate(&mut self.mesh.devices[root0], "grad.emb", demb)?;
-
-        Ok(loss)
+        if si == 0 {
+            let root = stage.devices[0];
+            let tok = HostTensor::i32(vec![b, s], batch.tokens.clone())?;
+            let demb = {
+                let dx0 = self.mesh.devices[root].get(&dkey)?;
+                self.runtime.call_refs("embed_bwd", &[&tok, dx0])?.into_iter().next().unwrap()
+            };
+            accumulate(&mut self.mesh.devices[root], "grad.emb", demb)?;
+            for &d in &stage.devices {
+                let _ = self.mesh.devices[d].take(&dkey);
+            }
+        }
+        Ok((task_duration(t_task.elapsed().as_secs_f64(), &compute), head_out))
     }
 
     /// Gradient synchronization from the cached [`ShardLayout`] plan, then
-    /// embedding/head reductions across pipeline roots, then `1/total_mb`
-    /// scaling over the cached gradient-key list.
-    pub(crate) fn sync_gradients(&mut self, total_mb: usize) -> Result<()> {
+    /// embedding/head reductions across pipeline roots, then the token-
+    /// weighted `1/total_tokens` scaling over the cached gradient-key list
+    /// (every accumulated gradient was pre-scaled by its micro-batch's
+    /// token count in the head task).
+    pub(crate) fn sync_gradients(&mut self, total_tokens: u64) -> Result<()> {
         for op in &self.layout.sync_ops {
             match op {
                 SyncOp::AllReduce { key, devs } => self.mesh.all_reduce(devs, key)?,
@@ -198,7 +375,7 @@ impl Engine {
         self.mesh.all_reduce(&self.layout.last_roots, "grad.gf")?;
         self.mesh.all_reduce(&self.layout.last_roots, "grad.wout")?;
 
-        let scale = 1.0 / total_mb as f32;
+        let scale = 1.0 / total_tokens as f32;
         for (dev, key) in &self.layout.grad_keys {
             self.mesh.devices[*dev].get_mut(key)?.scale(scale)?;
         }
@@ -214,6 +391,16 @@ impl Engine {
         }
         Ok(())
     }
+}
+
+/// Collapse a task's measured timings into its duration estimate: TP
+/// members run concurrently (slowest bounds the group), everything else in
+/// the task — collectives, boundary sends, root-only head/embed calls —
+/// is charged serially.
+fn task_duration(task_wall_s: f64, per_member_compute_s: &[f64]) -> f64 {
+    let sum: f64 = per_member_compute_s.iter().sum();
+    let max = per_member_compute_s.iter().copied().fold(0.0, f64::max);
+    (task_wall_s - sum).max(0.0) + max
 }
 
 /// Accumulate (or initialize) a gradient buffer.
@@ -296,5 +483,16 @@ mod tests {
         accumulate(&mut dev, "g", t.clone()).unwrap();
         accumulate(&mut dev, "g", t).unwrap();
         assert_eq!(dev.get("g").unwrap().as_f32().unwrap(), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn task_duration_overlaps_tp_members() {
+        // 3 members: 1+2+3 = 6ms of member compute inside a 10ms task wall
+        // → 4ms serial remainder + the 3ms slowest member.
+        let d = task_duration(0.010, &[0.001, 0.002, 0.003]);
+        assert!((d - 0.007).abs() < 1e-12);
+        // degenerate: clock jitter making wall < sum clamps the remainder
+        let d2 = task_duration(0.001, &[0.002]);
+        assert!((d2 - 0.002).abs() < 1e-12);
     }
 }

@@ -351,6 +351,7 @@ mod tests {
                     num_microbatches: 1,
                 },
             ],
+            schedule: crate::spec::schedule::ScheduleKind::GPipe,
         }
     }
 

@@ -23,8 +23,10 @@ pub mod layout;
 pub mod optim;
 pub mod switch;
 
+use crate::cluster::Cluster;
 use crate::collectives::Mesh;
 use crate::runtime::{ManifestConfig, Runtime};
+use crate::spec::schedule::ScheduleKind;
 use crate::{Error, Result};
 
 pub use layout::{ShardLayout, SyncOp};
@@ -60,17 +62,22 @@ pub struct EnginePipeline {
 }
 
 /// A full engine strategy (the runnable mirror of
-/// [`crate::strategy::ParallelStrategy`] at tiny-model scale).
+/// [`crate::strategy::ParallelStrategy`] at tiny-model scale, produced by
+/// hand or by [`crate::strategy::lower::lower`]).
 #[derive(Clone, Debug, PartialEq)]
 pub struct EngineStrategy {
     /// Strategy label.
     pub name: String,
     /// Pipelines (DP across them).
     pub pipelines: Vec<EnginePipeline>,
+    /// Pipeline schedule the interpreter follows ([`exec`] consumes the
+    /// task orders of [`crate::spec::schedule`], so the same strategy runs
+    /// under GPipe and 1F1B with identical numerics up to f32 reordering).
+    pub schedule: ScheduleKind,
 }
 
 impl EngineStrategy {
-    /// Uniform DP×TP×PP over devices `0..dp*tp*pp`.
+    /// Uniform DP×TP×PP over devices `0..dp*tp*pp` (GPipe schedule).
     pub fn uniform(name: &str, dp: usize, tp: usize, pp: usize, layers: u32, num_mb: usize) -> Self {
         let mut pipelines = vec![];
         let mut dev = 0usize;
@@ -85,7 +92,13 @@ impl EngineStrategy {
             }
             pipelines.push(EnginePipeline { stages, num_microbatches: num_mb });
         }
-        EngineStrategy { name: name.into(), pipelines }
+        EngineStrategy { name: name.into(), pipelines, schedule: ScheduleKind::GPipe }
+    }
+
+    /// The same strategy under a different pipeline schedule.
+    pub fn with_schedule(mut self, kind: ScheduleKind) -> Self {
+        self.schedule = kind;
+        self
     }
 
     /// Total devices used.
@@ -103,6 +116,12 @@ impl EngineStrategy {
                 if s.layers.0 != next {
                     return Err(Error::Engine(format!(
                         "{}: stage layers not contiguous at {}",
+                        self.name, s.layers.0
+                    )));
+                }
+                if s.layers.1 <= s.layers.0 {
+                    return Err(Error::Engine(format!(
+                        "{}: empty stage at layer {}",
                         self.name, s.layers.0
                     )));
                 }
@@ -141,12 +160,20 @@ pub struct MicroBatch {
 /// Step outcome.
 #[derive(Clone, Debug)]
 pub struct StepStats {
-    /// Mean loss over all micro-batches of all pipelines.
+    /// Token-weighted mean loss over all micro-batches of all pipelines
+    /// (equals the plain mean when every micro-batch has the same shape).
     pub loss: f32,
     /// Elements moved between devices this step.
     pub wire_elems: u64,
     /// Communication ops issued this step.
     pub comm_ops: u64,
+    /// Estimated parallel step seconds: per-task wall times measured while
+    /// interpreting the schedule, replayed through the pipeline dependency
+    /// structure (TP members counted concurrent, pipelines concurrent),
+    /// plus the per-device share of gradient sync + optimizer time. This is
+    /// the engine-side quantity cross-validated against
+    /// [`crate::sim`]'s step ranking.
+    pub makespan_s: f64,
 }
 
 /// The engine: runtime + mesh + strategy + cached layout + optimizer.
@@ -164,6 +191,11 @@ pub struct Engine {
     pub tp_degrees: Vec<usize>,
     /// Optimizer.
     pub opt: AdamW,
+    /// Physical topology behind the mesh device ids, when known. Threaded
+    /// into the §6.2 fused-BSR planner so sender selection uses the
+    /// bandwidth heuristic (2) at engine scale; `None` falls back to
+    /// [`crate::comm::UniformBandwidth`].
+    pub topology: Option<Cluster>,
     pub(crate) step: u64,
 }
 
@@ -205,39 +237,75 @@ impl Engine {
             layout,
             tp_degrees,
             opt: AdamW::new(lr),
+            topology: None,
             step: 0,
         })
     }
 
+    /// Attach the physical topology behind the mesh device ids (bandwidth-
+    /// aware sender selection during switches). Must cover at least every
+    /// mesh device id; `switch_to_avoiding` rejects undersized topologies
+    /// with a typed error.
+    pub fn set_topology(&mut self, topology: Cluster) {
+        self.topology = Some(topology);
+    }
+
     /// Run one training step over per-pipeline micro-batch providers.
     ///
-    /// `data(pipeline, mb)` returns the micro-batch for that slot.
+    /// `data(pipeline, mb)` returns the micro-batch for that slot; it is
+    /// called in pipeline-major order (pipeline 0 slots first), so a
+    /// stateful corpus feeds every strategy the same stream.
+    ///
+    /// Each pipeline executes the task order of its strategy's
+    /// [`ScheduleKind`] (GPipe or 1F1B); gradients are synchronized with
+    /// token weighting, so pipelines may run *different* micro-batch counts
+    /// (the paper's uneven apportioning) and still reduce to the exact
+    /// global-mean gradient.
     pub fn train_step(
         &mut self,
         data: &mut dyn FnMut(usize, usize) -> MicroBatch,
     ) -> Result<StepStats> {
         let wire0 = self.mesh.wire_elems;
         let ops0 = self.mesh.ops;
-        let mut total_loss = 0f32;
-        let mut total_mb = 0usize;
 
         let pipelines = self.strategy.pipelines.clone();
-        for (pi, pipe) in pipelines.iter().enumerate() {
-            for mb in 0..pipe.num_microbatches {
-                let batch = data(pi, mb);
-                let loss = self.forward_backward(pipe, mb, &batch)?;
-                total_loss += loss;
-                total_mb += 1;
+        let kind = self.strategy.schedule;
+        // prefetch in pipeline-major slot order (the data-stream contract)
+        let mut batches: Vec<Vec<MicroBatch>> = Vec::with_capacity(pipelines.len());
+        for (pi, p) in pipelines.iter().enumerate() {
+            let mut v = Vec::with_capacity(p.num_microbatches);
+            for mb in 0..p.num_microbatches {
+                v.push(data(pi, mb));
             }
+            batches.push(v);
         }
 
-        self.sync_gradients(total_mb)?;
+        let mut weighted_loss = 0f64;
+        let mut total_tokens = 0u64;
+        let mut makespan = 0f64;
+        for (pi, pipe) in pipelines.iter().enumerate() {
+            let run = self.run_pipeline(pipe, &batches[pi], kind)?;
+            weighted_loss += run.weighted_loss;
+            total_tokens += run.tokens;
+            makespan = makespan.max(run.makespan_s);
+        }
+        if total_tokens == 0 {
+            return Err(Error::Engine("train_step: no tokens processed".into()));
+        }
+
+        let t_sync = std::time::Instant::now();
+        self.sync_gradients(total_tokens)?;
         self.apply_updates()?;
+        let sync_s = t_sync.elapsed().as_secs_f64();
+        // sync + update work is spread over the devices and runs
+        // concurrently in a deployment; charge the per-device share.
+        let ndev = self.strategy.num_devices().max(1);
         self.step += 1;
         Ok(StepStats {
-            loss: total_loss / total_mb as f32,
+            loss: (weighted_loss / total_tokens as f64) as f32,
             wire_elems: self.mesh.wire_elems - wire0,
             comm_ops: self.mesh.ops - ops0,
+            makespan_s: makespan + sync_s / ndev as f64,
         })
     }
 }
@@ -281,6 +349,7 @@ mod tests {
                     num_microbatches: 1,
                 },
             ],
+            schedule: ScheduleKind::GPipe,
         };
         s.validate(&cfg, &[1, 2, 4]).unwrap();
     }
@@ -290,7 +359,8 @@ mod tests {
         let cfg = ManifestConfig { layers: 8, ..Default::default() };
         let stages = vec![EngineStage { devices: vec![0], layers: (0, 6) }];
         let pipelines = vec![EnginePipeline { stages, num_microbatches: 1 }];
-        let s = EngineStrategy { name: "short".into(), pipelines };
+        let s =
+            EngineStrategy { name: "short".into(), pipelines, schedule: ScheduleKind::GPipe };
         assert!(s.validate(&cfg, &[1, 2, 4]).is_err());
     }
 }

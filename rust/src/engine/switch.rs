@@ -22,11 +22,11 @@
 //!    gradient shard a device no longer owns under the new layout
 //!    (devices dropped by the strategy are emptied entirely).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use crate::collectives::{extract_region, localize, write_region};
 use crate::comm::fused::plan_transition_avoiding;
-use crate::comm::{BsrOptions, FusedBsrPlan, TensorMove, UniformBandwidth};
+use crate::comm::{Bandwidth, BsrOptions, FusedBsrPlan, TensorMove, UniformBandwidth};
 use crate::hspmd::dg::Rank;
 use crate::hspmd::slices::{Interval, Region};
 use crate::runtime::{HostTensor, ManifestConfig};
@@ -44,6 +44,10 @@ pub struct EngineSwitchReport {
     pub messages: u64,
     /// Elements measured on the wire while executing the plan.
     pub wire_elems: u64,
+    /// Measured elements per `(sender, receiver)` device pair — the
+    /// engine-side Table-2 rows (local copies move zero wire and are not
+    /// listed).
+    pub sent: BTreeMap<(usize, usize), u64>,
 }
 
 /// What a planned tensor move refers to in the engine's stores.
@@ -192,10 +196,25 @@ impl Engine {
             }
         }
 
-        // ---- 2. one fused plan for the whole transition
+        // ---- 2. one fused plan for the whole transition. When the engine
+        // knows the physical topology behind its device ids, sender
+        // selection runs the bandwidth heuristic (2) — intra-node replicas
+        // are preferred as sources — instead of the uniform stand-in.
         let dead_ranks: Vec<Rank> = dead.iter().map(|&d| d as Rank).collect();
-        let plan =
-            plan_transition_avoiding(&moves, &UniformBandwidth, BsrOptions::default(), true, &dead_ranks)?;
+        if let Some(c) = &self.topology {
+            if c.len() < self.mesh.devices.len() {
+                return Err(Error::Engine(format!(
+                    "topology covers {} devices but the mesh has {}",
+                    c.len(),
+                    self.mesh.devices.len()
+                )));
+            }
+        }
+        let bw: &dyn Bandwidth = match &self.topology {
+            Some(c) => c,
+            None => &UniformBandwidth,
+        };
+        let plan = plan_transition_avoiding(&moves, bw, BsrOptions::default(), true, &dead_ranks)?;
 
         // ---- 3. execute: stage destination shards, then commit.
         // Staging (rather than in-place writes) keeps every source read
@@ -204,6 +223,7 @@ impl Engine {
         let ops0 = self.mesh.ops;
         let mut staged: HashMap<(usize, usize), HostTensor> = HashMap::new();
 
+        let mut sent: BTreeMap<(usize, usize), u64> = BTreeMap::new();
         for (rank, ti, slice) in &plan.local_copies {
             let dev = *rank as usize;
             self.stage_piece(&new_layout, &mut staged, &moves, &targets, *ti, dev, dev, slice)?;
@@ -215,6 +235,7 @@ impl Engine {
                 let moved = self
                     .stage_piece(&new_layout, &mut staged, &moves, &targets, *ti, from, to, slice)?;
                 self.mesh.wire_elems += moved;
+                *sent.entry((from, to)).or_insert(0) += moved;
             }
         }
         for ((dev, ti), tensor) in staged {
@@ -242,6 +263,7 @@ impl Engine {
             messages: self.mesh.ops - ops0,
             wire_elems: self.mesh.wire_elems - wire0,
             plan,
+            sent,
         };
         self.strategy = new;
         self.layout = new_layout;

@@ -559,14 +559,19 @@ pub fn fig18_right() -> Result<Table> {
 }
 
 /// Table 2 — C1→C2 per-sender communication volumes (NVLink | IB), under
-/// the unfused-no-heuristics planner vs the fused planner.
+/// the unfused-no-heuristics planner vs the fused planner — plus an
+/// **engine column**: the same transition lowered to tiny-48 and *executed*
+/// on the native backend with the cluster topology threaded into the
+/// planner, so the tabled engine volumes are measured wire traffic, not
+/// simulation. Measured-vs-plan equality (total and per sender) is
+/// asserted before the rows are emitted.
 pub fn table2() -> Result<Table> {
     let cluster = Cluster::h20(32);
     let cm = CostModel::new(ModelCfg::llama_32b());
     let c1 = stables::hetu_c1_32h20();
     let c2 = stables::hetu_c2_31h20();
     let mut table = Table::new(
-        "Table 2 — C1→C2 send volumes per rank: NVLink MB | IB MB",
+        "Table 2 — C1→C2 send volumes per rank: NVLink MB | IB MB (engine rows: KiB, measured)",
         &["planner", "rank", "NVLink MB", "IB MB"],
     );
     for (label, opts, fuse) in [
@@ -587,6 +592,56 @@ pub fn table2() -> Result<Table> {
                 (ib / (1 << 20)).to_string(),
             ]);
         }
+    }
+
+    // ---- engine column: C1→C2 lowered and executed at real numerics.
+    let tiny = crate::runtime::native::tiny_config();
+    let lopts = crate::strategy::LowerOptions {
+        total_microbatches: 4,
+        tp_degrees: crate::runtime::native::TP_DEGREES.to_vec(),
+    };
+    let c1e = crate::strategy::lower(&c1, &tiny, &lopts)?;
+    let c2e = crate::strategy::lower(&c2, &tiny, &lopts)?;
+    let mut eng = crate::engine::Engine::with_runtime(
+        crate::runtime::Runtime::native(tiny),
+        c1e,
+        42,
+        1e-3,
+    )?;
+    eng.set_topology(cluster.clone());
+    let report = eng.switch_to_avoiding(c2e, &[31])?;
+    if report.wire_elems * 4 != report.plan.wire_bytes() {
+        return Err(crate::Error::Engine(format!(
+            "table2: engine measured {} wire bytes, plan predicts {}",
+            report.wire_elems * 4,
+            report.plan.wire_bytes()
+        )));
+    }
+    let mut measured: std::collections::BTreeMap<u32, (u64, u64)> = std::collections::BTreeMap::new();
+    for (&(from, to), &elems) in &report.sent {
+        let e = measured.entry(from as u32).or_insert((0, 0));
+        if crate::comm::Bandwidth::intra_node(&cluster, from as u32, to as u32) {
+            e.0 += elems * 4;
+        } else {
+            e.1 += elems * 4;
+        }
+    }
+    let planned = report.plan.sender_volumes(&cluster);
+    for (r, vols) in &measured {
+        if planned.get(r) != Some(vols) {
+            return Err(crate::Error::Engine(format!(
+                "table2: engine sender R{r} measured {vols:?} != planned {:?}",
+                planned.get(r)
+            )));
+        }
+    }
+    for (r, (nv, ib)) in measured {
+        table.row(vec![
+            "engine tiny-48 (measured)".into(),
+            format!("R{r}"),
+            (nv / 1024).to_string(),
+            (ib / 1024).to_string(),
+        ]);
     }
     Ok(table)
 }

@@ -119,20 +119,72 @@ pub fn call(cfg: &ManifestConfig, name: &str, inputs: &[&HostTensor]) -> Result<
 }
 
 // ---------------------------------------------------------------- helpers
+//
+// The three GEMM variants below are the native backend's hot path (the
+// tiny-48 head alone is a 32×48×512 GEMM ×3 per micro-batch). They are
+// blocked over the reduction dimension for cache reuse and use small
+// four-wide chunked kernels so test-profile builds are not dominated
+// by per-element bounds checks — the
+// `hotpath_micro` bench rows guard the tiny-48 debug-mode step budget.
+// Accumulation stays k-ordered in `matmul`/`matmul_tn`, so results are
+// bit-identical to the naive loops; `matmul_nt` uses four accumulators
+// (f32 reorder within each dot product).
 
-/// `out[m,n] = a[m,k] @ b[k,n]` (row-major, k-ordered f32 accumulation).
-fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+/// Reduction-dimension cache block.
+const KBLOCK: usize = 64;
+
+/// `dst += s · src` over equal-length rows. Four-wide `chunks_exact`
+/// lets the compiler drop per-element bounds checks without `unsafe`.
+#[inline(always)]
+fn axpy(dst: &mut [f32], src: &[f32], s: f32) {
+    assert_eq!(dst.len(), src.len());
+    let mut d4 = dst.chunks_exact_mut(4);
+    let mut a4 = src.chunks_exact(4);
+    for (d, a) in (&mut d4).zip(&mut a4) {
+        d[0] += s * a[0];
+        d[1] += s * a[1];
+        d[2] += s * a[2];
+        d[3] += s * a[3];
+    }
+    for (d, a) in d4.into_remainder().iter_mut().zip(a4.remainder()) {
+        *d += s * a;
+    }
+}
+
+/// Four-way unrolled dot product.
+#[inline(always)]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let mut a4 = a.chunks_exact(4);
+    let mut b4 = b.chunks_exact(4);
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    for (x, y) in (&mut a4).zip(&mut b4) {
+        s0 += x[0] * y[0];
+        s1 += x[1] * y[1];
+        s2 += x[2] * y[2];
+        s3 += x[3] * y[3];
+    }
+    let mut acc = (s0 + s1) + (s2 + s3);
+    for (x, y) in a4.remainder().iter().zip(b4.remainder()) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// `out[m,n] = a[m,k] @ b[k,n]` (row-major, k-ordered f32 accumulation,
+/// k-blocked). Public so the `hotpath_micro` bench can guard it.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let row = &mut out[i * n..(i + 1) * n];
-        for kk in 0..k {
-            let av = a[i * k + kk];
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[kk * n..(kk + 1) * n];
-            for j in 0..n {
-                row[j] += av * brow[j];
+    for k0 in (0..k).step_by(KBLOCK) {
+        let k1 = (k0 + KBLOCK).min(k);
+        for i in 0..m {
+            let row = &mut out[i * n..(i + 1) * n];
+            let arow = &a[i * k..(i + 1) * k];
+            for (kk, &av) in arow.iter().enumerate().take(k1).skip(k0) {
+                if av == 0.0 {
+                    continue;
+                }
+                axpy(row, &b[kk * n..(kk + 1) * n], av);
             }
         }
     }
@@ -140,38 +192,29 @@ fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
 }
 
 /// `out[k,n] = a[m,k]ᵀ @ b[m,n]` (gradient w.r.t. a weight).
-fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; k * n];
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
         let brow = &b[i * n..(i + 1) * n];
-        for kk in 0..k {
-            let av = arow[kk];
+        for (kk, &av) in arow.iter().enumerate() {
             if av == 0.0 {
                 continue;
             }
-            let row = &mut out[kk * n..(kk + 1) * n];
-            for j in 0..n {
-                row[j] += av * brow[j];
-            }
+            axpy(&mut out[kk * n..(kk + 1) * n], brow, av);
         }
     }
     out
 }
 
 /// `out[m,k] = a[m,n] @ b[k,n]ᵀ` (gradient w.r.t. a matmul input).
-fn matmul_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; m * k];
     for i in 0..m {
         let arow = &a[i * n..(i + 1) * n];
         let row = &mut out[i * k..(i + 1) * k];
-        for kk in 0..k {
-            let brow = &b[kk * n..(kk + 1) * n];
-            let mut s = 0.0f32;
-            for j in 0..n {
-                s += arow[j] * brow[j];
-            }
-            row[kk] = s;
+        for (kk, r) in row.iter_mut().enumerate() {
+            *r = dot(arow, &b[kk * n..(kk + 1) * n]);
         }
     }
     out
@@ -605,6 +648,48 @@ mod tests {
         for i in [0usize, 3, 7] {
             let num = numgrad(&mut f_of_g, &g, i);
             assert!((dg[i] - num).abs() < 2e-2, "dg[{i}] = {} vs numeric {num}", dg[i]);
+        }
+    }
+
+    #[test]
+    fn blocked_gemms_match_naive_reference() {
+        let mut rng = Rng::new(99);
+        let (m, k, n) = (7, 131, 9); // awkward sizes: exercise tails + blocks
+        let a = randvec(&mut rng, m * k, 1.0);
+        let b = randvec(&mut rng, k * n, 1.0);
+        let naive = |a: &[f32], b: &[f32]| -> Vec<f32> {
+            let mut out = vec![0.0f32; m * n];
+            for i in 0..m {
+                for kk in 0..k {
+                    for j in 0..n {
+                        out[i * n + j] += a[i * k + kk] * b[kk * n + j];
+                    }
+                }
+            }
+            out
+        };
+        // k-ordered accumulation: bit-identical to the naive loop
+        assert_eq!(matmul(&a, &b, m, k, n), naive(&a, &b));
+        let tn = matmul_tn(&a, &b, 3, 5, 7);
+        let mut tn_ref = vec![0.0f32; 5 * 7];
+        for i in 0..3 {
+            for kk in 0..5 {
+                for j in 0..7 {
+                    tn_ref[kk * 7 + j] += a[i * 5 + kk] * b[i * 7 + j];
+                }
+            }
+        }
+        assert_eq!(tn, tn_ref);
+        let nt = matmul_nt(&a, &b, 4, 130, 6);
+        for i in 0..4 {
+            for kk in 0..6 {
+                let mut s = 0.0f64;
+                for j in 0..130 {
+                    s += a[i * 130 + j] as f64 * b[kk * 130 + j] as f64;
+                }
+                let got = nt[i * 6 + kk] as f64;
+                assert!((got - s).abs() < 1e-3 * s.abs().max(1.0), "nt[{i},{kk}] {got} vs {s}");
+            }
         }
     }
 

@@ -248,6 +248,23 @@ fn grad_sync(
     comm.values().copied().fold(0.0, f64::max)
 }
 
+/// Rank strategies by simulated step time: the indices of `strats` sorted
+/// ascending (fastest first). The engine cross-validation harness
+/// (`rust/tests/engine_integration.rs`) asserts the measured makespan
+/// ordering of the *lowered* strategies agrees with this ranking.
+pub fn rank_by_step_time(
+    cluster: &Cluster,
+    cm: &CostModel,
+    strats: &[&ParallelStrategy],
+) -> Result<Vec<usize>> {
+    let mut times = Vec::with_capacity(strats.len());
+    for (i, &s) in strats.iter().enumerate() {
+        times.push((simulate_step(cluster, cm, s)?.step_s, i));
+    }
+    times.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    Ok(times.into_iter().map(|(_, i)| i).collect())
+}
+
 /// Simulate one training step of `strat` on `cluster` (default options).
 pub fn simulate_step(
     cluster: &Cluster,

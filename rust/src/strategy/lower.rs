@@ -1,0 +1,283 @@
+//! Strategy lowering: Appendix-A [`ParallelStrategy`] encodings → runnable
+//! [`EngineStrategy`] values at tiny-model scale (DESIGN.md §4).
+//!
+//! The paper's strategies are written against the 60/80-layer models on the
+//! 48-GPU testbed; the engine trains the tiny configuration. Lowering
+//! preserves exactly the structure the §5 spatial-heterogeneity claims rest
+//! on:
+//!
+//! * **non-uniform layer splits** — stage boundaries rescale
+//!   proportionally (round-half-up) onto the engine's layer count, with a
+//!   monotone fix-up so every stage keeps ≥ 1 layer. A split that is
+//!   already at engine scale lowers to itself, which is what makes
+//!   [`EngineStrategy::uniform`] round-trip through the lowering (property
+//!   sweep in `rust/tests/property_sweeps.rs`);
+//! * **per-stage TP degrees** — clamped to the largest degree the runtime
+//!   has a block artifact for (asymmetric tails like C2's TP4→TP2→TP1
+//!   survive unchanged);
+//! * **uneven micro-batching** — each pipeline's engine micro-batch count
+//!   is its largest-remainder share of `total_microbatches`, weighted by
+//!   its paper-scale samples-per-step, floored at one. The engine's
+//!   token-weighted gradient sync makes the uneven counts exact (not
+//!   approximate) data parallelism;
+//! * **ranks → mesh devices** — dense renumbering in (pipeline, stage)
+//!   order;
+//! * the **schedule** (GPipe/1F1B) carries over verbatim — the engine
+//!   interpreter consumes the same [`crate::spec::schedule`] orders the
+//!   simulator replays.
+
+use crate::engine::{EnginePipeline, EngineStage, EngineStrategy};
+use crate::runtime::ManifestConfig;
+use crate::{Error, Result};
+
+use super::ParallelStrategy;
+
+/// Lowering knobs.
+#[derive(Clone, Debug)]
+pub struct LowerOptions {
+    /// Total micro-batches per step across all pipelines (apportioned by
+    /// each pipeline's paper-scale sample share, at least one each).
+    pub total_microbatches: usize,
+    /// TP degrees the runtime has block artifacts for (any order).
+    pub tp_degrees: Vec<usize>,
+}
+
+impl Default for LowerOptions {
+    fn default() -> Self {
+        LowerOptions {
+            total_microbatches: 8,
+            tp_degrees: crate::runtime::native::TP_DEGREES.to_vec(),
+        }
+    }
+}
+
+/// Lower a paper-scale strategy onto the engine's model configuration.
+pub fn lower(
+    strat: &ParallelStrategy,
+    cfg: &ManifestConfig,
+    opts: &LowerOptions,
+) -> Result<EngineStrategy> {
+    let src_layers = strat
+        .pipelines
+        .iter()
+        .flat_map(|p| p.stages.iter().map(|s| s.layers.1))
+        .max()
+        .unwrap_or(0);
+    if src_layers == 0 {
+        return Err(Error::Strategy(format!("{}: no layers to lower", strat.name)));
+    }
+    strat.validate(src_layers)?;
+
+    let weights: Vec<u64> = strat.pipelines.iter().map(|p| p.samples()).collect();
+    let num_mb = apportion(&weights, opts.total_microbatches)
+        .map_err(|e| Error::Strategy(format!("{}: {e}", strat.name)))?;
+
+    let mut pipelines = Vec::with_capacity(strat.pipelines.len());
+    let mut dev = 0usize;
+    for (pi, p) in strat.pipelines.iter().enumerate() {
+        let bounds: Vec<u32> = p.stages.iter().map(|s| s.layers.1).collect();
+        let scaled = scale_boundaries(&bounds, src_layers, cfg.layers).map_err(|e| {
+            Error::Strategy(format!("{}: pipeline {pi}: {e}", strat.name))
+        })?;
+        let mut stages = Vec::with_capacity(p.stages.len());
+        let mut lo = 0u32;
+        for (s, hi) in p.stages.iter().zip(scaled.iter()) {
+            let tp = opts
+                .tp_degrees
+                .iter()
+                .copied()
+                .filter(|&d| d <= s.ranks.len())
+                .max()
+                .ok_or_else(|| {
+                    Error::Strategy(format!(
+                        "{}: no supported TP degree ≤ {} (have {:?})",
+                        strat.name,
+                        s.ranks.len(),
+                        opts.tp_degrees
+                    ))
+                })?;
+            stages.push(EngineStage { devices: (dev..dev + tp).collect(), layers: (lo, *hi) });
+            dev += tp;
+            lo = *hi;
+        }
+        pipelines.push(EnginePipeline { stages, num_microbatches: num_mb[pi] });
+    }
+
+    Ok(EngineStrategy {
+        name: format!("{}@tiny", strat.name),
+        pipelines,
+        schedule: strat.schedule,
+    })
+}
+
+/// Largest-remainder apportionment of `total` micro-batches over sample
+/// weights, with a floor of one per pipeline.
+fn apportion(weights: &[u64], total: usize) -> std::result::Result<Vec<usize>, String> {
+    let n = weights.len();
+    if n == 0 {
+        return Err("no pipelines".into());
+    }
+    if total < n {
+        return Err(format!("{total} micro-batches cannot cover {n} pipelines"));
+    }
+    let w_sum: u128 = weights.iter().map(|&w| w as u128).sum();
+    if w_sum == 0 {
+        return Err("zero total samples".into());
+    }
+    let mut alloc = vec![0usize; n];
+    let mut rem: Vec<(u128, usize)> = Vec::with_capacity(n);
+    let mut used = 0usize;
+    for (i, &w) in weights.iter().enumerate() {
+        let num = w as u128 * total as u128;
+        alloc[i] = (num / w_sum) as usize;
+        used += alloc[i];
+        rem.push((num % w_sum, i));
+    }
+    // leftover (< n) goes to the largest fractional shares; ties break on
+    // pipeline index for determinism
+    rem.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    for k in 0..total - used {
+        alloc[rem[k].1] += 1;
+    }
+    // floor of one: steal from the currently-largest allocation
+    for i in 0..n {
+        while alloc[i] == 0 {
+            let j = (0..n).max_by_key(|&j| alloc[j]).unwrap();
+            if alloc[j] <= 1 {
+                return Err("cannot give every pipeline a micro-batch".into());
+            }
+            alloc[j] -= 1;
+            alloc[i] += 1;
+        }
+    }
+    Ok(alloc)
+}
+
+/// Rescale cumulative stage boundaries (each stage's exclusive layer end)
+/// from `src_layers` onto `dst_layers`: proportional round-half-up, then a
+/// monotone clamp guaranteeing every stage at least one layer and the last
+/// boundary exactly `dst_layers`.
+fn scale_boundaries(
+    bounds: &[u32],
+    src_layers: u32,
+    dst_layers: u32,
+) -> std::result::Result<Vec<u32>, String> {
+    let s_count = bounds.len();
+    if s_count as u32 > dst_layers {
+        return Err(format!("{s_count} stages cannot split {dst_layers} layers"));
+    }
+    let mut out: Vec<u32> = Vec::with_capacity(s_count);
+    for (k, &b) in bounds.iter().enumerate() {
+        let scaled = ((b as u64 * dst_layers as u64 * 2 + src_layers as u64)
+            / (2 * src_layers as u64)) as u32;
+        let lo = out.last().copied().unwrap_or(0) + 1;
+        let hi = dst_layers - (s_count - 1 - k) as u32;
+        out.push(scaled.clamp(lo, hi));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native;
+    use crate::spec::schedule::ScheduleKind;
+    use crate::strategy::{tables, uniform};
+
+    fn opts(total_mb: usize) -> LowerOptions {
+        LowerOptions { total_microbatches: total_mb, tp_degrees: vec![1, 2, 4] }
+    }
+
+    #[test]
+    fn boundaries_rescale_preserving_raggedness() {
+        // C2 pipeline 1 tail: 60-layer bounds 16/32/48/56/60 → 8 layers
+        let out = scale_boundaries(&[16, 32, 48, 56, 60], 60, 8).unwrap();
+        assert_eq!(out, vec![2, 4, 6, 7, 8]);
+        // identity when already at engine scale
+        assert_eq!(scale_boundaries(&[3, 8], 8, 8).unwrap(), vec![3, 8]);
+        // heavy skew keeps every stage non-empty
+        assert_eq!(scale_boundaries(&[59, 60], 60, 8).unwrap(), vec![7, 8]);
+        assert_eq!(scale_boundaries(&[1, 60], 60, 8).unwrap(), vec![1, 8]);
+        assert!(scale_boundaries(&[1, 2, 3, 4, 5, 6, 7, 8, 9], 9, 8).is_err());
+    }
+
+    #[test]
+    fn apportionment_is_weighted_and_floored() {
+        assert_eq!(apportion(&[33, 31], 7).unwrap(), vec![4, 3]);
+        assert_eq!(apportion(&[32, 32], 8).unwrap(), vec![4, 4]);
+        // tiny share still gets one micro-batch
+        assert_eq!(apportion(&[100, 1], 4).unwrap(), vec![3, 1]);
+        assert!(apportion(&[1, 1, 1], 2).is_err());
+    }
+
+    #[test]
+    fn c2_lowers_with_asymmetric_tail_and_uneven_microbatches() {
+        let cfg = native::tiny_config();
+        let c2 = tables::hetu_c2_31h20();
+        let e = lower(&c2, &cfg, &opts(7)).unwrap();
+        e.validate(&cfg, &[1, 2, 4]).unwrap();
+        assert_eq!(e.schedule, ScheduleKind::OneFOneB);
+        assert_eq!(e.num_devices(), 31);
+        // uneven micro-batching survives (33:31 → 4:3)
+        assert_eq!(e.pipelines[0].num_microbatches, 4);
+        assert_eq!(e.pipelines[1].num_microbatches, 3);
+        // the degraded TP tail survives: 4,4,4,2,1
+        let tps: Vec<usize> = e.pipelines[1].stages.iter().map(|s| s.tp()).collect();
+        assert_eq!(tps, vec![4, 4, 4, 2, 1]);
+        // ragged 5-stage split of 8 layers
+        let spans: Vec<u32> =
+            e.pipelines[1].stages.iter().map(|s| s.layers.1 - s.layers.0).collect();
+        assert_eq!(spans.iter().sum::<u32>(), cfg.layers);
+        assert!(spans.iter().any(|&w| w != spans[0]), "split stays non-uniform: {spans:?}");
+        // dense device renumbering
+        let devs: Vec<usize> = e
+            .pipelines
+            .iter()
+            .flat_map(|p| p.stages.iter().flat_map(|s| s.devices.iter().copied()))
+            .collect();
+        assert_eq!(devs, (0..31).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn paper_tables_lower_and_validate() {
+        let cfg = native::tiny_config();
+        for s in [
+            tables::hetu_32b_16h800_16h20(),
+            tables::hetu_32b_16h800_32h20(),
+            tables::hetu_c1_32h20(),
+            tables::hetu_c2_31h20(),
+            tables::hetu_c6(),
+            tables::hetu_70b_16h800_24h20(), // TP8 clamps to TP4
+        ] {
+            let e = lower(&s, &cfg, &opts(8)).unwrap_or_else(|err| panic!("{}: {err}", s.name));
+            e.validate(&cfg, &[1, 2, 4]).unwrap_or_else(|err| panic!("{}: {err}", s.name));
+            let total: usize = e.pipelines.iter().map(|p| p.num_microbatches).sum();
+            assert_eq!(total, 8, "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn uniform_spec_at_engine_scale_lowers_to_engine_uniform() {
+        let cfg = native::tiny_config();
+        let ranks: Vec<u32> = (0..8).collect();
+        let spec = uniform(
+            "dp2tp2pp2",
+            &ranks,
+            2,
+            2,
+            2,
+            cfg.layers,
+            8,
+            1,
+            2048,
+            ScheduleKind::GPipe,
+            false,
+            false,
+        )
+        .unwrap();
+        let lowered = lower(&spec, &cfg, &opts(8)).unwrap();
+        let direct = EngineStrategy::uniform("dp2tp2pp2", 2, 2, 2, cfg.layers, 4);
+        assert_eq!(lowered.pipelines, direct.pipelines);
+        assert_eq!(lowered.schedule, direct.schedule);
+    }
+}

@@ -4,13 +4,17 @@
 //! Appendix-A tables: a set of pipelines, each a chain of stages, each
 //! stage a TP group of ranks owning a contiguous layer range. Strategies
 //! lower to HSPMD annotations ([`ParallelStrategy::weight_annotation`]) for
-//! switch planning, and are evaluated by the [`crate::sim`] discrete-event
-//! simulator.
+//! switch planning, are evaluated by the [`crate::sim`] discrete-event
+//! simulator, and lower to runnable engine strategies at tiny-model scale
+//! via [`lower`] (the plan↔execution bridge of DESIGN.md §4).
 
 pub mod generate;
+pub mod lower;
 pub mod memory;
 pub mod search;
 pub mod tables;
+
+pub use lower::{lower, LowerOptions};
 
 use crate::hspmd::dg::Rank;
 use crate::hspmd::{Annotation, DeviceGroup, DistStates, Subgroup};

@@ -15,6 +15,7 @@ use hetu::engine::{
     Engine, EnginePipeline, EngineStage, EngineStrategy, MicroBatch,
 };
 use hetu::runtime::{native, Runtime};
+use hetu::spec::schedule::ScheduleKind;
 
 fn native_engine(strategy: EngineStrategy, seed: u64, lr: f32) -> Engine {
     Engine::with_runtime(Runtime::native(native::tiny_config()), strategy, seed, lr).unwrap()
@@ -40,26 +41,38 @@ fn hetero_strategy(num_mb: usize) -> EngineStrategy {
                 num_microbatches: num_mb,
             },
         ],
+        schedule: ScheduleKind::GPipe,
     }
 }
 
 /// A fixed pool of microbatches so every strategy sees the same data:
-/// pipeline-major assignment (pipeline p of n gets slots p*per..(p+1)*per).
+/// pipeline-major assignment (pipeline p's slots start at offset[p]).
 struct Pool {
     mbs: Vec<MicroBatch>,
-    per_pipeline: usize,
+    offsets: Vec<usize>,
 }
 
 impl Pool {
+    /// Equal split of `total` slots over `pipelines`.
     fn new(total: usize, b: usize, s: usize, vocab: usize, pipelines: usize) -> Pool {
-        let mut corpus = SyntheticCorpus::new(1234, vocab);
-        Pool {
-            mbs: (0..total).map(|_| corpus.microbatch(b, s)).collect(),
-            per_pipeline: total / pipelines,
-        }
+        let per = total / pipelines;
+        Pool::split(total, b, s, vocab, &vec![per; pipelines])
     }
+
+    /// Explicit per-pipeline slot counts (uneven micro-batching): pipeline
+    /// p gets slots `offset[p]..offset[p]+counts[p]` of the same stream.
+    fn split(total: usize, b: usize, s: usize, vocab: usize, counts: &[usize]) -> Pool {
+        assert_eq!(counts.iter().sum::<usize>(), total);
+        let mut corpus = SyntheticCorpus::new(1234, vocab);
+        let mut offsets = vec![0usize];
+        for &c in &counts[..counts.len() - 1] {
+            offsets.push(offsets.last().unwrap() + c);
+        }
+        Pool { mbs: (0..total).map(|_| corpus.microbatch(b, s)).collect(), offsets }
+    }
+
     fn get(&self, pipe: usize, mb: usize) -> MicroBatch {
-        self.mbs[pipe * self.per_pipeline + mb].clone()
+        self.mbs[self.offsets[pipe] + mb].clone()
     }
 }
 
@@ -171,6 +184,7 @@ fn stage_layout_rebalance_switch() {
             ],
             num_microbatches: 2,
         }],
+        schedule: ScheduleKind::GPipe,
     };
     let mut eng = native_engine(mk(4, "even"), 42, 1e-3);
     let cfg = eng.runtime.config;
@@ -294,6 +308,7 @@ fn engine_failover_excludes_dead_senders() {
             ],
             num_microbatches: 2,
         }],
+        schedule: ScheduleKind::GPipe,
     };
     let report = hetu::elastic::engine_failover(&mut eng, survivor, &[2, 3]).unwrap();
     for msg in &report.plan.messages {
@@ -303,4 +318,293 @@ fn engine_failover_excludes_dead_senders() {
     assert!(eng.mesh.devices[2].keys().is_empty() && eng.mesh.devices[3].keys().is_empty());
     let after = eng.train_step(&mut |_p, m| pool.get(0, m)).unwrap().loss;
     assert!(after.is_finite());
+}
+
+// ---------------------------------------------------------------------------
+// Strategy lowering, uneven micro-batching, schedule unification, and the
+// engine↔simulator cross-validation harness (ISSUE 2 acceptance).
+
+#[test]
+fn gpipe_and_1f1b_produce_the_same_training_trajectory() {
+    // one strategy, both schedules, one code path: losses must agree to
+    // f32 accumulation-order noise.
+    let mut losses = vec![];
+    for kind in [ScheduleKind::GPipe, ScheduleKind::OneFOneB] {
+        let s = EngineStrategy::uniform("pp4", 1, 1, 4, 8, 8).with_schedule(kind);
+        let mut eng = native_engine(s, 42, 1e-3);
+        let vocab = eng.runtime.config.vocab;
+        let mut corpus = SyntheticCorpus::new(21, vocab);
+        losses.push(train_losses(&mut eng, 3, &mut corpus));
+    }
+    for (i, (a, b)) in losses[0].iter().zip(losses[1].iter()).enumerate() {
+        assert!(
+            (a - b).abs() < 3e-4,
+            "step {i}: GPipe {a} vs 1F1B {b} ({:?} vs {:?})",
+            losses[0],
+            losses[1]
+        );
+    }
+}
+
+#[test]
+fn uneven_microbatch_dp_matches_uniform_oracle() {
+    // DP replicas running 3 and 1 micro-batches == solo running all 4: the
+    // token-weighted sync reduces uneven apportioning to the exact
+    // global-mean gradient.
+    let uneven = EngineStrategy {
+        name: "dp2-uneven".into(),
+        pipelines: vec![
+            EnginePipeline {
+                stages: vec![EngineStage { devices: vec![0], layers: (0, 8) }],
+                num_microbatches: 3,
+            },
+            EnginePipeline {
+                stages: vec![EngineStage { devices: vec![1], layers: (0, 8) }],
+                num_microbatches: 1,
+            },
+        ],
+        schedule: ScheduleKind::GPipe,
+    };
+    let cfg = native::tiny_config();
+    let mut oracle = native_engine(EngineStrategy::uniform("solo", 1, 1, 1, 8, 4), 42, 1e-3);
+    let mut sw = native_engine(uneven, 42, 1e-3);
+    let pool_solo = Pool::new(4, cfg.batch, cfg.seq, cfg.vocab, 1);
+    let pool_31 = Pool::split(4, cfg.batch, cfg.seq, cfg.vocab, &[3, 1]);
+    for step in 0..2 {
+        let a = oracle.train_step(&mut |p, m| pool_solo.get(p, m)).unwrap().loss;
+        let b = sw.train_step(&mut |p, m| pool_31.get(p, m)).unwrap().loss;
+        assert!((a - b).abs() < 1e-4, "step {step}: solo {a} vs uneven dp2 {b}");
+    }
+}
+
+#[test]
+fn lowered_c2_trains_on_the_uniform_oracle_trajectory() {
+    // The acceptance case: a strategy::tables hetero encoding (C2 —
+    // non-uniform layer split, TP4→TP2→TP1 tail, 33:31 micro-batches)
+    // lowers onto the engine and matches the single-device oracle under
+    // BOTH schedules.
+    let cfg = native::tiny_config();
+    let steps = 2;
+    let mut oracle = native_engine(EngineStrategy::uniform("solo", 1, 1, 1, 8, 7), 42, 1e-3);
+    let pool_solo = Pool::new(7, cfg.batch, cfg.seq, cfg.vocab, 1);
+    let mut ol = vec![];
+    for _ in 0..steps {
+        ol.push(oracle.train_step(&mut |p, m| pool_solo.get(p, m)).unwrap().loss);
+    }
+
+    let c2 = hetu::strategy::tables::hetu_c2_31h20();
+    let lopts =
+        hetu::strategy::LowerOptions { total_microbatches: 7, tp_degrees: vec![1, 2, 4] };
+    for kind in [ScheduleKind::GPipe, ScheduleKind::OneFOneB] {
+        let lowered = hetu::strategy::lower(&c2, &cfg, &lopts).unwrap().with_schedule(kind);
+        assert_eq!(lowered.pipelines[0].num_microbatches, 4);
+        assert_eq!(lowered.pipelines[1].num_microbatches, 3);
+        let mut eng = native_engine(lowered, 42, 1e-3);
+        let pool = Pool::split(7, cfg.batch, cfg.seq, cfg.vocab, &[4, 3]);
+        for (step, &a) in ol.iter().enumerate() {
+            let b = eng.train_step(&mut |p, m| pool.get(p, m)).unwrap().loss;
+            assert!(
+                (a - b).abs() < 5e-3,
+                "step {step} ({kind:?}): oracle {a} vs lowered C2 {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn switch_through_ragged_uneven_layout_is_transparent() {
+    // uniform pp2 → ragged 3/5 split + full replica with uneven
+    // micro-batches (3+1) → back to uniform; the never-switched pp2 oracle
+    // trajectory must continue across both transitions.
+    let ragged = EngineStrategy {
+        name: "ragged-3-5+solo".into(),
+        pipelines: vec![
+            EnginePipeline {
+                stages: vec![
+                    EngineStage { devices: vec![0], layers: (0, 3) },
+                    EngineStage { devices: vec![1], layers: (3, 8) },
+                ],
+                num_microbatches: 3,
+            },
+            EnginePipeline {
+                stages: vec![EngineStage { devices: vec![2], layers: (0, 8) }],
+                num_microbatches: 1,
+            },
+        ],
+        schedule: ScheduleKind::OneFOneB,
+    };
+    let cfg = native::tiny_config();
+    let uniform = || EngineStrategy::uniform("pp2", 1, 1, 2, 8, 4);
+    let pool_solo = Pool::new(4, cfg.batch, cfg.seq, cfg.vocab, 1);
+    let pool_31 = Pool::split(4, cfg.batch, cfg.seq, cfg.vocab, &[3, 1]);
+
+    let mut oracle = native_engine(uniform(), 42, 1e-3);
+    let mut ol = vec![];
+    for _ in 0..3 {
+        ol.push(oracle.train_step(&mut |p, m| pool_solo.get(p, m)).unwrap().loss);
+    }
+
+    let mut sw = native_engine(uniform(), 42, 1e-3);
+    let mut sl = vec![sw.train_step(&mut |p, m| pool_solo.get(p, m)).unwrap().loss];
+    let (m1, e1) = sw.switch_to(ragged.clone()).unwrap();
+    assert!(m1 > 0 && e1 > 0, "into ragged moved data: {m1}/{e1}");
+    sl.push(sw.train_step(&mut |p, m| pool_31.get(p, m)).unwrap().loss);
+    let (m2, e2) = sw.switch_to(uniform()).unwrap();
+    assert!(m2 > 0 && e2 > 0, "out of ragged moved data: {m2}/{e2}");
+    sl.push(sw.train_step(&mut |p, m| pool_solo.get(p, m)).unwrap().loss);
+
+    for (i, (a, b)) in ol.iter().zip(sl.iter()).enumerate() {
+        assert!((a - b).abs() < 2e-3, "step {i}: {a} vs {b} ({ol:?} vs {sl:?})");
+    }
+}
+
+#[test]
+fn engine_step_time_ordering_matches_sim_ranking() {
+    // Cross-validation harness: three paper-scale encodings whose step
+    // ranking is structural (pipeline balance, not hardware speed), ranked
+    // by the simulator at 60-layer scale and by measured engine makespans
+    // after lowering to tiny-48.
+    use hetu::cluster::Cluster;
+    use hetu::costmodel::{CostModel, ModelCfg};
+    use hetu::strategy::{uniform, ParallelStrategy, PipelineSpec, StageSpec};
+
+    let ranks: Vec<u32> = (0..2).collect();
+    let balanced = uniform(
+        "balanced-pp2",
+        &ranks,
+        1,
+        1,
+        2,
+        60,
+        8,
+        1,
+        4096,
+        ScheduleKind::OneFOneB,
+        false,
+        false,
+    )
+    .unwrap();
+    let skewed = ParallelStrategy {
+        name: "skewed-pp2".into(),
+        pipelines: vec![PipelineSpec {
+            stages: vec![StageSpec::r_l(0, 0, 0, 52), StageSpec::r_l(1, 1, 53, 59)],
+            num_microbatches: 8,
+            microbatch_size: 1,
+        }],
+        zero1: false,
+        schedule: ScheduleKind::OneFOneB,
+        seq_len: 4096,
+        ac: false,
+    };
+    let solo = uniform(
+        "solo",
+        &ranks[..1],
+        1,
+        1,
+        1,
+        60,
+        8,
+        1,
+        4096,
+        ScheduleKind::OneFOneB,
+        false,
+        false,
+    )
+    .unwrap();
+
+    let cluster = Cluster::h20(8);
+    let cm = CostModel::new(ModelCfg::llama_32b());
+    let strats = [&balanced, &skewed, &solo];
+    let sim_rank = hetu::sim::rank_by_step_time(&cluster, &cm, &strats).unwrap();
+
+    let cfg = native::tiny_config();
+    let lopts =
+        hetu::strategy::LowerOptions { total_microbatches: 8, tp_degrees: vec![1, 2, 4] };
+    let mut measured = vec![];
+    for &s in &strats {
+        let lowered = hetu::strategy::lower(s, &cfg, &lopts).unwrap();
+        let mut eng = native_engine(lowered, 42, 1e-3);
+        let pool = Pool::new(8, cfg.batch, cfg.seq, cfg.vocab, 1);
+        // min over a few steps damps scheduler noise
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            best = best.min(eng.train_step(&mut |p, m| pool.get(p, m)).unwrap().makespan_s);
+        }
+        assert!(best > 0.0);
+        measured.push(best);
+    }
+    let mut eng_rank: Vec<usize> = (0..measured.len()).collect();
+    eng_rank.sort_by(|&a, &b| measured[a].partial_cmp(&measured[b]).unwrap());
+    assert_eq!(
+        eng_rank, sim_rank,
+        "engine makespans {measured:?} disagree with simulator ranking"
+    );
+}
+
+#[test]
+fn topology_aware_switch_prefers_intra_node_senders() {
+    // BSR heuristic (2) at engine scale: replicas live on node 0 (device
+    // 0) and node 1 (device 8); a new TP2 layout on node-1 devices 9,10
+    // can source everything over NVLink — but only if the planner sees
+    // real bandwidths instead of UniformBandwidth.
+    use hetu::cluster::Cluster;
+    let dp2 = EngineStrategy {
+        name: "dp2-across-nodes".into(),
+        pipelines: vec![
+            EnginePipeline {
+                stages: vec![EngineStage { devices: vec![0], layers: (0, 8) }],
+                num_microbatches: 1,
+            },
+            EnginePipeline {
+                stages: vec![EngineStage { devices: vec![8], layers: (0, 8) }],
+                num_microbatches: 1,
+            },
+        ],
+        schedule: ScheduleKind::GPipe,
+    };
+    let tp2 = EngineStrategy {
+        name: "tp2-node1".into(),
+        pipelines: vec![EnginePipeline {
+            stages: vec![EngineStage { devices: vec![9, 10], layers: (0, 8) }],
+            num_microbatches: 2,
+        }],
+        schedule: ScheduleKind::GPipe,
+    };
+
+    // uniform bandwidth: load balancing alone spreads senders across nodes
+    let mut flat = native_engine(dp2.clone(), 42, 1e-3);
+    let rep_flat = flat.switch_to_avoiding(tp2.clone(), &[]).unwrap();
+    let cross_node =
+        rep_flat.plan.messages.iter().filter(|m| m.from == 0).count();
+    assert!(cross_node > 0, "uniform bandwidth should pick device 0 for some slices");
+
+    // with the topology threaded through, every slice sources intra-node
+    let mut topo = native_engine(dp2, 42, 1e-3);
+    topo.set_topology(Cluster::h20(16));
+    let rep = topo.switch_to_avoiding(tp2, &[]).unwrap();
+    assert!(rep.wire_elems > 0);
+    for m in &rep.plan.messages {
+        assert_eq!(m.from, 8, "with topology every sender is intra-node: {m:?}");
+    }
+    // measured per-pair volumes cover exactly the planned wire bytes
+    let sent_total: u64 = rep.sent.values().sum();
+    assert_eq!(sent_total, rep.wire_elems);
+}
+
+#[test]
+fn step_leaves_no_transient_activation_state() {
+    let s = EngineStrategy::uniform("pp2", 1, 1, 2, 8, 4)
+        .with_schedule(ScheduleKind::OneFOneB);
+    let mut eng = native_engine(s, 42, 1e-3);
+    let cfg = eng.runtime.config;
+    let pool = Pool::new(4, cfg.batch, cfg.seq, cfg.vocab, 1);
+    eng.train_step(&mut |p, m| pool.get(p, m)).unwrap();
+    for (d, dev) in eng.mesh.devices.iter().enumerate() {
+        for k in dev.keys() {
+            assert!(
+                !k.starts_with("act.") && !k.starts_with("dact.") && !k.starts_with("save."),
+                "device {d} leaked transient buffer `{k}`"
+            );
+        }
+    }
 }

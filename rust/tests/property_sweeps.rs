@@ -265,3 +265,47 @@ fn prop_simulated_step_time_conserves_rank_budget() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_uniform_round_trips_through_strategy_lowering() {
+    use hetu::engine::EngineStrategy;
+    use hetu::runtime::native;
+    use hetu::spec::schedule::ScheduleKind;
+    use hetu::strategy::{lower, uniform, LowerOptions};
+    check("uniform lowering round-trip", 60, |rng| {
+        let tp = *rng.pick(&[1usize, 2, 4]);
+        let pp = *rng.pick(&[1usize, 2, 4]);
+        let dp = *rng.pick(&[1usize, 2, 3]);
+        let mb = *rng.pick(&[1usize, 2, 4]);
+        let kind = if rng.chance(0.5) { ScheduleKind::GPipe } else { ScheduleKind::OneFOneB };
+        let cfg = native::tiny_config();
+        let n = dp * tp * pp;
+        let ranks: Vec<u32> = (0..n as u32).collect();
+        let spec = uniform(
+            "u",
+            &ranks,
+            dp as u32,
+            tp as u32,
+            pp as u32,
+            cfg.layers,
+            (dp * mb) as u64,
+            1,
+            2048,
+            kind,
+            false,
+            false,
+        )
+        .map_err(|e| e.to_string())?;
+        let lopts = LowerOptions { total_microbatches: dp * mb, tp_degrees: vec![1, 2, 4] };
+        let lowered = lower(&spec, &cfg, &lopts).map_err(|e| e.to_string())?;
+        let direct = EngineStrategy::uniform("u", dp, tp, pp, cfg.layers, mb).with_schedule(kind);
+        if lowered.pipelines != direct.pipelines {
+            return Err(format!("pipelines: {:?} vs {:?}", lowered.pipelines, direct.pipelines));
+        }
+        if lowered.schedule != direct.schedule {
+            return Err("schedule dropped by lowering".into());
+        }
+        lowered.validate(&cfg, &[1, 2, 4]).map_err(|e| e.to_string())?;
+        Ok(())
+    });
+}
