@@ -148,4 +148,37 @@ fn main() {
             eng2.train_step(&mut |_p, _m| corpus2.microbatch(b_sz, s_sz)).unwrap().loss,
         );
     });
+
+    // ---- §6 temporal runtime. `plan_switch` is the pairwise planning
+    // cost the pool's cache amortizes away; the hot-switch row executes a
+    // cached plan with per-sender batched delivery (sources resolved once
+    // per (sender, tensor) — the switch.rs serialization fix this bench
+    // guards). Moments ride along in both rows.
+    let la = ShardLayout::build(&tiny, &EngineStrategy::uniform("dp2", 2, 1, 1, tiny.layers, 1))
+        .unwrap();
+    let lb = ShardLayout::build(&tiny, &EngineStrategy::uniform("tp2", 1, 2, 1, tiny.layers, 2))
+        .unwrap();
+    report("plan_switch dp2->tp2 (uncached, +moments)", it(100), || {
+        std::hint::black_box(
+            hetu::engine::plan_switch(&tiny, &la, &lb, true, &hetu::comm::UniformBandwidth, &[])
+                .unwrap()
+                .plan
+                .num_messages(),
+        );
+    });
+    let mut pool = hetu::temporal::StrategyPool::new(
+        tiny,
+        vec![
+            (EngineStrategy::uniform("dp2", 2, 1, 1, tiny.layers, 1), 4096),
+            (EngineStrategy::uniform("tp2", 1, 2, 1, tiny.layers, 2), 32768),
+        ],
+    )
+    .unwrap();
+    let mut eng3 = pool.spawn_engine(Runtime::native(tiny), 0, 42, 1e-3).unwrap();
+    let mut corpus3 = SyntheticCorpus::new(11, tiny.vocab);
+    eng3.train_step(&mut |_p, _m| corpus3.microbatch(b_sz, s_sz)).unwrap();
+    report("engine hot-switch A<->B (cached, batched)", it(20), || {
+        pool.switch_engine(&mut eng3, 1).unwrap();
+        std::hint::black_box(pool.switch_engine(&mut eng3, 0).unwrap().wire_elems);
+    });
 }

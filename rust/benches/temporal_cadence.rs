@@ -1,0 +1,54 @@
+//! Bench: the temporal runtime — fig15-style *measured* engine cells
+//! (amortized per-step time of each static strategy vs. the Hetu-A/B
+//! switching engines over a synthetic CommonCrawl stream) plus the
+//! hot-switch cadence micro: cold (plan + execute) vs. warm
+//! (plan-cache hit, per-sender batched delivery) A↔B switch cycles.
+//!
+//! `--test` (the CI smoke mode) runs a 3-step stream and two switch
+//! cycles, proving the subsystem executes end-to-end.
+
+use hetu::coordinator::SyntheticCorpus;
+use hetu::runtime::{native, Runtime};
+use hetu::temporal::{default_pool_entries, StrategyPool};
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
+    let steps: usize = if smoke {
+        3
+    } else {
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(20)
+    };
+    let t0 = std::time::Instant::now();
+    let table = hetu::figures::fig15_engine(steps).expect("fig15_engine");
+    println!("{}", table.markdown());
+
+    // switch cadence: repeated short↔long transitions through the cache
+    let tiny = native::tiny_config();
+    let mut pool = StrategyPool::new(tiny, default_pool_entries(&tiny).unwrap()).unwrap();
+    let mut eng = pool.spawn_engine(Runtime::native(tiny), 0, 42, 1e-3).unwrap();
+    let mut corpus = SyntheticCorpus::new(9, tiny.vocab);
+    let (b, s) = (tiny.batch, tiny.seq);
+    eng.train_step(&mut |_p, _m| corpus.microbatch(b, s)).unwrap(); // moments exist
+    let cycles = if smoke { 2 } else { 50 };
+    let mut cold = 0.0f64;
+    let mut warm = 0.0f64;
+    for c in 0..cycles {
+        let t = std::time::Instant::now();
+        pool.switch_engine(&mut eng, 2).unwrap();
+        pool.switch_engine(&mut eng, 0).unwrap();
+        let dt = t.elapsed().as_secs_f64();
+        if c == 0 {
+            cold = dt;
+        } else {
+            warm += dt;
+        }
+    }
+    println!(
+        "hot-switch short<->long: cold (plan+exec) {:.3} ms/cycle, warm (cached) {:.3} ms/cycle, plan cache {} hits / {} misses",
+        cold * 1e3,
+        warm / (cycles - 1) as f64 * 1e3,
+        pool.hits(),
+        pool.misses()
+    );
+    println!("\n({steps} steps/cell, generated in {:.1}s)", t0.elapsed().as_secs_f64());
+}

@@ -103,6 +103,13 @@ pub struct PipeClass {
     pub tokens_per_s: f64,
 }
 
+/// Cost of one sequence on one pipeline class: attention makes long
+/// sequences superlinearly costly, so weight by `l·(1 + l/8192)` as a
+/// simple quadratic surrogate, divided by throughput.
+fn seq_cost(l: u64, c: &PipeClass) -> f64 {
+    l as f64 * (1.0 + l as f64 / 8192.0) / c.tokens_per_s
+}
+
 /// Hetu-B dispatch: assign each sequence to the pipeline minimizing the
 /// resulting makespan (longest-processing-time greedy on the cost model),
 /// respecting per-pipeline `max_seq`. Returns per-pipeline token loads in
@@ -119,16 +126,29 @@ pub fn dispatch_hetu_b(seq_lens: &[u64], classes: &[PipeClass]) -> Vec<Vec<u64>>
             if l > c.max_seq {
                 continue;
             }
-            // attention makes long sequences superlinearly costly; weight by
-            // l·(1 + l/8192) as a simple quadratic surrogate
-            let cost = l as f64 * (1.0 + l as f64 / 8192.0) / c.tokens_per_s;
-            let t = loads[i] + cost;
+            let t = loads[i] + seq_cost(l, c);
             if best.map(|(_, bt)| t < bt).unwrap_or(true) {
                 best = Some((i, t));
             }
         }
-        // a sequence longer than every pipeline's max goes to the largest
-        let (i, t) = best.unwrap_or((0, loads[0]));
+        // a sequence longer than every pipeline's max goes to the
+        // largest-context pipeline (first on ties), *truncated* to its
+        // context (the baseline rule) — the truncated length is both
+        // charged and assigned, so the max_seq contract holds and later
+        // LPT placement and token weighting see the processed tokens
+        let (i, l, t) = match best {
+            Some((i, t)) => (i, l, t),
+            None => {
+                let i = classes
+                    .iter()
+                    .enumerate()
+                    .max_by(|(ia, a), (ib, b)| a.max_seq.cmp(&b.max_seq).then(ib.cmp(ia)))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                let trunc = l.min(classes[i].max_seq);
+                (i, trunc, loads[i] + seq_cost(trunc, &classes[i]))
+            }
+        };
         loads[i] = t;
         assign[i].push(l);
     }
@@ -229,6 +249,26 @@ mod tests {
         let assign = dispatch_hetu_b(&lens, &classes);
         assert!(assign[1].iter().all(|&l| l <= 8192));
         assert!(assign[0].contains(&30000) && assign[0].contains(&20000));
+    }
+
+    #[test]
+    fn dispatch_overflow_falls_back_to_widest_truncated_with_cost() {
+        // no pipeline can host 50K: it truncates onto the widest (index
+        // 1, the first 16K entry on ties) — the assignment records the
+        // truncated (processed) length, honoring the max_seq contract —
+        // and its cost is charged, so the 8K sequences avoid it.
+        let classes = [
+            PipeClass { max_seq: 8192, tokens_per_s: 1.0 },
+            PipeClass { max_seq: 16384, tokens_per_s: 1.0 },
+            PipeClass { max_seq: 16384, tokens_per_s: 1.0 },
+        ];
+        let lens = vec![50_000, 8000, 8000];
+        let assign = dispatch_hetu_b(&lens, &classes);
+        assert_eq!(assign[1], vec![16_384]);
+        for (seqs, c) in assign.iter().zip(classes.iter()) {
+            assert!(seqs.iter().all(|&l| l <= c.max_seq));
+        }
+        assert!(assign[1].len() == 1 && assign[0].len() + assign[2].len() == 2);
     }
 
     #[test]

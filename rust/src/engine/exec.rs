@@ -34,7 +34,7 @@
 
 use std::time::Instant;
 
-use crate::collectives::{extract_region, DeviceMem, Mesh};
+use crate::collectives::{extract_region, write_region, DeviceMem, Mesh};
 use crate::runtime::{HostTensor, Runtime};
 use crate::spec::schedule::{stage_schedule, ScheduleKind, Task, TaskKind};
 use crate::testutil::Rng;
@@ -384,10 +384,128 @@ impl Engine {
 
     /// AdamW over the layout's cached `(device, param, grad)` list;
     /// gradients are consumed.
+    ///
+    /// Under ZeRO-1 (`Engine::set_zero1`) each replica-set member updates
+    /// only its DP partition (partition-sized moments), spectators drop
+    /// their gradient, and the updated parameter slices are exchanged
+    /// afterwards — the ZeRO-1 all-gather, accounted on the mesh wire.
+    /// Because AdamW is elementwise over slice-synced gradients, the
+    /// trajectory is bit-identical to the replicated path.
     pub(crate) fn apply_updates(&mut self) -> Result<()> {
         let step = self.step + 1;
+        if !self.zero1 {
+            for (dev, param_key, grad_key) in &self.layout.update_ops {
+                self.opt.update(&mut self.mesh.devices[*dev], param_key, grad_key, step)?;
+            }
+            return Ok(());
+        }
         for (dev, param_key, grad_key) in &self.layout.update_ops {
-            self.opt.update(&mut self.mesh.devices[*dev], param_key, grad_key, step)?;
+            match self.layout.zero_part(*dev, param_key) {
+                Some(Some(region)) => self.opt.update_region(
+                    &mut self.mesh.devices[*dev],
+                    param_key,
+                    grad_key,
+                    region,
+                    step,
+                )?,
+                Some(None) => {
+                    let _ = self.mesh.devices[*dev].take(grad_key);
+                }
+                None => {
+                    self.opt.update(&mut self.mesh.devices[*dev], param_key, grad_key, step)?
+                }
+            }
+        }
+        // exchange updated parameter slices within each replica set
+        for g in &self.layout.zero_groups {
+            for (owner, region) in &g.parts {
+                let piece = extract_region(self.mesh.devices[*owner].get(&g.key)?, region)?;
+                for &m in &g.members {
+                    if m != *owner {
+                        write_region(self.mesh.devices[m].get_mut(&g.key)?, region, &piece)?;
+                        self.mesh.wire_elems += piece.len() as u64;
+                    }
+                }
+            }
+            self.mesh.ops += 1; // one grouped all-gather per replica set
+        }
+        Ok(())
+    }
+
+    /// ZeRO-1 → full moments: before a switch, reassemble each replica
+    /// set's partitioned `m.*`/`v.*` into full shard-shaped tensors on
+    /// every member, so the switch plan's param-shaped moment moves can
+    /// extract from them. Only parameters in `moved` (the plan's moment
+    /// moves) gather; `dead` devices contribute nothing — their partition
+    /// is lost and stays zero in the reassembled tensors. Wire volume is
+    /// accounted (it is the real cost the paper's App.-A fault-tolerance
+    /// trade-off pays).
+    pub(crate) fn gather_zero1_moments(
+        &mut self,
+        moved: &std::collections::BTreeSet<&str>,
+        dead: &[usize],
+    ) -> Result<()> {
+        for g in &self.layout.zero_groups {
+            if !moved.contains(g.key.as_str()) {
+                continue;
+            }
+            for pre in ["m.", "v."] {
+                let key = format!("{pre}{}", g.key);
+                let mut pieces: Vec<(usize, &crate::hspmd::slices::Region, HostTensor)> = vec![];
+                for (owner, region) in &g.parts {
+                    if !dead.contains(owner) && self.mesh.devices[*owner].has(&key) {
+                        let t = self.mesh.devices[*owner].get(&key)?.clone();
+                        pieces.push((*owner, region, t));
+                    }
+                }
+                if pieces.is_empty() {
+                    continue;
+                }
+                for &m in &g.members {
+                    if dead.contains(&m) {
+                        continue; // dead members are evicted, not restocked
+                    }
+                    let shape = self.mesh.devices[m].get(&g.key)?.shape.clone();
+                    let mut full = HostTensor::zeros(shape);
+                    for (owner, region, piece) in &pieces {
+                        write_region(&mut full, region, piece)?;
+                        if *owner != m {
+                            self.mesh.wire_elems += piece.len() as u64;
+                        }
+                    }
+                    self.mesh.devices[m].put(&key, full);
+                }
+                self.mesh.ops += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Full → ZeRO-1 moments: after a switch, trim each member's full
+    /// moment shards back to its DP partition under the (new) layout;
+    /// spectators drop their copy. Only parameters in `moved` re-shard —
+    /// unmoved ones kept their (still valid) partitions.
+    pub(crate) fn reshard_zero1_moments(
+        &mut self,
+        moved: &std::collections::BTreeSet<&str>,
+    ) -> Result<()> {
+        for g in &self.layout.zero_groups {
+            if !moved.contains(g.key.as_str()) {
+                continue;
+            }
+            for pre in ["m.", "v."] {
+                let key = format!("{pre}{}", g.key);
+                for &m in &g.members {
+                    if !self.mesh.devices[m].has(&key) {
+                        continue;
+                    }
+                    let full = self.mesh.devices[m].take(&key)?;
+                    if let Some(Some(region)) = self.layout.zero_part(m, &g.key) {
+                        let part = extract_region(&full, region)?;
+                        self.mesh.devices[m].put(&key, part);
+                    }
+                }
+            }
         }
         Ok(())
     }

@@ -134,6 +134,23 @@ pub enum SyncOp {
     },
 }
 
+/// One ZeRO-1 replica set: devices holding an *identical* region of one
+/// parameter, each owning a contiguous dim-0 partition of the shard's
+/// optimizer state. Ragged (hetero-TP) sharings stay replicated — only
+/// exact duplicates shard, which is what makes the partitioned update
+/// bit-identical to the replicated one (elementwise AdamW over
+/// slice-synced gradients).
+#[derive(Clone, Debug)]
+pub struct ZeroGroup {
+    /// Parameter key (`L{l}.{param}`, `emb`, `gf`, `wout`).
+    pub key: String,
+    /// Replica devices (sorted, deduplicated).
+    pub members: Vec<usize>,
+    /// `(device, sub-box in the shard's local coordinates)` per partition
+    /// owner. Members with no rows (more replicas than rows) are absent.
+    pub parts: Vec<(usize, Region)>,
+}
+
 /// The typed `(layer, param, shard)` ownership map plus every derived
 /// group the engine needs per step — computed once per strategy.
 #[derive(Clone, Debug)]
@@ -151,7 +168,34 @@ pub struct ShardLayout {
     pub grad_keys: Vec<(usize, String)>,
     /// Every `(device, param key, grad key)` optimizer application.
     pub update_ops: Vec<(usize, String, String)>,
+    /// ZeRO-1 partition plan over replica sets (used when the engine's
+    /// `zero1` flag is on; computed unconditionally — it is cheap and the
+    /// memory accounting in [`crate::strategy::memory`] reads it).
+    pub zero_groups: Vec<ZeroGroup>,
     owned: BTreeMap<usize, BTreeSet<String>>,
+    /// Per-device ZeRO-1 roles: `key → None` (grouped, no rows) or
+    /// `key → Some(region)` (partition owner). Nested so the per-step
+    /// lookup borrows `&str` without allocating.
+    zero_parts: BTreeMap<usize, BTreeMap<String, Option<Region>>>,
+}
+
+/// Contiguous dim-0 partition of `region` (a shard held identically by
+/// `devs`) over its replicas, in the shard's local coordinates.
+fn zero_partition(key: String, devs: &[usize], region: &Region) -> ZeroGroup {
+    let rows = region[0].len();
+    let g = devs.len() as u64;
+    let mut parts = vec![];
+    for (k, &d) in devs.iter().enumerate() {
+        let lo = rows * k as u64 / g;
+        let hi = rows * (k as u64 + 1) / g;
+        if hi > lo {
+            let mut r: Region =
+                region.iter().map(|iv| Interval { lo: 0, hi: iv.len() }).collect();
+            r[0] = Interval { lo, hi };
+            parts.push((d, r));
+        }
+    }
+    ZeroGroup { key, members: devs.to_vec(), parts }
 }
 
 impl ShardLayout {
@@ -255,6 +299,54 @@ impl ShardLayout {
             owned.entry(lr).or_default().insert("wout".into());
         }
 
+        // ZeRO-1 partition plan: replica sets (devices holding identical
+        // regions) split the shard's dim 0 contiguously by member index.
+        let mut zero_groups: Vec<ZeroGroup> = vec![];
+        for ((l, pidx), hs) in &holdings {
+            if hs.len() <= 1 {
+                continue;
+            }
+            let mut all_devs: Vec<usize> = hs.iter().map(|h| h.dev).collect();
+            all_devs.sort_unstable();
+            if all_devs.windows(2).any(|w| w[0] == w[1]) {
+                continue; // a device holding the param twice stays replicated
+            }
+            let name = BLOCK_PARAMS[*pidx];
+            let mut by_region: BTreeMap<Region, Vec<usize>> = BTreeMap::new();
+            for h in hs {
+                by_region.entry(h.region.clone()).or_default().push(h.dev);
+            }
+            for (region, mut devs) in by_region {
+                devs.sort_unstable();
+                if devs.len() > 1 {
+                    zero_groups.push(zero_partition(pkey(*l, name), &devs, &region));
+                }
+            }
+        }
+        for (key, roots, shape) in [
+            ("emb", &first_roots, special_shape(cfg, "emb")),
+            ("gf", &last_roots, special_shape(cfg, "gf")),
+            ("wout", &last_roots, special_shape(cfg, "wout")),
+        ] {
+            let mut devs = roots.clone();
+            devs.sort_unstable();
+            devs.dedup();
+            if devs.len() > 1 {
+                let region: Region =
+                    shape.iter().map(|&n| Interval { lo: 0, hi: n }).collect();
+                zero_groups.push(zero_partition(key.into(), &devs, &region));
+            }
+        }
+        let mut zero_parts: BTreeMap<usize, BTreeMap<String, Option<Region>>> = BTreeMap::new();
+        for g in &zero_groups {
+            for &m in &g.members {
+                zero_parts.entry(m).or_default().insert(g.key.clone(), None);
+            }
+            for (d, r) in &g.parts {
+                zero_parts.entry(*d).or_default().insert(g.key.clone(), Some(r.clone()));
+            }
+        }
+
         Ok(ShardLayout {
             holdings,
             sync_ops,
@@ -262,8 +354,18 @@ impl ShardLayout {
             last_roots,
             grad_keys,
             update_ops,
+            zero_groups,
             owned,
+            zero_parts,
         })
+    }
+
+    /// ZeRO-1 role of `(dev, param key)`: `None` when the pair is not in
+    /// any replica group (the device updates its full shard); `Some(None)`
+    /// when grouped but owning no partition rows; `Some(Some(region))` for
+    /// partition owners (local shard coordinates).
+    pub fn zero_part(&self, dev: usize, key: &str) -> Option<Option<&Region>> {
+        self.zero_parts.get(&dev)?.get(key).map(|o| o.as_ref())
     }
 
     /// Holdings of one `(layer, param index)` (empty if uncovered).
@@ -424,6 +526,44 @@ mod tests {
         // pipeline 0 splits columns, pipeline 1 holds the full tensor
         assert_eq!(regs[0].region[1], Interval { lo: 0, hi: shape[1] / 2 });
         assert_eq!(regs[2].region[1], Interval { lo: 0, hi: shape[1] });
+    }
+
+    #[test]
+    fn zero_groups_partition_replica_sets() {
+        let cfg = native::tiny_config();
+        // dp2tp2: every block shard is held identically by 2 devices (one
+        // per replica); gains by 4. Roots replicate 2-ways.
+        let s = EngineStrategy::uniform("dp2tp2", 2, 2, 1, 8, 1);
+        let layout = ShardLayout::build(&cfg, &s).unwrap();
+        assert!(!layout.zero_groups.is_empty());
+        for g in &layout.zero_groups {
+            assert!(g.members.len() >= 2, "{}", g.key);
+            // partitions tile dim 0 of the shard exactly
+            let total: u64 = g.parts.iter().map(|(_, r)| r[0].len()).sum();
+            let mut next = 0u64;
+            for (_, r) in &g.parts {
+                assert_eq!(r[0].lo, next, "{}: gap in partition", g.key);
+                next = r[0].hi;
+            }
+            assert_eq!(total, next);
+            // every owner is a member
+            for (d, _) in &g.parts {
+                assert!(g.members.contains(d));
+            }
+        }
+        // lookups agree with the groups
+        let wq = pkey(0, "wq");
+        let part = layout.zero_part(0, &wq);
+        assert!(matches!(part, Some(Some(_))), "device 0 owns a wq partition");
+        assert!(layout.zero_part(0, "no-such-key").is_none());
+        // hetero-TP (ragged) sharings stay replicated
+        let h = ShardLayout::build(&cfg, &hetero_strategy()).unwrap();
+        assert!(
+            h.zero_groups.iter().all(|g| !g.key.ends_with(".wq")),
+            "ragged wq sharing must not zero-shard"
+        );
+        // ...but its identically-held gains do form a group
+        assert!(h.zero_groups.iter().any(|g| g.key.ends_with(".g1")));
     }
 
     #[test]

@@ -29,9 +29,9 @@ use crate::runtime::{ManifestConfig, Runtime};
 use crate::spec::schedule::ScheduleKind;
 use crate::{Error, Result};
 
-pub use layout::{ShardLayout, SyncOp};
+pub use layout::{ShardLayout, SyncOp, ZeroGroup};
 pub use optim::AdamW;
-pub use switch::EngineSwitchReport;
+pub use switch::{build_moves, plan_switch, EngineSwitchReport, MoveTarget, SwitchPlan};
 
 /// The 8 per-block parameter names, artifact input order.
 pub const BLOCK_PARAMS: [&str; 8] = ["g1", "wq", "wk", "wv", "wo", "g2", "w1", "w2"];
@@ -104,6 +104,18 @@ impl EngineStrategy {
     /// Total devices used.
     pub fn num_devices(&self) -> usize {
         self.pipelines.iter().flat_map(|p| p.stages.iter()).map(|s| s.devices.len()).sum()
+    }
+
+    /// One past the highest mesh device id the strategy schedules (0 when
+    /// it schedules none) — the mesh-size / topology-coverage bound used
+    /// by engine construction, switching, and the pool.
+    pub fn max_device_bound(&self) -> usize {
+        self.pipelines
+            .iter()
+            .flat_map(|p| p.stages.iter().flat_map(|s| s.devices.iter().copied()))
+            .max()
+            .map(|m| m + 1)
+            .unwrap_or(0)
     }
 
     /// Validate against the model config + supported TP degrees. Per-layer
@@ -196,6 +208,11 @@ pub struct Engine {
     /// bandwidth heuristic (2) at engine scale; `None` falls back to
     /// [`crate::comm::UniformBandwidth`].
     pub topology: Option<Cluster>,
+    /// ZeRO-1: shard optimizer moments over the DP axis (each replica set
+    /// with identical parameter regions keeps only a contiguous dim-0
+    /// partition of `m.*`/`v.*`, exchanging updated parameter slices after
+    /// the optimizer step). See [`layout::ZeroGroup`].
+    pub zero1: bool,
     pub(crate) step: u64,
 }
 
@@ -223,12 +240,7 @@ impl Engine {
             .collect();
         strategy.validate(&cfg, &tp_degrees)?;
         let layout = ShardLayout::build(&cfg, &strategy)?;
-        let max_dev = strategy
-            .pipelines
-            .iter()
-            .flat_map(|p| p.stages.iter().flat_map(|s| s.devices.iter().copied()))
-            .max();
-        let mut mesh = Mesh::new(strategy.num_devices().max(max_dev.map(|m| m + 1).unwrap_or(0)));
+        let mut mesh = Mesh::new(strategy.num_devices().max(strategy.max_device_bound()));
         exec::init_params(&runtime, &layout, &mut mesh, seed)?;
         Ok(Engine {
             runtime,
@@ -238,8 +250,55 @@ impl Engine {
             tp_degrees,
             opt: AdamW::new(lr),
             topology: None,
+            zero1: false,
             step: 0,
         })
+    }
+
+    /// Enable/disable ZeRO-1 optimizer-state sharding. Must be called
+    /// before the first training step: existing moments are shaped by the
+    /// previous setting and would corrupt the partition bookkeeping.
+    pub fn set_zero1(&mut self, on: bool) -> Result<()> {
+        if self.step > 0 {
+            return Err(Error::Engine(
+                "set_zero1: optimizer moments already exist; toggle before step 1".into(),
+            ));
+        }
+        self.zero1 = on;
+        Ok(())
+    }
+
+    /// True once optimizer moments exist (after the first step). Switch
+    /// planning uses this to decide whether `m.*`/`v.*` ride along. Scans
+    /// the update list rather than sampling one op: under ZeRO-1 a
+    /// spectator device (empty partition) legitimately stores no moments.
+    pub fn has_moments(&self) -> bool {
+        self.layout
+            .update_ops
+            .iter()
+            .any(|(dev, pk, _)| self.mesh.devices[*dev].has(&format!("m.{pk}")))
+    }
+
+    /// Set the per-pipeline micro-batch counts for subsequent steps (the
+    /// temporal dispatcher's token-weighted uneven apportioning). The
+    /// shard layout does not depend on micro-batch counts, so no replan is
+    /// needed; the token-weighted gradient sync keeps uneven counts exact
+    /// data parallelism.
+    pub fn set_microbatches(&mut self, counts: &[usize]) -> Result<()> {
+        if counts.len() != self.strategy.pipelines.len() {
+            return Err(Error::Engine(format!(
+                "set_microbatches: {} counts for {} pipelines",
+                counts.len(),
+                self.strategy.pipelines.len()
+            )));
+        }
+        if counts.iter().any(|&c| c == 0) {
+            return Err(Error::Engine("set_microbatches: zero micro-batches".into()));
+        }
+        for (p, &c) in self.strategy.pipelines.iter_mut().zip(counts.iter()) {
+            p.num_microbatches = c;
+        }
+        Ok(())
     }
 
     /// Attach the physical topology behind the mesh device ids (bandwidth-
@@ -248,6 +307,22 @@ impl Engine {
     /// with a typed error.
     pub fn set_topology(&mut self, topology: Cluster) {
         self.topology = Some(topology);
+    }
+
+    /// Typed error unless the attached topology (when present) covers
+    /// `need` devices — the shared guard of every switch-planning path
+    /// (`switch_to_avoiding`, `StrategyPool::switch_engine`), so the
+    /// bandwidth callbacks can never index past the cluster.
+    pub fn require_topology_coverage(&self, need: usize) -> Result<()> {
+        if let Some(c) = &self.topology {
+            if c.len() < need {
+                return Err(Error::Engine(format!(
+                    "topology covers {} devices but the switch needs {need}",
+                    c.len()
+                )));
+            }
+        }
+        Ok(())
     }
 
     /// Run one training step over per-pipeline micro-batch providers.
@@ -352,6 +427,21 @@ mod tests {
             schedule: ScheduleKind::GPipe,
         };
         s.validate(&cfg, &[1, 2, 4]).unwrap();
+    }
+
+    #[test]
+    fn set_microbatches_revalidates_counts() {
+        use crate::runtime::Runtime;
+        let s = EngineStrategy::uniform("dp2", 2, 1, 1, 8, 1);
+        let mut eng =
+            Engine::with_runtime(Runtime::native(crate::runtime::native::tiny_config()), s, 1, 1e-3)
+                .unwrap();
+        eng.set_microbatches(&[3, 1]).unwrap();
+        assert_eq!(eng.strategy.pipelines[0].num_microbatches, 3);
+        assert_eq!(eng.strategy.pipelines[1].num_microbatches, 1);
+        assert!(eng.set_microbatches(&[1]).is_err());
+        assert!(eng.set_microbatches(&[0, 1]).is_err());
+        assert!(!eng.has_moments());
     }
 
     #[test]

@@ -4,7 +4,8 @@
 //! keeping it on the L3 side avoids one AOT artifact per distinct parameter
 //! shape while preserving the "Python never on the training path" property.
 
-use crate::collectives::DeviceMem;
+use crate::collectives::{extract_region, write_region, DeviceMem};
+use crate::hspmd::slices::Region;
 use crate::runtime::HostTensor;
 use crate::Result;
 
@@ -66,6 +67,57 @@ impl AdamW {
         dev.put(&vkey, v);
         Ok(())
     }
+
+    /// ZeRO-1 update: apply AdamW only to `region` (the device's DP
+    /// partition, in the shard's local coordinates). Moments are stored
+    /// partition-sized under the usual `m.*`/`v.*` keys; the gradient is
+    /// consumed whole (the rest of it belongs to other partition owners).
+    /// Because AdamW is elementwise and the synchronized gradient is equal
+    /// across replicas, the partitioned update is bit-identical to the
+    /// replicated one.
+    pub fn update_region(
+        &self,
+        dev: &mut DeviceMem,
+        param_key: &str,
+        grad_key: &str,
+        region: &Region,
+        step: u64,
+    ) -> Result<()> {
+        if !dev.has(grad_key) {
+            return Ok(());
+        }
+        let grad = dev.take(grad_key)?;
+        let g_part = extract_region(&grad, region)?;
+        let g = g_part.as_f32()?;
+        let mkey = format!("m.{param_key}");
+        let vkey = format!("v.{param_key}");
+        if !dev.has(&mkey) {
+            dev.put(&mkey, HostTensor::zeros(g_part.shape.clone()));
+            dev.put(&vkey, HostTensor::zeros(g_part.shape.clone()));
+        }
+        let bc1 = 1.0 - self.beta1.powi(step as i32);
+        let bc2 = 1.0 - self.beta2.powi(step as i32);
+
+        let mut m = dev.take(&mkey)?;
+        let mut v = dev.take(&vkey)?;
+        let mut p_part = extract_region(dev.get(param_key)?, region)?;
+        {
+            let mm = m.as_f32_mut()?;
+            let vv = v.as_f32_mut()?;
+            let p = p_part.as_f32_mut()?;
+            for i in 0..g.len() {
+                mm[i] = self.beta1 * mm[i] + (1.0 - self.beta1) * g[i];
+                vv[i] = self.beta2 * vv[i] + (1.0 - self.beta2) * g[i] * g[i];
+                let mhat = mm[i] / bc1;
+                let vhat = vv[i] / bc2;
+                p[i] -= self.lr * (mhat / (vhat.sqrt() + self.eps) + self.weight_decay * p[i]);
+            }
+        }
+        write_region(dev.get_mut(param_key)?, region, &p_part)?;
+        dev.put(&mkey, m);
+        dev.put(&vkey, v);
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -103,6 +155,37 @@ mod tests {
         AdamW::new(0.01).update(&mut dev, "x", "g", 1).unwrap();
         assert!(!dev.has("g"));
         assert!(dev.has("m.x") && dev.has("v.x"));
+    }
+
+    #[test]
+    fn update_region_matches_full_update_on_the_partition() {
+        use crate::hspmd::slices::Interval;
+        // full update on one device, partitioned updates on another: the
+        // partition rows must match the full update exactly.
+        let shape = vec![4usize, 2];
+        let p0: Vec<f32> = (0..8).map(|i| 0.5 + 0.1 * i as f32).collect();
+        let g0: Vec<f32> = (0..8).map(|i| 0.05 * (i as f32 - 3.0)).collect();
+        let opt = AdamW::new(0.01);
+
+        let mut full = DeviceMem::default();
+        full.put("x", HostTensor::f32(shape.clone(), p0.clone()).unwrap());
+        let mut part = DeviceMem::default();
+        part.put("x", HostTensor::f32(shape.clone(), p0).unwrap());
+        let region: Region = vec![Interval { lo: 1, hi: 3 }, Interval { lo: 0, hi: 2 }];
+        for step in 1..=3 {
+            full.put("g", HostTensor::f32(shape.clone(), g0.clone()).unwrap());
+            part.put("g", HostTensor::f32(shape.clone(), g0.clone()).unwrap());
+            opt.update(&mut full, "x", "g", step).unwrap();
+            opt.update_region(&mut part, "x", "g", &region, step).unwrap();
+        }
+        let f = full.get("x").unwrap().as_f32().unwrap();
+        let p = part.get("x").unwrap().as_f32().unwrap();
+        // rows 1..3 updated identically; rows 0 and 3 untouched on `part`
+        assert_eq!(&f[2..6], &p[2..6]);
+        assert_eq!(p[0], 0.5);
+        // moments are partition-sized
+        assert_eq!(part.get("m.x").unwrap().shape, vec![2, 2]);
+        assert!(!part.has("g"));
     }
 
     #[test]

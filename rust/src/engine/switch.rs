@@ -4,25 +4,40 @@
 //! The seed engine re-implemented switching with ad-hoc sender picking and
 //! its own reslicing arithmetic; plan-level volumes (Table 2) and
 //! engine-measured wire traffic came from two unrelated code paths. Here
-//! `switch_to` instead:
+//! switching is split into a *planning* half and an *execution* half so
+//! the temporal runtime ([`crate::temporal`]) can cache plans pairwise:
 //!
-//! 1. exports the old and new [`ShardLayout`]s as HSPMD annotations and
-//!    builds one [`TensorMove`] per changed parameter (and optimizer
-//!    moment) — the same inputs `switch::plan_strategy_switch` feeds the
-//!    planner at paper scale;
-//! 2. asks [`plan_transition_avoiding`] for a fused [`FusedBsrPlan`]
-//!    (heuristics 1–3, shared load tracker, per-device-pair message
-//!    fusion, dead senders excluded);
-//! 3. *executes* that plan over the mesh: local copies materialize
-//!    receiver-side staging buffers for free, each fused message moves its
-//!    slice payloads and accounts wire volume once — so the engine's
+//! 1. [`build_moves`] exports the old and new [`ShardLayout`]s as HSPMD
+//!    annotations and builds one [`TensorMove`] per changed parameter
+//!    (and optimizer moment) — the same inputs
+//!    `switch::plan_strategy_switch` feeds the planner at paper scale;
+//! 2. [`plan_switch`] asks [`plan_transition_avoiding`] for a fused
+//!    [`FusedBsrPlan`] (heuristics 1–3, shared load tracker,
+//!    per-device-pair message fusion, dead senders excluded) and bundles
+//!    it with the moves into a reusable [`SwitchPlan`];
+//! 3. `Engine::switch_to_avoiding` (fresh plan) and
+//!    [`Engine::switch_to_planned`] (cached plan) both *execute* that plan
+//!    over the mesh: local copies materialize receiver-side staging
+//!    buffers for free, fused messages are processed **batched per
+//!    sender** (source regions resolved once per `(sender, tensor)`, the
+//!    per-sender wall time measured for the §6.2 switch/compute overlap
+//!    model — senders run concurrently in a deployment, so the
+//!    transition's delivery time is the slowest sender's batch, not the
+//!    sum) and each message accounts wire volume once — so the engine's
 //!    measured `wire_elems` equals `plan.wire_bytes() / 4` by
 //!    construction (asserted in `rust/tests/engine_integration.rs`);
-//! 4. commits the staged shards and evicts every parameter, moment, and
-//!    gradient shard a device no longer owns under the new layout
-//!    (devices dropped by the strategy are emptied entirely).
+//! 4. the staged shards are committed and every parameter, moment, and
+//!    gradient shard a device no longer owns under the new layout is
+//!    evicted (devices dropped by the strategy are emptied entirely).
+//!
+//! ZeRO-1 engines ([`Engine::set_zero1`]) hold only a DP partition of each
+//! moment tensor; the execution half gathers partitions back to full
+//! shards before staging (accounted separately as `moment_gather_elems`)
+//! and re-shards them under the new layout after commit, so the cached
+//! plans stay moment-layout-agnostic.
 
 use std::collections::{BTreeMap, HashMap};
+use std::time::Instant;
 
 use crate::collectives::{extract_region, localize, write_region};
 use crate::comm::fused::plan_transition_avoiding;
@@ -48,30 +63,64 @@ pub struct EngineSwitchReport {
     /// engine-side Table-2 rows (local copies move zero wire and are not
     /// listed).
     pub sent: BTreeMap<(usize, usize), u64>,
+    /// Measured wall seconds each sender spent delivering its fused
+    /// message batch (senders run concurrently in a deployment).
+    pub per_sender_s: BTreeMap<usize, f64>,
+    /// The transition's delivery time under concurrent senders: the
+    /// slowest sender's batch. This is the quantity the §6.2 overlap
+    /// model hides behind the first post-switch step
+    /// ([`crate::temporal::overlap`]).
+    pub delivery_s: f64,
+    /// Elements moved by the ZeRO-1 moment gather that precedes plan
+    /// execution (zero when the engine does not shard optimizer states).
+    pub moment_gather_elems: u64,
 }
 
 /// What a planned tensor move refers to in the engine's stores.
-enum Target {
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MoveTarget {
     /// A block parameter `(layer, param index)`.
     Block(u32, usize),
     /// A root-held tensor (`emb`/`gf`/`wout`).
     Special(&'static str),
 }
 
+/// A fully-planned strategy transition: the tensor moves, what each refers
+/// to in the engine's stores, and the fused-BSR plan over them. Built once
+/// per `(from layout, to layout, moments?)` triple and reusable across
+/// repeated executions — the temporal runtime's pairwise plan cache
+/// ([`crate::temporal::StrategyPool`]) stores these.
+#[derive(Clone, Debug)]
+pub struct SwitchPlan {
+    /// Tensor moves in deterministic `(layer, param)` order, specials
+    /// last.
+    pub moves: Vec<TensorMove>,
+    /// Store target of each move (parallel to `moves`).
+    pub targets: Vec<MoveTarget>,
+    /// The fused-BSR plan over `moves`.
+    pub plan: FusedBsrPlan,
+    /// Whether optimizer moments (`m.*`/`v.*`) ride along. Must match the
+    /// executing engine's state; [`Engine::switch_to_planned`] rejects a
+    /// mismatch.
+    pub with_moments: bool,
+}
+
 /// The region `dev` holds of a move target under `layout` (global coords).
 fn region_under(
     layout: &ShardLayout,
     cfg: &ManifestConfig,
-    target: &Target,
+    target: &MoveTarget,
     dev: usize,
 ) -> Result<Region> {
     match target {
-        Target::Block(l, pidx) => layout.region_of(*l, *pidx, dev).cloned().ok_or_else(|| {
-            Error::Engine(format!(
-                "switch: device {dev} holds no shard of layer {l} param {pidx}"
-            ))
-        }),
-        Target::Special(name) => Ok(special_shape(cfg, name)
+        MoveTarget::Block(l, pidx) => {
+            layout.region_of(*l, *pidx, dev).cloned().ok_or_else(|| {
+                Error::Engine(format!(
+                    "switch: device {dev} holds no shard of layer {l} param {pidx}"
+                ))
+            })
+        }
+        MoveTarget::Special(name) => Ok(special_shape(cfg, name)
             .iter()
             .map(|&n| Interval { lo: 0, hi: n })
             .collect()),
@@ -94,6 +143,81 @@ fn param_base(key: &str) -> Option<&str> {
     } else {
         None
     }
+}
+
+/// Build the [`TensorMove`] list for an `old → new` layout transition: one
+/// move per changed block parameter and root tensor, with `m.*`/`v.*`
+/// companions when `with_moments`.
+pub fn build_moves(
+    cfg: &ManifestConfig,
+    old: &ShardLayout,
+    new: &ShardLayout,
+    with_moments: bool,
+) -> Result<(Vec<TensorMove>, Vec<MoveTarget>)> {
+    let prefixes: &[&str] = if with_moments { &["", "m.", "v."] } else { &[""] };
+    let mut moves: Vec<TensorMove> = vec![];
+    let mut targets: Vec<MoveTarget> = vec![];
+    for l in 0..cfg.layers {
+        for (pidx, name) in BLOCK_PARAMS.iter().enumerate() {
+            let src = old.annotation(l, pidx)?;
+            let dst = new.annotation(l, pidx)?;
+            if src == dst {
+                continue;
+            }
+            let shape = full_shape(cfg, name);
+            for pre in prefixes {
+                moves.push(TensorMove {
+                    name: format!("{pre}{}", pkey(l, name)),
+                    src: src.clone(),
+                    dst: dst.clone(),
+                    shape: shape.clone(),
+                    elem_bytes: 4,
+                });
+                targets.push(MoveTarget::Block(l, pidx));
+            }
+        }
+    }
+    let specials: [(&'static str, &Vec<usize>, &Vec<usize>); 3] = [
+        ("emb", &old.first_roots, &new.first_roots),
+        ("gf", &old.last_roots, &new.last_roots),
+        ("wout", &old.last_roots, &new.last_roots),
+    ];
+    for (name, old_roots, new_roots) in specials {
+        let src = ShardLayout::root_annotation(old_roots)?;
+        let dst = ShardLayout::root_annotation(new_roots)?;
+        if src == dst {
+            continue;
+        }
+        let shape = special_shape(cfg, name);
+        for pre in prefixes {
+            moves.push(TensorMove {
+                name: format!("{pre}{name}"),
+                src: src.clone(),
+                dst: dst.clone(),
+                shape: shape.clone(),
+                elem_bytes: 4,
+            });
+            targets.push(MoveTarget::Special(name));
+        }
+    }
+    Ok((moves, targets))
+}
+
+/// Plan an `old → new` layout transition end-to-end: moves plus the fused
+/// BSR plan over them. `dead` devices are excluded as senders (cached
+/// pool plans pass `&[]`; failover switches re-plan fresh).
+pub fn plan_switch(
+    cfg: &ManifestConfig,
+    old: &ShardLayout,
+    new: &ShardLayout,
+    with_moments: bool,
+    bw: &dyn Bandwidth,
+    dead: &[usize],
+) -> Result<SwitchPlan> {
+    let (moves, targets) = build_moves(cfg, old, new, with_moments)?;
+    let dead_ranks: Vec<Rank> = dead.iter().map(|&d| d as Rank).collect();
+    let plan = plan_transition_avoiding(&moves, bw, BsrOptions::default(), true, &dead_ranks)?;
+    Ok(SwitchPlan { moves, targets, plan, with_moments })
 }
 
 impl Engine {
@@ -129,120 +253,134 @@ impl Engine {
         }
         let new_layout = ShardLayout::build(&cfg, &new)?;
 
-        // grow the mesh if the new strategy brings devices online
-        let need = new
-            .pipelines
-            .iter()
-            .flat_map(|p| p.stages.iter().flat_map(|s| s.devices.iter().copied()))
-            .max()
-            .map(|m| m + 1)
-            .unwrap_or(0);
-        while self.mesh.devices.len() < need {
-            self.mesh.devices.push(Default::default());
-        }
-
-        // ---- 1. tensor moves for every changed parameter (+ moments)
-        let have_moments = self
-            .layout
-            .update_ops
-            .first()
-            .map(|(dev, pk, _)| self.mesh.devices[*dev].has(&format!("m.{pk}")))
-            .unwrap_or(false);
-        let prefixes: &[&str] = if have_moments { &["", "m.", "v."] } else { &[""] };
-
-        let mut moves: Vec<TensorMove> = vec![];
-        let mut targets: Vec<Target> = vec![];
-        for l in 0..cfg.layers {
-            for (pidx, name) in BLOCK_PARAMS.iter().enumerate() {
-                let src = self.layout.annotation(l, pidx)?;
-                let dst = new_layout.annotation(l, pidx)?;
-                if src == dst {
-                    continue;
-                }
-                let shape = full_shape(&cfg, name);
-                for pre in prefixes {
-                    moves.push(TensorMove {
-                        name: format!("{pre}{}", pkey(l, name)),
-                        src: src.clone(),
-                        dst: dst.clone(),
-                        shape: shape.clone(),
-                        elem_bytes: 4,
-                    });
-                    targets.push(Target::Block(l, pidx));
-                }
-            }
-        }
-        let specials: [(&'static str, &Vec<usize>, &Vec<usize>); 3] = [
-            ("emb", &self.layout.first_roots, &new_layout.first_roots),
-            ("gf", &self.layout.last_roots, &new_layout.last_roots),
-            ("wout", &self.layout.last_roots, &new_layout.last_roots),
-        ];
-        for (name, old_roots, new_roots) in specials {
-            let src = ShardLayout::root_annotation(old_roots)?;
-            let dst = ShardLayout::root_annotation(new_roots)?;
-            if src == dst {
-                continue;
-            }
-            let shape = special_shape(&cfg, name);
-            for pre in prefixes {
-                moves.push(TensorMove {
-                    name: format!("{pre}{name}"),
-                    src: src.clone(),
-                    dst: dst.clone(),
-                    shape: shape.clone(),
-                    elem_bytes: 4,
-                });
-                targets.push(Target::Special(name));
-            }
-        }
-
-        // ---- 2. one fused plan for the whole transition. When the engine
-        // knows the physical topology behind its device ids, sender
-        // selection runs the bandwidth heuristic (2) — intra-node replicas
-        // are preferred as sources — instead of the uniform stand-in.
-        let dead_ranks: Vec<Rank> = dead.iter().map(|&d| d as Rank).collect();
-        if let Some(c) = &self.topology {
-            if c.len() < self.mesh.devices.len() {
-                return Err(Error::Engine(format!(
-                    "topology covers {} devices but the mesh has {}",
-                    c.len(),
-                    self.mesh.devices.len()
-                )));
-            }
-        }
+        // When the engine knows the physical topology behind its device
+        // ids, sender selection runs the bandwidth heuristic (2) —
+        // intra-node replicas are preferred as sources — instead of the
+        // uniform stand-in. It must cover the post-switch mesh.
+        self.require_topology_coverage(new.max_device_bound().max(self.mesh.devices.len()))?;
         let bw: &dyn Bandwidth = match &self.topology {
             Some(c) => c,
             None => &UniformBandwidth,
         };
-        let plan = plan_transition_avoiding(&moves, bw, BsrOptions::default(), true, &dead_ranks)?;
+        let sp = plan_switch(&cfg, &self.layout, &new_layout, self.has_moments(), bw, dead)?;
+        self.execute_switch(new, new_layout, &sp, dead)
+    }
 
-        // ---- 3. execute: stage destination shards, then commit.
-        // Staging (rather than in-place writes) keeps every source read
-        // consistent with the pre-switch state.
+    /// Execute a *pre-built* [`SwitchPlan`] (the temporal runtime's hot
+    /// path: the pairwise plan cache hands back the same plan on repeated
+    /// A↔B transitions, so no BSR re-planning happens). The caller
+    /// guarantees `sp` was planned from the engine's current layout to
+    /// `new_layout`; `with_moments` is re-checked against the engine's
+    /// actual state.
+    pub fn switch_to_planned(
+        &mut self,
+        new: EngineStrategy,
+        new_layout: ShardLayout,
+        sp: &SwitchPlan,
+    ) -> Result<EngineSwitchReport> {
+        let cfg = self.runtime.config;
+        new.validate(&cfg, &self.tp_degrees)?;
+        if sp.with_moments != self.has_moments() {
+            return Err(Error::Engine(format!(
+                "switch_to_planned: plan {} moments but the engine {} them",
+                if sp.with_moments { "includes" } else { "omits" },
+                if self.has_moments() { "has" } else { "lacks" }
+            )));
+        }
+        self.execute_switch(new, new_layout, sp, &[])
+    }
+
+    /// The shared execution half: moment gather (ZeRO-1), staging via
+    /// per-sender message batches, commit, eviction, moment re-shard.
+    /// `dead` devices contribute nothing to the moment gather — a failed
+    /// rank's ZeRO-1 partition is genuinely lost (the App.-A trade-off),
+    /// so the reassembled moments keep zeros where its slice was.
+    fn execute_switch(
+        &mut self,
+        new: EngineStrategy,
+        new_layout: ShardLayout,
+        sp: &SwitchPlan,
+        dead: &[usize],
+    ) -> Result<EngineSwitchReport> {
+        let cfg = self.runtime.config;
+
+        // grow the mesh if the new strategy brings devices online
+        while self.mesh.devices.len() < new.max_device_bound() {
+            self.mesh.devices.push(Default::default());
+        }
+
+        // ---- 0. ZeRO-1: materialize full moment shards so the plan's
+        // param-shaped moment moves can extract from them — but only for
+        // parameters the plan actually moves (an unchanged annotation
+        // keeps its partitions valid, so gathering it would waste wire).
+        // Accounted separately from the plan's wire volume.
+        let moved_moments: std::collections::BTreeSet<&str> = if self.zero1 && sp.with_moments {
+            sp.moves.iter().filter_map(|m| m.name.strip_prefix("m.")).collect()
+        } else {
+            Default::default()
+        };
+        let gather0 = self.mesh.wire_elems;
+        if !moved_moments.is_empty() {
+            self.gather_zero1_moments(&moved_moments, dead)?;
+        }
+        let moment_gather_elems = self.mesh.wire_elems - gather0;
+
+        // ---- 1. execute: stage destination shards, then commit. Staging
+        // (rather than in-place writes) keeps every source read consistent
+        // with the pre-switch state. Messages are processed batched per
+        // sender: source regions resolve once per (sender, tensor) and
+        // each sender's wall time is measured — senders are concurrent in
+        // a deployment, so `delivery_s` is the slowest batch.
         let wire0 = self.mesh.wire_elems;
         let ops0 = self.mesh.ops;
         let mut staged: HashMap<(usize, usize), HostTensor> = HashMap::new();
-
         let mut sent: BTreeMap<(usize, usize), u64> = BTreeMap::new();
-        for (rank, ti, slice) in &plan.local_copies {
+
+        for (rank, ti, slice) in &sp.plan.local_copies {
             let dev = *rank as usize;
-            self.stage_piece(&new_layout, &mut staged, &moves, &targets, *ti, dev, dev, slice)?;
+            let src_region = region_under(&self.layout, &cfg, &sp.targets[*ti], dev)?;
+            self.stage_piece(&new_layout, &mut staged, sp, *ti, dev, dev, slice, &src_region)?;
         }
-        for mi in 0..plan.messages.len() {
-            self.mesh.ops += 1;
-            let (from, to) = (plan.messages[mi].from as usize, plan.messages[mi].to as usize);
-            for (ti, slice) in &plan.messages[mi].items {
-                let moved = self
-                    .stage_piece(&new_layout, &mut staged, &moves, &targets, *ti, from, to, slice)?;
-                self.mesh.wire_elems += moved;
-                *sent.entry((from, to)).or_insert(0) += moved;
+
+        let mut by_sender: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (mi, m) in sp.plan.messages.iter().enumerate() {
+            by_sender.entry(m.from as usize).or_default().push(mi);
+        }
+        let mut per_sender_s: BTreeMap<usize, f64> = BTreeMap::new();
+        for (&from, batch) in &by_sender {
+            let t0 = Instant::now();
+            let mut src_regions: HashMap<usize, Region> = HashMap::new();
+            for &mi in batch {
+                self.mesh.ops += 1;
+                let to = sp.plan.messages[mi].to as usize;
+                for (ti, slice) in &sp.plan.messages[mi].items {
+                    let src_region = match src_regions.entry(*ti) {
+                        std::collections::hash_map::Entry::Occupied(e) => e.get().clone(),
+                        std::collections::hash_map::Entry::Vacant(e) => e
+                            .insert(region_under(&self.layout, &cfg, &sp.targets[*ti], from)?)
+                            .clone(),
+                    };
+                    let moved = self.stage_piece(
+                        &new_layout,
+                        &mut staged,
+                        sp,
+                        *ti,
+                        from,
+                        to,
+                        slice,
+                        &src_region,
+                    )?;
+                    self.mesh.wire_elems += moved;
+                    *sent.entry((from, to)).or_insert(0) += moved;
+                }
             }
+            per_sender_s.insert(from, t0.elapsed().as_secs_f64());
         }
         for ((dev, ti), tensor) in staged {
-            self.mesh.devices[dev].put(&moves[ti].name, tensor);
+            self.mesh.devices[dev].put(&sp.moves[ti].name, tensor);
         }
 
-        // ---- 4. evict state not owned under the new layout
+        // ---- 2. evict state not owned under the new layout
         for dev in 0..self.mesh.devices.len() {
             let keys = self.mesh.devices[dev].keys();
             let owned = new_layout.owned_keys(dev);
@@ -259,41 +397,51 @@ impl Engine {
             }
         }
 
+        let delivery_s = per_sender_s.values().copied().fold(0.0, f64::max);
         let report = EngineSwitchReport {
             messages: self.mesh.ops - ops0,
             wire_elems: self.mesh.wire_elems - wire0,
-            plan,
+            plan: sp.plan.clone(),
             sent,
+            per_sender_s,
+            delivery_s,
+            moment_gather_elems,
         };
         self.strategy = new;
         self.layout = new_layout;
+
+        // ---- 3. ZeRO-1: trim the freshly-arrived full moment shards back
+        // to each device's DP partition under the new layout (unmoved
+        // parameters kept their old — still valid — partitions).
+        if !moved_moments.is_empty() {
+            self.reshard_zero1_moments(&moved_moments)?;
+        }
         Ok(report)
     }
 
-    /// Move one planned slice of move `ti` from `from`'s current shard into
-    /// `to`'s staging buffer; returns the slice element count (wire volume
-    /// when `from != to`).
+    /// Move one planned slice of move `ti` from `from`'s current shard
+    /// (whose global region is `src_region`) into `to`'s staging buffer;
+    /// returns the slice element count (wire volume when `from != to`).
     #[allow(clippy::too_many_arguments)]
     fn stage_piece(
         &mut self,
         new_layout: &ShardLayout,
         staged: &mut HashMap<(usize, usize), HostTensor>,
-        moves: &[TensorMove],
-        targets: &[Target],
+        sp: &SwitchPlan,
         ti: usize,
         from: usize,
         to: usize,
         slice: &Region,
+        src_region: &Region,
     ) -> Result<u64> {
         let cfg = self.runtime.config;
-        let key = &moves[ti].name;
-        let src_region = region_under(&self.layout, &cfg, &targets[ti], from)?;
+        let key = &sp.moves[ti].name;
         let src_tensor = self.mesh.devices[from].get(key).map_err(|_| {
             Error::Engine(format!("switch: sender {from} is missing `{key}`"))
         })?;
-        let piece = extract_region(src_tensor, &localize(slice, &src_region))?;
+        let piece = extract_region(src_tensor, &localize(slice, src_region))?;
         let elems = piece.len() as u64;
-        let dst_region = region_under(new_layout, &cfg, &targets[ti], to)?;
+        let dst_region = region_under(new_layout, &cfg, &sp.targets[ti], to)?;
         let buf = match staged.entry((to, ti)) {
             std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
             std::collections::hash_map::Entry::Vacant(e) => {
@@ -321,5 +469,22 @@ mod tests {
         assert_eq!(param_base("act"), None);
         assert_eq!(param_base("save.mb0.L3"), None);
         assert_eq!(param_base("dpart"), None);
+    }
+
+    #[test]
+    fn plan_switch_is_deterministic_and_reusable() {
+        use crate::runtime::native;
+        let cfg = native::tiny_config();
+        let a = ShardLayout::build(&cfg, &EngineStrategy::uniform("dp2", 2, 1, 1, 8, 1)).unwrap();
+        let b = ShardLayout::build(&cfg, &EngineStrategy::uniform("tp2", 1, 2, 1, 8, 2)).unwrap();
+        let p1 = plan_switch(&cfg, &a, &b, false, &UniformBandwidth, &[]).unwrap();
+        let p2 = plan_switch(&cfg, &a, &b, false, &UniformBandwidth, &[]).unwrap();
+        assert_eq!(p1.moves.len(), p2.moves.len());
+        assert_eq!(p1.plan.num_messages(), p2.plan.num_messages());
+        assert_eq!(p1.plan.wire_bytes(), p2.plan.wire_bytes());
+        // moments triple the move count when they ride along
+        let pm = plan_switch(&cfg, &a, &b, true, &UniformBandwidth, &[]).unwrap();
+        assert_eq!(pm.moves.len(), 3 * p1.moves.len());
+        assert!(pm.with_moments && !p1.with_moments);
     }
 }

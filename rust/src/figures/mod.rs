@@ -362,6 +362,65 @@ pub fn hetu_b_step(
     Ok(worst + sync)
 }
 
+/// Fig 15, **measured**: drive the temporal runtime over a synthetic
+/// CommonCrawl stream on the native-backend engine and report the
+/// amortized per-step time (step makespans + non-overlapped switch
+/// seconds) of each single static strategy vs. the Hetu-A/Hetu-B
+/// switching engines — the engine-measured mirror of [`fig15`]'s
+/// simulated cells, with switch overhead amortized over the bucket
+/// run-length. Static strategies whose bucket context cannot host the
+/// stream's longest sequence truncate (marked), which is why the dynamic
+/// engines must beat the best *feasible* static one (asserted in
+/// `rust/tests/engine_integration.rs`).
+pub fn fig15_engine(steps: usize) -> Result<Table> {
+    use crate::coordinator::SyntheticCorpus;
+    use crate::engine::EngineStrategy;
+    use crate::runtime::{native, Runtime};
+    use crate::temporal::{
+        default_pool_entries, sample_stream, DispatchPolicy, Dispatcher, StrategyPool,
+    };
+
+    let tiny = native::tiny_config();
+    let entries = default_pool_entries(&tiny)?;
+    let mut rng = Rng::new(0xF15E);
+    let stream = sample_stream(&mut rng, Corpus::CommonCrawl, steps, 100_000, 32_768);
+    let stream_max = stream.iter().map(|b| b.max_len()).max().unwrap_or(0);
+    let cm = CostModel::new(ModelCfg::llama_32b());
+
+    let mut table = Table::new(
+        "Fig 15 (engine-measured) — amortized per-step time, native tiny-48, synthetic CommonCrawl 32K",
+        &["policy", "feasible", "switches", "cache hits", "mb/step", "amortized s/step"],
+    );
+    let mut cases = Vec::new();
+    for (s, ctx) in &entries {
+        let single: Vec<(EngineStrategy, u64)> = vec![(s.clone(), *ctx)];
+        cases.push((format!("static {}", s.name), single, DispatchPolicy::HetuB));
+    }
+    cases.push(("Hetu-A (bucketize)".into(), entries.clone(), DispatchPolicy::HetuA));
+    cases.push(("Hetu-B (cost model)".into(), entries.clone(), DispatchPolicy::HetuB));
+
+    for (label, pe, policy) in cases {
+        let feasible = pe.iter().map(|(_, c)| *c).max().unwrap_or(0) >= stream_max;
+        let mut pool = StrategyPool::new(tiny, pe)?;
+        let mut eng = pool.spawn_engine(Runtime::native(tiny), 0, 42, 1e-3)?;
+        let disp = Dispatcher::new(cm, policy);
+        let mut corpus = SyntheticCorpus::new(7, tiny.vocab);
+        let rep = disp.run_stream(&mut eng, &mut pool, &stream, &mut corpus)?;
+        table.row(vec![
+            label,
+            if feasible { "yes".into() } else { "truncates".into() },
+            rep.switches.to_string(),
+            rep.cache_hits.to_string(),
+            format!(
+                "{:.1}",
+                rep.total_microbatches() as f64 / rep.steps.len().max(1) as f64
+            ),
+            fmt_s(rep.amortized_step_s()),
+        ]);
+    }
+    Ok(table)
+}
+
 /// Fig 16 — the per-step max-seq-len trace and Hetu-B's strategy choice.
 pub fn fig16(steps: usize) -> Result<Table> {
     let mut table = Table::new(

@@ -24,6 +24,9 @@
 //!   graphs) and pipeline construction + GPipe/1F1B schedules.
 //! - [`switch`] — §6 multi-annotation graphs and fused-BSR strategy
 //!   transitions.
+//! - [`temporal`] — the §6 temporal-heterogeneity runtime: strategy pool
+//!   with a pairwise switch-plan cache, Hetu-A/B length-aware dispatch,
+//!   and §6.2 switch/compute overlap accounting.
 //! - [`cluster`], [`sim`], [`costmodel`] — the simulated heterogeneous
 //!   testbed (Table 3) and discrete-event execution timeline.
 //! - [`strategy`], [`data`], [`baselines`] — Appendix-A strategy encodings,
@@ -53,6 +56,7 @@ pub mod sim;
 pub mod spec;
 pub mod strategy;
 pub mod switch;
+pub mod temporal;
 pub mod testutil;
 
 pub use error::{Error, Result};

@@ -111,8 +111,10 @@ pub fn lower(
 }
 
 /// Largest-remainder apportionment of `total` micro-batches over sample
-/// weights, with a floor of one per pipeline.
-fn apportion(weights: &[u64], total: usize) -> std::result::Result<Vec<usize>, String> {
+/// weights, with a floor of one per pipeline. Shared with the temporal
+/// dispatcher's per-step token-weighted apportioning
+/// ([`crate::temporal::Dispatcher`]).
+pub(crate) fn apportion(weights: &[u64], total: usize) -> std::result::Result<Vec<usize>, String> {
     let n = weights.len();
     if n == 0 {
         return Err("no pipelines".into());

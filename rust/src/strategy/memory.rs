@@ -67,6 +67,66 @@ pub fn stage_memory(cm: &CostModel, strat: &ParallelStrategy, p: usize, s: usize
     }
 }
 
+/// Elements of ONE optimizer-moment tensor family (`m.*`; double for
+/// `m` + `v`) the engine stores under `layout` — replicated, or ZeRO-1
+/// sharded over the DP axis (each replica set stores exactly one copy,
+/// split across its members). This is the engine-scale mirror of
+/// [`stage_memory`]'s `optimizer_gib / zero_dp` accounting; the
+/// integration tests assert the engine's *actual* stores match it (the
+/// memory-accounting side of the App.-A "disabling ZeRO-1 costs ~15%
+/// because the headroom shrinks" trade-off).
+pub fn engine_moment_elems(
+    cfg: &crate::runtime::ManifestConfig,
+    layout: &crate::engine::ShardLayout,
+    zero1: bool,
+) -> u64 {
+    use crate::engine::layout::{pkey, special_shape};
+    use crate::engine::BLOCK_PARAMS;
+    use crate::hspmd::slices::region_elems;
+    use std::collections::BTreeSet;
+
+    fn one(
+        layout: &crate::engine::ShardLayout,
+        dev: usize,
+        key: &str,
+        full: u64,
+        zero1: bool,
+    ) -> u64 {
+        if !zero1 {
+            return full;
+        }
+        match layout.zero_part(dev, key) {
+            None => full,
+            Some(None) => 0,
+            Some(Some(r)) => region_elems(r),
+        }
+    }
+
+    let mut total = 0u64;
+    let mut seen: BTreeSet<(usize, String)> = BTreeSet::new();
+    for ((l, pidx), hs) in layout.iter_holdings() {
+        let key = pkey(*l, BLOCK_PARAMS[*pidx]);
+        for h in hs {
+            if seen.insert((h.dev, key.clone())) {
+                total += one(layout, h.dev, &key, region_elems(&h.region), zero1);
+            }
+        }
+    }
+    for (name, roots) in [
+        ("emb", &layout.first_roots),
+        ("gf", &layout.last_roots),
+        ("wout", &layout.last_roots),
+    ] {
+        let full: u64 = special_shape(cfg, name).iter().product();
+        for &d in roots.iter() {
+            if seen.insert((d, name.to_string())) {
+                total += one(layout, d, name, full, zero1);
+            }
+        }
+    }
+    total
+}
+
 /// The strategy's peak per-device memory and whether it fits the cluster.
 pub fn plan(cm: &CostModel, cluster: &Cluster, strat: &ParallelStrategy) -> (f64, bool) {
     let mut peak = 0f64;
@@ -124,6 +184,44 @@ mod tests {
         let m_on = stage_memory(&cm, &c1, 0, 0);
         assert!(m_on.optimizer_gib < m_off.optimizer_gib);
         assert_eq!(m_on.weights_gib, m_off.weights_gib);
+    }
+
+    #[test]
+    fn engine_zero1_accounting_halves_dp2_moments() {
+        use crate::engine::{EngineStrategy, ShardLayout};
+        use crate::runtime::native;
+        let cfg = native::tiny_config();
+        // dp2: every parameter (incl. roots) is replicated exactly twice,
+        // and every row count is even — ZeRO-1 stores exactly one copy.
+        let dp2 = EngineStrategy::uniform("dp2", 2, 1, 1, 8, 1);
+        let layout = ShardLayout::build(&cfg, &dp2).unwrap();
+        let rep = engine_moment_elems(&cfg, &layout, false);
+        let z1 = engine_moment_elems(&cfg, &layout, true);
+        assert!(rep > 0);
+        assert_eq!(z1 * 2, rep, "ZeRO-1 over dp2 stores exactly one copy");
+        // solo: nothing replicates, ZeRO-1 changes nothing
+        let solo = EngineStrategy::uniform("solo", 1, 1, 1, 8, 1);
+        let l2 = ShardLayout::build(&cfg, &solo).unwrap();
+        assert_eq!(
+            engine_moment_elems(&cfg, &l2, true),
+            engine_moment_elems(&cfg, &l2, false)
+        );
+        // the engine-scale ratio matches the paper-scale cost model's
+        // `optimizer_gib / zero_dp` rule for uniform DP
+        let cm = CostModel::new(ModelCfg::llama_32b());
+        let ranks: Vec<u32> = (0..2).collect();
+        let mut s =
+            uniform("dp2", &ranks, 2, 1, 1, 60, 8, 1, 4096, ScheduleKind::GPipe, false, false)
+                .unwrap();
+        let m_off = stage_memory(&cm, &s, 0, 0);
+        s.zero1 = true;
+        let m_on = stage_memory(&cm, &s, 0, 0);
+        let model_ratio = m_off.optimizer_gib / m_on.optimizer_gib;
+        let engine_ratio = rep as f64 / z1 as f64;
+        assert!(
+            (model_ratio - engine_ratio).abs() < 1e-9,
+            "cost-model ratio {model_ratio} vs engine ratio {engine_ratio}"
+        );
     }
 
     #[test]

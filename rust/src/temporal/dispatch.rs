@@ -1,0 +1,342 @@
+//! Length-aware dispatch: StepBatch streams → strategy choice →
+//! token-weighted micro-batching → engine steps.
+//!
+//! Two policies, mirroring the paper's §6 evaluation:
+//!
+//! * **Hetu-A** — bucketize: the batch's max sequence length selects the
+//!   smallest bucket (pool entry `ctx`) that can host it;
+//! * **Hetu-B** — cost-model dispatch: among eligible entries, minimize
+//!   the paper-scale [`CostModel`] cost of processing the batch at that
+//!   entry's context (packed windows each pay their full — possibly
+//!   padded — context, including the quadratic attention term, which is
+//!   exactly why running short data on a long-context strategy loses),
+//!   normalized by the entry's device parallelism, with hysteresis so the
+//!   engine only leaves the incumbent when the win is clear.
+//!
+//! The chosen batch is then threaded through the engine's token-weighted
+//! uneven micro-batching: the same cost model converts the batch into an
+//! engine micro-batch quota (`flops_per_mb` cost units each — the tiny
+//! fixed-shape engine micro-batch stands in for one context window of
+//! work), [`dispatch_hetu_b`] splits the sequences over the strategy's
+//! pipelines, and the quota is apportioned largest-remainder over the
+//! per-pipeline token loads (`strategy::lower`'s rule, floor one). The
+//! engine's token-weighted gradient sync keeps the uneven counts exact
+//! data parallelism, so losses stay on one trajectory across switches.
+
+use std::collections::BTreeSet;
+
+use crate::coordinator::SyntheticCorpus;
+use crate::costmodel::CostModel;
+use crate::data::{dispatch_hetu_b, pack_sequences, PipeClass, StepBatch};
+use crate::engine::Engine;
+use crate::{Error, Result};
+
+use super::overlap::SwitchOverlap;
+use super::pool::{PoolEntry, StrategyPool};
+
+/// Which §6 dispatch policy drives strategy selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// Length-interval bucketing (HotSPa-style, fused switches).
+    HetuA,
+    /// Cost-model dispatch with hysteresis.
+    HetuB,
+}
+
+/// The length-aware dispatcher.
+#[derive(Clone, Debug)]
+pub struct Dispatcher {
+    /// Selection policy.
+    pub policy: DispatchPolicy,
+    /// Paper-scale cost model driving Hetu-B selection and the
+    /// micro-batch quota.
+    pub cm: CostModel,
+    /// Cost-model FLOPs one engine micro-batch stands for (default: 25K
+    /// tokens at 4K context through the full model).
+    pub flops_per_mb: f64,
+    /// Hetu-B hysteresis: switch only when the winner undercuts the
+    /// incumbent by this fraction.
+    pub hysteresis: f64,
+    /// Upper clamp on engine micro-batches per step.
+    pub max_microbatches: usize,
+}
+
+impl Dispatcher {
+    /// Dispatcher with default quota/hysteresis settings.
+    pub fn new(cm: CostModel, policy: DispatchPolicy) -> Dispatcher {
+        let flops_per_mb = cm.model.fwd_flops(cm.model.layers, 25_000, 4096);
+        Dispatcher { policy, cm, flops_per_mb, hysteresis: 0.05, max_microbatches: 32 }
+    }
+
+    /// Cost-model FLOPs to process `batch` at bucket context `ctx`:
+    /// sequences pack first-fit into `ctx`-token windows (overlong ones
+    /// truncate — the baseline rule) and every window pays its full
+    /// padded context, quadratic attention included.
+    pub fn batch_flops(&self, batch: &StepBatch, ctx: u64) -> f64 {
+        let windows = pack_sequences(&batch.seq_lens, ctx);
+        windows as f64 * self.cm.model.fwd_flops(self.cm.model.layers, ctx, ctx)
+    }
+
+    /// Select the pool entry for `batch`, given the engine currently runs
+    /// `current`. Entries whose `ctx` cannot host the batch's longest
+    /// sequence are ineligible; if none can, the widest-context entry
+    /// truncates.
+    pub fn choose(&self, pool: &StrategyPool, batch: &StepBatch, current: usize) -> usize {
+        let max_len = batch.max_len();
+        let eligible: Vec<usize> = pool
+            .entries()
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.ctx >= max_len)
+            .map(|(i, _)| i)
+            .collect();
+        if eligible.is_empty() {
+            return pool
+                .entries()
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, e)| e.ctx)
+                .map(|(i, _)| i)
+                .unwrap();
+        }
+        match self.policy {
+            DispatchPolicy::HetuA => {
+                eligible.into_iter().min_by_key(|&i| pool.entry(i).ctx).unwrap()
+            }
+            DispatchPolicy::HetuB => {
+                let score = |i: usize| {
+                    self.batch_flops(batch, pool.entry(i).ctx)
+                        / pool.entry(i).strategy.num_devices().max(1) as f64
+                };
+                let best = eligible
+                    .iter()
+                    .copied()
+                    .min_by(|&a, &b| score(a).partial_cmp(&score(b)).unwrap())
+                    .unwrap();
+                if eligible.contains(&current)
+                    && score(best) > score(current) * (1.0 - self.hysteresis)
+                {
+                    current // the win does not clear the switch cost
+                } else {
+                    best
+                }
+            }
+        }
+    }
+
+    /// Token-weighted per-pipeline micro-batch counts for running `batch`
+    /// on `entry`: the cost-model quota, split over pipelines by their
+    /// [`dispatch_hetu_b`] token loads (largest remainder, floor one).
+    pub fn microbatch_counts(&self, entry: &PoolEntry, batch: &StepBatch) -> Result<Vec<usize>> {
+        let npipes = entry.strategy.pipelines.len();
+        let quota = (self.batch_flops(batch, entry.ctx) / self.flops_per_mb).ceil() as usize;
+        let total = quota.clamp(npipes, self.max_microbatches.max(npipes));
+        if npipes == 1 {
+            return Ok(vec![total]);
+        }
+        let classes: Vec<PipeClass> = entry
+            .strategy
+            .pipelines
+            .iter()
+            .map(|p| PipeClass {
+                max_seq: entry.ctx,
+                tokens_per_s: p.stages.iter().map(|s| s.devices.len()).sum::<usize>() as f64,
+            })
+            .collect();
+        let assign = dispatch_hetu_b(&batch.seq_lens, &classes);
+        let mut weights: Vec<u64> = assign.iter().map(|v| v.iter().sum()).collect();
+        if weights.iter().all(|&w| w == 0) {
+            weights = vec![1; npipes];
+        }
+        crate::strategy::lower::apportion(&weights, total)
+            .map_err(|e| Error::Engine(format!("microbatch apportioning: {e}")))
+    }
+
+    /// Drive a pool-managed engine over a batch stream: choose a strategy
+    /// per batch, hot-switch (cached plans) only on bucket change, retune
+    /// micro-batch counts, run the step, and account switch deliveries
+    /// through the §6.2 overlap model.
+    pub fn run_stream(
+        &self,
+        engine: &mut Engine,
+        pool: &mut StrategyPool,
+        stream: &[StepBatch],
+        corpus: &mut SyntheticCorpus,
+    ) -> Result<StreamReport> {
+        let mut current = pool.index_of(&engine.strategy).ok_or_else(|| {
+            Error::Engine(format!(
+                "run_stream: engine strategy `{}` is not in the pool",
+                engine.strategy.name
+            ))
+        })?;
+        let (b, s) = (engine.runtime.config.batch, engine.runtime.config.seq);
+        let mut overlap = SwitchOverlap::new();
+        let hits0 = pool.hits();
+        let mut steps = Vec::with_capacity(stream.len());
+        let mut switches = 0u64;
+        for (i, batch) in stream.iter().enumerate() {
+            let chosen = self.choose(pool, batch, current);
+            let (mut switched, mut cache_hit, mut delivery_s) = (false, false, 0.0);
+            if chosen != current {
+                let h0 = pool.hits();
+                let rep = pool.switch_engine(engine, chosen)?;
+                switched = true;
+                cache_hit = pool.hits() > h0;
+                delivery_s = rep.delivery_s;
+                overlap.on_switch(rep.delivery_s);
+                switches += 1;
+                current = chosen;
+            }
+            let counts = self.microbatch_counts(pool.entry(chosen), batch)?;
+            engine.set_microbatches(&counts)?;
+            let stats = engine.train_step(&mut |_p, _m| corpus.microbatch(b, s))?;
+            let exposed_s = overlap.on_step(stats.makespan_s);
+            steps.push(StepOutcome {
+                step: i,
+                entry: chosen,
+                switched,
+                cache_hit,
+                delivery_s,
+                exposed_s,
+                loss: stats.loss,
+                makespan_s: stats.makespan_s,
+                microbatches: counts.iter().sum(),
+            });
+        }
+        Ok(StreamReport { steps, switches, cache_hits: pool.hits() - hits0 })
+    }
+}
+
+/// One dispatched step's outcome.
+#[derive(Clone, Debug)]
+pub struct StepOutcome {
+    /// Stream position.
+    pub step: usize,
+    /// Pool entry the step ran on.
+    pub entry: usize,
+    /// Whether a hot switch preceded the step.
+    pub switched: bool,
+    /// Whether that switch reused a cached plan.
+    pub cache_hit: bool,
+    /// The switch's measured delivery time (slowest sender's batch).
+    pub delivery_s: f64,
+    /// Switch seconds this step's compute could not hide (§6.2 overlap).
+    pub exposed_s: f64,
+    /// Step loss.
+    pub loss: f32,
+    /// Measured step makespan.
+    pub makespan_s: f64,
+    /// Engine micro-batches this step ran (all pipelines).
+    pub microbatches: usize,
+}
+
+/// A dispatched stream's outcomes.
+#[derive(Clone, Debug)]
+pub struct StreamReport {
+    /// Per-step outcomes in stream order.
+    pub steps: Vec<StepOutcome>,
+    /// Hot switches performed.
+    pub switches: u64,
+    /// Switches that reused a cached plan.
+    pub cache_hits: u64,
+}
+
+impl StreamReport {
+    /// Total time: step makespans plus exposed (non-overlapped) switch
+    /// seconds.
+    pub fn total_s(&self) -> f64 {
+        self.steps.iter().map(|s| s.makespan_s + s.exposed_s).sum()
+    }
+
+    /// Amortized per-step time — the Fig 15 quantity.
+    pub fn amortized_step_s(&self) -> f64 {
+        self.total_s() / self.steps.len().max(1) as f64
+    }
+
+    /// Engine micro-batches run across the stream.
+    pub fn total_microbatches(&self) -> usize {
+        self.steps.iter().map(|s| s.microbatches).sum()
+    }
+
+    /// Distinct pool entries the stream executed on.
+    pub fn entries_used(&self) -> BTreeSet<usize> {
+        self.steps.iter().map(|s| s.entry).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::ModelCfg;
+    use crate::runtime::native;
+    use crate::temporal::default_pool_entries;
+
+    fn batch(lens: Vec<u64>) -> StepBatch {
+        let total_tokens = lens.iter().sum();
+        StepBatch { seq_lens: lens, total_tokens }
+    }
+
+    fn pool() -> StrategyPool {
+        let cfg = native::tiny_config();
+        StrategyPool::new(cfg, default_pool_entries(&cfg).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn hetu_a_bucketizes_by_max_length() {
+        let pool = pool();
+        let d = Dispatcher::new(CostModel::new(ModelCfg::llama_32b()), DispatchPolicy::HetuA);
+        assert_eq!(d.choose(&pool, &batch(vec![2048; 10]), 0), 0);
+        assert_eq!(d.choose(&pool, &batch(vec![2048, 10_000]), 0), 1);
+        assert_eq!(d.choose(&pool, &batch(vec![2048, 20_000]), 0), 2);
+        // overlong tail truncates on the widest entry
+        assert_eq!(d.choose(&pool, &batch(vec![40_000]), 0), 2);
+    }
+
+    #[test]
+    fn hetu_b_prefers_cheap_short_context_and_honors_hysteresis() {
+        let pool = pool();
+        let d = Dispatcher::new(CostModel::new(ModelCfg::llama_32b()), DispatchPolicy::HetuB);
+        // short data on a long-context strategy wastes quadratic attention
+        // → leaves the incumbent
+        assert_eq!(d.choose(&pool, &batch(vec![2048; 48]), 2), 0);
+        // a long sequence forces the wide strategy
+        let mut long = vec![2048u64; 38];
+        long.push(20_000);
+        assert_eq!(d.choose(&pool, &batch(long), 0), 2);
+        // near-tie keeps the incumbent (hysteresis): two entries with the
+        // same ctx and device count score identically
+        let cfg = native::tiny_config();
+        let twin = StrategyPool::new(
+            cfg,
+            vec![
+                (crate::engine::EngineStrategy::uniform("a", 1, 2, 1, 8, 2), 4096),
+                (crate::engine::EngineStrategy::uniform("b", 1, 1, 2, 8, 2), 4096),
+            ],
+        )
+        .unwrap();
+        assert_eq!(d.choose(&twin, &batch(vec![2048; 8]), 1), 1);
+    }
+
+    #[test]
+    fn microbatch_quota_scales_with_context_waste() {
+        let pool = pool();
+        let d = Dispatcher::new(CostModel::new(ModelCfg::llama_32b()), DispatchPolicy::HetuB);
+        // ~98K tokens of 2K sequences at 4K context: 24 windows ≈ 4 quota
+        // units, split 2:2 over the DP pipelines
+        let short = batch(vec![2048; 48]);
+        let c0 = d.microbatch_counts(pool.entry(0), &short).unwrap();
+        assert_eq!(c0.iter().sum::<usize>(), 4);
+        assert_eq!(c0, vec![2, 2]);
+        // the same tokens at 32K context pay padding + quadratic attention
+        let c2 = d.microbatch_counts(pool.entry(2), &short).unwrap();
+        assert_eq!(c2.len(), 1);
+        assert!(
+            c2[0] > c0.iter().sum::<usize>(),
+            "long-context waste must exceed the short-context quota: {c2:?} vs {c0:?}"
+        );
+        // floors: every pipeline gets at least one micro-batch
+        let tiny_b = batch(vec![64]);
+        let c = d.microbatch_counts(pool.entry(0), &tiny_b).unwrap();
+        assert_eq!(c, vec![1, 1]);
+    }
+}

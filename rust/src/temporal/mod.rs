@@ -1,0 +1,127 @@
+//! The temporal-heterogeneity runtime (§6, Figs 15/16).
+//!
+//! The paper's answer to *temporal* heterogeneity — sequence-length mix
+//! shifting batch to batch — is to define the program once, instantiate
+//! several parallel strategies, and **hot-switch** between their graphs as
+//! the mix shifts. This module is that runtime at engine scale, executing
+//! real numerics rather than the simulator:
+//!
+//! * [`pool::StrategyPool`] owns N lowered [`EngineStrategy`] graphs with
+//!   their [`ShardLayout`](crate::engine::ShardLayout)s precomputed and a
+//!   **pairwise switch-plan cache**: a repeated A↔B transition reuses the
+//!   fused-BSR [`SwitchPlan`](crate::engine::SwitchPlan) instead of
+//!   re-planning (hits/misses are counted and asserted in tests);
+//! * [`dispatch::Dispatcher`] consumes [`data::StepBatch`] streams and
+//!   implements the paper's two dispatch policies — **Hetu-A** (bucketize
+//!   by max length, run the bucket's strategy) and **Hetu-B** (cost-model
+//!   dispatch via [`costmodel`](crate::costmodel), with hysteresis so the
+//!   engine only switches when the win clears the transition cost) —
+//!   triggering `Engine::switch_to_planned` only on bucket change and
+//!   threading each batch through the token-weighted uneven
+//!   micro-batching of `strategy::lower`;
+//! * [`overlap::SwitchOverlap`] models the §6.2 switch/compute overlap
+//!   (Fig 18-right): fused switch messages execute **batched per sender**
+//!   (`engine/switch.rs`), senders are concurrent, and the slowest
+//!   sender's delivery hides behind the first post-switch step — only the
+//!   remainder is exposed in the amortized per-step time.
+//!
+//! `figures::fig15_engine` drives this runtime over synthetic
+//! CommonCrawl/GitHub streams to produce the *measured* engine column of
+//! the Fig 15 comparison: amortized per-step time of the switching engine
+//! vs. each single static strategy on the same stream.
+
+pub mod dispatch;
+pub mod overlap;
+pub mod pool;
+
+pub use dispatch::{DispatchPolicy, Dispatcher, StepOutcome, StreamReport};
+pub use overlap::SwitchOverlap;
+pub use pool::{PoolEntry, StrategyPool};
+
+use crate::data::{sample_step, Corpus, StepBatch};
+use crate::engine::EngineStrategy;
+use crate::runtime::ManifestConfig;
+use crate::spec::schedule::ScheduleKind;
+use crate::testutil::Rng;
+use crate::Result;
+
+/// The default temporal pool: three strategies lowered from paper-scale
+/// encodings onto `cfg`, one per length bucket — a DP-wide short-sequence
+/// strategy, a pipelined mid-bucket strategy, and a TP-wide long-sequence
+/// variant. All use the same two devices, so hot switches move real
+/// parameter and optimizer state.
+pub fn default_pool_entries(cfg: &ManifestConfig) -> Result<Vec<(EngineStrategy, u64)>> {
+    let mk = |name: &str, dp: u32, tp: u32, pp: u32, seq: u64| -> Result<EngineStrategy> {
+        let n = dp * tp * pp;
+        let ranks: Vec<u32> = (0..n).collect();
+        let spec = crate::strategy::uniform(
+            name,
+            &ranks,
+            dp,
+            tp,
+            pp,
+            60,
+            (dp as u64) * 4,
+            1,
+            seq,
+            ScheduleKind::GPipe,
+            false,
+            false,
+        )?;
+        let lopts = crate::strategy::LowerOptions {
+            total_microbatches: (dp as usize) * 2,
+            tp_degrees: crate::runtime::native::TP_DEGREES.to_vec(),
+        };
+        crate::strategy::lower(&spec, cfg, &lopts)
+    };
+    Ok(vec![
+        (mk("hetu-short-dp2", 2, 1, 1, 4096)?, 4096),
+        (mk("hetu-mid-pp2", 1, 1, 2, 16384)?, 16384),
+        (mk("hetu-long-tp2", 1, 2, 1, 32768)?, 32768),
+    ])
+}
+
+/// Sample a synthetic mixed-length stream: `steps` × [`sample_step`].
+pub fn sample_stream(
+    rng: &mut Rng,
+    corpus: Corpus,
+    steps: usize,
+    token_budget: u64,
+    max_len: u64,
+) -> Vec<StepBatch> {
+    (0..steps).map(|_| sample_step(rng, corpus, token_budget, max_len)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native;
+
+    #[test]
+    fn default_pool_lowers_three_two_device_strategies() {
+        let cfg = native::tiny_config();
+        let entries = default_pool_entries(&cfg).unwrap();
+        assert_eq!(entries.len(), 3);
+        let ctxs: Vec<u64> = entries.iter().map(|(_, c)| *c).collect();
+        assert_eq!(ctxs, vec![4096, 16384, 32768]);
+        for (s, _) in &entries {
+            s.validate(&cfg, &[1, 2, 4]).unwrap();
+            assert_eq!(s.num_devices(), 2, "{}", s.name);
+        }
+        // short = 2 pipelines (DP), long = 1 pipeline at TP2
+        assert_eq!(entries[0].0.pipelines.len(), 2);
+        assert_eq!(entries[2].0.pipelines[0].stages[0].devices, vec![0, 1]);
+    }
+
+    #[test]
+    fn sample_stream_is_deterministic() {
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        let sa = sample_stream(&mut a, Corpus::CommonCrawl, 5, 50_000, 32768);
+        let sb = sample_stream(&mut b, Corpus::CommonCrawl, 5, 50_000, 32768);
+        assert_eq!(sa.len(), 5);
+        for (x, y) in sa.iter().zip(sb.iter()) {
+            assert_eq!(x.seq_lens, y.seq_lens);
+        }
+    }
+}

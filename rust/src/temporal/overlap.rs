@@ -1,0 +1,87 @@
+//! §6.2 switch/compute overlap accounting (Fig 18-right).
+//!
+//! The engine executes a transition's fused messages batched per sender
+//! (`engine/switch.rs`), and senders run concurrently in a deployment, so
+//! a switch's *delivery time* is the slowest sender's batch
+//! ([`EngineSwitchReport::delivery_s`](crate::engine::EngineSwitchReport)).
+//! The paper then overlaps that delivery with the first post-switch step:
+//! early pipeline stages start computing while later layers' shards are
+//! still in flight. This module is the bookkeeping for that model — the
+//! *exposed* (non-hidden) switch cost of a step is whatever part of the
+//! pending delivery its own makespan cannot cover:
+//!
+//! ```text
+//! exposed = max(0, pending_delivery − step_makespan)
+//! ```
+//!
+//! The dispatcher folds `makespan + exposed` into the amortized per-step
+//! time, so a switch's cost is amortized over the following bucket
+//! run-length exactly as Fig 15's Hetu-A/B cells assume.
+
+/// Running overlap state across a step stream.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SwitchOverlap {
+    pending_delivery_s: f64,
+}
+
+impl SwitchOverlap {
+    /// Fresh accountant with nothing in flight.
+    pub fn new() -> SwitchOverlap {
+        SwitchOverlap::default()
+    }
+
+    /// A switch completed; its delivery overlaps the next step. Multiple
+    /// switches before a step serialize (their deliveries sum).
+    pub fn on_switch(&mut self, delivery_s: f64) {
+        self.pending_delivery_s += delivery_s.max(0.0);
+    }
+
+    /// A step of `makespan_s` ran; returns the switch seconds this step
+    /// could *not* hide (its exposed overhead). Afterwards nothing is
+    /// pending — a delivery longer than one step surfaces entirely on
+    /// that step.
+    pub fn on_step(&mut self, makespan_s: f64) -> f64 {
+        let exposed = (self.pending_delivery_s - makespan_s.max(0.0)).max(0.0);
+        self.pending_delivery_s = 0.0;
+        exposed
+    }
+
+    /// Delivery seconds currently awaiting overlap.
+    pub fn pending_s(&self) -> f64 {
+        self.pending_delivery_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn short_delivery_hides_entirely() {
+        let mut o = SwitchOverlap::new();
+        o.on_switch(0.010);
+        assert!((o.pending_s() - 0.010).abs() < 1e-12);
+        assert_eq!(o.on_step(0.050), 0.0);
+        assert_eq!(o.pending_s(), 0.0);
+        // nothing pending → nothing exposed
+        assert_eq!(o.on_step(0.050), 0.0);
+    }
+
+    #[test]
+    fn long_delivery_exposes_the_remainder_once() {
+        let mut o = SwitchOverlap::new();
+        o.on_switch(0.080);
+        let e = o.on_step(0.050);
+        assert!((e - 0.030).abs() < 1e-12);
+        assert_eq!(o.on_step(0.050), 0.0);
+    }
+
+    #[test]
+    fn back_to_back_switches_serialize() {
+        let mut o = SwitchOverlap::new();
+        o.on_switch(0.030);
+        o.on_switch(0.040);
+        let e = o.on_step(0.050);
+        assert!((e - 0.020).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,269 @@
+//! The strategy pool: N instantiated strategies + the pairwise
+//! switch-plan cache.
+//!
+//! HotSPa re-plans (and re-builds process groups for) every transition;
+//! GSPMD's define-once/instantiate-many model points the other way — the
+//! pool instantiates every strategy *once* ([`ShardLayout`]s precomputed
+//! at construction) and caches the fused-BSR [`SwitchPlan`] per ordered
+//! `(from, to, moments?)` triple, so steady-state A↔B oscillation (the
+//! common Fig 16 cadence) never re-plans. Failover switches (`dead` set)
+//! bypass the cache and re-plan fresh.
+
+use std::collections::HashMap;
+
+use crate::comm::{Bandwidth, UniformBandwidth};
+use crate::engine::{
+    plan_switch, Engine, EngineStrategy, EngineSwitchReport, ShardLayout, SwitchPlan,
+};
+use crate::runtime::ManifestConfig;
+use crate::{Error, Result};
+
+/// One pooled strategy: the lowered graph, its precomputed layout, and the
+/// length bucket it serves.
+#[derive(Clone, Debug)]
+pub struct PoolEntry {
+    /// The runnable strategy.
+    pub strategy: EngineStrategy,
+    /// Precomputed ownership/sync/update plans.
+    pub layout: ShardLayout,
+    /// Bucket context: the longest sequence this strategy can host
+    /// (memory-bound at paper scale; the dispatcher's eligibility rule).
+    pub ctx: u64,
+}
+
+/// `(from, to, with_moments, topology_aware)` — the plan-cache key. The
+/// last flag records whether the plan was built against a real topology
+/// (bandwidth heuristic 2) or the uniform stand-in, so attaching a
+/// topology after a plan was cached re-plans instead of silently
+/// replaying uniform-bandwidth sender selection.
+type PlanKey = (usize, usize, bool, bool);
+
+/// A pool of instantiated strategies with a pairwise switch-plan cache.
+pub struct StrategyPool {
+    cfg: ManifestConfig,
+    entries: Vec<PoolEntry>,
+    plans: HashMap<PlanKey, SwitchPlan>,
+    hits: u64,
+    misses: u64,
+}
+
+/// Same parallel topology (pipelines, stages, schedule) up to micro-batch
+/// counts — the dispatcher retunes `num_microbatches` per step, so pool
+/// membership must ignore it.
+fn same_topology(a: &EngineStrategy, b: &EngineStrategy) -> bool {
+    a.schedule == b.schedule
+        && a.pipelines.len() == b.pipelines.len()
+        && a.pipelines
+            .iter()
+            .zip(b.pipelines.iter())
+            .all(|(pa, pb)| pa.stages == pb.stages)
+}
+
+impl StrategyPool {
+    /// Build a pool: one [`ShardLayout`] per strategy, computed once.
+    /// `entries` pairs each strategy with its bucket context.
+    pub fn new(cfg: ManifestConfig, entries: Vec<(EngineStrategy, u64)>) -> Result<StrategyPool> {
+        if entries.is_empty() {
+            return Err(Error::Engine("StrategyPool: no strategies".into()));
+        }
+        let mut out = Vec::with_capacity(entries.len());
+        for (strategy, ctx) in entries {
+            let layout = ShardLayout::build(&cfg, &strategy)?;
+            out.push(PoolEntry { strategy, layout, ctx });
+        }
+        Ok(StrategyPool { cfg, entries: out, plans: HashMap::new(), hits: 0, misses: 0 })
+    }
+
+    /// Number of pooled strategies.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when the pool is empty (never: construction rejects it).
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// A pooled entry.
+    pub fn entry(&self, i: usize) -> &PoolEntry {
+        &self.entries[i]
+    }
+
+    /// All entries.
+    pub fn entries(&self) -> &[PoolEntry] {
+        &self.entries
+    }
+
+    /// Pool index whose topology matches `strategy`, if any.
+    pub fn index_of(&self, strategy: &EngineStrategy) -> Option<usize> {
+        self.entries.iter().position(|e| same_topology(&e.strategy, strategy))
+    }
+
+    /// Plan-cache hits so far (repeated transitions that skipped BSR
+    /// planning).
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Plan-cache misses so far (first-time transitions).
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Drop every cached plan (counters keep running). The cache key
+    /// records *whether* a plan was topology-aware, not which topology —
+    /// callers that swap one attached `Cluster` for a different one
+    /// mid-run must invalidate, or cached sender selection keeps
+    /// optimizing for the old link bandwidths.
+    pub fn clear_plans(&mut self) {
+        self.plans.clear();
+    }
+
+    /// The cached plan for `from → to`, planning it on first use.
+    /// `with_moments` selects whether `m.*`/`v.*` companions ride along;
+    /// `topology_aware` must say whether `bw` is a real topology (both
+    /// are part of the cache key — a pre-step-1 switch moves no moments,
+    /// and a uniform-bandwidth plan must not be replayed once a topology
+    /// is attached).
+    pub fn plan_for(
+        &mut self,
+        from: usize,
+        to: usize,
+        with_moments: bool,
+        topology_aware: bool,
+        bw: &dyn Bandwidth,
+    ) -> Result<&SwitchPlan> {
+        if from >= self.entries.len() || to >= self.entries.len() {
+            return Err(Error::Engine(format!(
+                "plan_for: {from}->{to} out of pool (len {})",
+                self.entries.len()
+            )));
+        }
+        if from == to {
+            return Err(Error::Engine("plan_for: from == to".into()));
+        }
+        let key = (from, to, with_moments, topology_aware);
+        match self.plans.entry(key) {
+            std::collections::hash_map::Entry::Occupied(_) => self.hits += 1,
+            std::collections::hash_map::Entry::Vacant(v) => {
+                v.insert(plan_switch(
+                    &self.cfg,
+                    &self.entries[from].layout,
+                    &self.entries[to].layout,
+                    with_moments,
+                    bw,
+                    &[],
+                )?);
+                self.misses += 1;
+            }
+        }
+        Ok(&self.plans[&key])
+    }
+
+    /// Hot-switch a pool-managed engine to entry `to`, reusing the cached
+    /// plan when this transition has run before. The engine's current
+    /// strategy must match a pool entry (micro-batch counts ignored);
+    /// sender selection uses the engine's attached topology, if any.
+    pub fn switch_engine(&mut self, engine: &mut Engine, to: usize) -> Result<EngineSwitchReport> {
+        let from = self.index_of(&engine.strategy).ok_or_else(|| {
+            Error::Engine(format!(
+                "switch_engine: engine strategy `{}` is not in the pool",
+                engine.strategy.name
+            ))
+        })?;
+        if from == to {
+            return Err(Error::Engine(format!("switch_engine: already on entry {to}")));
+        }
+        // the same coverage guard switch_to_avoiding runs: a topology
+        // that cannot host the target entry must be a typed error, not
+        // an index panic inside the bandwidth callbacks
+        engine.require_topology_coverage(
+            self.entries[to].strategy.max_device_bound().max(engine.mesh.devices.len()),
+        )?;
+        let with_moments = engine.has_moments();
+        let topology_aware = engine.topology.is_some();
+        {
+            let bw: &dyn Bandwidth = match &engine.topology {
+                Some(c) => c,
+                None => &UniformBandwidth,
+            };
+            self.plan_for(from, to, with_moments, topology_aware, bw)?;
+        }
+        let sp = &self.plans[&(from, to, with_moments, topology_aware)];
+        let entry = &self.entries[to];
+        engine.switch_to_planned(entry.strategy.clone(), entry.layout.clone(), sp)
+    }
+
+    /// Spawn an engine on entry `i` (convenience for tests/benches).
+    pub fn spawn_engine(
+        &self,
+        runtime: crate::runtime::Runtime,
+        i: usize,
+        seed: u64,
+        lr: f32,
+    ) -> Result<Engine> {
+        Engine::with_runtime(runtime, self.entries[i].strategy.clone(), seed, lr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native;
+
+    fn tiny_pool() -> StrategyPool {
+        let cfg = native::tiny_config();
+        StrategyPool::new(
+            cfg,
+            vec![
+                (EngineStrategy::uniform("dp2", 2, 1, 1, 8, 1), 4096),
+                (EngineStrategy::uniform("tp2", 1, 2, 1, 8, 2), 32768),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn plan_cache_hits_on_repeated_transitions() {
+        let mut pool = tiny_pool();
+        let m1 =
+            pool.plan_for(0, 1, false, false, &UniformBandwidth).unwrap().plan.num_messages();
+        assert_eq!((pool.hits(), pool.misses()), (0, 1));
+        let m2 =
+            pool.plan_for(0, 1, false, false, &UniformBandwidth).unwrap().plan.num_messages();
+        assert_eq!((pool.hits(), pool.misses()), (1, 1));
+        assert_eq!(m1, m2);
+        // reverse direction, the with-moments variant, and the
+        // topology-aware variant are all distinct cache entries
+        pool.plan_for(1, 0, false, false, &UniformBandwidth).unwrap();
+        pool.plan_for(0, 1, true, false, &UniformBandwidth).unwrap();
+        pool.plan_for(0, 1, false, true, &UniformBandwidth).unwrap();
+        assert_eq!((pool.hits(), pool.misses()), (1, 4));
+    }
+
+    #[test]
+    fn clear_plans_forces_replanning() {
+        let mut pool = tiny_pool();
+        pool.plan_for(0, 1, false, false, &UniformBandwidth).unwrap();
+        pool.clear_plans();
+        pool.plan_for(0, 1, false, false, &UniformBandwidth).unwrap();
+        assert_eq!((pool.hits(), pool.misses()), (0, 2));
+    }
+
+    #[test]
+    fn plan_for_rejects_degenerate_keys() {
+        let mut pool = tiny_pool();
+        assert!(pool.plan_for(0, 0, false, false, &UniformBandwidth).is_err());
+        assert!(pool.plan_for(0, 7, false, false, &UniformBandwidth).is_err());
+    }
+
+    #[test]
+    fn index_matching_ignores_microbatch_counts() {
+        let pool = tiny_pool();
+        let mut probe = pool.entry(0).strategy.clone();
+        probe.pipelines[0].num_microbatches = 17;
+        assert_eq!(pool.index_of(&probe), Some(0));
+        let other = EngineStrategy::uniform("pp2", 1, 1, 2, 8, 1);
+        assert_eq!(pool.index_of(&other), None);
+    }
+}

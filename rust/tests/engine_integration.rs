@@ -591,6 +591,244 @@ fn topology_aware_switch_prefers_intra_node_senders() {
     assert_eq!(sent_total, rep.wire_elems);
 }
 
+// ---------------------------------------------------------------------------
+// The temporal-heterogeneity runtime (ISSUE 3): strategy pool + plan cache,
+// hot-cycle loss continuity, the Hetu-B dispatcher over a mixed-length
+// stream (the measured Fig 15 claim), and ZeRO-1 optimizer sharding.
+
+#[test]
+fn temporal_hot_cycle_matches_never_switching_oracle() {
+    // A→B→A→B→A hot cycling through the pool: same seed and data stream,
+    // so the switching engine must stay on the never-switching oracle's
+    // loss trajectory after every re-entry — and the second A→B / B→A
+    // transitions must hit the pairwise plan cache.
+    use hetu::temporal::StrategyPool;
+    let a = || EngineStrategy::uniform("dp2", 2, 1, 1, 8, 1); // 2 mbs/step
+    let b = || EngineStrategy::uniform("pp2", 1, 1, 2, 8, 2); // 2 mbs/step
+    let cfg = native::tiny_config();
+
+    let mut oracle = native_engine(a(), 42, 1e-3);
+    let mut c_ref = SyntheticCorpus::new(31, cfg.vocab);
+    let ol = train_losses(&mut oracle, 6, &mut c_ref);
+
+    let mut pool = StrategyPool::new(cfg, vec![(a(), 4096), (b(), 32768)]).unwrap();
+    let mut eng = native_engine(a(), 42, 1e-3);
+    let mut c_sw = SyntheticCorpus::new(31, cfg.vocab);
+    let mut sl = train_losses(&mut eng, 2, &mut c_sw);
+    pool.switch_engine(&mut eng, 1).unwrap(); // A→B (plan miss)
+    sl.extend(train_losses(&mut eng, 1, &mut c_sw));
+    pool.switch_engine(&mut eng, 0).unwrap(); // B→A (plan miss)
+    sl.extend(train_losses(&mut eng, 1, &mut c_sw));
+    pool.switch_engine(&mut eng, 1).unwrap(); // A→B (cache hit)
+    sl.extend(train_losses(&mut eng, 1, &mut c_sw));
+    pool.switch_engine(&mut eng, 0).unwrap(); // B→A (cache hit)
+    sl.extend(train_losses(&mut eng, 1, &mut c_sw));
+
+    assert_eq!((pool.hits(), pool.misses()), (2, 2), "repeated transitions reuse plans");
+    for (i, (x, y)) in ol.iter().zip(sl.iter()).enumerate() {
+        assert!(
+            (x - y).abs() < 5e-3,
+            "step {i}: hot cycle diverged from oracle: {x} vs {y} ({ol:?} vs {sl:?})"
+        );
+    }
+}
+
+/// A hand-built mixed-length stream with a known bucket cadence:
+/// short / long / short / mid / short / long / short runs.
+fn cadenced_stream() -> Vec<hetu::data::StepBatch> {
+    let mk = |lens: Vec<u64>| {
+        let total_tokens = lens.iter().sum();
+        hetu::data::StepBatch { seq_lens: lens, total_tokens }
+    };
+    let short = || mk(vec![2048; 48]); // max 2K → 4K bucket
+    let mid = || {
+        let mut v = vec![2048u64; 42];
+        v.push(12_000); // max 12K → 16K bucket
+        mk(v)
+    };
+    let long = || {
+        let mut v = vec![2048u64; 38];
+        v.push(20_000); // max 20K → 32K bucket
+        mk(v)
+    };
+    let mut stream = vec![];
+    for _ in 0..4 {
+        stream.push(short());
+    }
+    for _ in 0..3 {
+        stream.push(long());
+    }
+    for _ in 0..3 {
+        stream.push(short());
+    }
+    for _ in 0..3 {
+        stream.push(mid());
+    }
+    for _ in 0..3 {
+        stream.push(short());
+    }
+    for _ in 0..3 {
+        stream.push(long());
+    }
+    for _ in 0..3 {
+        stream.push(short());
+    }
+    stream
+}
+
+#[test]
+fn temporal_hetu_b_stream_beats_best_feasible_static() {
+    // The tentpole acceptance: a pool of 3 lowered strategies driven by
+    // the Hetu-B dispatcher over a 22-step mixed-length stream completes
+    // with loss continuity across every switch, hits the plan cache on
+    // repeated transitions, and its amortized per-step time (makespans +
+    // non-overlapped switch seconds) beats the best single static
+    // strategy that can host the stream — Fig 15, measured.
+    use hetu::costmodel::{CostModel, ModelCfg};
+    use hetu::runtime::Runtime;
+    use hetu::temporal::{default_pool_entries, DispatchPolicy, Dispatcher, StrategyPool};
+
+    let cfg = native::tiny_config();
+    let stream = cadenced_stream();
+    assert!(stream.len() >= 20);
+    let cm = CostModel::new(ModelCfg::llama_32b());
+    let disp = Dispatcher::new(cm, DispatchPolicy::HetuB);
+    let entries = default_pool_entries(&cfg).unwrap();
+
+    // dynamic: the full pool
+    let mut pool = StrategyPool::new(cfg, entries.clone()).unwrap();
+    let mut eng = pool.spawn_engine(Runtime::native(cfg), 0, 42, 3e-3).unwrap();
+    let mut corpus = SyntheticCorpus::new(17, cfg.vocab);
+    let dynamic = disp.run_stream(&mut eng, &mut pool, &stream, &mut corpus).unwrap();
+
+    assert_eq!(dynamic.steps.len(), stream.len());
+    assert_eq!(
+        dynamic.entries_used(),
+        (0..3).collect::<std::collections::BTreeSet<usize>>(),
+        "all three pooled strategies must execute"
+    );
+    assert!(dynamic.switches >= 4, "cadence must hot-switch: {}", dynamic.switches);
+    assert!(
+        dynamic.cache_hits >= 1,
+        "repeated transitions must hit the plan cache ({} switches, {} hits)",
+        dynamic.switches,
+        dynamic.cache_hits
+    );
+    // loss continuity across every switch: finite, and no jump at a
+    // switched step beyond early-training drift
+    for w in dynamic.steps.windows(2) {
+        let (prev, cur) = (&w[0], &w[1]);
+        assert!(cur.loss.is_finite());
+        if cur.switched {
+            assert!(
+                (cur.loss - prev.loss).abs() < 1.0,
+                "step {}: loss jumped across switch: {} -> {}",
+                cur.step,
+                prev.loss,
+                cur.loss
+            );
+        }
+    }
+    // ...and training still converges through 6 hot switches
+    let head: f32 =
+        dynamic.steps[..5].iter().map(|s| s.loss).sum::<f32>() / 5.0;
+    let tail: f32 =
+        dynamic.steps[stream.len() - 5..].iter().map(|s| s.loss).sum::<f32>() / 5.0;
+    assert!(tail < head, "loss must improve across the stream: {head} -> {tail}");
+
+    // static baselines: only the 32K entry can host the 20K sequences;
+    // the dynamic engine must beat it on total measured time
+    let long_entry = vec![entries[2].clone()];
+    let mut pool_s = StrategyPool::new(cfg, long_entry).unwrap();
+    let mut eng_s = pool_s.spawn_engine(Runtime::native(cfg), 0, 42, 3e-3).unwrap();
+    let mut corpus_s = SyntheticCorpus::new(17, cfg.vocab);
+    let static_long = disp.run_stream(&mut eng_s, &mut pool_s, &stream, &mut corpus_s).unwrap();
+    assert_eq!(static_long.switches, 0);
+    assert!(
+        stream.iter().all(|b| b.max_len() <= entries[2].1),
+        "the wide static strategy must host the whole stream"
+    );
+    assert!(
+        dynamic.total_microbatches() < static_long.total_microbatches(),
+        "length-aware dispatch must save quota: {} vs {}",
+        dynamic.total_microbatches(),
+        static_long.total_microbatches()
+    );
+    assert!(
+        dynamic.total_s() < static_long.total_s(),
+        "amortized switching engine must beat the best feasible static: {:.4}s vs {:.4}s",
+        dynamic.total_s(),
+        static_long.total_s()
+    );
+}
+
+#[test]
+fn zero1_matches_replicated_and_shards_moment_memory() {
+    // ZeRO-1 over the DP axis: bit-compatible trajectory (elementwise
+    // AdamW over slice-synced gradients), exactly one moment copy per
+    // replica set, and the strategy/memory.rs accounting matches the
+    // engine's actual stores — including across a hot switch cycle.
+    use hetu::strategy::memory::engine_moment_elems;
+
+    fn stored_moment_elems(eng: &Engine) -> u64 {
+        let mut total = 0u64;
+        for dev in &eng.mesh.devices {
+            for k in dev.keys() {
+                if k.starts_with("m.") {
+                    total += dev.get(&k).unwrap().len() as u64;
+                }
+            }
+        }
+        total
+    }
+
+    let cfg = native::tiny_config();
+    let dp2 = || EngineStrategy::uniform("dp2", 2, 1, 1, 8, 1);
+    let tp2 = || EngineStrategy::uniform("tp2", 1, 2, 1, 8, 2);
+
+    let mut rep = native_engine(dp2(), 42, 1e-3);
+    let mut z1 = native_engine(dp2(), 42, 1e-3);
+    z1.set_zero1(true).unwrap();
+    let mut c1 = SyntheticCorpus::new(13, cfg.vocab);
+    let mut c2 = SyntheticCorpus::new(13, cfg.vocab);
+    let rl = train_losses(&mut rep, 3, &mut c1);
+    let zl = train_losses(&mut z1, 3, &mut c2);
+    for (i, (a, b)) in rl.iter().zip(zl.iter()).enumerate() {
+        assert!((a - b).abs() < 1e-6, "step {i}: zero1 diverged: {a} vs {b}");
+    }
+
+    // memory accounting: measured == predicted, and dp2 halves exactly
+    let m_rep = stored_moment_elems(&rep);
+    let m_z1 = stored_moment_elems(&z1);
+    assert_eq!(m_rep, engine_moment_elems(&cfg, &rep.layout, false));
+    assert_eq!(m_z1, engine_moment_elems(&cfg, &z1.layout, true));
+    assert_eq!(m_z1 * 2, m_rep, "ZeRO-1 over dp2 stores exactly one moment copy");
+
+    // zero1 can't be toggled once moments exist
+    assert!(rep.set_zero1(true).is_err());
+
+    // hot switch with sharded moments: gather → move → re-shard, staying
+    // on the replicated switching engine's trajectory
+    rep.switch_to(tp2()).unwrap();
+    z1.switch_to(tp2()).unwrap();
+    let rl2 = train_losses(&mut rep, 2, &mut c1);
+    let zl2 = train_losses(&mut z1, 2, &mut c2);
+    for (i, (a, b)) in rl2.iter().zip(zl2.iter()).enumerate() {
+        assert!((a - b).abs() < 1e-5, "post-switch step {i}: {a} vs {b}");
+    }
+    assert_eq!(
+        stored_moment_elems(&z1),
+        engine_moment_elems(&cfg, &z1.layout, true),
+        "moment accounting holds after re-sharding under the new layout"
+    );
+    rep.switch_to(dp2()).unwrap();
+    z1.switch_to(dp2()).unwrap();
+    let rl3 = train_losses(&mut rep, 1, &mut c1);
+    let zl3 = train_losses(&mut z1, 1, &mut c2);
+    assert!((rl3[0] - zl3[0]).abs() < 1e-5, "re-entry: {} vs {}", rl3[0], zl3[0]);
+    assert_eq!(stored_moment_elems(&z1) * 2, stored_moment_elems(&rep));
+}
+
 #[test]
 fn step_leaves_no_transient_activation_state() {
     let s = EngineStrategy::uniform("pp2", 1, 1, 2, 8, 4)

@@ -267,6 +267,116 @@ fn prop_simulated_step_time_conserves_rank_budget() {
 }
 
 #[test]
+fn prop_bucketize_conserves_tokens_with_monotone_bounds() {
+    use hetu::data::{bucketize, sample_step, Corpus};
+    check("bucketize invariants", 200, |rng| {
+        let corpus = if rng.chance(0.5) { Corpus::CommonCrawl } else { Corpus::GitHub };
+        let b = sample_step(rng, corpus, 50_000, 32_768);
+        let bounds = [4096u64, 16_384, 32_768];
+        let buckets = bucketize(&b.seq_lens, &bounds);
+        if buckets.len() != bounds.len() {
+            return Err("bucket count != bound count".into());
+        }
+        // token conservation: the buckets partition the batch exactly
+        let n: usize = buckets.iter().map(|v| v.len()).sum();
+        if n != b.seq_lens.len() {
+            return Err(format!("{n} bucketed of {} sequences", b.seq_lens.len()));
+        }
+        let toks: u64 = buckets.iter().flat_map(|v| v.iter()).sum();
+        if toks != b.total_tokens {
+            return Err(format!("tokens {toks} != batch total {}", b.total_tokens));
+        }
+        // bucket boundaries are monotone: bucket i holds exactly the
+        // lengths in (bounds[i-1], bounds[i]]
+        for (i, bucket) in buckets.iter().enumerate() {
+            for &l in bucket {
+                if i > 0 && l <= bounds[i - 1] {
+                    return Err(format!("len {l} below bucket {i} lower bound"));
+                }
+                if i + 1 < bounds.len() && l > bounds[i] {
+                    return Err(format!("len {l} above bucket {i} upper bound"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dispatch_hetu_b_conserves_and_respects_max_context() {
+    use hetu::data::{dispatch_hetu_b, sample_step, Corpus, PipeClass};
+    check("hetu-b dispatch invariants", 200, |rng| {
+        let corpus = if rng.chance(0.5) { Corpus::CommonCrawl } else { Corpus::GitHub };
+        let max_len = 32_768u64;
+        let b = sample_step(rng, corpus, 50_000, max_len);
+        // 2–4 pipelines; at least one can host the longest sequence, so
+        // the eligibility rule (not the overflow fallback) is exercised
+        let n = rng.range(2, 4);
+        let mut classes: Vec<PipeClass> = (0..n)
+            .map(|_| PipeClass {
+                max_seq: *rng.pick(&[4096u64, 8192, 16_384, 32_768]),
+                tokens_per_s: *rng.pick(&[1.0f64, 2.0, 4.0]),
+            })
+            .collect();
+        classes[0].max_seq = max_len;
+        let assign = dispatch_hetu_b(&b.seq_lens, &classes);
+        if assign.len() != classes.len() {
+            return Err("assignment count != class count".into());
+        }
+        // conservation: every sequence lands exactly once
+        let count: usize = assign.iter().map(|v| v.len()).sum();
+        if count != b.seq_lens.len() {
+            return Err(format!("{count} assigned of {} sequences", b.seq_lens.len()));
+        }
+        let toks: u64 = assign.iter().flat_map(|v| v.iter()).sum();
+        if toks != b.total_tokens {
+            return Err(format!("tokens {toks} != batch total {}", b.total_tokens));
+        }
+        // no sequence past its pipeline's max context
+        for (i, (seqs, c)) in assign.iter().zip(classes.iter()).enumerate() {
+            if let Some(&l) = seqs.iter().find(|&&l| l > c.max_seq) {
+                return Err(format!("pipeline {i}: len {l} > max_seq {}", c.max_seq));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dispatcher_quota_apportioning_is_exact() {
+    use hetu::costmodel::{CostModel, ModelCfg};
+    use hetu::data::{sample_step, Corpus};
+    use hetu::runtime::native;
+    use hetu::temporal::{default_pool_entries, DispatchPolicy, Dispatcher, StrategyPool};
+    let cfg = native::tiny_config();
+    let pool = StrategyPool::new(cfg, default_pool_entries(&cfg).unwrap()).unwrap();
+    let disp = Dispatcher::new(CostModel::new(ModelCfg::llama_32b()), DispatchPolicy::HetuB);
+    check("dispatcher quota apportioning", 100, |rng| {
+        let b = sample_step(rng, Corpus::CommonCrawl, 50_000, 32_768);
+        for i in 0..pool.len() {
+            let entry = pool.entry(i);
+            let counts = disp.microbatch_counts(entry, &b).map_err(|e| e.to_string())?;
+            if counts.len() != entry.strategy.pipelines.len() {
+                return Err("count per pipeline".into());
+            }
+            if counts.iter().any(|&c| c == 0) {
+                return Err("pipeline starved of micro-batches".into());
+            }
+            let total: usize = counts.iter().sum();
+            if total > disp.max_microbatches.max(entry.strategy.pipelines.len()) {
+                return Err(format!("quota {total} above clamp"));
+            }
+            // determinism: the same batch always apportions identically
+            let again = disp.microbatch_counts(entry, &b).map_err(|e| e.to_string())?;
+            if again != counts {
+                return Err("nondeterministic apportioning".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_uniform_round_trips_through_strategy_lowering() {
     use hetu::engine::EngineStrategy;
     use hetu::runtime::native;
