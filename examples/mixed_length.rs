@@ -26,7 +26,7 @@ fn main() -> hetu::Result<()> {
         let batch = sample_step(&mut rng, Corpus::CommonCrawl, 200_000, 32768);
         let under8k = batch.seq_lens.iter().filter(|&&l| l < 8192).count() as f64
             / batch.seq_lens.len() as f64;
-        let packed = pack_sequences(&batch.seq_lens, 32768);
+        let packed = pack_sequences(&batch.seq_lens, 32768).len() as u64;
         let buckets = bucketize(&batch.seq_lens, &[4096, 16384, 32768]);
         let dispatch = dispatch_hetu_b(
             &batch.seq_lens,

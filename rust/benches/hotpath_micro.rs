@@ -181,4 +181,34 @@ fn main() {
         pool.switch_engine(&mut eng3, 1).unwrap();
         std::hint::black_box(pool.switch_engine(&mut eng3, 0).unwrap().wire_elems);
     });
+    // cache hits are allocation-free: plan_for hands out the pooled
+    // Arc<SwitchPlan> by refcount — no FusedBsrPlan/ShardLayout clones on
+    // the steady-state switch path (the hot-switch constant-factor fix
+    // this row guards; both keys are warm after the cycles above)
+    report("pool plan_for cache hit (Arc handout)", it(5000), || {
+        std::hint::black_box(
+            pool.plan_for(0, 1, true, false, &hetu::comm::UniformBandwidth)
+                .unwrap()
+                .plan
+                .num_messages(),
+        );
+    });
+
+    // ragged engine step: the dispatcher's real packed windows (6 × [2,2]
+    // micro-batches per DP pipeline) vs the fixed-shape row above — the
+    // variable-shape interpreter path the temporal runtime drives
+    let ragged_strat = EngineStrategy::uniform("dp2-ragged", 2, 1, 1, tiny.layers, 1);
+    let mut eng4 = Engine::with_runtime(Runtime::native(tiny), ragged_strat, 42, 1e-3).unwrap();
+    let windows: Vec<Vec<hetu::engine::WindowShape>> = (0..2)
+        .map(|_| {
+            (0..6).map(|_| hetu::engine::WindowShape { rows: vec![2, 2], seq_len: 2 }).collect()
+        })
+        .collect();
+    eng4.set_microbatches(&windows).unwrap();
+    let mut corpus4 = SyntheticCorpus::new(13, tiny.vocab);
+    report("engine train_step dp2 ragged 12x[2,2]", it(10), || {
+        std::hint::black_box(
+            eng4.train_step(&mut |p, m| corpus4.window_for(&windows[p][m])).unwrap().loss,
+        );
+    });
 }

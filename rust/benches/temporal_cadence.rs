@@ -1,15 +1,20 @@
 //! Bench: the temporal runtime — fig15-style *measured* engine cells
 //! (amortized per-step time of each static strategy vs. the Hetu-A/B
-//! switching engines over a synthetic CommonCrawl stream) plus the
-//! hot-switch cadence micro: cold (plan + execute) vs. warm
-//! (plan-cache hit, per-sender batched delivery) A↔B switch cycles.
+//! switching engines over a synthetic CommonCrawl stream, executed as
+//! real ragged windows), a ragged-dispatch cadence that *asserts* no
+//! padded-context fallback path executes, plus the hot-switch cadence
+//! micro: cold (plan + execute) vs. warm (plan-cache hit, per-sender
+//! batched delivery) A↔B switch cycles.
 //!
-//! `--test` (the CI smoke mode) runs a 3-step stream and two switch
-//! cycles, proving the subsystem executes end-to-end.
+//! `--test` (the CI smoke mode) runs a 3-step stream, the ragged-cadence
+//! assertions, and two switch cycles, proving the subsystem executes
+//! end-to-end.
 
 use hetu::coordinator::SyntheticCorpus;
+use hetu::costmodel::{CostModel, ModelCfg};
+use hetu::data::StepBatch;
 use hetu::runtime::{native, Runtime};
-use hetu::temporal::{default_pool_entries, StrategyPool};
+use hetu::temporal::{default_pool_entries, DispatchPolicy, Dispatcher, StrategyPool};
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--test");
@@ -21,6 +26,41 @@ fn main() {
     let t0 = std::time::Instant::now();
     let table = hetu::figures::fig15_engine(steps).expect("fig15_engine");
     println!("{}", table.markdown());
+
+    // ragged-dispatch cadence: drive Hetu-B over a short/long/short
+    // cadence and assert the engine executed the batches' real packed
+    // windows — hot switches fire, every step carries measured ragged
+    // tokens, and NO padded-context fallback position executes
+    let tiny = native::tiny_config();
+    let mk = |lens: Vec<u64>| {
+        let total_tokens = lens.iter().sum();
+        StepBatch { seq_lens: lens, total_tokens }
+    };
+    let mut long = vec![2048u64; 20];
+    long.push(20_000);
+    let cadence = vec![mk(vec![2048; 24]), mk(long), mk(vec![2048; 24])];
+    let mut rpool = StrategyPool::new(tiny, default_pool_entries(&tiny).unwrap()).unwrap();
+    let mut reng = rpool.spawn_engine(Runtime::native(tiny), 0, 7, 1e-3).unwrap();
+    let disp = Dispatcher::new(CostModel::new(ModelCfg::llama_32b()), DispatchPolicy::HetuB);
+    let mut rcorpus = SyntheticCorpus::new(3, tiny.vocab);
+    let rep = disp.run_stream(&mut reng, &mut rpool, &cadence, &mut rcorpus).expect("ragged cadence");
+    assert!(rep.switches >= 2, "cadence must hot-switch, got {}", rep.switches);
+    assert!(
+        rep.steps.iter().all(|s| s.windows > 0 && s.tokens > 0),
+        "every step must execute measured ragged windows"
+    );
+    assert_eq!(
+        rep.total_padded(),
+        0,
+        "no padded-context fallback path may execute on dispatched windows"
+    );
+    println!(
+        "ragged cadence: {} steps, {} switches, {} windows, {} engine tokens, 0 padded",
+        rep.steps.len(),
+        rep.switches,
+        rep.total_windows(),
+        rep.total_tokens()
+    );
 
     // switch cadence: repeated short↔long transitions through the cache
     let tiny = native::tiny_config();

@@ -93,7 +93,7 @@ pub fn step_time(
             continue;
         }
         // pack bucket sequences into upper-length windows
-        let samples = crate::data::pack_sequences(seqs, cfg.upper);
+        let samples = crate::data::pack_sequences(seqs, cfg.upper).len() as u64;
         let s = bucket_strategy(cluster, *cfg, cm.model.layers, samples)?;
         total += simulate_step(cluster, cm, &s)?.step_s;
         if let Some(p) = prev {
@@ -139,7 +139,7 @@ mod tests {
 
         // Megatron packed baseline: everything packed to 32K and run under
         // the long-sequence uniform strategy.
-        let packed = crate::data::pack_sequences(&batch.seq_lens, 32768);
+        let packed = crate::data::pack_sequences(&batch.seq_lens, 32768).len() as u64;
         let cfg = crate::baselines::megatron::table9(32768).unwrap();
         let s = crate::baselines::megatron::strategy(&cluster, cfg, 60, packed, 32768).unwrap();
         let t_packed = simulate_step(&cluster, &cm, &s).unwrap().step_s;

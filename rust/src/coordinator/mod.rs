@@ -3,7 +3,7 @@
 
 use crate::cluster::Cluster;
 use crate::config::RunConfig;
-use crate::engine::{Engine, EngineStrategy, MicroBatch, StepStats};
+use crate::engine::{Engine, EngineStrategy, MicroBatch, StepStats, WindowShape};
 use crate::testutil::Rng;
 use crate::{Error, Result};
 
@@ -50,25 +50,43 @@ impl SyntheticCorpus {
         SyntheticCorpus { rng, vocab: vocab as i32, motifs }
     }
 
-    /// One `[b, s]` micro-batch (tokens + shifted targets).
+    /// One `[b, s]` micro-batch (tokens + shifted targets, no padding).
     pub fn microbatch(&mut self, b: usize, s: usize) -> MicroBatch {
-        let mut inp = Vec::with_capacity(b * s);
-        let mut tgt = Vec::with_capacity(b * s);
-        for _ in 0..b {
+        self.window(&vec![s; b], s)
+    }
+
+    /// One ragged `[rows.len(), seq_len]` micro-batch: row `i` carries
+    /// `rows[i]` real tokens of motif stream and is right-padded with
+    /// token 0 / target `-1` (the padding mask) up to `seq_len`. With
+    /// every row full this is exactly [`SyntheticCorpus::microbatch`] —
+    /// same rng draws, same data.
+    pub fn window(&mut self, rows: &[usize], seq_len: usize) -> MicroBatch {
+        let n = rows.len() * seq_len;
+        let mut inp = Vec::with_capacity(n);
+        let mut tgt = Vec::with_capacity(n);
+        for &rl in rows {
+            let rl = rl.min(seq_len);
             let motif = self.rng.pick(&self.motifs).clone();
             let phase = self.rng.range(0, MOTIF_LEN - 1);
-            let mut row = Vec::with_capacity(s + 1);
-            for i in 0..s + 1 {
+            let mut row = Vec::with_capacity(rl + 1);
+            for i in 0..rl + 1 {
                 if self.rng.chance(0.02) {
                     row.push(self.rng.below(self.vocab as u64) as i32);
                 } else {
                     row.push(motif[(i + phase) % MOTIF_LEN]);
                 }
             }
-            inp.extend_from_slice(&row[..s]);
-            tgt.extend_from_slice(&row[1..s + 1]);
+            inp.extend_from_slice(&row[..rl]);
+            tgt.extend_from_slice(&row[1..rl + 1]);
+            inp.extend(std::iter::repeat(0).take(seq_len - rl));
+            tgt.extend(std::iter::repeat(-1).take(seq_len - rl));
         }
-        MicroBatch { tokens: inp, targets: tgt }
+        MicroBatch { tokens: inp, targets: tgt, n_seqs: rows.len(), seq_len }
+    }
+
+    /// The micro-batch for one prescribed [`WindowShape`] slot.
+    pub fn window_for(&mut self, shape: &WindowShape) -> MicroBatch {
+        self.window(&shape.rows, shape.seq_len)
     }
 }
 

@@ -54,13 +54,15 @@ impl StepBatch {
 }
 
 /// Sample sequences until the token budget (paper: 200K tokens/step) is
-/// reached.
+/// reached. The final sequence is clamped to whatever budget remains, so
+/// `total_tokens == token_budget` exactly (the last sequence may be
+/// shorter than the 16-token sampling floor, but never zero: the loop
+/// only runs while at least one token of budget remains).
 pub fn sample_step(rng: &mut Rng, corpus: Corpus, token_budget: u64, max_len: u64) -> StepBatch {
     let mut seq_lens = vec![];
     let mut total = 0u64;
     while total < token_budget {
-        let l = corpus.sample_len(rng, max_len);
-        let l = l.min(token_budget - total).max(16);
+        let l = corpus.sample_len(rng, max_len).min(token_budget - total);
         seq_lens.push(l);
         total += l;
     }
@@ -68,28 +70,44 @@ pub fn sample_step(rng: &mut Rng, corpus: Corpus, token_budget: u64, max_len: u6
 }
 
 /// Greedy first-fit packing into `ctx`-token windows (the DeepSpeed /
-/// Megatron baseline). Returns the number of packed windows; overlong
-/// sequences are truncated to `ctx` (the paper's baseline setting).
-pub fn pack_sequences(seq_lens: &[u64], ctx: u64) -> u64 {
-    let mut bins: Vec<u64> = vec![]; // remaining capacity per bin
+/// Megatron baseline). Returns the actual window *contents* — per-window
+/// sequence-length lists in first-fit order (`.len()` is the old bin
+/// count); overlong sequences are truncated to `ctx` (the paper's
+/// baseline setting), so every window's fill is ≤ `ctx`.
+pub fn pack_sequences(seq_lens: &[u64], ctx: u64) -> Vec<Vec<u64>> {
+    let mut caps: Vec<u64> = vec![]; // remaining capacity per window
+    let mut windows: Vec<Vec<u64>> = vec![];
     for &l in seq_lens {
         let l = l.min(ctx);
-        match bins.iter_mut().find(|cap| **cap >= l) {
-            Some(cap) => *cap -= l,
-            None => bins.push(ctx - l),
+        match caps.iter().position(|&cap| cap >= l) {
+            Some(i) => {
+                caps[i] -= l;
+                windows[i].push(l);
+            }
+            None => {
+                caps.push(ctx - l);
+                windows.push(vec![l]);
+            }
         }
     }
-    bins.len() as u64
+    windows
 }
 
 /// Length-interval bucketing (HotSPa / Hetu-A). `bounds` are the interval
 /// upper edges, ascending (e.g. `[4K, 16K, 32K]`); returns per-bucket
-/// sequence lists.
+/// sequence lists. A sequence above the top bound is truncated to it (the
+/// baseline truncation rule, as in [`pack_sequences`]), so every bucket
+/// honors its upper edge.
 pub fn bucketize(seq_lens: &[u64], bounds: &[u64]) -> Vec<Vec<u64>> {
     let mut out: Vec<Vec<u64>> = vec![vec![]; bounds.len()];
+    if bounds.is_empty() {
+        return out;
+    }
     for &l in seq_lens {
-        let b = bounds.iter().position(|&hi| l <= hi).unwrap_or(bounds.len() - 1);
-        out[b].push(l);
+        match bounds.iter().position(|&hi| l <= hi) {
+            Some(b) => out[b].push(l),
+            None => out[bounds.len() - 1].push(*bounds.last().unwrap()),
+        }
     }
     out
 }
@@ -190,11 +208,16 @@ mod tests {
     fn step_batch_hits_token_budget() {
         check("step batch budget", 50, |rng| {
             let b = sample_step(rng, Corpus::CommonCrawl, 200_000, 32768);
-            if b.total_tokens < 200_000 || b.total_tokens > 200_000 + 32768 {
+            // the budget invariant is exact: the final sequence is clamped
+            // to the remaining budget, never padded back up
+            if b.total_tokens != 200_000 {
                 return Err(format!("budget missed: {}", b.total_tokens));
             }
-            if b.seq_lens.iter().any(|&l| l == 0) {
-                return Err("zero-length sequence".into());
+            if b.seq_lens.iter().sum::<u64>() != b.total_tokens {
+                return Err("total_tokens out of sync with seq_lens".into());
+            }
+            if b.seq_lens.iter().any(|&l| l == 0 || l > 32768) {
+                return Err("sequence outside (0, max_len]".into());
             }
             Ok(())
         });
@@ -205,16 +228,18 @@ mod tests {
         // packing n sequences of ctx/2 + eps each → about n bins of 2... use
         // exact: lengths ctx/2 pack two per bin.
         let lens = vec![16384u64; 10];
-        assert_eq!(pack_sequences(&lens, 32768), 5);
+        let windows = pack_sequences(&lens, 32768);
+        assert_eq!(windows.len(), 5);
+        assert!(windows.iter().all(|w| w == &vec![16384u64, 16384]));
         // one overlong sequence truncates into one bin
-        assert_eq!(pack_sequences(&[100_000], 32768), 1);
+        assert_eq!(pack_sequences(&[100_000], 32768), vec![vec![32768u64]]);
     }
 
     #[test]
     fn packing_lower_bound() {
         check("packing >= ceil(total/ctx)", 100, |rng| {
             let b = sample_step(rng, Corpus::GitHub, 100_000, 16384);
-            let bins = pack_sequences(&b.seq_lens, 16384);
+            let bins = pack_sequences(&b.seq_lens, 16384).len() as u64;
             let lb = b.seq_lens.iter().map(|&l| l.min(16384)).sum::<u64>().div_ceil(16384);
             if bins < lb {
                 return Err(format!("bins {bins} < lower bound {lb}"));
@@ -226,17 +251,33 @@ mod tests {
     #[test]
     fn buckets_partition_sequences() {
         check("bucketize partition", 50, |rng| {
+            let bounds = [4096u64, 16384, 32768];
             let b = sample_step(rng, Corpus::CommonCrawl, 100_000, 32768);
-            let buckets = bucketize(&b.seq_lens, &[4096, 16384, 32768]);
+            let buckets = bucketize(&b.seq_lens, &bounds);
             let n: usize = buckets.iter().map(|v| v.len()).sum();
             if n != b.seq_lens.len() {
                 return Err("lost sequences".into());
             }
-            if buckets[0].iter().any(|&l| l > 4096) {
-                return Err("bucket 0 has long sequence".into());
+            // the bucket invariant: every bucket honors its upper edge
+            for (i, bucket) in buckets.iter().enumerate() {
+                if let Some(&l) = bucket.iter().find(|&&l| l > bounds[i]) {
+                    return Err(format!("bucket {i}: len {l} above bound {}", bounds[i]));
+                }
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn bucketize_truncates_over_bound_sequences_to_top_edge() {
+        // the old code dropped a 40K sequence into the top bucket at its
+        // full length, violating that bucket's 32K upper edge; the
+        // baseline rule truncates it instead
+        let bounds = [4096u64, 16384, 32768];
+        let buckets = bucketize(&[2000, 40_000, 33_000, 32_768], &bounds);
+        assert_eq!(buckets[0], vec![2000]);
+        assert!(buckets[1].is_empty());
+        assert_eq!(buckets[2], vec![32_768, 32_768, 32_768]);
     }
 
     #[test]

@@ -191,8 +191,11 @@ impl Engine {
         mb: usize,
         batch: &MicroBatch,
     ) -> Result<f64> {
-        let cfg = self.runtime.config;
-        let (b, s) = (cfg.batch, cfg.seq);
+        // ragged: the micro-batch carries its own [n_seqs, seq_len] shape
+        // (§5.5 symbolic shapes) — the native artifacts bind it per call,
+        // so attention and the measured task seconds cost the *true*
+        // window length, not the compiled padded context
+        let (b, s) = (batch.n_seqs, batch.seq_len);
         let stage = &pipe.stages[si];
         let akey = format!("act.mb{mb}");
         let t_task = Instant::now();
@@ -262,8 +265,7 @@ impl Engine {
         mb: usize,
         batch: &MicroBatch,
     ) -> Result<(f64, Option<(f32, u64)>)> {
-        let cfg = self.runtime.config;
-        let (b, s) = (cfg.batch, cfg.seq);
+        let (b, s) = (batch.n_seqs, batch.seq_len); // ragged per-window shape
         let stage = &pipe.stages[si];
         let last = pipe.stages.len() - 1;
         let akey = format!("act.mb{mb}");
@@ -273,7 +275,10 @@ impl Engine {
         let mut head_out = None;
 
         if si == last {
-            let tokens = batch.tokens.len() as u64;
+            // token weighting counts *real* (unmasked) positions: padded
+            // tails contribute no loss and no gradient, so they must not
+            // dilute the global mean either
+            let tokens = batch.real_tokens();
             let w = tokens as f32;
             let root = stage.devices[0];
             let tgt = HostTensor::i32(vec![b, s], batch.targets.clone())?;

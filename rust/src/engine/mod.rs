@@ -23,6 +23,8 @@ pub mod layout;
 pub mod optim;
 pub mod switch;
 
+use std::sync::Arc;
+
 use crate::cluster::Cluster;
 use crate::collectives::Mesh;
 use crate::runtime::{ManifestConfig, Runtime};
@@ -160,13 +162,76 @@ impl EngineStrategy {
     }
 }
 
-/// A training batch for one micro-batch: `[B, S]` token/target ids.
+/// A training batch for one *ragged* micro-batch: `[n_seqs, seq_len]`
+/// token/target ids. Each row is one packed data window; rows may be
+/// right-padded, with padding marked by target `-1` (the padding mask) —
+/// masked positions contribute no loss and no gradient, and the loss
+/// normalizes over real positions only, so a padded batch is numerically
+/// identical to executing every window at its true length (asserted in
+/// `rust/tests/engine_integration.rs`).
 #[derive(Clone, Debug)]
 pub struct MicroBatch {
-    /// Input token ids.
+    /// Input token ids, row-major `[n_seqs, seq_len]` (pad positions hold
+    /// token 0 — masked from loss, so the id is arbitrary).
     pub tokens: Vec<i32>,
-    /// Next-token targets.
+    /// Next-token targets; `-1` marks a padded position.
     pub targets: Vec<i32>,
+    /// Rows (packed windows) in this micro-batch.
+    pub n_seqs: usize,
+    /// Row width in tokens (the longest window; shorter rows are padded).
+    pub seq_len: usize,
+}
+
+impl MicroBatch {
+    /// Real (unmasked) token positions.
+    pub fn real_tokens(&self) -> u64 {
+        self.targets.iter().filter(|&&t| t >= 0).count() as u64
+    }
+
+    /// All positions, padding included (`n_seqs · seq_len`).
+    pub fn positions(&self) -> u64 {
+        (self.n_seqs * self.seq_len) as u64
+    }
+}
+
+/// The shape contract of one ragged engine micro-batch (the §5.5 symbolic
+/// shape the temporal dispatcher prescribes per step): each entry of
+/// `rows` is one packed window's real length in engine tokens; rows
+/// shorter than `seq_len` are right-padded and masked.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WindowShape {
+    /// Per-row real window lengths.
+    pub rows: Vec<usize>,
+    /// Row width (`max(rows)`; shorter rows pad up to it).
+    pub seq_len: usize,
+}
+
+impl WindowShape {
+    /// Rows in the micro-batch.
+    pub fn n_seqs(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Real token cells across the rows.
+    pub fn real_cells(&self) -> usize {
+        self.rows.iter().sum()
+    }
+
+    /// Well-formedness: at least one row and every row in `1..=seq_len`
+    /// (a width beyond the longest row is legal — it is just padding, and
+    /// padding is masked).
+    pub fn validate(&self) -> Result<()> {
+        if self.rows.is_empty() {
+            return Err(Error::Engine("window shape: no rows".into()));
+        }
+        if self.rows.iter().any(|&r| r == 0 || r > self.seq_len) {
+            return Err(Error::Engine(format!(
+                "window shape: rows {:?} outside (0, {}]",
+                self.rows, self.seq_len
+            )));
+        }
+        Ok(())
+    }
 }
 
 /// Step outcome.
@@ -186,6 +251,11 @@ pub struct StepStats {
     /// the engine-side quantity cross-validated against
     /// [`crate::sim`]'s step ranking.
     pub makespan_s: f64,
+    /// Real (unmasked) tokens processed across all micro-batches.
+    pub tokens: u64,
+    /// Padded (masked) positions executed — 0 when every window ran at
+    /// its true ragged length.
+    pub padded: u64,
 }
 
 /// The engine: runtime + mesh + strategy + cached layout + optimizer.
@@ -197,8 +267,14 @@ pub struct Engine {
     /// Current strategy.
     pub strategy: EngineStrategy,
     /// Ownership/sync/update plans for the current strategy (rebuilt only
-    /// on [`Engine::switch_to`]).
-    pub layout: ShardLayout,
+    /// on [`Engine::switch_to`]; shared with the temporal pool's cached
+    /// copy, so hot switches hand it over allocation-free).
+    pub layout: Arc<ShardLayout>,
+    /// The ragged per-pipeline micro-batch shape contract set by
+    /// [`Engine::set_microbatches`] (`None` → the compiled uniform shape).
+    /// [`Engine::train_step`] rejects provided micro-batches that do not
+    /// match; cleared on every strategy switch.
+    pub mb_windows: Option<Vec<Vec<WindowShape>>>,
     /// TP degrees the runtime has block artifacts for.
     pub tp_degrees: Vec<usize>,
     /// Optimizer.
@@ -239,7 +315,7 @@ impl Engine {
             .filter(|d| runtime.metas_has(&format!("block_fwd_tp{d}")))
             .collect();
         strategy.validate(&cfg, &tp_degrees)?;
-        let layout = ShardLayout::build(&cfg, &strategy)?;
+        let layout = Arc::new(ShardLayout::build(&cfg, &strategy)?);
         let mut mesh = Mesh::new(strategy.num_devices().max(strategy.max_device_bound()));
         exec::init_params(&runtime, &layout, &mut mesh, seed)?;
         Ok(Engine {
@@ -247,6 +323,7 @@ impl Engine {
             mesh,
             strategy,
             layout,
+            mb_windows: None,
             tp_degrees,
             opt: AdamW::new(lr),
             topology: None,
@@ -279,25 +356,55 @@ impl Engine {
             .any(|(dev, pk, _)| self.mesh.devices[*dev].has(&format!("m.{pk}")))
     }
 
-    /// Set the per-pipeline micro-batch counts for subsequent steps (the
-    /// temporal dispatcher's token-weighted uneven apportioning). The
-    /// shard layout does not depend on micro-batch counts, so no replan is
-    /// needed; the token-weighted gradient sync keeps uneven counts exact
-    /// data parallelism.
-    pub fn set_microbatches(&mut self, counts: &[usize]) -> Result<()> {
+    /// Set the per-pipeline *ragged micro-batch windows* for subsequent
+    /// steps: one [`WindowShape`] per micro-batch, per pipeline — the
+    /// temporal dispatcher hands the engine the real packed-window shapes
+    /// of each step's batch (no quota stand-in). The shard layout does not
+    /// depend on micro-batch shapes, so no replan is needed; the
+    /// token-weighted gradient sync keeps uneven shapes and counts exact
+    /// data parallelism. [`Engine::train_step`] validates every provided
+    /// micro-batch against this contract. Cleared on strategy switches.
+    pub fn set_microbatches(&mut self, windows: &[Vec<WindowShape>]) -> Result<()> {
+        if windows.len() != self.strategy.pipelines.len() {
+            return Err(Error::Engine(format!(
+                "set_microbatches: {} window lists for {} pipelines",
+                windows.len(),
+                self.strategy.pipelines.len()
+            )));
+        }
+        for ws in windows {
+            if ws.is_empty() {
+                return Err(Error::Engine("set_microbatches: zero micro-batches".into()));
+            }
+            for w in ws {
+                w.validate()?;
+            }
+        }
+        for (p, ws) in self.strategy.pipelines.iter_mut().zip(windows.iter()) {
+            p.num_microbatches = ws.len();
+        }
+        self.mb_windows = Some(windows.to_vec());
+        Ok(())
+    }
+
+    /// Set uniform per-pipeline micro-batch *counts* at the compiled
+    /// `[batch, seq]` shape (the pre-ragged contract, kept for fixed-shape
+    /// callers and tests). Clears any ragged window contract.
+    pub fn set_microbatch_counts(&mut self, counts: &[usize]) -> Result<()> {
         if counts.len() != self.strategy.pipelines.len() {
             return Err(Error::Engine(format!(
-                "set_microbatches: {} counts for {} pipelines",
+                "set_microbatch_counts: {} counts for {} pipelines",
                 counts.len(),
                 self.strategy.pipelines.len()
             )));
         }
         if counts.iter().any(|&c| c == 0) {
-            return Err(Error::Engine("set_microbatches: zero micro-batches".into()));
+            return Err(Error::Engine("set_microbatch_counts: zero micro-batches".into()));
         }
         for (p, &c) in self.strategy.pipelines.iter_mut().zip(counts.iter()) {
             p.num_microbatches = c;
         }
+        self.mb_windows = None;
         Ok(())
     }
 
@@ -345,12 +452,43 @@ impl Engine {
 
         let pipelines = self.strategy.pipelines.clone();
         let kind = self.strategy.schedule;
-        // prefetch in pipeline-major slot order (the data-stream contract)
+        // prefetch in pipeline-major slot order (the data-stream contract),
+        // validating each ragged shape — internally and, when a window
+        // contract is set, against the prescribed per-slot shapes
         let mut batches: Vec<Vec<MicroBatch>> = Vec::with_capacity(pipelines.len());
+        let mut positions = 0u64;
         for (pi, p) in pipelines.iter().enumerate() {
             let mut v = Vec::with_capacity(p.num_microbatches);
             for mb in 0..p.num_microbatches {
-                v.push(data(pi, mb));
+                let batch = data(pi, mb);
+                if batch.tokens.len() != batch.n_seqs * batch.seq_len
+                    || batch.targets.len() != batch.tokens.len()
+                {
+                    return Err(Error::Engine(format!(
+                        "train_step: micro-batch ({pi},{mb}) claims shape {}x{} but holds \
+                         {} tokens / {} targets",
+                        batch.n_seqs,
+                        batch.seq_len,
+                        batch.tokens.len(),
+                        batch.targets.len()
+                    )));
+                }
+                if let Some(shape) =
+                    self.mb_windows.as_ref().and_then(|ws| ws.get(pi)).and_then(|w| w.get(mb))
+                {
+                    if batch.n_seqs != shape.n_seqs() || batch.seq_len != shape.seq_len {
+                        return Err(Error::Engine(format!(
+                            "train_step: micro-batch ({pi},{mb}) is {}x{} but the window \
+                             contract prescribes {}x{}",
+                            batch.n_seqs,
+                            batch.seq_len,
+                            shape.n_seqs(),
+                            shape.seq_len
+                        )));
+                    }
+                }
+                positions += batch.positions();
+                v.push(batch);
             }
             batches.push(v);
         }
@@ -381,6 +519,8 @@ impl Engine {
             wire_elems: self.mesh.wire_elems - wire0,
             comm_ops: self.mesh.ops - ops0,
             makespan_s: makespan + sync_s / ndev as f64,
+            tokens: total_tokens,
+            padded: positions.saturating_sub(total_tokens),
         })
     }
 }
@@ -436,12 +576,53 @@ mod tests {
         let mut eng =
             Engine::with_runtime(Runtime::native(crate::runtime::native::tiny_config()), s, 1, 1e-3)
                 .unwrap();
-        eng.set_microbatches(&[3, 1]).unwrap();
+        eng.set_microbatch_counts(&[3, 1]).unwrap();
         assert_eq!(eng.strategy.pipelines[0].num_microbatches, 3);
         assert_eq!(eng.strategy.pipelines[1].num_microbatches, 1);
-        assert!(eng.set_microbatches(&[1]).is_err());
-        assert!(eng.set_microbatches(&[0, 1]).is_err());
+        assert!(eng.mb_windows.is_none());
+        assert!(eng.set_microbatch_counts(&[1]).is_err());
+        assert!(eng.set_microbatch_counts(&[0, 1]).is_err());
         assert!(!eng.has_moments());
+    }
+
+    #[test]
+    fn set_microbatches_installs_ragged_window_contract() {
+        use crate::runtime::Runtime;
+        let s = EngineStrategy::uniform("dp2", 2, 1, 1, 8, 1);
+        let mut eng =
+            Engine::with_runtime(Runtime::native(crate::runtime::native::tiny_config()), s, 1, 1e-3)
+                .unwrap();
+        let windows = vec![
+            vec![
+                WindowShape { rows: vec![2, 2], seq_len: 2 },
+                WindowShape { rows: vec![4], seq_len: 4 },
+            ],
+            vec![WindowShape { rows: vec![3, 1], seq_len: 3 }],
+        ];
+        eng.set_microbatches(&windows).unwrap();
+        assert_eq!(eng.strategy.pipelines[0].num_microbatches, 2);
+        assert_eq!(eng.strategy.pipelines[1].num_microbatches, 1);
+        assert_eq!(eng.mb_windows.as_deref(), Some(&windows[..]));
+        // arity, empty pipelines, and malformed shapes are rejected
+        assert!(eng.set_microbatches(&windows[..1]).is_err());
+        assert!(eng
+            .set_microbatches(&[vec![], vec![WindowShape { rows: vec![1], seq_len: 1 }]])
+            .is_err());
+        assert!(eng
+            .set_microbatches(&[
+                vec![WindowShape { rows: vec![], seq_len: 1 }],
+                vec![WindowShape { rows: vec![1], seq_len: 1 }],
+            ])
+            .is_err());
+        assert!(eng
+            .set_microbatches(&[
+                vec![WindowShape { rows: vec![5], seq_len: 4 }],
+                vec![WindowShape { rows: vec![1], seq_len: 1 }],
+            ])
+            .is_err());
+        // the counts path clears the ragged contract
+        eng.set_microbatch_counts(&[1, 1]).unwrap();
+        assert!(eng.mb_windows.is_none());
     }
 
     #[test]

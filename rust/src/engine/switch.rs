@@ -37,6 +37,7 @@
 //! plans stay moment-layout-agnostic.
 
 use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::collectives::{extract_region, localize, write_region};
@@ -53,8 +54,14 @@ use super::{Engine, EngineStrategy, BLOCK_PARAMS};
 /// Outcome of an engine-level strategy switch.
 #[derive(Clone, Debug)]
 pub struct EngineSwitchReport {
-    /// The fused-BSR transition plan that was executed.
-    pub plan: FusedBsrPlan,
+    /// The fused-BSR transition plan that was executed — shared with the
+    /// (possibly cached) [`SwitchPlan`], not cloned: a pooled cache hit
+    /// builds this report allocation-free.
+    pub plan: Arc<FusedBsrPlan>,
+    /// Plan summary: fused messages the plan prescribes.
+    pub plan_messages: u64,
+    /// Plan summary: total wire bytes the plan prescribes.
+    pub plan_wire_bytes: u64,
     /// Fused messages launched (mesh `ops` delta).
     pub messages: u64,
     /// Elements measured on the wire while executing the plan.
@@ -97,8 +104,9 @@ pub struct SwitchPlan {
     pub moves: Vec<TensorMove>,
     /// Store target of each move (parallel to `moves`).
     pub targets: Vec<MoveTarget>,
-    /// The fused-BSR plan over `moves`.
-    pub plan: FusedBsrPlan,
+    /// The fused-BSR plan over `moves` (shared into every
+    /// [`EngineSwitchReport`] that executes it).
+    pub plan: Arc<FusedBsrPlan>,
     /// Whether optimizer moments (`m.*`/`v.*`) ride along. Must match the
     /// executing engine's state; [`Engine::switch_to_planned`] rejects a
     /// mismatch.
@@ -216,7 +224,8 @@ pub fn plan_switch(
 ) -> Result<SwitchPlan> {
     let (moves, targets) = build_moves(cfg, old, new, with_moments)?;
     let dead_ranks: Vec<Rank> = dead.iter().map(|&d| d as Rank).collect();
-    let plan = plan_transition_avoiding(&moves, bw, BsrOptions::default(), true, &dead_ranks)?;
+    let plan =
+        Arc::new(plan_transition_avoiding(&moves, bw, BsrOptions::default(), true, &dead_ranks)?);
     Ok(SwitchPlan { moves, targets, plan, with_moments })
 }
 
@@ -251,7 +260,7 @@ impl Engine {
                 }
             }
         }
-        let new_layout = ShardLayout::build(&cfg, &new)?;
+        let new_layout = Arc::new(ShardLayout::build(&cfg, &new)?);
 
         // When the engine knows the physical topology behind its device
         // ids, sender selection runs the bandwidth heuristic (2) —
@@ -275,7 +284,7 @@ impl Engine {
     pub fn switch_to_planned(
         &mut self,
         new: EngineStrategy,
-        new_layout: ShardLayout,
+        new_layout: Arc<ShardLayout>,
         sp: &SwitchPlan,
     ) -> Result<EngineSwitchReport> {
         let cfg = self.runtime.config;
@@ -298,7 +307,7 @@ impl Engine {
     fn execute_switch(
         &mut self,
         new: EngineStrategy,
-        new_layout: ShardLayout,
+        new_layout: Arc<ShardLayout>,
         sp: &SwitchPlan,
         dead: &[usize],
     ) -> Result<EngineSwitchReport> {
@@ -401,7 +410,9 @@ impl Engine {
         let report = EngineSwitchReport {
             messages: self.mesh.ops - ops0,
             wire_elems: self.mesh.wire_elems - wire0,
-            plan: sp.plan.clone(),
+            plan: Arc::clone(&sp.plan), // refcount bump, no FusedBsrPlan clone
+            plan_messages: sp.plan.num_messages() as u64,
+            plan_wire_bytes: sp.plan.wire_bytes(),
             sent,
             per_sender_s,
             delivery_s,
@@ -409,6 +420,8 @@ impl Engine {
         };
         self.strategy = new;
         self.layout = new_layout;
+        // the old per-pipeline window contract indexed the old pipelines
+        self.mb_windows = None;
 
         // ---- 3. ZeRO-1: trim the freshly-arrived full moment shards back
         // to each device's DP partition under the new layout (unmoved

@@ -245,7 +245,7 @@ pub fn fig15(steps: usize) -> Result<(Table, Vec<Fig15Cell>)> {
             for _ in 0..steps {
                 let batch = sample_step(&mut rng, corpus, 200_000, ctx);
                 // packed baselines
-                let packed = crate::data::pack_sequences(&batch.seq_lens, ctx);
+                let packed = crate::data::pack_sequences(&batch.seq_lens, ctx).len() as u64;
                 let ds_cfg = deepspeed::table9(ctx).unwrap();
                 ds_t.push(deepspeed::step_time(&cluster, &cm, ds_cfg, packed, ctx));
                 let mg_cfg = megatron::table9(ctx).unwrap();
@@ -336,7 +336,8 @@ pub fn hetu_b_step(
         }
         let shorts: Vec<u64> = seqs.iter().copied().filter(|&l| l <= 4096).collect();
         let longs = seqs.iter().filter(|&&l| l > 4096).count() as u64;
-        let num_mb = (crate::data::pack_sequences(&shorts, 4096) + longs).max(1);
+        let num_mb =
+            (crate::data::pack_sequences(&shorts, 4096).len() as u64 + longs).max(1);
         let total_tokens: u64 = seqs.iter().sum();
         let avg_seq = (total_tokens / num_mb).clamp(256, classes[i].max_seq);
         let mut p = strat.pipelines[i].clone();
@@ -368,10 +369,14 @@ pub fn hetu_b_step(
 /// seconds) of each single static strategy vs. the Hetu-A/Hetu-B
 /// switching engines — the engine-measured mirror of [`fig15`]'s
 /// simulated cells, with switch overhead amortized over the bucket
-/// run-length. Static strategies whose bucket context cannot host the
-/// stream's longest sequence truncate (marked), which is why the dynamic
-/// engines must beat the best *feasible* static one (asserted in
-/// `rust/tests/engine_integration.rs`).
+/// run-length. Every cell executes *real ragged windows* (each step's
+/// sequences packed into actual context windows and run at their true
+/// scaled lengths — the `tok/step` and `pad` columns are measured from
+/// the engine, and `pad` stays 0 because dispatcher-built windows never
+/// pay padded context). Static strategies whose bucket context cannot
+/// host the stream's longest sequence truncate (marked), which is why
+/// the dynamic engines must beat the best *feasible* static one
+/// (asserted in `rust/tests/engine_integration.rs`).
 pub fn fig15_engine(steps: usize) -> Result<Table> {
     use crate::coordinator::SyntheticCorpus;
     use crate::engine::EngineStrategy;
@@ -388,8 +393,8 @@ pub fn fig15_engine(steps: usize) -> Result<Table> {
     let cm = CostModel::new(ModelCfg::llama_32b());
 
     let mut table = Table::new(
-        "Fig 15 (engine-measured) — amortized per-step time, native tiny-48, synthetic CommonCrawl 32K",
-        &["policy", "feasible", "switches", "cache hits", "mb/step", "amortized s/step"],
+        "Fig 15 (engine-measured) — amortized per-step time, native tiny-48, synthetic CommonCrawl 32K, ragged windows",
+        &["policy", "feasible", "switches", "cache hits", "mb/step", "tok/step", "pad", "amortized s/step"],
     );
     let mut cases = Vec::new();
     for (s, ctx) in &entries {
@@ -406,15 +411,15 @@ pub fn fig15_engine(steps: usize) -> Result<Table> {
         let disp = Dispatcher::new(cm, policy);
         let mut corpus = SyntheticCorpus::new(7, tiny.vocab);
         let rep = disp.run_stream(&mut eng, &mut pool, &stream, &mut corpus)?;
+        let n = rep.steps.len().max(1) as f64;
         table.row(vec![
             label,
             if feasible { "yes".into() } else { "truncates".into() },
             rep.switches.to_string(),
             rep.cache_hits.to_string(),
-            format!(
-                "{:.1}",
-                rep.total_microbatches() as f64 / rep.steps.len().max(1) as f64
-            ),
+            format!("{:.1}", rep.total_microbatches() as f64 / n),
+            format!("{:.1}", rep.total_tokens() as f64 / n),
+            rep.total_padded().to_string(),
             fmt_s(rep.amortized_step_s()),
         ]);
     }

@@ -17,13 +17,23 @@ use std::path::{Path, PathBuf};
 
 use crate::{Error, Result};
 
+/// Symbolic batch-rows dimension in an artifact input shape: bound per
+/// call, consistently across every input (the §5.5 symbolic-shape axis at
+/// runtime scale). Only the native backend registers symbolic dims — AOT
+/// PJRT artifacts are compiled at fixed shapes, so their manifests carry
+/// literals and validation stays exact.
+pub const DIM_BATCH: i64 = -1;
+/// Symbolic sequence-length dimension (see [`DIM_BATCH`]).
+pub const DIM_SEQ: i64 = -2;
+
 /// Artifact metadata parsed from `manifest.json`.
 #[derive(Clone, Debug)]
 pub struct ArtifactMeta {
     /// File name relative to the artifact dir.
     pub file: String,
-    /// Input shapes + dtypes (`"f32"`/`"i32"`).
-    pub inputs: Vec<(Vec<usize>, String)>,
+    /// Input shapes + dtypes (`"f32"`/`"i32"`). Non-negative dims are
+    /// literal; [`DIM_BATCH`]/[`DIM_SEQ`] are symbolic and bind per call.
+    pub inputs: Vec<(Vec<i64>, String)>,
     /// Number of outputs in the result tuple.
     pub outputs: usize,
 }
@@ -194,6 +204,12 @@ impl Runtime {
 
     /// [`Runtime::call`] over borrowed tensors — the engine's hot path
     /// (§Perf L3): parameters stay in the device stores; no per-call clone.
+    ///
+    /// Literal manifest dims must match exactly; symbolic dims
+    /// ([`DIM_BATCH`]/[`DIM_SEQ`], native backend only) bind to the first
+    /// actual extent seen and must stay consistent across the call's
+    /// inputs — this is what lets one registered artifact execute ragged
+    /// `[n_seqs, seq_len]` micro-batches of any shape.
     pub fn call_refs(&self, name: &str, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
         let meta = self.meta(name)?.clone();
         if inputs.len() != meta.inputs.len() {
@@ -203,10 +219,18 @@ impl Runtime {
                 inputs.len()
             )));
         }
+        let (mut bound_b, mut bound_s): (Option<usize>, Option<usize>) = (None, None);
         for (i, (t, (shape, dtype))) in inputs.iter().zip(meta.inputs.iter()).enumerate() {
-            if &t.shape != shape || t.dtype_str() != dtype {
+            let dims_ok = t.shape.len() == shape.len()
+                && shape.iter().zip(t.shape.iter()).all(|(&md, &ad)| match md {
+                    DIM_BATCH => ad > 0 && *bound_b.get_or_insert(ad) == ad,
+                    DIM_SEQ => ad > 0 && *bound_s.get_or_insert(ad) == ad,
+                    lit => lit >= 0 && lit as usize == ad,
+                });
+            if !dims_ok || t.dtype_str() != dtype {
                 return Err(Error::Runtime(format!(
-                    "{name}: input {i} is {:?}/{} but manifest wants {:?}/{}",
+                    "{name}: input {i} is {:?}/{} but manifest wants {:?}/{} \
+                     (-1/-2 are symbolic batch/seq dims, bound per call)",
                     t.shape,
                     t.dtype_str(),
                     shape,
@@ -293,12 +317,23 @@ fn parse_manifest(text: &str) -> Result<(HashMap<String, ArtifactMeta>, Manifest
             .ok_or_else(|| Error::Runtime(format!("artifact {name}: no inputs")))?
         {
             let pair = inp.as_array().ok_or_else(|| Error::Runtime("bad input entry".into()))?;
-            let dims: Vec<usize> = pair[0]
+            // manifests describe fixed-shape AOT artifacts: every dim must
+            // be a literal. Symbolic dims (DIM_BATCH/DIM_SEQ) are reserved
+            // for the native registry — a negative manifest dim must not
+            // silently enable ragged binding against a compiled executable.
+            let mut dims: Vec<i64> = Vec::new();
+            for d in pair[0]
                 .as_array()
                 .ok_or_else(|| Error::Runtime("bad input dims".into()))?
-                .iter()
-                .map(|d| d.as_f64().unwrap_or(0.0) as usize)
-                .collect();
+            {
+                let d = d.as_f64().unwrap_or(-1.0) as i64;
+                if d < 0 {
+                    return Err(Error::Runtime(format!(
+                        "artifact {name}: negative input dim {d} (AOT shapes are literal)"
+                    )));
+                }
+                dims.push(d);
+            }
             let dtype =
                 pair[1].as_str().ok_or_else(|| Error::Runtime("bad input dtype".into()))?;
             inputs.push((dims, dtype.to_string()));
@@ -601,5 +636,31 @@ mod tests {
         // wrong shape is rejected by the manifest check
         let bad = HostTensor::zeros(vec![cfg.vocab, cfg.hidden + 1]);
         assert!(rt.call("embed_fwd", &[bad, tok]).is_err());
+    }
+
+    #[test]
+    fn native_call_binds_symbolic_shapes_per_call() {
+        // the native registry's batch/seq dims are symbolic: a ragged
+        // [1, 5] micro-batch runs through the same artifact entry as the
+        // compiled [2, 16] shape, while inconsistent bindings across one
+        // call's inputs are rejected
+        let rt = Runtime::native(native::tiny_config());
+        let cfg = rt.config;
+        let emb = HostTensor::zeros(vec![cfg.vocab, cfg.hidden]);
+        let tok = HostTensor::i32(vec![1, 5], vec![1; 5]).unwrap();
+        let out = rt.call("embed_fwd", &[emb, tok]).unwrap();
+        assert_eq!(out[0].shape, vec![1, 5, cfg.hidden]);
+
+        let gf = HostTensor::zeros(vec![cfg.hidden]);
+        let wout = HostTensor::zeros(vec![cfg.hidden, cfg.vocab]);
+        let x = HostTensor::zeros(vec![1, 5, cfg.hidden]);
+        let bad_tgt = HostTensor::i32(vec![1, 4], vec![1; 4]).unwrap();
+        assert!(
+            rt.call("head_step", &[gf.clone(), wout.clone(), x.clone(), bad_tgt]).is_err(),
+            "seq bound to 5 by x must reject a [1, 4] target"
+        );
+        let tgt = HostTensor::i32(vec![1, 5], vec![1; 5]).unwrap();
+        let out = rt.call("head_step", &[gf, wout, x, tgt]).unwrap();
+        assert_eq!(out[1].shape, vec![1, 5, cfg.hidden]);
     }
 }

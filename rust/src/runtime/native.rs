@@ -18,7 +18,7 @@
 
 use std::collections::HashMap;
 
-use super::{ArtifactMeta, ManifestConfig};
+use super::{ArtifactMeta, ManifestConfig, DIM_BATCH, DIM_SEQ};
 use crate::runtime::HostTensor;
 use crate::{Error, Result};
 
@@ -37,11 +37,16 @@ pub fn tiny_config() -> ManifestConfig {
 pub const TP_DEGREES: [usize; 3] = [1, 2, 4];
 
 /// Build the artifact registry the native backend implements for `cfg`
-/// (same names, input shapes, and output arities as the AOT exporter).
+/// (same names, input orders, and output arities as the AOT exporter).
+/// Parameter dims are literal; the batch/seq dims are *symbolic*
+/// ([`DIM_BATCH`]/[`DIM_SEQ`]) and bind per call, so one registered
+/// artifact executes ragged `[n_seqs, seq_len]` micro-batches of any
+/// shape — the §5.5 symbolic-shape machinery at native-backend scale.
 pub fn artifact_metas(cfg: &ManifestConfig) -> HashMap<String, ArtifactMeta> {
-    let (h, f, v, b, s) = (cfg.hidden, cfg.ffn, cfg.vocab, cfg.batch, cfg.seq);
-    let f32s = |shape: Vec<usize>| (shape, "f32".to_string());
-    let i32s = |shape: Vec<usize>| (shape, "i32".to_string());
+    let (h, f, v) = (cfg.hidden as i64, cfg.ffn as i64, cfg.vocab as i64);
+    let (b, s) = (DIM_BATCH, DIM_SEQ);
+    let f32s = |shape: Vec<i64>| (shape, "f32".to_string());
+    let i32s = |shape: Vec<i64>| (shape, "i32".to_string());
     let mut metas = HashMap::new();
     metas.insert(
         "embed_fwd".to_string(),
@@ -68,18 +73,19 @@ pub fn artifact_metas(cfg: &ManifestConfig) -> HashMap<String, ArtifactMeta> {
         },
     );
     for tp in TP_DEGREES {
-        if cfg.heads % tp != 0 || f % tp != 0 || h % tp != 0 {
+        if cfg.heads % tp != 0 || cfg.ffn % tp != 0 || cfg.hidden % tp != 0 {
             continue;
         }
+        let tp_i = tp as i64;
         let block_inputs = vec![
-            f32s(vec![h]),          // g1
-            f32s(vec![h, h / tp]),  // wq
-            f32s(vec![h, h / tp]),  // wk
-            f32s(vec![h, h / tp]),  // wv
-            f32s(vec![h / tp, h]),  // wo
-            f32s(vec![h]),          // g2
-            f32s(vec![h, f / tp]),  // w1
-            f32s(vec![f / tp, h]),  // w2
+            f32s(vec![h]),            // g1
+            f32s(vec![h, h / tp_i]),  // wq
+            f32s(vec![h, h / tp_i]),  // wk
+            f32s(vec![h, h / tp_i]),  // wv
+            f32s(vec![h / tp_i, h]),  // wo
+            f32s(vec![h]),            // g2
+            f32s(vec![h, f / tp_i]),  // w1
+            f32s(vec![f / tp_i, h]),  // w2
         ];
         let mut fwd_inputs = block_inputs.clone();
         fwd_inputs.push(f32s(vec![b, s, h]));
@@ -404,7 +410,8 @@ fn attention_bwd(
 // -------------------------------------------------------------- artifacts
 
 fn embed_fwd(cfg: &ManifestConfig, emb: &HostTensor, tok: &HostTensor) -> Result<HostTensor> {
-    let (h, b, s) = (cfg.hidden, cfg.batch, cfg.seq);
+    let h = cfg.hidden;
+    let (b, s) = (tok.shape[0], tok.shape[1]); // symbolic dims, bound per call
     let e = emb.as_f32()?;
     let t = tok.as_i32()?;
     let mut out = vec![0.0f32; b * s * h];
@@ -456,9 +463,11 @@ fn block_forward_parts(
     tp: usize,
     params: &[&HostTensor],
     x: &[f32],
-    n: usize,
+    b: usize,
+    s: usize,
 ) -> Result<BlockFwd> {
     let h = cfg.hidden;
+    let n = b * s;
     let hl = h / tp;
     let fl = cfg.ffn / tp;
     let nh = cfg.heads / tp;
@@ -474,7 +483,7 @@ fn block_forward_parts(
     let q = matmul(&xn1, wq, n, h, hl);
     let k = matmul(&xn1, wk, n, h, hl);
     let v = matmul(&xn1, wv, n, h, hl);
-    let (att, probs) = attention(&q, &k, &v, cfg.batch, cfg.seq, nh, hd);
+    let (att, probs) = attention(&q, &k, &v, b, s, nh, hd);
 
     let xn2 = rmsnorm(x, g2, n, h);
     let a = matmul(&xn2, w1, n, h, fl);
@@ -483,12 +492,13 @@ fn block_forward_parts(
 }
 
 fn block_fwd(cfg: &ManifestConfig, tp: usize, inputs: &[&HostTensor]) -> Result<HostTensor> {
-    let (h, b, s) = (cfg.hidden, cfg.batch, cfg.seq);
+    let h = cfg.hidden;
+    let (b, s) = (inputs[8].shape[0], inputs[8].shape[1]); // symbolic dims
     let n = b * s;
     let hl = h / tp;
     let fl = cfg.ffn / tp;
     let x = inputs[8].as_f32()?;
-    let parts = block_forward_parts(cfg, tp, inputs, x, n)?;
+    let parts = block_forward_parts(cfg, tp, inputs, x, b, s)?;
     let wo = inputs[4].as_f32()?;
     let w2 = inputs[7].as_f32()?;
     let att_out = matmul(&parts.att, wo, n, hl, h);
@@ -498,7 +508,8 @@ fn block_fwd(cfg: &ManifestConfig, tp: usize, inputs: &[&HostTensor]) -> Result<
 }
 
 fn block_bwd(cfg: &ManifestConfig, tp: usize, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
-    let (h, b, s) = (cfg.hidden, cfg.batch, cfg.seq);
+    let h = cfg.hidden;
+    let (b, s) = (inputs[8].shape[0], inputs[8].shape[1]); // symbolic dims
     let n = b * s;
     let hl = h / tp;
     let fl = cfg.ffn / tp;
@@ -506,7 +517,7 @@ fn block_bwd(cfg: &ManifestConfig, tp: usize, inputs: &[&HostTensor]) -> Result<
     let hd = h / cfg.heads;
     let x = inputs[8].as_f32()?;
     let dy = inputs[9].as_f32()?;
-    let parts = block_forward_parts(cfg, tp, inputs, x, n)?;
+    let parts = block_forward_parts(cfg, tp, inputs, x, b, s)?;
     let g1 = inputs[0].as_f32()?;
     let wq = inputs[1].as_f32()?;
     let wk = inputs[2].as_f32()?;
@@ -563,18 +574,30 @@ fn head_step(
     x: &HostTensor,
     targets: &HostTensor,
 ) -> Result<Vec<HostTensor>> {
-    let (h, v, b, s) = (cfg.hidden, cfg.vocab, cfg.batch, cfg.seq);
+    let (h, v) = (cfg.hidden, cfg.vocab);
+    let (b, s) = (targets.shape[0], targets.shape[1]); // symbolic dims
     let n = b * s;
     let xf = x.as_f32()?;
     let g = gf.as_f32()?;
     let w = wout.as_f32()?;
     let t = targets.as_i32()?;
 
+    // padding mask: target `-1` marks a padded position — it contributes
+    // no loss and a zero gradient row, and the mean normalizes over the
+    // *real* positions only, so a right-padded ragged micro-batch is
+    // numerically identical to executing each window at its true length.
+    let count = t.iter().filter(|&&tgt| tgt >= 0).count();
+    if count == 0 {
+        return Err(Error::Runtime("head_step: every target is masked".into()));
+    }
     let xn = rmsnorm(xf, g, n, h);
     let logits = matmul(&xn, w, n, h, v);
     let mut loss = 0.0f32;
     let mut dlogits = vec![0.0f32; n * v];
     for r in 0..n {
+        if t[r] < 0 {
+            continue; // masked: dlogits row stays zero
+        }
         let row = &logits[r * v..(r + 1) * v];
         let tgt = t[r] as usize;
         if tgt >= v {
@@ -590,11 +613,11 @@ fn head_step(
         let drow = &mut dlogits[r * v..(r + 1) * v];
         for j in 0..v {
             let p = (row[j] - max).exp() / denom;
-            drow[j] = p / n as f32;
+            drow[j] = p / count as f32;
         }
-        drow[tgt] -= 1.0 / n as f32;
+        drow[tgt] -= 1.0 / count as f32;
     }
-    loss /= n as f32;
+    loss /= count as f32;
 
     let dwout = matmul_tn(&xn, &dlogits, n, h, v);
     let dxn = matmul_nt(&dlogits, w, n, v, h);
@@ -788,6 +811,46 @@ mod tests {
             1e-4,
             "tp2 partial sums vs full block",
         );
+    }
+
+    #[test]
+    fn head_step_masks_padding_targets() {
+        // a padded tail (target -1) contributes no loss and no gradient:
+        // the [1, 3] padded call must equal the [1, 2] true-length call on
+        // the unmasked prefix, with a zero gradient at the pad position
+        let cfg = ManifestConfig { batch: 1, seq: 2, vocab: 7, hidden: 6, ..tiny_config() };
+        let (h, v) = (cfg.hidden, cfg.vocab);
+        let mut rng = Rng::new(8);
+        let gf = HostTensor::f32(vec![h], randvec(&mut rng, h, 1.0)).unwrap();
+        let wout = HostTensor::f32(vec![h, v], randvec(&mut rng, h * v, 0.3)).unwrap();
+        let xrow = randvec(&mut rng, 2 * h, 0.5);
+        let mut xpad = xrow.clone();
+        xpad.extend(randvec(&mut rng, h, 0.5)); // arbitrary activations at the pad
+
+        let x_true = HostTensor::f32(vec![1, 2, h], xrow).unwrap();
+        let t_true = HostTensor::i32(vec![1, 2], vec![3, 5]).unwrap();
+        let out_true = head_step(&cfg, &gf, &wout, &x_true, &t_true).unwrap();
+
+        let x_pad = HostTensor::f32(vec![1, 3, h], xpad).unwrap();
+        let t_pad = HostTensor::i32(vec![1, 3], vec![3, 5, -1]).unwrap();
+        let out_pad = head_step(&cfg, &gf, &wout, &x_pad, &t_pad).unwrap();
+
+        let (l_true, l_pad) = (out_true[0].as_f32().unwrap()[0], out_pad[0].as_f32().unwrap()[0]);
+        assert!((l_true - l_pad).abs() < 1e-6, "masked loss {l_pad} vs true {l_true}");
+        let dx_true = out_true[1].as_f32().unwrap();
+        let dx_pad = out_pad[1].as_f32().unwrap();
+        crate::testutil::assert_allclose(&dx_pad[..2 * h], dx_true, 1e-6, 1e-5, "dx prefix");
+        assert!(dx_pad[2 * h..].iter().all(|&d| d == 0.0), "pad position must get zero dx");
+        crate::testutil::assert_allclose(
+            out_pad[3].as_f32().unwrap(),
+            out_true[3].as_f32().unwrap(),
+            1e-6,
+            1e-5,
+            "dwout under masking",
+        );
+        // fully-masked batches are a typed error, not a NaN
+        let t_all = HostTensor::i32(vec![1, 3], vec![-1, -1, -1]).unwrap();
+        assert!(head_step(&cfg, &gf, &wout, &x_pad, &t_all).is_err());
     }
 
     #[test]

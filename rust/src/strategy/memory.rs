@@ -45,6 +45,15 @@ pub fn resident_microbatches(
     }
 }
 
+/// Activation bytes one token costs on stage `(p, s)` (per layer, after
+/// TP sharding; 2 bytes/elem with activation checkpointing, the 34-byte
+/// transformer liveness rule without). Shared by the padded and ragged
+/// accountings so the two can never drift apart.
+fn act_bytes_per_token(cm: &CostModel, strat: &ParallelStrategy, p: usize, s: usize) -> f64 {
+    let stage = &strat.pipelines[p].stages[s];
+    (if strat.ac { 2.0 } else { 34.0 }) * cm.model.hidden as f64 / stage.tp() as f64
+}
+
 /// Memory breakdown of pipeline `p`, stage `s` of a strategy.
 pub fn stage_memory(cm: &CostModel, strat: &ParallelStrategy, p: usize, s: usize) -> StageMemory {
     let pipe = &strat.pipelines[p];
@@ -54,8 +63,7 @@ pub fn stage_memory(cm: &CostModel, strat: &ParallelStrategy, p: usize, s: usize
     let tokens_mb = pipe.microbatch_size as u64 * strat.seq_len;
     let resident =
         resident_microbatches(strat.schedule, pipe.stages.len(), s, pipe.num_microbatches);
-    let act_per_token = if strat.ac { 2.0 } else { 34.0 } * cm.model.hidden as f64
-        / stage.tp() as f64;
+    let act_per_token = act_bytes_per_token(cm, strat, p, s);
     let gib = (1u64 << 30) as f64;
     StageMemory {
         weights_gib: 2.0 * params / gib,
@@ -64,6 +72,55 @@ pub fn stage_memory(cm: &CostModel, strat: &ParallelStrategy, p: usize, s: usize
         activations_gib: act_per_token * tokens_mb as f64 * stage.num_layers() as f64
             * resident as f64
             / gib,
+    }
+}
+
+/// Peak activation tokens resident on stage `s` under the schedule for
+/// *ragged* per-micro-batch token counts — the measured window fills the
+/// engine actually executes, instead of the padded
+/// `microbatch_size × seq_len` estimate. GPipe keeps every micro-batch
+/// live at once; 1F1B keeps at most `num_stages − stage`, so the worst
+/// case is the largest such subset.
+pub fn ragged_resident_tokens(
+    schedule: crate::spec::schedule::ScheduleKind,
+    num_stages: usize,
+    stage: usize,
+    mb_tokens: &[u64],
+) -> u64 {
+    match schedule {
+        crate::spec::schedule::ScheduleKind::GPipe => mb_tokens.iter().sum(),
+        crate::spec::schedule::ScheduleKind::OneFOneB => {
+            let keep = num_stages.saturating_sub(stage).min(mb_tokens.len());
+            let mut v = mb_tokens.to_vec();
+            v.sort_unstable_by(|a, b| b.cmp(a));
+            v[..keep].iter().sum()
+        }
+    }
+}
+
+/// [`stage_memory`] with measured ragged micro-batch token counts
+/// (`mb_tokens[i]` = real tokens of micro-batch `i`): the activation term
+/// charges the actually-resident window tokens; weights, gradients, and
+/// optimizer states are shape-independent and unchanged. With every
+/// micro-batch padded full this reduces to [`stage_memory`]; with the
+/// engine's ragged windows it is what the dispatcher's strategies truly
+/// hold — the §5.5 symbolic-shape memory rule.
+pub fn stage_memory_ragged(
+    cm: &CostModel,
+    strat: &ParallelStrategy,
+    p: usize,
+    s: usize,
+    mb_tokens: &[u64],
+) -> StageMemory {
+    let padded = stage_memory(cm, strat, p, s);
+    let stage = &strat.pipelines[p].stages[s];
+    let act_per_token = act_bytes_per_token(cm, strat, p, s);
+    let resident =
+        ragged_resident_tokens(strat.schedule, strat.pipelines[p].stages.len(), s, mb_tokens);
+    let gib = (1u64 << 30) as f64;
+    StageMemory {
+        activations_gib: act_per_token * resident as f64 * stage.num_layers() as f64 / gib,
+        ..padded
     }
 }
 
@@ -173,6 +230,44 @@ mod tests {
         s.schedule = ScheduleKind::GPipe;
         let m_gpipe = stage_memory(&cm, &s, 0, 0);
         assert!(m_gpipe.activations_gib > 4.0 * m_1f1b.activations_gib);
+    }
+
+    #[test]
+    fn ragged_activation_accounting_undercuts_padded_estimate() {
+        let cm = CostModel::new(ModelCfg::llama_32b());
+        let ranks: Vec<u32> = (0..4).collect();
+        let s = uniform("pp4", &ranks, 1, 1, 4, 60, 8, 1, 4096, ScheduleKind::OneFOneB, false, false)
+            .unwrap();
+        // padded estimate: 8 micro-batches × 1 × 4096 tokens each
+        let padded = stage_memory(&cm, &s, 0, 0);
+        // full ragged windows reproduce it exactly
+        let full = stage_memory_ragged(&cm, &s, 0, 0, &[4096; 8]);
+        assert!((full.activations_gib - padded.activations_gib).abs() < 1e-12);
+        assert_eq!(full.weights_gib, padded.weights_gib);
+        assert_eq!(full.optimizer_gib, padded.optimizer_gib);
+        // real mixed-length windows (97% short) sit well below the
+        // padded-context estimate
+        let ragged = stage_memory_ragged(&cm, &s, 0, 0, &[600, 900, 4096, 700, 650, 800, 700, 900]);
+        assert!(
+            ragged.activations_gib < 0.5 * padded.activations_gib,
+            "ragged {} vs padded {}",
+            ragged.activations_gib,
+            padded.activations_gib
+        );
+        // 1F1B liveness keeps the LARGEST resident subset: stage 0 of 4
+        // holds the top 4 windows, the last stage only the single largest
+        assert_eq!(
+            ragged_resident_tokens(ScheduleKind::OneFOneB, 4, 0, &[600, 900, 4096, 700]),
+            4096 + 900 + 700 + 600
+        );
+        assert_eq!(
+            ragged_resident_tokens(ScheduleKind::OneFOneB, 4, 3, &[600, 900, 4096, 700]),
+            4096
+        );
+        assert_eq!(
+            ragged_resident_tokens(ScheduleKind::GPipe, 4, 0, &[600, 900, 4096, 700]),
+            600 + 900 + 4096 + 700
+        );
     }
 
     #[test]

@@ -1,5 +1,5 @@
-//! Length-aware dispatch: StepBatch streams → strategy choice →
-//! token-weighted micro-batching → engine steps.
+//! Length-aware dispatch: StepBatch streams → strategy choice → real
+//! packed windows → ragged engine steps.
 //!
 //! Two policies, mirroring the paper's §6 evaluation:
 //!
@@ -7,29 +7,35 @@
 //!   smallest bucket (pool entry `ctx`) that can host it;
 //! * **Hetu-B** — cost-model dispatch: among eligible entries, minimize
 //!   the paper-scale [`CostModel`] cost of processing the batch at that
-//!   entry's context (packed windows each pay their full — possibly
-//!   padded — context, including the quadratic attention term, which is
-//!   exactly why running short data on a long-context strategy loses),
-//!   normalized by the entry's device parallelism, with hysteresis so the
+//!   entry's context. Sequences pack first-fit into `ctx`-token windows
+//!   and every window pays its *actual* fill — linear dense FLOPs plus
+//!   the quadratic causal-attention term over the packed window length
+//!   (cross-sequence attention, the packing baseline's semantics). A
+//!   near-full long-context window is therefore quadratically more
+//!   expensive than the same tokens split across short windows — which is
+//!   exactly why running short data on a long-context strategy loses —
+//!   while an underfilled window no longer pays padded context. Scores
+//!   normalize by the entry's device parallelism, with hysteresis so the
 //!   engine only leaves the incumbent when the win is clear.
 //!
-//! The chosen batch is then threaded through the engine's token-weighted
-//! uneven micro-batching: the same cost model converts the batch into an
-//! engine micro-batch quota (`flops_per_mb` cost units each — the tiny
-//! fixed-shape engine micro-batch stands in for one context window of
-//! work), [`dispatch_hetu_b`] splits the sequences over the strategy's
-//! pipelines, and the quota is apportioned largest-remainder over the
-//! per-pipeline token loads (`strategy::lower`'s rule, floor one). The
-//! engine's token-weighted gradient sync keeps the uneven counts exact
-//! data parallelism, so losses stay on one trajectory across switches.
+//! The chosen batch then becomes *real variable-shape micro-batches*
+//! (§5.5 symbolic shapes at engine numerics — the context-window quota
+//! stand-in is gone): [`dispatch_hetu_b`] splits the sequences over the
+//! strategy's pipelines, each pipeline's share packs into `ctx`-token
+//! windows, every window scales to `ceil(fill / cell_tokens)` engine
+//! tokens, and equal-length windows group as rows of one ragged
+//! [`WindowShape`] micro-batch handed to the engine via
+//! [`Engine::set_microbatches`]. The engine's token-weighted gradient
+//! sync keeps the uneven shapes and counts exact data parallelism, so
+//! losses stay on one trajectory across switches.
 
 use std::collections::BTreeSet;
 
 use crate::coordinator::SyntheticCorpus;
 use crate::costmodel::CostModel;
 use crate::data::{dispatch_hetu_b, pack_sequences, PipeClass, StepBatch};
-use crate::engine::Engine;
-use crate::{Error, Result};
+use crate::engine::{Engine, WindowShape};
+use crate::Result;
 
 use super::overlap::SwitchOverlap;
 use super::pool::{PoolEntry, StrategyPool};
@@ -48,33 +54,41 @@ pub enum DispatchPolicy {
 pub struct Dispatcher {
     /// Selection policy.
     pub policy: DispatchPolicy,
-    /// Paper-scale cost model driving Hetu-B selection and the
-    /// micro-batch quota.
+    /// Paper-scale cost model driving Hetu-B selection.
     pub cm: CostModel,
-    /// Cost-model FLOPs one engine micro-batch stands for (default: 25K
-    /// tokens at 4K context through the full model).
-    pub flops_per_mb: f64,
+    /// Paper-scale tokens one engine token cell stands for when scaling
+    /// packed windows onto the tiny engine (default 2048: a full 32K
+    /// window maps to the native tiny-48 compiled seq of 16 cells, so a
+    /// window's engine cost tracks its true length).
+    pub cell_tokens: u64,
+    /// Maximum equal-length windows grouped as rows of one ragged engine
+    /// micro-batch (default 2, the tiny compiled batch rows). Only
+    /// equal-length windows share a micro-batch, so dispatcher-built
+    /// steps execute zero padded positions.
+    pub rows_per_mb: usize,
     /// Hetu-B hysteresis: switch only when the winner undercuts the
     /// incumbent by this fraction.
     pub hysteresis: f64,
-    /// Upper clamp on engine micro-batches per step.
-    pub max_microbatches: usize,
 }
 
 impl Dispatcher {
-    /// Dispatcher with default quota/hysteresis settings.
+    /// Dispatcher with default scaling/hysteresis settings.
     pub fn new(cm: CostModel, policy: DispatchPolicy) -> Dispatcher {
-        let flops_per_mb = cm.model.fwd_flops(cm.model.layers, 25_000, 4096);
-        Dispatcher { policy, cm, flops_per_mb, hysteresis: 0.05, max_microbatches: 32 }
+        Dispatcher { policy, cm, cell_tokens: 2048, rows_per_mb: 2, hysteresis: 0.05 }
     }
 
-    /// Cost-model FLOPs to process `batch` at bucket context `ctx`:
-    /// sequences pack first-fit into `ctx`-token windows (overlong ones
-    /// truncate — the baseline rule) and every window pays its full
-    /// padded context, quadratic attention included.
+    /// Cost-model FLOPs to process `batch` at bucket context `ctx`: every
+    /// packed window pays its *actual* fill (ragged — no padded-context
+    /// charge), with the quadratic attention term spanning the packed
+    /// window (cross-sequence attention, the packing baseline rule).
     pub fn batch_flops(&self, batch: &StepBatch, ctx: u64) -> f64 {
-        let windows = pack_sequences(&batch.seq_lens, ctx);
-        windows as f64 * self.cm.model.fwd_flops(self.cm.model.layers, ctx, ctx)
+        pack_sequences(&batch.seq_lens, ctx)
+            .iter()
+            .map(|w| {
+                let used: u64 = w.iter().sum();
+                self.cm.model.fwd_flops(self.cm.model.layers, used, used)
+            })
+            .sum()
     }
 
     /// Select the pool entry for `batch`, given the engine currently runs
@@ -104,58 +118,95 @@ impl Dispatcher {
                 eligible.into_iter().min_by_key(|&i| pool.entry(i).ctx).unwrap()
             }
             DispatchPolicy::HetuB => {
-                let score = |i: usize| {
-                    self.batch_flops(batch, pool.entry(i).ctx)
-                        / pool.entry(i).strategy.num_devices().max(1) as f64
-                };
-                let best = eligible
+                // score each eligible entry once: batch_flops packs the
+                // whole batch, so re-evaluating it per comparison would
+                // repeat that work inside min_by
+                let scores: Vec<(usize, f64)> = eligible
                     .iter()
-                    .copied()
-                    .min_by(|&a, &b| score(a).partial_cmp(&score(b)).unwrap())
+                    .map(|&i| {
+                        let s = self.batch_flops(batch, pool.entry(i).ctx)
+                            / pool.entry(i).strategy.num_devices().max(1) as f64;
+                        (i, s)
+                    })
+                    .collect();
+                let &(best, best_s) = scores
+                    .iter()
+                    .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
                     .unwrap();
-                if eligible.contains(&current)
-                    && score(best) > score(current) * (1.0 - self.hysteresis)
-                {
-                    current // the win does not clear the switch cost
-                } else {
-                    best
+                match scores.iter().find(|(i, _)| *i == current) {
+                    // the win does not clear the switch cost
+                    Some(&(_, cur_s)) if best_s > cur_s * (1.0 - self.hysteresis) => current,
+                    _ => best,
                 }
             }
         }
     }
 
-    /// Token-weighted per-pipeline micro-batch counts for running `batch`
-    /// on `entry`: the cost-model quota, split over pipelines by their
-    /// [`dispatch_hetu_b`] token loads (largest remainder, floor one).
-    pub fn microbatch_counts(&self, entry: &PoolEntry, batch: &StepBatch) -> Result<Vec<usize>> {
+    /// The real packed windows for running `batch` on `entry`, scaled to
+    /// ragged engine shapes: sequences dispatch over the entry's pipelines
+    /// by [`dispatch_hetu_b`] token loads, each pipeline's share packs
+    /// first-fit into `ctx`-token windows, and every window becomes one
+    /// engine row of `ceil(fill / cell_tokens)` cells. Equal-length
+    /// windows (sorted longest-first) group up to `rows_per_mb` rows per
+    /// micro-batch, so no dispatcher-built step executes a padded
+    /// position. A pipeline left without sequences still runs one minimal
+    /// window: every pipeline must contribute to the token-weighted
+    /// gradient sync.
+    pub fn microbatch_windows(
+        &self,
+        entry: &PoolEntry,
+        batch: &StepBatch,
+    ) -> Result<Vec<Vec<WindowShape>>> {
         let npipes = entry.strategy.pipelines.len();
-        let quota = (self.batch_flops(batch, entry.ctx) / self.flops_per_mb).ceil() as usize;
-        let total = quota.clamp(npipes, self.max_microbatches.max(npipes));
-        if npipes == 1 {
-            return Ok(vec![total]);
+        let cell = self.cell_tokens.max(1);
+        let assign: Vec<Vec<u64>> = if npipes == 1 {
+            vec![batch.seq_lens.clone()]
+        } else {
+            let classes: Vec<PipeClass> = entry
+                .strategy
+                .pipelines
+                .iter()
+                .map(|p| PipeClass {
+                    max_seq: entry.ctx,
+                    tokens_per_s: p.stages.iter().map(|s| s.devices.len()).sum::<usize>() as f64,
+                })
+                .collect();
+            dispatch_hetu_b(&batch.seq_lens, &classes)
+        };
+        let mut out = Vec::with_capacity(npipes);
+        for seqs in &assign {
+            let mut cells: Vec<usize> = pack_sequences(seqs, entry.ctx)
+                .iter()
+                .map(|w| {
+                    let used: u64 = w.iter().sum();
+                    used.div_ceil(cell).max(1) as usize
+                })
+                .collect();
+            if cells.is_empty() {
+                cells.push(1); // starved pipeline: one minimal window
+            }
+            cells.sort_unstable_by(|a, b| b.cmp(a));
+            let rows_cap = self.rows_per_mb.max(1);
+            let mut mbs: Vec<WindowShape> = vec![];
+            let mut i = 0;
+            while i < cells.len() {
+                let mut j = i + 1;
+                while j < cells.len() && cells[j] == cells[i] && j - i < rows_cap {
+                    j += 1;
+                }
+                mbs.push(WindowShape { rows: cells[i..j].to_vec(), seq_len: cells[i] });
+                i = j;
+            }
+            out.push(mbs);
         }
-        let classes: Vec<PipeClass> = entry
-            .strategy
-            .pipelines
-            .iter()
-            .map(|p| PipeClass {
-                max_seq: entry.ctx,
-                tokens_per_s: p.stages.iter().map(|s| s.devices.len()).sum::<usize>() as f64,
-            })
-            .collect();
-        let assign = dispatch_hetu_b(&batch.seq_lens, &classes);
-        let mut weights: Vec<u64> = assign.iter().map(|v| v.iter().sum()).collect();
-        if weights.iter().all(|&w| w == 0) {
-            weights = vec![1; npipes];
-        }
-        crate::strategy::lower::apportion(&weights, total)
-            .map_err(|e| Error::Engine(format!("microbatch apportioning: {e}")))
+        Ok(out)
     }
 
     /// Drive a pool-managed engine over a batch stream: choose a strategy
-    /// per batch, hot-switch (cached plans) only on bucket change, retune
-    /// micro-batch counts, run the step, and account switch deliveries
-    /// through the §6.2 overlap model.
+    /// per batch, hot-switch (cached plans) only on bucket change, hand
+    /// the engine the batch's real packed-window shapes, run the ragged
+    /// step, and account switch deliveries through the §6.2 overlap
+    /// model.
     pub fn run_stream(
         &self,
         engine: &mut Engine,
@@ -164,12 +215,11 @@ impl Dispatcher {
         corpus: &mut SyntheticCorpus,
     ) -> Result<StreamReport> {
         let mut current = pool.index_of(&engine.strategy).ok_or_else(|| {
-            Error::Engine(format!(
+            crate::Error::Engine(format!(
                 "run_stream: engine strategy `{}` is not in the pool",
                 engine.strategy.name
             ))
         })?;
-        let (b, s) = (engine.runtime.config.batch, engine.runtime.config.seq);
         let mut overlap = SwitchOverlap::new();
         let hits0 = pool.hits();
         let mut steps = Vec::with_capacity(stream.len());
@@ -187,9 +237,9 @@ impl Dispatcher {
                 switches += 1;
                 current = chosen;
             }
-            let counts = self.microbatch_counts(pool.entry(chosen), batch)?;
-            engine.set_microbatches(&counts)?;
-            let stats = engine.train_step(&mut |_p, _m| corpus.microbatch(b, s))?;
+            let windows = self.microbatch_windows(pool.entry(chosen), batch)?;
+            engine.set_microbatches(&windows)?;
+            let stats = engine.train_step(&mut |p, m| corpus.window_for(&windows[p][m]))?;
             let exposed_s = overlap.on_step(stats.makespan_s);
             steps.push(StepOutcome {
                 step: i,
@@ -200,7 +250,10 @@ impl Dispatcher {
                 exposed_s,
                 loss: stats.loss,
                 makespan_s: stats.makespan_s,
-                microbatches: counts.iter().sum(),
+                microbatches: windows.iter().map(|w| w.len()).sum(),
+                windows: windows.iter().flat_map(|w| w.iter().map(|s| s.rows.len())).sum(),
+                tokens: stats.tokens,
+                padded: stats.padded,
             });
         }
         Ok(StreamReport { steps, switches, cache_hits: pool.hits() - hits0 })
@@ -228,6 +281,13 @@ pub struct StepOutcome {
     pub makespan_s: f64,
     /// Engine micro-batches this step ran (all pipelines).
     pub microbatches: usize,
+    /// Packed data windows this step executed (micro-batch rows).
+    pub windows: usize,
+    /// Real engine tokens this step processed (measured, unmasked).
+    pub tokens: u64,
+    /// Padded (masked) positions this step executed — 0 for
+    /// dispatcher-built windows, which always run at true ragged length.
+    pub padded: u64,
 }
 
 /// A dispatched stream's outcomes.
@@ -256,6 +316,22 @@ impl StreamReport {
     /// Engine micro-batches run across the stream.
     pub fn total_microbatches(&self) -> usize {
         self.steps.iter().map(|s| s.microbatches).sum()
+    }
+
+    /// Packed data windows executed across the stream.
+    pub fn total_windows(&self) -> usize {
+        self.steps.iter().map(|s| s.windows).sum()
+    }
+
+    /// Real engine tokens processed across the stream.
+    pub fn total_tokens(&self) -> u64 {
+        self.steps.iter().map(|s| s.tokens).sum()
+    }
+
+    /// Padded positions executed across the stream (0 ⇔ every step ran at
+    /// true ragged lengths — no padded-context fallback).
+    pub fn total_padded(&self) -> u64 {
+        self.steps.iter().map(|s| s.padded).sum()
     }
 
     /// Distinct pool entries the stream executed on.
@@ -296,8 +372,8 @@ mod tests {
     fn hetu_b_prefers_cheap_short_context_and_honors_hysteresis() {
         let pool = pool();
         let d = Dispatcher::new(CostModel::new(ModelCfg::llama_32b()), DispatchPolicy::HetuB);
-        // short data on a long-context strategy wastes quadratic attention
-        // → leaves the incumbent
+        // short data packed to a long context pays quadratic cross-window
+        // attention over near-full 32K windows → leaves the incumbent
         assert_eq!(d.choose(&pool, &batch(vec![2048; 48]), 2), 0);
         // a long sequence forces the wide strategy
         let mut long = vec![2048u64; 38];
@@ -318,25 +394,47 @@ mod tests {
     }
 
     #[test]
-    fn microbatch_quota_scales_with_context_waste() {
+    fn microbatch_windows_carry_real_packed_shapes() {
         let pool = pool();
         let d = Dispatcher::new(CostModel::new(ModelCfg::llama_32b()), DispatchPolicy::HetuB);
-        // ~98K tokens of 2K sequences at 4K context: 24 windows ≈ 4 quota
-        // units, split 2:2 over the DP pipelines
+        // 48 × 2K sequences. Entry 0 (ctx 4K, DP2): 24 sequences per
+        // pipeline pack 2-per-window into 12 full 4K windows of 2 engine
+        // cells each, grouped 2 rows/mb → 6 ragged [2, 2] micro-batches
+        // per pipeline.
         let short = batch(vec![2048; 48]);
-        let c0 = d.microbatch_counts(pool.entry(0), &short).unwrap();
-        assert_eq!(c0.iter().sum::<usize>(), 4);
-        assert_eq!(c0, vec![2, 2]);
-        // the same tokens at 32K context pay padding + quadratic attention
-        let c2 = d.microbatch_counts(pool.entry(2), &short).unwrap();
-        assert_eq!(c2.len(), 1);
-        assert!(
-            c2[0] > c0.iter().sum::<usize>(),
-            "long-context waste must exceed the short-context quota: {c2:?} vs {c0:?}"
-        );
-        // floors: every pipeline gets at least one micro-batch
+        let w0 = d.microbatch_windows(pool.entry(0), &short).unwrap();
+        assert_eq!(w0.len(), 2);
+        for pipe in &w0 {
+            assert_eq!(pipe.len(), 6);
+            for mb in pipe {
+                assert_eq!(mb.rows, vec![2, 2]);
+                assert_eq!(mb.seq_len, 2);
+            }
+        }
+        // Entry 2 (ctx 32K, TP2, one pipeline): the same tokens pack into
+        // 3 full 32K windows of 16 cells — real window lengths, so the
+        // quadratic attention cost difference is *executed*, not assumed.
+        let w2 = d.microbatch_windows(pool.entry(2), &short).unwrap();
+        assert_eq!(w2.len(), 1);
+        let rows: Vec<usize> =
+            w2[0].iter().flat_map(|m| m.rows.iter().copied()).collect();
+        assert_eq!(rows, vec![16, 16, 16]);
+        // token cells conserve across entries: ragged execution never
+        // pads a window up to its context
+        let cells = |w: &Vec<Vec<WindowShape>>| -> usize {
+            w.iter().flat_map(|p| p.iter().map(|m| m.real_cells())).sum()
+        };
+        assert_eq!(cells(&w0), cells(&w2));
+        // a starved pipeline still gets one minimal window so it joins
+        // the token-weighted gradient sync
         let tiny_b = batch(vec![64]);
-        let c = d.microbatch_counts(pool.entry(0), &tiny_b).unwrap();
-        assert_eq!(c, vec![1, 1]);
+        let c = d.microbatch_windows(pool.entry(0), &tiny_b).unwrap();
+        assert_eq!(c.len(), 2);
+        assert!(c.iter().all(|pipe| !pipe.is_empty()));
+        for pipe in &c {
+            for mb in pipe {
+                mb.validate().unwrap();
+            }
+        }
     }
 }

@@ -17,8 +17,11 @@
 //!   dispatch via [`costmodel`](crate::costmodel), with hysteresis so the
 //!   engine only switches when the win clears the transition cost) —
 //!   triggering `Engine::switch_to_planned` only on bucket change and
-//!   threading each batch through the token-weighted uneven
-//!   micro-batching of `strategy::lower`;
+//!   handing the engine each batch's *real packed-window shapes*
+//!   ([`Engine::set_microbatches`](crate::engine::Engine) window
+//!   contract): ragged `[n_seqs, seq_len]` micro-batches executed at
+//!   true window lengths, with the token-weighted gradient sync keeping
+//!   the uneven shapes exact data parallelism;
 //! * [`overlap::SwitchOverlap`] models the §6.2 switch/compute overlap
 //!   (Fig 18-right): fused switch messages execute **batched per sender**
 //!   (`engine/switch.rs`), senders are concurrent, and the slowest

@@ -10,6 +10,7 @@
 //! bypass the cache and re-plan fresh.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::comm::{Bandwidth, UniformBandwidth};
 use crate::engine::{
@@ -24,8 +25,10 @@ use crate::{Error, Result};
 pub struct PoolEntry {
     /// The runnable strategy.
     pub strategy: EngineStrategy,
-    /// Precomputed ownership/sync/update plans.
-    pub layout: ShardLayout,
+    /// Precomputed ownership/sync/update plans, shared (`Arc`) with every
+    /// engine switched onto this entry — a hot switch hands the layout
+    /// over by refcount, never by deep clone.
+    pub layout: Arc<ShardLayout>,
     /// Bucket context: the longest sequence this strategy can host
     /// (memory-bound at paper scale; the dispatcher's eligibility rule).
     pub ctx: u64,
@@ -39,10 +42,13 @@ pub struct PoolEntry {
 type PlanKey = (usize, usize, bool, bool);
 
 /// A pool of instantiated strategies with a pairwise switch-plan cache.
+/// Cached plans are `Arc`-shared: a cache hit hands the pooled allocation
+/// out by refcount — no `SwitchPlan`/`FusedBsrPlan`/layout clones on the
+/// steady-state switch path (the ROADMAP hot-switch constant factors).
 pub struct StrategyPool {
     cfg: ManifestConfig,
     entries: Vec<PoolEntry>,
-    plans: HashMap<PlanKey, SwitchPlan>,
+    plans: HashMap<PlanKey, Arc<SwitchPlan>>,
     hits: u64,
     misses: u64,
 }
@@ -68,7 +74,7 @@ impl StrategyPool {
         }
         let mut out = Vec::with_capacity(entries.len());
         for (strategy, ctx) in entries {
-            let layout = ShardLayout::build(&cfg, &strategy)?;
+            let layout = Arc::new(ShardLayout::build(&cfg, &strategy)?);
             out.push(PoolEntry { strategy, layout, ctx });
         }
         Ok(StrategyPool { cfg, entries: out, plans: HashMap::new(), hits: 0, misses: 0 })
@@ -124,7 +130,8 @@ impl StrategyPool {
     /// `topology_aware` must say whether `bw` is a real topology (both
     /// are part of the cache key — a pre-step-1 switch moves no moments,
     /// and a uniform-bandwidth plan must not be replayed once a topology
-    /// is attached).
+    /// is attached). Returns the pooled `Arc`: a hit is a refcount bump,
+    /// not a plan clone.
     pub fn plan_for(
         &mut self,
         from: usize,
@@ -132,7 +139,7 @@ impl StrategyPool {
         with_moments: bool,
         topology_aware: bool,
         bw: &dyn Bandwidth,
-    ) -> Result<&SwitchPlan> {
+    ) -> Result<Arc<SwitchPlan>> {
         if from >= self.entries.len() || to >= self.entries.len() {
             return Err(Error::Engine(format!(
                 "plan_for: {from}->{to} out of pool (len {})",
@@ -143,27 +150,29 @@ impl StrategyPool {
             return Err(Error::Engine("plan_for: from == to".into()));
         }
         let key = (from, to, with_moments, topology_aware);
-        match self.plans.entry(key) {
-            std::collections::hash_map::Entry::Occupied(_) => self.hits += 1,
-            std::collections::hash_map::Entry::Vacant(v) => {
-                v.insert(plan_switch(
-                    &self.cfg,
-                    &self.entries[from].layout,
-                    &self.entries[to].layout,
-                    with_moments,
-                    bw,
-                    &[],
-                )?);
-                self.misses += 1;
-            }
+        if let Some(sp) = self.plans.get(&key) {
+            self.hits += 1;
+            return Ok(Arc::clone(sp));
         }
-        Ok(&self.plans[&key])
+        let sp = Arc::new(plan_switch(
+            &self.cfg,
+            &self.entries[from].layout,
+            &self.entries[to].layout,
+            with_moments,
+            bw,
+            &[],
+        )?);
+        self.plans.insert(key, Arc::clone(&sp));
+        self.misses += 1;
+        Ok(sp)
     }
 
     /// Hot-switch a pool-managed engine to entry `to`, reusing the cached
     /// plan when this transition has run before. The engine's current
     /// strategy must match a pool entry (micro-batch counts ignored);
-    /// sender selection uses the engine's attached topology, if any.
+    /// sender selection uses the engine's attached topology, if any. On a
+    /// cache hit nothing is deep-cloned: the plan and the target layout
+    /// are both handed over by `Arc`.
     pub fn switch_engine(&mut self, engine: &mut Engine, to: usize) -> Result<EngineSwitchReport> {
         let from = self.index_of(&engine.strategy).ok_or_else(|| {
             Error::Engine(format!(
@@ -182,16 +191,15 @@ impl StrategyPool {
         )?;
         let with_moments = engine.has_moments();
         let topology_aware = engine.topology.is_some();
-        {
+        let sp = {
             let bw: &dyn Bandwidth = match &engine.topology {
                 Some(c) => c,
                 None => &UniformBandwidth,
             };
-            self.plan_for(from, to, with_moments, topology_aware, bw)?;
-        }
-        let sp = &self.plans[&(from, to, with_moments, topology_aware)];
+            self.plan_for(from, to, with_moments, topology_aware, bw)?
+        };
         let entry = &self.entries[to];
-        engine.switch_to_planned(entry.strategy.clone(), entry.layout.clone(), sp)
+        engine.switch_to_planned(entry.strategy.clone(), Arc::clone(&entry.layout), &sp)
     }
 
     /// Spawn an engine on entry `i` (convenience for tests/benches).
@@ -255,6 +263,29 @@ mod tests {
         let mut pool = tiny_pool();
         assert!(pool.plan_for(0, 0, false, false, &UniformBandwidth).is_err());
         assert!(pool.plan_for(0, 7, false, false, &UniformBandwidth).is_err());
+    }
+
+    #[test]
+    fn cache_hits_share_the_pooled_plan_allocation() {
+        // both the plan and the executing reports must point at the SAME
+        // FusedBsrPlan allocation — the cache hit is a refcount bump
+        let mut pool = tiny_pool();
+        let p1 = pool.plan_for(0, 1, false, false, &UniformBandwidth).unwrap();
+        let p2 = pool.plan_for(0, 1, false, false, &UniformBandwidth).unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2), "cache hit must hand out the pooled Arc");
+
+        let mut eng = pool
+            .spawn_engine(crate::runtime::Runtime::native(native::tiny_config()), 0, 42, 1e-3)
+            .unwrap();
+        let r1 = pool.switch_engine(&mut eng, 1).unwrap();
+        let r2 = pool.switch_engine(&mut eng, 0).unwrap();
+        let r3 = pool.switch_engine(&mut eng, 1).unwrap();
+        assert!(Arc::ptr_eq(&r1.plan, &r3.plan), "repeated A→B reports share one plan");
+        assert!(!Arc::ptr_eq(&r1.plan, &r2.plan), "opposite directions are distinct plans");
+        assert_eq!(r1.plan_messages, r1.plan.num_messages() as u64);
+        assert_eq!(r1.plan_wire_bytes, r1.plan.wire_bytes());
+        // the engine's layout is the pooled entry's layout, not a clone
+        assert!(Arc::ptr_eq(&eng.layout, &pool.entry(1).layout));
     }
 
     #[test]

@@ -748,18 +748,112 @@ fn temporal_hetu_b_stream_beats_best_feasible_static() {
         stream.iter().all(|b| b.max_len() <= entries[2].1),
         "the wide static strategy must host the whole stream"
     );
+    // ragged execution: every step ran the batch's real packed windows —
+    // no padded-context fallback executed on either engine, and the token
+    // cells the engines measured agree (same data, modulo per-window
+    // ceil-rounding of the cell scaling)
+    assert_eq!(dynamic.total_padded(), 0, "dynamic engine executed padded positions");
+    assert_eq!(static_long.total_padded(), 0, "static engine executed padded positions");
+    assert!(dynamic.steps.iter().all(|s| s.windows > 0 && s.tokens > 0));
+    let (dt, st) = (dynamic.total_tokens() as i64, static_long.total_tokens() as i64);
     assert!(
-        dynamic.total_microbatches() < static_long.total_microbatches(),
-        "length-aware dispatch must save quota: {} vs {}",
-        dynamic.total_microbatches(),
-        static_long.total_microbatches()
+        (dt - st).abs() <= stream.len() as i64 * 2,
+        "ragged token cells must conserve across strategies: {dt} vs {st}"
     );
     assert!(
         dynamic.total_s() < static_long.total_s(),
-        "amortized switching engine must beat the best feasible static: {:.4}s vs {:.4}s",
+        "amortized switching engine must beat the best feasible static \
+         on measured ragged step times: {:.4}s vs {:.4}s",
         dynamic.total_s(),
         static_long.total_s()
     );
+}
+
+#[test]
+fn ragged_two_window_step_matches_flat_masked_oracle() {
+    // Token-weighted sync equivalence at ragged shapes (the §5.5 claim at
+    // engine numerics): a step of two packed windows executed at their
+    // true lengths — [1,10] and [1,6] — must produce the same loss and
+    // the same global-mean gradient as the equivalent flat [2,16] batch
+    // holding the same windows as right-padded, masked rows.
+    use hetu::engine::WindowShape;
+    let mk_row = |seed: u64, n: usize| -> (Vec<i32>, Vec<i32>) {
+        let mut rng = hetu::testutil::Rng::new(seed);
+        let row: Vec<i32> = (0..n + 1).map(|_| rng.below(512) as i32).collect();
+        (row[..n].to_vec(), row[1..].to_vec())
+    };
+    let (t1, g1) = mk_row(100, 10);
+    let (t2, g2) = mk_row(200, 6);
+
+    // ragged run: two windows, each at its true length
+    let mut ragged = native_engine(EngineStrategy::uniform("solo", 1, 1, 1, 8, 2), 42, 1e-2);
+    ragged
+        .set_microbatches(&[vec![
+            WindowShape { rows: vec![10], seq_len: 10 },
+            WindowShape { rows: vec![6], seq_len: 6 },
+        ]])
+        .unwrap();
+    let mbs = vec![
+        MicroBatch { tokens: t1.clone(), targets: g1.clone(), n_seqs: 1, seq_len: 10 },
+        MicroBatch { tokens: t2.clone(), targets: g2.clone(), n_seqs: 1, seq_len: 6 },
+    ];
+    let stats_r = ragged.train_step(&mut |_p, m| mbs[m].clone()).unwrap();
+    assert_eq!((stats_r.tokens, stats_r.padded), (16, 0));
+
+    // flat run: the same windows as rows of one [2,16] batch, with the
+    // padding mask (target -1) covering the tails
+    let mut tokens = t1.clone();
+    tokens.extend(vec![0; 6]);
+    tokens.extend(t2.clone());
+    tokens.extend(vec![0; 10]);
+    let mut targets = g1.clone();
+    targets.extend(vec![-1; 6]);
+    targets.extend(g2.clone());
+    targets.extend(vec![-1; 10]);
+    let flat_mb = MicroBatch { tokens, targets, n_seqs: 2, seq_len: 16 };
+    let mut flat = native_engine(EngineStrategy::uniform("solo", 1, 1, 1, 8, 1), 42, 1e-2);
+    flat.set_microbatches(&[vec![WindowShape { rows: vec![10, 6], seq_len: 16 }]]).unwrap();
+    let stats_f = flat.train_step(&mut |_p, _m| flat_mb.clone()).unwrap();
+    assert_eq!((stats_f.tokens, stats_f.padded), (16, 16));
+
+    assert!(
+        (stats_r.loss - stats_f.loss).abs() < 1e-5,
+        "ragged loss {} vs flat masked loss {}",
+        stats_r.loss,
+        stats_f.loss
+    );
+    // the gradients were equal too: after the (shared-trajectory) AdamW
+    // update, a second pass over the same data must land on the same
+    // loss — if padding had leaked into any gradient, the trajectories
+    // would fork here
+    let r2 = ragged.train_step(&mut |_p, m| mbs[m].clone()).unwrap();
+    let f2 = flat.train_step(&mut |_p, _m| flat_mb.clone()).unwrap();
+    assert!(
+        (r2.loss - f2.loss).abs() < 1e-3,
+        "post-update trajectories forked: ragged {} vs flat {}",
+        r2.loss,
+        f2.loss
+    );
+    assert!(r2.loss.is_finite() && f2.loss.is_finite());
+}
+
+#[test]
+fn train_step_enforces_the_window_contract() {
+    use hetu::engine::WindowShape;
+    let mut eng = native_engine(EngineStrategy::uniform("solo", 1, 1, 1, 8, 1), 42, 1e-3);
+    eng.set_microbatches(&[vec![WindowShape { rows: vec![4], seq_len: 4 }]]).unwrap();
+    let mut corpus = SyntheticCorpus::new(5, eng.runtime.config.vocab);
+    // a provider that ignores the prescribed ragged shape is rejected
+    let wrong = corpus.microbatch(2, 16);
+    assert!(eng.train_step(&mut |_p, _m| wrong.clone()).is_err());
+    // the matching shape runs
+    let right = corpus.microbatch(1, 4);
+    let stats = eng.train_step(&mut |_p, _m| right.clone()).unwrap();
+    assert_eq!((stats.tokens, stats.padded), (4, 0));
+    assert!(stats.loss.is_finite());
+    // a switch clears the contract (the old shapes indexed old pipelines)
+    eng.switch_to(EngineStrategy::uniform("tp2", 1, 2, 1, 8, 1)).unwrap();
+    assert!(eng.mb_windows.is_none());
 }
 
 #[test]

@@ -343,7 +343,45 @@ fn prop_dispatch_hetu_b_conserves_and_respects_max_context() {
 }
 
 #[test]
-fn prop_dispatcher_quota_apportioning_is_exact() {
+fn prop_pack_windows_respect_ctx_and_conserve_tokens() {
+    use hetu::data::{pack_sequences, sample_step, Corpus};
+    check("pack window invariants", 200, |rng| {
+        let corpus = if rng.chance(0.5) { Corpus::CommonCrawl } else { Corpus::GitHub };
+        let ctx = *rng.pick(&[4096u64, 8192, 16_384, 32_768]);
+        let b = sample_step(rng, corpus, 60_000, 32_768);
+        let windows = pack_sequences(&b.seq_lens, ctx);
+        // every sequence lands in exactly one window
+        let n: usize = windows.iter().map(|w| w.len()).sum();
+        if n != b.seq_lens.len() {
+            return Err(format!("{n} packed of {} sequences", b.seq_lens.len()));
+        }
+        // no window exceeds its context, and no window is empty
+        for (i, w) in windows.iter().enumerate() {
+            if w.is_empty() {
+                return Err(format!("window {i} is empty"));
+            }
+            let used: u64 = w.iter().sum();
+            if used > ctx {
+                return Err(format!("window {i} holds {used} > ctx {ctx}"));
+            }
+        }
+        // tokens conserve up to the baseline truncation of overlong
+        // sequences
+        let packed: u64 = windows.iter().flatten().sum();
+        let expect: u64 = b.seq_lens.iter().map(|&l| l.min(ctx)).sum();
+        if packed != expect {
+            return Err(format!("tokens {packed} != truncated total {expect}"));
+        }
+        // first-fit can't beat the volume lower bound
+        if (windows.len() as u64) < expect.div_ceil(ctx) {
+            return Err("fewer windows than the volume bound".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dispatcher_windows_cover_pipelines_with_real_shapes() {
     use hetu::costmodel::{CostModel, ModelCfg};
     use hetu::data::{sample_step, Corpus};
     use hetu::runtime::native;
@@ -351,25 +389,43 @@ fn prop_dispatcher_quota_apportioning_is_exact() {
     let cfg = native::tiny_config();
     let pool = StrategyPool::new(cfg, default_pool_entries(&cfg).unwrap()).unwrap();
     let disp = Dispatcher::new(CostModel::new(ModelCfg::llama_32b()), DispatchPolicy::HetuB);
-    check("dispatcher quota apportioning", 100, |rng| {
+    check("dispatcher ragged windows", 100, |rng| {
         let b = sample_step(rng, Corpus::CommonCrawl, 50_000, 32_768);
         for i in 0..pool.len() {
             let entry = pool.entry(i);
-            let counts = disp.microbatch_counts(entry, &b).map_err(|e| e.to_string())?;
-            if counts.len() != entry.strategy.pipelines.len() {
-                return Err("count per pipeline".into());
+            let windows = disp.microbatch_windows(entry, &b).map_err(|e| e.to_string())?;
+            if windows.len() != entry.strategy.pipelines.len() {
+                return Err("window lists per pipeline".into());
             }
-            if counts.iter().any(|&c| c == 0) {
-                return Err("pipeline starved of micro-batches".into());
+            // no pipeline is starved, every shape is well-formed, and no
+            // window exceeds the entry's scaled context
+            let cell_cap = entry.ctx.div_ceil(disp.cell_tokens) as usize;
+            for pipe in &windows {
+                if pipe.is_empty() {
+                    return Err("pipeline starved of micro-batches".into());
+                }
+                for mb in pipe {
+                    mb.validate().map_err(|e| e.to_string())?;
+                    if mb.rows.len() > disp.rows_per_mb {
+                        return Err(format!("{} rows above the grouping cap", mb.rows.len()));
+                    }
+                    if mb.rows.iter().any(|&r| r > cell_cap) {
+                        return Err(format!(
+                            "window of {} cells exceeds scaled ctx {cell_cap}",
+                            mb.seq_len
+                        ));
+                    }
+                    // the grouping rule: only equal-length windows share a
+                    // micro-batch, so dispatched steps never pad
+                    if mb.rows.iter().any(|&r| r != mb.seq_len) {
+                        return Err(format!("unequal rows {:?} grouped", mb.rows));
+                    }
+                }
             }
-            let total: usize = counts.iter().sum();
-            if total > disp.max_microbatches.max(entry.strategy.pipelines.len()) {
-                return Err(format!("quota {total} above clamp"));
-            }
-            // determinism: the same batch always apportions identically
-            let again = disp.microbatch_counts(entry, &b).map_err(|e| e.to_string())?;
-            if again != counts {
-                return Err("nondeterministic apportioning".into());
+            // determinism: the same batch always produces the same shapes
+            let again = disp.microbatch_windows(entry, &b).map_err(|e| e.to_string())?;
+            if again != windows {
+                return Err("nondeterministic window shapes".into());
             }
         }
         Ok(())
