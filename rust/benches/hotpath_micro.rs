@@ -196,7 +196,7 @@ fn main() {
 
     // ragged engine step: the dispatcher's real packed windows (6 × [2,2]
     // micro-batches per DP pipeline) vs the fixed-shape row above — the
-    // variable-shape interpreter path the temporal runtime drives
+    // variable-shape executor path the temporal runtime drives
     let ragged_strat = EngineStrategy::uniform("dp2-ragged", 2, 1, 1, tiny.layers, 1);
     let mut eng4 = Engine::with_runtime(Runtime::native(tiny), ragged_strat, 42, 1e-3).unwrap();
     let windows: Vec<Vec<hetu::engine::WindowShape>> = (0..2)
@@ -210,5 +210,33 @@ fn main() {
         std::hint::black_box(
             eng4.train_step(&mut |p, m| corpus4.window_for(&windows[p][m])).unwrap().loss,
         );
+    });
+
+    // ---- §7 progressive per-rank specialization. The lowering pass runs
+    // once per (strategy, micro-batch counts) and on every switch — this
+    // row is that re-specialization cost on the lowered C2 hetero
+    // encoding (2 uneven pipelines, TP tail, both schedule groups).
+    let c2e = hetu::strategy::lower(&c2, &tiny, &lopts).unwrap();
+    let c2_layout = ShardLayout::build(&tiny, &c2e).unwrap();
+    report("specialize lowered-C2 -> per-rank plans", it(500), || {
+        std::hint::black_box(
+            hetu::engine::specialize(&c2e, &c2_layout, false).unwrap().len(),
+        );
+    });
+
+    // the interleaved post-switch step: a cached hot switch queues its
+    // per-sender delivery batches, and the next step's executor rides
+    // them on wire lanes concurrent with compute (§6.2 measured
+    // interleave) — switch + first-step cost as one unit
+    report("hot-switch + interleaved first step", it(10), || {
+        pool.switch_engine(&mut eng3, 1).unwrap();
+        let a = eng3.train_step(&mut |_p, _m| corpus3.microbatch(b_sz, s_sz)).unwrap();
+        pool.switch_engine(&mut eng3, 0).unwrap();
+        let b = eng3.train_step(&mut |_p, _m| corpus3.microbatch(b_sz, s_sz)).unwrap();
+        assert!(
+            a.exposed_switch_s <= a.switch_delivery_s && b.exposed_switch_s <= b.switch_delivery_s,
+            "exposure is the non-overlapped remainder of the delivery"
+        );
+        std::hint::black_box(a.exposed_switch_s + b.exposed_switch_s);
     });
 }

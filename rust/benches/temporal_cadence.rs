@@ -41,7 +41,10 @@ fn main() {
     let cadence = vec![mk(vec![2048; 24]), mk(long), mk(vec![2048; 24])];
     let mut rpool = StrategyPool::new(tiny, default_pool_entries(&tiny).unwrap()).unwrap();
     let mut reng = rpool.spawn_engine(Runtime::native(tiny), 0, 7, 1e-3).unwrap();
-    let disp = Dispatcher::new(CostModel::new(ModelCfg::llama_32b()), DispatchPolicy::HetuB);
+    let mut disp = Dispatcher::new(CostModel::new(ModelCfg::llama_32b()), DispatchPolicy::HetuB);
+    // cell scaling derived from the pool's widest context, not the 32K
+    // constant (ROADMAP ragged follow-on; identical for the default pool)
+    disp.scale_cells_to_pool(&rpool, tiny.seq);
     let mut rcorpus = SyntheticCorpus::new(3, tiny.vocab);
     let rep = disp.run_stream(&mut reng, &mut rpool, &cadence, &mut rcorpus).expect("ragged cadence");
     assert!(rep.switches >= 2, "cadence must hot-switch, got {}", rep.switches);
@@ -54,12 +57,31 @@ fn main() {
         0,
         "no padded-context fallback path may execute on dispatched windows"
     );
+    // §7 measured interleave (the CI smoke's overlap contract): every
+    // step's exposed switch time is *measured* by the event-driven
+    // executor — the switch's per-sender delivery batches ride wire lanes
+    // inside the first post-switch step — and can never exceed the old
+    // accounted max(0, Σ delivery − makespan) bookkeeping
+    for s in &rep.steps {
+        assert!(
+            s.exposed_s <= s.exposed_bound_s + 1e-9,
+            "step {}: measured exposure {} exceeds the accounted bound {}",
+            s.step,
+            s.exposed_s,
+            s.exposed_bound_s
+        );
+    }
+    let measured: f64 = rep.steps.iter().map(|s| s.exposed_s).sum();
+    let bound: f64 = rep.steps.iter().map(|s| s.exposed_bound_s).sum();
     println!(
-        "ragged cadence: {} steps, {} switches, {} windows, {} engine tokens, 0 padded",
+        "ragged cadence: {} steps, {} switches, {} windows, {} engine tokens, 0 padded, \
+         measured exposed {:.3} ms (accounted bound {:.3} ms)",
         rep.steps.len(),
         rep.switches,
         rep.total_windows(),
-        rep.total_tokens()
+        rep.total_tokens(),
+        measured * 1e3,
+        bound * 1e3
     );
 
     // switch cadence: repeated short↔long transitions through the cache

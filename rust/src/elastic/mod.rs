@@ -110,13 +110,31 @@ pub fn heterogeneous_trace() -> Scenario {
 /// transition with the dead devices excluded as weight sources (the engine
 /// itself rejects survivor strategies that still schedule a dead device).
 /// The paper-scale analogue is [`plan_strategy_switch_avoiding`]; this one
-/// actually moves the surviving shards on the engine's mesh.
+/// actually moves the surviving shards on the engine's mesh. Always plans
+/// fresh; for a pool-managed engine prefer [`pool_failover`], which reuses
+/// the cached transition when the failed rank held no needed shard.
 pub fn engine_failover(
     engine: &mut crate::engine::Engine,
     survivor: crate::engine::EngineStrategy,
     dead: &[usize],
 ) -> Result<crate::engine::EngineSwitchReport> {
     engine.switch_to_avoiding(survivor, dead)
+}
+
+/// Pool-aware failover (§7.2 over cached pool transitions): drop the dead
+/// ranks' timelines (the engine re-specializes the survivors on its next
+/// step — DESIGN.md §7) and re-plan the pooled transition only when its
+/// cached `SwitchPlan` actually reads from a dead rank; when the failed
+/// rank holds no needed shard the cached plan executes untouched, an
+/// allocation-free cache hit. See
+/// [`StrategyPool::switch_engine_avoiding`](crate::temporal::StrategyPool).
+pub fn pool_failover(
+    pool: &mut crate::temporal::StrategyPool,
+    engine: &mut crate::engine::Engine,
+    to: usize,
+    dead: &[usize],
+) -> Result<crate::engine::EngineSwitchReport> {
+    pool.switch_engine_avoiding(engine, to, dead)
 }
 
 fn apply(cluster: &mut Cluster, e: &Event) {

@@ -1,7 +1,7 @@
-//! The schedule-driven forward/backward interpreter: per-stage pipeline
-//! tasks ordered by [`crate::spec::schedule`] (GPipe *and* 1F1B), layout-
-//! driven parameter init, token-weighted gradient synchronization, and
-//! optimizer application.
+//! Execution: the **event-driven per-rank executor** over specialized
+//! timelines ([`Engine::run_specialized`], DESIGN.md §7) plus the legacy
+//! global interpreter kept as the differential numerics oracle
+//! ([`Engine::run_pipeline`] / `Engine::train_step_reference`).
 //!
 //! Execution contract with the model artifacts (PJRT or native — see
 //! `python/compile/model.py` and [`crate::runtime::native`]):
@@ -10,7 +10,7 @@
 //!   the TP group and adds the residual;
 //! * block backward returns `(dx_partial, dparams_shard)`; the engine
 //!   computes `dx = dy + AllReduce(dx_partial)`;
-//! * the per-pipeline task order comes from
+//! * compute-task orders come from
 //!   [`stage_schedule`](crate::spec::schedule::stage_schedule): the same
 //!   orders the simulator replays, so GPipe and 1F1B run through one code
 //!   path with identical numerics (losses bit-identical, gradients equal up
@@ -25,13 +25,22 @@
 //!   running *different* micro-batch counts (uneven apportioning, §5) still
 //!   produce the exact global-mean gradient.
 //!
-//! While interpreting, the engine measures per-device compute seconds for
-//! every task and replays them through the cross-stage dependencies
-//! (`Fwd(m,s)` ⇐ `Fwd(m,s-1)`, `Bwd(m,s)` ⇐ `Bwd(m,s+1)`) — TP members
-//! concurrent, pipelines concurrent — yielding the measured-makespan
-//! estimate reported in [`StepStats`](super::StepStats) and cross-validated
-//! against the [`crate::sim`] step ranking.
+//! The executor walks each rank's
+//! [`RankPlan`](super::specialize::RankPlan) timeline with a ready rule
+//! (all dependency edges finished ∧ every participant rank is at the task)
+//! and measures every task's wall seconds; finish times propagate through
+//! the dependency edges (TP members concurrent, pipelines concurrent,
+//! global phases charged per-device) to the measured-makespan estimate in
+//! [`StepStats`](super::StepStats), cross-validated against the
+//! [`crate::sim`] step ranking. Because per-rank program order and the
+//! dependency edges are exactly the old interpreter's ready conditions,
+//! and the f64 loss sum replays [`SpecializedPlan::head_order`], the
+//! executor's losses are **bit-identical** to the interpreter's
+//! (`rust/tests/specialize_sweep.rs`). Injected switch deliveries ride
+//! per-sender *wire lanes* concurrent with compute — the §6.2 measured
+//! interleave (DESIGN.md §7.3).
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use crate::collectives::{extract_region, write_region, DeviceMem, Mesh};
@@ -41,6 +50,7 @@ use crate::testutil::Rng;
 use crate::{Error, Result};
 
 use super::layout::{full_shape, gkey, pkey, ShardLayout, SyncOp};
+use super::specialize::{SpecTaskKind, SpecializedPlan};
 use super::{Engine, EnginePipeline, MicroBatch, BLOCK_PARAMS};
 
 /// Deterministic parameter init: full tensors are generated from a
@@ -88,12 +98,33 @@ pub(crate) struct PipelineRun {
     pub makespan_s: f64,
 }
 
+/// Outcome of one specialized (event-driven) step execution.
+pub(crate) struct SpecRunOutcome {
+    /// Σ over micro-batches of `tokens · mean loss`, accumulated in the
+    /// old interpreter's pipeline-major head order (bit-identical f64).
+    pub weighted_loss: f64,
+    /// Real (unmasked) tokens processed.
+    pub tokens: u64,
+    /// Compute critical path through the per-rank timelines (global
+    /// phases charged per-device, as before).
+    pub makespan_s: f64,
+    /// Switch seconds the step could not hide: injected per-sender
+    /// delivery batches ride each sender's wire lane from step start,
+    /// concurrent with compute; the overhang beyond the compute critical
+    /// path is exposed (§6.2 measured interleave).
+    pub exposed_switch_s: f64,
+    /// Longest per-sender wire lane among the injected deliveries.
+    pub delivery_lane_s: f64,
+}
+
 impl Engine {
     /// Execute one pipeline's full step in the task order its schedule
-    /// prescribes. Tasks run as soon as their cross-stage dependency is
-    /// satisfied, exactly like the discrete-event simulator; per-stage
-    /// clocks accumulate the *measured* task durations to produce the
-    /// pipeline makespan.
+    /// prescribes — the **pre-specialization global interpreter**, kept
+    /// as the differential numerics oracle for the event-driven executor
+    /// (`Engine::train_step_reference`). Tasks run as soon as their
+    /// cross-stage dependency is satisfied, exactly like the
+    /// discrete-event simulator; per-stage clocks accumulate the
+    /// *measured* task durations to produce the pipeline makespan.
     pub(crate) fn run_pipeline(
         &mut self,
         pipe: &EnginePipeline,
@@ -177,6 +208,448 @@ impl Engine {
         }
         let makespan_s = clock.iter().copied().fold(0.0, f64::max);
         Ok(PipelineRun { weighted_loss, tokens, makespan_s })
+    }
+
+    /// Event-driven execution of a specialized step (DESIGN.md §7): walk
+    /// every rank's timeline, executing each task once all its dependency
+    /// edges are finished and every participant rank has reached it, and
+    /// replay the measured per-task durations through the same structure
+    /// for the makespan. `deliveries` are a preceding switch's per-sender
+    /// batches, injected onto per-sender wire lanes (§6.2 measured
+    /// interleave).
+    ///
+    /// `pipelines` must be the strategy snapshot the plan was specialized
+    /// from (the caller clones it, as the interpreter did); `batches` are
+    /// indexed `[pipeline][microbatch]`.
+    pub(crate) fn run_specialized(
+        &mut self,
+        plan: &SpecializedPlan,
+        pipelines: &[EnginePipeline],
+        batches: &[Vec<MicroBatch>],
+        deliveries: &[(usize, f64)],
+    ) -> Result<SpecRunOutcome> {
+        let n = plan.tasks.len();
+        let nranks = plan.ranks.len();
+        let rank_pos = |r: usize| {
+            plan.rank_index(r).expect("run_specialized: participant rank has a timeline")
+        };
+        let mut done = vec![false; n];
+        let mut finish = vec![0f64; n];
+        let mut clock = vec![0f64; nranks];
+        let mut head = vec![0usize; nranks];
+        let mut head_loss: BTreeMap<(usize, usize), (f32, u64)> = BTreeMap::new();
+        let mut tokens = 0u64;
+        let ndev = nranks.max(1) as f64;
+
+        let mut executed = 0usize;
+        while executed < n {
+            let mut progressed = false;
+            for ri in 0..nranks {
+                'rank: loop {
+                    let Some(&ti) = plan.ranks[ri].tasks.get(head[ri]) else { break };
+                    if done[ti] {
+                        head[ri] += 1;
+                        continue;
+                    }
+                    let task = &plan.tasks[ti];
+                    if !task.deps.iter().all(|&d| done[d]) {
+                        break 'rank;
+                    }
+                    // every participant rank must have reached this task
+                    let mut ready = 0f64;
+                    for &r in &task.ranks {
+                        let pos = rank_pos(r);
+                        if plan.ranks[pos].tasks.get(head[pos]) != Some(&ti) {
+                            break 'rank;
+                        }
+                        ready = ready.max(clock[pos]);
+                    }
+                    for &d in &task.deps {
+                        ready = ready.max(finish[d]);
+                    }
+
+                    let dur = match &task.kind {
+                        SpecTaskKind::FwdIn { pipe, stage, mb } => self.spec_fwd_in(
+                            &pipelines[*pipe],
+                            *pipe,
+                            *stage,
+                            *mb,
+                            &batches[*pipe][*mb],
+                        )?,
+                        SpecTaskKind::FwdGemm { pipe, stage, mb, layer } => {
+                            self.spec_fwd_gemm(&pipelines[*pipe], *pipe, *stage, *mb, *layer)?
+                        }
+                        SpecTaskKind::FwdTpSync { pipe, stage, mb, .. } => {
+                            self.spec_fwd_tp_sync(&pipelines[*pipe], *pipe, *stage, *mb)?
+                        }
+                        SpecTaskKind::BwdIn { pipe, stage, mb } => {
+                            let (dur, head_out) = self.spec_bwd_in(
+                                &pipelines[*pipe],
+                                *pipe,
+                                *stage,
+                                *mb,
+                                &batches[*pipe][*mb],
+                            )?;
+                            if let Some((loss, n_tok)) = head_out {
+                                head_loss.insert((*pipe, *mb), (loss, n_tok));
+                                tokens += n_tok;
+                            }
+                            dur
+                        }
+                        SpecTaskKind::BwdGemm { pipe, stage, mb, layer } => {
+                            self.spec_bwd_gemm(&pipelines[*pipe], *pipe, *stage, *mb, *layer)?
+                        }
+                        SpecTaskKind::BwdTpSync { pipe, stage, mb, .. } => {
+                            self.spec_bwd_tp_sync(&pipelines[*pipe], *pipe, *stage, *mb)?
+                        }
+                        SpecTaskKind::EmbedBwd { pipe, mb } => self.spec_embed_bwd(
+                            &pipelines[*pipe],
+                            *pipe,
+                            *mb,
+                            &batches[*pipe][*mb],
+                        )?,
+                        SpecTaskKind::GradReduce => {
+                            if tokens == 0 {
+                                return Err(Error::Engine(
+                                    "train_step: no tokens processed".into(),
+                                ));
+                            }
+                            let t0 = Instant::now();
+                            self.sync_gradients(tokens)?;
+                            // spread over the devices, concurrent in a
+                            // deployment: charge the per-device share
+                            t0.elapsed().as_secs_f64() / ndev
+                        }
+                        SpecTaskKind::OptimStep => {
+                            let t0 = Instant::now();
+                            self.apply_updates_local()?;
+                            t0.elapsed().as_secs_f64() / ndev
+                        }
+                        SpecTaskKind::ZeroExchange => {
+                            let t0 = Instant::now();
+                            self.exchange_zero1_slices()?;
+                            t0.elapsed().as_secs_f64() / ndev
+                        }
+                    };
+
+                    let end = ready + dur;
+                    finish[ti] = end;
+                    done[ti] = true;
+                    executed += 1;
+                    progressed = true;
+                    // advance every participant past consecutive done tasks
+                    for &r in &plan.tasks[ti].ranks {
+                        let pos = rank_pos(r);
+                        clock[pos] = end;
+                        while let Some(&x) = plan.ranks[pos].tasks.get(head[pos]) {
+                            if done[x] {
+                                head[pos] += 1;
+                            } else {
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+            if !progressed {
+                return Err(Error::Engine(format!(
+                    "specialized plan deadlock at {executed}/{n} tasks ({:?})",
+                    plan.schedule
+                )));
+            }
+        }
+
+        // f64 loss accumulation in the interpreter's order: pipeline-major,
+        // each pipeline summed separately in its head-retirement order,
+        // then added — bit-identical to the sequential-pipeline sums.
+        let mut weighted_loss = 0f64;
+        for (pi, order) in plan.head_order.iter().enumerate() {
+            let mut wp = 0f64;
+            for &mb in order {
+                if let Some(&(loss, n_tok)) = head_loss.get(&(pi, mb)) {
+                    wp += loss as f64 * n_tok as f64;
+                }
+            }
+            weighted_loss += wp;
+        }
+
+        let makespan_s = clock.iter().copied().fold(0.0, f64::max);
+        // §6.2 measured interleave: deliveries occupy per-sender wire
+        // lanes from step start (shards stream in first-use order ahead
+        // of need, the paper's overlap premise), concurrent with compute;
+        // back-to-back switches serialize per *sender*, not per switch,
+        // so the exposure is ≤ the old per-switch scalar bound
+        // max(0, Σ_switch delivery − makespan) — asserted in tests.
+        let mut lanes: BTreeMap<usize, f64> = BTreeMap::new();
+        for &(sender, secs) in deliveries {
+            *lanes.entry(sender).or_insert(0.0) += secs.max(0.0);
+        }
+        let delivery_lane_s = lanes.values().copied().fold(0.0, f64::max);
+        let exposed_switch_s = (delivery_lane_s - makespan_s).max(0.0);
+        Ok(SpecRunOutcome {
+            weighted_loss,
+            tokens,
+            makespan_s,
+            exposed_switch_s,
+            delivery_lane_s,
+        })
+    }
+
+    /// Activation key of one `(pipeline, micro-batch)` slot.
+    fn akey(pi: usize, mb: usize) -> String {
+        format!("act.p{pi}.mb{mb}")
+    }
+
+    /// Incoming-gradient key of one `(pipeline, micro-batch)` slot.
+    fn dkey(pi: usize, mb: usize) -> String {
+        format!("dact.p{pi}.mb{mb}")
+    }
+
+    /// Saved-block-input key (recompute-in-backward).
+    fn skey(pi: usize, mb: usize, l: u32) -> String {
+        format!("save.p{pi}.mb{mb}.L{l}")
+    }
+
+    /// [`SpecTaskKind::FwdIn`]: stage 0 embeds the micro-batch on its
+    /// root; later stages receive the activation hand-off from the
+    /// previous stage's root (freeing the producer's copies); both
+    /// broadcast over the TP group. Charged serially (root/boundary
+    /// work), as the interpreter did.
+    fn spec_fwd_in(
+        &mut self,
+        pipe: &EnginePipeline,
+        pi: usize,
+        si: usize,
+        mb: usize,
+        batch: &MicroBatch,
+    ) -> Result<f64> {
+        let stage = &pipe.stages[si];
+        let akey = Self::akey(pi, mb);
+        let t0 = Instant::now();
+        if si == 0 {
+            let (b, s) = (batch.n_seqs, batch.seq_len);
+            let root = stage.devices[0];
+            let tok = HostTensor::i32(vec![b, s], batch.tokens.clone())?;
+            let x0 = {
+                let emb = self.mesh.devices[root].get("emb")?;
+                let out = self.runtime.call_refs("embed_fwd", &[emb, &tok])?;
+                out.into_iter().next().unwrap()
+            };
+            self.mesh.devices[root].put(&akey, x0);
+        } else {
+            let prev = &pipe.stages[si - 1];
+            self.mesh.send(prev.devices[0], stage.devices[0], &akey)?;
+            // the producer's copies are no longer needed
+            for &d in &prev.devices {
+                if !stage.devices.contains(&d) {
+                    let _ = self.mesh.devices[d].take(&akey);
+                }
+            }
+        }
+        self.mesh.broadcast(stage.devices[0], &stage.devices, &akey)?;
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    /// [`SpecTaskKind::FwdGemm`]: save the block input for
+    /// recompute-in-backward, then run every TP member's partial forward
+    /// GEMMs. TP members are concurrent: the duration is the slowest
+    /// member plus the serial remainder.
+    fn spec_fwd_gemm(
+        &mut self,
+        pipe: &EnginePipeline,
+        pi: usize,
+        si: usize,
+        mb: usize,
+        l: u32,
+    ) -> Result<f64> {
+        let stage = &pipe.stages[si];
+        let akey = Self::akey(pi, mb);
+        let art = format!("block_fwd_tp{}", stage.tp());
+        let t0 = Instant::now();
+        let mut compute = vec![0f64; stage.devices.len()];
+        for &d in &stage.devices {
+            let x = self.mesh.devices[d].get(&akey)?.clone();
+            self.mesh.devices[d].put(&Self::skey(pi, mb, l), x);
+        }
+        for (j, &d) in stage.devices.iter().enumerate() {
+            let dev = &self.mesh.devices[d];
+            let mut inputs: Vec<&HostTensor> = Vec::with_capacity(9);
+            for p in BLOCK_PARAMS {
+                inputs.push(dev.get(&pkey(l, p))?);
+            }
+            inputs.push(dev.get(&akey)?);
+            let t1 = Instant::now();
+            let y_part = self.runtime.call_refs(&art, &inputs)?.into_iter().next().unwrap();
+            compute[j] += t1.elapsed().as_secs_f64();
+            self.mesh.devices[d].put("part", y_part);
+        }
+        Ok(task_duration(t0.elapsed().as_secs_f64(), &compute))
+    }
+
+    /// [`SpecTaskKind::FwdTpSync`]: partial-sum all-reduce over the TP
+    /// group + residual add (serial comm charge).
+    fn spec_fwd_tp_sync(
+        &mut self,
+        pipe: &EnginePipeline,
+        pi: usize,
+        si: usize,
+        mb: usize,
+    ) -> Result<f64> {
+        let stage = &pipe.stages[si];
+        let akey = Self::akey(pi, mb);
+        let t0 = Instant::now();
+        self.mesh.all_reduce(&stage.devices, "part")?;
+        for &d in &stage.devices {
+            let part = self.mesh.devices[d].get("part")?.clone();
+            let x = self.mesh.devices[d].get_mut(&akey)?;
+            x.add_assign(&part)?;
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    /// [`SpecTaskKind::BwdIn`]: the last stage runs the fused head (loss
+    /// + head gradients pre-scaled by the micro-batch's real token count,
+    /// freeing the stage activation); earlier stages receive the gradient
+    /// hand-off; both broadcast. Returns the duration and, on the last
+    /// stage, `(mean loss, tokens)`.
+    fn spec_bwd_in(
+        &mut self,
+        pipe: &EnginePipeline,
+        pi: usize,
+        si: usize,
+        mb: usize,
+        batch: &MicroBatch,
+    ) -> Result<(f64, Option<(f32, u64)>)> {
+        let stage = &pipe.stages[si];
+        let last = pipe.stages.len() - 1;
+        let akey = Self::akey(pi, mb);
+        let dkey = Self::dkey(pi, mb);
+        let t0 = Instant::now();
+        let mut head_out = None;
+        if si == last {
+            let (b, s) = (batch.n_seqs, batch.seq_len);
+            // token weighting counts *real* (unmasked) positions
+            let tokens = batch.real_tokens();
+            let w = tokens as f32;
+            let root = stage.devices[0];
+            let tgt = HostTensor::i32(vec![b, s], batch.targets.clone())?;
+            let (loss, mut dx, mut dgf, mut dwout) = {
+                let dev = &self.mesh.devices[root];
+                let out = self.runtime.call_refs(
+                    "head_step",
+                    &[dev.get("gf")?, dev.get("wout")?, dev.get(&akey)?, &tgt],
+                )?;
+                let mut it = out.into_iter();
+                let loss = it.next().unwrap().as_f32()?[0];
+                (loss, it.next().unwrap(), it.next().unwrap(), it.next().unwrap())
+            };
+            dx.scale(w)?;
+            dgf.scale(w)?;
+            dwout.scale(w)?;
+            accumulate(&mut self.mesh.devices[root], "grad.gf", dgf)?;
+            accumulate(&mut self.mesh.devices[root], "grad.wout", dwout)?;
+            self.mesh.devices[root].put(&dkey, dx);
+            for &d in &stage.devices {
+                let _ = self.mesh.devices[d].take(&akey);
+            }
+            head_out = Some((loss, tokens));
+        } else {
+            let next = &pipe.stages[si + 1];
+            self.mesh.send(next.devices[0], stage.devices[0], &dkey)?;
+            for &d in &next.devices {
+                if !stage.devices.contains(&d) {
+                    let _ = self.mesh.devices[d].take(&dkey);
+                }
+            }
+        }
+        self.mesh.broadcast(stage.devices[0], &stage.devices, &dkey)?;
+        Ok((t0.elapsed().as_secs_f64(), head_out))
+    }
+
+    /// [`SpecTaskKind::BwdGemm`]: every TP member's backward GEMMs for
+    /// one layer, accumulating parameter gradients and freeing the saved
+    /// block input.
+    fn spec_bwd_gemm(
+        &mut self,
+        pipe: &EnginePipeline,
+        pi: usize,
+        si: usize,
+        mb: usize,
+        l: u32,
+    ) -> Result<f64> {
+        let stage = &pipe.stages[si];
+        let dkey = Self::dkey(pi, mb);
+        let skey = Self::skey(pi, mb, l);
+        let art = format!("block_bwd_tp{}", stage.tp());
+        let t0 = Instant::now();
+        let mut compute = vec![0f64; stage.devices.len()];
+        for (j, &d) in stage.devices.iter().enumerate() {
+            let dev = &self.mesh.devices[d];
+            let mut inputs: Vec<&HostTensor> = Vec::with_capacity(10);
+            for p in BLOCK_PARAMS {
+                inputs.push(dev.get(&pkey(l, p))?);
+            }
+            inputs.push(dev.get(&skey)?);
+            inputs.push(dev.get(&dkey)?);
+            let t1 = Instant::now();
+            let outs = self.runtime.call_refs(&art, &inputs)?;
+            compute[j] += t1.elapsed().as_secs_f64();
+            let mut it = outs.into_iter();
+            let dx_part = it.next().unwrap();
+            self.mesh.devices[d].put("dpart", dx_part);
+            for p in BLOCK_PARAMS {
+                accumulate(&mut self.mesh.devices[d], &gkey(l, p), it.next().unwrap())?;
+            }
+            // free the saved activation
+            let _ = self.mesh.devices[d].take(&skey);
+        }
+        Ok(task_duration(t0.elapsed().as_secs_f64(), &compute))
+    }
+
+    /// [`SpecTaskKind::BwdTpSync`]: dx-partial all-reduce + add.
+    fn spec_bwd_tp_sync(
+        &mut self,
+        pipe: &EnginePipeline,
+        pi: usize,
+        si: usize,
+        mb: usize,
+    ) -> Result<f64> {
+        let stage = &pipe.stages[si];
+        let dkey = Self::dkey(pi, mb);
+        let t0 = Instant::now();
+        self.mesh.all_reduce(&stage.devices, "dpart")?;
+        for &d in &stage.devices {
+            let dpart = self.mesh.devices[d].get("dpart")?.clone();
+            let dx = self.mesh.devices[d].get_mut(&dkey)?;
+            dx.add_assign(&dpart)?;
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    /// [`SpecTaskKind::EmbedBwd`]: stage-0 epilogue — embedding gradient
+    /// on the root, then free the incoming gradient on the whole stage.
+    fn spec_embed_bwd(
+        &mut self,
+        pipe: &EnginePipeline,
+        pi: usize,
+        mb: usize,
+        batch: &MicroBatch,
+    ) -> Result<f64> {
+        let stage = &pipe.stages[0];
+        let dkey = Self::dkey(pi, mb);
+        let (b, s) = (batch.n_seqs, batch.seq_len);
+        let t0 = Instant::now();
+        let root = stage.devices[0];
+        let tok = HostTensor::i32(vec![b, s], batch.tokens.clone())?;
+        let demb = {
+            let dx0 = self.mesh.devices[root].get(&dkey)?;
+            self.runtime.call_refs("embed_bwd", &[&tok, dx0])?.into_iter().next().unwrap()
+        };
+        accumulate(&mut self.mesh.devices[root], "grad.emb", demb)?;
+        for &d in &stage.devices {
+            let _ = self.mesh.devices[d].take(&dkey);
+        }
+        Ok(t0.elapsed().as_secs_f64())
     }
 
     /// Forward of micro-batch `mb` through stage `si`: receive (or embed)
@@ -393,10 +866,27 @@ impl Engine {
     /// Under ZeRO-1 (`Engine::set_zero1`) each replica-set member updates
     /// only its DP partition (partition-sized moments), spectators drop
     /// their gradient, and the updated parameter slices are exchanged
-    /// afterwards — the ZeRO-1 all-gather, accounted on the mesh wire.
-    /// Because AdamW is elementwise over slice-synced gradients, the
-    /// trajectory is bit-identical to the replicated path.
+    /// afterwards ([`Engine::exchange_zero1_slices`]) — the ZeRO-1
+    /// all-gather, accounted on the mesh wire. Because AdamW is
+    /// elementwise over slice-synced gradients, the trajectory is
+    /// bit-identical to the replicated path.
+    ///
+    /// The specialized executor runs the two halves as distinct tasks
+    /// ([`SpecTaskKind::OptimStep`] compute, then the
+    /// [`SpecTaskKind::ZeroExchange`] comm task); this composition serves
+    /// the reference interpreter path.
     pub(crate) fn apply_updates(&mut self) -> Result<()> {
+        self.apply_updates_local()?;
+        if self.zero1 {
+            self.exchange_zero1_slices()?;
+        }
+        Ok(())
+    }
+
+    /// The local half of the optimizer step: AdamW on every device's own
+    /// shards (ZeRO-1 partition owners update only their slice,
+    /// spectators drop their gradient). No wire traffic.
+    pub(crate) fn apply_updates_local(&mut self) -> Result<()> {
         let step = self.step + 1;
         if !self.zero1 {
             for (dev, param_key, grad_key) in &self.layout.update_ops {
@@ -421,7 +911,13 @@ impl Engine {
                 }
             }
         }
-        // exchange updated parameter slices within each replica set
+        Ok(())
+    }
+
+    /// The comm half of the ZeRO-1 optimizer step: exchange updated
+    /// parameter slices within each replica set (one grouped all-gather
+    /// per set, accounted on the mesh wire).
+    pub(crate) fn exchange_zero1_slices(&mut self) -> Result<()> {
         for g in &self.layout.zero_groups {
             for (owner, region) in &g.parts {
                 let piece = extract_region(self.mesh.devices[*owner].get(&g.key)?, region)?;

@@ -9,18 +9,24 @@
 //! tests compare multi-device losses/gradients against the single-device
 //! oracle configuration.
 //!
-//! The engine is layered (DESIGN.md §4): [`layout`] holds the
+//! The engine is layered (DESIGN.md §4, §7): [`layout`] holds the
 //! [`ShardLayout`] — the typed `(layer, param, shard)` ownership map with
 //! cached sync/update/ownership plans, computed once per strategy, whose
 //! region-based bookkeeping also enables per-layer heterogeneous TP;
-//! [`exec`] is the forward/backward interpreter plus the layout-driven
-//! per-step passes; [`switch`] executes §6 strategy transitions from a
-//! [`comm::FusedBsrPlan`](crate::comm::FusedBsrPlan); [`optim`] is AdamW
-//! on each device's local shards.
+//! [`specialize`] lowers a strategy + layout + schedule into per-rank
+//! [`RankPlan`] timelines with communication as explicit tasks; [`exec`]
+//! is the event-driven executor over those timelines (plus the legacy
+//! global interpreter, kept as the differential numerics oracle);
+//! [`switch`] executes §6 strategy transitions from a
+//! [`comm::FusedBsrPlan`](crate::comm::FusedBsrPlan), handing its
+//! per-sender delivery batches to the first post-switch step for the
+//! §6.2 measured interleave; [`optim`] is AdamW on each device's local
+//! shards.
 
 pub mod exec;
 pub mod layout;
 pub mod optim;
+pub mod specialize;
 pub mod switch;
 
 use std::sync::Arc;
@@ -33,6 +39,7 @@ use crate::{Error, Result};
 
 pub use layout::{ShardLayout, SyncOp, ZeroGroup};
 pub use optim::AdamW;
+pub use specialize::{specialize, RankPlan, SpecTask, SpecTaskKind, SpecializedPlan};
 pub use switch::{build_moves, plan_switch, EngineSwitchReport, MoveTarget, SwitchPlan};
 
 /// The 8 per-block parameter names, artifact input order.
@@ -188,6 +195,17 @@ impl MicroBatch {
         self.targets.iter().filter(|&&t| t >= 0).count() as u64
     }
 
+    /// Real (unmasked) token positions of one row — the same `-1`
+    /// padding sentinel as [`MicroBatch::real_tokens`], kept in one
+    /// place so the window-contract validation and the token-weighted
+    /// sync can never disagree on the mask convention.
+    pub fn real_tokens_in_row(&self, row: usize) -> usize {
+        self.targets[row * self.seq_len..(row + 1) * self.seq_len]
+            .iter()
+            .filter(|&&t| t >= 0)
+            .count()
+    }
+
     /// All positions, padding included (`n_seqs · seq_len`).
     pub fn positions(&self) -> u64 {
         (self.n_seqs * self.seq_len) as u64
@@ -256,6 +274,18 @@ pub struct StepStats {
     /// Padded (masked) positions executed — 0 when every window ran at
     /// its true ragged length.
     pub padded: u64,
+    /// Switch seconds this step could *not* hide — the §6.2 **measured**
+    /// interleave: a preceding switch's per-sender delivery batches ride
+    /// each sender's wire lane from step start, concurrent with the
+    /// step's compute timelines, and only the overhang beyond the compute
+    /// critical path is exposed. Back-to-back switches serialize per
+    /// sender (not per switch), so this is ≤ the old accounted
+    /// `max(0, Σ delivery − makespan)` bound. 0 when no switch preceded
+    /// the step.
+    pub exposed_switch_s: f64,
+    /// Longest per-sender wire lane among the deliveries this step
+    /// interleaved (0 when none were pending).
+    pub switch_delivery_s: f64,
 }
 
 /// The engine: runtime + mesh + strategy + cached layout + optimizer.
@@ -289,6 +319,15 @@ pub struct Engine {
     /// partition of `m.*`/`v.*`, exchanging updated parameter slices after
     /// the optimizer step). See [`layout::ZeroGroup`].
     pub zero1: bool,
+    /// The cached per-rank specialization of the current strategy
+    /// (DESIGN.md §7): built on first use, rebuilt whenever the strategy,
+    /// micro-batch counts, or ZeRO-1 mode change. `None` ⇒ the next
+    /// [`Engine::train_step`] re-specializes.
+    pub(crate) spec: Option<Arc<SpecializedPlan>>,
+    /// Per-sender delivery batches of switches executed since the last
+    /// step, injected into the next step's timelines as wire-lane tasks
+    /// (§6.2 measured interleave); drained by [`Engine::train_step`].
+    pub(crate) pending_deliveries: Vec<(usize, f64)>,
     pub(crate) step: u64,
 }
 
@@ -328,6 +367,8 @@ impl Engine {
             opt: AdamW::new(lr),
             topology: None,
             zero1: false,
+            spec: None,
+            pending_deliveries: vec![],
             step: 0,
         })
     }
@@ -342,6 +383,7 @@ impl Engine {
             ));
         }
         self.zero1 = on;
+        self.spec = None; // the ZeroExchange task appears/disappears
         Ok(())
     }
 
@@ -384,6 +426,9 @@ impl Engine {
             p.num_microbatches = ws.len();
         }
         self.mb_windows = Some(windows.to_vec());
+        // no spec invalidation: the rank timelines depend only on the
+        // per-pipeline counts, which `specialized_plan` revalidates —
+        // repeated equal-count steps keep the cached specialization
         Ok(())
     }
 
@@ -405,6 +450,7 @@ impl Engine {
             p.num_microbatches = c;
         }
         self.mb_windows = None;
+        // `specialized_plan` revalidates the counts (see set_microbatches)
         Ok(())
     }
 
@@ -432,32 +478,19 @@ impl Engine {
         Ok(())
     }
 
-    /// Run one training step over per-pipeline micro-batch providers.
-    ///
-    /// `data(pipeline, mb)` returns the micro-batch for that slot; it is
-    /// called in pipeline-major order (pipeline 0 slots first), so a
-    /// stateful corpus feeds every strategy the same stream.
-    ///
-    /// Each pipeline executes the task order of its strategy's
-    /// [`ScheduleKind`] (GPipe or 1F1B); gradients are synchronized with
-    /// token weighting, so pipelines may run *different* micro-batch counts
-    /// (the paper's uneven apportioning) and still reduce to the exact
-    /// global-mean gradient.
-    pub fn train_step(
-        &mut self,
+    /// Validate and prefetch one step's micro-batches in pipeline-major
+    /// slot order (the data-stream contract), checking each ragged shape
+    /// — internally and, when a window contract is set, against the
+    /// prescribed per-slot shapes. Returns the batches plus the total
+    /// executed positions (padding included).
+    fn prefetch_batches(
+        &self,
         data: &mut dyn FnMut(usize, usize) -> MicroBatch,
-    ) -> Result<StepStats> {
-        let wire0 = self.mesh.wire_elems;
-        let ops0 = self.mesh.ops;
-
-        let pipelines = self.strategy.pipelines.clone();
-        let kind = self.strategy.schedule;
-        // prefetch in pipeline-major slot order (the data-stream contract),
-        // validating each ragged shape — internally and, when a window
-        // contract is set, against the prescribed per-slot shapes
-        let mut batches: Vec<Vec<MicroBatch>> = Vec::with_capacity(pipelines.len());
+    ) -> Result<(Vec<Vec<MicroBatch>>, u64)> {
+        let mut batches: Vec<Vec<MicroBatch>> =
+            Vec::with_capacity(self.strategy.pipelines.len());
         let mut positions = 0u64;
-        for (pi, p) in pipelines.iter().enumerate() {
+        for (pi, p) in self.strategy.pipelines.iter().enumerate() {
             let mut v = Vec::with_capacity(p.num_microbatches);
             for mb in 0..p.num_microbatches {
                 let batch = data(pi, mb);
@@ -486,12 +519,105 @@ impl Engine {
                             shape.seq_len
                         )));
                     }
+                    // the per-row real lengths are part of the contract
+                    // too: a row with the wrong unmasked count would
+                    // silently skew the token-weighted sync and the
+                    // padded-position accounting
+                    for (row, &want) in shape.rows.iter().enumerate() {
+                        let real = batch.real_tokens_in_row(row);
+                        if real != want {
+                            return Err(Error::Engine(format!(
+                                "train_step: micro-batch ({pi},{mb}) row {row} holds \
+                                 {real} real tokens but the window contract prescribes \
+                                 {want}"
+                            )));
+                        }
+                    }
                 }
                 positions += batch.positions();
                 v.push(batch);
             }
             batches.push(v);
         }
+        Ok((batches, positions))
+    }
+
+    /// The per-rank specialization of the current strategy (DESIGN.md
+    /// §7), from the engine's cache when the strategy, schedule, and
+    /// micro-batch counts are unchanged — otherwise rebuilt (the
+    /// per-switch re-specialization cost the `hotpath_micro` "specialize"
+    /// row tracks).
+    pub fn specialized_plan(&mut self) -> Result<Arc<SpecializedPlan>> {
+        let counts: Vec<usize> =
+            self.strategy.pipelines.iter().map(|p| p.num_microbatches).collect();
+        if let Some(p) = &self.spec {
+            if p.num_microbatches == counts && p.schedule == self.strategy.schedule {
+                return Ok(Arc::clone(p));
+            }
+        }
+        let p = Arc::new(specialize(&self.strategy, &self.layout, self.zero1)?);
+        self.spec = Some(Arc::clone(&p));
+        Ok(p)
+    }
+
+    /// Run one training step over per-pipeline micro-batch providers.
+    ///
+    /// `data(pipeline, mb)` returns the micro-batch for that slot; it is
+    /// called in pipeline-major order (pipeline 0 slots first), so a
+    /// stateful corpus feeds every strategy the same stream.
+    ///
+    /// The step executes the **specialize-then-execute pipeline**
+    /// (DESIGN.md §7): the strategy's cached per-rank [`RankPlan`]
+    /// timelines — compute tasks from the strategy's [`ScheduleKind`]
+    /// (GPipe or 1F1B), communication as explicit tasks — run under the
+    /// event-driven executor, numerically bit-identical to the legacy
+    /// global interpreter ([`Engine::train_step_reference`]). Gradients
+    /// are synchronized with token weighting, so pipelines may run
+    /// *different* micro-batch counts (the paper's uneven apportioning)
+    /// and still reduce to the exact global-mean gradient. A preceding
+    /// switch's per-sender delivery batches are injected into this step's
+    /// timelines and only their non-overlapped remainder is exposed
+    /// ([`StepStats::exposed_switch_s`]).
+    pub fn train_step(
+        &mut self,
+        data: &mut dyn FnMut(usize, usize) -> MicroBatch,
+    ) -> Result<StepStats> {
+        let wire0 = self.mesh.wire_elems;
+        let ops0 = self.mesh.ops;
+        let (batches, positions) = self.prefetch_batches(data)?;
+        let pipelines = self.strategy.pipelines.clone();
+        let plan = self.specialized_plan()?;
+        let deliveries = std::mem::take(&mut self.pending_deliveries);
+        let out = self.run_specialized(&plan, &pipelines, &batches, &deliveries)?;
+        self.step += 1;
+        Ok(StepStats {
+            loss: (out.weighted_loss / out.tokens as f64) as f32,
+            wire_elems: self.mesh.wire_elems - wire0,
+            comm_ops: self.mesh.ops - ops0,
+            makespan_s: out.makespan_s,
+            tokens: out.tokens,
+            padded: positions.saturating_sub(out.tokens),
+            exposed_switch_s: out.exposed_switch_s,
+            switch_delivery_s: out.delivery_lane_s,
+        })
+    }
+
+    /// One training step through the **pre-specialization global
+    /// interpreter** — the sequential-pipelines schedule replay the
+    /// engine ran before DESIGN.md §7. Kept as the differential numerics
+    /// oracle: `rust/tests/specialize_sweep.rs` asserts
+    /// [`Engine::train_step`]'s losses are bit-identical to this path on
+    /// the lowered C1/C2/C6 strategies under both schedules. Ignores
+    /// pending switch deliveries (the §6.2 interleave is executor-only).
+    pub fn train_step_reference(
+        &mut self,
+        data: &mut dyn FnMut(usize, usize) -> MicroBatch,
+    ) -> Result<StepStats> {
+        let wire0 = self.mesh.wire_elems;
+        let ops0 = self.mesh.ops;
+        let (batches, positions) = self.prefetch_batches(data)?;
+        let pipelines = self.strategy.pipelines.clone();
+        let kind = self.strategy.schedule;
 
         let mut weighted_loss = 0f64;
         let mut total_tokens = 0u64;
@@ -521,6 +647,8 @@ impl Engine {
             makespan_s: makespan + sync_s / ndev as f64,
             tokens: total_tokens,
             padded: positions.saturating_sub(total_tokens),
+            exposed_switch_s: 0.0,
+            switch_delivery_s: 0.0,
         })
     }
 }

@@ -1,0 +1,617 @@
+//! Progressive per-rank graph specialization (DESIGN.md §7).
+//!
+//! The paper's answer to spatial heterogeneity is that every device ends
+//! up with its *own* specialized execution logic — an MPMD program, not
+//! one global schedule replayed for all devices at once. This pass lowers
+//! an [`EngineStrategy`] + [`ShardLayout`] + pipeline schedule into
+//! exactly that shape: one [`RankPlan`] (a device-local ordered timeline)
+//! per mesh rank, whose **compute** tasks come from
+//! [`crate::spec::schedule`] and whose **communication** — the p2p
+//! activation/gradient hand-offs, the per-layer TP partial-sum syncs, the
+//! token-weighted DP gradient reduction, and the ZeRO-1 slice exchange —
+//! is materialized as explicit tasks with dependency edges.
+//!
+//! Contracts (property-swept in `rust/tests/specialize_sweep.rs`):
+//!
+//! * **Schedule reconstruction.** The union of all rank plans
+//!   reconstructs the old global schedule exactly: restricting any stage
+//!   device's timeline to that stage's [`FwdIn`](SpecTaskKind::FwdIn)/
+//!   [`BwdIn`](SpecTaskKind::BwdIn) tasks yields precisely
+//!   [`stage_schedule`](crate::spec::schedule::stage_schedule)'s task
+//!   order, and the per-layer GEMM/sync tasks of each group tile the
+//!   stage's layer range once.
+//! * **Dependency preservation.** The cross-stage edges are the
+//!   interpreter's ready conditions verbatim: `Fwd(m, s)` ⇐ `Fwd(m, s-1)`
+//!   (via the hand-off task), `Bwd(m, s)` ⇐ `Bwd(m, s+1)`, and the last
+//!   stage's backward ⇐ its own forward. Together with per-rank program
+//!   order they admit exactly the same executions as the old global
+//!   interpreter, so the event-driven executor
+//!   ([`Engine::run_specialized`](super::Engine)) is numerically
+//!   bit-identical to it.
+//! * **Pull-model hand-offs.** A p2p hand-off task sits on the
+//!   *consuming* stage's timelines (its `src` field names the producing
+//!   devices) — the same pull semantics the interpreter used, which keeps
+//!   1F1B free of send-side ordering deadlocks.
+//!
+//! Specialization runs once per `(strategy, micro-batch counts, zero1)`
+//! and is cached on the engine; switches and micro-batch retuning
+//! invalidate the cache (re-specialization is the per-switch cost the
+//! `hotpath_micro` "specialize" row tracks). Because communication is
+//! just tasks, the executor can inject a switch's per-sender delivery
+//! batches into the first post-switch step's timelines — the §6.2
+//! *measured* interleave (DESIGN.md §7.3).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::spec::schedule::{full_schedule, ScheduleKind, TaskKind};
+use crate::{Error, Result};
+
+use super::layout::ShardLayout;
+use super::EngineStrategy;
+
+/// What one specialized task does. Compute kinds carry the schedule
+/// coordinates they were lowered from; comm kinds are the §6.2 comm-task
+/// taxonomy (DESIGN.md §7.2).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SpecTaskKind {
+    /// Forward stage input: stage 0 embeds the micro-batch on its root,
+    /// later stages receive the p2p activation hand-off from the previous
+    /// stage's root (freeing the producer's copies); both broadcast the
+    /// activation over the TP group.
+    FwdIn {
+        /// Pipeline.
+        pipe: usize,
+        /// Stage.
+        stage: usize,
+        /// Micro-batch.
+        mb: usize,
+    },
+    /// One layer's forward GEMMs — TP members run concurrently (the
+    /// block input is saved for recompute-in-backward first).
+    FwdGemm {
+        /// Pipeline.
+        pipe: usize,
+        /// Stage.
+        stage: usize,
+        /// Micro-batch.
+        mb: usize,
+        /// Layer.
+        layer: u32,
+    },
+    /// TP sync of one forward layer: partial-sum all-reduce over the TP
+    /// group + residual add.
+    FwdTpSync {
+        /// Pipeline.
+        pipe: usize,
+        /// Stage.
+        stage: usize,
+        /// Micro-batch.
+        mb: usize,
+        /// Layer.
+        layer: u32,
+    },
+    /// Backward stage input: the last stage runs the fused head (loss +
+    /// token-scaled head gradients, freeing the stage activation),
+    /// earlier stages receive the p2p gradient hand-off; both broadcast
+    /// the incoming gradient over the TP group.
+    BwdIn {
+        /// Pipeline.
+        pipe: usize,
+        /// Stage.
+        stage: usize,
+        /// Micro-batch.
+        mb: usize,
+    },
+    /// One layer's backward GEMMs + parameter-gradient accumulation (the
+    /// saved block input is consumed and freed).
+    BwdGemm {
+        /// Pipeline.
+        pipe: usize,
+        /// Stage.
+        stage: usize,
+        /// Micro-batch.
+        mb: usize,
+        /// Layer.
+        layer: u32,
+    },
+    /// TP sync of one backward layer: dx-partial all-reduce + add.
+    BwdTpSync {
+        /// Pipeline.
+        pipe: usize,
+        /// Stage.
+        stage: usize,
+        /// Micro-batch.
+        mb: usize,
+        /// Layer.
+        layer: u32,
+    },
+    /// Stage-0 backward epilogue: embedding gradient + dact free.
+    EmbedBwd {
+        /// Pipeline.
+        pipe: usize,
+        /// Micro-batch.
+        mb: usize,
+    },
+    /// Token-weighted DP gradient reduction — the [`ShardLayout`]'s
+    /// cached slice-grid plan plus the embedding/head reductions and the
+    /// `1/total_tokens` scaling.
+    GradReduce,
+    /// Optimizer application on every device's local shards (ZeRO-1
+    /// partition owners update only their slice).
+    OptimStep,
+    /// ZeRO-1 updated-parameter slice exchange after the optimizer (only
+    /// present when the engine shards optimizer states).
+    ZeroExchange,
+}
+
+impl SpecTaskKind {
+    /// True for communication tasks (the §6.2 taxonomy); compute kinds
+    /// return false. `FwdIn`/`BwdIn` count as comm: the stage-0 embed and
+    /// last-stage head calls are folded into the hand-off slot and
+    /// charged serially, exactly as the old interpreter accounted them.
+    pub fn is_comm(&self) -> bool {
+        !matches!(
+            self,
+            SpecTaskKind::FwdGemm { .. }
+                | SpecTaskKind::BwdGemm { .. }
+                | SpecTaskKind::EmbedBwd { .. }
+                | SpecTaskKind::OptimStep
+        )
+    }
+
+    /// The `(pipe, stage, mb)` coordinates of a per-group task, `None`
+    /// for the global step phases.
+    pub fn group(&self) -> Option<(usize, usize, usize)> {
+        match *self {
+            SpecTaskKind::FwdIn { pipe, stage, mb }
+            | SpecTaskKind::FwdGemm { pipe, stage, mb, .. }
+            | SpecTaskKind::FwdTpSync { pipe, stage, mb, .. }
+            | SpecTaskKind::BwdIn { pipe, stage, mb }
+            | SpecTaskKind::BwdGemm { pipe, stage, mb, .. }
+            | SpecTaskKind::BwdTpSync { pipe, stage, mb, .. } => Some((pipe, stage, mb)),
+            SpecTaskKind::EmbedBwd { pipe, mb } => Some((pipe, 0, mb)),
+            _ => None,
+        }
+    }
+}
+
+/// One specialized task: what it does, the ranks whose timelines carry
+/// it, the sending endpoints of a p2p hand-off, and its dependency edges.
+#[derive(Clone, Debug)]
+pub struct SpecTask {
+    /// The task.
+    pub kind: SpecTaskKind,
+    /// Mesh ranks executing the task (TP-group order). For p2p hand-offs
+    /// these are the *consuming* stage's devices — the pull model; the
+    /// producing endpoints are in `src`.
+    pub ranks: Vec<usize>,
+    /// Sending endpoints of a p2p hand-off (the adjacent stage's
+    /// devices); empty for intra-stage comm and compute tasks.
+    pub src: Vec<usize>,
+    /// Task indices (into [`SpecializedPlan::tasks`]) that must complete
+    /// before this one starts, in addition to per-rank program order.
+    pub deps: Vec<usize>,
+}
+
+/// A device-local timeline: the ordered task indices one mesh rank
+/// executes — its *specialized program*.
+#[derive(Clone, Debug)]
+pub struct RankPlan {
+    /// Mesh rank.
+    pub rank: usize,
+    /// Ordered indices into the owning [`SpecializedPlan::tasks`].
+    pub tasks: Vec<usize>,
+}
+
+/// One specialized step: the task table, the per-rank timelines, and the
+/// bookkeeping the executor needs to reproduce the old interpreter's
+/// accumulation order bit-for-bit.
+#[derive(Clone, Debug)]
+pub struct SpecializedPlan {
+    /// Every task of the step (compute + comm).
+    pub tasks: Vec<SpecTask>,
+    /// Device-local timelines, ascending by mesh rank.
+    pub ranks: Vec<RankPlan>,
+    /// Per pipeline: micro-batch indices in the order the last stage's
+    /// schedule retires backward tasks — the loss-accumulation order of
+    /// the pre-specialization interpreter (keeps the f64 loss sum
+    /// bit-identical).
+    pub head_order: Vec<Vec<usize>>,
+    /// Schedule the compute tasks were lowered from.
+    pub schedule: ScheduleKind,
+    /// Per-pipeline micro-batch counts at specialization time; the plan
+    /// is rebuilt when these change (`Engine::set_microbatches`).
+    pub num_microbatches: Vec<usize>,
+}
+
+impl SpecializedPlan {
+    /// Total tasks.
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// True when the plan has no tasks (never: every strategy has at
+    /// least the global phases).
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Communication tasks in the plan (the §6.2 taxonomy entries).
+    pub fn num_comm_tasks(&self) -> usize {
+        self.tasks.iter().filter(|t| t.kind.is_comm()).count()
+    }
+
+    /// Position of `rank`'s timeline in [`SpecializedPlan::ranks`].
+    pub fn rank_index(&self, rank: usize) -> Option<usize> {
+        self.ranks.binary_search_by_key(&rank, |rp| rp.rank).ok()
+    }
+}
+
+/// Append a task, threading it onto every participating rank's timeline.
+fn push_task(
+    tasks: &mut Vec<SpecTask>,
+    rank_tasks: &mut BTreeMap<usize, Vec<usize>>,
+    kind: SpecTaskKind,
+    ranks: Vec<usize>,
+    src: Vec<usize>,
+    deps: Vec<usize>,
+) -> usize {
+    let idx = tasks.len();
+    for &r in &ranks {
+        rank_tasks.get_mut(&r).expect("specialize: rank registered").push(idx);
+    }
+    tasks.push(SpecTask { kind, ranks, src, deps });
+    idx
+}
+
+/// Lower a strategy (+ its layout) into per-rank timelines.
+///
+/// Fails when a device appears in more than one stage: specialization is
+/// *per rank* — a rank owns exactly one device-local program, so a device
+/// shared between stages has no well-defined timeline. (The old global
+/// interpreter tolerated sharing by construction; no lowered or
+/// hand-built strategy in the tree uses it.)
+pub fn specialize(
+    strategy: &EngineStrategy,
+    layout: &ShardLayout,
+    zero1: bool,
+) -> Result<SpecializedPlan> {
+    let mut seen: BTreeSet<usize> = BTreeSet::new();
+    for p in &strategy.pipelines {
+        for s in &p.stages {
+            for &d in &s.devices {
+                if !seen.insert(d) {
+                    return Err(Error::Engine(format!(
+                        "specialize: device {d} appears in more than one stage; \
+                         per-rank timelines need device-disjoint stages"
+                    )));
+                }
+            }
+        }
+    }
+    // The layout must describe this strategy (it carries the sync plan
+    // GradReduce executes): cheap root cross-check.
+    let roots: Vec<usize> =
+        strategy.pipelines.iter().map(|p| p.stages[0].devices[0]).collect();
+    if layout.first_roots != roots {
+        return Err(Error::Engine(
+            "specialize: layout does not match the strategy (stage-0 roots differ)".into(),
+        ));
+    }
+
+    let mut tasks: Vec<SpecTask> = vec![];
+    let mut rank_tasks: BTreeMap<usize, Vec<usize>> =
+        seen.iter().map(|&d| (d, vec![])).collect();
+    let mut head_order: Vec<Vec<usize>> = Vec::with_capacity(strategy.pipelines.len());
+    let mut step_deps: Vec<usize> = vec![];
+
+    for (pi, pipe) in strategy.pipelines.iter().enumerate() {
+        let s_count = pipe.stages.len();
+        let m = pipe.num_microbatches;
+        let sched = full_schedule(strategy.schedule, s_count, m);
+        head_order.push(sched.bwd_retirement_order(s_count - 1));
+
+        // Pass 1: allocate every (stage, mb, direction) group's tasks in
+        // per-stage queue order — which *is* each rank's program order —
+        // chaining intra-group dependencies as they are created.
+        let mut fwd_head = vec![vec![usize::MAX; m]; s_count];
+        let mut fwd_tail = vec![vec![usize::MAX; m]; s_count];
+        let mut bwd_head = vec![vec![usize::MAX; m]; s_count];
+        let mut bwd_tail = vec![vec![usize::MAX; m]; s_count];
+        for (si, stage_tasks) in sched.tasks.iter().enumerate() {
+            let stage = &pipe.stages[si];
+            for t in stage_tasks {
+                let mb = t.microbatch;
+                match t.kind {
+                    TaskKind::Fwd => {
+                        let src = if si > 0 {
+                            pipe.stages[si - 1].devices.clone()
+                        } else {
+                            vec![]
+                        };
+                        let mut prev = push_task(
+                            &mut tasks,
+                            &mut rank_tasks,
+                            SpecTaskKind::FwdIn { pipe: pi, stage: si, mb },
+                            stage.devices.clone(),
+                            src,
+                            vec![],
+                        );
+                        fwd_head[si][mb] = prev;
+                        for l in stage.layers.0..stage.layers.1 {
+                            prev = push_task(
+                                &mut tasks,
+                                &mut rank_tasks,
+                                SpecTaskKind::FwdGemm { pipe: pi, stage: si, mb, layer: l },
+                                stage.devices.clone(),
+                                vec![],
+                                vec![prev],
+                            );
+                            prev = push_task(
+                                &mut tasks,
+                                &mut rank_tasks,
+                                SpecTaskKind::FwdTpSync { pipe: pi, stage: si, mb, layer: l },
+                                stage.devices.clone(),
+                                vec![],
+                                vec![prev],
+                            );
+                        }
+                        fwd_tail[si][mb] = prev;
+                    }
+                    TaskKind::Bwd => {
+                        let src = if si + 1 < s_count {
+                            pipe.stages[si + 1].devices.clone()
+                        } else {
+                            vec![]
+                        };
+                        let mut prev = push_task(
+                            &mut tasks,
+                            &mut rank_tasks,
+                            SpecTaskKind::BwdIn { pipe: pi, stage: si, mb },
+                            stage.devices.clone(),
+                            src,
+                            vec![],
+                        );
+                        bwd_head[si][mb] = prev;
+                        for l in (stage.layers.0..stage.layers.1).rev() {
+                            prev = push_task(
+                                &mut tasks,
+                                &mut rank_tasks,
+                                SpecTaskKind::BwdGemm { pipe: pi, stage: si, mb, layer: l },
+                                stage.devices.clone(),
+                                vec![],
+                                vec![prev],
+                            );
+                            prev = push_task(
+                                &mut tasks,
+                                &mut rank_tasks,
+                                SpecTaskKind::BwdTpSync { pipe: pi, stage: si, mb, layer: l },
+                                stage.devices.clone(),
+                                vec![],
+                                vec![prev],
+                            );
+                        }
+                        if si == 0 {
+                            prev = push_task(
+                                &mut tasks,
+                                &mut rank_tasks,
+                                SpecTaskKind::EmbedBwd { pipe: pi, mb },
+                                stage.devices.clone(),
+                                vec![],
+                                vec![prev],
+                            );
+                        }
+                        bwd_tail[si][mb] = prev;
+                    }
+                }
+            }
+        }
+
+        // Pass 2: the cross-stage edges — the interpreter's ready
+        // conditions verbatim.
+        for si in 0..s_count {
+            for mb in 0..m {
+                if si > 0 {
+                    let h = fwd_head[si][mb];
+                    tasks[h].deps.push(fwd_tail[si - 1][mb]);
+                }
+                let h = bwd_head[si][mb];
+                let d = if si + 1 == s_count {
+                    fwd_tail[si][mb]
+                } else {
+                    bwd_tail[si + 1][mb]
+                };
+                tasks[h].deps.push(d);
+                step_deps.push(bwd_tail[si][mb]);
+            }
+        }
+    }
+
+    // The global step phases, appended to every rank's timeline; the
+    // explicit edges (not just rank order) encode the phase barrier.
+    let all_ranks: Vec<usize> = rank_tasks.keys().copied().collect();
+    let gr = push_task(
+        &mut tasks,
+        &mut rank_tasks,
+        SpecTaskKind::GradReduce,
+        all_ranks.clone(),
+        vec![],
+        step_deps,
+    );
+    let opt = push_task(
+        &mut tasks,
+        &mut rank_tasks,
+        SpecTaskKind::OptimStep,
+        all_ranks.clone(),
+        vec![],
+        vec![gr],
+    );
+    if zero1 {
+        push_task(
+            &mut tasks,
+            &mut rank_tasks,
+            SpecTaskKind::ZeroExchange,
+            all_ranks,
+            vec![],
+            vec![opt],
+        );
+    }
+
+    let ranks: Vec<RankPlan> = rank_tasks
+        .into_iter()
+        .map(|(rank, tasks)| RankPlan { rank, tasks })
+        .collect();
+    Ok(SpecializedPlan {
+        tasks,
+        ranks,
+        head_order,
+        schedule: strategy.schedule,
+        num_microbatches: strategy.pipelines.iter().map(|p| p.num_microbatches).collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native;
+    use crate::spec::schedule::{stage_schedule, Task};
+
+    fn plan_for(strategy: &EngineStrategy, zero1: bool) -> SpecializedPlan {
+        let cfg = native::tiny_config();
+        let layout = ShardLayout::build(&cfg, strategy).unwrap();
+        specialize(strategy, &layout, zero1).unwrap()
+    }
+
+    #[test]
+    fn rank_timelines_replay_the_stage_schedule() {
+        let s = EngineStrategy::uniform("pp2", 1, 1, 2, 8, 3)
+            .with_schedule(ScheduleKind::OneFOneB);
+        let plan = plan_for(&s, false);
+        assert_eq!(plan.ranks.len(), 2);
+        assert_eq!(plan.num_microbatches, vec![3]);
+        // restricting a stage device's timeline to its FwdIn/BwdIn tasks
+        // reconstructs exactly the stage's schedule
+        for (si, rp) in plan.ranks.iter().enumerate() {
+            let got: Vec<Task> = rp
+                .tasks
+                .iter()
+                .filter_map(|&ti| match plan.tasks[ti].kind {
+                    SpecTaskKind::FwdIn { stage, mb, .. } if stage == si => {
+                        Some(Task { kind: TaskKind::Fwd, microbatch: mb })
+                    }
+                    SpecTaskKind::BwdIn { stage, mb, .. } if stage == si => {
+                        Some(Task { kind: TaskKind::Bwd, microbatch: mb })
+                    }
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(got, stage_schedule(ScheduleKind::OneFOneB, 2, si, 3), "stage {si}");
+        }
+        // global phases close every timeline (no ZeroExchange here)
+        for rp in &plan.ranks {
+            let n = rp.tasks.len();
+            assert!(matches!(plan.tasks[rp.tasks[n - 1]].kind, SpecTaskKind::OptimStep));
+            assert!(matches!(plan.tasks[rp.tasks[n - 2]].kind, SpecTaskKind::GradReduce));
+        }
+        assert!(plan.num_comm_tasks() > 0);
+    }
+
+    #[test]
+    fn cross_stage_edges_mirror_interpreter_ready_rules() {
+        let s = EngineStrategy::uniform("pp2", 1, 1, 2, 8, 2);
+        let plan = plan_for(&s, false);
+        for (ti, t) in plan.tasks.iter().enumerate() {
+            match t.kind {
+                SpecTaskKind::FwdIn { stage, mb, .. } => {
+                    if stage == 0 {
+                        assert!(t.deps.is_empty(), "stage-0 fwd input has no deps");
+                        assert!(t.src.is_empty());
+                    } else {
+                        assert_eq!(t.deps.len(), 1, "task {ti}");
+                        // the dep is the producing stage's last fwd task
+                        match plan.tasks[t.deps[0]].kind {
+                            SpecTaskKind::FwdTpSync { stage: ps, mb: pm, .. } => {
+                                assert_eq!((ps, pm), (stage - 1, mb));
+                            }
+                            ref k => panic!("fwd hand-off depends on {k:?}"),
+                        }
+                        assert!(!t.src.is_empty(), "hand-off names its producers");
+                    }
+                }
+                SpecTaskKind::BwdIn { stage, mb, .. } => {
+                    assert_eq!(t.deps.len(), 1);
+                    match plan.tasks[t.deps[0]].kind {
+                        // last stage: its own forward; earlier: the next
+                        // stage's backward tail
+                        SpecTaskKind::FwdTpSync { stage: ps, mb: pm, .. } => {
+                            assert_eq!((ps, pm), (stage, mb));
+                            assert_eq!(stage, 1, "only the last stage starts from its fwd");
+                        }
+                        SpecTaskKind::EmbedBwd { .. } => {
+                            panic!("bwd hand-off cannot depend on stage-0 epilogue")
+                        }
+                        SpecTaskKind::BwdTpSync { stage: ps, mb: pm, .. } => {
+                            assert_eq!((ps, pm), (stage + 1, mb));
+                        }
+                        ref k => panic!("bwd hand-off depends on {k:?}"),
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_tasks_tile_each_stage_layer_range_once() {
+        let s = EngineStrategy::uniform("dp2pp2", 2, 1, 2, 8, 2);
+        let plan = plan_for(&s, true);
+        // ZeRO-1 plans end with the slice exchange
+        let last = plan.tasks.last().unwrap();
+        assert!(matches!(last.kind, SpecTaskKind::ZeroExchange));
+        let mut fwd_layers: BTreeMap<(usize, usize, usize), Vec<u32>> = BTreeMap::new();
+        for t in &plan.tasks {
+            if let SpecTaskKind::FwdGemm { pipe, stage, mb, layer } = t.kind {
+                fwd_layers.entry((pipe, stage, mb)).or_default().push(layer);
+            }
+        }
+        for ((pipe, stage, _mb), layers) in fwd_layers {
+            let (lo, hi) = s.pipelines[pipe].stages[stage].layers;
+            assert_eq!(layers, (lo..hi).collect::<Vec<u32>>());
+        }
+    }
+
+    #[test]
+    fn shared_devices_are_rejected() {
+        use crate::engine::{EnginePipeline, EngineStage};
+        let cfg = native::tiny_config();
+        let shared = EngineStrategy {
+            name: "shared".into(),
+            pipelines: vec![
+                EnginePipeline {
+                    stages: vec![EngineStage { devices: vec![0], layers: (0, 8) }],
+                    num_microbatches: 1,
+                },
+                EnginePipeline {
+                    stages: vec![EngineStage { devices: vec![0], layers: (0, 8) }],
+                    num_microbatches: 1,
+                },
+            ],
+            schedule: ScheduleKind::GPipe,
+        };
+        let layout = ShardLayout::build(&cfg, &shared).unwrap();
+        assert!(specialize(&shared, &layout, false).is_err());
+    }
+
+    #[test]
+    fn head_order_is_the_last_stage_bwd_retirement_order() {
+        // GPipe retires backwards m-1..0; 1F1B retires FIFO
+        let g = plan_for(&EngineStrategy::uniform("pp2", 1, 1, 2, 8, 3), false);
+        assert_eq!(g.head_order, vec![vec![2, 1, 0]]);
+        let f = plan_for(
+            &EngineStrategy::uniform("pp2", 1, 1, 2, 8, 3)
+                .with_schedule(ScheduleKind::OneFOneB),
+            false,
+        );
+        assert_eq!(f.head_order, vec![vec![0, 1, 2]]);
+    }
+}

@@ -113,6 +113,22 @@ pub struct SwitchPlan {
     pub with_moments: bool,
 }
 
+/// Typed error when `new` schedules any device in `dead` (shared by the
+/// fresh-plan and cached-plan failover paths).
+fn ensure_no_dead_scheduled(new: &EngineStrategy, dead: &[usize]) -> Result<()> {
+    for p in &new.pipelines {
+        for s in &p.stages {
+            if let Some(&d) = s.devices.iter().find(|&d| dead.contains(d)) {
+                return Err(Error::Engine(format!(
+                    "{}: strategy schedules dead device {d}",
+                    new.name
+                )));
+            }
+        }
+    }
+    Ok(())
+}
+
 /// The region `dev` holds of a move target under `layout` (global coords).
 fn region_under(
     layout: &ShardLayout,
@@ -250,16 +266,7 @@ impl Engine {
     ) -> Result<EngineSwitchReport> {
         let cfg = self.runtime.config;
         new.validate(&cfg, &self.tp_degrees)?;
-        for p in &new.pipelines {
-            for s in &p.stages {
-                if let Some(&d) = s.devices.iter().find(|&d| dead.contains(d)) {
-                    return Err(Error::Engine(format!(
-                        "{}: strategy schedules dead device {d}",
-                        new.name
-                    )));
-                }
-            }
-        }
+        ensure_no_dead_scheduled(&new, dead)?;
         let new_layout = Arc::new(ShardLayout::build(&cfg, &new)?);
 
         // When the engine knows the physical topology behind its device
@@ -287,8 +294,26 @@ impl Engine {
         new_layout: Arc<ShardLayout>,
         sp: &SwitchPlan,
     ) -> Result<EngineSwitchReport> {
+        self.switch_to_planned_avoiding(new, new_layout, sp, &[])
+    }
+
+    /// [`Engine::switch_to_planned`] under failover: `dead` ranks must
+    /// not be scheduled by `new`, contribute nothing to the ZeRO-1 moment
+    /// gather, and — the caller's obligation — must not appear as senders
+    /// in `sp` (a cached pool plan is only reusable when the failed rank
+    /// held no needed shard; `StrategyPool::switch_engine_avoiding`
+    /// checks exactly that and re-plans otherwise). A dead sender in the
+    /// plan is a typed error, not a silent read from a failed rank.
+    pub fn switch_to_planned_avoiding(
+        &mut self,
+        new: EngineStrategy,
+        new_layout: Arc<ShardLayout>,
+        sp: &SwitchPlan,
+        dead: &[usize],
+    ) -> Result<EngineSwitchReport> {
         let cfg = self.runtime.config;
         new.validate(&cfg, &self.tp_degrees)?;
+        ensure_no_dead_scheduled(&new, dead)?;
         if sp.with_moments != self.has_moments() {
             return Err(Error::Engine(format!(
                 "switch_to_planned: plan {} moments but the engine {} them",
@@ -296,7 +321,16 @@ impl Engine {
                 if self.has_moments() { "has" } else { "lacks" }
             )));
         }
-        self.execute_switch(new, new_layout, sp, &[])
+        if let Some(m) =
+            sp.plan.messages.iter().find(|m| dead.contains(&(m.from as usize)))
+        {
+            return Err(Error::Engine(format!(
+                "switch_to_planned: cached plan reads from dead rank {} — \
+                 re-plan with the dead senders excluded",
+                m.from
+            )));
+        }
+        self.execute_switch(new, new_layout, sp, dead)
     }
 
     /// The shared execution half: moment gather (ZeRO-1), staging via
@@ -407,6 +441,12 @@ impl Engine {
         }
 
         let delivery_s = per_sender_s.values().copied().fold(0.0, f64::max);
+        // queue the per-sender batches for injection into the first
+        // post-switch step's timelines (§6.2 measured interleave,
+        // DESIGN.md §7.3); back-to-back switches serialize per sender
+        for (&s, &t) in &per_sender_s {
+            self.pending_deliveries.push((s, t));
+        }
         let report = EngineSwitchReport {
             messages: self.mesh.ops - ops0,
             wire_elems: self.mesh.wire_elems - wire0,
@@ -422,6 +462,9 @@ impl Engine {
         self.layout = new_layout;
         // the old per-pipeline window contract indexed the old pipelines
         self.mb_windows = None;
+        // the per-rank specialization described the old strategy; the
+        // next step re-specializes the survivors/new layout
+        self.spec = None;
 
         // ---- 3. ZeRO-1: trim the freshly-arrived full moment shards back
         // to each device's DP partition under the new layout (unmoved

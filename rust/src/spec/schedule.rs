@@ -80,6 +80,22 @@ pub fn stage_schedule(
     out
 }
 
+impl PipelineSchedule {
+    /// Micro-batch indices in the order `stage` retires its backward
+    /// tasks. For the last stage this is the order losses surface — the
+    /// accumulation order the per-rank specialization pass records
+    /// ([`crate::engine::specialize`]), keeping the event-driven
+    /// executor's f64 loss sum bit-identical to the global interpreter's
+    /// (GPipe retires LIFO, 1F1B FIFO).
+    pub fn bwd_retirement_order(&self, stage: usize) -> Vec<usize> {
+        self.tasks[stage]
+            .iter()
+            .filter(|t| t.kind == TaskKind::Bwd)
+            .map(|t| t.microbatch)
+            .collect()
+    }
+}
+
 /// Build the full schedule for a pipeline.
 pub fn full_schedule(
     kind: ScheduleKind,
@@ -159,6 +175,14 @@ mod tests {
         for st in &s.tasks {
             counts(st, 6);
         }
+    }
+
+    #[test]
+    fn bwd_retirement_order_per_schedule() {
+        let g = full_schedule(ScheduleKind::GPipe, 2, 3);
+        assert_eq!(g.bwd_retirement_order(1), vec![2, 1, 0]);
+        let f = full_schedule(ScheduleKind::OneFOneB, 2, 3);
+        assert_eq!(f.bwd_retirement_order(1), vec![0, 1, 2]);
     }
 
     #[test]

@@ -77,6 +77,25 @@ impl Dispatcher {
         Dispatcher { policy, cm, cell_tokens: 2048, rows_per_mb: 2, hysteresis: 0.05 }
     }
 
+    /// Derive the engine-cell scaling from the pool instead of the
+    /// hard-coded 32K default (ROADMAP ragged follow-on): one compiled
+    /// engine sequence (`engine_seq` cells — `ManifestConfig::seq`)
+    /// stands for the pool's *widest* context window, so a full
+    /// widest-ctx window maps to exactly the compiled engine length
+    /// whatever the pool's bucket set is. (With the default tiny-48
+    /// `seq = 16` and a 32K-widest pool this reproduces the historical
+    /// 2048 tokens/cell.)
+    pub fn scale_cells_to_pool(&mut self, pool: &StrategyPool, engine_seq: usize) {
+        self.scale_cells(pool.entries().iter().map(|e| e.ctx).max().unwrap_or(0), engine_seq);
+    }
+
+    /// [`Dispatcher::scale_cells_to_pool`] from a bare widest-context
+    /// value — for callers that hold the `(strategy, ctx)` entry list
+    /// before instantiating any pool.
+    pub fn scale_cells(&mut self, widest_ctx: u64, engine_seq: usize) {
+        self.cell_tokens = widest_ctx.max(1).div_ceil(engine_seq.max(1) as u64).max(1);
+    }
+
     /// Cost-model FLOPs to process `batch` at bucket context `ctx`: every
     /// packed window pays its *actual* fill (ragged — no padded-context
     /// charge), with the quadratic attention term spanning the packed
@@ -204,9 +223,14 @@ impl Dispatcher {
 
     /// Drive a pool-managed engine over a batch stream: choose a strategy
     /// per batch, hot-switch (cached plans) only on bucket change, hand
-    /// the engine the batch's real packed-window shapes, run the ragged
-    /// step, and account switch deliveries through the §6.2 overlap
-    /// model.
+    /// the engine the batch's real packed-window shapes, and run the
+    /// ragged step. Switch deliveries are **measured interleaved** by the
+    /// event-driven executor — each switch's per-sender batches ride wire
+    /// lanes inside the first post-switch step's timelines
+    /// ([`crate::engine::StepStats::exposed_switch_s`]) — and checked
+    /// against the old accounted `max(0, Σ delivery − makespan)` scalar
+    /// bound, reported per step as
+    /// [`StepOutcome::exposed_bound_s`].
     pub fn run_stream(
         &self,
         engine: &mut Engine,
@@ -221,6 +245,10 @@ impl Dispatcher {
             ))
         })?;
         let mut overlap = SwitchOverlap::new();
+        // deliveries from switches executed before the stream started
+        // still interleave with the first step; seed the scalar bound so
+        // it stays an upper bound on the measured exposure
+        overlap.on_switch(engine.pending_deliveries.iter().map(|d| d.1).sum());
         let hits0 = pool.hits();
         let mut steps = Vec::with_capacity(stream.len());
         let mut switches = 0u64;
@@ -240,7 +268,17 @@ impl Dispatcher {
             let windows = self.microbatch_windows(pool.entry(chosen), batch)?;
             engine.set_microbatches(&windows)?;
             let stats = engine.train_step(&mut |p, m| corpus.window_for(&windows[p][m]))?;
-            let exposed_s = overlap.on_step(stats.makespan_s);
+            // the executor measured the interleaved exposure; the scalar
+            // accountant yields the old per-switch-serialized bound the
+            // measurement can never exceed (per-sender lanes ≤ summed
+            // switch deliveries)
+            let exposed_bound_s = overlap.on_step(stats.makespan_s);
+            let exposed_s = stats.exposed_switch_s;
+            debug_assert!(
+                exposed_s <= exposed_bound_s + 1e-9,
+                "measured interleaved exposure {exposed_s} exceeds the accounted bound \
+                 {exposed_bound_s}"
+            );
             steps.push(StepOutcome {
                 step: i,
                 entry: chosen,
@@ -248,6 +286,7 @@ impl Dispatcher {
                 cache_hit,
                 delivery_s,
                 exposed_s,
+                exposed_bound_s,
                 loss: stats.loss,
                 makespan_s: stats.makespan_s,
                 microbatches: windows.iter().map(|w| w.len()).sum(),
@@ -273,8 +312,14 @@ pub struct StepOutcome {
     pub cache_hit: bool,
     /// The switch's measured delivery time (slowest sender's batch).
     pub delivery_s: f64,
-    /// Switch seconds this step's compute could not hide (§6.2 overlap).
+    /// Switch seconds this step's compute could not hide — **measured**
+    /// by the event-driven executor, which interleaves the pending
+    /// per-sender delivery batches with the step's timelines (§6.2,
+    /// DESIGN.md §7.3).
     pub exposed_s: f64,
+    /// The old accounted scalar bound `max(0, Σ delivery − makespan)`
+    /// for the same step; `exposed_s ≤ exposed_bound_s` always.
+    pub exposed_bound_s: f64,
     /// Step loss.
     pub loss: f32,
     /// Measured step makespan.
@@ -391,6 +436,41 @@ mod tests {
         )
         .unwrap();
         assert_eq!(d.choose(&twin, &batch(vec![2048; 8]), 1), 1);
+    }
+
+    #[test]
+    fn cell_scaling_follows_the_pools_widest_context() {
+        let cfg = native::tiny_config();
+        // a pool whose widest context is 16K, not the 32K default
+        let pool16 = StrategyPool::new(
+            cfg,
+            vec![
+                (crate::engine::EngineStrategy::uniform("dp2", 2, 1, 1, 8, 1), 4096),
+                (crate::engine::EngineStrategy::uniform("pp2", 1, 1, 2, 8, 2), 16384),
+            ],
+        )
+        .unwrap();
+        let mut d = Dispatcher::new(CostModel::new(ModelCfg::llama_32b()), DispatchPolicy::HetuB);
+        assert_eq!(d.cell_tokens, 2048, "default keeps the 32K-derived scale");
+        d.scale_cells_to_pool(&pool16, cfg.seq);
+        assert_eq!(d.cell_tokens, 1024, "16K widest ctx over the 16 compiled cells");
+        // a full widest-context window now fills the whole compiled
+        // engine length instead of half of it
+        let full = batch(vec![16384]);
+        let w = d.microbatch_windows(pool16.entry(1), &full).unwrap();
+        let rows: Vec<usize> = w
+            .iter()
+            .flat_map(|p| p.iter().flat_map(|m| m.rows.iter().copied()))
+            .collect();
+        assert_eq!(rows, vec![16]);
+        // and a 4K fill scales proportionally (4 cells, not 2)
+        let short = batch(vec![4096]);
+        let ws = d.microbatch_windows(pool16.entry(1), &short).unwrap();
+        let cells: usize = ws.iter().flat_map(|p| p.iter().map(|m| m.real_cells())).sum();
+        assert_eq!(cells, 4);
+        // the default pool round-trips to the historical constant
+        d.scale_cells_to_pool(&pool(), cfg.seq);
+        assert_eq!(d.cell_tokens, 2048);
     }
 
     #[test]

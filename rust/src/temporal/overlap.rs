@@ -1,4 +1,5 @@
-//! §6.2 switch/compute overlap accounting (Fig 18-right).
+//! §6.2 switch/compute overlap: the accounted **upper bound** on exposure
+//! (Fig 18-right).
 //!
 //! The engine executes a transition's fused messages batched per sender
 //! (`engine/switch.rs`), and senders run concurrently in a deployment, so
@@ -6,17 +7,29 @@
 //! ([`EngineSwitchReport::delivery_s`](crate::engine::EngineSwitchReport)).
 //! The paper then overlaps that delivery with the first post-switch step:
 //! early pipeline stages start computing while later layers' shards are
-//! still in flight. This module is the bookkeeping for that model — the
-//! *exposed* (non-hidden) switch cost of a step is whatever part of the
-//! pending delivery its own makespan cannot cover:
+//! still in flight.
+//!
+//! Since the specialize→execute refactor (DESIGN.md §7), the overlap is
+//! **measured, not accounted**: the switch hands its per-sender delivery
+//! batches to the engine, the event-driven executor injects them onto
+//! per-sender wire lanes inside the first post-switch step's timelines,
+//! and the step reports the interleaved exposure it actually measured
+//! ([`StepStats::exposed_switch_s`](crate::engine::StepStats)). This
+//! module remains as the *scalar bound* that measurement is checked
+//! against — per-switch serialization over the step's global makespan:
 //!
 //! ```text
-//! exposed = max(0, pending_delivery − step_makespan)
+//! exposed_bound = max(0, Σ pending deliveries − step_makespan)
 //! ```
 //!
-//! The dispatcher folds `makespan + exposed` into the amortized per-step
-//! time, so a switch's cost is amortized over the following bucket
-//! run-length exactly as Fig 15's Hetu-A/B cells assume.
+//! Because the executor serializes back-to-back deliveries per *sender*
+//! (lanes) rather than per switch, the measured exposure is ≤ this bound
+//! on every step (equality for a single pending switch) — asserted by
+//! [`Dispatcher::run_stream`](super::Dispatcher) in debug builds and by
+//! the `temporal_cadence` CI smoke. The dispatcher folds
+//! `makespan + measured exposure` into the amortized per-step time, so a
+//! switch's cost is amortized over the following bucket run-length
+//! exactly as Fig 15's Hetu-A/B cells assume.
 
 /// Running overlap state across a step stream.
 #[derive(Clone, Copy, Debug, Default)]

@@ -174,6 +174,30 @@ impl StrategyPool {
     /// cache hit nothing is deep-cloned: the plan and the target layout
     /// are both handed over by `Arc`.
     pub fn switch_engine(&mut self, engine: &mut Engine, to: usize) -> Result<EngineSwitchReport> {
+        self.switch_engine_avoiding(engine, to, &[])
+    }
+
+    /// Pool-aware elastic failover (§7.2 over cached transitions): switch
+    /// a pool-managed engine to entry `to` with `dead` ranks excluded as
+    /// weight sources. Two paths:
+    ///
+    /// * **cache reuse** — when the cached `from → to` plan never reads
+    ///   from a dead rank (the failed rank held no *needed* shard — every
+    ///   moved slice sources elsewhere), the pooled plan executes
+    ///   untouched: a normal cache hit, allocation-free;
+    /// * **re-plan** — when the cached plan references a dead sender, a
+    ///   fresh fused-BSR plan is built with the dead ranks excluded
+    ///   (surviving replicas cover their slices or planning errors out)
+    ///   and executed *without* touching the cache, so the pooled
+    ///   full-membership plan survives for post-repair switches.
+    ///
+    /// With an empty `dead` this is exactly [`StrategyPool::switch_engine`].
+    pub fn switch_engine_avoiding(
+        &mut self,
+        engine: &mut Engine,
+        to: usize,
+        dead: &[usize],
+    ) -> Result<EngineSwitchReport> {
         let from = self.index_of(&engine.strategy).ok_or_else(|| {
             Error::Engine(format!(
                 "switch_engine: engine strategy `{}` is not in the pool",
@@ -191,15 +215,38 @@ impl StrategyPool {
         )?;
         let with_moments = engine.has_moments();
         let topology_aware = engine.topology.is_some();
-        let sp = {
-            let bw: &dyn Bandwidth = match &engine.topology {
-                Some(c) => c,
-                None => &UniformBandwidth,
-            };
-            self.plan_for(from, to, with_moments, topology_aware, bw)?
+        let bw: &dyn Bandwidth = match &engine.topology {
+            Some(c) => c,
+            None => &UniformBandwidth,
         };
+        let sp = self.plan_for(from, to, with_moments, topology_aware, bw)?;
+        let needs_replan = !dead.is_empty()
+            && sp.plan.messages.iter().any(|m| dead.contains(&(m.from as usize)));
         let entry = &self.entries[to];
-        engine.switch_to_planned(entry.strategy.clone(), Arc::clone(&entry.layout), &sp)
+        if needs_replan {
+            // the failed rank holds a needed shard: re-plan this one
+            // transition with dead senders excluded, cache untouched
+            let fresh = plan_switch(
+                &self.cfg,
+                &engine.layout,
+                &entry.layout,
+                with_moments,
+                bw,
+                dead,
+            )?;
+            return engine.switch_to_planned_avoiding(
+                entry.strategy.clone(),
+                Arc::clone(&entry.layout),
+                &fresh,
+                dead,
+            );
+        }
+        engine.switch_to_planned_avoiding(
+            entry.strategy.clone(),
+            Arc::clone(&entry.layout),
+            &sp,
+            dead,
+        )
     }
 
     /// Spawn an engine on entry `i` (convenience for tests/benches).
@@ -286,6 +333,110 @@ mod tests {
         assert_eq!(r1.plan_wire_bytes, r1.plan.wire_bytes());
         // the engine's layout is the pooled entry's layout, not a clone
         assert!(Arc::ptr_eq(&eng.layout, &pool.entry(1).layout));
+    }
+
+    #[test]
+    fn pool_failover_reuses_cache_when_dead_holds_no_needed_shard() {
+        // dp3 → dp2: every destination shard is locally owned (heuristic
+        // 1), so rank 2 is never a needed sender — the cached plan must
+        // execute untouched under `dead = [2]`, as a plain cache hit.
+        let cfg = native::tiny_config();
+        let mut pool = StrategyPool::new(
+            cfg,
+            vec![
+                (EngineStrategy::uniform("dp3", 3, 1, 1, 8, 1), 4096),
+                (EngineStrategy::uniform("dp2", 2, 1, 1, 8, 1), 8192),
+            ],
+        )
+        .unwrap();
+        let mut eng = pool
+            .spawn_engine(crate::runtime::Runtime::native(cfg), 0, 42, 1e-3)
+            .unwrap();
+        let mut corpus = crate::coordinator::SyntheticCorpus::new(3, cfg.vocab);
+        let (b, s) = (cfg.batch, cfg.seq);
+        eng.train_step(&mut |_p, _m| corpus.microbatch(b, s)).unwrap(); // moments exist
+        let healthy = pool.plan_for(0, 1, true, false, &UniformBandwidth).unwrap();
+        assert!(
+            healthy.plan.messages.iter().all(|m| m.from != 2),
+            "dp3→dp2 sources everything locally; rank 2 holds no needed shard"
+        );
+        let (h0, m0) = (pool.hits(), pool.misses());
+        let rep = crate::elastic::pool_failover(&mut pool, &mut eng, 1, &[2]).unwrap();
+        assert!(Arc::ptr_eq(&rep.plan, &healthy.plan), "cache reused by refcount");
+        assert_eq!((pool.hits(), pool.misses()), (h0 + 1, m0), "reuse is a plain hit");
+        assert!(
+            eng.mesh.devices[2].keys().is_empty(),
+            "dead rank evicted: {:?}",
+            eng.mesh.devices[2].keys()
+        );
+        // survivors re-specialize and keep training
+        let stats = eng.train_step(&mut |_p, _m| corpus.microbatch(b, s)).unwrap();
+        assert!(stats.loss.is_finite());
+    }
+
+    #[test]
+    fn pool_failover_replans_when_cached_plan_reads_dead_sender() {
+        use crate::engine::{EnginePipeline, EngineStage};
+        use crate::spec::schedule::ScheduleKind;
+        // dp2 {0,1} → tp2 {2,3}: the destinations own nothing, so load
+        // balancing makes both survivors senders of the healthy plan;
+        // killing rank 1 forces a fresh dead-excluding plan while the
+        // cache keeps the full-membership one.
+        let cfg = native::tiny_config();
+        let far = EngineStrategy {
+            name: "tp2-far".into(),
+            pipelines: vec![EnginePipeline {
+                stages: vec![EngineStage { devices: vec![2, 3], layers: (0, 8) }],
+                num_microbatches: 2,
+            }],
+            schedule: ScheduleKind::GPipe,
+        };
+        let mut pool = StrategyPool::new(
+            cfg,
+            vec![
+                (EngineStrategy::uniform("dp2", 2, 1, 1, 8, 1), 4096),
+                (far, 32768),
+            ],
+        )
+        .unwrap();
+        let mut eng = pool
+            .spawn_engine(crate::runtime::Runtime::native(cfg), 0, 42, 1e-3)
+            .unwrap();
+        let healthy = pool.plan_for(0, 1, false, false, &UniformBandwidth).unwrap();
+        assert!(
+            healthy.plan.messages.iter().any(|m| m.from == 1),
+            "load balancing makes rank 1 a needed sender of the healthy plan"
+        );
+        // executing the dead-referencing plan directly is a typed error
+        let mut eng2 = pool
+            .spawn_engine(crate::runtime::Runtime::native(cfg), 0, 43, 1e-3)
+            .unwrap();
+        assert!(eng2
+            .switch_to_planned_avoiding(
+                pool.entry(1).strategy.clone(),
+                Arc::clone(&pool.entry(1).layout),
+                &healthy,
+                &[1],
+            )
+            .is_err());
+
+        let (h0, m0) = (pool.hits(), pool.misses());
+        let rep = crate::elastic::pool_failover(&mut pool, &mut eng, 1, &[1]).unwrap();
+        assert!(
+            !Arc::ptr_eq(&rep.plan, &healthy.plan),
+            "failover must not execute the dead-referencing plan"
+        );
+        assert!(
+            rep.plan.messages.iter().all(|m| m.from == 0),
+            "every slice re-sourced from the survivor"
+        );
+        assert!(rep.wire_elems > 0);
+        // the fresh plan did not pollute the cache: the lookup was a hit
+        // and the pooled Arc is still the healthy full-membership plan
+        assert_eq!((pool.hits(), pool.misses()), (h0 + 1, m0));
+        let again = pool.plan_for(0, 1, false, false, &UniformBandwidth).unwrap();
+        assert!(Arc::ptr_eq(&again, &healthy), "cache untouched for post-repair switches");
+        assert!(eng.mesh.devices[1].keys().is_empty(), "dead rank evicted");
     }
 
     #[test]

@@ -1,0 +1,342 @@
+//! Property sweep for the §7 specialize→execute pipeline (ISSUE 5).
+//!
+//! Two contracts, over every lowered strategy × schedule kind:
+//!
+//! 1. **Reconstruction** — the per-rank `RankPlan` task multiset plus the
+//!    comm-task endpoints reconstructs `spec::schedule::full_schedule`
+//!    exactly, with all dependency edges preserved (the interpreter's
+//!    ready conditions verbatim);
+//! 2. **Oracle bit-identity** — the event-driven executor's step losses
+//!    are bit-identical (`f32::to_bits`) to the pre-refactor global
+//!    interpreter (`Engine::train_step_reference`), including on the
+//!    lowered C1/C2/C6 hetero encodings, with equal measured wire volume.
+
+use hetu::engine::{
+    Engine, EnginePipeline, EngineStage, EngineStrategy, MicroBatch, ShardLayout, SpecTaskKind,
+};
+use hetu::runtime::{native, Runtime};
+use hetu::spec::schedule::{stage_schedule, ScheduleKind, Task, TaskKind};
+use hetu::strategy::{tables, LowerOptions};
+
+fn native_engine(strategy: EngineStrategy, seed: u64, lr: f32) -> Engine {
+    Engine::with_runtime(Runtime::native(native::tiny_config()), strategy, seed, lr).unwrap()
+}
+
+/// The asymmetric per-layer hetero-TP layout (tp2 + tp1 replicas).
+fn hetero_strategy(num_mb: usize) -> EngineStrategy {
+    EngineStrategy {
+        name: "hetero-tp2+tp1".into(),
+        pipelines: vec![
+            EnginePipeline {
+                stages: vec![EngineStage { devices: vec![0, 1], layers: (0, 8) }],
+                num_microbatches: num_mb,
+            },
+            EnginePipeline {
+                stages: vec![EngineStage { devices: vec![2], layers: (0, 8) }],
+                num_microbatches: num_mb,
+            },
+        ],
+        schedule: ScheduleKind::GPipe,
+    }
+}
+
+/// The strategy zoo the sweep runs over: uniform TP/PP/DP mixes, the
+/// hetero-TP layout, uneven micro-batching, and the lowered Appendix-A
+/// hetero encodings C1/C2/C6.
+fn sweep_strategies() -> Vec<EngineStrategy> {
+    let cfg = native::tiny_config();
+    let lopts = LowerOptions { total_microbatches: 7, tp_degrees: vec![1, 2, 4] };
+    let uneven = EngineStrategy {
+        name: "dp2-uneven".into(),
+        pipelines: vec![
+            EnginePipeline {
+                stages: vec![EngineStage { devices: vec![0], layers: (0, 8) }],
+                num_microbatches: 3,
+            },
+            EnginePipeline {
+                stages: vec![EngineStage { devices: vec![1], layers: (0, 8) }],
+                num_microbatches: 1,
+            },
+        ],
+        schedule: ScheduleKind::GPipe,
+    };
+    vec![
+        EngineStrategy::uniform("dp2tp2", 2, 2, 1, 8, 2),
+        EngineStrategy::uniform("pp4", 1, 1, 4, 8, 4),
+        EngineStrategy::uniform("tp2pp2", 1, 2, 2, 8, 3),
+        hetero_strategy(2),
+        uneven,
+        hetu::strategy::lower(&tables::hetu_c1_32h20(), &cfg, &lopts).unwrap(),
+        hetu::strategy::lower(&tables::hetu_c2_31h20(), &cfg, &lopts).unwrap(),
+        hetu::strategy::lower(&tables::hetu_c6(), &cfg, &lopts).unwrap(),
+    ]
+}
+
+#[test]
+fn rank_plans_reconstruct_the_global_schedule_with_dependencies() {
+    let cfg = native::tiny_config();
+    for base in sweep_strategies() {
+        for kind in [ScheduleKind::GPipe, ScheduleKind::OneFOneB] {
+            let strategy = base.clone().with_schedule(kind);
+            let layout = ShardLayout::build(&cfg, &strategy).unwrap();
+            let plan = hetu::engine::specialize(&strategy, &layout, false).unwrap();
+            let name = &strategy.name;
+
+            // rank → (pipe, stage) membership
+            let mut stage_of = std::collections::BTreeMap::new();
+            for (pi, p) in strategy.pipelines.iter().enumerate() {
+                for (si, s) in p.stages.iter().enumerate() {
+                    for &d in &s.devices {
+                        stage_of.insert(d, (pi, si));
+                    }
+                }
+            }
+
+            for rp in &plan.ranks {
+                let (pi, si) = stage_of[&rp.rank];
+                let pipe = &strategy.pipelines[pi];
+                let s_count = pipe.stages.len();
+                let m = pipe.num_microbatches;
+                // 1. the rank's FwdIn/BwdIn sequence == its stage schedule
+                let got: Vec<Task> = rp
+                    .tasks
+                    .iter()
+                    .filter_map(|&ti| match plan.tasks[ti].kind {
+                        SpecTaskKind::FwdIn { pipe, stage, mb } => {
+                            assert_eq!((pipe, stage), (pi, si), "{name}: foreign task on rank");
+                            Some(Task { kind: TaskKind::Fwd, microbatch: mb })
+                        }
+                        SpecTaskKind::BwdIn { pipe, stage, mb } => {
+                            assert_eq!((pipe, stage), (pi, si), "{name}: foreign task on rank");
+                            Some(Task { kind: TaskKind::Bwd, microbatch: mb })
+                        }
+                        _ => None,
+                    })
+                    .collect();
+                assert_eq!(
+                    got,
+                    stage_schedule(kind, s_count, si, m),
+                    "{name} ({kind:?}): rank {} does not replay its stage schedule",
+                    rp.rank
+                );
+                // 2. every non-global task on this rank belongs to its stage
+                for &ti in &rp.tasks {
+                    if let Some((tp, ts, _)) = plan.tasks[ti].kind.group() {
+                        assert_eq!((tp, ts), (pi, si), "{name}: rank {} hosts a foreign group", rp.rank);
+                    }
+                }
+                // 3. the global phases close the timeline
+                let n = rp.tasks.len();
+                assert!(matches!(plan.tasks[rp.tasks[n - 1]].kind, SpecTaskKind::OptimStep));
+                assert!(matches!(plan.tasks[rp.tasks[n - 2]].kind, SpecTaskKind::GradReduce));
+            }
+
+            // 4. per-group GEMM tasks tile the stage layer range exactly once
+            let mut fwd_layers = std::collections::BTreeMap::new();
+            let mut bwd_layers = std::collections::BTreeMap::new();
+            for t in &plan.tasks {
+                match t.kind {
+                    SpecTaskKind::FwdGemm { pipe, stage, mb, layer } => {
+                        fwd_layers.entry((pipe, stage, mb)).or_insert_with(Vec::new).push(layer)
+                    }
+                    SpecTaskKind::BwdGemm { pipe, stage, mb, layer } => {
+                        bwd_layers.entry((pipe, stage, mb)).or_insert_with(Vec::new).push(layer)
+                    }
+                    _ => {}
+                }
+            }
+            for (pi, p) in strategy.pipelines.iter().enumerate() {
+                for (si, s) in p.stages.iter().enumerate() {
+                    let fwd: Vec<u32> = (s.layers.0..s.layers.1).collect();
+                    let bwd: Vec<u32> = (s.layers.0..s.layers.1).rev().collect();
+                    for mb in 0..p.num_microbatches {
+                        assert_eq!(fwd_layers[&(pi, si, mb)], fwd, "{name}: fwd tiling");
+                        assert_eq!(bwd_layers[&(pi, si, mb)], bwd, "{name}: bwd tiling");
+                    }
+                }
+            }
+
+            // 5. dependency edges are the interpreter's ready conditions,
+            //    and comm endpoints name the adjacent stage
+            for t in &plan.tasks {
+                match t.kind {
+                    SpecTaskKind::FwdIn { pipe, stage, mb } => {
+                        if stage == 0 {
+                            assert!(t.deps.is_empty() && t.src.is_empty(), "{name}");
+                        } else {
+                            assert_eq!(
+                                t.src, strategy.pipelines[pipe].stages[stage - 1].devices,
+                                "{name}: fwd hand-off endpoints"
+                            );
+                            assert_eq!(t.deps.len(), 1, "{name}");
+                            match plan.tasks[t.deps[0]].kind {
+                                SpecTaskKind::FwdTpSync { pipe: dp, stage: ds, mb: dm, layer } => {
+                                    assert_eq!((dp, ds, dm), (pipe, stage - 1, mb), "{name}");
+                                    assert_eq!(
+                                        layer,
+                                        strategy.pipelines[pipe].stages[stage - 1].layers.1 - 1,
+                                        "{name}: dep is the producer's last layer"
+                                    );
+                                }
+                                ref k => panic!("{name}: fwd dep is {k:?}"),
+                            }
+                        }
+                    }
+                    SpecTaskKind::BwdIn { pipe, stage, mb } => {
+                        let last = strategy.pipelines[pipe].stages.len() - 1;
+                        assert_eq!(t.deps.len(), 1, "{name}");
+                        if stage == last {
+                            assert!(t.src.is_empty(), "{name}: head stage has no producer");
+                            match plan.tasks[t.deps[0]].kind {
+                                SpecTaskKind::FwdTpSync { pipe: dp, stage: ds, mb: dm, .. } => {
+                                    assert_eq!((dp, ds, dm), (pipe, stage, mb), "{name}");
+                                }
+                                ref k => panic!("{name}: head dep is {k:?}"),
+                            }
+                        } else {
+                            assert_eq!(
+                                t.src, strategy.pipelines[pipe].stages[stage + 1].devices,
+                                "{name}: bwd hand-off endpoints"
+                            );
+                            match plan.tasks[t.deps[0]].kind {
+                                SpecTaskKind::BwdTpSync { pipe: dp, stage: ds, mb: dm, .. } => {
+                                    assert_eq!((dp, ds, dm), (pipe, stage + 1, mb), "{name}");
+                                }
+                                ref k => panic!("{name}: bwd dep is {k:?}"),
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+}
+
+/// A fixed pipeline-major pool of micro-batches so both execution paths
+/// see exactly the same data.
+struct Pool {
+    mbs: Vec<Vec<MicroBatch>>,
+}
+
+impl Pool {
+    fn for_strategy(s: &EngineStrategy, seed: u64) -> Pool {
+        let cfg = native::tiny_config();
+        let mut corpus = hetu::coordinator::SyntheticCorpus::new(seed, cfg.vocab);
+        let mbs = s
+            .pipelines
+            .iter()
+            .map(|p| {
+                (0..p.num_microbatches).map(|_| corpus.microbatch(cfg.batch, cfg.seq)).collect()
+            })
+            .collect();
+        Pool { mbs }
+    }
+
+    fn get(&self, pipe: usize, mb: usize) -> MicroBatch {
+        self.mbs[pipe][mb].clone()
+    }
+}
+
+#[test]
+fn executor_losses_are_bit_identical_to_the_interpreter_oracle() {
+    // The tentpole numerics acceptance: for every sweep strategy (incl.
+    // the lowered C1/C2/C6 hetero encodings) under both schedules, the
+    // event-driven executor and the pre-refactor interpreter produce the
+    // SAME bits — identical loss, identical measured wire volume and
+    // collective count.
+    for base in sweep_strategies() {
+        // one step for the 30+-device lowered encodings, two elsewhere
+        let steps = if base.num_devices() > 8 { 1 } else { 2 };
+        for kind in [ScheduleKind::GPipe, ScheduleKind::OneFOneB] {
+            let strategy = base.clone().with_schedule(kind);
+            let name = strategy.name.clone();
+            let pool = Pool::for_strategy(&strategy, 0xB17);
+            let mut specialized = native_engine(strategy.clone(), 42, 1e-3);
+            let mut interpreter = native_engine(strategy, 42, 1e-3);
+            for step in 0..steps {
+                let a = specialized.train_step(&mut |p, m| pool.get(p, m)).unwrap();
+                let b = interpreter.train_step_reference(&mut |p, m| pool.get(p, m)).unwrap();
+                assert_eq!(
+                    a.loss.to_bits(),
+                    b.loss.to_bits(),
+                    "{name} ({kind:?}) step {step}: executor {} != interpreter {}",
+                    a.loss,
+                    b.loss
+                );
+                assert_eq!(a.wire_elems, b.wire_elems, "{name} ({kind:?}) step {step}: wire");
+                assert_eq!(a.comm_ops, b.comm_ops, "{name} ({kind:?}) step {step}: ops");
+                assert_eq!(a.tokens, b.tokens, "{name} ({kind:?}) step {step}: tokens");
+            }
+        }
+    }
+}
+
+#[test]
+fn executor_zero1_stays_bit_identical_too() {
+    // ZeRO-1 routes the optimizer through the OptimStep + ZeroExchange
+    // task pair; the split must not perturb the trajectory.
+    let s = EngineStrategy::uniform("dp2tp2", 2, 2, 1, 8, 2);
+    let pool = Pool::for_strategy(&s, 0x21);
+    let mut specialized = native_engine(s.clone(), 42, 1e-3);
+    specialized.set_zero1(true).unwrap();
+    let mut interpreter = native_engine(s, 42, 1e-3);
+    interpreter.set_zero1(true).unwrap();
+    for step in 0..3 {
+        let a = specialized.train_step(&mut |p, m| pool.get(p, m)).unwrap();
+        let b = interpreter.train_step_reference(&mut |p, m| pool.get(p, m)).unwrap();
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {step}");
+        assert_eq!(a.wire_elems, b.wire_elems, "step {step}: ZeRO-1 exchange wire");
+    }
+}
+
+#[test]
+fn executor_measures_interleaved_switch_exposure() {
+    // A hot switch queues its per-sender delivery batches; the next step
+    // interleaves them on wire lanes: for a single switch the lane
+    // maximum IS the report's delivery_s, the exposure is the overhang
+    // beyond the step's compute critical path, and the step after that
+    // has nothing pending.
+    use hetu::temporal::StrategyPool;
+    let cfg = native::tiny_config();
+    let mut pool = StrategyPool::new(
+        cfg,
+        vec![
+            (EngineStrategy::uniform("dp2", 2, 1, 1, 8, 1), 4096),
+            (EngineStrategy::uniform("tp2", 1, 2, 1, 8, 2), 32768),
+        ],
+    )
+    .unwrap();
+    // start on tp2: the switch to dp2 must ship the missing halves, so
+    // the per-sender batches are real wire deliveries (a dp2→tp2 switch
+    // would be all local copies and deliver nothing)
+    let mut eng = pool.spawn_engine(Runtime::native(cfg), 1, 42, 1e-3).unwrap();
+    let mut corpus = hetu::coordinator::SyntheticCorpus::new(5, cfg.vocab);
+    let (b, s) = (cfg.batch, cfg.seq);
+    let pre = eng.train_step(&mut |_p, _m| corpus.microbatch(b, s)).unwrap();
+    assert_eq!(pre.exposed_switch_s, 0.0, "no switch pending before the first one");
+    assert_eq!(pre.switch_delivery_s, 0.0);
+
+    let rep = pool.switch_engine(&mut eng, 0).unwrap();
+    assert!(rep.wire_elems > 0, "tp2→dp2 ships the missing halves");
+    assert!(rep.delivery_s > 0.0);
+    let first = eng.train_step(&mut |_p, _m| corpus.microbatch(b, s)).unwrap();
+    // single switch: the slowest per-sender lane is the delivery itself
+    assert!(
+        (first.switch_delivery_s - rep.delivery_s).abs() < 1e-12,
+        "lane max {} vs delivery {}",
+        first.switch_delivery_s,
+        rep.delivery_s
+    );
+    let bound = (rep.delivery_s - first.makespan_s).max(0.0);
+    assert!(
+        (first.exposed_switch_s - bound).abs() < 1e-12,
+        "measured exposure {} vs single-switch bound {}",
+        first.exposed_switch_s,
+        bound
+    );
+    // drained: the following step interleaves nothing
+    let second = eng.train_step(&mut |_p, _m| corpus.microbatch(b, s)).unwrap();
+    assert_eq!(second.exposed_switch_s, 0.0);
+    assert_eq!(second.switch_delivery_s, 0.0);
+}
