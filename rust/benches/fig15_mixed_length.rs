@@ -1,17 +1,25 @@
 //! Bench: regenerate Fig 15 (mixed-length per-step time distributions for
 //! DeepSpeed / Megatron / HotSPa / Hetu-A / Hetu-B over CommonCrawl- and
 //! GitHub-like workloads at 32K and 16K context).
+//!
+//! The cells are **simulated** step times (cost-model replay), so every
+//! emitted row is tagged `modeled` in `BENCH_fig15.json`.
+
+use hetu::metrics::benchjson::BenchReport;
 
 fn main() {
-    let steps: usize = std::env::args()
-        .nth(1)
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(30);
+    let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(30);
     let t0 = std::time::Instant::now();
     let (table, cells) = hetu::figures::fig15(steps).expect("fig15");
     println!("{}", table.markdown());
+    let mut bj = BenchReport::new("fig15", steps <= 3);
+    bj.tag("steps_per_cell", &steps.to_string());
+    let mean = |v: &Vec<f64>| v.iter().sum::<f64>() / v.len() as f64;
     for c in &cells {
-        let mean = |v: &Vec<f64>| v.iter().sum::<f64>() / v.len() as f64;
+        for (sys, samples) in &c.samples {
+            let best = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+            bj.row(&format!("{} / {sys}", c.label), "modeled", mean(samples), best);
+        }
         let hetu_b = c.samples.iter().find(|(s, _)| *s == "Hetu-B").unwrap();
         let hotspa = c.samples.iter().find(|(s, _)| *s == "HotSPa").unwrap();
         println!(
@@ -23,4 +31,6 @@ fn main() {
         );
     }
     println!("\n({} steps/cell, generated in {:.1}s)", steps, t0.elapsed().as_secs_f64());
+    let path = bj.write().expect("write BENCH_fig15.json");
+    println!("wrote {}", path.display());
 }

@@ -1,8 +1,17 @@
 //! Bench: L3 hot-path micro-benchmarks (the §Perf targets) — BSR planning,
 //! fused transition planning, annotation deduction, full specialization of
 //! a 48-rank 60-layer graph, the discrete-event simulator, strategy
-//! lowering, the native GEMM kernels, and the real-numerics engine step
-//! (native backend) under both schedules.
+//! lowering, the native GEMM/attention kernels, and the real-numerics
+//! engine step (native backend) under both schedules and both executors.
+//!
+//! Every row is labelled `[wall]` (measured wall-clock) or `[modeled]`
+//! (replayed cost-model/simulator estimate) — the two are different
+//! quantities and must never be read as one. The event-driven executor's
+//! `StepStats::makespan_s` is a *replay* of modeled task durations; only
+//! the threaded executor's makespan is wall-clock.
+//!
+//! The run is also emitted as `BENCH_hotpath.json` (git rev + config +
+//! rows) for `tools/bench_compare.py`.
 //!
 //! `--test` (the CI smoke mode) runs every row once, just proving the
 //! harness executes.
@@ -11,15 +20,17 @@ use hetu::cluster::Cluster;
 use hetu::comm::BsrOptions;
 use hetu::coordinator::SyntheticCorpus;
 use hetu::costmodel::{CostModel, ModelCfg};
-use hetu::engine::{Engine, EngineStrategy, ShardLayout, BLOCK_PARAMS};
+use hetu::engine::{Engine, EngineStrategy, ExecMode, ShardLayout, BLOCK_PARAMS};
 use hetu::metrics::bench;
+use hetu::metrics::benchjson::BenchReport;
 use hetu::runtime::{native, Runtime};
 use hetu::spec::schedule::ScheduleKind;
 use hetu::strategy::{tables, LowerOptions};
 
-fn report(name: &str, iters: u32, f: impl FnMut()) {
+fn report(rep: &mut BenchReport, name: &str, kind: &str, iters: u32, f: impl FnMut()) {
     let (mean, best) = bench(iters, f);
-    println!("{name:<44} mean {:>10.3}ms   best {:>10.3}ms", mean * 1e3, best * 1e3);
+    println!("{name:<44} [{kind:>7}] mean {:>10.3}ms   best {:>10.3}ms", mean * 1e3, best * 1e3);
+    rep.row(name, kind, mean, best);
 }
 
 /// The seed engine's per-step sync-group rebuild (`BTreeMap` over
@@ -45,6 +56,11 @@ fn legacy_sync_group_rebuild(strategy: &EngineStrategy) -> usize {
 fn main() {
     let smoke = std::env::args().any(|a| a == "--test");
     let it = |n: u32| if smoke { 1 } else { n };
+    let mut rep = BenchReport::new("hotpath", smoke);
+    rep.tag("backend", "native")
+        .tag("model", "tiny-48")
+        .tag("build", if cfg!(debug_assertions) { "debug" } else { "release" });
+    let rep = &mut rep;
 
     let cluster = Cluster::h20(32);
     let cm = CostModel::new(ModelCfg::llama_32b());
@@ -53,27 +69,34 @@ fn main() {
     let hetero = Cluster::h800_16_h20_32();
     let big = tables::hetu_32b_16h800_32h20();
 
-    report("simulate_step C1 (32 ranks, 60 layers)", it(50), || {
+    report(rep, "simulate_step C1 (32 ranks, 60 layers)", "wall", it(50), || {
         std::hint::black_box(hetu::sim::simulate_step(&cluster, &cm, &c1).unwrap());
     });
-    report("simulate_step hetero 48-rank strategy", it(50), || {
+    report(rep, "simulate_step hetero 48-rank strategy", "wall", it(50), || {
         std::hint::black_box(hetu::sim::simulate_step(&hetero, &cm, &big).unwrap());
     });
-    report("plan_strategy_switch C1->C2 (fused)", it(20), || {
+    report(rep, "plan_strategy_switch C1->C2 (fused)", "wall", it(20), || {
         std::hint::black_box(
             hetu::switch::plan_strategy_switch(&c1, &c2, &cm, &cluster, BsrOptions::default(), true)
                 .unwrap(),
         );
     });
-    report("plan_strategy_switch C1->C2 (unfused)", it(20), || {
+    report(rep, "plan_strategy_switch C1->C2 (unfused)", "wall", it(20), || {
         std::hint::black_box(
-            hetu::switch::plan_strategy_switch(&c1, &c2, &cm, &cluster, BsrOptions::default(), false)
-                .unwrap(),
+            hetu::switch::plan_strategy_switch(
+                &c1,
+                &c2,
+                &cm,
+                &cluster,
+                BsrOptions::default(),
+                false,
+            )
+            .unwrap(),
         );
     });
 
     // full specialization pipeline on a 60-layer two-strategy graph
-    report("specialize 60-layer graph (deduce+resolve)", it(20), || {
+    report(rep, "specialize 60-layer graph (deduce+resolve)", "wall", it(20), || {
         let (mut g, binding) = hetu::figures::build_strategy_graph(&[&c1, &c2]).unwrap();
         let spec = hetu::spec::instantiate::specialize(
             &mut g,
@@ -87,7 +110,7 @@ fn main() {
     });
 
     // deduction-only over a wide graph
-    report("deduce 60-layer graph", it(50), || {
+    report(rep, "deduce 60-layer graph", "wall", it(50), || {
         let (mut g, _) = hetu::figures::build_strategy_graph(&[&c1, &c2]).unwrap();
         hetu::graph::deduce::deduce(&mut g, 0).unwrap();
         std::hint::black_box(g.ops.len());
@@ -96,14 +119,14 @@ fn main() {
     // Hetu-B per-step planning (dispatch + sim)
     let mut rng = hetu::testutil::Rng::new(1);
     let batch = hetu::data::sample_step(&mut rng, hetu::data::Corpus::CommonCrawl, 200_000, 32768);
-    report("hetu_b_step (dispatch + sim)", it(20), || {
+    report(rep, "hetu_b_step (dispatch + sim)", "wall", it(20), || {
         std::hint::black_box(hetu::figures::hetu_b_step(&cluster, &cm, &batch, 32768).unwrap());
     });
 
     // strategy lowering: Table-row encodings -> runnable EngineStrategy
     let tiny = native::tiny_config();
     let lopts = LowerOptions { total_microbatches: 8, tp_degrees: vec![1, 2, 4] };
-    report("lower C2 encoding -> EngineStrategy", it(500), || {
+    report(rep, "lower C2 encoding -> EngineStrategy", "wall", it(500), || {
         std::hint::black_box(hetu::strategy::lower(&c2, &tiny, &lopts).unwrap().num_devices());
     });
 
@@ -112,8 +135,20 @@ fn main() {
     // <100 ms step budget at release granularity)
     let a: Vec<f32> = (0..32 * 48).map(|i| (i % 7) as f32 * 0.1).collect();
     let b: Vec<f32> = (0..48 * 512).map(|i| (i % 5) as f32 * 0.1).collect();
-    report("native matmul 32x48x512 (head shape)", it(2000), || {
+    report(rep, "native matmul 32x48x512 (head shape)", "wall", it(2000), || {
         std::hint::black_box(native::matmul(&a, &b, 32, 48, 512));
+    });
+    // bf16-storage / f32-accumulate tier on the same shape
+    let a16: Vec<u16> = a.iter().map(|&x| native::f32_to_bf16(x)).collect();
+    let b16: Vec<u16> = b.iter().map(|&x| native::f32_to_bf16(x)).collect();
+    report(rep, "native matmul_bf16 32x48x512 (bf16 tier)", "wall", it(2000), || {
+        std::hint::black_box(native::matmul_bf16(&a16, &b16, 32, 48, 512));
+    });
+    // tiled (flash-style) attention on the tiny-48 block shape
+    let (ab, asq, anh, ahd) = (tiny.batch, tiny.seq, tiny.heads, tiny.hidden / tiny.heads);
+    let qkv: Vec<f32> = (0..ab * asq * anh * ahd).map(|i| ((i % 11) as f32 - 5.0) * 0.1).collect();
+    report(rep, "native flash attention fwd (tiny-48 qkv)", "wall", it(2000), || {
+        std::hint::black_box(native::attention(&qkv, &qkv, &qkv, ab, asq, anh, ahd));
     });
 
     // ---- engine-step micro (the §Perf target of the layout refactor).
@@ -122,17 +157,16 @@ fn main() {
     // ShardLayout. The two "sync-group" rows isolate that cost — the
     // layout builds once per strategy, the legacy rebuild ran every step.
     let strat = EngineStrategy::uniform("dp2tp2", 2, 2, 1, tiny.layers, 1);
-    report("sync-group legacy rebuild (per step)", it(500), || {
+    report(rep, "sync-group legacy rebuild (per step)", "wall", it(500), || {
         std::hint::black_box(legacy_sync_group_rebuild(&strat));
     });
-    report("sync-group ShardLayout build (per switch)", it(500), || {
+    report(rep, "sync-group ShardLayout build (per switch)", "wall", it(500), || {
         std::hint::black_box(ShardLayout::build(&tiny, &strat).unwrap().sync_ops.len());
     });
-    let mut eng =
-        Engine::with_runtime(Runtime::native(tiny), strat, 42, 1e-3).unwrap();
+    let mut eng = Engine::with_runtime(Runtime::native(tiny), strat, 42, 1e-3).unwrap();
     let mut corpus = SyntheticCorpus::new(7, tiny.vocab);
     let (b_sz, s_sz) = (tiny.batch, tiny.seq);
-    report("engine train_step dp2tp2 (native tiny-48)", it(10), || {
+    report(rep, "engine train_step dp2tp2 (native tiny-48)", "wall", it(10), || {
         std::hint::black_box(
             eng.train_step(&mut |_p, _m| corpus.microbatch(b_sz, s_sz)).unwrap().loss,
         );
@@ -143,11 +177,60 @@ fn main() {
         .with_schedule(ScheduleKind::OneFOneB);
     let mut eng2 = Engine::with_runtime(Runtime::native(tiny), strat_1f1b, 42, 1e-3).unwrap();
     let mut corpus2 = SyntheticCorpus::new(8, tiny.vocab);
-    report("engine train_step pp2 1F1B (native tiny-48)", it(10), || {
+    report(rep, "engine train_step pp2 1F1B (native tiny-48)", "wall", it(10), || {
         std::hint::black_box(
             eng2.train_step(&mut |_p, _m| corpus2.microbatch(b_sz, s_sz)).unwrap().loss,
         );
     });
+
+    // ---- concurrent executor (OS threads). A multi-pipeline strategy
+    // (dp2tp2: 2 pipelines x TP2) stepped by both executors on identical
+    // same-seed batch streams. The event-driven makespan is a *modeled
+    // replay*; only the threaded row's step time is real wall-clock
+    // parallelism. The paired warm-up step asserts the deterministic-
+    // reduction contract: threaded loss is bit-identical.
+    let strat_c = EngineStrategy::uniform("dp2tp2", 2, 2, 1, tiny.layers, 2);
+    let mut eng_ev =
+        Engine::with_runtime(Runtime::native(tiny), strat_c.clone(), 42, 1e-3).unwrap();
+    let mut eng_th = Engine::with_runtime(Runtime::native(tiny), strat_c, 42, 1e-3).unwrap();
+    eng_th.set_exec_mode(ExecMode::Threaded);
+    let mut corpus_ev = SyntheticCorpus::new(21, tiny.vocab);
+    let mut corpus_th = SyntheticCorpus::new(21, tiny.vocab);
+    let st_ev = eng_ev.train_step(&mut |_p, _m| corpus_ev.microbatch(b_sz, s_sz)).unwrap();
+    let st_th = eng_th.train_step(&mut |_p, _m| corpus_th.microbatch(b_sz, s_sz)).unwrap();
+    assert_eq!(
+        st_ev.loss.to_bits(),
+        st_th.loss.to_bits(),
+        "threaded loss must be bit-identical to the event-driven executor"
+    );
+    rep.row(
+        "step makespan dp2tp2 (replayed estimate)",
+        "modeled",
+        st_ev.makespan_s,
+        st_ev.makespan_s,
+    );
+    println!(
+        "{:<44} [modeled] {:>15.3}ms   (cost-model replay, not a measurement)",
+        "step makespan dp2tp2 (replayed estimate)",
+        st_ev.makespan_s * 1e3
+    );
+    report(rep, "step wall dp2tp2 single-thread executor", "wall", it(10), || {
+        std::hint::black_box(
+            eng_ev.train_step(&mut |_p, _m| corpus_ev.microbatch(b_sz, s_sz)).unwrap().loss,
+        );
+    });
+    report(rep, "step wall dp2tp2 threaded executor", "wall", it(10), || {
+        std::hint::black_box(
+            eng_th.train_step(&mut |_p, _m| corpus_th.microbatch(b_sz, s_sz)).unwrap().loss,
+        );
+    });
+    let (ev, th) = (rep.rows[rep.rows.len() - 2].best_s, rep.rows[rep.rows.len() - 1].best_s);
+    println!(
+        "    threaded vs single-thread wall (best): {:.3}ms vs {:.3}ms ({:.2}x)",
+        th * 1e3,
+        ev * 1e3,
+        ev / th.max(1e-12)
+    );
 
     // ---- §6 temporal runtime. `plan_switch` is the pairwise planning
     // cost the pool's cache amortizes away; the hot-switch row executes a
@@ -158,7 +241,7 @@ fn main() {
         .unwrap();
     let lb = ShardLayout::build(&tiny, &EngineStrategy::uniform("tp2", 1, 2, 1, tiny.layers, 2))
         .unwrap();
-    report("plan_switch dp2->tp2 (uncached, +moments)", it(100), || {
+    report(rep, "plan_switch dp2->tp2 (uncached, +moments)", "wall", it(100), || {
         std::hint::black_box(
             hetu::engine::plan_switch(&tiny, &la, &lb, true, &hetu::comm::UniformBandwidth, &[])
                 .unwrap()
@@ -177,7 +260,7 @@ fn main() {
     let mut eng3 = pool.spawn_engine(Runtime::native(tiny), 0, 42, 1e-3).unwrap();
     let mut corpus3 = SyntheticCorpus::new(11, tiny.vocab);
     eng3.train_step(&mut |_p, _m| corpus3.microbatch(b_sz, s_sz)).unwrap();
-    report("engine hot-switch A<->B (cached, batched)", it(20), || {
+    report(rep, "engine hot-switch A<->B (cached, batched)", "wall", it(20), || {
         pool.switch_engine(&mut eng3, 1).unwrap();
         std::hint::black_box(pool.switch_engine(&mut eng3, 0).unwrap().wire_elems);
     });
@@ -185,7 +268,7 @@ fn main() {
     // Arc<SwitchPlan> by refcount — no FusedBsrPlan/ShardLayout clones on
     // the steady-state switch path (the hot-switch constant-factor fix
     // this row guards; both keys are warm after the cycles above)
-    report("pool plan_for cache hit (Arc handout)", it(5000), || {
+    report(rep, "pool plan_for cache hit (Arc handout)", "wall", it(5000), || {
         std::hint::black_box(
             pool.plan_for(0, 1, true, false, &hetu::comm::UniformBandwidth)
                 .unwrap()
@@ -206,7 +289,7 @@ fn main() {
         .collect();
     eng4.set_microbatches(&windows).unwrap();
     let mut corpus4 = SyntheticCorpus::new(13, tiny.vocab);
-    report("engine train_step dp2 ragged 12x[2,2]", it(10), || {
+    report(rep, "engine train_step dp2 ragged 12x[2,2]", "wall", it(10), || {
         std::hint::black_box(
             eng4.train_step(&mut |p, m| corpus4.window_for(&windows[p][m])).unwrap().loss,
         );
@@ -218,17 +301,15 @@ fn main() {
     // encoding (2 uneven pipelines, TP tail, both schedule groups).
     let c2e = hetu::strategy::lower(&c2, &tiny, &lopts).unwrap();
     let c2_layout = ShardLayout::build(&tiny, &c2e).unwrap();
-    report("specialize lowered-C2 -> per-rank plans", it(500), || {
-        std::hint::black_box(
-            hetu::engine::specialize(&c2e, &c2_layout, false).unwrap().len(),
-        );
+    report(rep, "specialize lowered-C2 -> per-rank plans", "wall", it(500), || {
+        std::hint::black_box(hetu::engine::specialize(&c2e, &c2_layout, false).unwrap().len());
     });
 
     // the interleaved post-switch step: a cached hot switch queues its
     // per-sender delivery batches, and the next step's executor rides
     // them on wire lanes concurrent with compute (§6.2 measured
     // interleave) — switch + first-step cost as one unit
-    report("hot-switch + interleaved first step", it(10), || {
+    report(rep, "hot-switch + interleaved first step", "wall", it(10), || {
         pool.switch_engine(&mut eng3, 1).unwrap();
         let a = eng3.train_step(&mut |_p, _m| corpus3.microbatch(b_sz, s_sz)).unwrap();
         pool.switch_engine(&mut eng3, 0).unwrap();
@@ -239,4 +320,7 @@ fn main() {
         );
         std::hint::black_box(a.exposed_switch_s + b.exposed_switch_s);
     });
+
+    let path = rep.write().expect("write BENCH_hotpath.json");
+    println!("wrote {}", path.display());
 }

@@ -51,7 +51,7 @@ use crate::{Error, Result};
 
 use super::layout::{full_shape, gkey, pkey, ShardLayout, SyncOp};
 use super::specialize::{SpecTaskKind, SpecializedPlan};
-use super::{Engine, EnginePipeline, MicroBatch, BLOCK_PARAMS};
+use super::{Engine, EnginePipeline, ExecMode, MicroBatch, BLOCK_PARAMS};
 
 /// Deterministic parameter init: full tensors are generated from a
 /// per-tensor seed and region-sliced identically for every replica, so
@@ -228,6 +228,9 @@ impl Engine {
         batches: &[Vec<MicroBatch>],
         deliveries: &[(usize, f64)],
     ) -> Result<SpecRunOutcome> {
+        if self.exec_mode == ExecMode::Threaded {
+            return self.run_specialized_threaded(plan, pipelines, batches, deliveries);
+        }
         let n = plan.tasks.len();
         let nranks = plan.ranks.len();
         let rank_pos = |r: usize| {
@@ -395,18 +398,19 @@ impl Engine {
         })
     }
 
-    /// Activation key of one `(pipeline, micro-batch)` slot.
-    fn akey(pi: usize, mb: usize) -> String {
+    /// Activation key of one `(pipeline, micro-batch)` slot (shared with
+    /// the threaded executor, [`super::thread`]).
+    pub(crate) fn akey(pi: usize, mb: usize) -> String {
         format!("act.p{pi}.mb{mb}")
     }
 
     /// Incoming-gradient key of one `(pipeline, micro-batch)` slot.
-    fn dkey(pi: usize, mb: usize) -> String {
+    pub(crate) fn dkey(pi: usize, mb: usize) -> String {
         format!("dact.p{pi}.mb{mb}")
     }
 
     /// Saved-block-input key (recompute-in-backward).
-    fn skey(pi: usize, mb: usize, l: u32) -> String {
+    pub(crate) fn skey(pi: usize, mb: usize, l: u32) -> String {
         format!("save.p{pi}.mb{mb}.L{l}")
     }
 

@@ -28,6 +28,7 @@ pub mod layout;
 pub mod optim;
 pub mod specialize;
 pub mod switch;
+pub mod thread;
 
 use std::sync::Arc;
 
@@ -39,7 +40,7 @@ use crate::{Error, Result};
 
 pub use layout::{ShardLayout, SyncOp, ZeroGroup};
 pub use optim::AdamW;
-pub use specialize::{specialize, RankPlan, SpecTask, SpecTaskKind, SpecializedPlan};
+pub use specialize::{specialize, HandoffEdge, RankPlan, SpecTask, SpecTaskKind, SpecializedPlan};
 pub use switch::{build_moves, plan_switch, EngineSwitchReport, MoveTarget, SwitchPlan};
 
 /// The 8 per-block parameter names, artifact input order.
@@ -288,6 +289,23 @@ pub struct StepStats {
     pub switch_delivery_s: f64,
 }
 
+/// Which executor [`Engine::train_step`] drives the specialized plan
+/// with (DESIGN.md §8). Both are numerically bit-identical; they differ
+/// in *how* the per-rank timelines run and what `makespan_s` means.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecMode {
+    /// The single-thread event-driven executor ([`exec`]): tasks fire as
+    /// dependencies resolve, per-task wall times are replayed through the
+    /// dependency structure, so the makespan is *modeled*.
+    #[default]
+    EventDriven,
+    /// The concurrent executor ([`thread`]): one OS thread per rank,
+    /// comm tasks as typed channel messages, so the makespan is measured
+    /// *wall-clock*. Requires the native backend (the PJRT client is not
+    /// `Send`).
+    Threaded,
+}
+
 /// The engine: runtime + mesh + strategy + cached layout + optimizer.
 pub struct Engine {
     /// Artifact runtime.
@@ -319,6 +337,14 @@ pub struct Engine {
     /// partition of `m.*`/`v.*`, exchanging updated parameter slices after
     /// the optimizer step). See [`layout::ZeroGroup`].
     pub zero1: bool,
+    /// Executor the specialized plan runs under (event-driven replay or
+    /// per-rank OS threads); see [`ExecMode`].
+    pub exec_mode: ExecMode,
+    /// Determinism-stress scheduling jitter for the threaded executor:
+    /// `Some(seed)` sleeps a hashed 0–200 µs before every task, shaking
+    /// thread interleavings without touching any reduction order (the
+    /// concurrent-determinism tests sweep this).
+    pub exec_jitter: Option<u64>,
     /// The cached per-rank specialization of the current strategy
     /// (DESIGN.md §7): built on first use, rebuilt whenever the strategy,
     /// micro-batch counts, or ZeRO-1 mode change. `None` ⇒ the next
@@ -367,6 +393,8 @@ impl Engine {
             opt: AdamW::new(lr),
             topology: None,
             zero1: false,
+            exec_mode: ExecMode::default(),
+            exec_jitter: None,
             spec: None,
             pending_deliveries: vec![],
             step: 0,
@@ -385,6 +413,22 @@ impl Engine {
         self.zero1 = on;
         self.spec = None; // the ZeroExchange task appears/disappears
         Ok(())
+    }
+
+    /// Select the executor for subsequent steps (both modes are
+    /// bit-identical; [`ExecMode::Threaded`] measures wall-clock
+    /// makespans but requires the native backend). Takes effect on the
+    /// next [`Engine::train_step`]; the specialized plan is shared, so no
+    /// re-specialization happens.
+    pub fn set_exec_mode(&mut self, mode: ExecMode) {
+        self.exec_mode = mode;
+    }
+
+    /// Set (or clear) the threaded executor's scheduling-jitter seed —
+    /// the determinism stress knob; no effect under
+    /// [`ExecMode::EventDriven`].
+    pub fn set_exec_jitter(&mut self, seed: Option<u64>) {
+        self.exec_jitter = seed;
     }
 
     /// True once optimizer moments exist (after the first step). Switch

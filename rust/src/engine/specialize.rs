@@ -245,6 +245,70 @@ impl SpecializedPlan {
     pub fn rank_index(&self, rank: usize) -> Option<usize> {
         self.ranks.binary_search_by_key(&rank, |rp| rp.rank).ok()
     }
+
+    /// Derive the plan's p2p **hand-off edges** — the channel topology of
+    /// the threaded executor ([`super::thread`]). Every pull-model
+    /// boundary task (a [`FwdIn`](SpecTaskKind::FwdIn)/
+    /// [`BwdIn`](SpecTaskKind::BwdIn) with non-empty `src`) has exactly
+    /// one dependency: the producing stage's tail task on exactly the
+    /// `src` devices. That invariant is what lets the executor relocate
+    /// the transfer to the *sending* side (a typed message fired as a
+    /// post-action of the producer tail) without changing semantics;
+    /// violations are structural specializer bugs and surface as typed
+    /// errors.
+    pub fn handoff_edges(&self) -> Result<Vec<HandoffEdge>> {
+        let mut edges = vec![];
+        for (ti, t) in self.tasks.iter().enumerate() {
+            if t.src.is_empty() {
+                continue;
+            }
+            if !matches!(t.kind, SpecTaskKind::FwdIn { .. } | SpecTaskKind::BwdIn { .. }) {
+                return Err(Error::Engine(format!(
+                    "handoff_edges: task {ti} ({:?}) has producers but is not a \
+                     boundary task",
+                    t.kind
+                )));
+            }
+            let &[tail] = &t.deps[..] else {
+                return Err(Error::Engine(format!(
+                    "handoff_edges: boundary task {ti} has {} deps (want exactly the \
+                     producer tail)",
+                    t.deps.len()
+                )));
+            };
+            if self.tasks[tail].ranks != t.src {
+                return Err(Error::Engine(format!(
+                    "handoff_edges: task {ti}'s dep {tail} runs on {:?} but its \
+                     producers are {:?}",
+                    self.tasks[tail].ranks, t.src
+                )));
+            }
+            edges.push(HandoffEdge {
+                task: ti,
+                producer_tail: tail,
+                producers: t.src.clone(),
+                consumer_root: t.ranks[0],
+            });
+        }
+        Ok(edges)
+    }
+}
+
+/// One p2p boundary transfer of the plan, sender-side view: after
+/// `producer_tail` completes, `producers[0]` sends the boundary tensor to
+/// `consumer_root` (the consuming `task`'s root), and the remaining
+/// producers free their dead copies. Derived, not stored — the edges are
+/// a reading of [`SpecTask::src`]/[`SpecTask::deps`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HandoffEdge {
+    /// The consuming boundary task (`FwdIn`/`BwdIn`).
+    pub task: usize,
+    /// The producing stage's tail task (the edge's dependency).
+    pub producer_tail: usize,
+    /// Producing stage devices (TP-group order; `[0]` is the sender).
+    pub producers: Vec<usize>,
+    /// Consuming stage's root rank (the receiver).
+    pub consumer_root: usize,
 }
 
 /// Append a task, threading it onto every participating rank's timeline.
@@ -600,6 +664,25 @@ mod tests {
         };
         let layout = ShardLayout::build(&cfg, &shared).unwrap();
         assert!(specialize(&shared, &layout, false).is_err());
+    }
+
+    #[test]
+    fn handoff_edges_cover_every_stage_boundary_crossing() {
+        let s = EngineStrategy::uniform("dp2tp2pp2", 2, 2, 2, 8, 3);
+        let plan = plan_for(&s, false);
+        let edges = plan.handoff_edges().unwrap();
+        // per pipeline: one fwd + one bwd crossing per micro-batch over
+        // the single stage boundary
+        assert_eq!(edges.len(), 2 * 2 * 3);
+        for e in &edges {
+            let t = &plan.tasks[e.task];
+            assert_eq!(t.src, e.producers);
+            assert_eq!(t.ranks[0], e.consumer_root);
+            assert_eq!(t.deps, vec![e.producer_tail]);
+            assert_eq!(plan.tasks[e.producer_tail].ranks, e.producers);
+            // producers and consumers are disjoint (device-disjoint stages)
+            assert!(!e.producers.contains(&e.consumer_root));
+        }
     }
 
     #[test]

@@ -1,0 +1,1067 @@
+//! The **concurrent multi-rank executor** (DESIGN.md §8): one OS thread
+//! per mesh rank, each running its [`RankPlan`](super::RankPlan) timeline
+//! in program order, with every communication task turned into typed
+//! messages over `std::sync::mpsc` channels — so wall-clock step time *is*
+//! the makespan instead of the event-driven executor's modeled replay.
+//!
+//! The channel topology is derived mechanically from the specialized
+//! plan's dependency edges ([`SpecializedPlan::handoff_edges`]): a p2p
+//! activation/gradient hand-off becomes a [`Msg::Handoff`] from the
+//! producing stage's root fired as a *post-action* of the producer-side
+//! tail task; a TP partial-sum sync becomes a rank-ordered gather of
+//! [`Msg::Partial`]s at the group leader plus a [`Msg::Result`] scatter;
+//! stage-input broadcasts reuse the `Result` lane. The token-weighted
+//! `GradReduce` and the ZeRO-1 `ZeroExchange` run leader-driven once every
+//! rank has parked at the phase barrier (their dependency edges cover all
+//! backward tails, so no other thread holds work).
+//!
+//! **Deterministic-reduction contract** (the bit-identity argument): every
+//! collective reduces in *rank order regardless of message arrival* — the
+//! TP leader awaits each member's partial in group order, the gradient
+//! reduction replays the [`ShardLayout`]'s cached op list on one thread,
+//! and the f64 loss sum replays `head_order` exactly as the single-thread
+//! executor does. Per-device accumulation order is per-rank program order,
+//! identical to both oracles, so losses, parameters, wire elements, and
+//! comm-op counts are **bit-identical** to `Engine::train_step_reference`
+//! and to the event-driven executor (asserted here and in
+//! `rust/tests/concurrent_determinism.rs`, including under scheduling
+//! jitter).
+//!
+//! Wire/ops accounting replicates [`Mesh`](crate::collectives::Mesh)'s
+//! semantics operation for operation (gather `(n−1)·elems` + scatter
+//! `n·elems` + one op per all-reduce, one op per broadcast, one per send)
+//! into shared atomics, folded back into the mesh after the join.
+//!
+//! This path requires the native backend: the PJRT client is `Rc`-based
+//! (not `Send`), so artifact calls go straight to
+//! [`native::call`](crate::runtime::native::call) with the `Copy` config.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::collectives::{extract_region, write_region, DeviceMem};
+use crate::hspmd::slices::Region;
+use crate::runtime::{native, HostTensor, ManifestConfig};
+use crate::temporal::overlap::SwitchOverlap;
+use crate::{Error, Result};
+
+use super::exec::{accumulate, SpecRunOutcome};
+use super::layout::{gkey, pkey, ShardLayout, SyncOp};
+use super::specialize::{SpecTaskKind, SpecializedPlan};
+use super::{AdamW, Engine, EnginePipeline, MicroBatch, BLOCK_PARAMS};
+
+/// How long any single wait (dependency, phase, or receive) may stall
+/// before the executor reports a deadlock instead of hanging the step.
+const WAIT_CAP: Duration = Duration::from_secs(120);
+
+/// Condvar/receive polling quantum (also the failure-flag check cadence).
+const POLL: Duration = Duration::from_millis(50);
+
+/// A typed message between rank threads — the materialized form of a comm
+/// task's data movement.
+enum Msg {
+    /// A TP member's partial sum, gathered by the group leader in rank
+    /// order (the fixed reduction order of the determinism contract).
+    Partial {
+        /// Plan index of the TP-sync task this partial belongs to.
+        task: usize,
+        /// Sending mesh rank.
+        from: usize,
+        /// The partial tensor.
+        t: HostTensor,
+    },
+    /// A reduced/broadcast tensor scattered from a group leader to a
+    /// member (TP-sync results and stage-input broadcasts).
+    Result {
+        /// Plan index of the task this result belongs to.
+        task: usize,
+        /// The tensor.
+        t: HostTensor,
+    },
+    /// A cross-stage p2p boundary hand-off (activation forward, gradient
+    /// backward) from the producing stage's root to the consuming root.
+    Handoff {
+        /// Plan index of the consuming `FwdIn`/`BwdIn` task.
+        task: usize,
+        /// The boundary tensor (moved, not cloned: the producer frees it).
+        t: HostTensor,
+    },
+}
+
+/// What a producer rank does right after finishing its share of a
+/// hand-off's producer-side tail task.
+#[derive(Clone, Debug)]
+enum PostAction {
+    /// Producer root: take the boundary tensor off the own device and
+    /// fire it at the consumer root (accounts one send on the wire).
+    Send {
+        /// Plan index of the consuming boundary task.
+        handoff: usize,
+        /// Boundary tensor key.
+        key: String,
+        /// Consuming stage's root rank.
+        to: usize,
+    },
+    /// Non-root producer: free the own (now dead) boundary copy, exactly
+    /// when the event-driven executor frees the producer copies.
+    Drop {
+        /// Boundary tensor key.
+        key: String,
+    },
+}
+
+/// Completion state shared by all rank threads.
+struct Progress {
+    /// Task finished (all shares done / global phase done).
+    done: Vec<bool>,
+    /// Participant shares still outstanding per task.
+    remaining: Vec<usize>,
+    /// A thread failed; everyone unwinds.
+    failed: bool,
+}
+
+/// Everything the rank threads share for one step.
+struct Shared<'e> {
+    plan: &'e SpecializedPlan,
+    pipelines: &'e [EnginePipeline],
+    batches: &'e [Vec<MicroBatch>],
+    layout: &'e ShardLayout,
+    /// One lock per mesh rank; each thread only ever locks its *own*
+    /// device (global phases excepted, which run at a full barrier).
+    devs: &'e [Mutex<DeviceMem>],
+    /// `(producer rank, producer tail task) → post-actions`.
+    post: BTreeMap<(usize, usize), Vec<PostAction>>,
+    cfg: ManifestConfig,
+    opt: AdamW,
+    zero1: bool,
+    step: u64,
+    /// Determinism-stress jitter seed (hashed 0–200 µs pre-task sleeps).
+    jitter: Option<u64>,
+    progress: Mutex<Progress>,
+    cv: Condvar,
+    /// Per-`(pipeline, micro-batch)` head outcomes `(mean loss, tokens)`.
+    losses: Mutex<BTreeMap<(usize, usize), (f32, u64)>>,
+    /// First error wins; later "aborted" errors are dropped.
+    err: Mutex<Option<Error>>,
+    wire: AtomicU64,
+    ops: AtomicU64,
+}
+
+/// Poison-tolerant lock: a panicked peer must not cascade into unwrap
+/// panics — the failure flag carries the abort instead.
+fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// SplitMix64 — the stateless per-`(task, rank)` jitter hash.
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+impl<'e> Shared<'e> {
+    fn lock_dev(&self, rank: usize) -> MutexGuard<'_, DeviceMem> {
+        plock(&self.devs[rank])
+    }
+
+    /// Plan position of a mesh rank (channel index).
+    fn pos_of(&self, rank: usize) -> usize {
+        self.plan.rank_index(rank).expect("threaded: participant rank has a timeline")
+    }
+
+    /// Randomized pre-task sleep under a jitter seed: shakes thread
+    /// interleavings for the determinism stress tests without touching
+    /// any reduction order.
+    fn jitter_sleep(&self, ti: usize, rank: usize) {
+        if let Some(seed) = self.jitter {
+            let h = splitmix64(seed ^ ((ti as u64) << 20) ^ rank as u64);
+            std::thread::sleep(Duration::from_micros(h % 200));
+        }
+    }
+
+    /// Block until every dependency edge of `ti` is done.
+    fn wait_deps(&self, ti: usize) -> Result<()> {
+        let deps = &self.plan.tasks[ti].deps;
+        if deps.is_empty() {
+            return Ok(());
+        }
+        let deadline = Instant::now() + WAIT_CAP;
+        let mut st = plock(&self.progress);
+        loop {
+            if st.failed {
+                return Err(Error::Engine("threaded: aborted".into()));
+            }
+            if deps.iter().all(|&d| st.done[d]) {
+                return Ok(());
+            }
+            if Instant::now() > deadline {
+                return Err(Error::Engine(format!(
+                    "threaded: dependency wait timed out at task {ti} (deadlock?)"
+                )));
+            }
+            st = self.cv.wait_timeout(st, POLL).unwrap_or_else(|p| p.into_inner()).0;
+        }
+    }
+
+    /// This rank finished its share of a per-group task.
+    fn finish_share(&self, ti: usize) {
+        let mut st = plock(&self.progress);
+        st.remaining[ti] -= 1;
+        if st.remaining[ti] == 0 {
+            st.done[ti] = true;
+            self.cv.notify_all();
+        }
+    }
+
+    /// The leader finished a global phase on behalf of every rank.
+    fn finish_global(&self, ti: usize) {
+        let mut st = plock(&self.progress);
+        st.remaining[ti] = 0;
+        st.done[ti] = true;
+        self.cv.notify_all();
+    }
+
+    /// Block until `ti` is done (non-leader side of a global phase).
+    fn wait_done(&self, ti: usize) -> Result<()> {
+        let deadline = Instant::now() + WAIT_CAP;
+        let mut st = plock(&self.progress);
+        loop {
+            if st.done[ti] {
+                return Ok(());
+            }
+            if st.failed {
+                return Err(Error::Engine("threaded: aborted".into()));
+            }
+            if Instant::now() > deadline {
+                return Err(Error::Engine(format!(
+                    "threaded: phase wait timed out at task {ti} (deadlock?)"
+                )));
+            }
+            st = self.cv.wait_timeout(st, POLL).unwrap_or_else(|p| p.into_inner()).0;
+        }
+    }
+
+    /// Record the first error and raise the abort flag.
+    fn fail(&self, e: Error) {
+        {
+            let mut err = plock(&self.err);
+            if err.is_none() {
+                *err = Some(e);
+            }
+        }
+        plock(&self.progress).failed = true;
+        self.cv.notify_all();
+    }
+
+    /// Typed abort when a peer has already failed.
+    fn check_failed(&self) -> Result<()> {
+        if plock(&self.progress).failed {
+            return Err(Error::Engine("threaded: aborted".into()));
+        }
+        Ok(())
+    }
+
+    /// Leader replica of [`Mesh::all_reduce`](crate::collectives::Mesh):
+    /// reduce in group order, scatter to every member, identical wire/ops
+    /// accounting. Runs only at the GradReduce barrier (all ranks parked).
+    fn all_reduce_mesh(&self, group: &[usize], key: &str) -> Result<()> {
+        if group.len() <= 1 {
+            return Ok(());
+        }
+        let mut acc = self.lock_dev(group[0]).get(key)?.clone();
+        for &d in &group[1..] {
+            let t = self.lock_dev(d).get(key)?.clone();
+            acc.add_assign(&t)?;
+            self.wire.fetch_add(t.len() as u64, Ordering::Relaxed);
+        }
+        for &d in group {
+            self.wire.fetch_add(acc.len() as u64, Ordering::Relaxed);
+            self.lock_dev(d).put(key, acc.clone());
+        }
+        self.ops.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Leader replica of
+    /// [`Mesh::all_reduce_region`](crate::collectives::Mesh) (hetero-TP
+    /// shared-slice gradient sync), same reduction order and accounting.
+    fn all_reduce_region_mesh(&self, parts: &[(usize, Region)], key: &str) -> Result<()> {
+        if parts.len() <= 1 {
+            return Ok(());
+        }
+        let (d0, r0) = &parts[0];
+        let mut acc = extract_region(self.lock_dev(*d0).get(key)?, r0)?;
+        for (d, r) in &parts[1..] {
+            let piece = extract_region(self.lock_dev(*d).get(key)?, r)?;
+            acc.add_assign(&piece)?;
+            self.wire.fetch_add(piece.len() as u64, Ordering::Relaxed);
+        }
+        for (d, r) in parts {
+            self.wire.fetch_add(acc.len() as u64, Ordering::Relaxed);
+            write_region(self.lock_dev(*d).get_mut(key)?, r, &acc)?;
+        }
+        self.ops.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// The token-weighted gradient reduction (leader-driven): the layout's
+    /// cached sync plan in its fixed order, then the embedding/head
+    /// reductions, then `1/total_tokens` scaling — byte-for-byte the
+    /// single-thread `sync_gradients`.
+    fn grad_reduce(&self) -> Result<()> {
+        let mut tokens = 0u64;
+        for &(_, n) in plock(&self.losses).values() {
+            tokens += n;
+        }
+        if tokens == 0 {
+            return Err(Error::Engine("train_step: no tokens processed".into()));
+        }
+        for op in &self.layout.sync_ops {
+            match op {
+                SyncOp::AllReduce { key, devs } => self.all_reduce_mesh(devs, key)?,
+                SyncOp::SliceReduce { key, parts } => {
+                    self.all_reduce_region_mesh(parts, key)?
+                }
+            }
+        }
+        self.all_reduce_mesh(&self.layout.first_roots, "grad.emb")?;
+        self.all_reduce_mesh(&self.layout.last_roots, "grad.gf")?;
+        self.all_reduce_mesh(&self.layout.last_roots, "grad.wout")?;
+        let scale = 1.0 / tokens as f32;
+        for (dev, key) in &self.layout.grad_keys {
+            self.lock_dev(*dev).get_mut(key)?.scale(scale)?;
+        }
+        Ok(())
+    }
+
+    /// The ZeRO-1 updated-slice exchange (leader-driven), identical to
+    /// `exchange_zero1_slices` including the one-grouped-op accounting.
+    fn zero_exchange(&self) -> Result<()> {
+        for g in &self.layout.zero_groups {
+            for (owner, region) in &g.parts {
+                let piece = extract_region(self.lock_dev(*owner).get(&g.key)?, region)?;
+                for &m in &g.members {
+                    if m != *owner {
+                        write_region(self.lock_dev(m).get_mut(&g.key)?, region, &piece)?;
+                        self.wire.fetch_add(piece.len() as u64, Ordering::Relaxed);
+                    }
+                }
+            }
+            self.ops.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+}
+
+/// Out-of-order message buffer: channels deliver in send order across
+/// *all* peers, but a rank may legitimately receive (say) a GPipe
+/// hand-off for micro-batch 3 while waiting on a TP partial for
+/// micro-batch 1 — non-matching messages are stashed, not dropped.
+struct Inbox {
+    rx: Receiver<Msg>,
+    stash: Vec<Msg>,
+}
+
+impl Inbox {
+    fn recv_where(&mut self, sh: &Shared<'_>, pred: impl Fn(&Msg) -> bool) -> Result<Msg> {
+        if let Some(i) = self.stash.iter().position(&pred) {
+            return Ok(self.stash.remove(i));
+        }
+        let deadline = Instant::now() + WAIT_CAP;
+        loop {
+            match self.rx.recv_timeout(POLL) {
+                Ok(m) if pred(&m) => return Ok(m),
+                Ok(m) => self.stash.push(m),
+                Err(RecvTimeoutError::Timeout) => {
+                    sh.check_failed()?;
+                    if Instant::now() > deadline {
+                        return Err(Error::Engine(
+                            "threaded: receive timed out (deadlock?)".into(),
+                        ));
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(Error::Engine("threaded: peer channel closed".into()));
+                }
+            }
+        }
+    }
+}
+
+/// One rank thread: its plan position, mesh rank, the shared step state,
+/// a sender per plan position, and the own receive buffer.
+struct Worker<'s, 'e> {
+    ri: usize,
+    rank: usize,
+    sh: &'s Shared<'e>,
+    txs: Vec<Sender<Msg>>,
+    inbox: Inbox,
+}
+
+impl Worker<'_, '_> {
+    /// Walk the own timeline in program order — the whole specialized
+    /// program of this rank.
+    fn run(&mut self) -> Result<()> {
+        let sh = self.sh;
+        for &ti in &sh.plan.ranks[self.ri].tasks {
+            sh.jitter_sleep(ti, self.rank);
+            sh.wait_deps(ti)?;
+            let task = &sh.plan.tasks[ti];
+            match task.kind {
+                SpecTaskKind::GradReduce | SpecTaskKind::ZeroExchange => {
+                    self.global_phase(ti, &task.kind)?;
+                }
+                _ => {
+                    match task.kind {
+                        SpecTaskKind::FwdIn { pipe, stage, mb } => {
+                            self.fwd_in(ti, pipe, stage, mb)?
+                        }
+                        SpecTaskKind::FwdGemm { pipe, stage, mb, layer } => {
+                            self.fwd_gemm(pipe, stage, mb, layer)?
+                        }
+                        SpecTaskKind::FwdTpSync { pipe, stage, mb, .. } => {
+                            self.tp_sync(ti, pipe, stage, mb, true)?
+                        }
+                        SpecTaskKind::BwdIn { pipe, stage, mb } => {
+                            self.bwd_in(ti, pipe, stage, mb)?
+                        }
+                        SpecTaskKind::BwdGemm { pipe, stage, mb, layer } => {
+                            self.bwd_gemm(pipe, stage, mb, layer)?
+                        }
+                        SpecTaskKind::BwdTpSync { pipe, stage, mb, .. } => {
+                            self.tp_sync(ti, pipe, stage, mb, false)?
+                        }
+                        SpecTaskKind::EmbedBwd { pipe, mb } => self.embed_bwd(pipe, mb)?,
+                        SpecTaskKind::OptimStep => self.optim_step()?,
+                        SpecTaskKind::GradReduce | SpecTaskKind::ZeroExchange => {
+                            unreachable!("global phases handled above")
+                        }
+                    }
+                    sh.finish_share(ti);
+                }
+            }
+            self.post_actions(ti)?;
+        }
+        Ok(())
+    }
+
+    fn send_to(&self, rank: usize, msg: Msg) {
+        // a closed peer means the step is already failing; the abort flag
+        // carries the error, so a dead letter is fine
+        let _ = self.txs[self.sh.pos_of(rank)].send(msg);
+    }
+
+    fn recv_partial(&mut self, ti: usize, from: usize) -> Result<HostTensor> {
+        let m = self.inbox.recv_where(self.sh, |m| {
+            matches!(m, Msg::Partial { task, from: f, .. } if *task == ti && *f == from)
+        })?;
+        match m {
+            Msg::Partial { t, .. } => Ok(t),
+            _ => unreachable!("predicate admits only partials"),
+        }
+    }
+
+    fn recv_result(&mut self, ti: usize) -> Result<HostTensor> {
+        let m = self
+            .inbox
+            .recv_where(self.sh, |m| matches!(m, Msg::Result { task, .. } if *task == ti))?;
+        match m {
+            Msg::Result { t, .. } => Ok(t),
+            _ => unreachable!("predicate admits only results"),
+        }
+    }
+
+    fn recv_handoff(&mut self, ti: usize) -> Result<HostTensor> {
+        let m = self
+            .inbox
+            .recv_where(self.sh, |m| matches!(m, Msg::Handoff { task, .. } if *task == ti))?;
+        match m {
+            Msg::Handoff { t, .. } => Ok(t),
+            _ => unreachable!("predicate admits only hand-offs"),
+        }
+    }
+
+    /// Root-fanout broadcast over the stage's TP group, with
+    /// [`Mesh::broadcast`](crate::collectives::Mesh) accounting (one op
+    /// always, wire per non-root member).
+    fn broadcast_group(&self, ti: usize, devices: &[usize], key: &str) -> Result<()> {
+        let sh = self.sh;
+        let t = sh.lock_dev(self.rank).get(key)?.clone();
+        for &d in devices {
+            if d != self.rank {
+                sh.wire.fetch_add(t.len() as u64, Ordering::Relaxed);
+                self.send_to(d, Msg::Result { task: ti, t: t.clone() });
+            }
+        }
+        sh.ops.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// [`SpecTaskKind::FwdIn`]: stage 0 embeds on the root, later stages'
+    /// roots await the producer's [`Msg::Handoff`]; the root then
+    /// broadcasts to the TP members, who just install the copy.
+    fn fwd_in(&mut self, ti: usize, pi: usize, si: usize, mb: usize) -> Result<()> {
+        let sh = self.sh;
+        let stage = &sh.pipelines[pi].stages[si];
+        let akey = Engine::akey(pi, mb);
+        if self.rank == stage.devices[0] {
+            if si == 0 {
+                let batch = &sh.batches[pi][mb];
+                let tok = HostTensor::i32(
+                    vec![batch.n_seqs, batch.seq_len],
+                    batch.tokens.clone(),
+                )?;
+                let mut dev = sh.lock_dev(self.rank);
+                let x0 = {
+                    let emb = dev.get("emb")?;
+                    native::call(&sh.cfg, "embed_fwd", &[emb, &tok])?
+                        .into_iter()
+                        .next()
+                        .unwrap()
+                };
+                dev.put(&akey, x0);
+            } else {
+                let x = self.recv_handoff(ti)?;
+                sh.lock_dev(self.rank).put(&akey, x);
+            }
+            self.broadcast_group(ti, &stage.devices, &akey)?;
+        } else {
+            let x = self.recv_result(ti)?;
+            sh.lock_dev(self.rank).put(&akey, x);
+        }
+        Ok(())
+    }
+
+    /// [`SpecTaskKind::FwdGemm`]: save the block input for recompute,
+    /// then the own partial forward GEMMs — all on the own device.
+    fn fwd_gemm(&mut self, pi: usize, si: usize, mb: usize, l: u32) -> Result<()> {
+        let sh = self.sh;
+        let stage = &sh.pipelines[pi].stages[si];
+        let akey = Engine::akey(pi, mb);
+        let art = format!("block_fwd_tp{}", stage.tp());
+        let mut dev = sh.lock_dev(self.rank);
+        let x = dev.get(&akey)?.clone();
+        dev.put(&Engine::skey(pi, mb, l), x);
+        let y_part = {
+            let mut inputs: Vec<&HostTensor> = Vec::with_capacity(9);
+            for p in BLOCK_PARAMS {
+                inputs.push(dev.get(&pkey(l, p))?);
+            }
+            inputs.push(dev.get(&akey)?);
+            native::call(&sh.cfg, &art, &inputs)?.into_iter().next().unwrap()
+        };
+        dev.put("part", y_part);
+        Ok(())
+    }
+
+    /// [`SpecTaskKind::FwdTpSync`]/[`SpecTaskKind::BwdTpSync`]: the TP
+    /// partial-sum all-reduce as messages. The group leader gathers
+    /// [`Msg::Partial`]s **in group order** (fixed reduction order),
+    /// scatters the sum, and every member adds it into the running
+    /// activation/gradient — wire/ops accounting exactly as
+    /// [`Mesh::all_reduce`](crate::collectives::Mesh).
+    fn tp_sync(&mut self, ti: usize, pi: usize, si: usize, mb: usize, fwd: bool) -> Result<()> {
+        let sh = self.sh;
+        let stage = &sh.pipelines[pi].stages[si];
+        let group = &stage.devices;
+        let (part_key, xkey) = if fwd {
+            ("part", Engine::akey(pi, mb))
+        } else {
+            ("dpart", Engine::dkey(pi, mb))
+        };
+        if group.len() <= 1 {
+            // degenerate group: the mesh all-reduce is a no-op (no wire,
+            // no op), only the local residual add remains
+            let mut dev = sh.lock_dev(self.rank);
+            let part = dev.get(part_key)?.clone();
+            dev.get_mut(&xkey)?.add_assign(&part)?;
+            return Ok(());
+        }
+        let leader = group[0];
+        if self.rank == leader {
+            let mut acc = sh.lock_dev(self.rank).get(part_key)?.clone();
+            for &r in &group[1..] {
+                let t = self.recv_partial(ti, r)?;
+                acc.add_assign(&t)?;
+                sh.wire.fetch_add(t.len() as u64, Ordering::Relaxed);
+            }
+            for &r in group.iter() {
+                sh.wire.fetch_add(acc.len() as u64, Ordering::Relaxed);
+                if r != leader {
+                    self.send_to(r, Msg::Result { task: ti, t: acc.clone() });
+                }
+            }
+            sh.ops.fetch_add(1, Ordering::Relaxed);
+            let mut dev = sh.lock_dev(self.rank);
+            dev.put(part_key, acc.clone());
+            dev.get_mut(&xkey)?.add_assign(&acc)?;
+        } else {
+            let part = sh.lock_dev(self.rank).get(part_key)?.clone();
+            self.send_to(leader, Msg::Partial { task: ti, from: self.rank, t: part });
+            let acc = self.recv_result(ti)?;
+            let mut dev = sh.lock_dev(self.rank);
+            dev.put(part_key, acc.clone());
+            dev.get_mut(&xkey)?.add_assign(&acc)?;
+        }
+        Ok(())
+    }
+
+    /// [`SpecTaskKind::BwdIn`]: the last stage's root runs the fused head
+    /// (loss + token-scaled head gradients) and every member frees its own
+    /// stage activation; earlier stages' roots await the gradient
+    /// hand-off. Both broadcast the incoming gradient over the group.
+    fn bwd_in(&mut self, ti: usize, pi: usize, si: usize, mb: usize) -> Result<()> {
+        let sh = self.sh;
+        let pipe = &sh.pipelines[pi];
+        let stage = &pipe.stages[si];
+        let last = pipe.stages.len() - 1;
+        let akey = Engine::akey(pi, mb);
+        let dkey = Engine::dkey(pi, mb);
+        if self.rank == stage.devices[0] {
+            if si == last {
+                let batch = &sh.batches[pi][mb];
+                let tokens = batch.real_tokens();
+                let w = tokens as f32;
+                let tgt = HostTensor::i32(
+                    vec![batch.n_seqs, batch.seq_len],
+                    batch.targets.clone(),
+                )?;
+                let loss = {
+                    let mut dev = sh.lock_dev(self.rank);
+                    let (loss, mut dx, mut dgf, mut dwout) = {
+                        let out = native::call(
+                            &sh.cfg,
+                            "head_step",
+                            &[dev.get("gf")?, dev.get("wout")?, dev.get(&akey)?, &tgt],
+                        )?;
+                        let mut it = out.into_iter();
+                        let loss = it.next().unwrap().as_f32()?[0];
+                        (loss, it.next().unwrap(), it.next().unwrap(), it.next().unwrap())
+                    };
+                    dx.scale(w)?;
+                    dgf.scale(w)?;
+                    dwout.scale(w)?;
+                    accumulate(&mut dev, "grad.gf", dgf)?;
+                    accumulate(&mut dev, "grad.wout", dwout)?;
+                    dev.put(&dkey, dx);
+                    let _ = dev.take(&akey);
+                    loss
+                };
+                plock(&sh.losses).insert((pi, mb), (loss, tokens));
+            } else {
+                let dx = self.recv_handoff(ti)?;
+                sh.lock_dev(self.rank).put(&dkey, dx);
+            }
+            self.broadcast_group(ti, &stage.devices, &dkey)?;
+        } else {
+            let dx = self.recv_result(ti)?;
+            let mut dev = sh.lock_dev(self.rank);
+            if si == last {
+                let _ = dev.take(&akey);
+            }
+            dev.put(&dkey, dx);
+        }
+        Ok(())
+    }
+
+    /// [`SpecTaskKind::BwdGemm`]: the own backward GEMMs for one layer,
+    /// gradient accumulation, and the saved-input free.
+    fn bwd_gemm(&mut self, pi: usize, si: usize, mb: usize, l: u32) -> Result<()> {
+        let sh = self.sh;
+        let stage = &sh.pipelines[pi].stages[si];
+        let dkey = Engine::dkey(pi, mb);
+        let skey = Engine::skey(pi, mb, l);
+        let art = format!("block_bwd_tp{}", stage.tp());
+        let mut dev = sh.lock_dev(self.rank);
+        let outs = {
+            let mut inputs: Vec<&HostTensor> = Vec::with_capacity(10);
+            for p in BLOCK_PARAMS {
+                inputs.push(dev.get(&pkey(l, p))?);
+            }
+            inputs.push(dev.get(&skey)?);
+            inputs.push(dev.get(&dkey)?);
+            native::call(&sh.cfg, &art, &inputs)?
+        };
+        let mut it = outs.into_iter();
+        let dx_part = it.next().unwrap();
+        dev.put("dpart", dx_part);
+        for p in BLOCK_PARAMS {
+            accumulate(&mut dev, &gkey(l, p), it.next().unwrap())?;
+        }
+        let _ = dev.take(&skey);
+        Ok(())
+    }
+
+    /// [`SpecTaskKind::EmbedBwd`]: the root accumulates the embedding
+    /// gradient; every member frees its own incoming-gradient copy.
+    fn embed_bwd(&mut self, pi: usize, mb: usize) -> Result<()> {
+        let sh = self.sh;
+        let stage = &sh.pipelines[pi].stages[0];
+        let dkey = Engine::dkey(pi, mb);
+        let mut dev = sh.lock_dev(self.rank);
+        if self.rank == stage.devices[0] {
+            let batch = &sh.batches[pi][mb];
+            let tok =
+                HostTensor::i32(vec![batch.n_seqs, batch.seq_len], batch.tokens.clone())?;
+            let demb = {
+                let dx0 = dev.get(&dkey)?;
+                native::call(&sh.cfg, "embed_bwd", &[&tok, dx0])?
+                    .into_iter()
+                    .next()
+                    .unwrap()
+            };
+            accumulate(&mut dev, "grad.emb", demb)?;
+        }
+        let _ = dev.take(&dkey);
+        Ok(())
+    }
+
+    /// [`SpecTaskKind::OptimStep`]: AdamW on the own shards, walking the
+    /// layout's update list in its fixed order restricted to this rank —
+    /// per-device order identical to `apply_updates_local`.
+    fn optim_step(&mut self) -> Result<()> {
+        let sh = self.sh;
+        let step = sh.step + 1;
+        let mut dev = sh.lock_dev(self.rank);
+        for (d, param_key, grad_key) in &sh.layout.update_ops {
+            if *d != self.rank {
+                continue;
+            }
+            if !sh.zero1 {
+                sh.opt.update(&mut dev, param_key, grad_key, step)?;
+                continue;
+            }
+            match sh.layout.zero_part(*d, param_key) {
+                Some(Some(region)) => {
+                    sh.opt.update_region(&mut dev, param_key, grad_key, region, step)?
+                }
+                Some(None) => {
+                    let _ = dev.take(grad_key);
+                }
+                None => sh.opt.update(&mut dev, param_key, grad_key, step)?,
+            }
+        }
+        Ok(())
+    }
+
+    /// A global phase: position 0 is the leader and executes the whole
+    /// phase (its dependency edges cover every backward tail, so all
+    /// other ranks have drained their timelines and parked); everyone
+    /// else waits on the barrier.
+    fn global_phase(&mut self, ti: usize, kind: &SpecTaskKind) -> Result<()> {
+        let sh = self.sh;
+        if self.ri == 0 {
+            match kind {
+                SpecTaskKind::GradReduce => sh.grad_reduce()?,
+                SpecTaskKind::ZeroExchange => sh.zero_exchange()?,
+                _ => unreachable!("global_phase on a per-group task"),
+            }
+            sh.finish_global(ti);
+            Ok(())
+        } else {
+            sh.wait_done(ti)
+        }
+    }
+
+    /// Fire the hand-off/free post-actions attached to this rank's share
+    /// of a producer-side tail task (send accounting = `Mesh::send`).
+    fn post_actions(&mut self, ti: usize) -> Result<()> {
+        let sh = self.sh;
+        let Some(actions) = sh.post.get(&(self.rank, ti)) else {
+            return Ok(());
+        };
+        for a in actions {
+            match a {
+                PostAction::Send { handoff, key, to } => {
+                    let t = sh.lock_dev(self.rank).take(key)?;
+                    sh.wire.fetch_add(t.len() as u64, Ordering::Relaxed);
+                    sh.ops.fetch_add(1, Ordering::Relaxed);
+                    self.send_to(*to, Msg::Handoff { task: *handoff, t });
+                }
+                PostAction::Drop { key } => {
+                    let _ = sh.lock_dev(self.rank).take(key);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Derive the post-action table from the plan's hand-off edges: the
+/// producer root sends the boundary tensor to the consumer root after its
+/// share of the producer tail; the other producers free their dead copies
+/// (the event-driven executor's frees, relocated to the sending side).
+fn build_post(plan: &SpecializedPlan) -> Result<BTreeMap<(usize, usize), Vec<PostAction>>> {
+    let mut post: BTreeMap<(usize, usize), Vec<PostAction>> = BTreeMap::new();
+    for e in plan.handoff_edges()? {
+        let key = match plan.tasks[e.task].kind {
+            SpecTaskKind::FwdIn { pipe, mb, .. } => Engine::akey(pipe, mb),
+            SpecTaskKind::BwdIn { pipe, mb, .. } => Engine::dkey(pipe, mb),
+            ref k => {
+                return Err(Error::Engine(format!(
+                    "threaded: hand-off edge on non-boundary task {k:?}"
+                )))
+            }
+        };
+        post.entry((e.producers[0], e.producer_tail)).or_default().push(PostAction::Send {
+            handoff: e.task,
+            key: key.clone(),
+            to: e.consumer_root,
+        });
+        for &d in &e.producers[1..] {
+            post.entry((d, e.producer_tail))
+                .or_default()
+                .push(PostAction::Drop { key: key.clone() });
+        }
+    }
+    Ok(post)
+}
+
+impl Engine {
+    /// Execute a specialized step **concurrently**: one OS thread per
+    /// rank, comm tasks as typed channel messages, wall-clock elapsed time
+    /// as the makespan. Dispatch target of
+    /// [`Engine::run_specialized`](Engine::run_specialized) under
+    /// [`ExecMode::Threaded`](super::ExecMode); numerics and wire
+    /// accounting are bit-identical to the event-driven executor and the
+    /// reference interpreter (module docs lay out the contract).
+    pub(crate) fn run_specialized_threaded(
+        &mut self,
+        plan: &SpecializedPlan,
+        pipelines: &[EnginePipeline],
+        batches: &[Vec<MicroBatch>],
+        deliveries: &[(usize, f64)],
+    ) -> Result<SpecRunOutcome> {
+        if !self.runtime.is_native() {
+            return Err(Error::Engine(
+                "threaded executor requires the native backend (the PJRT client is \
+                 single-thread)"
+                    .into(),
+            ));
+        }
+        let post = build_post(plan)?;
+        let n = plan.tasks.len();
+        let nranks = plan.ranks.len();
+        let cfg = self.runtime.config;
+        let opt = self.opt;
+        let zero1 = self.zero1;
+        let step = self.step;
+        let jitter = self.exec_jitter;
+        // move every device store behind its own lock for the thread scope
+        let devs: Vec<Mutex<DeviceMem>> =
+            self.mesh.devices.iter_mut().map(|d| Mutex::new(std::mem::take(d))).collect();
+        let layout: &ShardLayout = &self.layout;
+        let shared = Shared {
+            plan,
+            pipelines,
+            batches,
+            layout,
+            devs: &devs,
+            post,
+            cfg,
+            opt,
+            zero1,
+            step,
+            jitter,
+            progress: Mutex::new(Progress {
+                done: vec![false; n],
+                remaining: plan.tasks.iter().map(|t| t.ranks.len()).collect(),
+                failed: false,
+            }),
+            cv: Condvar::new(),
+            losses: Mutex::new(BTreeMap::new()),
+            err: Mutex::new(None),
+            wire: AtomicU64::new(0),
+            ops: AtomicU64::new(0),
+        };
+
+        let mut txs: Vec<Sender<Msg>> = Vec::with_capacity(nranks);
+        let mut rxs: Vec<Receiver<Msg>> = Vec::with_capacity(nranks);
+        for _ in 0..nranks {
+            let (tx, rx) = channel();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(nranks);
+            for (ri, rx) in rxs.into_iter().enumerate() {
+                let rank = plan.ranks[ri].rank;
+                let txs = txs.clone();
+                let sh = &shared;
+                handles.push(scope.spawn(move || {
+                    let mut w = Worker { ri, rank, sh, txs, inbox: Inbox { rx, stash: vec![] } };
+                    if let Err(e) = w.run() {
+                        sh.fail(e);
+                    }
+                }));
+            }
+            drop(txs); // workers own the only senders: exit ⇒ disconnect
+            for h in handles {
+                if h.join().is_err() {
+                    shared.fail(Error::Engine("threaded: worker panicked".into()));
+                }
+            }
+        });
+        let makespan_s = t0.elapsed().as_secs_f64();
+
+        let wire = shared.wire.load(Ordering::Relaxed);
+        let ops = shared.ops.load(Ordering::Relaxed);
+        let losses = std::mem::take(&mut *plock(&shared.losses));
+        let err = plock(&shared.err).take();
+        drop(shared);
+        // always restore the device stores (and the accounting) before
+        // surfacing any error — the mesh must stay usable
+        for (d, m) in self.mesh.devices.iter_mut().zip(devs) {
+            *d = m.into_inner().unwrap_or_else(|p| p.into_inner());
+        }
+        self.mesh.wire_elems += wire;
+        self.mesh.ops += ops;
+        if let Some(e) = err {
+            return Err(e);
+        }
+
+        let mut tokens = 0u64;
+        for &(_, n_tok) in losses.values() {
+            tokens += n_tok;
+        }
+        // f64 loss accumulation in the interpreter's order (pipeline-
+        // major, head-retirement within each pipeline) — bit-identical
+        let mut weighted_loss = 0f64;
+        for (pi, order) in plan.head_order.iter().enumerate() {
+            let mut wp = 0f64;
+            for &mb in order {
+                if let Some(&(loss, n_tok)) = losses.get(&(pi, mb)) {
+                    wp += loss as f64 * n_tok as f64;
+                }
+            }
+            weighted_loss += wp;
+        }
+
+        // §6.2 measured interleave over *wall-clock* makespan: per-sender
+        // delivery lanes, exposure = overhang beyond the step
+        let mut lanes: BTreeMap<usize, f64> = BTreeMap::new();
+        for &(sender, secs) in deliveries {
+            *lanes.entry(sender).or_insert(0.0) += secs.max(0.0);
+        }
+        let delivery_lane_s = lanes.values().copied().fold(0.0, f64::max);
+        let exposed_switch_s = (delivery_lane_s - makespan_s).max(0.0);
+        debug_assert!({
+            // lane-wise exposure stays within the scalar overlap bound
+            let mut bound = SwitchOverlap::new();
+            for &(_, secs) in deliveries {
+                bound.on_switch(secs);
+            }
+            exposed_switch_s <= bound.on_step(makespan_s) + 1e-9
+        });
+        Ok(SpecRunOutcome {
+            weighted_loss,
+            tokens,
+            makespan_s,
+            exposed_switch_s,
+            delivery_lane_s,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{EngineStrategy, ExecMode, StepStats};
+    use crate::runtime::Runtime;
+    use crate::spec::schedule::ScheduleKind;
+    use crate::testutil::Rng;
+
+    fn engine(s: &EngineStrategy) -> Engine {
+        Engine::with_runtime(Runtime::native(native::tiny_config()), s.clone(), 11, 1e-3)
+            .unwrap()
+    }
+
+    fn batch(seed: u64) -> MicroBatch {
+        let cfg = native::tiny_config();
+        let mut rng = Rng::new(seed);
+        let n = cfg.batch * cfg.seq;
+        let mut tokens = Vec::with_capacity(n);
+        let mut targets = Vec::with_capacity(n);
+        for _ in 0..n {
+            tokens.push((rng.f64() * cfg.vocab as f64) as i32);
+            targets.push((rng.f64() * cfg.vocab as f64) as i32);
+        }
+        MicroBatch { tokens, targets, n_seqs: cfg.batch, seq_len: cfg.seq }
+    }
+
+    fn step(eng: &mut Engine, salt: u64) -> StepStats {
+        eng.train_step(&mut |pi, mb| batch(salt ^ ((pi as u64) << 8) ^ mb as u64)).unwrap()
+    }
+
+    fn assert_stats_match(a: &StepStats, b: &StepStats) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss bits diverge");
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.wire_elems, b.wire_elems, "wire accounting diverges");
+        assert_eq!(a.comm_ops, b.comm_ops, "comm-op accounting diverges");
+    }
+
+    #[test]
+    fn threaded_matches_reference_dp2tp2() {
+        let s = EngineStrategy::uniform("dp2tp2", 2, 2, 1, 8, 2);
+        let mut thr = engine(&s);
+        thr.set_exec_mode(ExecMode::Threaded);
+        let mut refr = engine(&s);
+        for k in 0..2u64 {
+            let a = step(&mut thr, 900 + k);
+            let b = refr
+                .train_step_reference(&mut |pi, mb| {
+                    batch((900 + k) ^ ((pi as u64) << 8) ^ mb as u64)
+                })
+                .unwrap();
+            assert_stats_match(&a, &b);
+        }
+    }
+
+    #[test]
+    fn threaded_matches_reference_pp2_1f1b() {
+        let s = EngineStrategy::uniform("pp2", 1, 1, 2, 8, 3)
+            .with_schedule(ScheduleKind::OneFOneB);
+        let mut thr = engine(&s);
+        thr.set_exec_mode(ExecMode::Threaded);
+        let mut refr = engine(&s);
+        for k in 0..2u64 {
+            let a = step(&mut thr, 40 + k);
+            let b = refr
+                .train_step_reference(&mut |pi, mb| {
+                    batch((40 + k) ^ ((pi as u64) << 8) ^ mb as u64)
+                })
+                .unwrap();
+            assert_stats_match(&a, &b);
+        }
+    }
+
+    #[test]
+    fn threaded_matches_event_driven_with_zero1_and_jitter() {
+        let s = EngineStrategy::uniform("dp2pp2", 2, 1, 2, 8, 2);
+        let mut thr = engine(&s);
+        thr.set_zero1(true).unwrap();
+        thr.set_exec_mode(ExecMode::Threaded);
+        thr.set_exec_jitter(Some(7));
+        let mut evd = engine(&s);
+        evd.set_zero1(true).unwrap();
+        for k in 0..2u64 {
+            let a = step(&mut thr, 77 + k);
+            let b = step(&mut evd, 77 + k);
+            assert_stats_match(&a, &b);
+        }
+    }
+
+    #[test]
+    fn splitmix_is_deterministic() {
+        assert_eq!(splitmix64(42), splitmix64(42));
+        assert_ne!(splitmix64(42), splitmix64(43));
+        assert_ne!(splitmix64(0), 0);
+    }
+}

@@ -1,0 +1,188 @@
+//! Machine-readable benchmark emission: the perf trajectory.
+//!
+//! Each bench harness builds a [`BenchReport`], appends one row per
+//! measurement (tagged `"wall"` for wall-clock timings or `"modeled"` for
+//! replayed simulator/cost-model estimates — the two must never be
+//! conflated), and writes `BENCH_<name>.json` next to `Cargo.toml`. Every
+//! report carries the git revision and the run configuration so
+//! `tools/bench_compare.py` can diff a fresh run against the committed
+//! checkpoint under `bench/baseline/` and fail CI on a >20% regression in
+//! the guarded rows.
+//!
+//! The writer is hand-rolled (no serde in the image): the schema is flat
+//! enough that escaping strings and formatting finite floats covers it.
+
+use std::fmt::Write as _;
+
+/// One measurement row: a named quantity, how it was obtained, and the
+/// mean/best seconds over the bench iterations.
+#[derive(Clone, Debug)]
+pub struct BenchRow {
+    /// Row name — must match the printed bench row so humans and the
+    /// compare script read the same trajectory.
+    pub name: String,
+    /// `"wall"` (measured wall-clock) or `"modeled"` (replayed estimate).
+    pub kind: String,
+    /// Mean seconds across iterations.
+    pub mean_s: f64,
+    /// Best (minimum) seconds across iterations.
+    pub best_s: f64,
+}
+
+/// A bench run's machine-readable output: rows plus provenance tags.
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    /// Short bench name; the file is written as `BENCH_<bench>.json`.
+    pub bench: String,
+    /// Git revision the run was built from (`"unknown"` outside a repo).
+    pub rev: String,
+    /// Smoke runs (`--test`) time a single iteration — the compare
+    /// script skips ratio checks on them.
+    pub smoke: bool,
+    /// Free-form configuration tags (backend, model size, schedules…).
+    pub config: Vec<(String, String)>,
+    /// Measurement rows in emission order.
+    pub rows: Vec<BenchRow>,
+}
+
+impl BenchReport {
+    /// New report for `bench`, stamping the current git revision.
+    pub fn new(bench: &str, smoke: bool) -> BenchReport {
+        BenchReport {
+            bench: bench.to_string(),
+            rev: git_rev(),
+            smoke,
+            config: vec![],
+            rows: vec![],
+        }
+    }
+
+    /// Attach a configuration tag.
+    pub fn tag(&mut self, key: &str, value: &str) -> &mut Self {
+        self.config.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    /// Record a measurement row.
+    pub fn row(&mut self, name: &str, kind: &str, mean_s: f64, best_s: f64) -> &mut Self {
+        self.rows.push(BenchRow {
+            name: name.to_string(),
+            kind: kind.to_string(),
+            mean_s,
+            best_s,
+        });
+        self
+    }
+
+    /// Render the report as a JSON document.
+    pub fn json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        let _ = writeln!(out, "  \"bench\": {},", quote(&self.bench));
+        let _ = writeln!(out, "  \"rev\": {},", quote(&self.rev));
+        let _ = writeln!(out, "  \"smoke\": {},", self.smoke);
+        out.push_str("  \"config\": {");
+        for (i, (k, v)) in self.config.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            let _ = write!(out, "{}: {}", quote(k), quote(v));
+        }
+        out.push_str("},\n  \"rows\": [\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            let _ = write!(
+                out,
+                "    {{\"name\": {}, \"kind\": {}, \"mean_s\": {}, \"best_s\": {}}}",
+                quote(&r.name),
+                quote(&r.kind),
+                num(r.mean_s),
+                num(r.best_s)
+            );
+            out.push_str(if i + 1 < self.rows.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write `BENCH_<bench>.json` next to `Cargo.toml` (falling back to
+    /// the working directory) and return the path written.
+    pub fn write(&self) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::env::var_os("CARGO_MANIFEST_DIR")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|| std::path::PathBuf::from("."));
+        let path = dir.join(format!("BENCH_{}.json", self.bench));
+        std::fs::write(&path, self.json())?;
+        Ok(path)
+    }
+}
+
+/// JSON string escape (quotes, backslashes, control chars).
+fn quote(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Finite JSON number (JSON has no NaN/Inf — those become `null`).
+fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:e}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// `git rev-parse --short HEAD`, or `"unknown"` when git is unavailable.
+fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_renders_valid_flat_json() {
+        let mut r = BenchReport::new("demo", true);
+        r.tag("backend", "native").tag("model", "tiny-48");
+        r.row("step \"a\"", "wall", 1.5e-3, 1.25e-3);
+        r.row("replay", "modeled", f64::NAN, 2.0);
+        let j = r.json();
+        assert!(j.contains("\"bench\": \"demo\""));
+        assert!(j.contains("\"smoke\": true"));
+        assert!(j.contains("\"backend\": \"native\", \"model\": \"tiny-48\""));
+        assert!(j.contains("\"name\": \"step \\\"a\\\"\""));
+        assert!(j.contains("\"kind\": \"modeled\""));
+        assert!(j.contains("\"mean_s\": null"));
+        assert!(!j.contains("NaN"));
+        // balanced braces/brackets ⇒ parseable by the compare script
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn rev_is_nonempty() {
+        assert!(!git_rev().is_empty());
+    }
+}

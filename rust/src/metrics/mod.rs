@@ -4,6 +4,8 @@
 use std::fmt::Write as _;
 use std::time::Instant;
 
+pub mod benchjson;
+
 /// A simple column-aligned table that renders to markdown or CSV.
 #[derive(Clone, Debug, Default)]
 pub struct Table {

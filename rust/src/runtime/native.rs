@@ -128,21 +128,23 @@ pub fn call(cfg: &ManifestConfig, name: &str, inputs: &[&HostTensor]) -> Result<
 //
 // The three GEMM variants below are the native backend's hot path (the
 // tiny-48 head alone is a 32×48×512 GEMM ×3 per micro-batch). They are
-// blocked over the reduction dimension for cache reuse and use small
-// four-wide chunked kernels so test-profile builds are not dominated
-// by per-element bounds checks — the
+// blocked over the reduction dimension for cache reuse and dispatch to a
+// runtime-detected AVX2 microkernel tier, with portable four-wide chunked
+// kernels as the fallback (DESIGN.md §8 lays out the tier ladder) — the
 // `hotpath_micro` bench rows guard the tiny-48 debug-mode step budget.
-// Accumulation stays k-ordered in `matmul`/`matmul_tn`, so results are
-// bit-identical to the naive loops; `matmul_nt` uses four accumulators
-// (f32 reorder within each dot product).
+// Accumulation stays k-ordered in `matmul`/`matmul_tn` and the AVX2 tier
+// multiplies then adds (never FMA), so results are bit-identical to the
+// naive loops on every tier; `matmul_nt` uses independent lane
+// accumulators (f32 reorder within each dot product, tolerance-tested).
 
 /// Reduction-dimension cache block.
 const KBLOCK: usize = 64;
 
-/// `dst += s · src` over equal-length rows. Four-wide `chunks_exact`
-/// lets the compiler drop per-element bounds checks without `unsafe`.
+/// `dst += s · src` over equal-length rows: the portable tier. Four-wide
+/// `chunks_exact` lets the compiler drop per-element bounds checks
+/// without `unsafe`.
 #[inline(always)]
-fn axpy(dst: &mut [f32], src: &[f32], s: f32) {
+fn axpy_scalar(dst: &mut [f32], src: &[f32], s: f32) {
     assert_eq!(dst.len(), src.len());
     let mut d4 = dst.chunks_exact_mut(4);
     let mut a4 = src.chunks_exact(4);
@@ -157,9 +159,9 @@ fn axpy(dst: &mut [f32], src: &[f32], s: f32) {
     }
 }
 
-/// Four-way unrolled dot product.
+/// Four-way unrolled dot product: the portable tier.
 #[inline(always)]
-fn dot(a: &[f32], b: &[f32]) -> f32 {
+fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
     assert_eq!(a.len(), b.len());
     let mut a4 = a.chunks_exact(4);
     let mut b4 = b.chunks_exact(4);
@@ -175,6 +177,99 @@ fn dot(a: &[f32], b: &[f32]) -> f32 {
         acc += x * y;
     }
     acc
+}
+
+/// AVX2 microkernel tier, dispatched at runtime (`std::arch` f32x8).
+#[cfg(target_arch = "x86_64")]
+mod simd {
+    use std::arch::x86_64::{
+        _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_setzero_ps,
+        _mm256_storeu_ps,
+    };
+
+    /// True when the running CPU has AVX2 (std caches the probe).
+    #[inline(always)]
+    pub fn available() -> bool {
+        is_x86_feature_detected!("avx2")
+    }
+
+    /// `dst += s · src`, eight lanes per step. Multiplies then adds —
+    /// never FMA — so every element sees exactly the scalar tier's IEEE
+    /// operations and the blocked GEMMs stay bit-identical to the naive
+    /// reference loops.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 (check [`available`] first).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(dst: &mut [f32], src: &[f32], s: f32) {
+        assert_eq!(dst.len(), src.len());
+        let n = dst.len();
+        let sv = _mm256_set1_ps(s);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let d = _mm256_loadu_ps(dst.as_ptr().add(i));
+            let a = _mm256_loadu_ps(src.as_ptr().add(i));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_add_ps(d, _mm256_mul_ps(sv, a)));
+            i += 8;
+        }
+        while i < n {
+            *dst.get_unchecked_mut(i) += s * *src.get_unchecked(i);
+            i += 1;
+        }
+    }
+
+    /// Eight-lane dot product (independent lane sums, reduced pairwise —
+    /// an f32 reorder relative to the scalar tier, which only the
+    /// tolerance-tested `matmul_nt` consumers observe).
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 (check [`available`] first).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let x = _mm256_loadu_ps(a.as_ptr().add(i));
+            let y = _mm256_loadu_ps(b.as_ptr().add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(x, y));
+            i += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut sum = ((lanes[0] + lanes[4]) + (lanes[1] + lanes[5]))
+            + ((lanes[2] + lanes[6]) + (lanes[3] + lanes[7]));
+        while i < n {
+            sum += *a.get_unchecked(i) * *b.get_unchecked(i);
+            i += 1;
+        }
+        sum
+    }
+}
+
+/// `dst += s · src`, dispatched to the AVX2 tier when the CPU has it.
+/// Bit-identical across tiers (the AVX2 kernel never fuses multiply-add).
+#[inline(always)]
+fn axpy(dst: &mut [f32], src: &[f32], s: f32) {
+    #[cfg(target_arch = "x86_64")]
+    if simd::available() {
+        // SAFETY: `available()` just confirmed AVX2 on this CPU.
+        unsafe { simd::axpy(dst, src, s) };
+        return;
+    }
+    axpy_scalar(dst, src, s)
+}
+
+/// Dot product, dispatched to the AVX2 tier when the CPU has it.
+#[inline(always)]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if simd::available() {
+        // SAFETY: `available()` just confirmed AVX2 on this CPU.
+        return unsafe { simd::dot(a, b) };
+    }
+    dot_scalar(a, b)
 }
 
 /// `out[m,n] = a[m,k] @ b[k,n]` (row-major, k-ordered f32 accumulation,
@@ -221,6 +316,54 @@ pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32>
         let row = &mut out[i * k..(i + 1) * k];
         for (kk, r) in row.iter_mut().enumerate() {
             *r = dot(arow, &b[kk * n..(kk + 1) * n]);
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------------- bf16 tier
+//
+// bf16-storage / f32-accumulate: operands live as bf16 (half the memory
+// traffic of f32), every arithmetic op runs in f32. Off by default — the
+// engine's differential-numerics oracles are all-f32 — but benched by
+// `hotpath_micro` and property-tested to be *exactly* the f32 kernels on
+// dequantized inputs (same k-ordered loop, same zero-skip).
+
+/// Round-to-nearest-even f32 → bf16 (finite inputs; bf16 is the top half
+/// of an f32, so this is a mantissa-rounding truncation).
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    (bits.wrapping_add(0x7fff + ((bits >> 16) & 1)) >> 16) as u16
+}
+
+/// bf16 → f32 (exact: widen the stored top half).
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// `out[m,n] = a[m,k] @ b[k,n]` over **bf16-stored** operands with f32
+/// accumulation. The k-blocked loop dequantizes each `b` block once and
+/// then runs exactly [`matmul`]'s k-ordered accumulation (zero-skip
+/// included), so the result is bit-identical to dequantizing both
+/// operands up front and calling [`matmul`].
+pub fn matmul_bf16(a: &[u16], b: &[u16], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    let mut bblk = vec![0.0f32; KBLOCK * n];
+    for k0 in (0..k).step_by(KBLOCK) {
+        let k1 = (k0 + KBLOCK).min(k);
+        for (d, &sb) in bblk.iter_mut().zip(&b[k0 * n..k1 * n]) {
+            *d = bf16_to_f32(sb);
+        }
+        for i in 0..m {
+            let row = &mut out[i * n..(i + 1) * n];
+            let arow = &a[i * k..(i + 1) * k];
+            for (kk, &ab) in arow.iter().enumerate().take(k1).skip(k0) {
+                let av = bf16_to_f32(ab);
+                if av == 0.0 {
+                    continue;
+                }
+                axpy(row, &bblk[(kk - k0) * n..(kk - k0 + 1) * n], av);
+            }
         }
     }
     out
@@ -284,11 +427,137 @@ fn dgelu(x: f32) -> f32 {
     0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * C * (1.0 + 3.0 * A * x * x)
 }
 
-/// Causal multi-head attention forward over flattened `[n, nh*hd]` q/k/v
-/// (rows grouped per batch: `n = b·s`). Returns the attention output and
-/// the row-softmax probabilities (needed by the backward).
+/// Key/value tile width of the flash-attention streaming softmax.
+const ATT_TILE: usize = 64;
+
+/// Flash-attention-style causal multi-head attention forward over
+/// flattened `[n, nh*hd]` q/k/v (rows grouped per batch: `n = b·s`),
+/// following `python/compile/kernels/flash_attention.py`: per query row,
+/// stream the causal keys `j ≤ i` in [`ATT_TILE`]-wide tiles through an
+/// online softmax — running max `m`, running denominator `l`, and an
+/// output accumulator rescaled by `exp(m − m_new)` per tile — so the
+/// `[s, s]` score matrix is **never materialized** (O(`ATT_TILE`) scratch
+/// instead of O(s²)). Returns the attention output and each row's
+/// log-sum-exp `m + ln l`, from which the backward recomputes any
+/// probability as `exp(qᵀk·scale − lse)`.
 #[allow(clippy::too_many_arguments)]
-fn attention(
+pub fn attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    b: usize,
+    s: usize,
+    nh: usize,
+    hd: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let w = nh * hd; // row width
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = vec![0.0f32; b * s * w];
+    let mut lse = vec![0.0f32; b * nh * s];
+    let mut acc = vec![0.0f32; hd];
+    for bi in 0..b {
+        for hi in 0..nh {
+            for i in 0..s {
+                let qrow = &q[(bi * s + i) * w + hi * hd..(bi * s + i) * w + (hi + 1) * hd];
+                let mut m = f32::NEG_INFINITY;
+                let mut l = 0.0f32;
+                acc.fill(0.0);
+                let mut j0 = 0usize;
+                while j0 <= i {
+                    let j1 = (j0 + ATT_TILE).min(i + 1);
+                    let mut logits = [0.0f32; ATT_TILE];
+                    let mut tile_max = f32::NEG_INFINITY;
+                    for (t, logit) in logits.iter_mut().take(j1 - j0).enumerate() {
+                        let j = j0 + t;
+                        let krow =
+                            &k[(bi * s + j) * w + hi * hd..(bi * s + j) * w + (hi + 1) * hd];
+                        *logit = dot(qrow, krow) * scale;
+                        tile_max = tile_max.max(*logit);
+                    }
+                    // rescale the running state to the new max, then fold
+                    // the tile in (exp(-inf) = 0 covers the first tile)
+                    let m_new = m.max(tile_max);
+                    let alpha = (m - m_new).exp();
+                    l *= alpha;
+                    for a in acc.iter_mut() {
+                        *a *= alpha;
+                    }
+                    for (t, &logit) in logits.iter().take(j1 - j0).enumerate() {
+                        let j = j0 + t;
+                        let p = (logit - m_new).exp();
+                        l += p;
+                        let vrow =
+                            &v[(bi * s + j) * w + hi * hd..(bi * s + j) * w + (hi + 1) * hd];
+                        axpy(&mut acc, vrow, p);
+                    }
+                    m = m_new;
+                    j0 = j1;
+                }
+                let orow =
+                    &mut out[(bi * s + i) * w + hi * hd..(bi * s + i) * w + (hi + 1) * hd];
+                for (o, &a) in orow.iter_mut().zip(acc.iter()) {
+                    *o = a / l;
+                }
+                lse[(bi * nh + hi) * s + i] = m + l.ln();
+            }
+        }
+    }
+    (out, lse)
+}
+
+/// Backward of [`attention`], flash-style: given the forward output `o`
+/// and per-row log-sum-exp `lse`, recompute each probability tile as
+/// `exp(qᵀk·scale − lse)` — no stored score matrix — and use
+/// `D_i = do_i · o_i` (= Σ_j p·dp) for the softmax pullback. Returns
+/// `(dq, dk, dv)`.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_bwd(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    lse: &[f32],
+    o: &[f32],
+    do_: &[f32],
+    b: usize,
+    s: usize,
+    nh: usize,
+    hd: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let w = nh * hd;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut dq = vec![0.0f32; b * s * w];
+    let mut dk = vec![0.0f32; b * s * w];
+    let mut dv = vec![0.0f32; b * s * w];
+    for bi in 0..b {
+        for hi in 0..nh {
+            for i in 0..s {
+                let base_i = (bi * s + i) * w + hi * hd;
+                let qrow = &q[base_i..base_i + hd];
+                let dorow = &do_[base_i..base_i + hd];
+                let di = dot(dorow, &o[base_i..base_i + hd]);
+                let lse_i = lse[(bi * nh + hi) * s + i];
+                for j in 0..=i {
+                    let base_j = (bi * s + j) * w + hi * hd;
+                    let krow = &k[base_j..base_j + hd];
+                    let p = (dot(qrow, krow) * scale - lse_i).exp();
+                    let dp = dot(dorow, &v[base_j..base_j + hd]);
+                    let ds = p * (dp - di) * scale;
+                    axpy(&mut dq[base_i..base_i + hd], krow, ds);
+                    axpy(&mut dk[base_j..base_j + hd], qrow, ds);
+                    axpy(&mut dv[base_j..base_j + hd], dorow, p);
+                }
+            }
+        }
+    }
+    (dq, dk, dv)
+}
+
+/// Scalar reference attention forward (materializes the full `[s, s]`
+/// probability matrix) — kept as the property-test oracle for the flash
+/// kernel. Returns the attention output and the row-softmax
+/// probabilities (needed by [`attention_bwd_ref`]).
+#[allow(clippy::too_many_arguments)]
+pub fn attention_ref(
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -339,9 +608,11 @@ fn attention(
     (out, probs)
 }
 
-/// Backward of [`attention`]: given upstream `do_`, returns `(dq, dk, dv)`.
+/// Backward of [`attention_ref`] (consumes the stored probabilities):
+/// given upstream `do_`, returns `(dq, dk, dv)`. The property-test
+/// oracle for the flash [`attention_bwd`].
 #[allow(clippy::too_many_arguments)]
-fn attention_bwd(
+pub fn attention_bwd_ref(
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -444,14 +715,16 @@ fn embed_bwd(cfg: &ManifestConfig, tok: &HostTensor, dx: &HostTensor) -> Result<
     HostTensor::f32(vec![v, h], demb)
 }
 
-/// Recomputed forward intermediates shared by block forward and backward.
+/// Recomputed forward intermediates shared by block forward and backward
+/// (`lse` replaces the old stored probability matrix: the flash backward
+/// recomputes probabilities tile by tile from it).
 struct BlockFwd {
     xn1: Vec<f32>,
     q: Vec<f32>,
     k: Vec<f32>,
     v: Vec<f32>,
     att: Vec<f32>,
-    probs: Vec<f32>,
+    lse: Vec<f32>,
     xn2: Vec<f32>,
     a: Vec<f32>,
     hh: Vec<f32>,
@@ -483,12 +756,12 @@ fn block_forward_parts(
     let q = matmul(&xn1, wq, n, h, hl);
     let k = matmul(&xn1, wk, n, h, hl);
     let v = matmul(&xn1, wv, n, h, hl);
-    let (att, probs) = attention(&q, &k, &v, b, s, nh, hd);
+    let (att, lse) = attention(&q, &k, &v, b, s, nh, hd);
 
     let xn2 = rmsnorm(x, g2, n, h);
     let a = matmul(&xn2, w1, n, h, fl);
     let hh: Vec<f32> = a.iter().map(|&z| gelu(z)).collect();
-    Ok(BlockFwd { xn1, q, k, v, att, probs, xn2, a, hh })
+    Ok(BlockFwd { xn1, q, k, v, att, lse, xn2, a, hh })
 }
 
 fn block_fwd(cfg: &ManifestConfig, tp: usize, inputs: &[&HostTensor]) -> Result<HostTensor> {
@@ -539,8 +812,9 @@ fn block_bwd(cfg: &ManifestConfig, tp: usize, inputs: &[&HostTensor]) -> Result<
     // ---- attention branch
     let dwo = matmul_tn(&parts.att, dy, n, hl, h);
     let datt = matmul_nt(dy, wo, n, h, hl);
-    let (dq, dk, dv) =
-        attention_bwd(&parts.q, &parts.k, &parts.v, &parts.probs, &datt, b, s, nh, hd);
+    let (dq, dk, dv) = attention_bwd(
+        &parts.q, &parts.k, &parts.v, &parts.lse, &parts.att, &datt, b, s, nh, hd,
+    );
     let dwq = matmul_tn(&parts.xn1, &dq, n, h, hl);
     let dwk = matmul_tn(&parts.xn1, &dk, n, h, hl);
     let dwv = matmul_tn(&parts.xn1, &dv, n, h, hl);
@@ -734,10 +1008,15 @@ mod tests {
         let k = randvec(&mut rng, b * s * w, 0.5);
         let v = randvec(&mut rng, b * s * w, 0.5);
         let dout = randvec(&mut rng, b * s * w, 1.0);
-        let (_, probs) = attention(&q, &k, &v, b, s, nh, hd);
-        let (dq, dk, dv) = attention_bwd(&q, &k, &v, &probs, &dout, b, s, nh, hd);
+        let (_, probs) = attention_ref(&q, &k, &v, b, s, nh, hd);
+        let (dq, dk, dv) = attention_bwd_ref(&q, &k, &v, &probs, &dout, b, s, nh, hd);
         let obj = |qq: &[f32], kk: &[f32], vv: &[f32]| -> f32 {
-            attention(qq, kk, vv, b, s, nh, hd).0.iter().zip(dout.iter()).map(|(a, d)| a * d).sum()
+            attention_ref(qq, kk, vv, b, s, nh, hd)
+                .0
+                .iter()
+                .zip(dout.iter())
+                .map(|(a, d)| a * d)
+                .sum()
         };
         for i in [0usize, 7, 23] {
             let mut fq = |z: &[f32]| obj(z, &k, &v);
@@ -750,6 +1029,86 @@ mod tests {
             let num = numgrad(&mut fv, &v, i);
             assert!((dv[i] - num).abs() < 3e-2, "dv[{i}] {} vs {num}", dv[i]);
         }
+    }
+
+    #[test]
+    fn flash_attention_matches_reference_on_ragged_shapes() {
+        // the flash kernel vs the full-matrix oracle across shapes that
+        // exercise single-tile, multi-tile (s > ATT_TILE), and ragged
+        // [n_seqs, seq_len] geometries
+        for (case, &(b, s, nh, hd)) in
+            [(1usize, 80usize, 2usize, 4usize), (3, 5, 2, 4), (1, 33, 2, 4), (2, 7, 4, 3)]
+                .iter()
+                .enumerate()
+        {
+            let mut rng = Rng::new(31 + case as u64);
+            let w = nh * hd;
+            let q = randvec(&mut rng, b * s * w, 0.5);
+            let k = randvec(&mut rng, b * s * w, 0.5);
+            let v = randvec(&mut rng, b * s * w, 0.5);
+            let dout = randvec(&mut rng, b * s * w, 1.0);
+            let (out_ref, probs) = attention_ref(&q, &k, &v, b, s, nh, hd);
+            let (out, lse) = attention(&q, &k, &v, b, s, nh, hd);
+            crate::testutil::assert_allclose(
+                &out,
+                &out_ref,
+                1e-5,
+                1e-5,
+                &format!("flash fwd case {case}"),
+            );
+            assert!(lse.iter().all(|l| l.is_finite()), "case {case}: lse finite");
+            let (dq_r, dk_r, dv_r) =
+                attention_bwd_ref(&q, &k, &v, &probs, &dout, b, s, nh, hd);
+            let (dq, dk, dv) = attention_bwd(&q, &k, &v, &lse, &out, &dout, b, s, nh, hd);
+            crate::testutil::assert_allclose(&dq, &dq_r, 1e-4, 1e-4, "flash dq");
+            crate::testutil::assert_allclose(&dk, &dk_r, 1e-4, 1e-4, "flash dk");
+            crate::testutil::assert_allclose(&dv, &dv_r, 1e-4, 1e-4, "flash dv");
+        }
+    }
+
+    #[test]
+    fn bf16_gemm_is_exact_vs_dequantized_matmul() {
+        let mut rng = Rng::new(77);
+        let (m, k, n) = (5, 131, 9); // awkward sizes: tails + k-blocks
+        let a16: Vec<u16> =
+            randvec(&mut rng, m * k, 1.0).iter().map(|&x| f32_to_bf16(x)).collect();
+        let b16: Vec<u16> =
+            randvec(&mut rng, k * n, 1.0).iter().map(|&x| f32_to_bf16(x)).collect();
+        let a32: Vec<f32> = a16.iter().map(|&x| bf16_to_f32(x)).collect();
+        let b32: Vec<f32> = b16.iter().map(|&x| bf16_to_f32(x)).collect();
+        // same k-ordered accumulation + zero-skip ⇒ bit-identical
+        assert_eq!(matmul_bf16(&a16, &b16, m, k, n), matmul(&a32, &b32, m, k, n));
+    }
+
+    #[test]
+    fn bf16_conversion_rounds_to_nearest_even() {
+        assert_eq!(f32_to_bf16(1.0), 0x3f80);
+        assert_eq!(bf16_to_f32(0x3f80), 1.0);
+        // halfway, even low bit: rounds down
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3f80_8000)), 0x3f80);
+        // halfway, odd low bit: rounds up to even
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3f81_8000)), 0x3f82);
+        // round trip stays within the 8-bit-mantissa relative error
+        let mut rng = Rng::new(13);
+        for x in randvec(&mut rng, 64, 10.0) {
+            let r = bf16_to_f32(f32_to_bf16(x));
+            assert!((r - x).abs() <= x.abs() / 128.0, "{x} → {r}");
+        }
+    }
+
+    #[test]
+    fn simd_axpy_dispatch_is_bit_identical_to_scalar() {
+        let mut rng = Rng::new(21);
+        let src = randvec(&mut rng, 37, 1.0); // odd length: SIMD tail path
+        let base = randvec(&mut rng, 37, 1.0);
+        let mut got = base.clone();
+        let mut want = base;
+        axpy(&mut got, &src, 0.37);
+        axpy_scalar(&mut want, &src, 0.37);
+        assert_eq!(got, want); // axpy is elementwise ⇒ exact under any dispatch
+        // dot reassociates under SIMD: tolerance, not bits
+        let (d, ds) = (dot(&src, &got), dot_scalar(&src, &got));
+        assert!((d - ds).abs() <= 1e-5 * ds.abs().max(1.0), "{d} vs {ds}");
     }
 
     #[test]

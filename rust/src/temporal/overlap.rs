@@ -30,6 +30,12 @@
 //! `makespan + measured exposure` into the amortized per-step time, so a
 //! switch's cost is amortized over the following bucket run-length
 //! exactly as Fig 15's Hetu-A/B cells assume.
+//!
+//! The concurrent OS-thread executor ([`crate::engine::thread`]) reports
+//! the same quantity against its *wall-clock* makespan: delivery lanes
+//! are folded per sender and the exposed remainder is
+//! `max(0, slowest_lane − wall_makespan)`, which respects this scalar
+//! bound too (checked by a `debug_assert!` on its return path).
 
 /// Running overlap state across a step stream.
 #[derive(Clone, Copy, Debug, Default)]

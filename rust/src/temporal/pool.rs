@@ -259,6 +259,23 @@ impl StrategyPool {
     ) -> Result<Engine> {
         Engine::with_runtime(runtime, self.entries[i].strategy.clone(), seed, lr)
     }
+
+    /// Spawn an engine on entry `i` running the concurrent OS-thread
+    /// executor ([`crate::engine::ExecMode::Threaded`]). Hot switches and
+    /// cached plans work unchanged — the executor choice only affects how
+    /// a step's `RankPlan`s are driven, never what they compute (losses
+    /// stay bit-identical, see [`crate::engine::thread`]).
+    pub fn spawn_engine_threaded(
+        &self,
+        runtime: crate::runtime::Runtime,
+        i: usize,
+        seed: u64,
+        lr: f32,
+    ) -> Result<Engine> {
+        let mut eng = self.spawn_engine(runtime, i, seed, lr)?;
+        eng.set_exec_mode(crate::engine::ExecMode::Threaded);
+        Ok(eng)
+    }
 }
 
 #[cfg(test)]
@@ -437,6 +454,31 @@ mod tests {
         let again = pool.plan_for(0, 1, false, false, &UniformBandwidth).unwrap();
         assert!(Arc::ptr_eq(&again, &healthy), "cache untouched for post-repair switches");
         assert!(eng.mesh.devices[1].keys().is_empty(), "dead rank evicted");
+    }
+
+    #[test]
+    fn threaded_engine_survives_hot_switch_cycle_bit_identically() {
+        // the executor choice is orthogonal to the pool: a threaded
+        // engine hot-switches through cached plans and lands on the same
+        // losses, wire counters, and token counts as its event-driven twin
+        let cfg = native::tiny_config();
+        let rt = crate::runtime::Runtime::native;
+        let mut pool = tiny_pool();
+        let mut ev = pool.spawn_engine(rt(cfg), 0, 42, 1e-3).unwrap();
+        let mut th = pool.spawn_engine_threaded(rt(cfg), 0, 42, 1e-3).unwrap();
+        let (b, s) = (cfg.batch, cfg.seq);
+        let mut step = |eng: &mut Engine, seed: u64| {
+            let mut corpus = crate::coordinator::SyntheticCorpus::new(seed, cfg.vocab);
+            eng.train_step(&mut |_p, _m| corpus.microbatch(b, s)).unwrap()
+        };
+        for (salt, entry) in [(3u64, 1usize), (4, 0), (5, 1)] {
+            let a = step(&mut ev, salt);
+            let bst = step(&mut th, salt);
+            assert_eq!(a.loss.to_bits(), bst.loss.to_bits(), "salt {salt}");
+            assert_eq!(a.tokens, bst.tokens);
+            pool.switch_engine(&mut ev, entry).unwrap();
+            pool.switch_engine(&mut th, entry).unwrap();
+        }
     }
 
     #[test]

@@ -1,0 +1,112 @@
+#!/usr/bin/env python3
+"""Compare emitted BENCH_*.json against the committed baseline checkpoint.
+
+The bench harnesses (`cargo bench --bench hotpath_micro`, `temporal_cadence`,
+`fig15_mixed_length`) write machine-readable reports next to Cargo.toml.
+This script diffs them against `bench/baseline/BENCH_*.json` and fails on a
+>20% regression in the guarded hot-path rows (specialize cost, cached
+hot-switch, ragged step time).
+
+Two escape hatches keep the gate honest rather than noisy:
+
+* a baseline tagged ``"seed": true`` is a fresh checkpoint with no real
+  numbers yet — structural checks only (the guarded rows must exist);
+* an emitted report tagged ``"smoke": true`` timed single iterations
+  (the CI ``--test`` mode) — single-sample wall times on shared runners
+  are noise, so ratio checks are skipped but structure is still enforced.
+
+To re-seed after an intentional perf change: copy the emitted files over
+bench/baseline/ (dropping the ``smoke`` flag, adding real numbers from a
+full local run) and commit them.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+BENCHES = ["hotpath", "temporal", "fig15"]
+TOLERANCE = 1.20  # fail when emitted mean exceeds baseline mean by >20%
+
+# the perf-trajectory rows the gate guards (all in BENCH_hotpath.json)
+GUARDED = {
+    "hotpath": [
+        "specialize lowered-C2 -> per-rank plans",
+        "engine hot-switch A<->B (cached, batched)",
+        "engine train_step dp2 ragged 12x[2,2]",
+    ],
+    "temporal": [],
+    "fig15": [],
+}
+
+
+def load(path: Path):
+    if not path.exists():
+        return None
+    with path.open() as f:
+        return json.load(f)
+
+
+def rows_by_name(report):
+    return {r["name"]: r for r in report.get("rows", [])}
+
+
+def main() -> int:
+    failures = []
+    for bench in BENCHES:
+        emitted_path = ROOT / f"BENCH_{bench}.json"
+        baseline_path = ROOT / "bench" / "baseline" / f"BENCH_{bench}.json"
+        emitted = load(emitted_path)
+        baseline = load(baseline_path)
+        if emitted is None:
+            failures.append(f"{emitted_path} missing — run the bench harnesses first")
+            continue
+        if baseline is None:
+            failures.append(f"{baseline_path} missing — commit a baseline checkpoint")
+            continue
+
+        rows = rows_by_name(emitted)
+        # structure: every guarded row must be present in the fresh run
+        for name in GUARDED[bench]:
+            if name not in rows:
+                failures.append(f"{bench}: guarded row {name!r} missing from emitted report")
+
+        if baseline.get("seed"):
+            print(f"{bench}: baseline is a seed checkpoint (rev {baseline.get('rev')}) — "
+                  "structural check only")
+            continue
+        if emitted.get("smoke"):
+            print(f"{bench}: emitted report is a --test smoke run — "
+                  "ratio checks skipped (single-iteration timings)")
+            continue
+
+        base_rows = rows_by_name(baseline)
+        for name in GUARDED[bench]:
+            got = rows.get(name)
+            want = base_rows.get(name)
+            if got is None or want is None:
+                continue  # missing-emitted already reported; missing-baseline → not comparable
+            g, w = got.get("mean_s"), want.get("mean_s")
+            if not isinstance(g, (int, float)) or not isinstance(w, (int, float)) or w <= 0:
+                continue
+            ratio = g / w
+            verdict = "ok" if ratio <= TOLERANCE else "REGRESSION"
+            print(f"{bench}: {name!r}: {w * 1e3:.3f}ms -> {g * 1e3:.3f}ms "
+                  f"({ratio:.2f}x) [{verdict}]")
+            if ratio > TOLERANCE:
+                failures.append(
+                    f"{bench}: {name!r} regressed {ratio:.2f}x "
+                    f"(baseline {w * 1e3:.3f}ms, emitted {g * 1e3:.3f}ms)"
+                )
+
+    if failures:
+        print("\nbench-compare FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("bench-compare: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
