@@ -1,0 +1,1133 @@
+//! MPMD compilation of specialized plans (DESIGN.md §9, ROADMAP item 3).
+//!
+//! [`specialize`](super::specialize) lowers a strategy into per-rank
+//! [`RankPlan`](super::specialize::RankPlan) timelines, but both executors
+//! still *interpret* them: every step re-resolves dependencies, formats
+//! tensor keys, and re-derives channel endpoints per task. This pass runs
+//! once per `(strategy, layout, schedule, zero1, micro-batch shape class)`
+//! and freezes all of that into a [`CompiledProgram`]:
+//!
+//! * a **flat instruction tape** ([`CompiledOp`]) in the plan's task order
+//!   — a topological linear extension of the dependency DAG, so replaying
+//!   it sequentially respects every rank's program order and therefore
+//!   every per-device f32 accumulation order (losses stay bit-identical
+//!   to the event-driven executor and the global interpreter);
+//! * **fused compute segments** ([`Seg`]): consecutive tape ops that run
+//!   on the same device set with no interleaved communication collapse
+//!   into one dispatch unit, so the replay loop touches one ready check
+//!   per segment instead of one per task;
+//! * a **static comm schedule**: every hand-off's sender/receiver
+//!   endpoints, every collective's group (in plan-group reduction order),
+//!   and every tensor key are resolved at compile time — the hot loop
+//!   performs zero key formatting and zero routing;
+//! * a **preallocated arena** sized from the plan ([`CompiledArena`]):
+//!   head results land in fixed slots (`slot = base[pipeline] + mb`), and
+//!   the replay scratch ([`ReplayScratch`]) reuses its buffers across
+//!   steps — after warm-up the dispatch layer allocates nothing
+//!   (asserted with a counting allocator in `rust/tests/compiled_alloc.rs`;
+//!   kernel outputs and tensor transfers allocate by design).
+//!
+//! The program is cached on the engine (invalidated exactly when the
+//! specialized plan is: strategy switches and ZeRO-1 toggles; micro-batch
+//! shape changes are revalidated per step) and pooled across switches in
+//! [`StrategyPool`](crate::temporal::StrategyPool) keyed by
+//! `(entry, schedule, zero1, shape class)`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::runtime::HostTensor;
+use crate::spec::schedule::ScheduleKind;
+use crate::{Error, Result};
+
+use super::exec::{accumulate, task_duration, SpecRunOutcome};
+use super::layout::{gkey, pkey};
+use super::specialize::{SpecTask, SpecTaskKind, SpecializedPlan};
+use super::{Engine, EnginePipeline, MicroBatch, BLOCK_PARAMS};
+
+/// The micro-batch **shape class** of a step: per pipeline, per
+/// micro-batch `(n_seqs, seq_len)`. Two steps in the same class replay
+/// the same compiled program (tensor extents, hand-off sizes, and the
+/// token-independent structure all match); the class is part of the
+/// pool's artifact cache key.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ShapeClass(Vec<Vec<(usize, usize)>>);
+
+impl ShapeClass {
+    /// The class of an actual prefetched step batch.
+    pub fn of_batches(batches: &[Vec<MicroBatch>]) -> ShapeClass {
+        ShapeClass(
+            batches
+                .iter()
+                .map(|bs| bs.iter().map(|b| (b.n_seqs, b.seq_len)).collect())
+                .collect(),
+        )
+    }
+
+    /// The class the engine's current contract prescribes: the ragged
+    /// window shapes when [`Engine::set_microbatches`] installed them,
+    /// else the compiled uniform `[batch, seq]` at the current per-
+    /// pipeline counts. This is the pool-side key — it matches
+    /// [`ShapeClass::of_batches`] for every batch the engine accepts.
+    pub fn of_engine(engine: &Engine) -> ShapeClass {
+        if let Some(ws) = &engine.mb_windows {
+            return ShapeClass(
+                ws.iter()
+                    .map(|pws| pws.iter().map(|w| (w.n_seqs(), w.seq_len)).collect())
+                    .collect(),
+            );
+        }
+        let counts: Vec<usize> =
+            engine.strategy.pipelines.iter().map(|p| p.num_microbatches).collect();
+        ShapeClass::uniform(&counts, engine.runtime.config.batch, engine.runtime.config.seq)
+    }
+
+    /// Uniform `[n_seqs, seq_len]` micro-batches at per-pipeline counts.
+    pub fn uniform(counts: &[usize], n_seqs: usize, seq_len: usize) -> ShapeClass {
+        ShapeClass(counts.iter().map(|&c| vec![(n_seqs, seq_len); c]).collect())
+    }
+
+    /// Allocation-free revalidation of a prefetched step batch against
+    /// this class — the hot-loop cache check.
+    pub fn matches_batches(&self, batches: &[Vec<MicroBatch>]) -> bool {
+        self.0.len() == batches.len()
+            && self.0.iter().zip(batches).all(|(ps, bs)| {
+                ps.len() == bs.len()
+                    && ps
+                        .iter()
+                        .zip(bs)
+                        .all(|(&(n, s), b)| b.n_seqs == n && b.seq_len == s)
+            })
+    }
+
+    /// Per-pipeline micro-batch counts of the class.
+    pub fn counts(&self) -> Vec<usize> {
+        self.0.iter().map(|p| p.len()).collect()
+    }
+}
+
+/// One frozen tape instruction. Index `i` of [`CompiledProgram::ops`] is
+/// task `i` of the source plan; every tensor key, channel endpoint,
+/// collective group (plan-group reduction order), artifact name, and
+/// arena slot is resolved at compile time.
+#[derive(Clone, Debug)]
+pub enum CompiledOp {
+    /// Stage-0 forward input: embed the micro-batch on `root`, broadcast
+    /// over the TP `group`.
+    FwdEmbed {
+        /// Pipeline.
+        pi: usize,
+        /// Micro-batch.
+        mb: usize,
+        /// Stage root device.
+        root: usize,
+        /// Stage devices (TP-group order).
+        group: Vec<usize>,
+        /// Activation key.
+        akey: String,
+    },
+    /// Later-stage forward input: receive the activation hand-off
+    /// `src_root → root`, free the producers' dead copies, broadcast.
+    FwdRecv {
+        /// Sending endpoint (producing stage's root).
+        src_root: usize,
+        /// Receiving endpoint (this stage's root).
+        root: usize,
+        /// Producer devices whose copies are freed.
+        frees: Vec<usize>,
+        /// Stage devices (TP-group order).
+        group: Vec<usize>,
+        /// Activation key.
+        akey: String,
+    },
+    /// One layer's forward GEMMs: save the block input, run every TP
+    /// member's partial forward.
+    FwdGemm {
+        /// Stage devices (TP-group order).
+        group: Vec<usize>,
+        /// Activation key.
+        akey: String,
+        /// Saved-block-input key.
+        skey: String,
+        /// Artifact name (`block_fwd_tp{n}`).
+        art: String,
+        /// The 8 parameter keys, artifact input order.
+        pkeys: Vec<String>,
+    },
+    /// Forward TP sync: partial-sum all-reduce (group order) + residual
+    /// add.
+    FwdTpSync {
+        /// TP group (reduction order).
+        group: Vec<usize>,
+        /// Activation key.
+        akey: String,
+    },
+    /// Last-stage backward input: fused head on `root` (loss + token-
+    /// scaled head gradients, freeing the stage activation), broadcast
+    /// the gradient; the `(loss, tokens)` pair lands in arena `slot`.
+    HeadBwd {
+        /// Pipeline.
+        pi: usize,
+        /// Micro-batch.
+        mb: usize,
+        /// Stage root device.
+        root: usize,
+        /// Stage devices (TP-group order).
+        group: Vec<usize>,
+        /// Activation key (consumed).
+        akey: String,
+        /// Incoming-gradient key (produced).
+        dkey: String,
+        /// Arena head slot (`base[pi] + mb`).
+        slot: usize,
+    },
+    /// Earlier-stage backward input: receive the gradient hand-off
+    /// `src_root → root`, free the producers' copies, broadcast.
+    BwdRecv {
+        /// Sending endpoint (next stage's root).
+        src_root: usize,
+        /// Receiving endpoint (this stage's root).
+        root: usize,
+        /// Producer devices whose copies are freed.
+        frees: Vec<usize>,
+        /// Stage devices (TP-group order).
+        group: Vec<usize>,
+        /// Incoming-gradient key.
+        dkey: String,
+    },
+    /// One layer's backward GEMMs + parameter-gradient accumulation
+    /// (frees the saved block input).
+    BwdGemm {
+        /// Stage devices (TP-group order).
+        group: Vec<usize>,
+        /// Saved-block-input key (consumed).
+        skey: String,
+        /// Incoming-gradient key.
+        dkey: String,
+        /// Artifact name (`block_bwd_tp{n}`).
+        art: String,
+        /// The 8 parameter keys, artifact input order.
+        pkeys: Vec<String>,
+        /// The 8 gradient keys, accumulation order.
+        gkeys: Vec<String>,
+    },
+    /// Backward TP sync: dx-partial all-reduce (group order) + add.
+    BwdTpSync {
+        /// TP group (reduction order).
+        group: Vec<usize>,
+        /// Incoming-gradient key.
+        dkey: String,
+    },
+    /// Stage-0 backward epilogue: embedding gradient on `root`, free the
+    /// incoming gradient on the whole stage.
+    EmbedBwd {
+        /// Pipeline.
+        pi: usize,
+        /// Micro-batch.
+        mb: usize,
+        /// Stage root device.
+        root: usize,
+        /// Stage devices.
+        group: Vec<usize>,
+        /// Incoming-gradient key (consumed).
+        dkey: String,
+    },
+    /// Token-weighted DP gradient reduction (the layout's cached plan).
+    GradReduce {
+        /// Devices the phase's wall time is spread over.
+        ndev: usize,
+    },
+    /// Optimizer application on local shards.
+    OptimStep {
+        /// Devices the phase's wall time is spread over.
+        ndev: usize,
+    },
+    /// ZeRO-1 updated-parameter slice exchange.
+    ZeroExchange {
+        /// Devices the phase's wall time is spread over.
+        ndev: usize,
+    },
+}
+
+impl CompiledOp {
+    /// Precomputed activation key, when the op carries one.
+    pub fn act_key(&self) -> Option<&str> {
+        match self {
+            CompiledOp::FwdEmbed { akey, .. }
+            | CompiledOp::FwdRecv { akey, .. }
+            | CompiledOp::FwdGemm { akey, .. }
+            | CompiledOp::FwdTpSync { akey, .. }
+            | CompiledOp::HeadBwd { akey, .. } => Some(akey),
+            _ => None,
+        }
+    }
+
+    /// Precomputed incoming-gradient key, when the op carries one.
+    pub fn grad_key(&self) -> Option<&str> {
+        match self {
+            CompiledOp::HeadBwd { dkey, .. }
+            | CompiledOp::BwdRecv { dkey, .. }
+            | CompiledOp::BwdGemm { dkey, .. }
+            | CompiledOp::BwdTpSync { dkey, .. }
+            | CompiledOp::EmbedBwd { dkey, .. } => Some(dkey),
+            _ => None,
+        }
+    }
+
+    /// Precomputed saved-block-input key (GEMM ops).
+    pub fn save_key(&self) -> Option<&str> {
+        match self {
+            CompiledOp::FwdGemm { skey, .. } | CompiledOp::BwdGemm { skey, .. } => Some(skey),
+            _ => None,
+        }
+    }
+
+    /// Precomputed artifact name (GEMM ops).
+    pub fn artifact(&self) -> Option<&str> {
+        match self {
+            CompiledOp::FwdGemm { art, .. } | CompiledOp::BwdGemm { art, .. } => Some(art),
+            _ => None,
+        }
+    }
+
+    /// Precomputed parameter keys (GEMM ops, artifact input order).
+    pub fn param_keys(&self) -> Option<&[String]> {
+        match self {
+            CompiledOp::FwdGemm { pkeys, .. } | CompiledOp::BwdGemm { pkeys, .. } => {
+                Some(pkeys)
+            }
+            _ => None,
+        }
+    }
+
+    /// Precomputed gradient keys (backward GEMMs, accumulation order).
+    pub fn grad_param_keys(&self) -> Option<&[String]> {
+        match self {
+            CompiledOp::BwdGemm { gkeys, .. } => Some(gkeys),
+            _ => None,
+        }
+    }
+}
+
+/// One fused dispatch segment: a contiguous tape range running on one
+/// device set, replayed with a single ready check. Ranges index the
+/// program's flat side tables so a segment is `Copy`-cheap and the walk
+/// touches no per-step allocation.
+#[derive(Clone, Copy, Debug)]
+pub struct Seg {
+    /// `[start, end)` into [`CompiledProgram::ops`].
+    pub ops: (u32, u32),
+    /// `[start, end)` into [`CompiledProgram::part_ranks`] — the
+    /// participating timelines (plan-rank positions).
+    pub parts: (u32, u32),
+    /// `[start, end)` into [`CompiledProgram::dep_segs`] — segments that
+    /// must finish first (deduplicated; intra-segment chains elided).
+    pub deps: (u32, u32),
+}
+
+/// A compiled MPMD step program: the frozen union of every rank's tape.
+/// Replayed front to back ([`walk`]) it reproduces the event-driven
+/// executor bit-for-bit; sliced by participant it is one
+/// `CompiledRankProgram` per rank (the threaded executor replays each
+/// rank's ops by index on its own thread).
+#[derive(Debug)]
+pub struct CompiledProgram {
+    /// The instruction tape, index-aligned with the source plan's tasks
+    /// (a topological linear extension of the dependency DAG).
+    pub ops: Vec<CompiledOp>,
+    /// Fused dispatch segments, in tape order.
+    pub segs: Vec<Seg>,
+    /// Flat participant table ([`Seg::parts`] ranges): plan-rank
+    /// positions, TP-group order.
+    pub part_ranks: Vec<u32>,
+    /// Flat dependency table ([`Seg::deps`] ranges): segment indices.
+    pub dep_segs: Vec<u32>,
+    /// Timelines (= ranks) in the source plan.
+    pub nranks: usize,
+    /// Head-result arena slots (Σ per-pipeline micro-batch counts).
+    pub head_slots: usize,
+    /// Per pipeline: arena slots in the interpreter's loss-accumulation
+    /// order (the plan's head-retirement order, slot-resolved).
+    pub head_order: Vec<Vec<u32>>,
+    /// Schedule the program was compiled from.
+    pub schedule: ScheduleKind,
+    /// Per-pipeline micro-batch counts at compile time.
+    pub num_microbatches: Vec<usize>,
+    /// Micro-batch shape class the tape is specialized to.
+    pub shape: ShapeClass,
+    /// Whether the tape carries the ZeRO-1 slice exchange.
+    pub zero1: bool,
+}
+
+impl CompiledProgram {
+    /// Fused segments (one ready check each) vs raw tape ops — the
+    /// dispatch-reduction the fusion rule buys.
+    pub fn num_segs(&self) -> usize {
+        self.segs.len()
+    }
+
+    /// True when the program still describes `pipelines` (counts match).
+    pub fn counts_match(&self, pipelines: &[EnginePipeline]) -> bool {
+        self.num_microbatches.len() == pipelines.len()
+            && self
+                .num_microbatches
+                .iter()
+                .zip(pipelines)
+                .all(|(&m, p)| m == p.num_microbatches)
+    }
+}
+
+/// Fusion rule: an op may join a segment when it is pure device-local
+/// compute — GEMMs, the stage-0 embedding epilogue, and *degenerate*
+/// (single-member) TP syncs, whose all-reduce is a no-op and whose
+/// residual add is local. Real collectives, hand-offs, head/embed
+/// boundary ops, and the global phases always cut a segment.
+fn fusable(t: &SpecTask) -> bool {
+    match t.kind {
+        SpecTaskKind::FwdGemm { .. }
+        | SpecTaskKind::BwdGemm { .. }
+        | SpecTaskKind::EmbedBwd { .. } => true,
+        SpecTaskKind::FwdTpSync { .. } | SpecTaskKind::BwdTpSync { .. } => t.ranks.len() == 1,
+        _ => false,
+    }
+}
+
+/// Compile a specialized plan into a frozen MPMD program.
+///
+/// `pipelines` must be the strategy snapshot the plan was specialized
+/// from; `shape` is the micro-batch shape class the program is keyed
+/// under. Structural mismatches are typed errors, not panics — the
+/// compiler re-validates what it freezes.
+pub fn compile_program(
+    plan: &SpecializedPlan,
+    pipelines: &[EnginePipeline],
+    zero1: bool,
+    shape: ShapeClass,
+) -> Result<CompiledProgram> {
+    if plan.num_microbatches.len() != pipelines.len() {
+        return Err(Error::Engine(format!(
+            "compile: plan has {} pipelines, strategy has {}",
+            plan.num_microbatches.len(),
+            pipelines.len()
+        )));
+    }
+    if shape.counts() != plan.num_microbatches {
+        return Err(Error::Engine(format!(
+            "compile: shape class counts {:?} do not match the plan's {:?}",
+            shape.counts(),
+            plan.num_microbatches
+        )));
+    }
+    let ndev = plan.ranks.len().max(1);
+    // arena slot layout: per-pipeline contiguous head slots
+    let mut slot_base = Vec::with_capacity(pipelines.len());
+    let mut head_slots = 0usize;
+    for &m in &plan.num_microbatches {
+        slot_base.push(head_slots);
+        head_slots += m;
+    }
+
+    let stage_of = |pi: usize, si: usize, ranks: &[usize]| -> Result<()> {
+        if pipelines[pi].stages[si].devices != ranks {
+            return Err(Error::Engine(format!(
+                "compile: task on pipeline {pi} stage {si} runs on {ranks:?} but the \
+                 stage owns {:?}",
+                pipelines[pi].stages[si].devices
+            )));
+        }
+        Ok(())
+    };
+
+    let mut ops: Vec<CompiledOp> = Vec::with_capacity(plan.tasks.len());
+    for (ti, t) in plan.tasks.iter().enumerate() {
+        let op = match t.kind {
+            SpecTaskKind::FwdIn { pipe, stage, mb } => {
+                stage_of(pipe, stage, &t.ranks)?;
+                if stage == 0 {
+                    CompiledOp::FwdEmbed {
+                        pi: pipe,
+                        mb,
+                        root: t.ranks[0],
+                        group: t.ranks.clone(),
+                        akey: Engine::akey(pipe, mb),
+                    }
+                } else {
+                    let Some(&src_root) = t.src.first() else {
+                        return Err(Error::Engine(format!(
+                            "compile: hand-off task {ti} names no producers"
+                        )));
+                    };
+                    CompiledOp::FwdRecv {
+                        src_root,
+                        root: t.ranks[0],
+                        frees: t.src.iter().copied().filter(|d| !t.ranks.contains(d)).collect(),
+                        group: t.ranks.clone(),
+                        akey: Engine::akey(pipe, mb),
+                    }
+                }
+            }
+            SpecTaskKind::FwdGemm { pipe, stage, mb, layer } => {
+                stage_of(pipe, stage, &t.ranks)?;
+                CompiledOp::FwdGemm {
+                    group: t.ranks.clone(),
+                    akey: Engine::akey(pipe, mb),
+                    skey: Engine::skey(pipe, mb, layer),
+                    art: format!("block_fwd_tp{}", t.ranks.len()),
+                    pkeys: BLOCK_PARAMS.iter().map(|p| pkey(layer, p)).collect(),
+                }
+            }
+            SpecTaskKind::FwdTpSync { pipe, stage, mb, .. } => {
+                stage_of(pipe, stage, &t.ranks)?;
+                CompiledOp::FwdTpSync { group: t.ranks.clone(), akey: Engine::akey(pipe, mb) }
+            }
+            SpecTaskKind::BwdIn { pipe, stage, mb } => {
+                stage_of(pipe, stage, &t.ranks)?;
+                if stage + 1 == pipelines[pipe].stages.len() {
+                    CompiledOp::HeadBwd {
+                        pi: pipe,
+                        mb,
+                        root: t.ranks[0],
+                        group: t.ranks.clone(),
+                        akey: Engine::akey(pipe, mb),
+                        dkey: Engine::dkey(pipe, mb),
+                        slot: slot_base[pipe] + mb,
+                    }
+                } else {
+                    let Some(&src_root) = t.src.first() else {
+                        return Err(Error::Engine(format!(
+                            "compile: hand-off task {ti} names no producers"
+                        )));
+                    };
+                    CompiledOp::BwdRecv {
+                        src_root,
+                        root: t.ranks[0],
+                        frees: t.src.iter().copied().filter(|d| !t.ranks.contains(d)).collect(),
+                        group: t.ranks.clone(),
+                        dkey: Engine::dkey(pipe, mb),
+                    }
+                }
+            }
+            SpecTaskKind::BwdGemm { pipe, stage, mb, layer } => {
+                stage_of(pipe, stage, &t.ranks)?;
+                CompiledOp::BwdGemm {
+                    group: t.ranks.clone(),
+                    skey: Engine::skey(pipe, mb, layer),
+                    dkey: Engine::dkey(pipe, mb),
+                    art: format!("block_bwd_tp{}", t.ranks.len()),
+                    pkeys: BLOCK_PARAMS.iter().map(|p| pkey(layer, p)).collect(),
+                    gkeys: BLOCK_PARAMS.iter().map(|p| gkey(layer, p)).collect(),
+                }
+            }
+            SpecTaskKind::BwdTpSync { pipe, stage, mb, .. } => {
+                stage_of(pipe, stage, &t.ranks)?;
+                CompiledOp::BwdTpSync { group: t.ranks.clone(), dkey: Engine::dkey(pipe, mb) }
+            }
+            SpecTaskKind::EmbedBwd { pipe, mb } => {
+                stage_of(pipe, 0, &t.ranks)?;
+                CompiledOp::EmbedBwd {
+                    pi: pipe,
+                    mb,
+                    root: t.ranks[0],
+                    group: t.ranks.clone(),
+                    dkey: Engine::dkey(pipe, mb),
+                }
+            }
+            SpecTaskKind::GradReduce => CompiledOp::GradReduce { ndev },
+            SpecTaskKind::OptimStep => CompiledOp::OptimStep { ndev },
+            SpecTaskKind::ZeroExchange => CompiledOp::ZeroExchange { ndev },
+        };
+        ops.push(op);
+    }
+
+    // Segment fusion. An op joins the previous segment only when it is
+    // fusable, runs on the same device set, and its sole dependency is
+    // the op right before it (the specializer's intra-group chain) — so a
+    // segment's external dependencies are exactly its first op's, and
+    // replaying the segment as one unit reproduces the event-driven
+    // executor's per-op timing accumulation.
+    let mut segs: Vec<Seg> = vec![];
+    let mut seg_of: Vec<u32> = Vec::with_capacity(plan.tasks.len());
+    let mut part_ranks: Vec<u32> = vec![];
+    let mut dep_segs: Vec<u32> = vec![];
+    for (ti, t) in plan.tasks.iter().enumerate() {
+        let fuse = ti > 0
+            && fusable(t)
+            && fusable(&plan.tasks[ti - 1])
+            && t.ranks == plan.tasks[ti - 1].ranks
+            && matches!(t.deps.as_slice(), &[d] if d == ti - 1);
+        if fuse {
+            let last = segs.last_mut().expect("fuse implies a previous segment");
+            last.ops.1 = ti as u32 + 1;
+            seg_of.push((segs.len() - 1) as u32);
+            continue;
+        }
+        let p0 = part_ranks.len() as u32;
+        for &r in &t.ranks {
+            let pos = plan.rank_index(r).ok_or_else(|| {
+                Error::Engine(format!("compile: task {ti} runs on rank {r} with no timeline"))
+            })?;
+            part_ranks.push(pos as u32);
+        }
+        let d0 = dep_segs.len() as u32;
+        let mut ds: Vec<u32> = t.deps.iter().map(|&d| seg_of[d]).collect();
+        ds.sort_unstable();
+        ds.dedup();
+        dep_segs.extend(ds);
+        seg_of.push(segs.len() as u32);
+        segs.push(Seg {
+            ops: (ti as u32, ti as u32 + 1),
+            parts: (p0, part_ranks.len() as u32),
+            deps: (d0, dep_segs.len() as u32),
+        });
+    }
+
+    let head_order: Vec<Vec<u32>> = plan
+        .head_order
+        .iter()
+        .enumerate()
+        .map(|(pi, ord)| ord.iter().map(|&mb| (slot_base[pi] + mb) as u32).collect())
+        .collect();
+
+    Ok(CompiledProgram {
+        ops,
+        segs,
+        part_ranks,
+        dep_segs,
+        nranks: plan.ranks.len(),
+        head_slots,
+        head_order,
+        schedule: plan.schedule,
+        num_microbatches: plan.num_microbatches.clone(),
+        shape,
+        zero1,
+    })
+}
+
+/// Replay scratch of the tape walk: segment finish times, per-timeline
+/// clocks. Buffers are reused across steps (`mem::take`n out of the
+/// engine per step), so a warm walk allocates nothing.
+#[derive(Default)]
+pub struct ReplayScratch {
+    finish: Vec<f64>,
+    clock: Vec<f64>,
+}
+
+impl ReplayScratch {
+    fn reset(&mut self, nsegs: usize, nranks: usize) {
+        self.finish.clear();
+        self.finish.resize(nsegs, 0.0);
+        self.clock.clear();
+        self.clock.resize(nranks, 0.0);
+    }
+}
+
+/// The preallocated per-step arena: head results in fixed slots, the
+/// per-member compute-time scratch of fused GEMM dispatch. Reused across
+/// steps.
+#[derive(Default)]
+pub struct CompiledArena {
+    /// `(mean loss, real tokens)` per head slot.
+    head_vals: Vec<(f32, u64)>,
+    /// Per-TP-member compute seconds of the op in flight.
+    member_s: Vec<f64>,
+}
+
+impl CompiledArena {
+    fn reset(&mut self, head_slots: usize) {
+        self.head_vals.clear();
+        self.head_vals.resize(head_slots, (0.0, 0));
+    }
+}
+
+/// Timing outcome of one tape walk.
+pub(crate) struct WalkOutcome {
+    pub makespan_s: f64,
+    pub exposed_switch_s: f64,
+    pub delivery_lane_s: f64,
+}
+
+/// Replay the tape front to back: per segment one ready check (max over
+/// participant clocks and dependency finishes), then the segment's ops
+/// through `exec`, then the clock propagation — the event-driven
+/// executor's timing semantics over the frozen structure, with zero
+/// dependency *resolution* (no readiness scans, no per-task maps) and
+/// zero allocation on the warm path.
+pub(crate) fn walk(
+    prog: &CompiledProgram,
+    scratch: &mut ReplayScratch,
+    deliveries: &[(usize, f64)],
+    mut exec: impl FnMut(&CompiledOp) -> Result<f64>,
+) -> Result<WalkOutcome> {
+    scratch.reset(prog.segs.len(), prog.nranks);
+    for (si, seg) in prog.segs.iter().enumerate() {
+        let parts = &prog.part_ranks[seg.parts.0 as usize..seg.parts.1 as usize];
+        let mut ready = 0f64;
+        for &p in parts {
+            ready = ready.max(scratch.clock[p as usize]);
+        }
+        for &d in &prog.dep_segs[seg.deps.0 as usize..seg.deps.1 as usize] {
+            ready = ready.max(scratch.finish[d as usize]);
+        }
+        let mut dur = 0f64;
+        for op in &prog.ops[seg.ops.0 as usize..seg.ops.1 as usize] {
+            dur += exec(op)?;
+        }
+        let end = ready + dur;
+        scratch.finish[si] = end;
+        for &p in parts {
+            scratch.clock[p as usize] = end;
+        }
+    }
+    let makespan_s = scratch.clock.iter().copied().fold(0.0, f64::max);
+    // §6.2 measured interleave: per-sender delivery lanes, computed
+    // quadratically over the (small) delivery list to stay allocation-free.
+    let mut delivery_lane_s = 0f64;
+    for (i, &(sender, _)) in deliveries.iter().enumerate() {
+        if deliveries[..i].iter().any(|&(s, _)| s == sender) {
+            continue;
+        }
+        let lane: f64 = deliveries
+            .iter()
+            .filter(|&&(s, _)| s == sender)
+            .map(|&(_, secs)| secs.max(0.0))
+            .sum();
+        delivery_lane_s = delivery_lane_s.max(lane);
+    }
+    let exposed_switch_s = (delivery_lane_s - makespan_s).max(0.0);
+    Ok(WalkOutcome { makespan_s, exposed_switch_s, delivery_lane_s })
+}
+
+impl Engine {
+    /// The compiled program for the current strategy at the shape class
+    /// of `batches` — the hot-loop entry: an allocation-free revalidation
+    /// against the cached program, recompiling only when the schedule,
+    /// ZeRO-1 mode, or micro-batch shapes changed (strategy switches and
+    /// ZeRO-1 toggles clear the cache outright, exactly like `spec`).
+    pub(crate) fn compiled_program_for(
+        &mut self,
+        batches: &[Vec<MicroBatch>],
+    ) -> Result<Arc<CompiledProgram>> {
+        if let Some(p) = &self.compiled {
+            if p.schedule == self.strategy.schedule
+                && p.zero1 == self.zero1
+                && p.shape.matches_batches(batches)
+            {
+                return Ok(Arc::clone(p));
+            }
+        }
+        self.build_compiled(ShapeClass::of_batches(batches))
+    }
+
+    /// The compiled program at the engine's *contract* shape class
+    /// ([`ShapeClass::of_engine`]) — the pool-side compile/lookup path.
+    pub fn compiled_program_cached(&mut self) -> Result<Arc<CompiledProgram>> {
+        let shape = ShapeClass::of_engine(self);
+        if let Some(p) = &self.compiled {
+            if p.schedule == self.strategy.schedule && p.zero1 == self.zero1 && p.shape == shape
+            {
+                return Ok(Arc::clone(p));
+            }
+        }
+        self.build_compiled(shape)
+    }
+
+    fn build_compiled(&mut self, shape: ShapeClass) -> Result<Arc<CompiledProgram>> {
+        let plan = self.specialized_plan()?;
+        let prog =
+            Arc::new(compile_program(&plan, &self.strategy.pipelines, self.zero1, shape)?);
+        self.compiled = Some(Arc::clone(&prog));
+        Ok(prog)
+    }
+
+    /// Install a pooled program as the engine's cached artifact. Typed
+    /// error when the program does not describe this engine — the pool's
+    /// key logic is re-checked at the boundary, so a stale artifact can
+    /// never replay against the wrong strategy.
+    pub fn install_compiled(&mut self, prog: Arc<CompiledProgram>) -> Result<()> {
+        if prog.schedule != self.strategy.schedule
+            || prog.zero1 != self.zero1
+            || !prog.counts_match(&self.strategy.pipelines)
+            || prog.shape != ShapeClass::of_engine(self)
+        {
+            return Err(Error::Engine(
+                "install_compiled: program does not describe this engine's strategy/\
+                 schedule/zero1/shape"
+                    .into(),
+            ));
+        }
+        self.compiled = Some(prog);
+        Ok(())
+    }
+
+    /// The engine's cached compiled program, if any (None after every
+    /// invalidation event — strategy switch, ZeRO-1 toggle).
+    pub fn compiled_cached(&self) -> Option<&Arc<CompiledProgram>> {
+        self.compiled.as_ref()
+    }
+
+    /// Drop the cached compiled program (the next compiled step, or
+    /// [`Engine::compiled_program_cached`], recompiles). Benches use this
+    /// to measure cold compile cost.
+    pub fn invalidate_compiled(&mut self) {
+        self.compiled = None;
+    }
+
+    /// Walk the tape with a null executor: full dependency resolution and
+    /// clock propagation, no kernels. Returns the (zero-duration)
+    /// makespan. This is the dispatch layer in isolation — the
+    /// counting-allocator test asserts a warm replay performs **zero**
+    /// heap allocation.
+    pub fn replay_compiled_tape(&mut self, prog: &CompiledProgram) -> Result<f64> {
+        let mut replay = std::mem::take(&mut self.replay);
+        let out = walk(prog, &mut replay, &[], |_| Ok(0.0)).map(|w| w.makespan_s);
+        self.replay = replay;
+        out
+    }
+
+    /// Execute one step by replaying a compiled program
+    /// ([`ExecMode::Compiled`](super::ExecMode::Compiled)): the hot loop
+    /// is segment dispatch over the frozen tape — no dependency
+    /// resolution, no key formatting, no routing, no dispatch-layer
+    /// allocation. Numerically bit-identical to the event-driven
+    /// executor (same per-device op order, same reduction orders, same
+    /// f64 loss accumulation).
+    pub(crate) fn run_compiled(
+        &mut self,
+        prog: &Arc<CompiledProgram>,
+        batches: &[Vec<MicroBatch>],
+        deliveries: &[(usize, f64)],
+    ) -> Result<SpecRunOutcome> {
+        let prog = Arc::clone(prog);
+        let mut replay = std::mem::take(&mut self.replay);
+        let mut arena = std::mem::take(&mut self.arena);
+        arena.reset(prog.head_slots);
+        let walked = walk(&prog, &mut replay, deliveries, |op| {
+            self.exec_compiled_op(op, batches, &mut arena)
+        });
+        let out = walked.map(|w| {
+            // f64 loss accumulation in the interpreter's order: pipeline-
+            // major, per-pipeline sub-sums over the frozen slot order.
+            let mut weighted_loss = 0f64;
+            for order in &prog.head_order {
+                let mut wp = 0f64;
+                for &slot in order {
+                    let (loss, n_tok) = arena.head_vals[slot as usize];
+                    if n_tok > 0 {
+                        wp += loss as f64 * n_tok as f64;
+                    }
+                }
+                weighted_loss += wp;
+            }
+            let tokens: u64 = arena.head_vals.iter().map(|&(_, n)| n).sum();
+            SpecRunOutcome {
+                weighted_loss,
+                tokens,
+                makespan_s: w.makespan_s,
+                exposed_switch_s: w.exposed_switch_s,
+                delivery_lane_s: w.delivery_lane_s,
+            }
+        });
+        self.replay = replay;
+        self.arena = arena;
+        out
+    }
+
+    /// Execute one tape op. Each arm mirrors the event-driven executor's
+    /// task body exactly (`spec_fwd_in` etc. in [`super::exec`]) with
+    /// every key, endpoint, and group read from the frozen op.
+    fn exec_compiled_op(
+        &mut self,
+        op: &CompiledOp,
+        batches: &[Vec<MicroBatch>],
+        arena: &mut CompiledArena,
+    ) -> Result<f64> {
+        match op {
+            CompiledOp::FwdEmbed { pi, mb, root, group, akey } => {
+                let batch = &batches[*pi][*mb];
+                let t0 = Instant::now();
+                let tok = HostTensor::i32(
+                    vec![batch.n_seqs, batch.seq_len],
+                    batch.tokens.clone(),
+                )?;
+                let x0 = {
+                    let emb = self.mesh.devices[*root].get("emb")?;
+                    let out = self.runtime.call_refs("embed_fwd", &[emb, &tok])?;
+                    out.into_iter().next().unwrap()
+                };
+                self.mesh.devices[*root].put(akey, x0);
+                self.mesh.broadcast(*root, group, akey)?;
+                Ok(t0.elapsed().as_secs_f64())
+            }
+            CompiledOp::FwdRecv { src_root, root, frees, group, akey } => {
+                let t0 = Instant::now();
+                self.mesh.send(*src_root, *root, akey)?;
+                for &d in frees {
+                    let _ = self.mesh.devices[d].take(akey);
+                }
+                self.mesh.broadcast(*root, group, akey)?;
+                Ok(t0.elapsed().as_secs_f64())
+            }
+            CompiledOp::FwdGemm { group, akey, skey, art, pkeys } => {
+                let t0 = Instant::now();
+                arena.member_s.clear();
+                arena.member_s.resize(group.len(), 0.0);
+                for &d in group {
+                    let x = self.mesh.devices[d].get(akey)?.clone();
+                    self.mesh.devices[d].put(skey, x);
+                }
+                for (j, &d) in group.iter().enumerate() {
+                    let dev = &self.mesh.devices[d];
+                    let inputs = [
+                        dev.get(&pkeys[0])?,
+                        dev.get(&pkeys[1])?,
+                        dev.get(&pkeys[2])?,
+                        dev.get(&pkeys[3])?,
+                        dev.get(&pkeys[4])?,
+                        dev.get(&pkeys[5])?,
+                        dev.get(&pkeys[6])?,
+                        dev.get(&pkeys[7])?,
+                        dev.get(akey)?,
+                    ];
+                    let t1 = Instant::now();
+                    let y_part =
+                        self.runtime.call_refs(art, &inputs)?.into_iter().next().unwrap();
+                    arena.member_s[j] += t1.elapsed().as_secs_f64();
+                    self.mesh.devices[d].put("part", y_part);
+                }
+                Ok(task_duration(t0.elapsed().as_secs_f64(), &arena.member_s))
+            }
+            CompiledOp::FwdTpSync { group, akey } => {
+                let t0 = Instant::now();
+                self.mesh.all_reduce(group, "part")?;
+                for &d in group {
+                    let part = self.mesh.devices[d].get("part")?.clone();
+                    let x = self.mesh.devices[d].get_mut(akey)?;
+                    x.add_assign(&part)?;
+                }
+                Ok(t0.elapsed().as_secs_f64())
+            }
+            CompiledOp::HeadBwd { pi, mb, root, group, akey, dkey, slot } => {
+                let batch = &batches[*pi][*mb];
+                let t0 = Instant::now();
+                let tokens = batch.real_tokens();
+                let w = tokens as f32;
+                let tgt = HostTensor::i32(
+                    vec![batch.n_seqs, batch.seq_len],
+                    batch.targets.clone(),
+                )?;
+                let (loss, mut dx, mut dgf, mut dwout) = {
+                    let dev = &self.mesh.devices[*root];
+                    let out = self.runtime.call_refs(
+                        "head_step",
+                        &[dev.get("gf")?, dev.get("wout")?, dev.get(akey)?, &tgt],
+                    )?;
+                    let mut it = out.into_iter();
+                    let loss = it.next().unwrap().as_f32()?[0];
+                    (loss, it.next().unwrap(), it.next().unwrap(), it.next().unwrap())
+                };
+                dx.scale(w)?;
+                dgf.scale(w)?;
+                dwout.scale(w)?;
+                accumulate(&mut self.mesh.devices[*root], "grad.gf", dgf)?;
+                accumulate(&mut self.mesh.devices[*root], "grad.wout", dwout)?;
+                self.mesh.devices[*root].put(dkey, dx);
+                for &d in group {
+                    let _ = self.mesh.devices[d].take(akey);
+                }
+                arena.head_vals[*slot] = (loss, tokens);
+                self.mesh.broadcast(*root, group, dkey)?;
+                Ok(t0.elapsed().as_secs_f64())
+            }
+            CompiledOp::BwdRecv { src_root, root, frees, group, dkey } => {
+                let t0 = Instant::now();
+                self.mesh.send(*src_root, *root, dkey)?;
+                for &d in frees {
+                    let _ = self.mesh.devices[d].take(dkey);
+                }
+                self.mesh.broadcast(*root, group, dkey)?;
+                Ok(t0.elapsed().as_secs_f64())
+            }
+            CompiledOp::BwdGemm { group, skey, dkey, art, pkeys, gkeys } => {
+                let t0 = Instant::now();
+                arena.member_s.clear();
+                arena.member_s.resize(group.len(), 0.0);
+                for (j, &d) in group.iter().enumerate() {
+                    let dev = &self.mesh.devices[d];
+                    let inputs = [
+                        dev.get(&pkeys[0])?,
+                        dev.get(&pkeys[1])?,
+                        dev.get(&pkeys[2])?,
+                        dev.get(&pkeys[3])?,
+                        dev.get(&pkeys[4])?,
+                        dev.get(&pkeys[5])?,
+                        dev.get(&pkeys[6])?,
+                        dev.get(&pkeys[7])?,
+                        dev.get(skey)?,
+                        dev.get(dkey)?,
+                    ];
+                    let t1 = Instant::now();
+                    let outs = self.runtime.call_refs(art, &inputs)?;
+                    arena.member_s[j] += t1.elapsed().as_secs_f64();
+                    let mut it = outs.into_iter();
+                    let dx_part = it.next().unwrap();
+                    self.mesh.devices[d].put("dpart", dx_part);
+                    for gk in gkeys {
+                        accumulate(&mut self.mesh.devices[d], gk, it.next().unwrap())?;
+                    }
+                    let _ = self.mesh.devices[d].take(skey);
+                }
+                Ok(task_duration(t0.elapsed().as_secs_f64(), &arena.member_s))
+            }
+            CompiledOp::BwdTpSync { group, dkey } => {
+                let t0 = Instant::now();
+                self.mesh.all_reduce(group, "dpart")?;
+                for &d in group {
+                    let dpart = self.mesh.devices[d].get("dpart")?.clone();
+                    let dx = self.mesh.devices[d].get_mut(dkey)?;
+                    dx.add_assign(&dpart)?;
+                }
+                Ok(t0.elapsed().as_secs_f64())
+            }
+            CompiledOp::EmbedBwd { pi, mb, root, group, dkey } => {
+                let batch = &batches[*pi][*mb];
+                let t0 = Instant::now();
+                let tok = HostTensor::i32(
+                    vec![batch.n_seqs, batch.seq_len],
+                    batch.tokens.clone(),
+                )?;
+                let demb = {
+                    let dx0 = self.mesh.devices[*root].get(dkey)?;
+                    self.runtime
+                        .call_refs("embed_bwd", &[&tok, dx0])?
+                        .into_iter()
+                        .next()
+                        .unwrap()
+                };
+                accumulate(&mut self.mesh.devices[*root], "grad.emb", demb)?;
+                for &d in group {
+                    let _ = self.mesh.devices[d].take(dkey);
+                }
+                Ok(t0.elapsed().as_secs_f64())
+            }
+            CompiledOp::GradReduce { ndev } => {
+                let tokens: u64 = arena.head_vals.iter().map(|&(_, n)| n).sum();
+                if tokens == 0 {
+                    return Err(Error::Engine("train_step: no tokens processed".into()));
+                }
+                let t0 = Instant::now();
+                self.sync_gradients(tokens)?;
+                Ok(t0.elapsed().as_secs_f64() / *ndev as f64)
+            }
+            CompiledOp::OptimStep { ndev } => {
+                let t0 = Instant::now();
+                self.apply_updates_local()?;
+                Ok(t0.elapsed().as_secs_f64() / *ndev as f64)
+            }
+            CompiledOp::ZeroExchange { ndev } => {
+                let t0 = Instant::now();
+                self.exchange_zero1_slices()?;
+                Ok(t0.elapsed().as_secs_f64() / *ndev as f64)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::layout::ShardLayout;
+    use crate::engine::specialize::specialize;
+    use crate::engine::EngineStrategy;
+    use crate::runtime::native;
+
+    fn compiled(s: &EngineStrategy, zero1: bool) -> (SpecializedPlan, CompiledProgram) {
+        let cfg = native::tiny_config();
+        let layout = ShardLayout::build(&cfg, s).unwrap();
+        let plan = specialize(s, &layout, zero1).unwrap();
+        let counts: Vec<usize> = s.pipelines.iter().map(|p| p.num_microbatches).collect();
+        let shape = ShapeClass::uniform(&counts, cfg.batch, cfg.seq);
+        let prog = compile_program(&plan, &s.pipelines, zero1, shape).unwrap();
+        (plan, prog)
+    }
+
+    #[test]
+    fn tape_is_index_aligned_and_topologically_frozen() {
+        let s = EngineStrategy::uniform("dp2tp2pp2", 2, 2, 2, 8, 3);
+        let (plan, prog) = compiled(&s, true);
+        assert_eq!(prog.ops.len(), plan.tasks.len());
+        assert_eq!(prog.nranks, plan.ranks.len());
+        // segments tile the tape contiguously and deps point backward
+        let mut next = 0u32;
+        for (si, seg) in prog.segs.iter().enumerate() {
+            assert_eq!(seg.ops.0, next, "segment {si} contiguous");
+            assert!(seg.ops.1 > seg.ops.0);
+            next = seg.ops.1;
+            for &d in &prog.dep_segs[seg.deps.0 as usize..seg.deps.1 as usize] {
+                assert!((d as usize) < si, "segment {si} dep {d} points backward");
+            }
+        }
+        assert_eq!(next as usize, prog.ops.len());
+        assert!(matches!(prog.ops.last(), Some(CompiledOp::ZeroExchange { .. })));
+    }
+
+    #[test]
+    fn tp1_compute_chains_fuse_real_collectives_cut() {
+        // TP1 stages: GEMM + degenerate sync chains collapse, so the
+        // program dispatches far fewer segments than tape ops.
+        let s = EngineStrategy::uniform("pp2", 1, 1, 2, 8, 3);
+        let (plan, prog) = compiled(&s, false);
+        assert!(
+            prog.num_segs() < plan.tasks.len() / 2,
+            "{} segs for {} ops",
+            prog.num_segs(),
+            plan.tasks.len()
+        );
+        // TP2: every sync is a real collective — only GEMM runs fuse
+        let s2 = EngineStrategy::uniform("tp2pp2", 1, 2, 2, 8, 2);
+        let (_, prog2) = compiled(&s2, false);
+        for seg in &prog2.segs {
+            for op in &prog2.ops[seg.ops.0 as usize..seg.ops.1 as usize] {
+                if seg.ops.1 - seg.ops.0 > 1 {
+                    assert!(
+                        matches!(
+                            op,
+                            CompiledOp::FwdGemm { .. }
+                                | CompiledOp::BwdGemm { .. }
+                                | CompiledOp::EmbedBwd { .. }
+                        ),
+                        "fused segment holds a comm op: {op:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shape_class_revalidates_batches() {
+        let sc = ShapeClass::uniform(&[2, 1], 2, 16);
+        let mk = |n, s| MicroBatch {
+            tokens: vec![0; n * s],
+            targets: vec![0; n * s],
+            n_seqs: n,
+            seq_len: s,
+        };
+        let good = vec![vec![mk(2, 16), mk(2, 16)], vec![mk(2, 16)]];
+        assert!(sc.matches_batches(&good));
+        let ragged = vec![vec![mk(2, 16), mk(1, 16)], vec![mk(2, 16)]];
+        assert!(!sc.matches_batches(&ragged));
+        let short = vec![vec![mk(2, 16)], vec![mk(2, 16)]];
+        assert!(!sc.matches_batches(&short));
+        assert_eq!(sc.counts(), vec![2, 1]);
+        assert_eq!(ShapeClass::of_batches(&ragged).counts(), vec![2, 1]);
+    }
+
+    #[test]
+    fn head_slots_resolve_the_retirement_order() {
+        let s = EngineStrategy::uniform("dp2", 2, 1, 1, 8, 3);
+        let (plan, prog) = compiled(&s, false);
+        assert_eq!(prog.head_slots, 6);
+        // GPipe retires LIFO; pipeline 1's slots are offset by its base
+        assert_eq!(prog.head_order, vec![vec![2, 1, 0], vec![5, 4, 3]]);
+        assert_eq!(plan.head_order, vec![vec![2, 1, 0], vec![2, 1, 0]]);
+    }
+}

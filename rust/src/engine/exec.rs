@@ -228,8 +228,28 @@ impl Engine {
         batches: &[Vec<MicroBatch>],
         deliveries: &[(usize, f64)],
     ) -> Result<SpecRunOutcome> {
-        if self.exec_mode == ExecMode::Threaded {
-            return self.run_specialized_threaded(plan, pipelines, batches, deliveries);
+        match self.exec_mode {
+            ExecMode::Threaded => {
+                return self.run_specialized_threaded(plan, pipelines, batches, deliveries, None)
+            }
+            ExecMode::CompiledThreaded => {
+                // replay each rank's frozen tape on its thread: the
+                // compiled program supplies precomputed keys/endpoints
+                let prog = self.compiled_program_for(batches)?;
+                return self.run_specialized_threaded(
+                    plan,
+                    pipelines,
+                    batches,
+                    deliveries,
+                    Some(&prog),
+                );
+            }
+            ExecMode::Compiled => {
+                // dispatch-only hot loop over the frozen segment tape
+                let prog = self.compiled_program_for(batches)?;
+                return self.run_compiled(&prog, batches, deliveries);
+            }
+            ExecMode::EventDriven => {}
         }
         let n = plan.tasks.len();
         let nranks = plan.ranks.len();
@@ -1020,7 +1040,7 @@ impl Engine {
 /// members run concurrently (slowest bounds the group), everything else in
 /// the task — collectives, boundary sends, root-only head/embed calls —
 /// is charged serially.
-fn task_duration(task_wall_s: f64, per_member_compute_s: &[f64]) -> f64 {
+pub(crate) fn task_duration(task_wall_s: f64, per_member_compute_s: &[f64]) -> f64 {
     let sum: f64 = per_member_compute_s.iter().sum();
     let max = per_member_compute_s.iter().copied().fold(0.0, f64::max);
     (task_wall_s - sum).max(0.0) + max

@@ -23,6 +23,7 @@
 //! §6.2 measured interleave; [`optim`] is AdamW on each device's local
 //! shards.
 
+pub mod compile;
 pub mod exec;
 pub mod layout;
 pub mod optim;
@@ -38,6 +39,7 @@ use crate::runtime::{ManifestConfig, Runtime};
 use crate::spec::schedule::ScheduleKind;
 use crate::{Error, Result};
 
+pub use compile::{compile_program, CompiledOp, CompiledProgram, Seg, ShapeClass};
 pub use layout::{ShardLayout, SyncOp, ZeroGroup};
 pub use optim::AdamW;
 pub use specialize::{specialize, HandoffEdge, RankPlan, SpecTask, SpecTaskKind, SpecializedPlan};
@@ -304,6 +306,15 @@ pub enum ExecMode {
     /// *wall-clock*. Requires the native backend (the PJRT client is not
     /// `Send`).
     Threaded,
+    /// Replay the cached [`CompiledProgram`] tape over the event-driven
+    /// path (DESIGN.md §9): one ready check per fused segment, every
+    /// key/endpoint/group frozen at compile time — the dispatch-only hot
+    /// loop, bit-identical to [`ExecMode::EventDriven`].
+    Compiled,
+    /// The threaded executor replaying each rank's compiled tape on its
+    /// thread (precomputed keys and channel endpoints; same wall-clock
+    /// makespan semantics as [`ExecMode::Threaded`]).
+    CompiledThreaded,
 }
 
 /// The engine: runtime + mesh + strategy + cached layout + optimizer.
@@ -350,6 +361,17 @@ pub struct Engine {
     /// micro-batch counts, or ZeRO-1 mode change. `None` ⇒ the next
     /// [`Engine::train_step`] re-specializes.
     pub(crate) spec: Option<Arc<SpecializedPlan>>,
+    /// The cached compiled MPMD artifact of the current strategy
+    /// (DESIGN.md §9): the specialized plan frozen into a dispatch tape.
+    /// Invalidated on exactly the events that invalidate `spec`
+    /// (switches, ZeRO-1 toggles); shape changes revalidate per step.
+    pub(crate) compiled: Option<Arc<CompiledProgram>>,
+    /// Reusable tape-walk scratch of the compiled executor (warm steps
+    /// allocate nothing in the dispatch layer).
+    pub(crate) replay: compile::ReplayScratch,
+    /// Preallocated per-step arena of the compiled executor (head-result
+    /// slots + per-member timing scratch).
+    pub(crate) arena: compile::CompiledArena,
     /// Per-sender delivery batches of switches executed since the last
     /// step, injected into the next step's timelines as wire-lane tasks
     /// (§6.2 measured interleave); drained by [`Engine::train_step`].
@@ -396,6 +418,9 @@ impl Engine {
             exec_mode: ExecMode::default(),
             exec_jitter: None,
             spec: None,
+            compiled: None,
+            replay: compile::ReplayScratch::default(),
+            arena: compile::CompiledArena::default(),
             pending_deliveries: vec![],
             step: 0,
         })
@@ -412,6 +437,7 @@ impl Engine {
         }
         self.zero1 = on;
         self.spec = None; // the ZeroExchange task appears/disappears
+        self.compiled = None; // ... and so does its tape op
         Ok(())
     }
 

@@ -465,6 +465,10 @@ impl Engine {
         // the per-rank specialization described the old strategy; the
         // next step re-specializes the survivors/new layout
         self.spec = None;
+        // ... and the compiled tape froze that specialization's keys and
+        // endpoints — same invalidation event (the pool's artifact cache
+        // still holds it for the switch back)
+        self.compiled = None;
 
         // ---- 3. ZeRO-1: trim the freshly-arrived full moment shards back
         // to each device's DP partition under the new layout (unmoved

@@ -36,6 +36,7 @@
 //! (not `Send`), so artifact calls go straight to
 //! [`native::call`](crate::runtime::native::call) with the `Copy` config.
 
+use std::borrow::Cow;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -48,6 +49,7 @@ use crate::runtime::{native, HostTensor, ManifestConfig};
 use crate::temporal::overlap::SwitchOverlap;
 use crate::{Error, Result};
 
+use super::compile::{CompiledOp, CompiledProgram};
 use super::exec::{accumulate, SpecRunOutcome};
 use super::layout::{gkey, pkey, ShardLayout, SyncOp};
 use super::specialize::{SpecTaskKind, SpecializedPlan};
@@ -126,6 +128,12 @@ struct Progress {
 /// Everything the rank threads share for one step.
 struct Shared<'e> {
     plan: &'e SpecializedPlan,
+    /// Index-aligned compiled tape
+    /// ([`ExecMode::CompiledThreaded`](super::ExecMode)): each worker
+    /// replays its rank's ops by plan index, reading the frozen keys,
+    /// artifact names, and groups instead of re-formatting them per task.
+    /// `None` falls back to the interpreting path.
+    prog: Option<&'e CompiledProgram>,
     pipelines: &'e [EnginePipeline],
     batches: &'e [Vec<MicroBatch>],
     layout: &'e ShardLayout,
@@ -154,6 +162,15 @@ struct Shared<'e> {
 /// panics — the failure flag carries the abort instead.
 fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Frozen key when the compiled tape carries one, else the formatted
+/// fallback — the threaded dispatch's zero-format fast path.
+fn key_or<'a>(k: Option<&'a str>, make: impl FnOnce() -> String) -> Cow<'a, str> {
+    match k {
+        Some(s) => Cow::Borrowed(s),
+        None => Cow::Owned(make()),
+    }
 }
 
 /// SplitMix64 — the stateless per-`(task, rank)` jitter hash.
@@ -412,6 +429,9 @@ impl Worker<'_, '_> {
             sh.jitter_sleep(ti, self.rank);
             sh.wait_deps(ti)?;
             let task = &sh.plan.tasks[ti];
+            // the tape is index-aligned with the plan: op `ti` carries
+            // the frozen keys/endpoints for task `ti`
+            let cop = sh.prog.map(|p| &p.ops[ti]);
             match task.kind {
                 SpecTaskKind::GradReduce | SpecTaskKind::ZeroExchange => {
                     self.global_phase(ti, &task.kind)?;
@@ -419,24 +439,24 @@ impl Worker<'_, '_> {
                 _ => {
                     match task.kind {
                         SpecTaskKind::FwdIn { pipe, stage, mb } => {
-                            self.fwd_in(ti, pipe, stage, mb)?
+                            self.fwd_in(ti, pipe, stage, mb, cop)?
                         }
                         SpecTaskKind::FwdGemm { pipe, stage, mb, layer } => {
-                            self.fwd_gemm(pipe, stage, mb, layer)?
+                            self.fwd_gemm(pipe, stage, mb, layer, cop)?
                         }
                         SpecTaskKind::FwdTpSync { pipe, stage, mb, .. } => {
-                            self.tp_sync(ti, pipe, stage, mb, true)?
+                            self.tp_sync(ti, pipe, stage, mb, true, cop)?
                         }
                         SpecTaskKind::BwdIn { pipe, stage, mb } => {
-                            self.bwd_in(ti, pipe, stage, mb)?
+                            self.bwd_in(ti, pipe, stage, mb, cop)?
                         }
                         SpecTaskKind::BwdGemm { pipe, stage, mb, layer } => {
-                            self.bwd_gemm(pipe, stage, mb, layer)?
+                            self.bwd_gemm(pipe, stage, mb, layer, cop)?
                         }
                         SpecTaskKind::BwdTpSync { pipe, stage, mb, .. } => {
-                            self.tp_sync(ti, pipe, stage, mb, false)?
+                            self.tp_sync(ti, pipe, stage, mb, false, cop)?
                         }
-                        SpecTaskKind::EmbedBwd { pipe, mb } => self.embed_bwd(pipe, mb)?,
+                        SpecTaskKind::EmbedBwd { pipe, mb } => self.embed_bwd(pipe, mb, cop)?,
                         SpecTaskKind::OptimStep => self.optim_step()?,
                         SpecTaskKind::GradReduce | SpecTaskKind::ZeroExchange => {
                             unreachable!("global phases handled above")
@@ -505,10 +525,17 @@ impl Worker<'_, '_> {
     /// [`SpecTaskKind::FwdIn`]: stage 0 embeds on the root, later stages'
     /// roots await the producer's [`Msg::Handoff`]; the root then
     /// broadcasts to the TP members, who just install the copy.
-    fn fwd_in(&mut self, ti: usize, pi: usize, si: usize, mb: usize) -> Result<()> {
+    fn fwd_in(
+        &mut self,
+        ti: usize,
+        pi: usize,
+        si: usize,
+        mb: usize,
+        cop: Option<&CompiledOp>,
+    ) -> Result<()> {
         let sh = self.sh;
         let stage = &sh.pipelines[pi].stages[si];
-        let akey = Engine::akey(pi, mb);
+        let akey = key_or(cop.and_then(|o| o.act_key()), || Engine::akey(pi, mb));
         if self.rank == stage.devices[0] {
             if si == 0 {
                 let batch = &sh.batches[pi][mb];
@@ -539,18 +566,35 @@ impl Worker<'_, '_> {
 
     /// [`SpecTaskKind::FwdGemm`]: save the block input for recompute,
     /// then the own partial forward GEMMs — all on the own device.
-    fn fwd_gemm(&mut self, pi: usize, si: usize, mb: usize, l: u32) -> Result<()> {
+    fn fwd_gemm(
+        &mut self,
+        pi: usize,
+        si: usize,
+        mb: usize,
+        l: u32,
+        cop: Option<&CompiledOp>,
+    ) -> Result<()> {
         let sh = self.sh;
         let stage = &sh.pipelines[pi].stages[si];
-        let akey = Engine::akey(pi, mb);
-        let art = format!("block_fwd_tp{}", stage.tp());
+        let akey = key_or(cop.and_then(|o| o.act_key()), || Engine::akey(pi, mb));
+        let skey = key_or(cop.and_then(|o| o.save_key()), || Engine::skey(pi, mb, l));
+        let art =
+            key_or(cop.and_then(|o| o.artifact()), || format!("block_fwd_tp{}", stage.tp()));
+        let pk_owned: Vec<String>;
+        let pkeys: &[String] = match cop.and_then(|o| o.param_keys()) {
+            Some(ks) => ks,
+            None => {
+                pk_owned = BLOCK_PARAMS.iter().map(|p| pkey(l, p)).collect();
+                &pk_owned
+            }
+        };
         let mut dev = sh.lock_dev(self.rank);
         let x = dev.get(&akey)?.clone();
-        dev.put(&Engine::skey(pi, mb, l), x);
+        dev.put(&skey, x);
         let y_part = {
             let mut inputs: Vec<&HostTensor> = Vec::with_capacity(9);
-            for p in BLOCK_PARAMS {
-                inputs.push(dev.get(&pkey(l, p))?);
+            for p in pkeys {
+                inputs.push(dev.get(p)?);
             }
             inputs.push(dev.get(&akey)?);
             native::call(&sh.cfg, &art, &inputs)?.into_iter().next().unwrap()
@@ -565,14 +609,22 @@ impl Worker<'_, '_> {
     /// scatters the sum, and every member adds it into the running
     /// activation/gradient — wire/ops accounting exactly as
     /// [`Mesh::all_reduce`](crate::collectives::Mesh).
-    fn tp_sync(&mut self, ti: usize, pi: usize, si: usize, mb: usize, fwd: bool) -> Result<()> {
+    fn tp_sync(
+        &mut self,
+        ti: usize,
+        pi: usize,
+        si: usize,
+        mb: usize,
+        fwd: bool,
+        cop: Option<&CompiledOp>,
+    ) -> Result<()> {
         let sh = self.sh;
         let stage = &sh.pipelines[pi].stages[si];
         let group = &stage.devices;
         let (part_key, xkey) = if fwd {
-            ("part", Engine::akey(pi, mb))
+            ("part", key_or(cop.and_then(|o| o.act_key()), || Engine::akey(pi, mb)))
         } else {
-            ("dpart", Engine::dkey(pi, mb))
+            ("dpart", key_or(cop.and_then(|o| o.grad_key()), || Engine::dkey(pi, mb)))
         };
         if group.len() <= 1 {
             // degenerate group: the mesh all-reduce is a no-op (no wire,
@@ -615,13 +667,20 @@ impl Worker<'_, '_> {
     /// (loss + token-scaled head gradients) and every member frees its own
     /// stage activation; earlier stages' roots await the gradient
     /// hand-off. Both broadcast the incoming gradient over the group.
-    fn bwd_in(&mut self, ti: usize, pi: usize, si: usize, mb: usize) -> Result<()> {
+    fn bwd_in(
+        &mut self,
+        ti: usize,
+        pi: usize,
+        si: usize,
+        mb: usize,
+        cop: Option<&CompiledOp>,
+    ) -> Result<()> {
         let sh = self.sh;
         let pipe = &sh.pipelines[pi];
         let stage = &pipe.stages[si];
         let last = pipe.stages.len() - 1;
-        let akey = Engine::akey(pi, mb);
-        let dkey = Engine::dkey(pi, mb);
+        let akey = key_or(cop.and_then(|o| o.act_key()), || Engine::akey(pi, mb));
+        let dkey = key_or(cop.and_then(|o| o.grad_key()), || Engine::dkey(pi, mb));
         if self.rank == stage.devices[0] {
             if si == last {
                 let batch = &sh.batches[pi][mb];
@@ -671,17 +730,41 @@ impl Worker<'_, '_> {
 
     /// [`SpecTaskKind::BwdGemm`]: the own backward GEMMs for one layer,
     /// gradient accumulation, and the saved-input free.
-    fn bwd_gemm(&mut self, pi: usize, si: usize, mb: usize, l: u32) -> Result<()> {
+    fn bwd_gemm(
+        &mut self,
+        pi: usize,
+        si: usize,
+        mb: usize,
+        l: u32,
+        cop: Option<&CompiledOp>,
+    ) -> Result<()> {
         let sh = self.sh;
         let stage = &sh.pipelines[pi].stages[si];
-        let dkey = Engine::dkey(pi, mb);
-        let skey = Engine::skey(pi, mb, l);
-        let art = format!("block_bwd_tp{}", stage.tp());
+        let dkey = key_or(cop.and_then(|o| o.grad_key()), || Engine::dkey(pi, mb));
+        let skey = key_or(cop.and_then(|o| o.save_key()), || Engine::skey(pi, mb, l));
+        let art =
+            key_or(cop.and_then(|o| o.artifact()), || format!("block_bwd_tp{}", stage.tp()));
+        let pk_owned: Vec<String>;
+        let pkeys: &[String] = match cop.and_then(|o| o.param_keys()) {
+            Some(ks) => ks,
+            None => {
+                pk_owned = BLOCK_PARAMS.iter().map(|p| pkey(l, p)).collect();
+                &pk_owned
+            }
+        };
+        let gk_owned: Vec<String>;
+        let gkeys: &[String] = match cop.and_then(|o| o.grad_param_keys()) {
+            Some(ks) => ks,
+            None => {
+                gk_owned = BLOCK_PARAMS.iter().map(|p| gkey(l, p)).collect();
+                &gk_owned
+            }
+        };
         let mut dev = sh.lock_dev(self.rank);
         let outs = {
             let mut inputs: Vec<&HostTensor> = Vec::with_capacity(10);
-            for p in BLOCK_PARAMS {
-                inputs.push(dev.get(&pkey(l, p))?);
+            for p in pkeys {
+                inputs.push(dev.get(p)?);
             }
             inputs.push(dev.get(&skey)?);
             inputs.push(dev.get(&dkey)?);
@@ -690,8 +773,8 @@ impl Worker<'_, '_> {
         let mut it = outs.into_iter();
         let dx_part = it.next().unwrap();
         dev.put("dpart", dx_part);
-        for p in BLOCK_PARAMS {
-            accumulate(&mut dev, &gkey(l, p), it.next().unwrap())?;
+        for gk in gkeys {
+            accumulate(&mut dev, gk, it.next().unwrap())?;
         }
         let _ = dev.take(&skey);
         Ok(())
@@ -699,10 +782,10 @@ impl Worker<'_, '_> {
 
     /// [`SpecTaskKind::EmbedBwd`]: the root accumulates the embedding
     /// gradient; every member frees its own incoming-gradient copy.
-    fn embed_bwd(&mut self, pi: usize, mb: usize) -> Result<()> {
+    fn embed_bwd(&mut self, pi: usize, mb: usize, cop: Option<&CompiledOp>) -> Result<()> {
         let sh = self.sh;
         let stage = &sh.pipelines[pi].stages[0];
-        let dkey = Engine::dkey(pi, mb);
+        let dkey = key_or(cop.and_then(|o| o.grad_key()), || Engine::dkey(pi, mb));
         let mut dev = sh.lock_dev(self.rank);
         if self.rank == stage.devices[0] {
             let batch = &sh.batches[pi][mb];
@@ -827,7 +910,10 @@ impl Engine {
     /// rank, comm tasks as typed channel messages, wall-clock elapsed time
     /// as the makespan. Dispatch target of
     /// [`Engine::run_specialized`](Engine::run_specialized) under
-    /// [`ExecMode::Threaded`](super::ExecMode); numerics and wire
+    /// [`ExecMode::Threaded`](super::ExecMode) (`prog: None`) and
+    /// [`ExecMode::CompiledThreaded`](super::ExecMode) (`prog` carries
+    /// the index-aligned compiled tape, so each worker replays its rank's
+    /// frozen ops — no per-task key formatting); numerics and wire
     /// accounting are bit-identical to the event-driven executor and the
     /// reference interpreter (module docs lay out the contract).
     pub(crate) fn run_specialized_threaded(
@@ -836,6 +922,7 @@ impl Engine {
         pipelines: &[EnginePipeline],
         batches: &[Vec<MicroBatch>],
         deliveries: &[(usize, f64)],
+        prog: Option<&CompiledProgram>,
     ) -> Result<SpecRunOutcome> {
         if !self.runtime.is_native() {
             return Err(Error::Engine(
@@ -844,6 +931,8 @@ impl Engine {
                     .into(),
             ));
         }
+        // a tape only replays against the exact plan it froze
+        let prog = prog.filter(|p| p.ops.len() == plan.tasks.len());
         let post = build_post(plan)?;
         let n = plan.tasks.len();
         let nranks = plan.ranks.len();
@@ -858,6 +947,7 @@ impl Engine {
         let layout: &ShardLayout = &self.layout;
         let shared = Shared {
             plan,
+            prog,
             pipelines,
             batches,
             layout,
@@ -1056,6 +1146,24 @@ mod tests {
             let b = step(&mut evd, 77 + k);
             assert_stats_match(&a, &b);
         }
+    }
+
+    #[test]
+    fn compiled_threaded_matches_reference_dp2tp2() {
+        let s = EngineStrategy::uniform("dp2tp2", 2, 2, 1, 8, 2);
+        let mut thr = engine(&s);
+        thr.set_exec_mode(ExecMode::CompiledThreaded);
+        let mut refr = engine(&s);
+        for k in 0..2u64 {
+            let a = step(&mut thr, 310 + k);
+            let b = refr
+                .train_step_reference(&mut |pi, mb| {
+                    batch((310 + k) ^ ((pi as u64) << 8) ^ mb as u64)
+                })
+                .unwrap();
+            assert_stats_match(&a, &b);
+        }
+        assert!(thr.compiled_cached().is_some(), "tape cached after compiled steps");
     }
 
     #[test]

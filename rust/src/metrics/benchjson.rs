@@ -147,9 +147,21 @@ fn num(v: f64) -> String {
 
 /// `git rev-parse --short HEAD`, or `"unknown"` when git is unavailable.
 fn git_rev() -> String {
-    std::process::Command::new("git")
-        .args(["rev-parse", "--short", "HEAD"])
-        .output()
+    git_rev_in(None)
+}
+
+/// [`git_rev`] with an explicit working directory (`None` inherits the
+/// process cwd). Every failure mode — git binary missing, `dir` not a
+/// repository, non-UTF-8 output, empty output — degrades to `"unknown"`
+/// instead of erroring: the bench must still emit its report outside a
+/// checkout (e.g. an unpacked source tarball in CI).
+fn git_rev_in(dir: Option<&std::path::Path>) -> String {
+    let mut cmd = std::process::Command::new("git");
+    cmd.args(["rev-parse", "--short", "HEAD"]);
+    if let Some(d) = dir {
+        cmd.current_dir(d);
+    }
+    cmd.output()
         .ok()
         .filter(|o| o.status.success())
         .and_then(|o| String::from_utf8(o.stdout).ok())
@@ -184,5 +196,13 @@ mod tests {
     #[test]
     fn rev_is_nonempty() {
         assert!(!git_rev().is_empty());
+    }
+
+    #[test]
+    fn rev_falls_back_to_unknown_outside_a_repo() {
+        // `/` is never a git repository: rev-parse fails (or git itself
+        // is absent) and the stamp must degrade to "unknown", never an
+        // error or an empty string
+        assert_eq!(git_rev_in(Some(std::path::Path::new("/"))), "unknown");
     }
 }

@@ -6,8 +6,9 @@
 //! structure) emerges in the simulator / engine from the cross-stage
 //! dependencies `Fwd(m, s)` ⇐ `Fwd(m, s-1)` and `Bwd(m, s)` ⇐ `Bwd(m, s+1)`.
 
-/// Scheduling scheme.
-#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+/// Scheduling scheme. `Hash` because the kind is part of the pool's
+/// compiled-artifact cache key (`temporal/pool.rs`).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
 pub enum ScheduleKind {
     /// All forwards, then all backwards (high activation memory).
     GPipe,

@@ -14,9 +14,11 @@ use std::sync::Arc;
 
 use crate::comm::{Bandwidth, UniformBandwidth};
 use crate::engine::{
-    plan_switch, Engine, EngineStrategy, EngineSwitchReport, ShardLayout, SwitchPlan,
+    plan_switch, CompiledProgram, Engine, EngineStrategy, EngineSwitchReport, ShapeClass,
+    ShardLayout, SwitchPlan,
 };
 use crate::runtime::ManifestConfig;
+use crate::spec::schedule::ScheduleKind;
 use crate::{Error, Result};
 
 /// One pooled strategy: the lowered graph, its precomputed layout, and the
@@ -41,6 +43,15 @@ pub struct PoolEntry {
 /// replaying uniform-bandwidth sender selection.
 type PlanKey = (usize, usize, bool, bool);
 
+/// `(entry, schedule, zero1, micro-batch shape class)` — the compiled-
+/// artifact cache key (DESIGN.md §9). The entry index stands in for
+/// `(strategy, layout)` (the pool instantiates each exactly once); the
+/// rest are the inputs the compile pass freezes. Anything else — notably
+/// an elastic `dead` set — is *not* an input: a compiled tape names only
+/// the strategy's own ranks, so failover recompiles can share cache
+/// entries with healthy engines without pollution.
+type ArtifactKey = (usize, ScheduleKind, bool, ShapeClass);
+
 /// A pool of instantiated strategies with a pairwise switch-plan cache.
 /// Cached plans are `Arc`-shared: a cache hit hands the pooled allocation
 /// out by refcount — no `SwitchPlan`/`FusedBsrPlan`/layout clones on the
@@ -51,6 +62,13 @@ pub struct StrategyPool {
     plans: HashMap<PlanKey, Arc<SwitchPlan>>,
     hits: u64,
     misses: u64,
+    /// Compiled MPMD step programs, cached alongside the switch plans so
+    /// an A↔B oscillation re-dispatches frozen tapes instead of
+    /// recompiling (the engine-local cache dies on every switch; this one
+    /// survives, keyed per entry).
+    artifacts: HashMap<ArtifactKey, Arc<CompiledProgram>>,
+    artifact_hits: u64,
+    artifact_misses: u64,
 }
 
 /// Same parallel topology (pipelines, stages, schedule) up to micro-batch
@@ -77,7 +95,16 @@ impl StrategyPool {
             let layout = Arc::new(ShardLayout::build(&cfg, &strategy)?);
             out.push(PoolEntry { strategy, layout, ctx });
         }
-        Ok(StrategyPool { cfg, entries: out, plans: HashMap::new(), hits: 0, misses: 0 })
+        Ok(StrategyPool {
+            cfg,
+            entries: out,
+            plans: HashMap::new(),
+            hits: 0,
+            misses: 0,
+            artifacts: HashMap::new(),
+            artifact_hits: 0,
+            artifact_misses: 0,
+        })
     }
 
     /// Number of pooled strategies.
@@ -123,6 +150,57 @@ impl StrategyPool {
     /// optimizing for the old link bandwidths.
     pub fn clear_plans(&mut self) {
         self.plans.clear();
+    }
+
+    /// Artifact-cache hits so far (steps/switches that re-dispatched a
+    /// pooled compiled program instead of recompiling).
+    pub fn artifact_hits(&self) -> u64 {
+        self.artifact_hits
+    }
+
+    /// Artifact-cache misses so far (first compile per key).
+    pub fn artifact_misses(&self) -> u64 {
+        self.artifact_misses
+    }
+
+    /// Drop every cached compiled program (counters keep running).
+    pub fn clear_artifacts(&mut self) {
+        self.artifacts.clear();
+    }
+
+    /// The pooled compiled MPMD program for `engine`'s current strategy,
+    /// compiling on first use and installing it as the engine's cached
+    /// artifact. Keyed by `(entry, schedule, zero1, shape class)` — the
+    /// exact inputs the compile pass freezes — so a hit is a refcount
+    /// bump shared with every engine on the same key, and a hot switch
+    /// back onto a previously-compiled entry skips the compile entirely
+    /// even though the switch cleared the engine-local cache.
+    ///
+    /// Elastic recompiles cannot pollute this cache: a `dead` set is not
+    /// a compile input (tapes name only the strategy's own ranks), so
+    /// the program a failed-over engine compiles is byte-identical to a
+    /// healthy engine's.
+    pub fn compiled_for(&mut self, engine: &mut Engine) -> Result<Arc<CompiledProgram>> {
+        let entry = self.index_of(&engine.strategy).ok_or_else(|| {
+            Error::Engine(format!(
+                "compiled_for: engine strategy `{}` is not in the pool",
+                engine.strategy.name
+            ))
+        })?;
+        let key =
+            (entry, engine.strategy.schedule, engine.zero1, ShapeClass::of_engine(engine));
+        if let Some(p) = self.artifacts.get(&key) {
+            let p = Arc::clone(p);
+            // install re-validates schedule/zero1/counts/shape at the
+            // boundary — the key logic and the program must agree
+            engine.install_compiled(Arc::clone(&p))?;
+            self.artifact_hits += 1;
+            return Ok(p);
+        }
+        let p = engine.compiled_program_cached()?;
+        self.artifacts.insert(key, Arc::clone(&p));
+        self.artifact_misses += 1;
+        Ok(p)
     }
 
     /// The cached plan for `from → to`, planning it on first use.
@@ -274,6 +352,22 @@ impl StrategyPool {
     ) -> Result<Engine> {
         let mut eng = self.spawn_engine(runtime, i, seed, lr)?;
         eng.set_exec_mode(crate::engine::ExecMode::Threaded);
+        Ok(eng)
+    }
+
+    /// Spawn an engine on entry `i` replaying compiled tapes
+    /// ([`crate::engine::ExecMode::Compiled`]); pair with
+    /// [`StrategyPool::compiled_for`] after each switch to dispatch
+    /// pooled artifacts instead of recompiling.
+    pub fn spawn_engine_compiled(
+        &self,
+        runtime: crate::runtime::Runtime,
+        i: usize,
+        seed: u64,
+        lr: f32,
+    ) -> Result<Engine> {
+        let mut eng = self.spawn_engine(runtime, i, seed, lr)?;
+        eng.set_exec_mode(crate::engine::ExecMode::Compiled);
         Ok(eng)
     }
 }
@@ -479,6 +573,107 @@ mod tests {
             pool.switch_engine(&mut ev, entry).unwrap();
             pool.switch_engine(&mut th, entry).unwrap();
         }
+    }
+
+    #[test]
+    fn artifact_cache_hits_share_the_pooled_program() {
+        // repeated lookups on one key hand out the SAME CompiledProgram
+        // allocation — the hit is a refcount bump, not a recompile
+        let cfg = native::tiny_config();
+        let mut pool = tiny_pool();
+        let mut eng = pool.spawn_engine(crate::runtime::Runtime::native(cfg), 0, 42, 1e-3).unwrap();
+        let p1 = pool.compiled_for(&mut eng).unwrap();
+        assert_eq!((pool.artifact_hits(), pool.artifact_misses()), (0, 1));
+        let p2 = pool.compiled_for(&mut eng).unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2), "artifact hit must hand out the pooled Arc");
+        assert_eq!((pool.artifact_hits(), pool.artifact_misses()), (1, 1));
+        // the engine's cached artifact IS the pooled one
+        assert!(Arc::ptr_eq(eng.compiled_cached().unwrap(), &p1));
+        // a second engine on the same entry shares it too
+        let mut eng2 =
+            pool.spawn_engine(crate::runtime::Runtime::native(cfg), 0, 43, 1e-3).unwrap();
+        let p3 = pool.compiled_for(&mut eng2).unwrap();
+        assert!(Arc::ptr_eq(&p1, &p3), "same key across engines shares one program");
+        assert_eq!((pool.artifact_hits(), pool.artifact_misses()), (2, 1));
+        // clear forces a recompile
+        pool.clear_artifacts();
+        let p4 = pool.compiled_for(&mut eng).unwrap();
+        assert!(!Arc::ptr_eq(&p1, &p4));
+        assert_eq!((pool.artifact_hits(), pool.artifact_misses()), (2, 2));
+    }
+
+    #[test]
+    fn artifacts_survive_switches_and_key_on_zero1() {
+        // a switch invalidates the ENGINE-local artifact (the tape froze
+        // that strategy's keys/endpoints) but the POOLED one survives for
+        // the switch back; a ZeRO-1 toggle lands on a distinct key.
+        let cfg = native::tiny_config();
+        let mut pool = tiny_pool();
+        let mut eng = pool.spawn_engine(crate::runtime::Runtime::native(cfg), 0, 42, 1e-3).unwrap();
+        let p_a = pool.compiled_for(&mut eng).unwrap();
+
+        pool.switch_engine(&mut eng, 1).unwrap();
+        assert!(eng.compiled_cached().is_none(), "switch clears the engine-local artifact");
+        let p_b = pool.compiled_for(&mut eng).unwrap();
+        assert!(!Arc::ptr_eq(&p_a, &p_b));
+
+        pool.switch_engine(&mut eng, 0).unwrap();
+        assert!(eng.compiled_cached().is_none());
+        let (h0, m0) = (pool.artifact_hits(), pool.artifact_misses());
+        let p_a2 = pool.compiled_for(&mut eng).unwrap();
+        assert!(Arc::ptr_eq(&p_a, &p_a2), "switch back re-dispatches the pooled tape");
+        assert_eq!((pool.artifact_hits(), pool.artifact_misses()), (h0 + 1, m0));
+
+        // ZeRO-1 on: engine cache cleared, pooled lookup is a distinct key
+        eng.set_zero1(true).unwrap();
+        assert!(eng.compiled_cached().is_none(), "zero1 toggle clears the artifact");
+        let p_z = pool.compiled_for(&mut eng).unwrap();
+        assert!(!Arc::ptr_eq(&p_a, &p_z), "zero1 is part of the artifact key");
+        assert!(p_z.zero1 && !p_a.zero1);
+    }
+
+    #[test]
+    fn failover_recompiles_do_not_pollute_artifact_cache() {
+        // a failed-over engine's compiled program is keyed (and built)
+        // without any notion of the dead set — tapes name only the
+        // strategy's own ranks — so a healthy engine landing on the same
+        // entry shares the exact same pooled program and still trains
+        // bit-identically to the reference interpreter.
+        let cfg = native::tiny_config();
+        let mut pool = StrategyPool::new(
+            cfg,
+            vec![
+                (EngineStrategy::uniform("dp3", 3, 1, 1, 8, 1), 4096),
+                (EngineStrategy::uniform("dp2", 2, 1, 1, 8, 1), 8192),
+            ],
+        )
+        .unwrap();
+        let mut eng = pool.spawn_engine(crate::runtime::Runtime::native(cfg), 0, 42, 1e-3).unwrap();
+        let mut corpus = crate::coordinator::SyntheticCorpus::new(3, cfg.vocab);
+        let (b, s) = (cfg.batch, cfg.seq);
+        eng.train_step(&mut |_p, _m| corpus.microbatch(b, s)).unwrap();
+        crate::elastic::pool_failover(&mut pool, &mut eng, 1, &[2]).unwrap();
+        let p_failover = pool.compiled_for(&mut eng).unwrap();
+        assert_eq!((pool.artifact_hits(), pool.artifact_misses()), (0, 1));
+
+        // a fresh healthy engine on the same entry: plain hit, same Arc
+        let mut healthy =
+            pool.spawn_engine_compiled(crate::runtime::Runtime::native(cfg), 1, 7, 1e-3).unwrap();
+        let p_healthy = pool.compiled_for(&mut healthy).unwrap();
+        assert!(
+            Arc::ptr_eq(&p_failover, &p_healthy),
+            "failover recompile and healthy compile share one pooled program"
+        );
+        assert_eq!((pool.artifact_hits(), pool.artifact_misses()), (1, 1));
+
+        // and the shared tape trains the healthy engine bit-identically
+        let mut refr = pool.spawn_engine(crate::runtime::Runtime::native(cfg), 1, 7, 1e-3).unwrap();
+        let mut c1 = crate::coordinator::SyntheticCorpus::new(11, cfg.vocab);
+        let mut c2 = crate::coordinator::SyntheticCorpus::new(11, cfg.vocab);
+        let a = healthy.train_step(&mut |_p, _m| c1.microbatch(b, s)).unwrap();
+        let r = refr.train_step_reference(&mut |_p, _m| c2.microbatch(b, s)).unwrap();
+        assert_eq!(a.loss.to_bits(), r.loss.to_bits(), "compiled loss bits diverge");
+        assert_eq!(a.wire_elems, r.wire_elems);
     }
 
     #[test]

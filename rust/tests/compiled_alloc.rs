@@ -1,0 +1,106 @@
+//! Steady-state allocation contract of the compiled executor (ISSUE 7,
+//! DESIGN.md §9): after warm-up, the **dispatch layer** — the tape walk
+//! with its ready checks, clock propagation, and delivery-lane folding —
+//! performs **zero** heap allocation; and a full compiled step (dispatch
+//! + kernels) allocates strictly less than the event-driven interpreter
+//! on the same data, because every key, endpoint, and readiness
+//! structure is frozen at compile time. Kernel outputs and tensor
+//! transfers still allocate by design.
+//!
+//! This file holds exactly ONE test: the counting allocator is global to
+//! the test binary, so a second concurrently-running test would pollute
+//! the counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use hetu::engine::{Engine, EngineStrategy, ExecMode, MicroBatch};
+use hetu::runtime::{native, Runtime};
+
+/// `System`, with every allocation path counted.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+#[test]
+fn warm_compiled_dispatch_allocates_nothing() {
+    let cfg = native::tiny_config();
+    let s = EngineStrategy::uniform("dp2tp2", 2, 2, 1, 8, 2);
+    let mk_batches = |seed: u64| -> Vec<Vec<MicroBatch>> {
+        let mut corpus = hetu::coordinator::SyntheticCorpus::new(seed, cfg.vocab);
+        s.pipelines
+            .iter()
+            .map(|p| {
+                (0..p.num_microbatches).map(|_| corpus.microbatch(cfg.batch, cfg.seq)).collect()
+            })
+            .collect()
+    };
+
+    let mut cmp =
+        Engine::with_runtime(Runtime::native(cfg), s.clone(), 42, 1e-3).unwrap();
+    cmp.set_exec_mode(ExecMode::Compiled);
+    let mut ev = Engine::with_runtime(Runtime::native(cfg), s.clone(), 42, 1e-3).unwrap();
+
+    // warm-up: compile the tape, size the scratch/arena, create moments
+    let pool = mk_batches(7);
+    for eng in [&mut cmp, &mut ev] {
+        for _ in 0..2 {
+            eng.train_step(&mut |p, m| pool[p][m].clone()).unwrap();
+        }
+    }
+
+    // 1. the dispatch layer in isolation: a warm null-exec tape walk —
+    //    full ready checks and clock propagation, no kernels — performs
+    //    exactly zero heap allocations
+    let prog = Arc::clone(cmp.compiled_cached().expect("tape cached after warm steps"));
+    cmp.replay_compiled_tape(&prog).unwrap(); // warm the walk scratch
+    let a0 = allocs();
+    let makespan = cmp.replay_compiled_tape(&prog).unwrap();
+    let walk_allocs = allocs() - a0;
+    assert_eq!(walk_allocs, 0, "warm dispatch walk allocated {walk_allocs} times");
+    assert_eq!(makespan, 0.0, "null executor has zero-duration ops");
+
+    // 2. a full compiled step allocates strictly less than the
+    //    event-driven interpreter on the same data: kernels and tensor
+    //    movement are shared, but the compiled path formats no keys and
+    //    builds no per-step readiness structures
+    let a1 = allocs();
+    cmp.train_step(&mut |p, m| pool[p][m].clone()).unwrap();
+    let compiled_step = allocs() - a1;
+    let a2 = allocs();
+    ev.train_step(&mut |p, m| pool[p][m].clone()).unwrap();
+    let event_step = allocs() - a2;
+    assert!(
+        compiled_step < event_step,
+        "compiled step allocated {compiled_step}, event-driven {event_step}"
+    );
+}

@@ -1,0 +1,218 @@
+//! Bit-identity of the compiled MPMD executor (ISSUE 7, DESIGN.md §9).
+//!
+//! The oracle hierarchy: the global interpreter
+//! (`Engine::train_step_reference`) anchors the numerics, the
+//! event-driven executor is bit-identical to it (PR 5), and the compiled
+//! tape replay must match both — same losses (`f32::to_bits`), same
+//! measured wire volume, same collective counts — on the lowered
+//! Appendix-A hetero encodings (C1/C2/C6) under GPipe and 1F1B, with
+//! ZeRO-1, with ragged micro-batches, and across hot switches.
+
+use hetu::engine::{Engine, EngineStrategy, ExecMode, MicroBatch, StepStats, WindowShape};
+use hetu::runtime::{native, Runtime};
+use hetu::spec::schedule::ScheduleKind;
+use hetu::strategy::{tables, LowerOptions};
+
+fn native_engine(strategy: EngineStrategy, seed: u64, lr: f32) -> Engine {
+    Engine::with_runtime(Runtime::native(native::tiny_config()), strategy, seed, lr).unwrap()
+}
+
+/// The lowered Appendix-A hetero encodings the acceptance names.
+fn lowered_encodings() -> Vec<EngineStrategy> {
+    let cfg = native::tiny_config();
+    let lopts = LowerOptions { total_microbatches: 7, tp_degrees: vec![1, 2, 4] };
+    vec![
+        hetu::strategy::lower(&tables::hetu_c1_32h20(), &cfg, &lopts).unwrap(),
+        hetu::strategy::lower(&tables::hetu_c2_31h20(), &cfg, &lopts).unwrap(),
+        hetu::strategy::lower(&tables::hetu_c6(), &cfg, &lopts).unwrap(),
+    ]
+}
+
+/// A fixed pipeline-major pool of micro-batches so every execution path
+/// sees exactly the same data.
+struct Pool {
+    mbs: Vec<Vec<MicroBatch>>,
+}
+
+impl Pool {
+    fn for_strategy(s: &EngineStrategy, seed: u64) -> Pool {
+        let cfg = native::tiny_config();
+        let mut corpus = hetu::coordinator::SyntheticCorpus::new(seed, cfg.vocab);
+        let mbs = s
+            .pipelines
+            .iter()
+            .map(|p| {
+                (0..p.num_microbatches).map(|_| corpus.microbatch(cfg.batch, cfg.seq)).collect()
+            })
+            .collect();
+        Pool { mbs }
+    }
+
+    fn get(&self, pipe: usize, mb: usize) -> MicroBatch {
+        self.mbs[pipe][mb].clone()
+    }
+}
+
+fn assert_stats_match(a: &StepStats, b: &StepStats, what: &str) {
+    assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{what}: loss bits diverge");
+    assert_eq!(a.tokens, b.tokens, "{what}: tokens");
+    assert_eq!(a.wire_elems, b.wire_elems, "{what}: wire accounting");
+    assert_eq!(a.comm_ops, b.comm_ops, "{what}: comm-op accounting");
+}
+
+#[test]
+fn compiled_losses_bit_identical_on_lowered_encodings() {
+    // The tentpole acceptance: compiled dispatch vs the reference
+    // interpreter vs the event-driven executor on lowered C1/C2/C6 under
+    // both schedules — every step, every counter, bit-identical.
+    for base in lowered_encodings() {
+        let steps = if base.num_devices() > 8 { 1 } else { 2 };
+        for kind in [ScheduleKind::GPipe, ScheduleKind::OneFOneB] {
+            let strategy = base.clone().with_schedule(kind);
+            let name = strategy.name.clone();
+            let pool = Pool::for_strategy(&strategy, 0xC0DE);
+            let mut compiled = native_engine(strategy.clone(), 42, 1e-3);
+            compiled.set_exec_mode(ExecMode::Compiled);
+            let mut event = native_engine(strategy.clone(), 42, 1e-3);
+            let mut interp = native_engine(strategy, 42, 1e-3);
+            for step in 0..steps {
+                let a = compiled.train_step(&mut |p, m| pool.get(p, m)).unwrap();
+                let b = event.train_step(&mut |p, m| pool.get(p, m)).unwrap();
+                let c = interp.train_step_reference(&mut |p, m| pool.get(p, m)).unwrap();
+                assert_stats_match(&a, &b, &format!("{name} ({kind:?}) step {step} vs event"));
+                assert_stats_match(&a, &c, &format!("{name} ({kind:?}) step {step} vs interp"));
+            }
+            assert!(compiled.compiled_cached().is_some(), "{name}: tape cached across steps");
+        }
+    }
+}
+
+#[test]
+fn compiled_zero1_bit_identical() {
+    for s in [
+        EngineStrategy::uniform("dp2tp2", 2, 2, 1, 8, 2),
+        EngineStrategy::uniform("dp2pp2", 2, 1, 2, 8, 2).with_schedule(ScheduleKind::OneFOneB),
+    ] {
+        let name = s.name.clone();
+        let pool = Pool::for_strategy(&s, 0x21);
+        let mut compiled = native_engine(s.clone(), 42, 1e-3);
+        compiled.set_zero1(true).unwrap();
+        compiled.set_exec_mode(ExecMode::Compiled);
+        let mut interp = native_engine(s, 42, 1e-3);
+        interp.set_zero1(true).unwrap();
+        for step in 0..3 {
+            let a = compiled.train_step(&mut |p, m| pool.get(p, m)).unwrap();
+            let b = interp.train_step_reference(&mut |p, m| pool.get(p, m)).unwrap();
+            assert_stats_match(&a, &b, &format!("{name} zero1 step {step}"));
+        }
+    }
+}
+
+#[test]
+fn compiled_ragged_microbatches_bit_identical() {
+    // Ragged per-window shapes flow into the tape's shape class; the
+    // compiled replay must land on the reference bits, and a shape change
+    // must recompile (new class) rather than misreplay.
+    let cfg = native::tiny_config();
+    let s = EngineStrategy::uniform("dp2", 2, 1, 1, 8, 2);
+    let windows = vec![
+        vec![
+            WindowShape { rows: vec![2, 2], seq_len: 10 },
+            WindowShape { rows: vec![4], seq_len: 6 },
+        ],
+        vec![
+            WindowShape { rows: vec![3, 1], seq_len: 7 },
+            WindowShape { rows: vec![2], seq_len: 16 },
+        ],
+    ];
+    let mut compiled = native_engine(s.clone(), 42, 1e-3);
+    compiled.set_exec_mode(ExecMode::Compiled);
+    compiled.set_microbatches(&windows).unwrap();
+    let mut interp = native_engine(s, 42, 1e-3);
+    interp.set_microbatches(&windows).unwrap();
+    for step in 0..2 {
+        let mut c1 = hetu::coordinator::SyntheticCorpus::new(60 + step, cfg.vocab);
+        let mut c2 = hetu::coordinator::SyntheticCorpus::new(60 + step, cfg.vocab);
+        let a = compiled.train_step(&mut |p, m| c1.window_for(&windows[p][m])).unwrap();
+        let b = interp.train_step_reference(&mut |p, m| c2.window_for(&windows[p][m])).unwrap();
+        assert_stats_match(&a, &b, &format!("ragged step {step}"));
+    }
+    let first_tape = std::sync::Arc::clone(compiled.compiled_cached().unwrap());
+
+    // different window shapes → different shape class → fresh tape
+    let windows2 = vec![
+        vec![
+            WindowShape { rows: vec![4], seq_len: 5 },
+            WindowShape { rows: vec![1, 1], seq_len: 12 },
+        ],
+        vec![
+            WindowShape { rows: vec![2], seq_len: 9 },
+            WindowShape { rows: vec![2, 2], seq_len: 4 },
+        ],
+    ];
+    compiled.set_microbatches(&windows2).unwrap();
+    interp.set_microbatches(&windows2).unwrap();
+    let mut c1 = hetu::coordinator::SyntheticCorpus::new(99, cfg.vocab);
+    let mut c2 = hetu::coordinator::SyntheticCorpus::new(99, cfg.vocab);
+    let a = compiled.train_step(&mut |p, m| c1.window_for(&windows2[p][m])).unwrap();
+    let b = interp.train_step_reference(&mut |p, m| c2.window_for(&windows2[p][m])).unwrap();
+    assert_stats_match(&a, &b, "ragged reshape step");
+    assert!(
+        !std::sync::Arc::ptr_eq(&first_tape, compiled.compiled_cached().unwrap()),
+        "a new shape class must compile a new tape"
+    );
+}
+
+#[test]
+fn compiled_survives_hot_switch_cycle_bit_identically() {
+    // A compiled engine hot-switches through the pool's cached plans and
+    // lands on the same bits as its event-driven twin every step; after
+    // each switch the pooled artifact is re-dispatched (second lap of the
+    // cadence is all cache hits).
+    use hetu::temporal::StrategyPool;
+    let cfg = native::tiny_config();
+    let mk_pool = || {
+        StrategyPool::new(
+            cfg,
+            vec![
+                (EngineStrategy::uniform("dp2", 2, 1, 1, 8, 1), 4096),
+                (EngineStrategy::uniform("tp2", 1, 2, 1, 8, 2), 32768),
+            ],
+        )
+        .unwrap()
+    };
+    let mut pool = mk_pool();
+    let mut cmp = pool.spawn_engine_compiled(Runtime::native(cfg), 0, 42, 1e-3).unwrap();
+    let mut ev = pool.spawn_engine(Runtime::native(cfg), 0, 42, 1e-3).unwrap();
+    let (b, s) = (cfg.batch, cfg.seq);
+    let mut step = |eng: &mut Engine, seed: u64| {
+        let mut corpus = hetu::coordinator::SyntheticCorpus::new(seed, cfg.vocab);
+        eng.train_step(&mut |_p, _m| corpus.microbatch(b, s)).unwrap()
+    };
+    for (salt, entry) in [(3u64, 1usize), (4, 0), (5, 1), (6, 0)] {
+        pool.compiled_for(&mut cmp).unwrap();
+        let a = step(&mut cmp, salt);
+        let r = step(&mut ev, salt);
+        assert_stats_match(&a, &r, &format!("switch cadence salt {salt}"));
+        pool.switch_engine(&mut cmp, entry).unwrap();
+        pool.switch_engine(&mut ev, entry).unwrap();
+    }
+    // 4 lookups over a 2-entry A↔B cadence: 2 compiles, then 2 hits
+    assert_eq!((pool.artifact_hits(), pool.artifact_misses()), (2, 2));
+}
+
+#[test]
+fn compiled_threaded_matches_the_oracles() {
+    // The threaded executor replaying frozen tapes (CompiledThreaded)
+    // stays inside the same bit-identity contract.
+    let s = EngineStrategy::uniform("tp2pp2", 1, 2, 2, 8, 3).with_schedule(ScheduleKind::OneFOneB);
+    let pool = Pool::for_strategy(&s, 0x7E);
+    let mut thr = native_engine(s.clone(), 42, 1e-3);
+    thr.set_exec_mode(ExecMode::CompiledThreaded);
+    let mut interp = native_engine(s, 42, 1e-3);
+    for step in 0..2 {
+        let a = thr.train_step(&mut |p, m| pool.get(p, m)).unwrap();
+        let b = interp.train_step_reference(&mut |p, m| pool.get(p, m)).unwrap();
+        assert_stats_match(&a, &b, &format!("compiled-threaded step {step}"));
+    }
+}

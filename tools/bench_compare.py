@@ -5,7 +5,7 @@ The bench harnesses (`cargo bench --bench hotpath_micro`, `temporal_cadence`,
 `fig15_mixed_length`) write machine-readable reports next to Cargo.toml.
 This script diffs them against `bench/baseline/BENCH_*.json` and fails on a
 >20% regression in the guarded hot-path rows (specialize cost, cached
-hot-switch, ragged step time).
+hot-switch, ragged step time, compiled dispatch, tape-compile cost).
 
 Two escape hatches keep the gate honest rather than noisy:
 
@@ -15,12 +15,15 @@ Two escape hatches keep the gate honest rather than noisy:
   (the CI ``--test`` mode) — single-sample wall times on shared runners
   are noise, so ratio checks are skipped but structure is still enforced.
 
-To re-seed after an intentional perf change: copy the emitted files over
-bench/baseline/ (dropping the ``smoke`` flag, adding real numbers from a
-full local run) and commit them.
+To re-seed after an intentional perf change, run the full bench harnesses
+locally and then ``tools/bench_compare.py --update-baseline``: it copies the
+emitted reports over bench/baseline/ verbatim. Commit the result. (A smoke
+report is refused as a baseline — its single-iteration numbers would make
+every later full run look like a regression or a miracle.)
 """
 
 import json
+import shutil
 import sys
 from pathlib import Path
 
@@ -34,6 +37,8 @@ GUARDED = {
         "specialize lowered-C2 -> per-rank plans",
         "engine hot-switch A<->B (cached, batched)",
         "engine train_step dp2 ragged 12x[2,2]",
+        "step wall lowered-C2 compiled dispatch",
+        "compile lowered-C2 -> rank tape",
     ],
     "temporal": [],
     "fig15": [],
@@ -51,7 +56,44 @@ def rows_by_name(report):
     return {r["name"]: r for r in report.get("rows", [])}
 
 
+def update_baseline() -> int:
+    """Rewrite bench/baseline/ from the emitted reports."""
+    baseline_dir = ROOT / "bench" / "baseline"
+    baseline_dir.mkdir(parents=True, exist_ok=True)
+    failures = []
+    for bench in BENCHES:
+        emitted_path = ROOT / f"BENCH_{bench}.json"
+        emitted = load(emitted_path)
+        if emitted is None:
+            failures.append(f"{emitted_path} missing — run the bench harnesses first")
+            continue
+        if emitted.get("smoke"):
+            failures.append(
+                f"{bench}: emitted report is a --test smoke run — "
+                "refusing to seed the baseline with single-iteration timings"
+            )
+            continue
+        missing = [n for n in GUARDED[bench] if n not in rows_by_name(emitted)]
+        if missing:
+            failures.append(f"{bench}: emitted report lacks guarded rows {missing!r}")
+            continue
+        dest = baseline_dir / f"BENCH_{bench}.json"
+        shutil.copyfile(emitted_path, dest)
+        print(f"{bench}: baseline updated from {emitted_path} "
+              f"(rev {emitted.get('rev')}, {len(emitted.get('rows', []))} rows)")
+    if failures:
+        print("\nbench-compare --update-baseline FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("bench-compare: baseline rewritten — review and commit bench/baseline/")
+    return 0
+
+
 def main() -> int:
+    if "--update-baseline" in sys.argv[1:]:
+        return update_baseline()
+
     failures = []
     for bench in BENCHES:
         emitted_path = ROOT / f"BENCH_{bench}.json"
@@ -84,8 +126,17 @@ def main() -> int:
         for name in GUARDED[bench]:
             got = rows.get(name)
             want = base_rows.get(name)
-            if got is None or want is None:
-                continue  # missing-emitted already reported; missing-baseline → not comparable
+            if got is None:
+                continue  # missing-emitted already reported above
+            if want is None:
+                # a guarded row the checkpoint predates: a clear verdict,
+                # not a KeyError and not a silent pass — re-seed via
+                # --update-baseline after a full local run
+                failures.append(
+                    f"{bench}: baseline row missing: {name!r} — refresh "
+                    "bench/baseline/ with tools/bench_compare.py --update-baseline"
+                )
+                continue
             g, w = got.get("mean_s"), want.get("mean_s")
             if not isinstance(g, (int, float)) or not isinstance(w, (int, float)) or w <= 0:
                 continue
