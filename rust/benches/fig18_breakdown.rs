@@ -1,7 +1,69 @@
-//! Bench: regenerate Fig 18 — left (per-rank time breakdown under C1/C2)
-//! and right (C1→C2 transition overhead with the three BSR planners).
+//! Bench: regenerate Fig 18.
+//!
+//! The left panel is rebuilt on the §10 span recorder: per-rank
+//! compute/comm/bubble seconds are *measured* by tracing one engine step
+//! on the lowered-C2 hetero encoding (event-driven executor, so the clock
+//! is the modeled replay — labelled as such), cross-checked so the mean
+//! components sum to the step makespan within 5%. The analytic simulator
+//! table ([`hetu::figures::fig18_left`]) prints alongside as the modeled
+//! reference, and is the fallback when tracing yields no spans. The right
+//! panel (C1→C2 transition overhead) is unchanged.
+
+use hetu::coordinator::SyntheticCorpus;
+use hetu::engine::Engine;
+use hetu::obs::per_rank;
+use hetu::runtime::{native, Runtime};
+use hetu::strategy::{tables, LowerOptions};
 
 fn main() {
+    let tiny = native::tiny_config();
+    let lopts = LowerOptions { total_microbatches: 8, tp_degrees: vec![1, 2, 4] };
+    let c2e = hetu::strategy::lower(&tables::hetu_c2_31h20(), &tiny, &lopts).expect("lower C2");
+    let mut eng = Engine::with_runtime(Runtime::native(tiny), c2e, 42, 1e-3).expect("engine");
+    eng.set_tracing(true);
+    let mut corpus = SyntheticCorpus::new(17, tiny.vocab);
+    let stats = eng
+        .train_step(&mut |_p, _m| corpus.microbatch(tiny.batch, tiny.seq))
+        .expect("traced step");
+    let spans = eng.last_step_spans().to_vec();
+    if spans.is_empty() {
+        println!("(tracing yielded no spans — modeled table only)\n");
+    } else {
+        let b = stats.breakdown.expect("traced step carries a breakdown");
+        let sum = b.components_sum_s();
+        assert!(
+            (sum - stats.makespan_s).abs() <= 0.05 * stats.makespan_s.max(1e-12),
+            "breakdown components ({sum}s) must sum to the makespan ({}s) within 5%",
+            stats.makespan_s
+        );
+        println!("Fig 18 (left, measured) — span breakdown by rank, lowered C2 [modeled clock]");
+        println!(
+            "| {:>4} | {:>11} | {:>11} | {:>11} | {:>11} | {:>11} |",
+            "rank", "compute", "comm", "optim", "bubble", "step"
+        );
+        for r in per_rank(&spans, stats.makespan_s) {
+            println!(
+                "| {:>4} | {:>9.3}ms | {:>9.3}ms | {:>9.3}ms | {:>9.3}ms | {:>9.3}ms |",
+                r.rank,
+                r.compute_s * 1e3,
+                r.comm_s * 1e3,
+                r.optim_s * 1e3,
+                r.bubble_s * 1e3,
+                stats.makespan_s * 1e3
+            );
+        }
+        println!(
+            "step mean: compute {:.3}ms + comm {:.3}ms + optim {:.3}ms + bubble {:.3}ms = \
+             {:.3}ms (makespan {:.3}ms, critical path {:.3}ms)\n",
+            b.compute_s * 1e3,
+            b.comm_s * 1e3,
+            b.optim_s * 1e3,
+            b.bubble_s * 1e3,
+            sum * 1e3,
+            stats.makespan_s * 1e3,
+            b.critical_path_s * 1e3
+        );
+    }
     let left = hetu::figures::fig18_left().expect("fig18 left");
     println!("{}", left.markdown());
     let right = hetu::figures::fig18_right().expect("fig18 right");

@@ -367,6 +367,36 @@ fn main() {
         std::hint::black_box(c2_cmp.compiled_program_cached().unwrap().num_segs());
     });
 
+    // ---- §10 observability. Tracing on: the compiled hot loop stores one
+    // span per (op, participant) into the preallocated ring — this row is
+    // the traced warm step, and the non-smoke assert bounds its cost
+    // against the untraced compiled row above.
+    c2_cmp.set_tracing(true);
+    let w_tr = c2_cmp.train_step(&mut |p, m| mbs[p][m].clone()).unwrap();
+    assert_eq!(
+        w_ref.loss.to_bits(),
+        w_tr.loss.to_bits(),
+        "tracing must not perturb the numerics"
+    );
+    assert!(w_tr.breakdown.is_some(), "traced step must carry a span breakdown");
+    report(rep, "trace_overhead", "wall", it(10), || {
+        std::hint::black_box(c2_cmp.train_step(&mut |p, m| mbs[p][m].clone()).unwrap().loss);
+    });
+    let tr_best = rep.rows[rep.rows.len() - 1].best_s;
+    println!(
+        "    traced vs untraced compiled wall (best): {:.3}ms vs {:.3}ms ({:+.2}%)",
+        tr_best * 1e3,
+        c2_cmp_best * 1e3,
+        (tr_best / c2_cmp_best.max(1e-12) - 1.0) * 1e2
+    );
+    if !smoke {
+        assert!(
+            tr_best <= c2_cmp_best * 1.05,
+            "traced compiled step ({tr_best}s) must stay within 5% of untraced ({c2_cmp_best}s)"
+        );
+    }
+    c2_cmp.set_tracing(false);
+
     // the interleaved post-switch step: a cached hot switch queues its
     // per-sender delivery batches, and the next step's executor rides
     // them on wire lanes concurrent with compute (§6.2 measured

@@ -13,6 +13,7 @@
 use hetu::coordinator::SyntheticCorpus;
 use hetu::costmodel::{CostModel, ModelCfg};
 use hetu::data::StepBatch;
+use hetu::engine::ExecMode;
 use hetu::metrics::benchjson::BenchReport;
 use hetu::runtime::{native, Runtime};
 use hetu::temporal::{default_pool_entries, DispatchPolicy, Dispatcher, StrategyPool};
@@ -167,6 +168,88 @@ fn main() {
         cpool.artifact_misses()
     );
     bj.row("compiled cadence amortized step (cached)", "wall", amortized, amortized);
+
+    // ---- §10 measured per-step breakdowns: the same cadence on the
+    // threaded executor with tracing on. Spans carry real wall timestamps
+    // from the step epoch, so the compute/comm/bubble/switch columns are
+    // measured wall seconds and the rows are honestly labelled `wall`.
+    let mut tpool = StrategyPool::new(tiny, default_pool_entries(&tiny).unwrap()).unwrap();
+    let mut teng = tpool.spawn_engine(Runtime::native(tiny), 0, 7, 1e-3).unwrap();
+    teng.set_exec_mode(ExecMode::Threaded);
+    teng.set_tracing(true);
+    let mut tcorpus = SyntheticCorpus::new(3, tiny.vocab);
+    let trep =
+        disp.run_stream(&mut teng, &mut tpool, &cadence, &mut tcorpus).expect("traced cadence");
+    for st in &trep.steps {
+        let bd = st.breakdown.expect("traced step must carry a breakdown");
+        let sum = bd.components_sum_s();
+        assert!(
+            (sum - st.makespan_s).abs() <= 0.05 * st.makespan_s.max(1e-12),
+            "step {}: breakdown components ({sum}s) must sum to the wall makespan ({}s) \
+             within 5%",
+            st.step,
+            st.makespan_s
+        );
+        bj.row_cols(
+            &format!("cadence step {} breakdown", st.step),
+            "wall",
+            st.makespan_s,
+            st.makespan_s,
+            &[
+                ("compute_s", bd.compute_s),
+                ("comm_s", bd.comm_s),
+                ("optim_s", bd.optim_s),
+                ("bubble_s", bd.bubble_s),
+                ("switch_s", bd.switch_s),
+            ],
+        );
+        println!(
+            "cadence step {} [wall]: compute {:.3} ms, comm {:.3} ms, optim {:.3} ms, \
+             bubble {:.3} ms, switch {:.3} ms (makespan {:.3} ms)",
+            st.step,
+            bd.compute_s * 1e3,
+            bd.comm_s * 1e3,
+            bd.optim_s * 1e3,
+            bd.bubble_s * 1e3,
+            bd.switch_s * 1e3,
+            st.makespan_s * 1e3
+        );
+    }
+
+    // ---- §10 span-calibrated dispatch: fit a measured (s/flop, s/byte)
+    // profile from one traced step, rerun the cadence under the
+    // calibrated Hetu-B scorer, and require it not to lose to the
+    // analytic scorer on the same (modeled-clock) stream.
+    let mut kpool = StrategyPool::new(tiny, default_pool_entries(&tiny).unwrap()).unwrap();
+    let mut keng = kpool.spawn_engine(Runtime::native(tiny), 0, 7, 1e-3).unwrap();
+    let mut kcorpus = SyntheticCorpus::new(3, tiny.vocab);
+    let mut kdisp = Dispatcher::new(CostModel::new(ModelCfg::llama_32b()), DispatchPolicy::HetuB);
+    kdisp.scale_cells_to_pool(&kpool, tiny.seq);
+    let prof = kdisp
+        .calibrate_from_step(&mut keng, &kpool, &cadence[0], &mut kcorpus)
+        .expect("calibrate_from_step");
+    let krep = kdisp
+        .run_stream(&mut keng, &mut kpool, &cadence, &mut kcorpus)
+        .expect("calibrated cadence");
+    let (analytic_amt, calibrated_amt) = (rep.amortized_step_s(), krep.amortized_step_s());
+    bj.row("cadence amortized step (analytic Hetu-B)", "modeled", analytic_amt, analytic_amt);
+    bj.row("cadence amortized step (calibrated Hetu-B)", "modeled", calibrated_amt, calibrated_amt);
+    println!(
+        "span-calibrated dispatch: s/flop {:.3e}, s/byte {:.3e} -> amortized {:.3} ms vs \
+         analytic {:.3} ms",
+        prof.s_per_flop,
+        prof.s_per_byte,
+        calibrated_amt * 1e3,
+        analytic_amt * 1e3
+    );
+    if !smoke {
+        assert!(
+            calibrated_amt <= analytic_amt * 1.05,
+            "calibrated Hetu-B amortized step ({calibrated_amt}s) must reproduce or improve \
+             the analytic scorer ({analytic_amt}s)"
+        );
+    }
+
     println!("\n({steps} steps/cell, generated in {:.1}s)", t0.elapsed().as_secs_f64());
     let path = bj.write().expect("write BENCH_temporal.json");
     println!("wrote {}", path.display());

@@ -357,6 +357,18 @@ pub struct CompiledProgram {
     pub shape: ShapeClass,
     /// Whether the tape carries the ZeRO-1 slice exchange.
     pub zero1: bool,
+    /// Frozen span identities, index-aligned with `ops` (DESIGN.md §10):
+    /// the traced hot loop reads its [`SpanKind`](crate::obs::trace::SpanKind)
+    /// here instead of matching on the op — fixed-size ring entries, no
+    /// plan in sight.
+    pub spans: Vec<crate::obs::trace::SpanKind>,
+    /// Plan-rank position → mesh rank id (what a span's `rank` field
+    /// carries; positions are what [`Seg::parts`] indexes).
+    pub part_rank_ids: Vec<u32>,
+    /// Exact spans one traced step emits (Σ over segments of
+    /// ops × participants) — the recorder's ring capacity, frozen at
+    /// compile time so the warm traced step never grows the ring.
+    pub trace_slots: usize,
 }
 
 impl CompiledProgram {
@@ -588,6 +600,17 @@ pub fn compile_program(
         .map(|(pi, ord)| ord.iter().map(|&mb| (slot_base[pi] + mb) as u32).collect())
         .collect();
 
+    // freeze the span identities: kind per op, mesh rank per plan
+    // position, and the exact per-step span count (fused ops share their
+    // segment's participant set, so ops × parts is exact per segment)
+    let spans: Vec<crate::obs::trace::SpanKind> =
+        plan.tasks.iter().map(|t| crate::obs::trace::SpanKind::of_task(&t.kind)).collect();
+    let part_rank_ids: Vec<u32> = plan.ranks.iter().map(|rp| rp.rank as u32).collect();
+    let trace_slots: usize = segs
+        .iter()
+        .map(|s| (s.ops.1 - s.ops.0) as usize * (s.parts.1 - s.parts.0) as usize)
+        .sum();
+
     Ok(CompiledProgram {
         ops,
         segs,
@@ -600,6 +623,9 @@ pub fn compile_program(
         num_microbatches: plan.num_microbatches.clone(),
         shape,
         zero1,
+        spans,
+        part_rank_ids,
+        trace_slots,
     })
 }
 
@@ -656,6 +682,7 @@ pub(crate) fn walk(
     prog: &CompiledProgram,
     scratch: &mut ReplayScratch,
     deliveries: &[(usize, f64)],
+    rec: &mut crate::obs::trace::SpanRecorder,
     mut exec: impl FnMut(&CompiledOp) -> Result<f64>,
 ) -> Result<WalkOutcome> {
     scratch.reset(prog.segs.len(), prog.nranks);
@@ -669,8 +696,19 @@ pub(crate) fn walk(
             ready = ready.max(scratch.finish[d as usize]);
         }
         let mut dur = 0f64;
-        for op in &prog.ops[seg.ops.0 as usize..seg.ops.1 as usize] {
-            dur += exec(op)?;
+        for oi in seg.ops.0..seg.ops.1 {
+            let d = exec(&prog.ops[oi as usize])?;
+            // frozen-identity spans: kind and rank come from compile-time
+            // tables, timestamps from the replayed clock — fixed-size ring
+            // stores, no allocation (`prog.trace_slots` sized the ring)
+            if rec.is_active() {
+                let sk = prog.spans[oi as usize];
+                let (t0, t1) = (ready + dur, ready + dur + d);
+                for &p in parts {
+                    rec.record(oi, sk, prog.part_rank_ids[p as usize], t0, t1);
+                }
+            }
+            dur += d;
         }
         let end = ready + dur;
         scratch.finish[si] = end;
@@ -779,7 +817,10 @@ impl Engine {
     /// heap allocation.
     pub fn replay_compiled_tape(&mut self, prog: &CompiledProgram) -> Result<f64> {
         let mut replay = std::mem::take(&mut self.replay);
-        let out = walk(prog, &mut replay, &[], |_| Ok(0.0)).map(|w| w.makespan_s);
+        let mut rec = std::mem::take(&mut self.recorder);
+        rec.begin_step(prog.trace_slots, self.trace_on);
+        let out = walk(prog, &mut replay, &[], &mut rec, |_| Ok(0.0)).map(|w| w.makespan_s);
+        self.recorder = rec;
         self.replay = replay;
         out
     }
@@ -800,8 +841,10 @@ impl Engine {
         let prog = Arc::clone(prog);
         let mut replay = std::mem::take(&mut self.replay);
         let mut arena = std::mem::take(&mut self.arena);
+        let mut rec = std::mem::take(&mut self.recorder);
+        rec.begin_step(prog.trace_slots, self.trace_on);
         arena.reset(prog.head_slots);
-        let walked = walk(&prog, &mut replay, deliveries, |op| {
+        let walked = walk(&prog, &mut replay, deliveries, &mut rec, |op| {
             self.exec_compiled_op(op, batches, &mut arena)
         });
         let out = walked.map(|w| {
@@ -827,6 +870,7 @@ impl Engine {
                 delivery_lane_s: w.delivery_lane_s,
             }
         });
+        self.recorder = rec;
         self.replay = replay;
         self.arena = arena;
         out

@@ -251,6 +251,10 @@ impl Engine {
             }
             ExecMode::EventDriven => {}
         }
+        // arm the span ring: one span per (task, participant) — exact, so
+        // a traced warm step writes into preallocated slots only
+        let span_cap: usize = plan.tasks.iter().map(|t| t.ranks.len()).sum();
+        self.recorder.begin_step(span_cap, self.trace_on);
         let n = plan.tasks.len();
         let nranks = plan.ranks.len();
         let rank_pos = |r: usize| {
@@ -356,6 +360,14 @@ impl Engine {
                     };
 
                     let end = ready + dur;
+                    // replayed-clock spans: one per participant rank, on
+                    // the same epoch as the modeled makespan
+                    if self.recorder.is_active() {
+                        let sk = crate::obs::trace::SpanKind::of_task(&task.kind);
+                        for &r in &task.ranks {
+                            self.recorder.record(ti as u32, sk, r as u32, ready, end);
+                        }
+                    }
                     finish[ti] = end;
                     done[ti] = true;
                     executed += 1;

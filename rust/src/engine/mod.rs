@@ -265,12 +265,19 @@ pub struct StepStats {
     pub wire_elems: u64,
     /// Communication ops issued this step.
     pub comm_ops: u64,
-    /// Estimated parallel step seconds: per-task wall times measured while
+    /// Parallel step seconds. **What this measures depends on
+    /// [`ExecMode`]** (DESIGN.md §8): under the default
+    /// [`ExecMode::EventDriven`] (and [`ExecMode::Compiled`]) it is a
+    /// *replayed estimate* — per-task wall times measured while
     /// interpreting the schedule, replayed through the pipeline dependency
-    /// structure (TP members counted concurrent, pipelines concurrent),
-    /// plus the per-device share of gradient sync + optimizer time. This is
-    /// the engine-side quantity cross-validated against
-    /// [`crate::sim`]'s step ranking.
+    /// structure (TP members concurrent, pipelines concurrent), the
+    /// engine-side quantity cross-validated against [`crate::sim`]'s step
+    /// ranking. Under [`ExecMode::Threaded`] (and
+    /// [`ExecMode::CompiledThreaded`]) it is **measured wall clock**: the
+    /// elapsed time of the per-rank OS threads from step start to join.
+    /// Never mix the two in one comparison; benches label them `modeled`
+    /// vs `wall`. When tracing is on, [`StepStats::breakdown`] attributes
+    /// this same quantity from recorded spans.
     pub makespan_s: f64,
     /// Real (unmasked) tokens processed across all micro-batches.
     pub tokens: u64,
@@ -289,6 +296,11 @@ pub struct StepStats {
     /// Longest per-sender wire lane among the deliveries this step
     /// interleaved (0 when none were pending).
     pub switch_delivery_s: f64,
+    /// Measured span-derived attribution of `makespan_s`
+    /// (compute/comm/optimizer/bubble/switch seconds; DESIGN.md §10).
+    /// `Some` only when [`Engine::set_tracing`] is on — the reference
+    /// interpreter and untraced steps leave it `None`.
+    pub breakdown: Option<crate::obs::breakdown::StepBreakdown>,
 }
 
 /// Which executor [`Engine::train_step`] drives the specialized plan
@@ -376,6 +388,13 @@ pub struct Engine {
     /// step, injected into the next step's timelines as wire-lane tasks
     /// (§6.2 measured interleave); drained by [`Engine::train_step`].
     pub(crate) pending_deliveries: Vec<(usize, f64)>,
+    /// Span tracing armed ([`Engine::set_tracing`]): every executor
+    /// records per-rank spans into `recorder` each step. Off by default —
+    /// the recorder is then a branch-only no-op on the hot paths.
+    pub(crate) trace_on: bool,
+    /// The per-step span ring (DESIGN.md §10). Preallocated on the first
+    /// traced step per plan shape; warm traced steps allocate nothing.
+    pub(crate) recorder: crate::obs::trace::SpanRecorder,
     pub(crate) step: u64,
 }
 
@@ -422,6 +441,8 @@ impl Engine {
             replay: compile::ReplayScratch::default(),
             arena: compile::CompiledArena::default(),
             pending_deliveries: vec![],
+            trace_on: false,
+            recorder: crate::obs::trace::SpanRecorder::default(),
             step: 0,
         })
     }
@@ -455,6 +476,43 @@ impl Engine {
     /// [`ExecMode::EventDriven`].
     pub fn set_exec_jitter(&mut self, seed: Option<u64>) {
         self.exec_jitter = seed;
+    }
+
+    /// Arm (or disarm) per-rank span tracing (DESIGN.md §10). When on,
+    /// every executor records a [`crate::obs::trace::Span`] per
+    /// `(task, rank)` into a preallocated ring each step,
+    /// [`StepStats::breakdown`] is populated, and
+    /// [`Engine::export_chrome_trace`] renders the last step. Off (the
+    /// default), recording is a branch-only no-op. Numerics are identical
+    /// either way — tracing touches only timestamps.
+    pub fn set_tracing(&mut self, on: bool) {
+        self.trace_on = on;
+    }
+
+    /// True when span tracing is armed.
+    pub fn tracing(&self) -> bool {
+        self.trace_on
+    }
+
+    /// The last traced step's spans in record order (empty when tracing
+    /// was off for that step).
+    pub fn last_step_spans(&mut self) -> &[crate::obs::trace::Span] {
+        self.recorder.contiguous()
+    }
+
+    /// Export the last traced step as Chrome trace-event JSON
+    /// (`chrome://tracing` / Perfetto): one track per rank, flow arrows
+    /// on the p2p hand-off edges. Errors when no step has been traced.
+    pub fn export_chrome_trace(&mut self) -> Result<String> {
+        if !self.recorder.is_active() || self.recorder.is_empty() {
+            return Err(Error::Engine(
+                "export_chrome_trace: no traced step (call set_tracing(true), then train_step)"
+                    .into(),
+            ));
+        }
+        let plan = self.specialized_plan()?;
+        let step = self.step.saturating_sub(1);
+        crate::obs::chrome::chrome_trace(self.recorder.contiguous(), &plan, step)
     }
 
     /// True once optimizer moments exist (after the first step). Switch
@@ -660,6 +718,13 @@ impl Engine {
         let deliveries = std::mem::take(&mut self.pending_deliveries);
         let out = self.run_specialized(&plan, &pipelines, &batches, &deliveries)?;
         self.step += 1;
+        let breakdown = self.recorder.is_active().then(|| {
+            crate::obs::breakdown::fold_spans(
+                self.recorder.contiguous(),
+                out.makespan_s,
+                out.exposed_switch_s,
+            )
+        });
         Ok(StepStats {
             loss: (out.weighted_loss / out.tokens as f64) as f32,
             wire_elems: self.mesh.wire_elems - wire0,
@@ -669,6 +734,7 @@ impl Engine {
             padded: positions.saturating_sub(out.tokens),
             exposed_switch_s: out.exposed_switch_s,
             switch_delivery_s: out.delivery_lane_s,
+            breakdown,
         })
     }
 
@@ -719,6 +785,7 @@ impl Engine {
             padded: positions.saturating_sub(total_tokens),
             exposed_switch_s: 0.0,
             switch_delivery_s: 0.0,
+            breakdown: None,
         })
     }
 }

@@ -54,6 +54,7 @@ use super::exec::{accumulate, SpecRunOutcome};
 use super::layout::{gkey, pkey, ShardLayout, SyncOp};
 use super::specialize::{SpecTaskKind, SpecializedPlan};
 use super::{AdamW, Engine, EnginePipeline, MicroBatch, BLOCK_PARAMS};
+use crate::obs::trace::{Span, SpanKind};
 
 /// How long any single wait (dependency, phase, or receive) may stall
 /// before the executor reports a deadlock instead of hanging the step.
@@ -150,6 +151,14 @@ struct Shared<'e> {
     jitter: Option<u64>,
     progress: Mutex<Progress>,
     cv: Condvar,
+    /// The step's wall-clock epoch: every span timestamp is seconds since
+    /// this instant, so all rank tracks share one timeline.
+    start: Instant,
+    /// Span tracing (DESIGN.md §10): one buffer per plan position,
+    /// preallocated to the rank's task count; each worker locks only its
+    /// *own* buffer (uncontended), pushing real-thread wall spans.
+    /// `None` ⇒ tracing off, zero writes.
+    trace: Option<Vec<Mutex<Vec<Span>>>>,
     /// Per-`(pipeline, micro-batch)` head outcomes `(mean loss, tokens)`.
     losses: Mutex<BTreeMap<(usize, usize), (f32, u64)>>,
     /// First error wins; later "aborted" errors are dropped.
@@ -428,6 +437,10 @@ impl Worker<'_, '_> {
         for &ti in &sh.plan.ranks[self.ri].tasks {
             sh.jitter_sleep(ti, self.rank);
             sh.wait_deps(ti)?;
+            // span opens after the dependency wait (idle shows as bubble,
+            // in-task receive waits count as comm) and closes after the
+            // post-actions (producer-side sends belong to the producer)
+            let t0_s = sh.trace.is_some().then(|| sh.start.elapsed().as_secs_f64());
             let task = &sh.plan.tasks[ti];
             // the tape is index-aligned with the plan: op `ti` carries
             // the frozen keys/endpoints for task `ti`
@@ -466,6 +479,15 @@ impl Worker<'_, '_> {
                 }
             }
             self.post_actions(ti)?;
+            if let (Some(t0_s), Some(bufs)) = (t0_s, sh.trace.as_ref()) {
+                plock(&bufs[self.ri]).push(Span {
+                    task: ti as u32,
+                    kind: SpanKind::of_task(&task.kind),
+                    rank: self.rank as u32,
+                    t0_s,
+                    t1_s: sh.start.elapsed().as_secs_f64(),
+                });
+            }
         }
         Ok(())
     }
@@ -945,7 +967,15 @@ impl Engine {
         let devs: Vec<Mutex<DeviceMem>> =
             self.mesh.devices.iter_mut().map(|d| Mutex::new(std::mem::take(d))).collect();
         let layout: &ShardLayout = &self.layout;
-        let shared = Shared {
+        // per-rank span buffers, preallocated to each rank's task count
+        let trace: Option<Vec<Mutex<Vec<Span>>>> = self.trace_on.then(|| {
+            plan.ranks.iter().map(|rp| Mutex::new(Vec::with_capacity(rp.tasks.len()))).collect()
+        });
+        // the recorder holds last step's spans; rewind it now so an
+        // untraced or failed threaded step never reports stale spans
+        self.recorder.begin_step(0, false);
+        let t0 = Instant::now();
+        let mut shared = Shared {
             plan,
             prog,
             pipelines,
@@ -964,6 +994,8 @@ impl Engine {
                 failed: false,
             }),
             cv: Condvar::new(),
+            start: t0,
+            trace,
             losses: Mutex::new(BTreeMap::new()),
             err: Mutex::new(None),
             wire: AtomicU64::new(0),
@@ -978,7 +1010,6 @@ impl Engine {
             rxs.push(rx);
         }
 
-        let t0 = Instant::now();
         std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(nranks);
             for (ri, rx) in rxs.into_iter().enumerate() {
@@ -1005,6 +1036,7 @@ impl Engine {
         let ops = shared.ops.load(Ordering::Relaxed);
         let losses = std::mem::take(&mut *plock(&shared.losses));
         let err = plock(&shared.err).take();
+        let trace_bufs = shared.trace.take();
         drop(shared);
         // always restore the device stores (and the accounting) before
         // surfacing any error — the mesh must stay usable
@@ -1015,6 +1047,20 @@ impl Engine {
         self.mesh.ops += ops;
         if let Some(e) = err {
             return Err(e);
+        }
+        // fold the per-rank wall spans into the engine recorder so the
+        // downstream consumers (breakdown, Chrome export) see one ring
+        if let Some(bufs) = trace_bufs {
+            let spans: Vec<Vec<Span>> = bufs
+                .into_iter()
+                .map(|m| m.into_inner().unwrap_or_else(|p| p.into_inner()))
+                .collect();
+            self.recorder.begin_step(spans.iter().map(Vec::len).sum(), true);
+            for buf in &spans {
+                for &s in buf {
+                    self.recorder.record_span(s);
+                }
+            }
         }
 
         let mut tokens = 0u64;

@@ -33,6 +33,9 @@
 //!   mixed-length data substrate, and the five comparison systems.
 //! - [`runtime`], [`collectives`], [`engine`] — PJRT artifact execution and
 //!   the real-numerics distributed engine (threads = devices).
+//! - [`obs`] — per-rank execution tracing: span recorder in all three
+//!   executors, Chrome-trace export, measured step breakdowns, and
+//!   span-calibrated dispatch profiles (DESIGN.md §10).
 //! - [`elastic`], [`coordinator`], [`config`], [`metrics`] — failure traces
 //!   and reconfiguration, the top-level trainer, CLI/config, reporting.
 
@@ -51,6 +54,7 @@ pub mod figures;
 pub mod graph;
 pub mod hspmd;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod sim;
 pub mod spec;

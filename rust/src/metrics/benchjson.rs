@@ -27,6 +27,10 @@ pub struct BenchRow {
     pub mean_s: f64,
     /// Best (minimum) seconds across iterations.
     pub best_s: f64,
+    /// Optional named side-columns (e.g. a step's measured
+    /// compute/comm/bubble/switch breakdown). Empty for plain rows;
+    /// emitted as a `"cols"` object when present.
+    pub cols: Vec<(String, f64)>,
 }
 
 /// A bench run's machine-readable output: rows plus provenance tags.
@@ -70,6 +74,27 @@ impl BenchReport {
             kind: kind.to_string(),
             mean_s,
             best_s,
+            cols: vec![],
+        });
+        self
+    }
+
+    /// Record a measurement row carrying named side-columns (per-step
+    /// breakdown components and the like).
+    pub fn row_cols(
+        &mut self,
+        name: &str,
+        kind: &str,
+        mean_s: f64,
+        best_s: f64,
+        cols: &[(&str, f64)],
+    ) -> &mut Self {
+        self.rows.push(BenchRow {
+            name: name.to_string(),
+            kind: kind.to_string(),
+            mean_s,
+            best_s,
+            cols: cols.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
         });
         self
     }
@@ -92,12 +117,23 @@ impl BenchReport {
         for (i, r) in self.rows.iter().enumerate() {
             let _ = write!(
                 out,
-                "    {{\"name\": {}, \"kind\": {}, \"mean_s\": {}, \"best_s\": {}}}",
+                "    {{\"name\": {}, \"kind\": {}, \"mean_s\": {}, \"best_s\": {}",
                 quote(&r.name),
                 quote(&r.kind),
                 num(r.mean_s),
                 num(r.best_s)
             );
+            if !r.cols.is_empty() {
+                out.push_str(", \"cols\": {");
+                for (j, (k, v)) in r.cols.iter().enumerate() {
+                    if j > 0 {
+                        out.push_str(", ");
+                    }
+                    let _ = write!(out, "{}: {}", quote(k), num(*v));
+                }
+                out.push('}');
+            }
+            out.push('}');
             out.push_str(if i + 1 < self.rows.len() { ",\n" } else { "\n" });
         }
         out.push_str("  ]\n}\n");
@@ -189,6 +225,18 @@ mod tests {
         assert!(j.contains("\"mean_s\": null"));
         assert!(!j.contains("NaN"));
         // balanced braces/brackets ⇒ parseable by the compare script
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn cols_rows_emit_a_cols_object() {
+        let mut r = BenchReport::new("demo", true);
+        r.row_cols("step 0", "wall", 1.0, 1.0, &[("compute_s", 0.5), ("comm_s", 0.25)]);
+        r.row("plain", "modeled", 1.0, 1.0);
+        let j = r.json();
+        assert!(j.contains("\"cols\": {\"compute_s\": 5e-1, \"comm_s\": 2.5e-1}"));
+        assert_eq!(j.matches("\"cols\"").count(), 1, "plain rows omit the object");
         assert_eq!(j.matches('{').count(), j.matches('}').count());
         assert_eq!(j.matches('[').count(), j.matches(']').count());
     }

@@ -1,0 +1,157 @@
+//! Measured step breakdowns: fold a step's spans into per-rank and
+//! per-step compute / comm / optimizer / bubble / switch-delivery
+//! seconds (§7's attribution, measured instead of modeled).
+//!
+//! Per rank, the busy time is the sum of its span durations (spans on one
+//! rank's track never overlap — the event-driven clock propagation and
+//! the threaded executor's sequential per-thread timeline both guarantee
+//! it) and the bubble is the non-busy remainder of the makespan. The
+//! step-level breakdown is the mean over ranks, so by construction
+//! `compute + comm + optim + bubble ≈ makespan` — the cross-check
+//! `tests/trace_breakdown.rs` asserts within 5%.
+
+use std::collections::BTreeMap;
+
+use super::trace::Span;
+
+/// One step's measured attribution (attached to
+/// [`StepStats`](crate::engine::StepStats) when tracing is on).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StepBreakdown {
+    /// Mean per-rank GEMM-class seconds.
+    pub compute_s: f64,
+    /// Mean per-rank communication seconds (hand-offs, TP syncs, grad
+    /// reduce) — time a rank spends *in* comm tasks, i.e. exposed comm.
+    pub comm_s: f64,
+    /// Mean per-rank optimizer seconds (apply + ZeRO-1 exchange).
+    pub optim_s: f64,
+    /// Mean per-rank idle remainder of the makespan (pipeline bubbles,
+    /// dependency waits).
+    pub bubble_s: f64,
+    /// Exposed switch-delivery seconds riding this step's wire lanes
+    /// (from the §6.2 measured interleave; not folded from spans).
+    pub switch_s: f64,
+    /// Span-reconstructed critical path: the latest span end on the step
+    /// epoch. Cross-checked against `StepStats::makespan_s`.
+    pub critical_path_s: f64,
+}
+
+impl StepBreakdown {
+    /// `compute + comm + optim + bubble` — must match the makespan within
+    /// tolerance (the acceptance cross-check).
+    pub fn components_sum_s(&self) -> f64 {
+        self.compute_s + self.comm_s + self.optim_s + self.bubble_s
+    }
+}
+
+/// One rank's measured attribution.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RankBreakdown {
+    /// Mesh rank.
+    pub rank: u32,
+    /// GEMM-class seconds.
+    pub compute_s: f64,
+    /// Communication seconds.
+    pub comm_s: f64,
+    /// Optimizer seconds.
+    pub optim_s: f64,
+    /// Total span-covered seconds.
+    pub busy_s: f64,
+    /// `max(0, makespan − busy)`.
+    pub bubble_s: f64,
+}
+
+/// Per-rank attribution, ascending by rank.
+pub fn per_rank(spans: &[Span], makespan_s: f64) -> Vec<RankBreakdown> {
+    let mut by: BTreeMap<u32, RankBreakdown> = BTreeMap::new();
+    for s in spans {
+        let e = by
+            .entry(s.rank)
+            .or_insert_with(|| RankBreakdown { rank: s.rank, ..Default::default() });
+        let d = s.dur_s();
+        if s.kind.is_compute() {
+            e.compute_s += d;
+        } else if s.kind.is_optim() {
+            e.optim_s += d;
+        } else {
+            e.comm_s += d;
+        }
+        e.busy_s += d;
+    }
+    by.into_values()
+        .map(|mut e| {
+            e.bubble_s = (makespan_s - e.busy_s).max(0.0);
+            e
+        })
+        .collect()
+}
+
+/// Fold one step's spans into the step-level breakdown. `switch_s` is
+/// the step's measured exposed switch delivery
+/// ([`StepStats::exposed_switch_s`](crate::engine::StepStats)), carried
+/// through for reporting — it is *not* added to the makespan components.
+pub fn fold_spans(spans: &[Span], makespan_s: f64, switch_s: f64) -> StepBreakdown {
+    let ranks = per_rank(spans, makespan_s);
+    let critical_path_s = spans.iter().map(|s| s.t1_s).fold(0.0f64, f64::max);
+    if ranks.is_empty() {
+        return StepBreakdown { switch_s, critical_path_s, ..Default::default() };
+    }
+    let n = ranks.len() as f64;
+    let mut b = StepBreakdown { switch_s, critical_path_s, ..Default::default() };
+    for r in &ranks {
+        b.compute_s += r.compute_s;
+        b.comm_s += r.comm_s;
+        b.optim_s += r.optim_s;
+        b.bubble_s += r.bubble_s;
+    }
+    b.compute_s /= n;
+    b.comm_s /= n;
+    b.optim_s /= n;
+    b.bubble_s /= n;
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::SpanKind;
+
+    fn sp(kind: SpanKind, rank: u32, t0: f64, t1: f64) -> Span {
+        Span { task: 0, kind, rank, t0_s: t0, t1_s: t1 }
+    }
+
+    #[test]
+    fn fold_two_ranks_components_sum_to_makespan() {
+        // rank 0: 2s compute + 1s comm, rank 1: 1s compute + 1s optim
+        let spans = vec![
+            sp(SpanKind::FwdGemm, 0, 0.0, 2.0),
+            sp(SpanKind::GradReduce, 0, 2.0, 3.0),
+            sp(SpanKind::BwdGemm, 1, 0.0, 1.0),
+            sp(SpanKind::OptimStep, 1, 1.0, 2.0),
+        ];
+        let b = fold_spans(&spans, 3.0, 0.25);
+        assert!((b.compute_s - 1.5).abs() < 1e-12);
+        assert!((b.comm_s - 0.5).abs() < 1e-12);
+        assert!((b.optim_s - 0.5).abs() < 1e-12);
+        assert!((b.bubble_s - 0.5).abs() < 1e-12); // rank1 idles 1s of 3s
+        assert!((b.components_sum_s() - 3.0).abs() < 1e-12);
+        assert!((b.critical_path_s - 3.0).abs() < 1e-12);
+        assert!((b.switch_s - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_spans_fold_to_zeroes() {
+        let b = fold_spans(&[], 1.0, 0.0);
+        assert_eq!(b.components_sum_s(), 0.0);
+        assert_eq!(b.critical_path_s, 0.0);
+    }
+
+    #[test]
+    fn per_rank_is_sorted_and_bubble_clamped() {
+        let spans =
+            vec![sp(SpanKind::FwdGemm, 5, 0.0, 4.0), sp(SpanKind::FwdGemm, 2, 0.0, 1.0)];
+        let ranks = per_rank(&spans, 2.0);
+        assert_eq!(ranks.iter().map(|r| r.rank).collect::<Vec<_>>(), vec![2, 5]);
+        assert_eq!(ranks[1].bubble_s, 0.0, "busy beyond makespan clamps to zero bubble");
+    }
+}

@@ -1,0 +1,134 @@
+//! Span-calibrated dispatch profiles.
+//!
+//! The Hetu-B dispatcher scores candidate strategies with the *analytic*
+//! cost model (packed-window FLOPs over device count). HAP's lesson
+//! (PAPERS.md) is that heterogeneous strategy decisions are only as good
+//! as the measured profile behind them — so this module fits a
+//! two-coefficient linear profile `(seconds/flop, seconds/byte)` from one
+//! traced engine step's measured [`StepBreakdown`] and lets the
+//! dispatcher score `flops·s_per_flop + bytes·s_per_byte` per device
+//! instead of raw FLOPs. The byte term is what changes rankings: a
+//! TP-heavy candidate that looks fine on FLOPs pays its measured sync
+//! cost under the calibrated profile.
+//!
+//! The comm-volume model ([`strategy_comm_bytes`]) uses the *same*
+//! packed-window convention as `Dispatcher::batch_flops`, so fit and
+//! scoring stay consistent by construction.
+
+use crate::costmodel::CostModel;
+use crate::data::pack_sequences;
+use crate::engine::EngineStrategy;
+
+/// A measured linear step-time profile, fitted from one traced step.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CalibratedProfile {
+    /// Measured seconds per (per-device) compute FLOP.
+    pub s_per_flop: f64,
+    /// Measured seconds per (per-device) communicated byte.
+    pub s_per_byte: f64,
+}
+
+impl CalibratedProfile {
+    /// Fit from one step's measured per-device compute/comm seconds and
+    /// the analytic per-device FLOP/byte volumes that step executed.
+    /// `None` when the sample is degenerate (no compute measured) — the
+    /// caller keeps the analytic model. A step with no measured comm
+    /// fits `s_per_byte = 0`, which degrades to pure-FLOPs scoring.
+    pub fn fit(compute_s: f64, comm_s: f64, flops: f64, bytes: f64) -> Option<CalibratedProfile> {
+        if compute_s <= 0.0 || flops <= 0.0 || !compute_s.is_finite() || !flops.is_finite() {
+            return None;
+        }
+        let s_per_byte = if bytes > 0.0 { (comm_s / bytes).max(0.0) } else { 0.0 };
+        Some(CalibratedProfile { s_per_flop: compute_s / flops, s_per_byte })
+    }
+
+    /// Predicted step seconds for a candidate executing `flops` total
+    /// compute and `bytes` total comm volume across `ndev` devices.
+    pub fn step_s(&self, flops: f64, bytes: f64, ndev: f64) -> f64 {
+        (flops * self.s_per_flop + bytes * self.s_per_byte) / ndev.max(1.0)
+    }
+}
+
+/// Analytic communication volume (bytes) a strategy moves for one batch
+/// packed at context `ctx` — the dispatcher-side mirror of the engine's
+/// comm tasks, per the cost model's payload formulas:
+///
+/// - per packed window: activation + gradient hand-offs across every
+///   pipeline boundary (`2·(stages−1)·pp_boundary_bytes`), and when the
+///   strategy runs TP, forward+backward partial-sum syncs per layer
+///   (`2·layers·tp_sync_bytes`);
+/// - per step: the DP gradient reduction (`grad_bytes` per extra
+///   pipeline replica).
+///
+/// Windows follow the same [`pack_sequences`] convention as
+/// `Dispatcher::batch_flops`, so calibrated scores compare FLOPs and
+/// bytes of the *same* packing.
+pub fn strategy_comm_bytes(
+    cm: &CostModel,
+    strategy: &EngineStrategy,
+    ctx: u64,
+    seq_lens: &[u64],
+) -> f64 {
+    let stages = strategy.pipelines.iter().map(|p| p.stages.len()).max().unwrap_or(1);
+    let tp_max = strategy
+        .pipelines
+        .iter()
+        .flat_map(|p| p.stages.iter())
+        .map(|s| s.devices.len())
+        .max()
+        .unwrap_or(1);
+    let layers: u32 = strategy
+        .pipelines
+        .first()
+        .map(|p| p.stages.iter().map(|s| s.layers.1 - s.layers.0).sum())
+        .unwrap_or(0);
+    let mut bytes = 0.0f64;
+    for w in pack_sequences(seq_lens, ctx) {
+        let used: u64 = w.iter().sum();
+        bytes += 2.0 * (stages.saturating_sub(1)) as f64 * cm.pp_boundary_bytes(used) as f64;
+        if tp_max > 1 {
+            bytes += 2.0 * layers as f64 * cm.tp_sync_bytes(used) as f64;
+        }
+    }
+    let replicas = strategy.pipelines.len();
+    if replicas > 1 {
+        bytes += (replicas - 1) as f64 * cm.grad_bytes(layers, tp_max as u32) as f64;
+    }
+    bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::ModelCfg;
+    use crate::runtime::native;
+
+    #[test]
+    fn fit_roundtrips_the_sample() {
+        let p = CalibratedProfile::fit(2.0, 1.0, 1e12, 1e9).unwrap();
+        assert!((p.s_per_flop - 2e-12).abs() < 1e-24);
+        assert!((p.s_per_byte - 1e-9).abs() < 1e-18);
+        // the fitted profile reproduces the sample's total on one device
+        assert!((p.step_s(1e12, 1e9, 1.0) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_samples_refuse_to_fit() {
+        assert!(CalibratedProfile::fit(0.0, 1.0, 1e12, 1e9).is_none());
+        assert!(CalibratedProfile::fit(1.0, 1.0, 0.0, 1e9).is_none());
+        let p = CalibratedProfile::fit(1.0, 0.5, 1e12, 0.0).unwrap();
+        assert_eq!(p.s_per_byte, 0.0, "no measured bytes -> pure-FLOPs profile");
+    }
+
+    #[test]
+    fn comm_bytes_orders_tp_above_dp() {
+        let tiny = native::tiny_config();
+        let cm = CostModel::new(ModelCfg::llama_32b());
+        let dp2 = EngineStrategy::uniform("dp2", 2, 1, 1, tiny.layers, 1);
+        let tp2 = EngineStrategy::uniform("tp2", 1, 2, 1, tiny.layers, 2);
+        let lens = vec![2048u64; 8];
+        let b_dp = strategy_comm_bytes(&cm, &dp2, 4096, &lens);
+        let b_tp = strategy_comm_bytes(&cm, &tp2, 32768, &lens);
+        assert!(b_tp > b_dp, "per-layer TP syncs must dominate one DP grad reduce");
+    }
+}

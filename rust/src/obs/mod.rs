@@ -1,0 +1,32 @@
+//! §10 Observability: per-rank execution tracing and everything built on it.
+//!
+//! The substrate from PRs 5–7 gives every unit of work an identity — a
+//! [`SpecTask`](crate::engine::SpecTask) index, the mesh ranks that carry
+//! it, and explicit dependency edges — so a timeline is one recorder away.
+//! This module is that recorder plus its consumers:
+//!
+//! - [`trace`]: the low-overhead [`SpanRecorder`](trace::SpanRecorder) all
+//!   three executors emit into — a preallocated ring of fixed-size
+//!   [`Span`](trace::Span) entries, zero heap allocation on the warm step
+//!   when tracing is on and zero writes when off.
+//! - [`chrome`]: Chrome trace-event JSON export (one track per rank, flow
+//!   arrows on the p2p hand-off edges) for `chrome://tracing` / Perfetto.
+//! - [`breakdown`]: folds a step's spans into measured per-rank and
+//!   per-step compute / comm / optimizer / bubble / switch-delivery
+//!   seconds, cross-checked against `StepStats::makespan_s`.
+//! - [`calibrate`]: fits a measured `(s/flop, s/byte)` profile from a
+//!   traced step and feeds it back into the Hetu-B dispatcher's scoring
+//!   in place of the analytic constants.
+//!
+//! DESIGN.md §10 documents the span schema, ring sizing, the Chrome-trace
+//! mapping (pid=step, tid=rank), and the calibration loop.
+
+pub mod breakdown;
+pub mod calibrate;
+pub mod chrome;
+pub mod trace;
+
+pub use breakdown::{fold_spans, per_rank, RankBreakdown, StepBreakdown};
+pub use calibrate::CalibratedProfile;
+pub use chrome::chrome_trace;
+pub use trace::{Span, SpanKind, SpanRecorder};

@@ -1,0 +1,285 @@
+//! The per-rank span recorder.
+//!
+//! One [`Span`] is recorded per `(task, participating rank)` pair: the
+//! event-driven executor records its replayed clock, the threaded executor
+//! records real wall timestamps from the step's shared epoch, and the
+//! compiled replayer records against span identities frozen into the tape
+//! at compile time ([`SpanKind`] lives in
+//! [`CompiledProgram::spans`](crate::engine::compile::CompiledProgram)).
+//!
+//! The recorder is engineered for the compiled hot loop's zero-alloc
+//! contract (guarded by `tests/compiled_alloc.rs`):
+//!
+//! - **tracing off**: [`SpanRecorder::record`] is a single branch, no
+//!   writes;
+//! - **tracing on, warm step**: the buffer was sized by the first
+//!   [`SpanRecorder::begin_step`] and is only rewound afterwards — entries
+//!   land in preallocated slots, never growing the ring;
+//! - **overflow** (more spans than the step-start capacity estimate, which
+//!   executors compute exactly, so only reachable through a stale
+//!   estimate): old entries are overwritten ring-style rather than
+//!   reallocating — a truncated trace over a stalled step.
+
+use crate::engine::SpecTaskKind;
+
+/// The span taxonomy: [`SpecTaskKind`] with the coordinates stripped, so
+/// an entry is `Copy` and one byte. Coordinates are recovered from the
+/// owning plan via [`Span::task`] when exporting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// Stage input hand-off + TP broadcast (stage 0: embed).
+    FwdIn,
+    /// One forward layer's GEMMs.
+    FwdGemm,
+    /// Forward TP partial-sum all-reduce.
+    FwdTpSync,
+    /// Backward stage input hand-off (last stage: fused head).
+    BwdIn,
+    /// One backward layer's GEMMs + grad accumulation.
+    BwdGemm,
+    /// Backward TP dx all-reduce.
+    BwdTpSync,
+    /// Stage-0 embedding-gradient epilogue.
+    EmbedBwd,
+    /// Token-weighted DP gradient reduction.
+    GradReduce,
+    /// Optimizer application.
+    OptimStep,
+    /// ZeRO-1 updated-slice exchange.
+    ZeroExchange,
+}
+
+impl SpanKind {
+    /// The span identity of a specialized task.
+    pub fn of_task(kind: &SpecTaskKind) -> SpanKind {
+        match kind {
+            SpecTaskKind::FwdIn { .. } => SpanKind::FwdIn,
+            SpecTaskKind::FwdGemm { .. } => SpanKind::FwdGemm,
+            SpecTaskKind::FwdTpSync { .. } => SpanKind::FwdTpSync,
+            SpecTaskKind::BwdIn { .. } => SpanKind::BwdIn,
+            SpecTaskKind::BwdGemm { .. } => SpanKind::BwdGemm,
+            SpecTaskKind::BwdTpSync { .. } => SpanKind::BwdTpSync,
+            SpecTaskKind::EmbedBwd { .. } => SpanKind::EmbedBwd,
+            SpecTaskKind::GradReduce => SpanKind::GradReduce,
+            SpecTaskKind::OptimStep => SpanKind::OptimStep,
+            SpecTaskKind::ZeroExchange => SpanKind::ZeroExchange,
+        }
+    }
+
+    /// Kind name (the Chrome-trace event-name prefix).
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::FwdIn => "FwdIn",
+            SpanKind::FwdGemm => "FwdGemm",
+            SpanKind::FwdTpSync => "FwdTpSync",
+            SpanKind::BwdIn => "BwdIn",
+            SpanKind::BwdGemm => "BwdGemm",
+            SpanKind::BwdTpSync => "BwdTpSync",
+            SpanKind::EmbedBwd => "EmbedBwd",
+            SpanKind::GradReduce => "GradReduce",
+            SpanKind::OptimStep => "OptimStep",
+            SpanKind::ZeroExchange => "ZeroExchange",
+        }
+    }
+
+    /// GEMM-class work (the breakdown's "compute" bucket).
+    pub fn is_compute(self) -> bool {
+        matches!(self, SpanKind::FwdGemm | SpanKind::BwdGemm | SpanKind::EmbedBwd)
+    }
+
+    /// Optimizer-class work (optimizer apply + ZeRO-1 exchange).
+    pub fn is_optim(self) -> bool {
+        matches!(self, SpanKind::OptimStep | SpanKind::ZeroExchange)
+    }
+
+    /// Communication-class work — mirrors [`SpecTaskKind::is_comm`]
+    /// except that the optimizer kinds are split into their own bucket
+    /// (§7's breakdown separates them).
+    pub fn is_comm(self) -> bool {
+        !self.is_compute() && !self.is_optim()
+    }
+
+    /// Chrome-trace category string.
+    pub fn category(self) -> &'static str {
+        if self.is_compute() {
+            "compute"
+        } else if self.is_optim() {
+            "optim"
+        } else {
+            "comm"
+        }
+    }
+}
+
+/// One recorded execution interval on one rank's timeline. Fixed-size and
+/// `Copy` so ring writes are plain stores.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    /// Task index into the owning `SpecializedPlan::tasks` (== the
+    /// `CompiledProgram::ops` index on the compiled path).
+    pub task: u32,
+    /// What ran.
+    pub kind: SpanKind,
+    /// Mesh rank whose timeline carries the interval.
+    pub rank: u32,
+    /// Start, seconds from the step epoch (wall under
+    /// `ExecMode::{Threaded,CompiledThreaded}`, replayed clock otherwise).
+    pub t0_s: f64,
+    /// End, same epoch.
+    pub t1_s: f64,
+}
+
+impl Span {
+    /// Interval length in seconds.
+    pub fn dur_s(&self) -> f64 {
+        (self.t1_s - self.t0_s).max(0.0)
+    }
+}
+
+/// Preallocated per-step span ring. The engine owns one across steps; the
+/// buffer is sized on the first traced step per plan shape and only
+/// rewound on later steps.
+#[derive(Debug, Default)]
+pub struct SpanRecorder {
+    active: bool,
+    cap: usize,
+    start: usize,
+    buf: Vec<Span>,
+}
+
+impl SpanRecorder {
+    /// Arm (or disarm) the recorder for one step. `capacity` is the exact
+    /// span count the executor will emit — Σ over tasks of
+    /// `task.ranks.len()` (frozen as `CompiledProgram::trace_slots` on
+    /// the compiled path). Allocates only when the capacity grows — the
+    /// warm traced step performs no heap allocation here.
+    pub fn begin_step(&mut self, capacity: usize, on: bool) {
+        self.active = on;
+        self.start = 0;
+        self.buf.clear();
+        if on {
+            self.cap = capacity.max(1);
+            let have = self.buf.capacity();
+            if have < self.cap {
+                self.buf.reserve_exact(self.cap - have);
+            }
+        }
+    }
+
+    /// True when the current/last step recorded spans.
+    pub fn is_active(&self) -> bool {
+        self.active
+    }
+
+    /// Record one interval. A branch-only no-op when tracing is off; a
+    /// plain store into the preallocated ring when on.
+    #[inline]
+    pub fn record(&mut self, task: u32, kind: SpanKind, rank: u32, t0_s: f64, t1_s: f64) {
+        if !self.active {
+            return;
+        }
+        self.record_span(Span { task, kind, rank, t0_s, t1_s });
+    }
+
+    /// Record a prebuilt span (the threaded executor's merge path).
+    #[inline]
+    pub fn record_span(&mut self, span: Span) {
+        if !self.active {
+            return;
+        }
+        if self.buf.len() < self.cap {
+            self.buf.push(span);
+        } else {
+            // ring overwrite — never grows, trace truncates oldest-first
+            self.buf[self.start] = span;
+            self.start = (self.start + 1) % self.cap;
+        }
+    }
+
+    /// Spans recorded this step.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// No spans recorded.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// The step's spans in record order. Unwraps the ring in place when
+    /// it overflowed (no allocation).
+    pub fn contiguous(&mut self) -> &[Span] {
+        if self.start != 0 {
+            self.buf.rotate_left(self.start);
+            self.start = 0;
+        }
+        &self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sp(task: u32) -> Span {
+        Span { task, kind: SpanKind::FwdGemm, rank: 0, t0_s: 0.0, t1_s: 1.0 }
+    }
+
+    #[test]
+    fn off_recorder_records_nothing() {
+        let mut r = SpanRecorder::default();
+        r.begin_step(8, false);
+        r.record(0, SpanKind::FwdIn, 0, 0.0, 1.0);
+        assert!(r.is_empty());
+        assert!(!r.is_active());
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_unwraps_in_order() {
+        let mut r = SpanRecorder::default();
+        r.begin_step(3, true);
+        for t in 0..5 {
+            r.record_span(sp(t));
+        }
+        // capacity 3, wrote 0..5 -> survivors 2,3,4 in record order
+        let tasks: Vec<u32> = r.contiguous().iter().map(|s| s.task).collect();
+        assert_eq!(tasks, vec![2, 3, 4]);
+        assert_eq!(r.len(), 3);
+    }
+
+    #[test]
+    fn warm_begin_step_reuses_the_buffer() {
+        let mut r = SpanRecorder::default();
+        r.begin_step(16, true);
+        for t in 0..16 {
+            r.record_span(sp(t));
+        }
+        r.begin_step(16, true);
+        assert!(r.is_empty(), "begin_step rewinds the ring");
+        for t in 0..16 {
+            r.record_span(sp(t));
+        }
+        assert_eq!(r.len(), 16);
+        assert_eq!(r.contiguous()[0].task, 0);
+    }
+
+    #[test]
+    fn span_kind_buckets_partition() {
+        for k in [
+            SpanKind::FwdIn,
+            SpanKind::FwdGemm,
+            SpanKind::FwdTpSync,
+            SpanKind::BwdIn,
+            SpanKind::BwdGemm,
+            SpanKind::BwdTpSync,
+            SpanKind::EmbedBwd,
+            SpanKind::GradReduce,
+            SpanKind::OptimStep,
+            SpanKind::ZeroExchange,
+        ] {
+            let buckets =
+                [k.is_compute(), k.is_comm(), k.is_optim()].iter().filter(|&&b| b).count();
+            assert_eq!(buckets, 1, "{k:?} must land in exactly one bucket");
+        }
+    }
+}

@@ -35,6 +35,8 @@ use crate::coordinator::SyntheticCorpus;
 use crate::costmodel::CostModel;
 use crate::data::{dispatch_hetu_b, pack_sequences, PipeClass, StepBatch};
 use crate::engine::{Engine, WindowShape};
+use crate::obs::breakdown::StepBreakdown;
+use crate::obs::calibrate::{strategy_comm_bytes, CalibratedProfile};
 use crate::Result;
 
 use super::overlap::SwitchOverlap;
@@ -69,12 +71,75 @@ pub struct Dispatcher {
     /// Hetu-B hysteresis: switch only when the winner undercuts the
     /// incumbent by this fraction.
     pub hysteresis: f64,
+    /// Span-calibrated step-time profile (DESIGN.md §10). `None` (the
+    /// default) scores Hetu-B candidates on analytic FLOPs alone; `Some`
+    /// scores `flops·s_per_flop + bytes·s_per_byte` per device, with both
+    /// coefficients *measured* from a traced engine step
+    /// ([`Dispatcher::calibrate_from_step`]) — the HAP-style measured
+    /// profile in place of analytic constants.
+    pub calibration: Option<CalibratedProfile>,
 }
 
 impl Dispatcher {
     /// Dispatcher with default scaling/hysteresis settings.
     pub fn new(cm: CostModel, policy: DispatchPolicy) -> Dispatcher {
-        Dispatcher { policy, cm, cell_tokens: 2048, rows_per_mb: 2, hysteresis: 0.05 }
+        Dispatcher {
+            policy,
+            cm,
+            cell_tokens: 2048,
+            rows_per_mb: 2,
+            hysteresis: 0.05,
+            calibration: None,
+        }
+    }
+
+    /// Install (or clear) a span-calibrated profile for Hetu-B scoring.
+    pub fn set_calibration(&mut self, profile: Option<CalibratedProfile>) {
+        self.calibration = profile;
+    }
+
+    /// Fit a [`CalibratedProfile`] by tracing one engine step on the
+    /// engine's *current* pool entry and install it for subsequent
+    /// [`Dispatcher::choose`] calls. The measured per-rank compute/comm
+    /// seconds (summed over ranks) regress against the entry's analytic
+    /// FLOP and byte volumes for the same batch, so the profile carries
+    /// real executor timings into Hetu-B scoring. The engine's tracing
+    /// flag is restored afterwards.
+    pub fn calibrate_from_step(
+        &mut self,
+        engine: &mut Engine,
+        pool: &StrategyPool,
+        batch: &StepBatch,
+        corpus: &mut SyntheticCorpus,
+    ) -> Result<CalibratedProfile> {
+        let entry = pool.index_of(&engine.strategy).ok_or_else(|| {
+            crate::Error::Engine(format!(
+                "calibrate_from_step: engine strategy `{}` is not in the pool",
+                engine.strategy.name
+            ))
+        })?;
+        let e = pool.entry(entry);
+        let windows = self.microbatch_windows(e, batch)?;
+        engine.set_microbatches(&windows)?;
+        let was_tracing = engine.tracing();
+        engine.set_tracing(true);
+        let stats = engine.train_step(&mut |p, m| corpus.window_for(&windows[p][m]));
+        engine.set_tracing(was_tracing);
+        let stats = stats?;
+        let b = stats.breakdown.ok_or_else(|| {
+            crate::Error::Engine("calibrate_from_step: traced step carried no breakdown".into())
+        })?;
+        let ndev = e.strategy.num_devices().max(1) as f64;
+        let flops = self.batch_flops(batch, e.ctx);
+        let bytes = strategy_comm_bytes(&self.cm, &e.strategy, e.ctx, &batch.seq_lens);
+        let profile = CalibratedProfile::fit(b.compute_s * ndev, b.comm_s * ndev, flops, bytes)
+            .ok_or_else(|| {
+                crate::Error::Engine(
+                    "calibrate_from_step: degenerate sample (no measured compute)".into(),
+                )
+            })?;
+        self.calibration = Some(profile);
+        Ok(profile)
     }
 
     /// Derive the engine-cell scaling from the pool instead of the
@@ -143,8 +208,19 @@ impl Dispatcher {
                 let scores: Vec<(usize, f64)> = eligible
                     .iter()
                     .map(|&i| {
-                        let s = self.batch_flops(batch, pool.entry(i).ctx)
-                            / pool.entry(i).strategy.num_devices().max(1) as f64;
+                        let e = pool.entry(i);
+                        let ndev = e.strategy.num_devices().max(1) as f64;
+                        let flops = self.batch_flops(batch, e.ctx);
+                        let s = match &self.calibration {
+                            // measured profile: the byte term is what can
+                            // reorder candidates vs pure-FLOPs scoring
+                            Some(p) => p.step_s(
+                                flops,
+                                strategy_comm_bytes(&self.cm, &e.strategy, e.ctx, &batch.seq_lens),
+                                ndev,
+                            ),
+                            None => flops / ndev,
+                        };
                         (i, s)
                     })
                     .collect();
@@ -293,6 +369,7 @@ impl Dispatcher {
                 windows: windows.iter().flat_map(|w| w.iter().map(|s| s.rows.len())).sum(),
                 tokens: stats.tokens,
                 padded: stats.padded,
+                breakdown: stats.breakdown,
             });
         }
         Ok(StreamReport { steps, switches, cache_hits: pool.hits() - hits0 })
@@ -333,6 +410,10 @@ pub struct StepOutcome {
     /// Padded (masked) positions this step executed — 0 for
     /// dispatcher-built windows, which always run at true ragged length.
     pub padded: u64,
+    /// Measured span breakdown (`Some` only when the engine traced the
+    /// step): per-rank-mean compute/comm/optim/bubble seconds on the same
+    /// epoch as `makespan_s`.
+    pub breakdown: Option<StepBreakdown>,
 }
 
 /// A dispatched stream's outcomes.

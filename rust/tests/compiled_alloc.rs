@@ -5,7 +5,9 @@
 //! + kernels) allocates strictly less than the event-driven interpreter
 //! on the same data, because every key, endpoint, and readiness
 //! structure is frozen at compile time. Kernel outputs and tensor
-//! transfers still allocate by design.
+//! transfers still allocate by design. With §10 tracing enabled the
+//! contract holds unchanged: the span ring is sized once on the first
+//! traced step and warm walks store spans without allocating.
 //!
 //! This file holds exactly ONE test: the counting allocator is global to
 //! the test binary, so a second concurrently-running test would pollute
@@ -103,4 +105,26 @@ fn warm_compiled_dispatch_allocates_nothing() {
         compiled_step < event_step,
         "compiled step allocated {compiled_step}, event-driven {event_step}"
     );
+
+    // 3. tracing on (§10): the first traced step sizes the span ring —
+    //    one reservation — and every later traced dispatch walk stores
+    //    spans into the preallocated slots with zero heap allocation.
+    //    Tracing must also leave the numerics untouched: the traced
+    //    compiled loss stays bit-identical to the untraced event-driven
+    //    engine on the same data.
+    cmp.set_tracing(true);
+    let st_tr = cmp.train_step(&mut |p, m| pool[p][m].clone()).unwrap();
+    let st_ev = ev.train_step(&mut |p, m| pool[p][m].clone()).unwrap();
+    assert_eq!(
+        st_tr.loss.to_bits(),
+        st_ev.loss.to_bits(),
+        "tracing must not perturb the numerics"
+    );
+    assert!(st_tr.breakdown.is_some(), "traced step must fold a breakdown");
+    assert!(st_ev.breakdown.is_none(), "untraced step must not fabricate one");
+    cmp.replay_compiled_tape(&prog).unwrap(); // warm the traced walk
+    let a3 = allocs();
+    cmp.replay_compiled_tape(&prog).unwrap();
+    let traced_walk = allocs() - a3;
+    assert_eq!(traced_walk, 0, "warm traced dispatch walk allocated {traced_walk} times");
 }

@@ -1,0 +1,145 @@
+//! §10 observability integration: traced steps must break down to the
+//! step makespan on both the event-driven (modeled clock) and threaded
+//! (wall clock) executors, the Chrome export must be structurally sound
+//! (per-rank tracks, balanced JSON, flow arrows with both endpoints), and
+//! span calibration must fit a usable dispatch profile.
+
+use std::collections::BTreeSet;
+
+use hetu::coordinator::SyntheticCorpus;
+use hetu::costmodel::{CostModel, ModelCfg};
+use hetu::data::StepBatch;
+use hetu::engine::{Engine, EngineStrategy, ExecMode};
+use hetu::obs::per_rank;
+use hetu::runtime::{native, Runtime};
+use hetu::temporal::{default_pool_entries, DispatchPolicy, Dispatcher, StrategyPool};
+
+fn traced_engine(mode: ExecMode) -> Engine {
+    let cfg = native::tiny_config();
+    let s = EngineStrategy::uniform("dp2tp2", 2, 2, 1, cfg.layers, 2);
+    let mut eng = Engine::with_runtime(Runtime::native(cfg), s, 42, 1e-3).unwrap();
+    eng.set_exec_mode(mode);
+    eng.set_tracing(true);
+    eng
+}
+
+#[test]
+fn event_driven_breakdown_sums_to_the_modeled_makespan() {
+    let cfg = native::tiny_config();
+    let mut eng = traced_engine(ExecMode::EventDriven);
+    let mut corpus = SyntheticCorpus::new(7, cfg.vocab);
+    let st = eng.train_step(&mut |_p, _m| corpus.microbatch(cfg.batch, cfg.seq)).unwrap();
+    let b = st.breakdown.expect("traced step carries a breakdown");
+    let tol = 0.05 * st.makespan_s.max(1e-12);
+    assert!(
+        (b.components_sum_s() - st.makespan_s).abs() <= tol,
+        "components {} vs makespan {}",
+        b.components_sum_s(),
+        st.makespan_s
+    );
+    assert!(
+        (b.critical_path_s - st.makespan_s).abs() <= tol,
+        "critical path {} vs makespan {}",
+        b.critical_path_s,
+        st.makespan_s
+    );
+    assert!(b.compute_s > 0.0, "a training step must measure compute");
+    // spans cover all four mesh ranks, and per-rank busy+bubble closes
+    // exactly against the makespan
+    let spans = eng.last_step_spans().to_vec();
+    let ranks: BTreeSet<u32> = spans.iter().map(|s| s.rank).collect();
+    assert_eq!(ranks.len(), 4, "dp2tp2 spans must cover all 4 ranks");
+    for r in per_rank(&spans, st.makespan_s) {
+        assert!(
+            (r.busy_s + r.bubble_s - st.makespan_s).abs() <= 1e-9,
+            "rank {}: busy {} + bubble {} must close the makespan {}",
+            r.rank,
+            r.busy_s,
+            r.bubble_s,
+            st.makespan_s
+        );
+    }
+}
+
+#[test]
+fn threaded_breakdown_sums_to_the_wall_makespan() {
+    let cfg = native::tiny_config();
+    let mut eng = traced_engine(ExecMode::Threaded);
+    let mut corpus = SyntheticCorpus::new(7, cfg.vocab);
+    let st = eng.train_step(&mut |_p, _m| corpus.microbatch(cfg.batch, cfg.seq)).unwrap();
+    let b = st.breakdown.expect("traced threaded step carries a breakdown");
+    let tol = 0.05 * st.makespan_s.max(1e-12);
+    assert!(
+        (b.components_sum_s() - st.makespan_s).abs() <= tol,
+        "components {} vs wall makespan {}",
+        b.components_sum_s(),
+        st.makespan_s
+    );
+    // wall spans live strictly inside the measured step: the last span
+    // ends before the post-join makespan stamp, and within tolerance
+    assert!(b.critical_path_s <= st.makespan_s + 1e-9);
+    assert!(
+        b.critical_path_s >= st.makespan_s - tol,
+        "critical path {} trails the wall makespan {} by more than 5%",
+        b.critical_path_s,
+        st.makespan_s
+    );
+    assert!(b.compute_s > 0.0);
+}
+
+#[test]
+fn untraced_step_records_nothing() {
+    let cfg = native::tiny_config();
+    let mut eng = traced_engine(ExecMode::EventDriven);
+    eng.set_tracing(false);
+    let mut corpus = SyntheticCorpus::new(7, cfg.vocab);
+    let st = eng.train_step(&mut |_p, _m| corpus.microbatch(cfg.batch, cfg.seq)).unwrap();
+    assert!(st.breakdown.is_none());
+    assert!(eng.last_step_spans().is_empty());
+    assert!(eng.export_chrome_trace().is_err(), "no traced step -> no export");
+}
+
+#[test]
+fn chrome_export_carries_rank_tracks_and_flow_pairs() {
+    // pp2 so cross-stage hand-off edges exist -> flow arrows
+    let cfg = native::tiny_config();
+    let s = EngineStrategy::uniform("pp2", 1, 1, 2, cfg.layers, 2);
+    let mut eng = Engine::with_runtime(Runtime::native(cfg), s, 42, 1e-3).unwrap();
+    eng.set_tracing(true);
+    let mut corpus = SyntheticCorpus::new(9, cfg.vocab);
+    eng.train_step(&mut |_p, _m| corpus.microbatch(cfg.batch, cfg.seq)).unwrap();
+    let json = eng.export_chrome_trace().unwrap();
+    assert_eq!(json.matches('{').count(), json.matches('}').count());
+    assert_eq!(json.matches('[').count(), json.matches(']').count());
+    assert!(json.contains("\"traceEvents\""));
+    assert!(json.contains("\"rank 0\"") && json.contains("\"rank 1\""));
+    let starts = json.matches("\"ph\": \"s\"").count();
+    let ends = json.matches("\"ph\": \"f\"").count();
+    assert!(starts > 0, "pp2 must emit flow arrows on its hand-off edges");
+    assert_eq!(starts, ends, "every flow start needs its finish endpoint");
+}
+
+#[test]
+fn calibration_fits_a_profile_and_keeps_dispatch_sound() {
+    let tiny = native::tiny_config();
+    let mut pool = StrategyPool::new(tiny, default_pool_entries(&tiny).unwrap()).unwrap();
+    let mut eng = pool.spawn_engine(Runtime::native(tiny), 0, 7, 1e-3).unwrap();
+    let mut corpus = SyntheticCorpus::new(3, tiny.vocab);
+    let mut disp = Dispatcher::new(CostModel::new(ModelCfg::llama_32b()), DispatchPolicy::HetuB);
+    disp.scale_cells_to_pool(&pool, tiny.seq);
+    let lens: Vec<u64> = vec![2048; 24];
+    let batch = StepBatch { total_tokens: lens.iter().sum(), seq_lens: lens };
+    assert!(disp.calibration.is_none());
+    let prof = disp.calibrate_from_step(&mut eng, &pool, &batch, &mut corpus).unwrap();
+    assert!(prof.s_per_flop > 0.0, "measured compute must fit a positive s/flop");
+    assert!(prof.s_per_byte >= 0.0);
+    assert_eq!(disp.calibration, Some(prof), "the fitted profile installs itself");
+    assert!(!eng.tracing(), "calibration restores the engine's tracing flag");
+    // calibrated scoring still picks the short-context entry for short
+    // data (the clear-cut Fig 15 case must not flip)
+    assert_eq!(disp.choose(&pool, &batch, 2), 0);
+    // and the profile predicts more time for more work
+    let t1 = prof.step_s(1e12, 1e9, 4.0);
+    let t2 = prof.step_s(2e12, 2e9, 4.0);
+    assert!(t2 >= t1);
+}

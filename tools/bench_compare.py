@@ -5,7 +5,8 @@ The bench harnesses (`cargo bench --bench hotpath_micro`, `temporal_cadence`,
 `fig15_mixed_length`) write machine-readable reports next to Cargo.toml.
 This script diffs them against `bench/baseline/BENCH_*.json` and fails on a
 >20% regression in the guarded hot-path rows (specialize cost, cached
-hot-switch, ragged step time, compiled dispatch, tape-compile cost).
+hot-switch, ragged step time, compiled dispatch, tape-compile cost, traced
+compiled step).
 
 Two escape hatches keep the gate honest rather than noisy:
 
@@ -39,6 +40,7 @@ GUARDED = {
         "engine train_step dp2 ragged 12x[2,2]",
         "step wall lowered-C2 compiled dispatch",
         "compile lowered-C2 -> rank tape",
+        "trace_overhead",
     ],
     "temporal": [],
     "fig15": [],

@@ -1,0 +1,102 @@
+#!/usr/bin/env python3
+"""Structural validation of an exported Chrome trace-event JSON file.
+
+CI runs this on the trace written by ``cargo run --release --example
+trace_export`` (after ``python3 -m json.tool`` has proven it parses).
+Checks, per the Chrome trace-event format the exporter targets:
+
+* every event timestamp is a finite number >= 0;
+* on each (pid, tid) track, the complete ("X") events do not overlap:
+  sorted by start, each event begins at or after the previous one ends
+  (small float slack for the exporter's microsecond rounding);
+* every flow id has exactly one start ("s") and one finish ("f"), the
+  start does not come after the finish, and each endpoint lands inside
+  some "X" span on its own track — dangling flow arrows would render as
+  arrows into empty space in Perfetto.
+
+Usage: python3 tools/trace_check.py trace.json
+"""
+
+import json
+import math
+import sys
+
+# Microseconds of slack: the exporter rounds ts and dur to 3 decimals
+# independently, so a slice end (ts + dur) can sit up to 1e-3 us away from
+# a flow timestamp rounded from the same instant — allow twice that.
+EPS = 2e-3
+
+
+def fail(msg: str) -> None:
+    print(f"trace_check FAILED: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main() -> None:
+    if len(sys.argv) != 2:
+        fail("usage: trace_check.py <trace.json>")
+    with open(sys.argv[1]) as f:
+        doc = json.load(f)
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail("no traceEvents array")
+
+    slices = {}  # (pid, tid) -> [(ts, ts+dur)]
+    flows = {}  # id -> {"s": [...], "f": [...]}
+    for ev in events:
+        ph = ev.get("ph")
+        if ph == "M":
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or not math.isfinite(ts) or ts < 0:
+            fail(f"bad timestamp {ts!r} on {ev!r}")
+        track = (ev.get("pid"), ev.get("tid"))
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or not math.isfinite(dur) or dur < 0:
+                fail(f"bad duration {dur!r} on {ev!r}")
+            slices.setdefault(track, []).append((ts, ts + dur))
+        elif ph in ("s", "f"):
+            flows.setdefault(ev.get("id"), {"s": [], "f": []})[ph].append((ts, track))
+        else:
+            fail(f"unexpected phase {ph!r} on {ev!r}")
+
+    if not slices:
+        fail("no complete ('X') span events")
+    for track, spans in slices.items():
+        spans.sort()
+        for (a0, a1), (b0, _) in zip(spans, spans[1:]):
+            if b0 < a1 - EPS:
+                fail(
+                    f"track {track}: overlapping spans "
+                    f"[{a0:.3f}, {a1:.3f}) and [{b0:.3f}, ...)"
+                )
+
+    if not flows:
+        fail("no flow ('s'/'f') events — hand-off arrows missing")
+    for fid, ends in flows.items():
+        if len(ends["s"]) != 1 or len(ends["f"]) != 1:
+            fail(
+                f"flow {fid!r}: expected exactly one start and one finish, "
+                f"got {len(ends['s'])}/{len(ends['f'])}"
+            )
+        (s_ts, s_track), (f_ts, f_track) = ends["s"][0], ends["f"][0]
+        if s_ts > f_ts + EPS:
+            fail(f"flow {fid!r}: start {s_ts:.3f} after finish {f_ts:.3f}")
+        for name, ts, track in (("start", s_ts, s_track), ("finish", f_ts, f_track)):
+            spans = slices.get(track, [])
+            if not any(a - EPS <= ts <= b + EPS for a, b in spans):
+                fail(
+                    f"flow {fid!r}: {name} at {ts:.3f} lands outside every "
+                    f"span on track {track}"
+                )
+
+    tracks = len(slices)
+    print(
+        f"trace_check: OK — {sum(len(s) for s in slices.values())} spans on "
+        f"{tracks} rank tracks, {len(flows)} flow arrows"
+    )
+
+
+if __name__ == "__main__":
+    main()
