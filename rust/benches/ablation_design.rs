@@ -91,6 +91,7 @@ fn main() {
     let hetero = Cluster::h800_16_h20_16();
     let t_table5 =
         simulate_step(&hetero, &cm, &tables::hetu_32b_16h800_16h20()).unwrap().step_s;
+    #[allow(deprecated)]
     let (gen_best, t_gen) = generate::search_best(&hetero, &cm, 64, 4096).unwrap();
     let mcfg = hetu::baselines::megatron::table4("llama-32b", 16, 16).unwrap();
     let t_uniform = hetu::baselines::megatron::step_time(&hetero, &cm, mcfg, 64, 4096).unwrap();

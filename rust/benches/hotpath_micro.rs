@@ -413,6 +413,95 @@ fn main() {
         std::hint::black_box(a.exposed_switch_s + b.exposed_switch_s);
     });
 
+    // ---- PR9 cluster-scale rows: the interned key plumbing under
+    // generated strategies two orders of magnitude past the testbed.
+    // Specialize rows measure the per-rank planning pass against a
+    // prebuilt layout (the layout builds once per strategy); compile rows
+    // freeze the full rank tape. Both at 256 and 1024 engine devices.
+    let gen256 = EngineStrategy::uniform("gen256", 8, 4, 8, tiny.layers, 8);
+    let l256 = ShardLayout::build(&tiny, &gen256).unwrap();
+    report(rep, "specialize 256-rank generated strategy", "wall", it(20), || {
+        std::hint::black_box(hetu::engine::specialize(&gen256, &l256, false).unwrap().len());
+    });
+    let p256 = hetu::engine::specialize(&gen256, &l256, false).unwrap();
+    let cnt256: Vec<usize> = gen256.pipelines.iter().map(|p| p.num_microbatches).collect();
+    report(rep, "compile 256-rank generated strategy", "wall", it(10), || {
+        std::hint::black_box(
+            hetu::engine::compile_program(
+                &p256,
+                &gen256.pipelines,
+                false,
+                hetu::engine::ShapeClass::uniform(&cnt256, b_sz, s_sz),
+            )
+            .unwrap()
+            .num_segs(),
+        );
+    });
+    let gen1024 = EngineStrategy::uniform("gen1024", 32, 4, 8, tiny.layers, 8);
+    let l1024 = ShardLayout::build(&tiny, &gen1024).unwrap();
+    report(rep, "specialize 1024-rank generated strategy", "wall", it(5), || {
+        std::hint::black_box(hetu::engine::specialize(&gen1024, &l1024, false).unwrap().len());
+    });
+    let p1024 = hetu::engine::specialize(&gen1024, &l1024, false).unwrap();
+    let cnt1024: Vec<usize> = gen1024.pipelines.iter().map(|p| p.num_microbatches).collect();
+    report(rep, "compile 1024-rank generated strategy", "wall", it(5), || {
+        std::hint::black_box(
+            hetu::engine::compile_program(
+                &p1024,
+                &gen1024.pipelines,
+                false,
+                hetu::engine::ShapeClass::uniform(&cnt1024, b_sz, s_sz),
+            )
+            .unwrap()
+            .num_segs(),
+        );
+    });
+
+    // full strategy search over a generated 128-node (1024-rank) mixed
+    // cluster — hierarchical pruning keeps this sub-second
+    let c1024 = hetu::cluster::ClusterSpec::new(11, 128).build();
+    let sopts = hetu::strategy::SynthOptions::new(64, 4096);
+    report(rep, "synth 1024-rank search", "wall", it(3), || {
+        std::hint::black_box(
+            hetu::strategy::synthesize(&c1024, &cm, &sopts).unwrap().ranked.len(),
+        );
+    });
+    let synth_best = rep.rows[rep.rows.len() - 1].best_s;
+    if !smoke {
+        assert!(
+            synth_best < 1.0,
+            "1024-rank synthesis must stay sub-second (best {synth_best}s)"
+        );
+    }
+    // and the winner actually lowers, specializes and compiles: the
+    // synthesized strategy is runnable, not just rankable
+    let srep = hetu::strategy::synthesize(&c1024, &cm, &sopts).unwrap();
+    let winner = srep
+        .ranked
+        .iter()
+        .find_map(|(s, _)| {
+            let mut lo = lopts.clone();
+            lo.total_microbatches = lo.total_microbatches.max(s.pipelines.len());
+            hetu::strategy::lower(s, &tiny, &lo).ok()
+        })
+        .expect("a ranked 1024-rank strategy lowers");
+    let wl = ShardLayout::build(&tiny, &winner).unwrap();
+    let wp = hetu::engine::specialize(&winner, &wl, false).unwrap();
+    let wcnt: Vec<usize> = winner.pipelines.iter().map(|p| p.num_microbatches).collect();
+    let wc = hetu::engine::compile_program(
+        &wp,
+        &winner.pipelines,
+        false,
+        hetu::engine::ShapeClass::uniform(&wcnt, b_sz, s_sz),
+    )
+    .unwrap();
+    assert!(wc.num_segs() > 0, "synth winner compiles to a non-empty tape");
+    println!(
+        "    synth winner lowered: {} devices, {} segs",
+        winner.num_devices(),
+        wc.num_segs()
+    );
+
     let path = rep.write().expect("write BENCH_hotpath.json");
     println!("wrote {}", path.display());
 }

@@ -6,6 +6,12 @@
 //! capacity, NVLink bandwidth) and links by fabric bandwidth + latency; the
 //! [`crate::sim`] discrete-event simulator and the BSR planner's bandwidth
 //! heuristic both read this topology through the [`Bandwidth`] trait.
+//!
+//! Beyond the paper's 48-GPU testbed, [`ClusterSpec`] generates seeded
+//! synthetic clusters at arbitrary scale — hundreds to thousands of ranks,
+//! mixed device generations per node, and a skewed inter-node bandwidth
+//! matrix (`ib_node_gbps`) — the input space of the cluster-scale strategy
+//! synthesis pass ([`crate::strategy::synth`]).
 
 use crate::comm::Bandwidth;
 use crate::hspmd::dg::Rank;
@@ -38,6 +44,14 @@ pub const H800: DeviceKind =
 /// NVIDIA H20 (Table 3): 96 GB, 148 TFLOPS BF16, 900 GB/s NVLink.
 pub const H20: DeviceKind =
     DeviceKind { name: "H20", mem_gib: 96.0, bf16_tflops: 148.0, nvlink_gbps: 900.0 };
+/// NVIDIA A100-SXM (generated-cluster palette): 80 GB, 312 TFLOPS BF16,
+/// 600 GB/s NVLink — the mid-generation tier between H800 and H20 compute.
+pub const A100: DeviceKind =
+    DeviceKind { name: "A100", mem_gib: 80.0, bf16_tflops: 312.0, nvlink_gbps: 600.0 };
+/// NVIDIA V100-SXM2 (generated-cluster palette): 32 GB, 125 TFLOPS
+/// tensor-core FP16, 300 GB/s NVLink — the legacy tail of a mixed fleet.
+pub const V100: DeviceKind =
+    DeviceKind { name: "V100", mem_gib: 32.0, bf16_tflops: 125.0, nvlink_gbps: 300.0 };
 
 /// One physical device slot in the cluster.
 #[derive(Clone, Copy, Debug)]
@@ -57,8 +71,13 @@ pub struct Device {
 pub struct Cluster {
     /// All device slots (including failed ones, marked dead).
     pub devices: Vec<Device>,
-    /// Inter-node bandwidth (GB/s).
+    /// Inter-node bandwidth (GB/s) — the uniform default.
     pub ib_gbps: f64,
+    /// Per-node inter-node bandwidth (GB/s), indexed by node. Empty means
+    /// a uniform fabric at [`Cluster::ib_gbps`]; when populated, a
+    /// cross-node link runs at the *slower* endpoint's node bandwidth
+    /// (the skewed matrices of generated clusters — see [`ClusterSpec`]).
+    pub ib_node_gbps: Vec<f64>,
 }
 
 impl Cluster {
@@ -73,7 +92,7 @@ impl Cluster {
                 rank += 1;
             }
         }
-        Cluster { devices, ib_gbps: IB_GBPS }
+        Cluster { devices, ib_gbps: IB_GBPS, ib_node_gbps: vec![] }
     }
 
     /// The paper's full testbed: 16×H800 (ranks 0–15) + 32×H20 (16–47).
@@ -150,8 +169,14 @@ impl Cluster {
         if da.node == db.node {
             da.kind.nvlink_gbps.min(db.kind.nvlink_gbps)
         } else {
-            self.ib_gbps
+            self.node_ib_gbps(da.node).min(self.node_ib_gbps(db.node))
         }
+    }
+
+    /// Inter-node bandwidth at one node's uplink (GB/s): the per-node skew
+    /// entry when one exists, the uniform fabric default otherwise.
+    pub fn node_ib_gbps(&self, node: u32) -> f64 {
+        self.ib_node_gbps.get(node as usize).copied().unwrap_or(self.ib_gbps)
     }
 
     /// Time to move `bytes` between two ranks (s).
@@ -187,6 +212,53 @@ impl Bandwidth for Cluster {
     }
     fn intra_node(&self, from: Rank, to: Rank) -> bool {
         self.device(from).node == self.device(to).node
+    }
+}
+
+/// Seeded generator for synthetic clusters at arbitrary scale: each node
+/// draws one device generation from the palette (whole nodes are
+/// homogeneous, like real fleets) and one inter-node uplink bandwidth from
+/// a skewed range, so the same seed always reproduces the same topology.
+/// 128 nodes = 1024 ranks — the scale target of the synthesis pass.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    /// PRNG seed; equal seeds build identical clusters.
+    pub seed: u64,
+    /// Node count ([`GPUS_PER_NODE`] devices each).
+    pub nodes: u32,
+    /// Device-generation palette one kind per node is drawn from.
+    pub kinds: Vec<DeviceKind>,
+    /// Bandwidth skew in `[0, 1)`: each node's uplink is drawn uniformly
+    /// from `[(1 - skew) · IB_GBPS, IB_GBPS]`. 0 keeps the fabric uniform.
+    pub ib_skew: f64,
+}
+
+impl ClusterSpec {
+    /// A spec with the default palette (H800/H20/A100) and a 0.5 skew.
+    pub fn new(seed: u64, nodes: u32) -> ClusterSpec {
+        ClusterSpec { seed, nodes, kinds: vec![H800, H20, A100], ib_skew: 0.5 }
+    }
+
+    /// Total device slots the built cluster will have.
+    pub fn num_ranks(&self) -> u32 {
+        self.nodes * GPUS_PER_NODE
+    }
+
+    /// Materialize the cluster (deterministic in the spec).
+    pub fn build(&self) -> Cluster {
+        let mut rng = crate::testutil::Rng::new(self.seed ^ 0xC1A5_7E25_EED5_0001);
+        let mut devices = Vec::with_capacity(self.num_ranks() as usize);
+        let mut ib_node_gbps = Vec::with_capacity(self.nodes as usize);
+        let mut rank: Rank = 0;
+        for node in 0..self.nodes {
+            let kind = *rng.pick(&self.kinds);
+            for _ in 0..GPUS_PER_NODE {
+                devices.push(Device { rank, kind, node, alive: true });
+                rank += 1;
+            }
+            ib_node_gbps.push(IB_GBPS * (1.0 - self.ib_skew * rng.f64()));
+        }
+        Cluster { devices, ib_gbps: IB_GBPS, ib_node_gbps }
     }
 }
 
@@ -249,6 +321,54 @@ mod tests {
         let c = Cluster::h20(16);
         assert!(c.transfer_s(0, 8, 0) > 0.0);
         assert_eq!(c.transfer_s(3, 3, 1 << 20), 0.0);
+    }
+
+    #[test]
+    fn generated_clusters_are_deterministic_and_node_homogeneous() {
+        let spec = ClusterSpec::new(7, 128);
+        let a = spec.build();
+        let b = spec.build();
+        assert_eq!(a.len(), 1024);
+        assert_eq!(a.ib_node_gbps.len(), 128);
+        for (da, db) in a.devices.iter().zip(b.devices.iter()) {
+            assert_eq!(da.kind.name, db.kind.name);
+            assert_eq!(da.node, db.node);
+        }
+        assert_eq!(a.ib_node_gbps, b.ib_node_gbps);
+        // whole nodes are homogeneous
+        for n in 0..128u32 {
+            let kinds: Vec<&str> = a
+                .devices
+                .iter()
+                .filter(|d| d.node == n)
+                .map(|d| d.kind.name)
+                .collect();
+            assert_eq!(kinds.len(), 8);
+            assert!(kinds.iter().all(|&k| k == kinds[0]), "node {n} mixes kinds");
+        }
+        // mixed generations actually show up at this scale
+        let names: std::collections::BTreeSet<&str> =
+            a.devices.iter().map(|d| d.kind.name).collect();
+        assert!(names.len() >= 2, "128-node palette draw is mixed: {names:?}");
+    }
+
+    #[test]
+    fn skewed_node_uplinks_bound_cross_node_links() {
+        let spec = ClusterSpec::new(3, 16);
+        let c = spec.build();
+        for &ib in &c.ib_node_gbps {
+            assert!(ib <= IB_GBPS && ib >= IB_GBPS * 0.5, "uplink {ib} out of skew range");
+        }
+        // a cross-node link runs at the slower endpoint's uplink
+        let t = c.link_gbps(0, 8);
+        assert_eq!(t, c.node_ib_gbps(0).min(c.node_ib_gbps(1)));
+        // intra-node stays NVLink
+        let nv = c.device(0).kind.nvlink_gbps;
+        assert_eq!(c.link_gbps(0, 1), nv);
+        // uniform clusters are unaffected (empty skew table)
+        let u = Cluster::h20(16);
+        assert!(u.ib_node_gbps.is_empty());
+        assert_eq!(u.link_gbps(0, 8), IB_GBPS);
     }
 
     #[test]

@@ -137,6 +137,83 @@ pub fn pool_failover(
     pool.switch_engine_avoiding(engine, to, dead)
 }
 
+/// Outcome of an elastic re-synthesis (see [`resynthesize`]).
+#[derive(Debug)]
+pub struct ResynthReport {
+    /// Pool index of the newly added replacement entry.
+    pub entry: usize,
+    /// Name of the synthesized paper-scale strategy that was lowered.
+    pub strategy_name: String,
+    /// Its simulated step seconds on the surviving cluster.
+    pub sim_step_s: f64,
+    /// The executed engine transition onto the replacement.
+    pub switch: crate::engine::EngineSwitchReport,
+}
+
+/// Full elastic re-synthesis (§7.2 closed loop): after a failure shrinks
+/// `cluster`, search a *fresh* strategy for the survivors with
+/// [`crate::strategy::synth::synthesize`], lower the best lowerable
+/// candidate onto the engine's surviving mesh devices
+/// ([`crate::strategy::lower_onto`]), pool it, and execute the fused-BSR
+/// transition onto it with the dead devices excluded as weight sources.
+///
+/// This differs from [`pool_failover`] in that the replacement is not
+/// assumed to already be in the pool — it is synthesized for exactly the
+/// post-failure device set. `cluster` must already reflect the failure
+/// (dead ranks marked), and `dead` names the engine mesh devices (not
+/// paper-scale ranks) that went down.
+#[allow(clippy::too_many_arguments)]
+pub fn resynthesize(
+    pool: &mut crate::temporal::StrategyPool,
+    engine: &mut crate::engine::Engine,
+    cluster: &Cluster,
+    cm: &CostModel,
+    dead: &[usize],
+    global_batch: u64,
+    seq_len: u64,
+    lopts: &crate::strategy::LowerOptions,
+) -> Result<ResynthReport> {
+    let opts = crate::strategy::SynthOptions::new(global_batch, seq_len);
+    let rep = crate::strategy::synthesize(cluster, cm, &opts)?;
+    if rep.ranked.is_empty() {
+        return Err(crate::Error::Strategy(
+            "resynthesize: no feasible strategy for the surviving cluster".into(),
+        ));
+    }
+    let survivors: Vec<usize> =
+        (0..engine.mesh.devices.len()).filter(|d| !dead.contains(d)).collect();
+    // keep the current entry's bucket context for the replacement — the
+    // dispatcher's eligibility rule should not change under failover
+    let ctx = pool
+        .index_of(&engine.strategy)
+        .map(|i| pool.entry(i).ctx)
+        .unwrap_or(seq_len);
+    let mut last_err: Option<crate::Error> = None;
+    for (cand, sim_step_s) in &rep.ranked {
+        // not every synthesized shape lowers to the tiny engine (stage
+        // counts can exceed the engine's layer count); fall down the
+        // ranking until one does
+        let lowered = match crate::strategy::lower_onto(cand, pool.cfg(), lopts, &survivors) {
+            Ok(e) => e,
+            Err(e) => {
+                last_err = Some(e);
+                continue;
+            }
+        };
+        let entry = pool.add_entry(lowered, ctx)?;
+        let switch = pool.switch_engine_avoiding(engine, entry, dead)?;
+        return Ok(ResynthReport {
+            entry,
+            strategy_name: cand.name.clone(),
+            sim_step_s: *sim_step_s,
+            switch,
+        });
+    }
+    Err(last_err.unwrap_or_else(|| {
+        crate::Error::Strategy("resynthesize: no ranked strategy lowers onto the engine".into())
+    }))
+}
+
 fn apply(cluster: &mut Cluster, e: &Event) {
     match e {
         Event::FailGpu(r) => cluster.fail_gpu(*r),

@@ -33,6 +33,7 @@
 //! [`StrategyPool`](crate::temporal::StrategyPool) keyed by
 //! `(entry, schedule, zero1, shape class)`.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -41,6 +42,7 @@ use crate::spec::schedule::ScheduleKind;
 use crate::{Error, Result};
 
 use super::exec::{accumulate, task_duration, SpecRunOutcome};
+use super::intern::{KeyId, KeyInterner};
 use super::layout::{gkey, pkey};
 use super::specialize::{SpecTask, SpecTaskKind, SpecializedPlan};
 use super::{Engine, EnginePipeline, MicroBatch, BLOCK_PARAMS};
@@ -109,7 +111,11 @@ impl ShapeClass {
 /// One frozen tape instruction. Index `i` of [`CompiledProgram::ops`] is
 /// task `i` of the source plan; every tensor key, channel endpoint,
 /// collective group (plan-group reduction order), artifact name, and
-/// arena slot is resolved at compile time.
+/// arena slot is resolved at compile time. Keys and artifact names are
+/// interned [`KeyId`]s into the program's own [`KeyInterner`] — resolve
+/// with [`CompiledProgram::key`] (pure array indexing); the op itself
+/// stores only dense `u32` ids, so a tape stays compact at thousands of
+/// ranks and the hot loop never hashes or formats a string.
 #[derive(Clone, Debug)]
 pub enum CompiledOp {
     /// Stage-0 forward input: embed the micro-batch on `root`, broadcast
@@ -123,8 +129,8 @@ pub enum CompiledOp {
         root: usize,
         /// Stage devices (TP-group order).
         group: Vec<usize>,
-        /// Activation key.
-        akey: String,
+        /// Activation key (interned).
+        akey: KeyId,
     },
     /// Later-stage forward input: receive the activation hand-off
     /// `src_root → root`, free the producers' dead copies, broadcast.
@@ -137,30 +143,30 @@ pub enum CompiledOp {
         frees: Vec<usize>,
         /// Stage devices (TP-group order).
         group: Vec<usize>,
-        /// Activation key.
-        akey: String,
+        /// Activation key (interned).
+        akey: KeyId,
     },
     /// One layer's forward GEMMs: save the block input, run every TP
     /// member's partial forward.
     FwdGemm {
         /// Stage devices (TP-group order).
         group: Vec<usize>,
-        /// Activation key.
-        akey: String,
-        /// Saved-block-input key.
-        skey: String,
-        /// Artifact name (`block_fwd_tp{n}`).
-        art: String,
-        /// The 8 parameter keys, artifact input order.
-        pkeys: Vec<String>,
+        /// Activation key (interned).
+        akey: KeyId,
+        /// Saved-block-input key (interned).
+        skey: KeyId,
+        /// Artifact name (`block_fwd_tp{n}`, interned).
+        art: KeyId,
+        /// The 8 parameter keys, artifact input order (interned).
+        pkeys: [KeyId; 8],
     },
     /// Forward TP sync: partial-sum all-reduce (group order) + residual
     /// add.
     FwdTpSync {
         /// TP group (reduction order).
         group: Vec<usize>,
-        /// Activation key.
-        akey: String,
+        /// Activation key (interned).
+        akey: KeyId,
     },
     /// Last-stage backward input: fused head on `root` (loss + token-
     /// scaled head gradients, freeing the stage activation), broadcast
@@ -174,10 +180,10 @@ pub enum CompiledOp {
         root: usize,
         /// Stage devices (TP-group order).
         group: Vec<usize>,
-        /// Activation key (consumed).
-        akey: String,
-        /// Incoming-gradient key (produced).
-        dkey: String,
+        /// Activation key (interned, consumed).
+        akey: KeyId,
+        /// Incoming-gradient key (interned, produced).
+        dkey: KeyId,
         /// Arena head slot (`base[pi] + mb`).
         slot: usize,
     },
@@ -192,31 +198,31 @@ pub enum CompiledOp {
         frees: Vec<usize>,
         /// Stage devices (TP-group order).
         group: Vec<usize>,
-        /// Incoming-gradient key.
-        dkey: String,
+        /// Incoming-gradient key (interned).
+        dkey: KeyId,
     },
     /// One layer's backward GEMMs + parameter-gradient accumulation
     /// (frees the saved block input).
     BwdGemm {
         /// Stage devices (TP-group order).
         group: Vec<usize>,
-        /// Saved-block-input key (consumed).
-        skey: String,
-        /// Incoming-gradient key.
-        dkey: String,
-        /// Artifact name (`block_bwd_tp{n}`).
-        art: String,
-        /// The 8 parameter keys, artifact input order.
-        pkeys: Vec<String>,
-        /// The 8 gradient keys, accumulation order.
-        gkeys: Vec<String>,
+        /// Saved-block-input key (interned, consumed).
+        skey: KeyId,
+        /// Incoming-gradient key (interned).
+        dkey: KeyId,
+        /// Artifact name (`block_bwd_tp{n}`, interned).
+        art: KeyId,
+        /// The 8 parameter keys, artifact input order (interned).
+        pkeys: [KeyId; 8],
+        /// The 8 gradient keys, accumulation order (interned).
+        gkeys: [KeyId; 8],
     },
     /// Backward TP sync: dx-partial all-reduce (group order) + add.
     BwdTpSync {
         /// TP group (reduction order).
         group: Vec<usize>,
-        /// Incoming-gradient key.
-        dkey: String,
+        /// Incoming-gradient key (interned).
+        dkey: KeyId,
     },
     /// Stage-0 backward epilogue: embedding gradient on `root`, free the
     /// incoming gradient on the whole stage.
@@ -229,8 +235,8 @@ pub enum CompiledOp {
         root: usize,
         /// Stage devices.
         group: Vec<usize>,
-        /// Incoming-gradient key (consumed).
-        dkey: String,
+        /// Incoming-gradient key (interned, consumed).
+        dkey: KeyId,
     },
     /// Token-weighted DP gradient reduction (the layout's cached plan).
     GradReduce {
@@ -250,48 +256,48 @@ pub enum CompiledOp {
 }
 
 impl CompiledOp {
-    /// Precomputed activation key, when the op carries one.
-    pub fn act_key(&self) -> Option<&str> {
+    /// Precomputed activation key id, when the op carries one.
+    pub fn act_key(&self) -> Option<KeyId> {
         match self {
             CompiledOp::FwdEmbed { akey, .. }
             | CompiledOp::FwdRecv { akey, .. }
             | CompiledOp::FwdGemm { akey, .. }
             | CompiledOp::FwdTpSync { akey, .. }
-            | CompiledOp::HeadBwd { akey, .. } => Some(akey),
+            | CompiledOp::HeadBwd { akey, .. } => Some(*akey),
             _ => None,
         }
     }
 
-    /// Precomputed incoming-gradient key, when the op carries one.
-    pub fn grad_key(&self) -> Option<&str> {
+    /// Precomputed incoming-gradient key id, when the op carries one.
+    pub fn grad_key(&self) -> Option<KeyId> {
         match self {
             CompiledOp::HeadBwd { dkey, .. }
             | CompiledOp::BwdRecv { dkey, .. }
             | CompiledOp::BwdGemm { dkey, .. }
             | CompiledOp::BwdTpSync { dkey, .. }
-            | CompiledOp::EmbedBwd { dkey, .. } => Some(dkey),
+            | CompiledOp::EmbedBwd { dkey, .. } => Some(*dkey),
             _ => None,
         }
     }
 
-    /// Precomputed saved-block-input key (GEMM ops).
-    pub fn save_key(&self) -> Option<&str> {
+    /// Precomputed saved-block-input key id (GEMM ops).
+    pub fn save_key(&self) -> Option<KeyId> {
         match self {
-            CompiledOp::FwdGemm { skey, .. } | CompiledOp::BwdGemm { skey, .. } => Some(skey),
+            CompiledOp::FwdGemm { skey, .. } | CompiledOp::BwdGemm { skey, .. } => Some(*skey),
             _ => None,
         }
     }
 
-    /// Precomputed artifact name (GEMM ops).
-    pub fn artifact(&self) -> Option<&str> {
+    /// Precomputed artifact name id (GEMM ops).
+    pub fn artifact(&self) -> Option<KeyId> {
         match self {
-            CompiledOp::FwdGemm { art, .. } | CompiledOp::BwdGemm { art, .. } => Some(art),
+            CompiledOp::FwdGemm { art, .. } | CompiledOp::BwdGemm { art, .. } => Some(*art),
             _ => None,
         }
     }
 
-    /// Precomputed parameter keys (GEMM ops, artifact input order).
-    pub fn param_keys(&self) -> Option<&[String]> {
+    /// Precomputed parameter key ids (GEMM ops, artifact input order).
+    pub fn param_keys(&self) -> Option<&[KeyId; 8]> {
         match self {
             CompiledOp::FwdGemm { pkeys, .. } | CompiledOp::BwdGemm { pkeys, .. } => {
                 Some(pkeys)
@@ -300,8 +306,8 @@ impl CompiledOp {
         }
     }
 
-    /// Precomputed gradient keys (backward GEMMs, accumulation order).
-    pub fn grad_param_keys(&self) -> Option<&[String]> {
+    /// Precomputed gradient key ids (backward GEMMs, accumulation order).
+    pub fn grad_param_keys(&self) -> Option<&[KeyId; 8]> {
         match self {
             CompiledOp::BwdGemm { gkeys, .. } => Some(gkeys),
             _ => None,
@@ -369,6 +375,10 @@ pub struct CompiledProgram {
     /// ops × participants) — the recorder's ring capacity, frozen at
     /// compile time so the warm traced step never grows the ring.
     pub trace_slots: usize,
+    /// The program's own key interner: every [`KeyId`] on the tape
+    /// resolves here. Owned by the program (shared through its `Arc`), so
+    /// pooled artifacts stay self-contained across strategy switches.
+    keys: KeyInterner,
 }
 
 impl CompiledProgram {
@@ -376,6 +386,19 @@ impl CompiledProgram {
     /// dispatch-reduction the fusion rule buys.
     pub fn num_segs(&self) -> usize {
         self.segs.len()
+    }
+
+    /// Resolve a tape key id to its string — pure array indexing, no
+    /// hashing, no allocation (this is what the hot loop and the trace
+    /// boundary call).
+    #[inline]
+    pub fn key(&self, id: KeyId) -> &str {
+        self.keys.resolve(id)
+    }
+
+    /// Distinct keys the tape interns (diagnostics).
+    pub fn num_keys(&self) -> usize {
+        self.keys.len()
     }
 
     /// True when the program still describes `pipelines` (counts match).
@@ -402,6 +425,26 @@ fn fusable(t: &SpecTask) -> bool {
         SpecTaskKind::FwdTpSync { .. } | SpecTaskKind::BwdTpSync { .. } => t.ranks.len() == 1,
         _ => false,
     }
+}
+
+/// The 8 parameter and 8 gradient key ids of `layer`, formatted and
+/// interned once per layer no matter how many (mb × dp) GEMM tasks touch
+/// it — at cluster scale this is the difference between O(layers) and
+/// O(tasks) string work in the compiler.
+fn layer_key_ids(
+    cache: &mut BTreeMap<u32, ([KeyId; 8], [KeyId; 8])>,
+    keys: &mut KeyInterner,
+    layer: u32,
+) -> ([KeyId; 8], [KeyId; 8]) {
+    *cache.entry(layer).or_insert_with(|| {
+        let mut pk = [KeyId(0); 8];
+        let mut gk = [KeyId(0); 8];
+        for (i, p) in BLOCK_PARAMS.iter().enumerate() {
+            pk[i] = keys.intern(&pkey(layer, p));
+            gk[i] = keys.intern(&gkey(layer, p));
+        }
+        (pk, gk)
+    })
 }
 
 /// Compile a specialized plan into a frozen MPMD program.
@@ -450,6 +493,21 @@ pub fn compile_program(
         Ok(())
     };
 
+    // The program's interner. Hot-key families are formatted exactly once
+    // here — per (pipeline, micro-batch) activations/gradients up front,
+    // per-layer parameter/gradient octets and per-TP-width artifact names
+    // on first use — so compile cost does O(keys) string work instead of
+    // O(tasks), and the tape stores dense u32 ids.
+    let mut keys = KeyInterner::new();
+    let mut ak: Vec<Vec<KeyId>> = Vec::with_capacity(plan.num_microbatches.len());
+    let mut dk: Vec<Vec<KeyId>> = Vec::with_capacity(plan.num_microbatches.len());
+    for (pi, &m) in plan.num_microbatches.iter().enumerate() {
+        ak.push((0..m).map(|mb| keys.intern(&Engine::akey(pi, mb))).collect());
+        dk.push((0..m).map(|mb| keys.intern(&Engine::dkey(pi, mb))).collect());
+    }
+    let mut layer_cache: BTreeMap<u32, ([KeyId; 8], [KeyId; 8])> = BTreeMap::new();
+    let mut art_cache: BTreeMap<(bool, usize), KeyId> = BTreeMap::new();
+
     let mut ops: Vec<CompiledOp> = Vec::with_capacity(plan.tasks.len());
     for (ti, t) in plan.tasks.iter().enumerate() {
         let op = match t.kind {
@@ -461,7 +519,7 @@ pub fn compile_program(
                         mb,
                         root: t.ranks[0],
                         group: t.ranks.clone(),
-                        akey: Engine::akey(pipe, mb),
+                        akey: ak[pipe][mb],
                     }
                 } else {
                     let Some(&src_root) = t.src.first() else {
@@ -474,23 +532,27 @@ pub fn compile_program(
                         root: t.ranks[0],
                         frees: t.src.iter().copied().filter(|d| !t.ranks.contains(d)).collect(),
                         group: t.ranks.clone(),
-                        akey: Engine::akey(pipe, mb),
+                        akey: ak[pipe][mb],
                     }
                 }
             }
             SpecTaskKind::FwdGemm { pipe, stage, mb, layer } => {
                 stage_of(pipe, stage, &t.ranks)?;
+                let (pk, _) = layer_key_ids(&mut layer_cache, &mut keys, layer);
+                let n = t.ranks.len();
                 CompiledOp::FwdGemm {
                     group: t.ranks.clone(),
-                    akey: Engine::akey(pipe, mb),
-                    skey: Engine::skey(pipe, mb, layer),
-                    art: format!("block_fwd_tp{}", t.ranks.len()),
-                    pkeys: BLOCK_PARAMS.iter().map(|p| pkey(layer, p)).collect(),
+                    akey: ak[pipe][mb],
+                    skey: keys.intern(&Engine::skey(pipe, mb, layer)),
+                    art: *art_cache
+                        .entry((true, n))
+                        .or_insert_with(|| keys.intern(&format!("block_fwd_tp{n}"))),
+                    pkeys: pk,
                 }
             }
             SpecTaskKind::FwdTpSync { pipe, stage, mb, .. } => {
                 stage_of(pipe, stage, &t.ranks)?;
-                CompiledOp::FwdTpSync { group: t.ranks.clone(), akey: Engine::akey(pipe, mb) }
+                CompiledOp::FwdTpSync { group: t.ranks.clone(), akey: ak[pipe][mb] }
             }
             SpecTaskKind::BwdIn { pipe, stage, mb } => {
                 stage_of(pipe, stage, &t.ranks)?;
@@ -500,8 +562,8 @@ pub fn compile_program(
                         mb,
                         root: t.ranks[0],
                         group: t.ranks.clone(),
-                        akey: Engine::akey(pipe, mb),
-                        dkey: Engine::dkey(pipe, mb),
+                        akey: ak[pipe][mb],
+                        dkey: dk[pipe][mb],
                         slot: slot_base[pipe] + mb,
                     }
                 } else {
@@ -515,24 +577,28 @@ pub fn compile_program(
                         root: t.ranks[0],
                         frees: t.src.iter().copied().filter(|d| !t.ranks.contains(d)).collect(),
                         group: t.ranks.clone(),
-                        dkey: Engine::dkey(pipe, mb),
+                        dkey: dk[pipe][mb],
                     }
                 }
             }
             SpecTaskKind::BwdGemm { pipe, stage, mb, layer } => {
                 stage_of(pipe, stage, &t.ranks)?;
+                let (pk, gk) = layer_key_ids(&mut layer_cache, &mut keys, layer);
+                let n = t.ranks.len();
                 CompiledOp::BwdGemm {
                     group: t.ranks.clone(),
-                    skey: Engine::skey(pipe, mb, layer),
-                    dkey: Engine::dkey(pipe, mb),
-                    art: format!("block_bwd_tp{}", t.ranks.len()),
-                    pkeys: BLOCK_PARAMS.iter().map(|p| pkey(layer, p)).collect(),
-                    gkeys: BLOCK_PARAMS.iter().map(|p| gkey(layer, p)).collect(),
+                    skey: keys.intern(&Engine::skey(pipe, mb, layer)),
+                    dkey: dk[pipe][mb],
+                    art: *art_cache
+                        .entry((false, n))
+                        .or_insert_with(|| keys.intern(&format!("block_bwd_tp{n}"))),
+                    pkeys: pk,
+                    gkeys: gk,
                 }
             }
             SpecTaskKind::BwdTpSync { pipe, stage, mb, .. } => {
                 stage_of(pipe, stage, &t.ranks)?;
-                CompiledOp::BwdTpSync { group: t.ranks.clone(), dkey: Engine::dkey(pipe, mb) }
+                CompiledOp::BwdTpSync { group: t.ranks.clone(), dkey: dk[pipe][mb] }
             }
             SpecTaskKind::EmbedBwd { pipe, mb } => {
                 stage_of(pipe, 0, &t.ranks)?;
@@ -541,7 +607,7 @@ pub fn compile_program(
                     mb,
                     root: t.ranks[0],
                     group: t.ranks.clone(),
-                    dkey: Engine::dkey(pipe, mb),
+                    dkey: dk[pipe][mb],
                 }
             }
             SpecTaskKind::GradReduce => CompiledOp::GradReduce { ndev },
@@ -626,6 +692,7 @@ pub fn compile_program(
         spans,
         part_rank_ids,
         trace_slots,
+        keys,
     })
 }
 
@@ -845,7 +912,7 @@ impl Engine {
         rec.begin_step(prog.trace_slots, self.trace_on);
         arena.reset(prog.head_slots);
         let walked = walk(&prog, &mut replay, deliveries, &mut rec, |op| {
-            self.exec_compiled_op(op, batches, &mut arena)
+            self.exec_compiled_op(&prog, op, batches, &mut arena)
         });
         let out = walked.map(|w| {
             // f64 loss accumulation in the interpreter's order: pipeline-
@@ -878,15 +945,19 @@ impl Engine {
 
     /// Execute one tape op. Each arm mirrors the event-driven executor's
     /// task body exactly (`spec_fwd_in` etc. in [`super::exec`]) with
-    /// every key, endpoint, and group read from the frozen op.
+    /// every key, endpoint, and group read from the frozen op; interned
+    /// key ids resolve through `prog` by array indexing (no hashing, no
+    /// allocation on the dispatch layer).
     fn exec_compiled_op(
         &mut self,
+        prog: &CompiledProgram,
         op: &CompiledOp,
         batches: &[Vec<MicroBatch>],
         arena: &mut CompiledArena,
     ) -> Result<f64> {
         match op {
             CompiledOp::FwdEmbed { pi, mb, root, group, akey } => {
+                let akey = prog.key(*akey);
                 let batch = &batches[*pi][*mb];
                 let t0 = Instant::now();
                 let tok = HostTensor::i32(
@@ -903,6 +974,7 @@ impl Engine {
                 Ok(t0.elapsed().as_secs_f64())
             }
             CompiledOp::FwdRecv { src_root, root, frees, group, akey } => {
+                let akey = prog.key(*akey);
                 let t0 = Instant::now();
                 self.mesh.send(*src_root, *root, akey)?;
                 for &d in frees {
@@ -912,6 +984,7 @@ impl Engine {
                 Ok(t0.elapsed().as_secs_f64())
             }
             CompiledOp::FwdGemm { group, akey, skey, art, pkeys } => {
+                let (akey, skey, art) = (prog.key(*akey), prog.key(*skey), prog.key(*art));
                 let t0 = Instant::now();
                 arena.member_s.clear();
                 arena.member_s.resize(group.len(), 0.0);
@@ -922,14 +995,14 @@ impl Engine {
                 for (j, &d) in group.iter().enumerate() {
                     let dev = &self.mesh.devices[d];
                     let inputs = [
-                        dev.get(&pkeys[0])?,
-                        dev.get(&pkeys[1])?,
-                        dev.get(&pkeys[2])?,
-                        dev.get(&pkeys[3])?,
-                        dev.get(&pkeys[4])?,
-                        dev.get(&pkeys[5])?,
-                        dev.get(&pkeys[6])?,
-                        dev.get(&pkeys[7])?,
+                        dev.get(prog.key(pkeys[0]))?,
+                        dev.get(prog.key(pkeys[1]))?,
+                        dev.get(prog.key(pkeys[2]))?,
+                        dev.get(prog.key(pkeys[3]))?,
+                        dev.get(prog.key(pkeys[4]))?,
+                        dev.get(prog.key(pkeys[5]))?,
+                        dev.get(prog.key(pkeys[6]))?,
+                        dev.get(prog.key(pkeys[7]))?,
                         dev.get(akey)?,
                     ];
                     let t1 = Instant::now();
@@ -941,6 +1014,7 @@ impl Engine {
                 Ok(task_duration(t0.elapsed().as_secs_f64(), &arena.member_s))
             }
             CompiledOp::FwdTpSync { group, akey } => {
+                let akey = prog.key(*akey);
                 let t0 = Instant::now();
                 self.mesh.all_reduce(group, "part")?;
                 for &d in group {
@@ -951,6 +1025,7 @@ impl Engine {
                 Ok(t0.elapsed().as_secs_f64())
             }
             CompiledOp::HeadBwd { pi, mb, root, group, akey, dkey, slot } => {
+                let (akey, dkey) = (prog.key(*akey), prog.key(*dkey));
                 let batch = &batches[*pi][*mb];
                 let t0 = Instant::now();
                 let tokens = batch.real_tokens();
@@ -983,6 +1058,7 @@ impl Engine {
                 Ok(t0.elapsed().as_secs_f64())
             }
             CompiledOp::BwdRecv { src_root, root, frees, group, dkey } => {
+                let dkey = prog.key(*dkey);
                 let t0 = Instant::now();
                 self.mesh.send(*src_root, *root, dkey)?;
                 for &d in frees {
@@ -992,20 +1068,21 @@ impl Engine {
                 Ok(t0.elapsed().as_secs_f64())
             }
             CompiledOp::BwdGemm { group, skey, dkey, art, pkeys, gkeys } => {
+                let (skey, dkey, art) = (prog.key(*skey), prog.key(*dkey), prog.key(*art));
                 let t0 = Instant::now();
                 arena.member_s.clear();
                 arena.member_s.resize(group.len(), 0.0);
                 for (j, &d) in group.iter().enumerate() {
                     let dev = &self.mesh.devices[d];
                     let inputs = [
-                        dev.get(&pkeys[0])?,
-                        dev.get(&pkeys[1])?,
-                        dev.get(&pkeys[2])?,
-                        dev.get(&pkeys[3])?,
-                        dev.get(&pkeys[4])?,
-                        dev.get(&pkeys[5])?,
-                        dev.get(&pkeys[6])?,
-                        dev.get(&pkeys[7])?,
+                        dev.get(prog.key(pkeys[0]))?,
+                        dev.get(prog.key(pkeys[1]))?,
+                        dev.get(prog.key(pkeys[2]))?,
+                        dev.get(prog.key(pkeys[3]))?,
+                        dev.get(prog.key(pkeys[4]))?,
+                        dev.get(prog.key(pkeys[5]))?,
+                        dev.get(prog.key(pkeys[6]))?,
+                        dev.get(prog.key(pkeys[7]))?,
                         dev.get(skey)?,
                         dev.get(dkey)?,
                     ];
@@ -1015,14 +1092,15 @@ impl Engine {
                     let mut it = outs.into_iter();
                     let dx_part = it.next().unwrap();
                     self.mesh.devices[d].put("dpart", dx_part);
-                    for gk in gkeys {
-                        accumulate(&mut self.mesh.devices[d], gk, it.next().unwrap())?;
+                    for &gk in gkeys {
+                        accumulate(&mut self.mesh.devices[d], prog.key(gk), it.next().unwrap())?;
                     }
                     let _ = self.mesh.devices[d].take(skey);
                 }
                 Ok(task_duration(t0.elapsed().as_secs_f64(), &arena.member_s))
             }
             CompiledOp::BwdTpSync { group, dkey } => {
+                let dkey = prog.key(*dkey);
                 let t0 = Instant::now();
                 self.mesh.all_reduce(group, "dpart")?;
                 for &d in group {
@@ -1033,6 +1111,7 @@ impl Engine {
                 Ok(t0.elapsed().as_secs_f64())
             }
             CompiledOp::EmbedBwd { pi, mb, root, group, dkey } => {
+                let dkey = prog.key(*dkey);
                 let batch = &batches[*pi][*mb];
                 let t0 = Instant::now();
                 let tok = HostTensor::i32(

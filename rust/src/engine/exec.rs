@@ -879,9 +879,11 @@ impl Engine {
     pub(crate) fn sync_gradients(&mut self, total_tokens: u64) -> Result<()> {
         for op in &self.layout.sync_ops {
             match op {
-                SyncOp::AllReduce { key, devs } => self.mesh.all_reduce(devs, key)?,
+                SyncOp::AllReduce { key, devs } => {
+                    self.mesh.all_reduce(devs, self.layout.key(*key))?
+                }
                 SyncOp::SliceReduce { key, parts } => {
-                    self.mesh.all_reduce_region(parts, key)?
+                    self.mesh.all_reduce_region(parts, self.layout.key(*key))?
                 }
             }
         }
@@ -891,7 +893,7 @@ impl Engine {
 
         let scale = 1.0 / total_tokens as f32;
         for (dev, key) in &self.layout.grad_keys {
-            self.mesh.devices[*dev].get_mut(key)?.scale(scale)?;
+            self.mesh.devices[*dev].get_mut(self.layout.key(*key))?.scale(scale)?;
         }
         Ok(())
     }
@@ -926,25 +928,33 @@ impl Engine {
         let step = self.step + 1;
         if !self.zero1 {
             for (dev, param_key, grad_key) in &self.layout.update_ops {
-                self.opt.update(&mut self.mesh.devices[*dev], param_key, grad_key, step)?;
+                self.opt.update(
+                    &mut self.mesh.devices[*dev],
+                    self.layout.key(*param_key),
+                    self.layout.key(*grad_key),
+                    step,
+                )?;
             }
             return Ok(());
         }
         for (dev, param_key, grad_key) in &self.layout.update_ops {
-            match self.layout.zero_part(*dev, param_key) {
+            match self.layout.zero_part_id(*dev, *param_key) {
                 Some(Some(region)) => self.opt.update_region(
                     &mut self.mesh.devices[*dev],
-                    param_key,
-                    grad_key,
+                    self.layout.key(*param_key),
+                    self.layout.key(*grad_key),
                     region,
                     step,
                 )?,
                 Some(None) => {
-                    let _ = self.mesh.devices[*dev].take(grad_key);
+                    let _ = self.mesh.devices[*dev].take(self.layout.key(*grad_key));
                 }
-                None => {
-                    self.opt.update(&mut self.mesh.devices[*dev], param_key, grad_key, step)?
-                }
+                None => self.opt.update(
+                    &mut self.mesh.devices[*dev],
+                    self.layout.key(*param_key),
+                    self.layout.key(*grad_key),
+                    step,
+                )?,
             }
         }
         Ok(())
@@ -955,11 +965,12 @@ impl Engine {
     /// per set, accounted on the mesh wire).
     pub(crate) fn exchange_zero1_slices(&mut self) -> Result<()> {
         for g in &self.layout.zero_groups {
+            let key = self.layout.key(g.key);
             for (owner, region) in &g.parts {
-                let piece = extract_region(self.mesh.devices[*owner].get(&g.key)?, region)?;
+                let piece = extract_region(self.mesh.devices[*owner].get(key)?, region)?;
                 for &m in &g.members {
                     if m != *owner {
-                        write_region(self.mesh.devices[m].get_mut(&g.key)?, region, &piece)?;
+                        write_region(self.mesh.devices[m].get_mut(key)?, region, &piece)?;
                         self.mesh.wire_elems += piece.len() as u64;
                     }
                 }
@@ -983,11 +994,12 @@ impl Engine {
         dead: &[usize],
     ) -> Result<()> {
         for g in &self.layout.zero_groups {
-            if !moved.contains(g.key.as_str()) {
+            let gk = self.layout.key(g.key);
+            if !moved.contains(gk) {
                 continue;
             }
             for pre in ["m.", "v."] {
-                let key = format!("{pre}{}", g.key);
+                let key = format!("{pre}{gk}");
                 let mut pieces: Vec<(usize, &crate::hspmd::slices::Region, HostTensor)> = vec![];
                 for (owner, region) in &g.parts {
                     if !dead.contains(owner) && self.mesh.devices[*owner].has(&key) {
@@ -1002,7 +1014,7 @@ impl Engine {
                     if dead.contains(&m) {
                         continue; // dead members are evicted, not restocked
                     }
-                    let shape = self.mesh.devices[m].get(&g.key)?.shape.clone();
+                    let shape = self.mesh.devices[m].get(gk)?.shape.clone();
                     let mut full = HostTensor::zeros(shape);
                     for (owner, region, piece) in &pieces {
                         write_region(&mut full, region, piece)?;
@@ -1027,17 +1039,18 @@ impl Engine {
         moved: &std::collections::BTreeSet<&str>,
     ) -> Result<()> {
         for g in &self.layout.zero_groups {
-            if !moved.contains(g.key.as_str()) {
+            let gk = self.layout.key(g.key);
+            if !moved.contains(gk) {
                 continue;
             }
             for pre in ["m.", "v."] {
-                let key = format!("{pre}{}", g.key);
+                let key = format!("{pre}{gk}");
                 for &m in &g.members {
                     if !self.mesh.devices[m].has(&key) {
                         continue;
                     }
                     let full = self.mesh.devices[m].take(&key)?;
-                    if let Some(Some(region)) = self.layout.zero_part(m, &g.key) {
+                    if let Some(Some(region)) = self.layout.zero_part_id(m, g.key) {
                         let part = extract_region(&full, region)?;
                         self.mesh.devices[m].put(&key, part);
                     }

@@ -1,0 +1,131 @@
+//! String interning for tensor keys.
+//!
+//! The planning stack (layout → specialize → compile) names every tensor
+//! with a formatted string key ("L3.wq", "grad.L3.wq", "act.p0.mb2", ...).
+//! At 8 ranks that is fine; at 1024 generated ranks the plans hold hundreds
+//! of thousands of key references and `String` keys make build cost scale
+//! with formatting + string comparison, and tape storage with heap churn.
+//!
+//! `KeyInterner` maps each distinct key string to a dense `u32` [`KeyId`]
+//! exactly once. Plans and frozen tapes store `KeyId` (4 bytes, `Copy`,
+//! integer compare); resolution back to `&str` is a plain array index — no
+//! hashing, no allocation — so the compiled dispatch hot loop keeps its
+//! zero-alloc contract while the device stores (`DeviceMem`) keep their
+//! string-keyed API at the boundary.
+//!
+//! Each `Arc`-shared planning artifact owns its interner (`ShardLayout`
+//! builds one during `build()`, `CompiledProgram` one at compile time), so
+//! a `KeyId` is only meaningful relative to the artifact that minted it.
+//! Formatted strings survive only at trace/debug boundaries (`obs/`) and
+//! at the `DeviceMem` get/put surface.
+
+use std::collections::HashMap;
+
+/// Dense handle for an interned key string. Only meaningful relative to
+/// the [`KeyInterner`] (and thus the planning artifact) that minted it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct KeyId(pub u32);
+
+impl KeyId {
+    /// Index into the interner's dense table.
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// String ↔ `KeyId` table. Interning is append-only: ids are dense,
+/// starting at 0, in first-intern order (deterministic for a
+/// deterministic build order, which keeps plans reproducible).
+#[derive(Debug, Clone, Default)]
+pub struct KeyInterner {
+    strings: Vec<String>,
+    index: HashMap<String, u32>,
+}
+
+impl KeyInterner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Intern `key`, returning its dense id. Idempotent: the same string
+    /// always maps to the same id within one interner.
+    pub fn intern(&mut self, key: &str) -> KeyId {
+        if let Some(&id) = self.index.get(key) {
+            return KeyId(id);
+        }
+        let id = u32::try_from(self.strings.len()).expect("interner overflow");
+        self.strings.push(key.to_string());
+        self.index.insert(key.to_string(), id);
+        KeyId(id)
+    }
+
+    /// Resolve an id back to its string. Pure array indexing: no hash,
+    /// no allocation — safe in the zero-alloc dispatch loop.
+    #[inline]
+    pub fn resolve(&self, id: KeyId) -> &str {
+        &self.strings[id.index()]
+    }
+
+    /// Look up an existing id without interning.
+    pub fn lookup(&self, key: &str) -> Option<KeyId> {
+        self.index.get(key).map(|&id| KeyId(id))
+    }
+
+    /// Number of distinct interned keys.
+    pub fn len(&self) -> usize {
+        self.strings.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.strings.is_empty()
+    }
+
+    /// Iterate `(id, key)` pairs in id order.
+    pub fn iter(&self) -> impl Iterator<Item = (KeyId, &str)> {
+        self.strings
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (KeyId(i as u32), s.as_str()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_is_idempotent_and_dense() {
+        let mut t = KeyInterner::new();
+        let a = t.intern("L0.wq");
+        let b = t.intern("grad.L0.wq");
+        let a2 = t.intern("L0.wq");
+        assert_eq!(a, a2);
+        assert_ne!(a, b);
+        assert_eq!(a.index(), 0);
+        assert_eq!(b.index(), 1);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.resolve(a), "L0.wq");
+        assert_eq!(t.resolve(b), "grad.L0.wq");
+    }
+
+    #[test]
+    fn lookup_does_not_intern() {
+        let mut t = KeyInterner::new();
+        assert!(t.lookup("emb").is_none());
+        let id = t.intern("emb");
+        assert_eq!(t.lookup("emb"), Some(id));
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn iter_walks_in_id_order() {
+        let mut t = KeyInterner::new();
+        let ids: Vec<KeyId> = ["emb", "gf", "wout"].iter().map(|k| t.intern(k)).collect();
+        let walked: Vec<(KeyId, &str)> = t.iter().collect();
+        assert_eq!(
+            walked,
+            vec![(ids[0], "emb"), (ids[1], "gf"), (ids[2], "wout")]
+        );
+    }
+}

@@ -32,6 +32,7 @@ use crate::hspmd::slices::{DeviceRegion, Interval, Region, SliceGrid};
 use crate::runtime::ManifestConfig;
 use crate::{Error, Result};
 
+use super::intern::{KeyId, KeyInterner};
 use super::{EngineStrategy, BLOCK_PARAMS};
 
 /// Parameter-store key of a block parameter shard.
@@ -115,12 +116,14 @@ pub struct Holding {
 }
 
 /// One gradient-synchronization step of the cached per-strategy plan.
+/// Keys are interned [`KeyId`]s relative to the owning [`ShardLayout`]'s
+/// table — resolve with [`ShardLayout::key`] at the device-store boundary.
 #[derive(Clone, Debug)]
 pub enum SyncOp {
     /// Plain all-reduce: every member holds the same extents.
     AllReduce {
         /// Gradient key.
-        key: String,
+        key: KeyId,
         /// Participating devices.
         devs: Vec<usize>,
     },
@@ -128,7 +131,7 @@ pub enum SyncOp {
     /// local coordinates differ (per-layer heterogeneous TP).
     SliceReduce {
         /// Gradient key.
-        key: String,
+        key: KeyId,
         /// `(device, local region)` per holder.
         parts: Vec<(usize, Region)>,
     },
@@ -142,8 +145,8 @@ pub enum SyncOp {
 /// slice-synced gradients).
 #[derive(Clone, Debug)]
 pub struct ZeroGroup {
-    /// Parameter key (`L{l}.{param}`, `emb`, `gf`, `wout`).
-    pub key: String,
+    /// Parameter key (`L{l}.{param}`, `emb`, `gf`, `wout`), interned.
+    pub key: KeyId,
     /// Replica devices (sorted, deduplicated).
     pub members: Vec<usize>,
     /// `(device, sub-box in the shard's local coordinates)` per partition
@@ -165,23 +168,26 @@ pub struct ShardLayout {
     pub last_roots: Vec<usize>,
     /// Every `(device, gradient key)` produced by a step, for scaling
     /// without scanning device stores.
-    pub grad_keys: Vec<(usize, String)>,
+    pub grad_keys: Vec<(usize, KeyId)>,
     /// Every `(device, param key, grad key)` optimizer application.
-    pub update_ops: Vec<(usize, String, String)>,
+    pub update_ops: Vec<(usize, KeyId, KeyId)>,
     /// ZeRO-1 partition plan over replica sets (used when the engine's
     /// `zero1` flag is on; computed unconditionally — it is cheap and the
     /// memory accounting in [`crate::strategy::memory`] reads it).
     pub zero_groups: Vec<ZeroGroup>,
-    owned: BTreeMap<usize, BTreeSet<String>>,
+    owned: BTreeMap<usize, BTreeSet<KeyId>>,
     /// Per-device ZeRO-1 roles: `key → None` (grouped, no rows) or
-    /// `key → Some(region)` (partition owner). Nested so the per-step
-    /// lookup borrows `&str` without allocating.
-    zero_parts: BTreeMap<usize, BTreeMap<String, Option<Region>>>,
+    /// `key → Some(region)` (partition owner).
+    zero_parts: BTreeMap<usize, BTreeMap<KeyId, Option<Region>>>,
+    /// Key table: every plan above stores dense [`KeyId`]s minted here;
+    /// strings are formatted once per distinct key at build time and
+    /// resolved by array index at the device-store boundary.
+    keys: KeyInterner,
 }
 
 /// Contiguous dim-0 partition of `region` (a shard held identically by
 /// `devs`) over its replicas, in the shard's local coordinates.
-fn zero_partition(key: String, devs: &[usize], region: &Region) -> ZeroGroup {
+fn zero_partition(key: KeyId, devs: &[usize], region: &Region) -> ZeroGroup {
     let rows = region[0].len();
     let g = devs.len() as u64;
     let mut parts = vec![];
@@ -201,6 +207,7 @@ fn zero_partition(key: String, devs: &[usize], region: &Region) -> ZeroGroup {
 impl ShardLayout {
     /// Build the layout for a validated strategy.
     pub fn build(cfg: &ManifestConfig, strategy: &EngineStrategy) -> Result<ShardLayout> {
+        let mut keys = KeyInterner::new();
         let mut holdings: BTreeMap<(u32, usize), Vec<Holding>> = BTreeMap::new();
         for (pi, pipe) in strategy.pipelines.iter().enumerate() {
             for stage in &pipe.stages {
@@ -234,7 +241,7 @@ impl ShardLayout {
                 continue;
             }
             let name = BLOCK_PARAMS[*pidx];
-            let key = gkey(*l, name);
+            let key = keys.intern(&gkey(*l, name));
             let shape = full_shape(cfg, name);
             let regs: Vec<DeviceRegion> = hs
                 .iter()
@@ -253,12 +260,12 @@ impl ShardLayout {
                 }
                 if holders.iter().all(|h| h.region == slice) {
                     sync_ops.push(SyncOp::AllReduce {
-                        key: key.clone(),
+                        key,
                         devs: holders.iter().map(|h| h.rank as usize).collect(),
                     });
                 } else {
                     sync_ops.push(SyncOp::SliceReduce {
-                        key: key.clone(),
+                        key,
                         parts: holders
                             .iter()
                             .map(|h| (h.rank as usize, localize(&slice, &h.region)))
@@ -278,25 +285,36 @@ impl ShardLayout {
 
         let mut grad_keys = vec![];
         let mut update_ops = vec![];
-        let mut owned: BTreeMap<usize, BTreeSet<String>> = BTreeMap::new();
+        let mut owned: BTreeMap<usize, BTreeSet<KeyId>> = BTreeMap::new();
         for ((l, pidx), hs) in &holdings {
             let name = BLOCK_PARAMS[*pidx];
+            // one format + intern per (layer, param); per-holding work is
+            // Copy-id pushes and integer-keyed set inserts — this is what
+            // keeps build cost flat as the rank count grows.
+            let pk = keys.intern(&pkey(*l, name));
+            let gk = keys.intern(&gkey(*l, name));
             for h in hs {
-                grad_keys.push((h.dev, gkey(*l, name)));
-                update_ops.push((h.dev, pkey(*l, name), gkey(*l, name)));
-                owned.entry(h.dev).or_default().insert(pkey(*l, name));
+                grad_keys.push((h.dev, gk));
+                update_ops.push((h.dev, pk, gk));
+                owned.entry(h.dev).or_default().insert(pk);
             }
         }
+        let emb = keys.intern("emb");
+        let gf = keys.intern("gf");
+        let wout = keys.intern("wout");
+        let g_emb = keys.intern("grad.emb");
+        let g_gf = keys.intern("grad.gf");
+        let g_wout = keys.intern("grad.wout");
         for (&fr, &lr) in first_roots.iter().zip(last_roots.iter()) {
-            grad_keys.push((fr, "grad.emb".into()));
-            grad_keys.push((lr, "grad.gf".into()));
-            grad_keys.push((lr, "grad.wout".into()));
-            update_ops.push((fr, "emb".into(), "grad.emb".into()));
-            update_ops.push((lr, "gf".into(), "grad.gf".into()));
-            update_ops.push((lr, "wout".into(), "grad.wout".into()));
-            owned.entry(fr).or_default().insert("emb".into());
-            owned.entry(lr).or_default().insert("gf".into());
-            owned.entry(lr).or_default().insert("wout".into());
+            grad_keys.push((fr, g_emb));
+            grad_keys.push((lr, g_gf));
+            grad_keys.push((lr, g_wout));
+            update_ops.push((fr, emb, g_emb));
+            update_ops.push((lr, gf, g_gf));
+            update_ops.push((lr, wout, g_wout));
+            owned.entry(fr).or_default().insert(emb);
+            owned.entry(lr).or_default().insert(gf);
+            owned.entry(lr).or_default().insert(wout);
         }
 
         // ZeRO-1 partition plan: replica sets (devices holding identical
@@ -312,6 +330,7 @@ impl ShardLayout {
                 continue; // a device holding the param twice stays replicated
             }
             let name = BLOCK_PARAMS[*pidx];
+            let pk = keys.intern(&pkey(*l, name));
             let mut by_region: BTreeMap<Region, Vec<usize>> = BTreeMap::new();
             for h in hs {
                 by_region.entry(h.region.clone()).or_default().push(h.dev);
@@ -319,14 +338,14 @@ impl ShardLayout {
             for (region, mut devs) in by_region {
                 devs.sort_unstable();
                 if devs.len() > 1 {
-                    zero_groups.push(zero_partition(pkey(*l, name), &devs, &region));
+                    zero_groups.push(zero_partition(pk, &devs, &region));
                 }
             }
         }
         for (key, roots, shape) in [
-            ("emb", &first_roots, special_shape(cfg, "emb")),
-            ("gf", &last_roots, special_shape(cfg, "gf")),
-            ("wout", &last_roots, special_shape(cfg, "wout")),
+            (emb, &first_roots, special_shape(cfg, "emb")),
+            (gf, &last_roots, special_shape(cfg, "gf")),
+            (wout, &last_roots, special_shape(cfg, "wout")),
         ] {
             let mut devs = roots.clone();
             devs.sort_unstable();
@@ -334,16 +353,16 @@ impl ShardLayout {
             if devs.len() > 1 {
                 let region: Region =
                     shape.iter().map(|&n| Interval { lo: 0, hi: n }).collect();
-                zero_groups.push(zero_partition(key.into(), &devs, &region));
+                zero_groups.push(zero_partition(key, &devs, &region));
             }
         }
-        let mut zero_parts: BTreeMap<usize, BTreeMap<String, Option<Region>>> = BTreeMap::new();
+        let mut zero_parts: BTreeMap<usize, BTreeMap<KeyId, Option<Region>>> = BTreeMap::new();
         for g in &zero_groups {
             for &m in &g.members {
-                zero_parts.entry(m).or_default().insert(g.key.clone(), None);
+                zero_parts.entry(m).or_default().insert(g.key, None);
             }
             for (d, r) in &g.parts {
-                zero_parts.entry(*d).or_default().insert(g.key.clone(), Some(r.clone()));
+                zero_parts.entry(*d).or_default().insert(g.key, Some(r.clone()));
             }
         }
 
@@ -357,7 +376,20 @@ impl ShardLayout {
             zero_groups,
             owned,
             zero_parts,
+            keys,
         })
+    }
+
+    /// Resolve an interned key id back to its string (array index, no
+    /// allocation). Ids are only meaningful for this layout's table.
+    #[inline]
+    pub fn key(&self, id: KeyId) -> &str {
+        self.keys.resolve(id)
+    }
+
+    /// Id of a key string under this layout's table, if interned.
+    pub fn key_id(&self, key: &str) -> Option<KeyId> {
+        self.keys.lookup(key)
     }
 
     /// ZeRO-1 role of `(dev, param key)`: `None` when the pair is not in
@@ -365,7 +397,12 @@ impl ShardLayout {
     /// when grouped but owning no partition rows; `Some(Some(region))` for
     /// partition owners (local shard coordinates).
     pub fn zero_part(&self, dev: usize, key: &str) -> Option<Option<&Region>> {
-        self.zero_parts.get(&dev)?.get(key).map(|o| o.as_ref())
+        self.zero_part_id(dev, self.keys.lookup(key)?)
+    }
+
+    /// [`Self::zero_part`] by interned id — the per-step lookup path.
+    pub fn zero_part_id(&self, dev: usize, key: KeyId) -> Option<Option<&Region>> {
+        self.zero_parts.get(&dev)?.get(&key).map(|o| o.as_ref())
     }
 
     /// Holdings of one `(layer, param index)` (empty if uncovered).
@@ -390,8 +427,10 @@ impl ShardLayout {
     }
 
     /// Parameter keys `dev` owns under this layout (`L*.{param}`, `emb`,
-    /// `gf`, `wout`), or `None` if the device holds nothing.
-    pub fn owned_keys(&self, dev: usize) -> Option<&BTreeSet<String>> {
+    /// `gf`, `wout`) as interned ids, or `None` if the device holds
+    /// nothing. Resolve with [`Self::key`]; test membership of a string
+    /// via [`Self::key_id`] (a miss means "not owned").
+    pub fn owned_keys(&self, dev: usize) -> Option<&BTreeSet<KeyId>> {
         self.owned.get(&dev)
     }
 
@@ -472,6 +511,7 @@ mod tests {
         let (mut gain_groups, mut shard_groups) = (0, 0);
         for op in &layout.sync_ops {
             if let SyncOp::AllReduce { key, devs } = op {
+                let key = layout.key(*key);
                 if key.ends_with(".g1") || key.ends_with(".g2") {
                     assert_eq!(devs.len(), 4, "{key}");
                     gain_groups += 1;
@@ -493,11 +533,13 @@ mod tests {
         for op in &layout.sync_ops {
             match op {
                 SyncOp::AllReduce { key, devs } => {
+                    let key = layout.key(*key);
                     // only gains stay whole-tensor (3 holders: 0, 1, 2)
                     assert!(key.ends_with(".g1") || key.ends_with(".g2"), "{key}");
                     assert_eq!(devs.len(), 3);
                 }
                 SyncOp::SliceReduce { key, parts } => {
+                    let key = layout.key(*key);
                     saw_slice = true;
                     assert_eq!(parts.len(), 2, "{key}: tp2 shard + tp1 sub-slice");
                     // extents agree across parts
@@ -537,12 +579,13 @@ mod tests {
         let layout = ShardLayout::build(&cfg, &s).unwrap();
         assert!(!layout.zero_groups.is_empty());
         for g in &layout.zero_groups {
-            assert!(g.members.len() >= 2, "{}", g.key);
+            let key = layout.key(g.key);
+            assert!(g.members.len() >= 2, "{key}");
             // partitions tile dim 0 of the shard exactly
             let total: u64 = g.parts.iter().map(|(_, r)| r[0].len()).sum();
             let mut next = 0u64;
             for (_, r) in &g.parts {
-                assert_eq!(r[0].lo, next, "{}: gap in partition", g.key);
+                assert_eq!(r[0].lo, next, "{key}: gap in partition");
                 next = r[0].hi;
             }
             assert_eq!(total, next);
@@ -559,11 +602,11 @@ mod tests {
         // hetero-TP (ragged) sharings stay replicated
         let h = ShardLayout::build(&cfg, &hetero_strategy()).unwrap();
         assert!(
-            h.zero_groups.iter().all(|g| !g.key.ends_with(".wq")),
+            h.zero_groups.iter().all(|g| !h.key(g.key).ends_with(".wq")),
             "ragged wq sharing must not zero-shard"
         );
         // ...but its identically-held gains do form a group
-        assert!(h.zero_groups.iter().any(|g| g.key.ends_with(".g1")));
+        assert!(h.zero_groups.iter().any(|g| h.key(g.key).ends_with(".g1")));
     }
 
     #[test]
@@ -574,9 +617,9 @@ mod tests {
         assert_eq!(layout.first_roots, vec![0, 2]);
         assert_eq!(layout.last_roots, vec![1, 3]);
         let d0 = layout.owned_keys(0).unwrap();
-        assert!(d0.contains("emb"));
-        assert!(d0.contains("L0.wq"));
-        assert!(!d0.contains("L7.wq"));
+        assert!(d0.contains(&layout.key_id("emb").unwrap()));
+        assert!(d0.contains(&layout.key_id("L0.wq").unwrap()));
+        assert!(!d0.contains(&layout.key_id("L7.wq").unwrap()));
         assert!(layout.owned_keys(9).is_none());
         assert!(layout.region_of(0, 1, 0).is_some());
         assert!(layout.region_of(7, 1, 0).is_none());

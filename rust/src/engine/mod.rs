@@ -25,6 +25,7 @@
 
 pub mod compile;
 pub mod exec;
+pub mod intern;
 pub mod layout;
 pub mod optim;
 pub mod specialize;
@@ -40,6 +41,7 @@ use crate::spec::schedule::ScheduleKind;
 use crate::{Error, Result};
 
 pub use compile::{compile_program, CompiledOp, CompiledProgram, Seg, ShapeClass};
+pub use intern::{KeyId, KeyInterner};
 pub use layout::{ShardLayout, SyncOp, ZeroGroup};
 pub use optim::AdamW;
 pub use specialize::{specialize, HandoffEdge, RankPlan, SpecTask, SpecTaskKind, SpecializedPlan};
@@ -523,7 +525,9 @@ impl Engine {
         self.layout
             .update_ops
             .iter()
-            .any(|(dev, pk, _)| self.mesh.devices[*dev].has(&format!("m.{pk}")))
+            .any(|(dev, pk, _)| {
+                self.mesh.devices[*dev].has(&format!("m.{}", self.layout.key(*pk)))
+            })
     }
 
     /// Set the per-pipeline *ragged micro-batch windows* for subsequent

@@ -40,6 +40,14 @@
 //! just tasks, the executor can inject a switch's per-sender delivery
 //! batches into the first post-switch step's timelines — the §6.2
 //! *measured* interleave (DESIGN.md §7.3).
+//!
+//! **Scale note (DESIGN.md §11).** Task and dependency structures here
+//! are purely coordinate-based — `(pipe, stage, mb, layer)` integers and
+//! task-index edges, no tensor-key strings. The string↔id boundary sits
+//! one layer down: [`ShardLayout`] interns its keys as
+//! [`KeyId`](super::intern::KeyId)s at build time, and the compile pass
+//! freezes its own interned ids into the tape. That keeps specialization
+//! of generated 1024-rank strategies free of per-task string work.
 
 use std::collections::{BTreeMap, BTreeSet};
 

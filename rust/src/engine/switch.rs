@@ -429,7 +429,12 @@ impl Engine {
             let owned = new_layout.owned_keys(dev);
             for key in keys {
                 let drop = match param_base(&key) {
-                    Some(base) => owned.map(|o| !o.contains(base)).unwrap_or(true),
+                    // a base the new layout never interned is owned nowhere
+                    Some(base) => match (owned, new_layout.key_id(base)) {
+                        (Some(o), Some(id)) => !o.contains(&id),
+                        (Some(_), None) => true,
+                        (None, _) => true,
+                    },
                     // transient buffers only linger on devices that left
                     // the strategy entirely
                     None => owned.is_none(),

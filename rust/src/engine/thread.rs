@@ -51,6 +51,7 @@ use crate::{Error, Result};
 
 use super::compile::{CompiledOp, CompiledProgram};
 use super::exec::{accumulate, SpecRunOutcome};
+use super::intern::KeyId;
 use super::layout::{gkey, pkey, ShardLayout, SyncOp};
 use super::specialize::{SpecTaskKind, SpecializedPlan};
 use super::{AdamW, Engine, EnginePipeline, MicroBatch, BLOCK_PARAMS};
@@ -173,12 +174,17 @@ fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|p| p.into_inner())
 }
 
-/// Frozen key when the compiled tape carries one, else the formatted
+/// Frozen key when the compiled tape carries one (resolved through the
+/// program's interner — pure array indexing), else the formatted
 /// fallback — the threaded dispatch's zero-format fast path.
-fn key_or<'a>(k: Option<&'a str>, make: impl FnOnce() -> String) -> Cow<'a, str> {
-    match k {
-        Some(s) => Cow::Borrowed(s),
-        None => Cow::Owned(make()),
+fn key_or<'a>(
+    prog: Option<&'a CompiledProgram>,
+    id: Option<KeyId>,
+    make: impl FnOnce() -> String,
+) -> Cow<'a, str> {
+    match (prog, id) {
+        (Some(p), Some(id)) => Cow::Borrowed(p.key(id)),
+        _ => Cow::Owned(make()),
     }
 }
 
@@ -349,9 +355,11 @@ impl<'e> Shared<'e> {
         }
         for op in &self.layout.sync_ops {
             match op {
-                SyncOp::AllReduce { key, devs } => self.all_reduce_mesh(devs, key)?,
+                SyncOp::AllReduce { key, devs } => {
+                    self.all_reduce_mesh(devs, self.layout.key(*key))?
+                }
                 SyncOp::SliceReduce { key, parts } => {
-                    self.all_reduce_region_mesh(parts, key)?
+                    self.all_reduce_region_mesh(parts, self.layout.key(*key))?
                 }
             }
         }
@@ -360,7 +368,7 @@ impl<'e> Shared<'e> {
         self.all_reduce_mesh(&self.layout.last_roots, "grad.wout")?;
         let scale = 1.0 / tokens as f32;
         for (dev, key) in &self.layout.grad_keys {
-            self.lock_dev(*dev).get_mut(key)?.scale(scale)?;
+            self.lock_dev(*dev).get_mut(self.layout.key(*key))?.scale(scale)?;
         }
         Ok(())
     }
@@ -369,11 +377,12 @@ impl<'e> Shared<'e> {
     /// `exchange_zero1_slices` including the one-grouped-op accounting.
     fn zero_exchange(&self) -> Result<()> {
         for g in &self.layout.zero_groups {
+            let key = self.layout.key(g.key);
             for (owner, region) in &g.parts {
-                let piece = extract_region(self.lock_dev(*owner).get(&g.key)?, region)?;
+                let piece = extract_region(self.lock_dev(*owner).get(key)?, region)?;
                 for &m in &g.members {
                     if m != *owner {
-                        write_region(self.lock_dev(m).get_mut(&g.key)?, region, &piece)?;
+                        write_region(self.lock_dev(m).get_mut(key)?, region, &piece)?;
                         self.wire.fetch_add(piece.len() as u64, Ordering::Relaxed);
                     }
                 }
@@ -557,7 +566,7 @@ impl Worker<'_, '_> {
     ) -> Result<()> {
         let sh = self.sh;
         let stage = &sh.pipelines[pi].stages[si];
-        let akey = key_or(cop.and_then(|o| o.act_key()), || Engine::akey(pi, mb));
+        let akey = key_or(sh.prog, cop.and_then(|o| o.act_key()), || Engine::akey(pi, mb));
         if self.rank == stage.devices[0] {
             if si == 0 {
                 let batch = &sh.batches[pi][mb];
@@ -598,16 +607,17 @@ impl Worker<'_, '_> {
     ) -> Result<()> {
         let sh = self.sh;
         let stage = &sh.pipelines[pi].stages[si];
-        let akey = key_or(cop.and_then(|o| o.act_key()), || Engine::akey(pi, mb));
-        let skey = key_or(cop.and_then(|o| o.save_key()), || Engine::skey(pi, mb, l));
-        let art =
-            key_or(cop.and_then(|o| o.artifact()), || format!("block_fwd_tp{}", stage.tp()));
-        let pk_owned: Vec<String>;
-        let pkeys: &[String] = match cop.and_then(|o| o.param_keys()) {
-            Some(ks) => ks,
-            None => {
-                pk_owned = BLOCK_PARAMS.iter().map(|p| pkey(l, p)).collect();
-                &pk_owned
+        let akey = key_or(sh.prog, cop.and_then(|o| o.act_key()), || Engine::akey(pi, mb));
+        let skey = key_or(sh.prog, cop.and_then(|o| o.save_key()), || Engine::skey(pi, mb, l));
+        let art = key_or(sh.prog, cop.and_then(|o| o.artifact()), || {
+            format!("block_fwd_tp{}", stage.tp())
+        });
+        let pk_owned: [String; 8];
+        let pkeys: [&str; 8] = match (sh.prog, cop.and_then(|o| o.param_keys())) {
+            (Some(p), Some(ids)) => ids.map(|id| p.key(id)),
+            _ => {
+                pk_owned = std::array::from_fn(|i| pkey(l, BLOCK_PARAMS[i]));
+                std::array::from_fn(|i| pk_owned[i].as_str())
             }
         };
         let mut dev = sh.lock_dev(self.rank);
@@ -644,9 +654,9 @@ impl Worker<'_, '_> {
         let stage = &sh.pipelines[pi].stages[si];
         let group = &stage.devices;
         let (part_key, xkey) = if fwd {
-            ("part", key_or(cop.and_then(|o| o.act_key()), || Engine::akey(pi, mb)))
+            ("part", key_or(sh.prog, cop.and_then(|o| o.act_key()), || Engine::akey(pi, mb)))
         } else {
-            ("dpart", key_or(cop.and_then(|o| o.grad_key()), || Engine::dkey(pi, mb)))
+            ("dpart", key_or(sh.prog, cop.and_then(|o| o.grad_key()), || Engine::dkey(pi, mb)))
         };
         if group.len() <= 1 {
             // degenerate group: the mesh all-reduce is a no-op (no wire,
@@ -701,8 +711,8 @@ impl Worker<'_, '_> {
         let pipe = &sh.pipelines[pi];
         let stage = &pipe.stages[si];
         let last = pipe.stages.len() - 1;
-        let akey = key_or(cop.and_then(|o| o.act_key()), || Engine::akey(pi, mb));
-        let dkey = key_or(cop.and_then(|o| o.grad_key()), || Engine::dkey(pi, mb));
+        let akey = key_or(sh.prog, cop.and_then(|o| o.act_key()), || Engine::akey(pi, mb));
+        let dkey = key_or(sh.prog, cop.and_then(|o| o.grad_key()), || Engine::dkey(pi, mb));
         if self.rank == stage.devices[0] {
             if si == last {
                 let batch = &sh.batches[pi][mb];
@@ -762,24 +772,25 @@ impl Worker<'_, '_> {
     ) -> Result<()> {
         let sh = self.sh;
         let stage = &sh.pipelines[pi].stages[si];
-        let dkey = key_or(cop.and_then(|o| o.grad_key()), || Engine::dkey(pi, mb));
-        let skey = key_or(cop.and_then(|o| o.save_key()), || Engine::skey(pi, mb, l));
-        let art =
-            key_or(cop.and_then(|o| o.artifact()), || format!("block_bwd_tp{}", stage.tp()));
-        let pk_owned: Vec<String>;
-        let pkeys: &[String] = match cop.and_then(|o| o.param_keys()) {
-            Some(ks) => ks,
-            None => {
-                pk_owned = BLOCK_PARAMS.iter().map(|p| pkey(l, p)).collect();
-                &pk_owned
+        let dkey = key_or(sh.prog, cop.and_then(|o| o.grad_key()), || Engine::dkey(pi, mb));
+        let skey = key_or(sh.prog, cop.and_then(|o| o.save_key()), || Engine::skey(pi, mb, l));
+        let art = key_or(sh.prog, cop.and_then(|o| o.artifact()), || {
+            format!("block_bwd_tp{}", stage.tp())
+        });
+        let pk_owned: [String; 8];
+        let pkeys: [&str; 8] = match (sh.prog, cop.and_then(|o| o.param_keys())) {
+            (Some(p), Some(ids)) => ids.map(|id| p.key(id)),
+            _ => {
+                pk_owned = std::array::from_fn(|i| pkey(l, BLOCK_PARAMS[i]));
+                std::array::from_fn(|i| pk_owned[i].as_str())
             }
         };
-        let gk_owned: Vec<String>;
-        let gkeys: &[String] = match cop.and_then(|o| o.grad_param_keys()) {
-            Some(ks) => ks,
-            None => {
-                gk_owned = BLOCK_PARAMS.iter().map(|p| gkey(l, p)).collect();
-                &gk_owned
+        let gk_owned: [String; 8];
+        let gkeys: [&str; 8] = match (sh.prog, cop.and_then(|o| o.grad_param_keys())) {
+            (Some(p), Some(ids)) => ids.map(|id| p.key(id)),
+            _ => {
+                gk_owned = std::array::from_fn(|i| gkey(l, BLOCK_PARAMS[i]));
+                std::array::from_fn(|i| gk_owned[i].as_str())
             }
         };
         let mut dev = sh.lock_dev(self.rank);
@@ -807,7 +818,7 @@ impl Worker<'_, '_> {
     fn embed_bwd(&mut self, pi: usize, mb: usize, cop: Option<&CompiledOp>) -> Result<()> {
         let sh = self.sh;
         let stage = &sh.pipelines[pi].stages[0];
-        let dkey = key_or(cop.and_then(|o| o.grad_key()), || Engine::dkey(pi, mb));
+        let dkey = key_or(sh.prog, cop.and_then(|o| o.grad_key()), || Engine::dkey(pi, mb));
         let mut dev = sh.lock_dev(self.rank);
         if self.rank == stage.devices[0] {
             let batch = &sh.batches[pi][mb];
@@ -837,18 +848,19 @@ impl Worker<'_, '_> {
             if *d != self.rank {
                 continue;
             }
+            let (pk, gk) = (sh.layout.key(*param_key), sh.layout.key(*grad_key));
             if !sh.zero1 {
-                sh.opt.update(&mut dev, param_key, grad_key, step)?;
+                sh.opt.update(&mut dev, pk, gk, step)?;
                 continue;
             }
-            match sh.layout.zero_part(*d, param_key) {
+            match sh.layout.zero_part_id(*d, *param_key) {
                 Some(Some(region)) => {
-                    sh.opt.update_region(&mut dev, param_key, grad_key, region, step)?
+                    sh.opt.update_region(&mut dev, pk, gk, region, step)?
                 }
                 Some(None) => {
-                    let _ = dev.take(grad_key);
+                    let _ = dev.take(gk);
                 }
-                None => sh.opt.update(&mut dev, param_key, grad_key, step)?,
+                None => sh.opt.update(&mut dev, pk, gk, step)?,
             }
         }
         Ok(())

@@ -57,6 +57,30 @@ pub fn lower(
     cfg: &ManifestConfig,
     opts: &LowerOptions,
 ) -> Result<EngineStrategy> {
+    lower_impl(strat, cfg, opts, None)
+}
+
+/// Lower onto an explicit device list instead of the dense `0..n`
+/// renumbering: stage slots are drawn from `devices` in (pipeline, stage)
+/// order. This is how elastic re-synthesis maps a fresh strategy onto the
+/// surviving mesh devices after a failure — the dead device indices simply
+/// never appear in `devices`. Errors if the strategy needs more device
+/// slots than provided.
+pub fn lower_onto(
+    strat: &ParallelStrategy,
+    cfg: &ManifestConfig,
+    opts: &LowerOptions,
+    devices: &[usize],
+) -> Result<EngineStrategy> {
+    lower_impl(strat, cfg, opts, Some(devices))
+}
+
+fn lower_impl(
+    strat: &ParallelStrategy,
+    cfg: &ManifestConfig,
+    opts: &LowerOptions,
+    devices: Option<&[usize]>,
+) -> Result<EngineStrategy> {
     let src_layers = strat
         .pipelines
         .iter()
@@ -96,7 +120,20 @@ pub fn lower(
                         opts.tp_degrees
                     ))
                 })?;
-            stages.push(EngineStage { devices: (dev..dev + tp).collect(), layers: (lo, *hi) });
+            let slot: Vec<usize> = match devices {
+                Some(ds) => {
+                    if dev + tp > ds.len() {
+                        return Err(Error::Strategy(format!(
+                            "{}: needs more than the {} provided devices",
+                            strat.name,
+                            ds.len()
+                        )));
+                    }
+                    ds[dev..dev + tp].to_vec()
+                }
+                None => (dev..dev + tp).collect(),
+            };
+            stages.push(EngineStage { devices: slot, layers: (lo, *hi) });
             dev += tp;
             lo = *hi;
         }
@@ -281,5 +318,33 @@ mod tests {
         let direct = EngineStrategy::uniform("dp2tp2pp2", 2, 2, 2, cfg.layers, 4);
         assert_eq!(lowered.pipelines, direct.pipelines);
         assert_eq!(lowered.schedule, direct.schedule);
+    }
+
+    #[test]
+    fn lower_onto_maps_slots_to_survivor_devices() {
+        let cfg = native::tiny_config();
+        let c2 = tables::hetu_c2_31h20(); // needs 31 device slots
+        // survivors: a 40-device mesh with devices 3 and 17 dead
+        let survivors: Vec<usize> = (0..40).filter(|d| *d != 3 && *d != 17).collect();
+        let e = lower_onto(&c2, &cfg, &opts(7), &survivors).unwrap();
+        e.validate(&cfg, &[1, 2, 4]).unwrap();
+        let used: Vec<usize> = e
+            .pipelines
+            .iter()
+            .flat_map(|p| p.stages.iter().flat_map(|s| s.devices.iter().copied()))
+            .collect();
+        assert_eq!(used, survivors[..31].to_vec(), "slots drawn in order from survivors");
+        assert!(!used.contains(&3) && !used.contains(&17));
+        // identical structure to the dense lowering, just renamed devices
+        let dense = lower(&c2, &cfg, &opts(7)).unwrap();
+        for (pe, pd) in e.pipelines.iter().zip(dense.pipelines.iter()) {
+            assert_eq!(pe.num_microbatches, pd.num_microbatches);
+            for (se, sd) in pe.stages.iter().zip(pd.stages.iter()) {
+                assert_eq!(se.layers, sd.layers);
+                assert_eq!(se.devices.len(), sd.devices.len());
+            }
+        }
+        // too few devices is an error, not a truncation
+        assert!(lower_onto(&c2, &cfg, &opts(7), &survivors[..20]).is_err());
     }
 }

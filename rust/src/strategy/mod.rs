@@ -12,9 +12,11 @@ pub mod generate;
 pub mod lower;
 pub mod memory;
 pub mod search;
+pub mod synth;
 pub mod tables;
 
-pub use lower::{lower, LowerOptions};
+pub use lower::{lower, lower_onto, LowerOptions};
+pub use synth::{synthesize, SynthOptions, SynthReport};
 
 use crate::hspmd::dg::Rank;
 use crate::hspmd::{Annotation, DeviceGroup, DistStates, Subgroup};

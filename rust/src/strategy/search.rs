@@ -1,51 +1,34 @@
-//! Cost-model-driven strategy selection.
+//! Cost-model-driven strategy selection (legacy surface).
 //!
 //! The paper selects strategies "using pre-profiled results combined with a
-//! cost model" (App. A.3). We reproduce that: candidate strategies are
-//! filtered by per-device memory feasibility and ranked by simulated step
-//! time.
+//! cost model" (App. A.3). The actual selection logic — one memory-
+//! feasibility gate, alive-rank filtering, simulated ranking — now lives in
+//! [`crate::strategy::synth`]; this module keeps the original entry points
+//! as thin deprecated wrappers so older call sites keep compiling.
 
 use crate::cluster::Cluster;
 use crate::costmodel::CostModel;
-use crate::sim::simulate_step;
 use crate::strategy::ParallelStrategy;
-use crate::{Error, Result};
+use crate::Result;
 
-/// Check every stage of `strat` fits its devices' memory (delegates to the
-/// per-stage planner in [`crate::strategy::memory`], which models schedule-
-/// dependent activation liveness).
+/// Check every stage of `strat` fits its devices' memory.
+#[deprecated(note = "use strategy::synth::memory_feasible")]
 pub fn memory_feasible(cluster: &Cluster, cm: &CostModel, strat: &ParallelStrategy) -> bool {
-    crate::strategy::memory::plan(cm, cluster, strat).1
+    super::synth::memory_feasible(cluster, cm, strat)
 }
 
 /// Pick the memory-feasible candidate with the lowest simulated step time.
+#[deprecated(note = "use strategy::synth::best")]
 pub fn choose_best(
     cluster: &Cluster,
     cm: &CostModel,
     candidates: &[ParallelStrategy],
 ) -> Result<(ParallelStrategy, f64)> {
-    let mut best: Option<(ParallelStrategy, f64)> = None;
-    for c in candidates {
-        if !memory_feasible(cluster, cm, c) {
-            continue;
-        }
-        // strategies must only use alive devices
-        let alive = cluster.alive_ranks();
-        if !c.ranks().iter().all(|r| alive.contains(r)) {
-            continue;
-        }
-        let t = match simulate_step(cluster, cm, c) {
-            Ok(rep) => rep.step_s,
-            Err(_) => continue,
-        };
-        if best.as_ref().map(|(_, bt)| t < *bt).unwrap_or(true) {
-            best = Some((c.clone(), t));
-        }
-    }
-    best.ok_or_else(|| Error::Strategy("no feasible candidate strategy".into()))
+    super::synth::best(cluster, cm, candidates)
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::costmodel::ModelCfg;

@@ -8,6 +8,16 @@
 //! `(from, to, moments?)` triple, so steady-state A↔B oscillation (the
 //! common Fig 16 cadence) never re-plans. Failover switches (`dead` set)
 //! bypass the cache and re-plan fresh.
+//!
+//! Both caches are keyed by **entry index + scalar inputs** (tuples of
+//! `usize`/enum/flag), never by tensor-key strings: the string↔id mapping
+//! lives inside each pooled artifact's own
+//! [`KeyInterner`](crate::engine::KeyInterner) (the `ShardLayout` and the
+//! `CompiledProgram` each carry one), so pooling, sharing, and eviction
+//! never touch per-key string state. Entries may be appended at runtime
+//! ([`StrategyPool::add_entry`] — elastic re-synthesis proposes fresh
+//! strategies for a degraded cluster); appending never invalidates the
+//! index-keyed caches.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -107,6 +117,20 @@ impl StrategyPool {
         })
     }
 
+    /// Append a freshly synthesized strategy to the pool at runtime,
+    /// instantiating its [`ShardLayout`] once like construction does.
+    /// Returns the new entry's index. Existing plan/artifact cache
+    /// entries stay valid — both caches key on entry indices, and
+    /// appending never renumbers them. This is the elastic re-synthesis
+    /// entry point: after a failover shrinks the usable cluster,
+    /// [`crate::elastic::resynthesize`] searches a replacement strategy
+    /// for the survivors and pools it here before switching onto it.
+    pub fn add_entry(&mut self, strategy: EngineStrategy, ctx: u64) -> Result<usize> {
+        let layout = Arc::new(ShardLayout::build(&self.cfg, &strategy)?);
+        self.entries.push(PoolEntry { strategy, layout, ctx });
+        Ok(self.entries.len() - 1)
+    }
+
     /// Number of pooled strategies.
     pub fn len(&self) -> usize {
         self.entries.len()
@@ -125,6 +149,12 @@ impl StrategyPool {
     /// All entries.
     pub fn entries(&self) -> &[PoolEntry] {
         &self.entries
+    }
+
+    /// The model configuration every pooled strategy is lowered against
+    /// (elastic re-synthesis lowers replacement strategies onto it).
+    pub fn cfg(&self) -> &ManifestConfig {
+        &self.cfg
     }
 
     /// Pool index whose topology matches `strategy`, if any.

@@ -1,0 +1,303 @@
+//! Cluster-scale strategy synthesis, end to end.
+//!
+//! Property sweeps over generated [`ClusterSpec`] clusters, cross-validation
+//! of the synthesis ranking against engine-measured step times, the CI synth
+//! smoke path (generated cluster → search → lower → one engine step at
+//! bit-identity), and elastic re-synthesis under multi-rank concurrent
+//! failure.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use hetu::cluster::{Cluster, ClusterSpec, GPUS_PER_NODE};
+use hetu::coordinator::SyntheticCorpus;
+use hetu::costmodel::{CostModel, ModelCfg};
+use hetu::engine::{Engine, EngineStrategy, ExecMode, MicroBatch};
+use hetu::runtime::{native, Runtime};
+use hetu::strategy::{lower, synthesize, LowerOptions, SynthOptions};
+use hetu::temporal::StrategyPool;
+
+fn lopts() -> LowerOptions {
+    LowerOptions { total_microbatches: 8, tp_degrees: vec![1, 2, 4] }
+}
+
+/// A fixed per-(pipeline, microbatch) batch pool so every execution mode of
+/// the same strategy consumes identical data regardless of request order.
+struct Pool {
+    mbs: Vec<MicroBatch>,
+    offsets: Vec<usize>,
+}
+
+impl Pool {
+    fn for_strategy(strat: &EngineStrategy, b: usize, s: usize, vocab: usize) -> Pool {
+        let counts: Vec<usize> = strat.pipelines.iter().map(|p| p.num_microbatches).collect();
+        let total: usize = counts.iter().sum();
+        let mut corpus = SyntheticCorpus::new(1234, vocab);
+        let mut offsets = vec![0usize];
+        for &c in &counts[..counts.len() - 1] {
+            offsets.push(offsets.last().unwrap() + c);
+        }
+        Pool { mbs: (0..total).map(|_| corpus.microbatch(b, s)).collect(), offsets }
+    }
+
+    fn get(&self, pipe: usize, mb: usize) -> MicroBatch {
+        self.mbs[self.offsets[pipe] + mb].clone()
+    }
+}
+
+#[test]
+fn generated_cluster_synthesis_property_sweep() {
+    let cm = CostModel::new(ModelCfg::llama_32b());
+    let cfg = native::tiny_config();
+    let mut rng = hetu::testutil::Rng::new(0x5EED_5EED);
+    for case in 0..10 {
+        let nodes = rng.range(2, 8) as u32;
+        let spec = ClusterSpec::new(rng.next_u64(), nodes);
+        let cluster = spec.build();
+        assert_eq!(cluster.devices.len() as u32, spec.num_ranks(), "case {case}");
+        let rep = synthesize(&cluster, &cm, &SynthOptions::new(64, 4096))
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        // the pruning ledger always balances
+        assert_eq!(
+            rep.generated,
+            rep.pruned_memory + rep.pruned_bound + rep.simulated,
+            "case {case}: ledger"
+        );
+        for (s, step_s) in &rep.ranked {
+            assert!(*step_s > 0.0, "case {case}: {}", s.name);
+            // layer conservation, >= 1 layer per stage, globally disjoint
+            // ranks — all enforced by validate
+            s.validate(cm.model.layers).unwrap_or_else(|e| panic!("case {case}: {e}"));
+            for p in &s.pipelines {
+                for st in &p.stages {
+                    // TP clamped to node-local same-kind device counts
+                    assert!(st.tp() <= GPUS_PER_NODE, "case {case}: tp {}", st.tp());
+                    let d0 = cluster.device(st.ranks[0]);
+                    for &r in &st.ranks {
+                        let d = cluster.device(r);
+                        assert!(d.alive, "case {case}: dead rank {r}");
+                        assert_eq!(d.node, d0.node, "case {case}: TP group crosses nodes");
+                        assert_eq!(
+                            d.kind.name, d0.kind.name,
+                            "case {case}: TP group mixes kinds"
+                        );
+                    }
+                }
+            }
+            // round-trip through lower() whenever the shape fits the tiny
+            // engine's stage budget
+            if s.pipelines.iter().all(|p| p.stages.len() as u32 <= cfg.layers) {
+                let mut lo = lopts();
+                lo.total_microbatches = lo.total_microbatches.max(s.pipelines.len());
+                let e = lower(s, &cfg, &lo).unwrap_or_else(|e| panic!("case {case}: {e}"));
+                e.validate(&cfg, &[1, 2, 4]).unwrap_or_else(|e| panic!("case {case}: {e}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn synth_top_k_matches_engine_measured_ordering() {
+    // A generated heterogeneous cluster (first seed mixing >= 2 device
+    // kinds across 2 nodes). The tiny engine's devices all run at the same
+    // CPU speed, so the assertion is restricted to candidates whose sim
+    // ranking is structural — distinct lowered pipeline shapes with a
+    // >= 25% simulated separation — not hardware-speed driven.
+    let spec = (0..64u64)
+        .map(|s| ClusterSpec::new(s, 2))
+        .find(|sp| {
+            let kinds: BTreeSet<&str> =
+                sp.build().devices.iter().map(|d| d.kind.name).collect();
+            kinds.len() >= 2
+        })
+        .expect("some seed in 0..64 mixes device kinds");
+    let cluster = spec.build();
+    let cm = CostModel::new(ModelCfg::tiny_100m());
+    let mut opts = SynthOptions::new(16, 2048);
+    opts.top_k = 32;
+    let rep = synthesize(&cluster, &cm, &opts).unwrap();
+    assert!(rep.ranked.len() >= 3, "only {} ranked candidates", rep.ranked.len());
+
+    let cfg = native::tiny_config();
+    let mut picked: Vec<(f64, EngineStrategy)> = vec![];
+    let mut shapes: BTreeSet<Vec<(usize, usize)>> = BTreeSet::new();
+    for (s, t) in &rep.ranked {
+        let Ok(low) = lower(s, &cfg, &lopts()) else { continue };
+        let shape: Vec<(usize, usize)> =
+            low.pipelines.iter().map(|p| (p.stages.len(), p.num_microbatches)).collect();
+        if !shapes.insert(shape) {
+            continue;
+        }
+        if let Some((lt, _)) = picked.last() {
+            if *t < lt * 1.25 {
+                continue;
+            }
+        }
+        picked.push((*t, low));
+        if picked.len() == 3 {
+            break;
+        }
+    }
+    assert!(
+        picked.len() >= 3,
+        "need 3 structurally distinct, well-separated candidates, got {}",
+        picked.len()
+    );
+
+    let mut measured = vec![];
+    for (_, low) in &picked {
+        let mut eng =
+            Engine::with_runtime(Runtime::native(cfg), low.clone(), 42, 1e-3).unwrap();
+        let pool = Pool::for_strategy(low, cfg.batch, cfg.seq, cfg.vocab);
+        // min over a few steps damps scheduler noise
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            best = best.min(eng.train_step(&mut |p, m| pool.get(p, m)).unwrap().makespan_s);
+        }
+        assert!(best > 0.0);
+        measured.push(best);
+    }
+    for w in 0..measured.len() - 1 {
+        assert!(
+            measured[w] < measured[w + 1],
+            "engine makespans {measured:?} disagree with synth ranking {:?}",
+            picked.iter().map(|(t, _)| *t).collect::<Vec<_>>()
+        );
+    }
+}
+
+#[test]
+fn synth_smoke_lowered_strategy_is_bit_identical() {
+    // The CI smoke path: generated cluster → synthesize → lower → one
+    // engine step, bit-identical across reference / event-driven /
+    // compiled execution.
+    let cluster = ClusterSpec::new(3, 2).build();
+    let cm = CostModel::new(ModelCfg::tiny_100m());
+    let rep = synthesize(&cluster, &cm, &SynthOptions::new(16, 2048)).unwrap();
+    let cfg = native::tiny_config();
+    let low = rep
+        .ranked
+        .iter()
+        .find_map(|(s, _)| lower(s, &cfg, &lopts()).ok())
+        .expect("a ranked strategy lowers onto the tiny engine");
+    low.validate(&cfg, &[1, 2, 4]).unwrap();
+
+    let pool = Pool::for_strategy(&low, cfg.batch, cfg.seq, cfg.vocab);
+    let run = |mode: Option<ExecMode>, reference: bool| {
+        let mut eng =
+            Engine::with_runtime(Runtime::native(cfg), low.clone(), 42, 1e-3).unwrap();
+        if let Some(m) = mode {
+            eng.set_exec_mode(m);
+        }
+        let stats = if reference {
+            eng.train_step_reference(&mut |p, m| pool.get(p, m)).unwrap()
+        } else {
+            eng.train_step(&mut |p, m| pool.get(p, m)).unwrap()
+        };
+        (stats.loss, stats.wire_elems, stats.comm_ops)
+    };
+    let (lr, wr, cr) = run(None, true);
+    let (le, we, ce) = run(None, false);
+    let (lc, wc, cc) = run(Some(ExecMode::Compiled), false);
+    assert!(lr.is_finite());
+    assert_eq!(lr.to_bits(), le.to_bits(), "event-driven loss bits diverge");
+    assert_eq!(lr.to_bits(), lc.to_bits(), "compiled loss bits diverge");
+    assert_eq!((wr, cr), (we, ce), "event-driven wire/ops diverge");
+    assert_eq!((wr, cr), (wc, cc), "compiled wire/ops diverge");
+}
+
+#[test]
+fn resynthesize_survives_concurrent_tp_group_loss() {
+    // Two ranks die at once, spanning the whole second TP group of
+    // pipeline 0 (devices 2,3 of dp2tp2pp2). Re-synthesis must find a
+    // replacement on the 6 survivors, switch onto it, and keep the loss
+    // continuous.
+    let cfg = native::tiny_config();
+    let base = EngineStrategy::uniform("dp2tp2pp2", 2, 2, 2, cfg.layers, 4);
+    let mut pool = StrategyPool::new(cfg, vec![(base, 4096)]).unwrap();
+    let mut eng = pool.spawn_engine(Runtime::native(cfg), 0, 42, 1e-3).unwrap();
+    let mut corpus = SyntheticCorpus::new(5, cfg.vocab);
+    let (b, s) = (cfg.batch, cfg.seq);
+    let pre = eng.train_step(&mut |_p, _m| corpus.microbatch(b, s)).unwrap().loss;
+
+    let dead = [2usize, 3];
+    let mut cluster = Cluster::h20(8);
+    for &d in &dead {
+        cluster.fail_gpu(d as u32);
+    }
+    let cm = CostModel::new(ModelCfg::tiny_100m());
+    let rep = hetu::elastic::resynthesize(
+        &mut pool, &mut eng, &cluster, &cm, &dead, 16, 2048, &lopts(),
+    )
+    .unwrap();
+
+    // the replacement entry exists, inherits the bucket context, and
+    // schedules only survivors
+    assert_eq!(rep.entry, 1);
+    assert_eq!(pool.entry(rep.entry).ctx, 4096);
+    assert!(rep.sim_step_s > 0.0);
+    let used: BTreeSet<usize> = eng
+        .strategy
+        .pipelines
+        .iter()
+        .flat_map(|p| p.stages.iter().flat_map(|st| st.devices.iter().copied()))
+        .collect();
+    assert!(!used.contains(&2) && !used.contains(&3), "replacement uses dead devices");
+    assert!(!used.is_empty());
+    // dead devices hold no state after the switch
+    assert!(eng.mesh.devices[2].keys().is_empty());
+    assert!(eng.mesh.devices[3].keys().is_empty());
+    // loss continuity across the reconfiguration
+    let post = eng.train_step(&mut |_p, _m| corpus.microbatch(b, s)).unwrap().loss;
+    assert!(post.is_finite());
+    assert!((post - pre).abs() < 1.0, "loss continuity: pre {pre} post {post}");
+}
+
+#[test]
+fn resynthesized_entry_does_not_pollute_artifact_cache() {
+    // Three concurrent deaths (a full TP group plus one more rank). The
+    // compiled artifact for the re-synthesized entry must be keyed without
+    // any notion of the dead set: a healthy engine landing on the same
+    // entry shares the identical pooled program and trains bit-identically
+    // to the reference interpreter.
+    let cfg = native::tiny_config();
+    let base = EngineStrategy::uniform("dp2tp2pp2", 2, 2, 2, cfg.layers, 4);
+    let mut pool = StrategyPool::new(cfg, vec![(base, 4096)]).unwrap();
+    let mut eng = pool.spawn_engine(Runtime::native(cfg), 0, 42, 1e-3).unwrap();
+    let mut corpus = SyntheticCorpus::new(5, cfg.vocab);
+    let (b, s) = (cfg.batch, cfg.seq);
+    eng.train_step(&mut |_p, _m| corpus.microbatch(b, s)).unwrap();
+
+    let dead = [2usize, 3, 5];
+    let mut cluster = Cluster::h20(8);
+    for &d in &dead {
+        cluster.fail_gpu(d as u32);
+    }
+    let cm = CostModel::new(ModelCfg::tiny_100m());
+    let rep = hetu::elastic::resynthesize(
+        &mut pool, &mut eng, &cluster, &cm, &dead, 16, 2048, &lopts(),
+    )
+    .unwrap();
+
+    let p_failover = pool.compiled_for(&mut eng).unwrap();
+    assert_eq!((pool.artifact_hits(), pool.artifact_misses()), (0, 1));
+
+    // a fresh healthy engine on the re-synthesized entry: plain cache hit,
+    // same Arc
+    let mut healthy =
+        pool.spawn_engine_compiled(Runtime::native(cfg), rep.entry, 7, 1e-3).unwrap();
+    let p_healthy = pool.compiled_for(&mut healthy).unwrap();
+    assert!(
+        Arc::ptr_eq(&p_failover, &p_healthy),
+        "failover recompile and healthy compile must share one pooled program"
+    );
+    assert_eq!((pool.artifact_hits(), pool.artifact_misses()), (1, 1));
+
+    // and the shared tape trains the healthy engine bit-identically
+    let mut refr = pool.spawn_engine(Runtime::native(cfg), rep.entry, 7, 1e-3).unwrap();
+    let data = Pool::for_strategy(&healthy.strategy, cfg.batch, cfg.seq, cfg.vocab);
+    let a = healthy.train_step(&mut |p, m| data.get(p, m)).unwrap();
+    let r = refr.train_step_reference(&mut |p, m| data.get(p, m)).unwrap();
+    assert_eq!(a.loss.to_bits(), r.loss.to_bits(), "compiled loss bits diverge");
+    assert_eq!(a.wire_elems, r.wire_elems);
+}

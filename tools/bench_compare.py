@@ -41,6 +41,11 @@ GUARDED = {
         "step wall lowered-C2 compiled dispatch",
         "compile lowered-C2 -> rank tape",
         "trace_overhead",
+        "specialize 256-rank generated strategy",
+        "compile 256-rank generated strategy",
+        "specialize 1024-rank generated strategy",
+        "compile 1024-rank generated strategy",
+        "synth 1024-rank search",
     ],
     "temporal": [],
     "fig15": [],
