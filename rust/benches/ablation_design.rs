@@ -12,7 +12,8 @@ use hetu::costmodel::{CostModel, ModelCfg};
 use hetu::metrics::{fmt_s, Table};
 use hetu::sim::simulate_step;
 use hetu::spec::schedule::ScheduleKind;
-use hetu::strategy::{generate, tables, uniform};
+use hetu::strategy::synth::{synthesize, SynthOptions};
+use hetu::strategy::{tables, uniform};
 use hetu::switch::plan_strategy_switch_avoiding;
 
 fn main() {
@@ -91,8 +92,11 @@ fn main() {
     let hetero = Cluster::h800_16_h20_16();
     let t_table5 =
         simulate_step(&hetero, &cm, &tables::hetu_32b_16h800_16h20()).unwrap().step_s;
-    #[allow(deprecated)]
-    let (gen_best, t_gen) = generate::search_best(&hetero, &cm, 64, 4096).unwrap();
+    let (gen_best, t_gen) = synthesize(&hetero, &cm, &SynthOptions::legacy(64, 4096))
+        .unwrap()
+        .best()
+        .expect("feasible candidate")
+        .clone();
     let mcfg = hetu::baselines::megatron::table4("llama-32b", 16, 16).unwrap();
     let t_uniform = hetu::baselines::megatron::step_time(&hetero, &cm, mcfg, 64, 4096).unwrap();
     t3.row(vec!["paper Table 5 (hand-tuned)".into(), fmt_s(t_table5)]);

@@ -367,6 +367,61 @@ fn main() {
         std::hint::black_box(c2_cmp.compiled_program_cached().unwrap().num_segs());
     });
 
+    // ---- §12 fused kernel execution. The compiled row above runs with
+    // kernel fusion on (the default); this engine replays the same tape
+    // with fusion off — every kernel allocates its own outputs and the
+    // epilogue passes launch separately — isolating the kernel-level win
+    // from the dispatch-level one. The launch-count rows record the
+    // per-step kernel launches of each tape (a deterministic count, not
+    // a timing), and the non-smoke asserts are the ISSUE 10 acceptance:
+    // fused wall ≤ unfused wall, fused launches < unfused launches.
+    let mut c2_unf = Engine::with_runtime(Runtime::native(tiny), c2e.clone(), 42, 1e-3).unwrap();
+    c2_unf.set_exec_mode(ExecMode::Compiled);
+    c2_unf.set_kernel_fusion(false);
+    let w_unf = c2_unf.train_step(&mut |p, m| mbs[p][m].clone()).unwrap();
+    assert_eq!(
+        w_ref.loss.to_bits(),
+        w_unf.loss.to_bits(),
+        "unfused compiled loss must be bit-identical to the reference interpreter"
+    );
+    report(rep, "step wall lowered-C2 compiled unfused", "wall", it(10), || {
+        std::hint::black_box(c2_unf.train_step(&mut |p, m| mbs[p][m].clone()).unwrap().loss);
+    });
+    let c2_unf_best = rep.rows[rep.rows.len() - 1].best_s;
+    let st_fused = c2_cmp.train_step(&mut |p, m| mbs[p][m].clone()).unwrap();
+    let st_unfused = c2_unf.train_step(&mut |p, m| mbs[p][m].clone()).unwrap();
+    let (lf, lu) = (st_fused.kernel_launches as f64, st_unfused.kernel_launches as f64);
+    rep.row("kernel launches lowered-C2 fused step", "count", lf, lf);
+    rep.row("kernel launches lowered-C2 unfused step", "count", lu, lu);
+    println!(
+        "    fused vs unfused compiled wall (best): {:.3}ms vs {:.3}ms ({:.2}x), \
+         launches {} vs {}, fused kernel bytes alloc {}",
+        c2_cmp_best * 1e3,
+        c2_unf_best * 1e3,
+        c2_unf_best / c2_cmp_best.max(1e-12),
+        st_fused.kernel_launches,
+        st_unfused.kernel_launches,
+        st_fused.kernel_bytes_alloc
+    );
+    assert!(
+        st_fused.kernel_launches > 0 && st_fused.kernel_launches < st_unfused.kernel_launches,
+        "fused step launches {} must undercut the unfused tape's {}",
+        st_fused.kernel_launches,
+        st_unfused.kernel_launches
+    );
+    assert_eq!(
+        st_fused.kernel_bytes_alloc, 0,
+        "warm fused compiled step must allocate zero kernel floats"
+    );
+    if !smoke {
+        // the ISSUE 10 acceptance: kernel fusion must not lose to the
+        // unfused tape on the steady-state step
+        assert!(
+            c2_cmp_best <= c2_unf_best,
+            "fused compiled step ({c2_cmp_best}s) must not lose to unfused ({c2_unf_best}s)"
+        );
+    }
+
     // ---- §10 observability. Tracing on: the compiled hot loop stores one
     // span per (op, participant) into the preallocated ring — this row is
     // the traced warm step, and the non-smoke assert bounds its cost
@@ -432,6 +487,8 @@ fn main() {
                 &gen256.pipelines,
                 false,
                 hetu::engine::ShapeClass::uniform(&cnt256, b_sz, s_sz),
+                &tiny,
+                true,
             )
             .unwrap()
             .num_segs(),
@@ -451,6 +508,8 @@ fn main() {
                 &gen1024.pipelines,
                 false,
                 hetu::engine::ShapeClass::uniform(&cnt1024, b_sz, s_sz),
+                &tiny,
+                true,
             )
             .unwrap()
             .num_segs(),
@@ -493,6 +552,8 @@ fn main() {
         &winner.pipelines,
         false,
         hetu::engine::ShapeClass::uniform(&wcnt, b_sz, s_sz),
+        &tiny,
+        true,
     )
     .unwrap();
     assert!(wc.num_segs() > 0, "synth winner compiles to a non-empty tape");

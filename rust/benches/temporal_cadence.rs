@@ -97,6 +97,46 @@ fn main() {
         bound * 1e3
     );
 
+    // ---- heavy-tail cadence stress (ROADMAP item 5 leftover): drive
+    // Hetu-B over the GitHubHeavyTail mixture — a GitHub log-normal body
+    // with a 5% Pareto tail that pins sequences at the context limit —
+    // so the 5% hysteresis default has a measured stress case on record.
+    // The tail flips the batch's max length step to step, which is
+    // exactly the regime hysteresis exists to damp: the report records
+    // how often Hetu-B actually switched under it.
+    let mut hrng = hetu::testutil::Rng::new(17);
+    let hsteps = if smoke { 3 } else { 12 };
+    let hcadence: Vec<StepBatch> = (0..hsteps)
+        .map(|_| {
+            hetu::data::sample_step(&mut hrng, hetu::data::Corpus::GitHubHeavyTail, 49_152, 32_768)
+        })
+        .collect();
+    let mut hpool = StrategyPool::new(tiny, default_pool_entries(&tiny).unwrap()).unwrap();
+    let mut heng = hpool.spawn_engine(Runtime::native(tiny), 0, 7, 1e-3).unwrap();
+    let mut hdisp = Dispatcher::new(CostModel::new(ModelCfg::llama_32b()), DispatchPolicy::HetuB);
+    hdisp.scale_cells_to_pool(&hpool, tiny.seq);
+    let mut hcorpus = SyntheticCorpus::new(5, tiny.vocab);
+    let hrep = hdisp
+        .run_stream(&mut heng, &mut hpool, &hcadence, &mut hcorpus)
+        .expect("heavy-tail cadence");
+    assert_eq!(hrep.total_padded(), 0, "heavy-tail windows must execute ragged, not padded");
+    assert!(
+        hrep.steps.iter().all(|s| s.windows > 0 && s.tokens > 0),
+        "every heavy-tail step must execute measured windows"
+    );
+    let h_amt = hrep.amortized_step_s();
+    bj.row("heavy-tail cadence amortized step (Hetu-B)", "modeled", h_amt, h_amt);
+    let h_sw = hrep.switches as f64;
+    bj.row("heavy-tail cadence switches (5% hysteresis)", "modeled", h_sw, h_sw);
+    println!(
+        "heavy-tail cadence: {} steps, {} switches under 5% hysteresis, {} windows, \
+         amortized {:.3} ms/step",
+        hrep.steps.len(),
+        hrep.switches,
+        hrep.total_windows(),
+        h_amt * 1e3
+    );
+
     // switch cadence: repeated short↔long transitions through the cache
     let tiny = native::tiny_config();
     let mut pool = StrategyPool::new(tiny, default_pool_entries(&tiny).unwrap()).unwrap();

@@ -23,6 +23,13 @@ pub enum Corpus {
     CommonCrawl,
     /// Code: heavier tail (long files), median ≈ 900, σ ≈ 1.55.
     GitHub,
+    /// The GitHub-corpus stress case (ROADMAP item 5): the same log-normal
+    /// body as [`Corpus::GitHub`], but 5% of draws come from a Pareto tail
+    /// (`α = 1.1`, scale 8K) — generated monorepo files and vendored blobs
+    /// that pin whole steps at the context limit. This is the distribution
+    /// the Hetu-B hysteresis default is stress-tested against (the
+    /// `temporal_cadence` heavy-tail row).
+    GitHubHeavyTail,
 }
 
 impl Corpus {
@@ -30,8 +37,15 @@ impl Corpus {
     pub fn sample_len(&self, rng: &mut Rng, max_len: u64) -> u64 {
         let (mu, sigma) = match self {
             Corpus::CommonCrawl => (6.4, 1.3),
-            Corpus::GitHub => (6.8, 1.55),
+            Corpus::GitHub | Corpus::GitHubHeavyTail => (6.8, 1.55),
         };
+        if *self == Corpus::GitHubHeavyTail && rng.chance(0.05) {
+            // Pareto(α, scale): scale / U^(1/α). α just above 1 keeps the
+            // mean finite but lets the tail reach any context limit.
+            let u = rng.f64().max(1e-12);
+            let len = (8192.0 / u.powf(1.0 / 1.1)) as u64;
+            return len.clamp(16, max_len);
+        }
         let len = rng.lognormal(mu, sigma) as u64;
         len.clamp(16, max_len)
     }
@@ -202,6 +216,45 @@ mod tests {
         let cc = longs(Corpus::CommonCrawl, &mut rng);
         let gh = longs(Corpus::GitHub, &mut rng);
         assert!(gh > cc, "github {gh} vs commoncrawl {cc} long sequences");
+    }
+
+    #[test]
+    fn heavy_tail_dominates_github_beyond_8k() {
+        // the Pareto mixture must (a) leave the body statistics close to
+        // plain GitHub and (b) add ~5% of mass past 8K (every Pareto draw
+        // starts at the 8K scale), roughly doubling the context-pinned
+        // draws plain GitHub's log-normal produces
+        let n = 20_000;
+        let max = 32_768u64;
+        let stats = |c: Corpus, seed: u64| {
+            let mut rng = Rng::new(seed);
+            let mut over_8k = 0usize;
+            let mut at_max = 0usize;
+            let mut under_2k = 0usize;
+            for _ in 0..n {
+                let l = c.sample_len(&mut rng, max);
+                if l > 8192 {
+                    over_8k += 1;
+                }
+                if l == max {
+                    at_max += 1;
+                }
+                if l < 2048 {
+                    under_2k += 1;
+                }
+            }
+            (over_8k, at_max, under_2k)
+        };
+        let (gh_8k, gh_max, gh_body) = stats(Corpus::GitHub, 11);
+        let (ht_8k, ht_max, ht_body) = stats(Corpus::GitHubHeavyTail, 11);
+        // expected shift ≈ 0.046·n ≈ 920 draws; assert half of it to
+        // leave room for sampling noise
+        assert!(ht_8k > gh_8k + n / 50, "tail mass: heavy {ht_8k} vs github {gh_8k}");
+        assert!(ht_max > gh_max + n / 200, "context-pinned draws: {ht_max} vs {gh_max}");
+        // the body is still GitHub's log-normal: short-sequence mass moves
+        // by at most the 5% mixture weight (plus sampling noise)
+        let drift = (gh_body as f64 - ht_body as f64).abs() / n as f64;
+        assert!(drift < 0.08, "body drifted by {drift}");
     }
 
     #[test]

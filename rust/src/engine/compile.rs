@@ -34,10 +34,16 @@
 //! `(entry, schedule, zero1, shape class)`.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::runtime::HostTensor;
+use crate::collectives::DeviceMem;
+use crate::runtime::workspace::{
+    block_bwd_ws, block_fwd_ws, grad_shape, head_step_ws, BlockDims, KernelWorkspace,
+    PanelCache, WorkspacePlan,
+};
+use crate::runtime::{native, HostTensor, ManifestConfig};
 use crate::spec::schedule::ScheduleKind;
 use crate::{Error, Result};
 
@@ -331,6 +337,40 @@ pub struct Seg {
     pub deps: (u32, u32),
 }
 
+/// Which fused kernel driver replays a lowered compute op (DESIGN.md
+/// §12). Frozen per tape op at compile time, so the hot loop's only
+/// branch is `fused[oi].is_some()`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FusedKind {
+    /// Transformer-block forward → `workspace::block_fwd_ws`.
+    FwdBlock,
+    /// Transformer-block backward → `workspace::block_bwd_ws`.
+    BwdBlock,
+    /// Stage-0 embedding gather → `native::embed_fwd_into`.
+    EmbedFwd,
+    /// Fused head (loss + grads) → `workspace::head_step_ws`.
+    Head,
+    /// Embedding-gradient scatter → `native::embed_bwd_into`.
+    EmbedBwd,
+}
+
+/// One compile-time-lowered kernel call: driver choice, frozen block
+/// geometry, and the exact per-device workspace reservation. Everything
+/// the executor needs to run the op with zero kernel-layer allocation.
+#[derive(Clone, Copy, Debug)]
+pub struct FusedCall {
+    /// Fused driver to dispatch.
+    pub kind: FusedKind,
+    /// Frozen geometry (micro-batch shape × TP-local widths).
+    pub dims: BlockDims,
+    /// Floats this call carves from the device's [`KernelWorkspace`].
+    pub ws_floats: usize,
+}
+
+/// Monotonic compiled-program identity (see [`CompiledProgram::uid`]).
+/// Starts at 1 so a default arena tag (0) never matches a real program.
+static PROGRAM_UID: AtomicU64 = AtomicU64::new(1);
+
 /// A compiled MPMD step program: the frozen union of every rank's tape.
 /// Replayed front to back ([`walk`]) it reproduces the event-driven
 /// executor bit-for-bit; sliced by participant it is one
@@ -375,6 +415,22 @@ pub struct CompiledProgram {
     /// ops × participants) — the recorder's ring capacity, frozen at
     /// compile time so the warm traced step never grows the ring.
     pub trace_slots: usize,
+    /// Kernel-level lowering, index-aligned with `ops`: `Some` when the
+    /// op replays through a fused zero-allocation driver, `None` when it
+    /// falls back to the allocating oracle kernels (non-native runtime,
+    /// fusion disabled, or non-divisible TP widths).
+    pub fused: Vec<Option<FusedCall>>,
+    /// Per-device workspace reservations implied by `fused` (max over
+    /// the device's fused ops) — the compile-time arena sizing rule.
+    pub ws_plan: WorkspacePlan,
+    /// Whether this program was compiled with kernel fusion requested
+    /// (cache-revalidation key next to schedule/zero1/shape).
+    pub fused_kernels: bool,
+    /// Process-unique program identity. Workspaces and panel caches in
+    /// [`CompiledArena`] are keyed to it: interned [`KeyId`]s are only
+    /// meaningful within one program, so a uid change drops the panels
+    /// (an `Arc` pointer could ABA through the allocator; this cannot).
+    pub uid: u64,
     /// The program's own key interner: every [`KeyId`] on the tape
     /// resolves here. Owned by the program (shared through its `Arc`), so
     /// pooled artifacts stay self-contained across strategy switches.
@@ -451,13 +507,18 @@ fn layer_key_ids(
 ///
 /// `pipelines` must be the strategy snapshot the plan was specialized
 /// from; `shape` is the micro-batch shape class the program is keyed
-/// under. Structural mismatches are typed errors, not panics — the
+/// under; `cfg` supplies the model geometry the kernel lowering freezes;
+/// `fuse_kernels` lowers compute ops into [`FusedCall`]s (pass false for
+/// non-native runtimes — the fused drivers call the native kernels
+/// directly). Structural mismatches are typed errors, not panics — the
 /// compiler re-validates what it freezes.
 pub fn compile_program(
     plan: &SpecializedPlan,
     pipelines: &[EnginePipeline],
     zero1: bool,
     shape: ShapeClass,
+    cfg: &ManifestConfig,
+    fuse_kernels: bool,
 ) -> Result<CompiledProgram> {
     if plan.num_microbatches.len() != pipelines.len() {
         return Err(Error::Engine(format!(
@@ -617,6 +678,97 @@ pub fn compile_program(
         ops.push(op);
     }
 
+    // Kernel-level lowering: freeze a FusedCall per compute op. Block
+    // GEMMs gate on exact TP divisibility (the fused drivers assume the
+    // artifact's per-shard widths); embed/head ops have no TP split and
+    // always lower. Per-device workspace reservations fold into the
+    // plan here — block ops carve on every group member, embed/head on
+    // the stage root only.
+    let mut fused: Vec<Option<FusedCall>> = vec![None; plan.tasks.len()];
+    let mut ws_plan = WorkspacePlan::default();
+    if fuse_kernels {
+        let div_ok = |tp: usize| {
+            tp > 0
+                && cfg.heads != 0
+                && cfg.hidden % cfg.heads == 0
+                && cfg.hidden % tp == 0
+                && cfg.ffn % tp == 0
+                && cfg.heads % tp == 0
+        };
+        // embed/head geometry: no TP split, no per-head arithmetic
+        let root_dims = |ns: usize, sl: usize| BlockDims {
+            n: ns * sl,
+            b: ns,
+            s: sl,
+            h: cfg.hidden,
+            hl: cfg.hidden,
+            fl: cfg.ffn,
+            nh: 1,
+            hd: cfg.hidden,
+            v: cfg.vocab,
+        };
+        for (ti, t) in plan.tasks.iter().enumerate() {
+            let fc = match t.kind {
+                SpecTaskKind::FwdGemm { pipe, mb, .. } => {
+                    let tp = t.ranks.len();
+                    if !div_ok(tp) {
+                        continue;
+                    }
+                    let (ns, sl) = shape.0[pipe][mb];
+                    let dims = BlockDims::new(cfg, tp, ns, sl);
+                    FusedCall {
+                        kind: FusedKind::FwdBlock,
+                        dims,
+                        ws_floats: dims.fwd_ws_floats(),
+                    }
+                }
+                SpecTaskKind::BwdGemm { pipe, mb, .. } => {
+                    let tp = t.ranks.len();
+                    if !div_ok(tp) {
+                        continue;
+                    }
+                    let (ns, sl) = shape.0[pipe][mb];
+                    let dims = BlockDims::new(cfg, tp, ns, sl);
+                    FusedCall {
+                        kind: FusedKind::BwdBlock,
+                        dims,
+                        ws_floats: dims.bwd_ws_floats(),
+                    }
+                }
+                SpecTaskKind::FwdIn { pipe, stage, mb } if stage == 0 => {
+                    let (ns, sl) = shape.0[pipe][mb];
+                    FusedCall { kind: FusedKind::EmbedFwd, dims: root_dims(ns, sl), ws_floats: 0 }
+                }
+                SpecTaskKind::BwdIn { pipe, stage, mb }
+                    if stage + 1 == pipelines[pipe].stages.len() =>
+                {
+                    let (ns, sl) = shape.0[pipe][mb];
+                    let dims = root_dims(ns, sl);
+                    FusedCall { kind: FusedKind::Head, dims, ws_floats: dims.head_ws_floats() }
+                }
+                SpecTaskKind::EmbedBwd { pipe, mb } => {
+                    let (ns, sl) = shape.0[pipe][mb];
+                    let dims = root_dims(ns, sl);
+                    FusedCall {
+                        kind: FusedKind::EmbedBwd,
+                        dims,
+                        ws_floats: dims.embed_bwd_ws_floats(),
+                    }
+                }
+                _ => continue,
+            };
+            match fc.kind {
+                FusedKind::FwdBlock | FusedKind::BwdBlock => {
+                    for &r in &t.ranks {
+                        ws_plan.note(r, fc.ws_floats);
+                    }
+                }
+                _ => ws_plan.note(t.ranks[0], fc.ws_floats),
+            }
+            fused[ti] = Some(fc);
+        }
+    }
+
     // Segment fusion. An op joins the previous segment only when it is
     // fusable, runs on the same device set, and its sole dependency is
     // the op right before it (the specializer's intra-group chain) — so a
@@ -666,11 +818,23 @@ pub fn compile_program(
         .map(|(pi, ord)| ord.iter().map(|&mb| (slot_base[pi] + mb) as u32).collect())
         .collect();
 
-    // freeze the span identities: kind per op, mesh rank per plan
+    // freeze the span identities: kind per op (kernel-fused block GEMMs
+    // get their own kinds so traces show the fusion), mesh rank per plan
     // position, and the exact per-step span count (fused ops share their
     // segment's participant set, so ops × parts is exact per segment)
-    let spans: Vec<crate::obs::trace::SpanKind> =
-        plan.tasks.iter().map(|t| crate::obs::trace::SpanKind::of_task(&t.kind)).collect();
+    let spans: Vec<crate::obs::trace::SpanKind> = plan
+        .tasks
+        .iter()
+        .zip(&fused)
+        .map(|(t, f)| {
+            use crate::obs::trace::SpanKind;
+            match (SpanKind::of_task(&t.kind), f) {
+                (SpanKind::FwdGemm, Some(_)) => SpanKind::FwdGemmFused,
+                (SpanKind::BwdGemm, Some(_)) => SpanKind::BwdGemmFused,
+                (k, _) => k,
+            }
+        })
+        .collect();
     let part_rank_ids: Vec<u32> = plan.ranks.iter().map(|rp| rp.rank as u32).collect();
     let trace_slots: usize = segs
         .iter()
@@ -692,6 +856,10 @@ pub fn compile_program(
         spans,
         part_rank_ids,
         trace_slots,
+        fused,
+        ws_plan,
+        fused_kernels: fuse_kernels,
+        uid: PROGRAM_UID.fetch_add(1, Ordering::Relaxed),
         keys,
     })
 }
@@ -715,20 +883,54 @@ impl ReplayScratch {
 }
 
 /// The preallocated per-step arena: head results in fixed slots, the
-/// per-member compute-time scratch of fused GEMM dispatch. Reused across
-/// steps.
+/// per-member compute-time scratch of fused GEMM dispatch, and the
+/// kernel layer's per-device workspaces and prepacked-panel caches.
+/// Reused across steps — after the first step at a program, nothing
+/// here allocates.
 #[derive(Default)]
 pub struct CompiledArena {
     /// `(mean loss, real tokens)` per head slot.
     head_vals: Vec<(f32, u64)>,
     /// Per-TP-member compute seconds of the op in flight.
     member_s: Vec<f64>,
+    /// Per-device kernel workspaces, sized by the program's plan.
+    ws: Vec<KernelWorkspace>,
+    /// Per-device prepacked-weight panels, indexed by interned `KeyId`.
+    panels: Vec<PanelCache>,
+    /// Uid of the program `ws`/`panels` belong to. `KeyId` panel indices
+    /// are program-scoped, so a uid change clears the panel caches.
+    prog_tag: u64,
 }
 
 impl CompiledArena {
     fn reset(&mut self, head_slots: usize) {
         self.head_vals.clear();
         self.head_vals.resize(head_slots, (0.0, 0));
+    }
+
+    /// Bind the kernel-layer state to `prog`: on a program change, drop
+    /// panels (stale `KeyId` space) and re-ensure per-device workspaces;
+    /// warm re-entry with the same program is allocation-free.
+    fn prepare(&mut self, prog: &CompiledProgram, ndev: usize) {
+        if self.prog_tag != prog.uid {
+            self.ws.clear();
+            self.ws.resize_with(ndev, KernelWorkspace::default);
+            self.panels.clear();
+            self.panels.resize_with(ndev, PanelCache::default);
+            for (d, w) in self.ws.iter_mut().enumerate() {
+                w.ensure(prog.ws_plan.floats_for(d));
+            }
+            self.prog_tag = prog.uid;
+        }
+    }
+
+    /// Panel-cache counters summed over devices: `(hits, misses,
+    /// repacks)` (diagnostics; tests assert the steady state repacks
+    /// without missing).
+    pub fn panel_stats(&self) -> (u64, u64, u64) {
+        self.panels.iter().fold((0, 0, 0), |(h, m, r), p| {
+            (h + p.hits, m + p.misses, r + p.repacks)
+        })
     }
 }
 
@@ -750,7 +952,7 @@ pub(crate) fn walk(
     scratch: &mut ReplayScratch,
     deliveries: &[(usize, f64)],
     rec: &mut crate::obs::trace::SpanRecorder,
-    mut exec: impl FnMut(&CompiledOp) -> Result<f64>,
+    mut exec: impl FnMut(usize, &CompiledOp) -> Result<f64>,
 ) -> Result<WalkOutcome> {
     scratch.reset(prog.segs.len(), prog.nranks);
     for (si, seg) in prog.segs.iter().enumerate() {
@@ -764,7 +966,7 @@ pub(crate) fn walk(
         }
         let mut dur = 0f64;
         for oi in seg.ops.0..seg.ops.1 {
-            let d = exec(&prog.ops[oi as usize])?;
+            let d = exec(oi as usize, &prog.ops[oi as usize])?;
             // frozen-identity spans: kind and rank come from compile-time
             // tables, timestamps from the replayed clock — fixed-size ring
             // stores, no allocation (`prog.trace_slots` sized the ring)
@@ -802,12 +1004,43 @@ pub(crate) fn walk(
     Ok(WalkOutcome { makespan_s, exposed_switch_s, delivery_lane_s })
 }
 
+/// Accumulate (or initialize) a gradient buffer from a workspace slice —
+/// the fused drivers' counterpart of [`accumulate`]: same elementwise
+/// `+=` order, but warm accumulation writes into the existing tensor in
+/// place (no intermediate `HostTensor`, no allocation). `shape` is only
+/// invoked on the cold insert.
+fn accumulate_slice(
+    dev: &mut DeviceMem,
+    key: &str,
+    src: &[f32],
+    shape: impl FnOnce() -> Vec<usize>,
+) -> Result<()> {
+    if dev.has(key) {
+        let dst = dev.get_mut(key)?.as_f32_mut()?;
+        if dst.len() != src.len() {
+            return Err(Error::Engine(format!(
+                "accumulate: gradient `{key}` changed size ({} vs {})",
+                dst.len(),
+                src.len()
+            )));
+        }
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d += s;
+        }
+        Ok(())
+    } else {
+        dev.put(key, HostTensor::f32(shape(), src.to_vec())?);
+        Ok(())
+    }
+}
+
 impl Engine {
     /// The compiled program for the current strategy at the shape class
     /// of `batches` — the hot-loop entry: an allocation-free revalidation
     /// against the cached program, recompiling only when the schedule,
-    /// ZeRO-1 mode, or micro-batch shapes changed (strategy switches and
-    /// ZeRO-1 toggles clear the cache outright, exactly like `spec`).
+    /// ZeRO-1 mode, kernel-fusion setting, or micro-batch shapes changed
+    /// (strategy switches and ZeRO-1 toggles clear the cache outright,
+    /// exactly like `spec`).
     pub(crate) fn compiled_program_for(
         &mut self,
         batches: &[Vec<MicroBatch>],
@@ -815,6 +1048,7 @@ impl Engine {
         if let Some(p) = &self.compiled {
             if p.schedule == self.strategy.schedule
                 && p.zero1 == self.zero1
+                && p.fused_kernels == self.fusion_active()
                 && p.shape.matches_batches(batches)
             {
                 return Ok(Arc::clone(p));
@@ -828,7 +1062,10 @@ impl Engine {
     pub fn compiled_program_cached(&mut self) -> Result<Arc<CompiledProgram>> {
         let shape = ShapeClass::of_engine(self);
         if let Some(p) = &self.compiled {
-            if p.schedule == self.strategy.schedule && p.zero1 == self.zero1 && p.shape == shape
+            if p.schedule == self.strategy.schedule
+                && p.zero1 == self.zero1
+                && p.fused_kernels == self.fusion_active()
+                && p.shape == shape
             {
                 return Ok(Arc::clone(p));
             }
@@ -838,8 +1075,15 @@ impl Engine {
 
     fn build_compiled(&mut self, shape: ShapeClass) -> Result<Arc<CompiledProgram>> {
         let plan = self.specialized_plan()?;
-        let prog =
-            Arc::new(compile_program(&plan, &self.strategy.pipelines, self.zero1, shape)?);
+        let fuse = self.fusion_active();
+        let prog = Arc::new(compile_program(
+            &plan,
+            &self.strategy.pipelines,
+            self.zero1,
+            shape,
+            &self.runtime.config,
+            fuse,
+        )?);
         self.compiled = Some(Arc::clone(&prog));
         Ok(prog)
     }
@@ -851,6 +1095,7 @@ impl Engine {
     pub fn install_compiled(&mut self, prog: Arc<CompiledProgram>) -> Result<()> {
         if prog.schedule != self.strategy.schedule
             || prog.zero1 != self.zero1
+            || prog.fused_kernels != self.fusion_active()
             || !prog.counts_match(&self.strategy.pipelines)
             || prog.shape != ShapeClass::of_engine(self)
         {
@@ -886,7 +1131,7 @@ impl Engine {
         let mut replay = std::mem::take(&mut self.replay);
         let mut rec = std::mem::take(&mut self.recorder);
         rec.begin_step(prog.trace_slots, self.trace_on);
-        let out = walk(prog, &mut replay, &[], &mut rec, |_| Ok(0.0)).map(|w| w.makespan_s);
+        let out = walk(prog, &mut replay, &[], &mut rec, |_, _| Ok(0.0)).map(|w| w.makespan_s);
         self.recorder = rec;
         self.replay = replay;
         out
@@ -911,8 +1156,9 @@ impl Engine {
         let mut rec = std::mem::take(&mut self.recorder);
         rec.begin_step(prog.trace_slots, self.trace_on);
         arena.reset(prog.head_slots);
-        let walked = walk(&prog, &mut replay, deliveries, &mut rec, |op| {
-            self.exec_compiled_op(&prog, op, batches, &mut arena)
+        arena.prepare(&prog, self.mesh.devices.len());
+        let walked = walk(&prog, &mut replay, deliveries, &mut rec, |oi, op| {
+            self.exec_compiled_op(&prog, oi, op, batches, &mut arena)
         });
         let out = walked.map(|w| {
             // f64 loss accumulation in the interpreter's order: pipeline-
@@ -947,29 +1193,48 @@ impl Engine {
     /// task body exactly (`spec_fwd_in` etc. in [`super::exec`]) with
     /// every key, endpoint, and group read from the frozen op; interned
     /// key ids resolve through `prog` by array indexing (no hashing, no
-    /// allocation on the dispatch layer).
+    /// allocation on the dispatch layer). Ops with a frozen [`FusedCall`]
+    /// replay through the zero-allocation fused drivers instead of the
+    /// allocating oracle kernels — bit-identical by the `_into`-kernel
+    /// contract (DESIGN.md §12), asserted in `tests/compiled_identity.rs`.
     fn exec_compiled_op(
         &mut self,
         prog: &CompiledProgram,
+        oi: usize,
         op: &CompiledOp,
         batches: &[Vec<MicroBatch>],
         arena: &mut CompiledArena,
     ) -> Result<f64> {
+        let fc = prog.fused.get(oi).and_then(|f| f.as_ref());
         match op {
             CompiledOp::FwdEmbed { pi, mb, root, group, akey } => {
                 let akey = prog.key(*akey);
                 let batch = &batches[*pi][*mb];
                 let t0 = Instant::now();
-                let tok = HostTensor::i32(
-                    vec![batch.n_seqs, batch.seq_len],
-                    batch.tokens.clone(),
-                )?;
-                let x0 = {
-                    let emb = self.mesh.devices[*root].get("emb")?;
-                    let out = self.runtime.call_refs("embed_fwd", &[emb, &tok])?;
-                    out.into_iter().next().unwrap()
-                };
-                self.mesh.devices[*root].put(akey, x0);
+                if let Some(fc) = fc {
+                    // fused: gather straight from the token slice — no
+                    // token-tensor clone, no kernel-layer allocation (the
+                    // activation itself is store-layer by design)
+                    let (h, v) = (fc.dims.h, fc.dims.v);
+                    let mut out = vec![0.0f32; fc.dims.n * h];
+                    {
+                        let emb = self.mesh.devices[*root].get("emb")?.as_f32()?;
+                        native::embed_fwd_into(emb, &batch.tokens, h, v, &mut out)?;
+                    }
+                    let x0 = HostTensor::f32(vec![batch.n_seqs, batch.seq_len, h], out)?;
+                    self.mesh.devices[*root].put(akey, x0);
+                } else {
+                    let tok = HostTensor::i32(
+                        vec![batch.n_seqs, batch.seq_len],
+                        batch.tokens.clone(),
+                    )?;
+                    let x0 = {
+                        let emb = self.mesh.devices[*root].get("emb")?;
+                        let out = self.runtime.call_refs("embed_fwd", &[emb, &tok])?;
+                        out.into_iter().next().unwrap()
+                    };
+                    self.mesh.devices[*root].put(akey, x0);
+                }
                 self.mesh.broadcast(*root, group, akey)?;
                 Ok(t0.elapsed().as_secs_f64())
             }
@@ -984,7 +1249,7 @@ impl Engine {
                 Ok(t0.elapsed().as_secs_f64())
             }
             CompiledOp::FwdGemm { group, akey, skey, art, pkeys } => {
-                let (akey, skey, art) = (prog.key(*akey), prog.key(*skey), prog.key(*art));
+                let (akey, skey) = (prog.key(*akey), prog.key(*skey));
                 let t0 = Instant::now();
                 arena.member_s.clear();
                 arena.member_s.resize(group.len(), 0.0);
@@ -992,24 +1257,71 @@ impl Engine {
                     let x = self.mesh.devices[d].get(akey)?.clone();
                     self.mesh.devices[d].put(skey, x);
                 }
-                for (j, &d) in group.iter().enumerate() {
-                    let dev = &self.mesh.devices[d];
-                    let inputs = [
-                        dev.get(prog.key(pkeys[0]))?,
-                        dev.get(prog.key(pkeys[1]))?,
-                        dev.get(prog.key(pkeys[2]))?,
-                        dev.get(prog.key(pkeys[3]))?,
-                        dev.get(prog.key(pkeys[4]))?,
-                        dev.get(prog.key(pkeys[5]))?,
-                        dev.get(prog.key(pkeys[6]))?,
-                        dev.get(prog.key(pkeys[7]))?,
-                        dev.get(akey)?,
-                    ];
-                    let t1 = Instant::now();
-                    let y_part =
-                        self.runtime.call_refs(art, &inputs)?.into_iter().next().unwrap();
-                    arena.member_s[j] += t1.elapsed().as_secs_f64();
-                    self.mesh.devices[d].put("part", y_part);
+                if let Some(fc) = fc {
+                    let dims = fc.dims;
+                    let nh = dims.n * dims.h;
+                    for (j, &dv) in group.iter().enumerate() {
+                        // pack panels outside the member compute window
+                        // (lazy: hit/repack warm, miss only on first touch)
+                        {
+                            let dev = &self.mesh.devices[dv];
+                            let pc = &mut arena.panels[dv];
+                            for &pk in pkeys.iter() {
+                                pc.ensure(pk.index(), dev.get(prog.key(pk))?.as_f32()?);
+                            }
+                        }
+                        let t1 = Instant::now();
+                        {
+                            let wsbuf = arena.ws[dv].slice(fc.ws_floats);
+                            let (ybuf, rest) = wsbuf.split_at_mut(nh);
+                            let pc = &arena.panels[dv];
+                            let p: [&[f32]; 8] =
+                                std::array::from_fn(|i| pc.get(pkeys[i].index()));
+                            let x = self.mesh.devices[dv].get(akey)?.as_f32()?;
+                            block_fwd_ws(&dims, &p, x, ybuf, rest);
+                        }
+                        arena.member_s[j] += t1.elapsed().as_secs_f64();
+                        // store the partial: warm-reuse the device's
+                        // existing "part" tensor in place (no String, no
+                        // payload allocation), cold-insert otherwise
+                        let src = &arena.ws[dv].data()[..nh];
+                        let dev = &mut self.mesh.devices[dv];
+                        let mut stored = false;
+                        if dev.has("part") {
+                            let t = dev.get_mut("part")?;
+                            if t.shape == [dims.b, dims.s, dims.h] {
+                                t.as_f32_mut()?.copy_from_slice(src);
+                                stored = true;
+                            }
+                        }
+                        if !stored {
+                            dev.put(
+                                "part",
+                                HostTensor::f32(vec![dims.b, dims.s, dims.h], src.to_vec())?,
+                            );
+                        }
+                    }
+                } else {
+                    let art = prog.key(*art);
+                    for (j, &d) in group.iter().enumerate() {
+                        let dev = &self.mesh.devices[d];
+                        let inputs = [
+                            dev.get(prog.key(pkeys[0]))?,
+                            dev.get(prog.key(pkeys[1]))?,
+                            dev.get(prog.key(pkeys[2]))?,
+                            dev.get(prog.key(pkeys[3]))?,
+                            dev.get(prog.key(pkeys[4]))?,
+                            dev.get(prog.key(pkeys[5]))?,
+                            dev.get(prog.key(pkeys[6]))?,
+                            dev.get(prog.key(pkeys[7]))?,
+                            dev.get(akey)?,
+                        ];
+                        let t1 = Instant::now();
+                        let y_part =
+                            self.runtime.call_refs(art, &inputs)?.into_iter().next().unwrap();
+                        arena.member_s[j] += t1.elapsed().as_secs_f64();
+                        self.mesh.devices[d].put("part", y_part);
+                    }
                 }
                 Ok(task_duration(t0.elapsed().as_secs_f64(), &arena.member_s))
             }
@@ -1030,26 +1342,71 @@ impl Engine {
                 let t0 = Instant::now();
                 let tokens = batch.real_tokens();
                 let w = tokens as f32;
-                let tgt = HostTensor::i32(
-                    vec![batch.n_seqs, batch.seq_len],
-                    batch.targets.clone(),
-                )?;
-                let (loss, mut dx, mut dgf, mut dwout) = {
-                    let dev = &self.mesh.devices[*root];
-                    let out = self.runtime.call_refs(
-                        "head_step",
-                        &[dev.get("gf")?, dev.get("wout")?, dev.get(akey)?, &tgt],
+                let loss = if let Some(fc) = fc {
+                    // fused: targets read straight from the batch (no
+                    // tensor clone), every head intermediate carved from
+                    // the root's workspace; dx is the produced dkey
+                    // tensor (store layer by design, like the oracle's)
+                    let (n, h, v) = (fc.dims.n, fc.dims.h, fc.dims.v);
+                    let mut dx = vec![0.0f32; n * h];
+                    let (loss, hg) = {
+                        let ws = arena.ws[*root].slice(fc.ws_floats);
+                        let dev = &self.mesh.devices[*root];
+                        head_step_ws(
+                            n,
+                            h,
+                            v,
+                            dev.get("gf")?.as_f32()?,
+                            dev.get("wout")?.as_f32()?,
+                            dev.get(akey)?.as_f32()?,
+                            &batch.targets,
+                            &mut dx,
+                            ws,
+                        )?
+                    };
+                    // token-weight scaling in place (oracle: tensor.scale)
+                    for z in dx.iter_mut() {
+                        *z *= w;
+                    }
+                    for z in hg.dgf.iter_mut() {
+                        *z *= w;
+                    }
+                    for z in hg.dwout.iter_mut() {
+                        *z *= w;
+                    }
+                    {
+                        let dev = &mut self.mesh.devices[*root];
+                        accumulate_slice(dev, "grad.gf", hg.dgf, || vec![h])?;
+                        accumulate_slice(dev, "grad.wout", hg.dwout, || vec![h, v])?;
+                    }
+                    self.mesh.devices[*root].put(
+                        dkey,
+                        HostTensor::f32(vec![batch.n_seqs, batch.seq_len, h], dx)?,
+                    );
+                    loss
+                } else {
+                    let tgt = HostTensor::i32(
+                        vec![batch.n_seqs, batch.seq_len],
+                        batch.targets.clone(),
                     )?;
-                    let mut it = out.into_iter();
-                    let loss = it.next().unwrap().as_f32()?[0];
-                    (loss, it.next().unwrap(), it.next().unwrap(), it.next().unwrap())
+                    let (loss, mut dx, mut dgf, mut dwout) = {
+                        let dev = &self.mesh.devices[*root];
+                        let out = self.runtime.call_refs(
+                            "head_step",
+                            &[dev.get("gf")?, dev.get("wout")?, dev.get(akey)?, &tgt],
+                        )?;
+                        let mut it = out.into_iter();
+                        let loss = it.next().unwrap().as_f32()?[0];
+                        (loss, it.next().unwrap(), it.next().unwrap(), it.next().unwrap())
+                    };
+                    dx.scale(w)?;
+                    dgf.scale(w)?;
+                    dwout.scale(w)?;
+                    accumulate(&mut self.mesh.devices[*root], "grad.gf", dgf)?;
+                    accumulate(&mut self.mesh.devices[*root], "grad.wout", dwout)?;
+                    self.mesh.devices[*root].put(dkey, dx);
+                    loss
                 };
-                dx.scale(w)?;
-                dgf.scale(w)?;
-                dwout.scale(w)?;
-                accumulate(&mut self.mesh.devices[*root], "grad.gf", dgf)?;
-                accumulate(&mut self.mesh.devices[*root], "grad.wout", dwout)?;
-                self.mesh.devices[*root].put(dkey, dx);
                 for &d in group {
                     let _ = self.mesh.devices[d].take(akey);
                 }
@@ -1068,34 +1425,91 @@ impl Engine {
                 Ok(t0.elapsed().as_secs_f64())
             }
             CompiledOp::BwdGemm { group, skey, dkey, art, pkeys, gkeys } => {
-                let (skey, dkey, art) = (prog.key(*skey), prog.key(*dkey), prog.key(*art));
+                let (skey, dkey) = (prog.key(*skey), prog.key(*dkey));
                 let t0 = Instant::now();
                 arena.member_s.clear();
                 arena.member_s.resize(group.len(), 0.0);
-                for (j, &d) in group.iter().enumerate() {
-                    let dev = &self.mesh.devices[d];
-                    let inputs = [
-                        dev.get(prog.key(pkeys[0]))?,
-                        dev.get(prog.key(pkeys[1]))?,
-                        dev.get(prog.key(pkeys[2]))?,
-                        dev.get(prog.key(pkeys[3]))?,
-                        dev.get(prog.key(pkeys[4]))?,
-                        dev.get(prog.key(pkeys[5]))?,
-                        dev.get(prog.key(pkeys[6]))?,
-                        dev.get(prog.key(pkeys[7]))?,
-                        dev.get(skey)?,
-                        dev.get(dkey)?,
-                    ];
-                    let t1 = Instant::now();
-                    let outs = self.runtime.call_refs(art, &inputs)?;
-                    arena.member_s[j] += t1.elapsed().as_secs_f64();
-                    let mut it = outs.into_iter();
-                    let dx_part = it.next().unwrap();
-                    self.mesh.devices[d].put("dpart", dx_part);
-                    for &gk in gkeys {
-                        accumulate(&mut self.mesh.devices[d], prog.key(gk), it.next().unwrap())?;
+                if let Some(fc) = fc {
+                    let dims = fc.dims;
+                    let nh = dims.n * dims.h;
+                    for (j, &dv) in group.iter().enumerate() {
+                        {
+                            let dev = &self.mesh.devices[dv];
+                            let pc = &mut arena.panels[dv];
+                            for &pk in pkeys.iter() {
+                                pc.ensure(pk.index(), dev.get(prog.key(pk))?.as_f32()?);
+                            }
+                        }
+                        let t1 = Instant::now();
+                        let (dx_slice, grads) = {
+                            let wsbuf = arena.ws[dv].slice(fc.ws_floats);
+                            let (dxbuf, rest) = wsbuf.split_at_mut(nh);
+                            let pc = &arena.panels[dv];
+                            let p: [&[f32]; 8] =
+                                std::array::from_fn(|i| pc.get(pkeys[i].index()));
+                            let dev = &self.mesh.devices[dv];
+                            let x = dev.get(skey)?.as_f32()?;
+                            let dy = dev.get(dkey)?.as_f32()?;
+                            let g = block_bwd_ws(&dims, &p, x, dy, dxbuf, rest);
+                            (&*dxbuf, g)
+                        };
+                        arena.member_s[j] += t1.elapsed().as_secs_f64();
+                        let dev = &mut self.mesh.devices[dv];
+                        let mut stored = false;
+                        if dev.has("dpart") {
+                            let t = dev.get_mut("dpart")?;
+                            if t.shape == [dims.b, dims.s, dims.h] {
+                                t.as_f32_mut()?.copy_from_slice(dx_slice);
+                                stored = true;
+                            }
+                        }
+                        if !stored {
+                            dev.put(
+                                "dpart",
+                                HostTensor::f32(
+                                    vec![dims.b, dims.s, dims.h],
+                                    dx_slice.to_vec(),
+                                )?,
+                            );
+                        }
+                        for (i, &gk) in gkeys.iter().enumerate() {
+                            accumulate_slice(dev, prog.key(gk), grads.by_index(i), || {
+                                grad_shape(&dims, i)
+                            })?;
+                        }
+                        let _ = dev.take(skey);
                     }
-                    let _ = self.mesh.devices[d].take(skey);
+                } else {
+                    let art = prog.key(*art);
+                    for (j, &d) in group.iter().enumerate() {
+                        let dev = &self.mesh.devices[d];
+                        let inputs = [
+                            dev.get(prog.key(pkeys[0]))?,
+                            dev.get(prog.key(pkeys[1]))?,
+                            dev.get(prog.key(pkeys[2]))?,
+                            dev.get(prog.key(pkeys[3]))?,
+                            dev.get(prog.key(pkeys[4]))?,
+                            dev.get(prog.key(pkeys[5]))?,
+                            dev.get(prog.key(pkeys[6]))?,
+                            dev.get(prog.key(pkeys[7]))?,
+                            dev.get(skey)?,
+                            dev.get(dkey)?,
+                        ];
+                        let t1 = Instant::now();
+                        let outs = self.runtime.call_refs(art, &inputs)?;
+                        arena.member_s[j] += t1.elapsed().as_secs_f64();
+                        let mut it = outs.into_iter();
+                        let dx_part = it.next().unwrap();
+                        self.mesh.devices[d].put("dpart", dx_part);
+                        for &gk in gkeys {
+                            accumulate(
+                                &mut self.mesh.devices[d],
+                                prog.key(gk),
+                                it.next().unwrap(),
+                            )?;
+                        }
+                        let _ = self.mesh.devices[d].take(skey);
+                    }
                 }
                 Ok(task_duration(t0.elapsed().as_secs_f64(), &arena.member_s))
             }
@@ -1114,19 +1528,33 @@ impl Engine {
                 let dkey = prog.key(*dkey);
                 let batch = &batches[*pi][*mb];
                 let t0 = Instant::now();
-                let tok = HostTensor::i32(
-                    vec![batch.n_seqs, batch.seq_len],
-                    batch.tokens.clone(),
-                )?;
-                let demb = {
-                    let dx0 = self.mesh.devices[*root].get(dkey)?;
-                    self.runtime
-                        .call_refs("embed_bwd", &[&tok, dx0])?
-                        .into_iter()
-                        .next()
-                        .unwrap()
-                };
-                accumulate(&mut self.mesh.devices[*root], "grad.emb", demb)?;
+                if let Some(fc) = fc {
+                    // fused: scatter into the workspace's [v, h] panel,
+                    // accumulate in place — no token clone, no fresh demb
+                    let (h, v) = (fc.dims.h, fc.dims.v);
+                    {
+                        let ws = arena.ws[*root].slice(fc.ws_floats);
+                        let dx0 = self.mesh.devices[*root].get(dkey)?.as_f32()?;
+                        native::embed_bwd_into(&batch.tokens, dx0, h, v, ws)?;
+                    }
+                    let src = &arena.ws[*root].data()[..v * h];
+                    let dev = &mut self.mesh.devices[*root];
+                    accumulate_slice(dev, "grad.emb", src, || vec![v, h])?;
+                } else {
+                    let tok = HostTensor::i32(
+                        vec![batch.n_seqs, batch.seq_len],
+                        batch.tokens.clone(),
+                    )?;
+                    let demb = {
+                        let dx0 = self.mesh.devices[*root].get(dkey)?;
+                        self.runtime
+                            .call_refs("embed_bwd", &[&tok, dx0])?
+                            .into_iter()
+                            .next()
+                            .unwrap()
+                    };
+                    accumulate(&mut self.mesh.devices[*root], "grad.emb", demb)?;
+                }
                 for &d in group {
                     let _ = self.mesh.devices[d].take(dkey);
                 }
@@ -1144,6 +1572,11 @@ impl Engine {
             CompiledOp::OptimStep { ndev } => {
                 let t0 = Instant::now();
                 self.apply_updates_local()?;
+                // parameters changed: mark every prepacked panel stale.
+                // Storage is retained — next step repacks in place.
+                for pc in &mut arena.panels {
+                    pc.invalidate();
+                }
                 Ok(t0.elapsed().as_secs_f64() / *ndev as f64)
             }
             CompiledOp::ZeroExchange { ndev } => {
@@ -1169,7 +1602,7 @@ mod tests {
         let plan = specialize(s, &layout, zero1).unwrap();
         let counts: Vec<usize> = s.pipelines.iter().map(|p| p.num_microbatches).collect();
         let shape = ShapeClass::uniform(&counts, cfg.batch, cfg.seq);
-        let prog = compile_program(&plan, &s.pipelines, zero1, shape).unwrap();
+        let prog = compile_program(&plan, &s.pipelines, zero1, shape, &cfg, true).unwrap();
         (plan, prog)
     }
 
@@ -1242,6 +1675,81 @@ mod tests {
         assert!(!sc.matches_batches(&short));
         assert_eq!(sc.counts(), vec![2, 1]);
         assert_eq!(ShapeClass::of_batches(&ragged).counts(), vec![2, 1]);
+    }
+
+    #[test]
+    fn kernel_lowering_freezes_fused_calls_and_workspace_plan() {
+        let cfg = native::tiny_config();
+        let s = EngineStrategy::uniform("dp2tp2pp2", 2, 2, 2, 8, 3);
+        let (plan, prog) = compiled(&s, false);
+        assert!(prog.fused_kernels);
+        assert_eq!(prog.fused.len(), prog.ops.len());
+        // every compute op lowers at tiny-48 (all widths divide); comm
+        // and phase ops never do
+        for (op, f) in prog.ops.iter().zip(&prog.fused) {
+            match op {
+                CompiledOp::FwdGemm { group, .. } => {
+                    let f = f.as_ref().expect("fwd gemm lowers");
+                    assert_eq!(f.kind, FusedKind::FwdBlock);
+                    assert_eq!(f.dims.hl, cfg.hidden / group.len());
+                    assert_eq!(f.ws_floats, f.dims.fwd_ws_floats());
+                }
+                CompiledOp::BwdGemm { .. } => {
+                    assert_eq!(f.as_ref().unwrap().kind, FusedKind::BwdBlock);
+                }
+                CompiledOp::FwdEmbed { .. } => {
+                    let f = f.as_ref().expect("embed fwd lowers");
+                    assert_eq!(f.kind, FusedKind::EmbedFwd);
+                    assert_eq!(f.ws_floats, 0);
+                }
+                CompiledOp::HeadBwd { .. } => {
+                    assert_eq!(f.as_ref().unwrap().kind, FusedKind::Head);
+                }
+                CompiledOp::EmbedBwd { .. } => {
+                    assert_eq!(f.as_ref().unwrap().kind, FusedKind::EmbedBwd);
+                }
+                _ => assert!(f.is_none(), "non-compute op lowered: {op:?}"),
+            }
+        }
+        // the plan reserves the per-device max over fused ops, on every
+        // device that runs one
+        let mut want = WorkspacePlan::default();
+        for (t, f) in plan.tasks.iter().zip(&prog.fused) {
+            if let Some(f) = f {
+                match f.kind {
+                    FusedKind::FwdBlock | FusedKind::BwdBlock => {
+                        for &r in &t.ranks {
+                            want.note(r, f.ws_floats);
+                        }
+                    }
+                    _ => want.note(t.ranks[0], f.ws_floats),
+                }
+            }
+        }
+        assert_eq!(prog.ws_plan, want);
+        assert!(want.per_device_floats.iter().any(|&f| f > 0));
+        // fused block GEMMs carry the fused span kinds
+        for (sk, f) in prog.spans.iter().zip(&prog.fused) {
+            use crate::obs::trace::SpanKind;
+            match sk {
+                SpanKind::FwdGemmFused | SpanKind::BwdGemmFused => assert!(f.is_some()),
+                SpanKind::FwdGemm | SpanKind::BwdGemm => {
+                    panic!("unfused gemm span in a fused program")
+                }
+                _ => {}
+            }
+        }
+
+        // fusion off: no lowering, no reservations, plain gemm spans
+        let layout = ShardLayout::build(&cfg, &s).unwrap();
+        let plan2 = specialize(&s, &layout, false).unwrap();
+        let counts: Vec<usize> = s.pipelines.iter().map(|p| p.num_microbatches).collect();
+        let shape = ShapeClass::uniform(&counts, cfg.batch, cfg.seq);
+        let off = compile_program(&plan2, &s.pipelines, false, shape, &cfg, false).unwrap();
+        assert!(!off.fused_kernels);
+        assert!(off.fused.iter().all(|f| f.is_none()));
+        assert!(off.ws_plan.per_device_floats.iter().all(|&f| f == 0));
+        assert_ne!(off.uid, prog.uid, "every compile gets a fresh identity");
     }
 
     #[test]

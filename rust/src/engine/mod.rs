@@ -40,7 +40,9 @@ use crate::runtime::{ManifestConfig, Runtime};
 use crate::spec::schedule::ScheduleKind;
 use crate::{Error, Result};
 
-pub use compile::{compile_program, CompiledOp, CompiledProgram, Seg, ShapeClass};
+pub use compile::{
+    compile_program, CompiledOp, CompiledProgram, FusedCall, FusedKind, Seg, ShapeClass,
+};
 pub use intern::{KeyId, KeyInterner};
 pub use layout::{ShardLayout, SyncOp, ZeroGroup};
 pub use optim::AdamW;
@@ -303,6 +305,15 @@ pub struct StepStats {
     /// `Some` only when [`Engine::set_tracing`] is on — the reference
     /// interpreter and untraced steps leave it `None`.
     pub breakdown: Option<crate::obs::breakdown::StepBreakdown>,
+    /// Native kernel launches this step (each `*_into` kernel counts one;
+    /// a fused-lowered step issues fewer than the unfused tape — DESIGN.md
+    /// §12's launch accounting). 0 under a non-native runtime.
+    pub kernel_launches: u64,
+    /// Bytes heap-allocated *inside* native kernels this step (allocating
+    /// wrapper kernels only; the fused workspace path allocates none, so
+    /// a warm fused compiled step reports 0 — the kernel-layer half of the
+    /// zero-alloc contract in `tests/compiled_alloc.rs`).
+    pub kernel_bytes_alloc: u64,
 }
 
 /// Which executor [`Engine::train_step`] drives the specialized plan
@@ -365,6 +376,13 @@ pub struct Engine {
     /// Executor the specialized plan runs under (event-driven replay or
     /// per-rank OS threads); see [`ExecMode`].
     pub exec_mode: ExecMode,
+    /// Kernel-level fusion for compiled segments (DESIGN.md §12): when on
+    /// (the default) and the backend is native, compilation lowers each
+    /// `Seg` compute run into a frozen [`FusedCall`] replayed through
+    /// preplanned workspaces and prepacked weight panels. Numerics are
+    /// bit-identical either way; toggle with
+    /// [`Engine::set_kernel_fusion`] to measure the unfused tape.
+    pub kernel_fusion: bool,
     /// Determinism-stress scheduling jitter for the threaded executor:
     /// `Some(seed)` sleeps a hashed 0–200 µs before every task, shaking
     /// thread interleavings without touching any reduction order (the
@@ -437,6 +455,7 @@ impl Engine {
             topology: None,
             zero1: false,
             exec_mode: ExecMode::default(),
+            kernel_fusion: true,
             exec_jitter: None,
             spec: None,
             compiled: None,
@@ -471,6 +490,25 @@ impl Engine {
     /// re-specialization happens.
     pub fn set_exec_mode(&mut self, mode: ExecMode) {
         self.exec_mode = mode;
+    }
+
+    /// Enable/disable kernel-level fusion for compiled segments (on by
+    /// default). Invalidates the compiled tape so the next compiled step
+    /// relowers; the specialized plan and all numerics are unaffected
+    /// (fused and unfused paths are bit-identical — the toggle exists for
+    /// the fused-vs-unfused bench rows and differential tests).
+    pub fn set_kernel_fusion(&mut self, on: bool) {
+        if self.kernel_fusion != on {
+            self.kernel_fusion = on;
+            self.compiled = None;
+        }
+    }
+
+    /// True when compiled steps lower to fused workspace kernels: fusion
+    /// is requested *and* the backend is native (the PJRT path keeps its
+    /// artifact calls).
+    pub(crate) fn fusion_active(&self) -> bool {
+        self.kernel_fusion && self.runtime.is_native()
     }
 
     /// Set (or clear) the threaded executor's scheduling-jitter seed —
@@ -720,7 +758,9 @@ impl Engine {
         let pipelines = self.strategy.pipelines.clone();
         let plan = self.specialized_plan()?;
         let deliveries = std::mem::take(&mut self.pending_deliveries);
+        let (launches0, kbytes0) = crate::runtime::native::counters::snapshot();
         let out = self.run_specialized(&plan, &pipelines, &batches, &deliveries)?;
+        let (launches1, kbytes1) = crate::runtime::native::counters::snapshot();
         self.step += 1;
         let breakdown = self.recorder.is_active().then(|| {
             crate::obs::breakdown::fold_spans(
@@ -739,6 +779,8 @@ impl Engine {
             exposed_switch_s: out.exposed_switch_s,
             switch_delivery_s: out.delivery_lane_s,
             breakdown,
+            kernel_launches: launches1.wrapping_sub(launches0),
+            kernel_bytes_alloc: kbytes1.wrapping_sub(kbytes0),
         })
     }
 
@@ -758,6 +800,7 @@ impl Engine {
         let (batches, positions) = self.prefetch_batches(data)?;
         let pipelines = self.strategy.pipelines.clone();
         let kind = self.strategy.schedule;
+        let (launches0, kbytes0) = crate::runtime::native::counters::snapshot();
 
         let mut weighted_loss = 0f64;
         let mut total_tokens = 0u64;
@@ -780,6 +823,7 @@ impl Engine {
         // concurrently in a deployment; charge the per-device share.
         let ndev = self.strategy.num_devices().max(1);
         self.step += 1;
+        let (launches1, kbytes1) = crate::runtime::native::counters::snapshot();
         Ok(StepStats {
             loss: (weighted_loss / total_tokens as f64) as f32,
             wire_elems: self.mesh.wire_elems - wire0,
@@ -790,6 +834,8 @@ impl Engine {
             exposed_switch_s: 0.0,
             switch_delivery_s: 0.0,
             breakdown: None,
+            kernel_launches: launches1.wrapping_sub(launches0),
+            kernel_bytes_alloc: kbytes1.wrapping_sub(kbytes0),
         })
     }
 }

@@ -45,11 +45,14 @@ use std::time::{Duration, Instant};
 
 use crate::collectives::{extract_region, write_region, DeviceMem};
 use crate::hspmd::slices::Region;
+use crate::runtime::workspace::{
+    block_bwd_ws, block_fwd_ws, grad_shape, KernelWorkspace, PanelCache,
+};
 use crate::runtime::{native, HostTensor, ManifestConfig};
 use crate::temporal::overlap::SwitchOverlap;
 use crate::{Error, Result};
 
-use super::compile::{CompiledOp, CompiledProgram};
+use super::compile::{CompiledOp, CompiledProgram, FusedCall};
 use super::exec::{accumulate, SpecRunOutcome};
 use super::intern::KeyId;
 use super::layout::{gkey, pkey, ShardLayout, SyncOp};
@@ -436,6 +439,16 @@ struct Worker<'s, 'e> {
     sh: &'s Shared<'e>,
     txs: Vec<Sender<Msg>>,
     inbox: Inbox,
+    /// Thread-local kernel arena for fused block replay (DESIGN.md §12).
+    /// Workers live one step, so the arena grows on the step's first
+    /// fused call and is reused across this rank's micro-batches.
+    ws: KernelWorkspace,
+    /// Thread-local prepacked-panel cache, same lifetime. The compiled
+    /// event-driven path keeps its caches across steps; here embed/head
+    /// stay interpreted and panels repack per step — bit-identical either
+    /// way, and the wall-clock contract (not zero-alloc) governs this
+    /// executor.
+    panels: PanelCache,
 }
 
 impl Worker<'_, '_> {
@@ -454,6 +467,10 @@ impl Worker<'_, '_> {
             // the tape is index-aligned with the plan: op `ti` carries
             // the frozen keys/endpoints for task `ti`
             let cop = sh.prog.map(|p| &p.ops[ti]);
+            // frozen fused-kernel lowering for this op, when the tape
+            // carries one (block GEMMs replay the workspace drivers;
+            // embed/head stay interpreted on this executor)
+            let fc = sh.prog.and_then(|p| p.fused.get(ti).and_then(|f| f.as_ref()));
             match task.kind {
                 SpecTaskKind::GradReduce | SpecTaskKind::ZeroExchange => {
                     self.global_phase(ti, &task.kind)?;
@@ -464,7 +481,7 @@ impl Worker<'_, '_> {
                             self.fwd_in(ti, pipe, stage, mb, cop)?
                         }
                         SpecTaskKind::FwdGemm { pipe, stage, mb, layer } => {
-                            self.fwd_gemm(pipe, stage, mb, layer, cop)?
+                            self.fwd_gemm(pipe, stage, mb, layer, cop, fc)?
                         }
                         SpecTaskKind::FwdTpSync { pipe, stage, mb, .. } => {
                             self.tp_sync(ti, pipe, stage, mb, true, cop)?
@@ -473,7 +490,7 @@ impl Worker<'_, '_> {
                             self.bwd_in(ti, pipe, stage, mb, cop)?
                         }
                         SpecTaskKind::BwdGemm { pipe, stage, mb, layer } => {
-                            self.bwd_gemm(pipe, stage, mb, layer, cop)?
+                            self.bwd_gemm(pipe, stage, mb, layer, cop, fc)?
                         }
                         SpecTaskKind::BwdTpSync { pipe, stage, mb, .. } => {
                             self.tp_sync(ti, pipe, stage, mb, false, cop)?
@@ -491,7 +508,13 @@ impl Worker<'_, '_> {
             if let (Some(t0_s), Some(bufs)) = (t0_s, sh.trace.as_ref()) {
                 plock(&bufs[self.ri]).push(Span {
                     task: ti as u32,
-                    kind: SpanKind::of_task(&task.kind),
+                    // fused block GEMMs carry the tape's frozen fused span
+                    // kind, so the trace shows which ops ran fused
+                    kind: match (fc, SpanKind::of_task(&task.kind)) {
+                        (Some(_), SpanKind::FwdGemm) => SpanKind::FwdGemmFused,
+                        (Some(_), SpanKind::BwdGemm) => SpanKind::BwdGemmFused,
+                        (_, k) => k,
+                    },
                     rank: self.rank as u32,
                     t0_s,
                     t1_s: sh.start.elapsed().as_secs_f64(),
@@ -596,7 +619,10 @@ impl Worker<'_, '_> {
     }
 
     /// [`SpecTaskKind::FwdGemm`]: save the block input for recompute,
-    /// then the own partial forward GEMMs — all on the own device.
+    /// then the own partial forward GEMMs — all on the own device. With a
+    /// frozen [`FusedCall`] the partial runs through the fused workspace
+    /// driver (prepacked panels, one carved arena) — bit-identical to the
+    /// artifact call.
     fn fwd_gemm(
         &mut self,
         pi: usize,
@@ -604,11 +630,36 @@ impl Worker<'_, '_> {
         mb: usize,
         l: u32,
         cop: Option<&CompiledOp>,
+        fc: Option<&FusedCall>,
     ) -> Result<()> {
         let sh = self.sh;
         let stage = &sh.pipelines[pi].stages[si];
         let akey = key_or(sh.prog, cop.and_then(|o| o.act_key()), || Engine::akey(pi, mb));
         let skey = key_or(sh.prog, cop.and_then(|o| o.save_key()), || Engine::skey(pi, mb, l));
+        if let (Some(prog), Some(fc), Some(ids)) =
+            (sh.prog, fc, cop.and_then(|o| o.param_keys()))
+        {
+            let dims = fc.dims;
+            let nh = dims.n * dims.h;
+            let mut dev = sh.lock_dev(self.rank);
+            let x = dev.get(&akey)?.clone();
+            dev.put(&skey, x);
+            for &pk in ids.iter() {
+                self.panels.ensure(pk.index(), dev.get(prog.key(pk))?.as_f32()?);
+            }
+            {
+                let panels = &self.panels;
+                let p: [&[f32]; 8] = std::array::from_fn(|i| panels.get(ids[i].index()));
+                let wsbuf = self.ws.slice(fc.ws_floats);
+                let (ybuf, rest) = wsbuf.split_at_mut(nh);
+                let x = dev.get(&akey)?.as_f32()?;
+                block_fwd_ws(&dims, &p, x, ybuf, rest);
+            }
+            let y_part =
+                HostTensor::f32(vec![dims.b, dims.s, dims.h], self.ws.data()[..nh].to_vec())?;
+            dev.put("part", y_part);
+            return Ok(());
+        }
         let art = key_or(sh.prog, cop.and_then(|o| o.artifact()), || {
             format!("block_fwd_tp{}", stage.tp())
         });
@@ -761,7 +812,8 @@ impl Worker<'_, '_> {
     }
 
     /// [`SpecTaskKind::BwdGemm`]: the own backward GEMMs for one layer,
-    /// gradient accumulation, and the saved-input free.
+    /// gradient accumulation, and the saved-input free. With a frozen
+    /// [`FusedCall`] the layer replays the fused workspace driver.
     fn bwd_gemm(
         &mut self,
         pi: usize,
@@ -769,11 +821,45 @@ impl Worker<'_, '_> {
         mb: usize,
         l: u32,
         cop: Option<&CompiledOp>,
+        fc: Option<&FusedCall>,
     ) -> Result<()> {
         let sh = self.sh;
         let stage = &sh.pipelines[pi].stages[si];
         let dkey = key_or(sh.prog, cop.and_then(|o| o.grad_key()), || Engine::dkey(pi, mb));
         let skey = key_or(sh.prog, cop.and_then(|o| o.save_key()), || Engine::skey(pi, mb, l));
+        if let (Some(prog), Some(fc), Some(ids), Some(gids)) = (
+            sh.prog,
+            fc,
+            cop.and_then(|o| o.param_keys()),
+            cop.and_then(|o| o.grad_param_keys()),
+        ) {
+            let dims = fc.dims;
+            let nh = dims.n * dims.h;
+            let mut dev = sh.lock_dev(self.rank);
+            for &pk in ids.iter() {
+                self.panels.ensure(pk.index(), dev.get(prog.key(pk))?.as_f32()?);
+            }
+            let (dx_t, grads_t) = {
+                let panels = &self.panels;
+                let p: [&[f32]; 8] = std::array::from_fn(|i| panels.get(ids[i].index()));
+                let wsbuf = self.ws.slice(fc.ws_floats);
+                let (dxbuf, rest) = wsbuf.split_at_mut(nh);
+                let x = dev.get(&skey)?.as_f32()?;
+                let dy = dev.get(&dkey)?.as_f32()?;
+                let g = block_bwd_ws(&dims, &p, x, dy, dxbuf, rest);
+                let mut grads_t: Vec<HostTensor> = Vec::with_capacity(8);
+                for i in 0..8 {
+                    grads_t.push(HostTensor::f32(grad_shape(&dims, i), g.by_index(i).to_vec())?);
+                }
+                (HostTensor::f32(vec![dims.b, dims.s, dims.h], dxbuf.to_vec())?, grads_t)
+            };
+            dev.put("dpart", dx_t);
+            for (&gk, gt) in gids.iter().zip(grads_t) {
+                accumulate(&mut dev, prog.key(gk), gt)?;
+            }
+            let _ = dev.take(&skey);
+            return Ok(());
+        }
         let art = key_or(sh.prog, cop.and_then(|o| o.artifact()), || {
             format!("block_bwd_tp{}", stage.tp())
         });
@@ -1029,7 +1115,15 @@ impl Engine {
                 let txs = txs.clone();
                 let sh = &shared;
                 handles.push(scope.spawn(move || {
-                    let mut w = Worker { ri, rank, sh, txs, inbox: Inbox { rx, stash: vec![] } };
+                    let mut w = Worker {
+                        ri,
+                        rank,
+                        sh,
+                        txs,
+                        inbox: Inbox { rx, stash: vec![] },
+                        ws: KernelWorkspace::default(),
+                        panels: PanelCache::default(),
+                    };
                     if let Err(e) = w.run() {
                         sh.fail(e);
                     }

@@ -37,6 +37,11 @@ pub enum SpanKind {
     BwdIn,
     /// One backward layer's GEMMs + grad accumulation.
     BwdGemm,
+    /// One forward layer lowered to a fused workspace kernel
+    /// ([`FusedKind::FwdBlock`](crate::engine::compile::FusedKind)).
+    FwdGemmFused,
+    /// One backward layer lowered to a fused workspace kernel.
+    BwdGemmFused,
     /// Backward TP dx all-reduce.
     BwdTpSync,
     /// Stage-0 embedding-gradient epilogue.
@@ -74,6 +79,8 @@ impl SpanKind {
             SpanKind::FwdTpSync => "FwdTpSync",
             SpanKind::BwdIn => "BwdIn",
             SpanKind::BwdGemm => "BwdGemm",
+            SpanKind::FwdGemmFused => "FwdGemmFused",
+            SpanKind::BwdGemmFused => "BwdGemmFused",
             SpanKind::BwdTpSync => "BwdTpSync",
             SpanKind::EmbedBwd => "EmbedBwd",
             SpanKind::GradReduce => "GradReduce",
@@ -84,7 +91,14 @@ impl SpanKind {
 
     /// GEMM-class work (the breakdown's "compute" bucket).
     pub fn is_compute(self) -> bool {
-        matches!(self, SpanKind::FwdGemm | SpanKind::BwdGemm | SpanKind::EmbedBwd)
+        matches!(
+            self,
+            SpanKind::FwdGemm
+                | SpanKind::BwdGemm
+                | SpanKind::FwdGemmFused
+                | SpanKind::BwdGemmFused
+                | SpanKind::EmbedBwd
+        )
     }
 
     /// Optimizer-class work (optimizer apply + ZeRO-1 exchange).
@@ -271,6 +285,8 @@ mod tests {
             SpanKind::FwdTpSync,
             SpanKind::BwdIn,
             SpanKind::BwdGemm,
+            SpanKind::FwdGemmFused,
+            SpanKind::BwdGemmFused,
             SpanKind::BwdTpSync,
             SpanKind::EmbedBwd,
             SpanKind::GradReduce,

@@ -9,6 +9,7 @@
 
 pub mod native;
 pub mod tensor;
+pub mod workspace;
 
 pub use tensor::HostTensor;
 

@@ -36,6 +36,56 @@ pub fn tiny_config() -> ManifestConfig {
 /// TP degrees the native backend provides block artifacts for.
 pub const TP_DEGREES: [usize; 3] = [1, 2, 4];
 
+/// Process-wide kernel accounting (DESIGN.md §12): every public kernel
+/// entry counts one *launch*, and every output/scratch `Vec` a kernel
+/// allocates counts its bytes. The fused workspace path
+/// (`runtime/workspace.rs`) calls only the `_into` variants, so a warm
+/// fused step adds zero to [`counters::KERNEL_BYTES`] — the engine
+/// snapshots the deltas per step into `StepStats`.
+pub mod counters {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// Kernel invocations (GEMMs, norms, attention, and the elementwise
+    /// map passes of the unfused block path — each is one launch).
+    pub static KERNEL_LAUNCHES: AtomicU64 = AtomicU64::new(0);
+    /// Bytes heap-allocated *inside* kernels (outputs and scratch; the
+    /// store/comm layers are accounted elsewhere).
+    pub static KERNEL_BYTES: AtomicU64 = AtomicU64::new(0);
+
+    /// Count one kernel launch.
+    #[inline]
+    pub fn launch() {
+        KERNEL_LAUNCHES.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count a kernel-internal allocation of `n` f32 elements.
+    #[inline]
+    pub fn alloc_f32(n: usize) {
+        KERNEL_BYTES.fetch_add((n * 4) as u64, Ordering::Relaxed);
+    }
+
+    /// `(launches, bytes)` so far — subtract two snapshots for a
+    /// per-step delta.
+    pub fn snapshot() -> (u64, u64) {
+        (KERNEL_LAUNCHES.load(Ordering::Relaxed), KERNEL_BYTES.load(Ordering::Relaxed))
+    }
+}
+
+/// Grow-only thread-local scratch for the non-fused kernel path: the
+/// bf16 GEMM's dequant block and the flash-attention row accumulator
+/// used to be fresh `Vec`s *per call* — callers in loops paid an
+/// allocation per invocation. Warm calls now allocate nothing.
+mod scratch {
+    use std::cell::RefCell;
+
+    thread_local! {
+        /// [`super::matmul_bf16`]'s per-k-block dequant panel.
+        pub(super) static BBLK: RefCell<Vec<f32>> = RefCell::new(Vec::new());
+        /// [`super::attention`]'s per-row output accumulator.
+        pub(super) static ACC: RefCell<Vec<f32>> = RefCell::new(Vec::new());
+    }
+}
+
 /// Build the artifact registry the native backend implements for `cfg`
 /// (same names, input orders, and output arities as the AOT exporter).
 /// Parameter dims are literal; the batch/seq dims are *symbolic*
@@ -272,10 +322,14 @@ fn dot(a: &[f32], b: &[f32]) -> f32 {
     dot_scalar(a, b)
 }
 
-/// `out[m,n] = a[m,k] @ b[k,n]` (row-major, k-ordered f32 accumulation,
-/// k-blocked). Public so the `hotpath_micro` bench can guard it.
-pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n];
+/// `out[m,n] = a[m,k] @ b[k,n]` written into a caller-provided buffer
+/// (row-major, k-ordered f32 accumulation, k-blocked). `out` is
+/// zero-filled first, so a reused workspace slice gives exactly the
+/// fresh-allocation result.
+pub fn matmul_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    counters::launch();
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0.0);
     for k0 in (0..k).step_by(KBLOCK) {
         let k1 = (k0 + KBLOCK).min(k);
         for i in 0..m {
@@ -289,12 +343,23 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
             }
         }
     }
+}
+
+/// `out[m,n] = a[m,k] @ b[k,n]` (row-major, k-ordered f32 accumulation,
+/// k-blocked). Public so the `hotpath_micro` bench can guard it.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    counters::alloc_f32(m * n);
+    let mut out = vec![0.0f32; m * n];
+    matmul_into(a, b, m, k, n, &mut out);
     out
 }
 
-/// `out[k,n] = a[m,k]ᵀ @ b[m,n]` (gradient w.r.t. a weight).
-pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; k * n];
+/// `out[k,n] = a[m,k]ᵀ @ b[m,n]` into a caller-provided (zero-filled
+/// here) buffer.
+pub fn matmul_tn_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    counters::launch();
+    debug_assert_eq!(out.len(), k * n);
+    out.fill(0.0);
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
         let brow = &b[i * n..(i + 1) * n];
@@ -305,12 +370,21 @@ pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32>
             axpy(&mut out[kk * n..(kk + 1) * n], brow, av);
         }
     }
+}
+
+/// `out[k,n] = a[m,k]ᵀ @ b[m,n]` (gradient w.r.t. a weight).
+pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    counters::alloc_f32(k * n);
+    let mut out = vec![0.0f32; k * n];
+    matmul_tn_into(a, b, m, k, n, &mut out);
     out
 }
 
-/// `out[m,k] = a[m,n] @ b[k,n]ᵀ` (gradient w.r.t. a matmul input).
-pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * k];
+/// `out[m,k] = a[m,n] @ b[k,n]ᵀ` into a caller-provided buffer (every
+/// element is overwritten).
+pub fn matmul_nt_into(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mut [f32]) {
+    counters::launch();
+    debug_assert_eq!(out.len(), m * k);
     for i in 0..m {
         let arow = &a[i * n..(i + 1) * n];
         let row = &mut out[i * k..(i + 1) * k];
@@ -318,7 +392,112 @@ pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32>
             *r = dot(arow, &b[kk * n..(kk + 1) * n]);
         }
     }
+}
+
+/// `out[m,k] = a[m,n] @ b[k,n]ᵀ` (gradient w.r.t. a matmul input).
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    counters::alloc_f32(m * k);
+    let mut out = vec![0.0f32; m * k];
+    matmul_nt_into(a, b, m, n, k, &mut out);
     out
+}
+
+// --------------------------------------------------------- fused epilogues
+//
+// Each fused kernel is ONE launch replacing a GEMM plus the elementwise
+// pass that always follows it in the transformer block, and is
+// bit-identical to running the two unfused kernels: the epilogue runs
+// *after* the full GEMM accumulation in the oracle's element order
+// (f32 addition is commutative, so `gemm + residual` may be evaluated as
+// residual-last; it is NOT associative, so the epilogue never folds into
+// the k-loop accumulation).
+
+/// GEMM + optional bias + tanh-GeLU: `pre = a@b (+ bias)`, `out = gelu(pre)`.
+/// `pre` is kept (the block backward needs the pre-activation for dGeLU).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_bias_gelu_into(
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+    pre: &mut [f32],
+    out: &mut [f32],
+) {
+    counters::launch();
+    debug_assert_eq!(pre.len(), m * n);
+    debug_assert_eq!(out.len(), m * n);
+    pre.fill(0.0);
+    for k0 in (0..k).step_by(KBLOCK) {
+        let k1 = (k0 + KBLOCK).min(k);
+        for i in 0..m {
+            let row = &mut pre[i * n..(i + 1) * n];
+            let arow = &a[i * k..(i + 1) * k];
+            for (kk, &av) in arow.iter().enumerate().take(k1).skip(k0) {
+                if av == 0.0 {
+                    continue;
+                }
+                axpy(row, &b[kk * n..(kk + 1) * n], av);
+            }
+        }
+    }
+    if let Some(bias) = bias {
+        debug_assert_eq!(bias.len(), n);
+        for i in 0..m {
+            let row = &mut pre[i * n..(i + 1) * n];
+            for (p, &bv) in row.iter_mut().zip(bias) {
+                *p += bv;
+            }
+        }
+    }
+    for (o, &p) in out.iter_mut().zip(pre.iter()) {
+        *o = gelu(p);
+    }
+}
+
+/// GEMM + residual axpy: `out = a@b + res` (GEMM accumulates into `out`,
+/// then the residual is added — commutative with the oracle's
+/// `res + gemm`, so bit-identical).
+pub fn matmul_residual_into(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    res: &[f32],
+    out: &mut [f32],
+) {
+    matmul_into(a, b, m, k, n, out);
+    debug_assert_eq!(res.len(), out.len());
+    for (o, &r) in out.iter_mut().zip(res) {
+        *o += r;
+    }
+}
+
+/// NT-GEMM + dGeLU epilogue: `out[i] = (dy @ w2ᵀ)[i] · gelu'(pre[i])` —
+/// the MLP's `da` in one launch. Per element the dot completes before the
+/// multiply, exactly the unfused `matmul_nt` + map order.
+pub fn matmul_nt_dgelu_into(
+    dy: &[f32],
+    b: &[f32],
+    pre: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    out: &mut [f32],
+) {
+    counters::launch();
+    debug_assert_eq!(out.len(), m * k);
+    debug_assert_eq!(pre.len(), m * k);
+    for i in 0..m {
+        let arow = &dy[i * n..(i + 1) * n];
+        let row = &mut out[i * k..(i + 1) * k];
+        let prow = &pre[i * k..(i + 1) * k];
+        for (kk, r) in row.iter_mut().enumerate() {
+            *r = dot(arow, &b[kk * n..(kk + 1) * n]) * dgelu(prow[kk]);
+        }
+    }
 }
 
 // ------------------------------------------------------------- bf16 tier
@@ -347,13 +526,59 @@ pub fn bf16_to_f32(b: u16) -> f32 {
 /// included), so the result is bit-identical to dequantizing both
 /// operands up front and calling [`matmul`].
 pub fn matmul_bf16(a: &[u16], b: &[u16], m: usize, k: usize, n: usize) -> Vec<f32> {
+    counters::launch();
+    counters::alloc_f32(m * n);
     let mut out = vec![0.0f32; m * n];
-    let mut bblk = vec![0.0f32; KBLOCK * n];
+    // per-k-block dequant panel, hoisted to grow-only thread-local
+    // scratch: callers in loops used to pay a KBLOCK·n allocation per call
+    scratch::BBLK.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        if buf.len() < KBLOCK * n {
+            let need = KBLOCK * n;
+            buf.resize(need, 0.0);
+        }
+        let bblk = &mut buf[..KBLOCK * n];
+        for k0 in (0..k).step_by(KBLOCK) {
+            let k1 = (k0 + KBLOCK).min(k);
+            for (d, &sb) in bblk.iter_mut().zip(&b[k0 * n..k1 * n]) {
+                *d = bf16_to_f32(sb);
+            }
+            for i in 0..m {
+                let row = &mut out[i * n..(i + 1) * n];
+                let arow = &a[i * k..(i + 1) * k];
+                for (kk, &ab) in arow.iter().enumerate().take(k1).skip(k0) {
+                    let av = bf16_to_f32(ab);
+                    if av == 0.0 {
+                        continue;
+                    }
+                    axpy(row, &bblk[(kk - k0) * n..(kk - k0 + 1) * n], av);
+                }
+            }
+        }
+    });
+    out
+}
+
+/// bf16 GEMM against a **persistent dequant panel**: `panel` is the f32
+/// dequantization of the bf16 `b` operand (see
+/// `workspace::PanelCache::ensure_bf16`), prepared once and reused across
+/// micro-batches/steps instead of re-dequantized per call. The k-ordered
+/// zero-skip accumulation is exactly [`matmul_bf16`]'s, so on a panel
+/// that equals `bf16_to_f32(b)` the result is bit-identical.
+pub fn matmul_bf16_panel_into(
+    a: &[u16],
+    panel: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    counters::launch();
+    debug_assert_eq!(panel.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0.0);
     for k0 in (0..k).step_by(KBLOCK) {
         let k1 = (k0 + KBLOCK).min(k);
-        for (d, &sb) in bblk.iter_mut().zip(&b[k0 * n..k1 * n]) {
-            *d = bf16_to_f32(sb);
-        }
         for i in 0..m {
             let row = &mut out[i * n..(i + 1) * n];
             let arow = &a[i * k..(i + 1) * k];
@@ -362,16 +587,17 @@ pub fn matmul_bf16(a: &[u16], b: &[u16], m: usize, k: usize, n: usize) -> Vec<f3
                 if av == 0.0 {
                     continue;
                 }
-                axpy(row, &bblk[(kk - k0) * n..(kk - k0 + 1) * n], av);
+                axpy(row, &panel[kk * n..(kk + 1) * n], av);
             }
         }
     }
-    out
 }
 
-/// RMSNorm over rows of `x [n, h]` with gain `g [h]`.
-fn rmsnorm(x: &[f32], g: &[f32], n: usize, h: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; n * h];
+/// RMSNorm over rows of `x [n, h]` with gain `g [h]`, into a
+/// caller-provided buffer (every element overwritten).
+pub fn rmsnorm_into(x: &[f32], g: &[f32], n: usize, h: usize, out: &mut [f32]) {
+    counters::launch();
+    debug_assert_eq!(out.len(), n * h);
     for r in 0..n {
         let row = &x[r * h..(r + 1) * h];
         let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / h as f32;
@@ -381,17 +607,31 @@ fn rmsnorm(x: &[f32], g: &[f32], n: usize, h: usize) -> Vec<f32> {
             orow[i] = row[i] * inv * g[i];
         }
     }
+}
+
+/// RMSNorm over rows of `x [n, h]` with gain `g [h]`.
+fn rmsnorm(x: &[f32], g: &[f32], n: usize, h: usize) -> Vec<f32> {
+    counters::alloc_f32(n * h);
+    let mut out = vec![0.0f32; n * h];
+    rmsnorm_into(x, g, n, h, &mut out);
     out
 }
 
-/// VJP of [`rmsnorm`]: given upstream `dxn`, returns `(dx, dg)`.
-///
-/// With `r = (mean(x²)+eps)^{-1/2}`:
-/// `dg_i = Σ_rows dxn_i · x_i · r` and
-/// `dx_j = r·g_j·dxn_j − x_j·r³·(Σ_i dxn_i g_i x_i)/h`.
-fn rmsnorm_bwd(x: &[f32], g: &[f32], dxn: &[f32], n: usize, h: usize) -> (Vec<f32>, Vec<f32>) {
-    let mut dx = vec![0.0f32; n * h];
-    let mut dg = vec![0.0f32; h];
+/// VJP of [`rmsnorm`] into caller-provided `dx [n,h]` / `dg [h]` buffers
+/// (`dg` accumulates over rows, so it is zero-filled here).
+pub fn rmsnorm_bwd_into(
+    x: &[f32],
+    g: &[f32],
+    dxn: &[f32],
+    n: usize,
+    h: usize,
+    dx: &mut [f32],
+    dg: &mut [f32],
+) {
+    counters::launch();
+    debug_assert_eq!(dx.len(), n * h);
+    debug_assert_eq!(dg.len(), h);
+    dg.fill(0.0);
     for r in 0..n {
         let row = &x[r * h..(r + 1) * h];
         let drow = &dxn[r * h..(r + 1) * h];
@@ -408,6 +648,18 @@ fn rmsnorm_bwd(x: &[f32], g: &[f32], dxn: &[f32], n: usize, h: usize) -> (Vec<f3
             orow[i] = inv * g[i] * drow[i] - row[i] * coef;
         }
     }
+}
+
+/// VJP of [`rmsnorm`]: given upstream `dxn`, returns `(dx, dg)`.
+///
+/// With `r = (mean(x²)+eps)^{-1/2}`:
+/// `dg_i = Σ_rows dxn_i · x_i · r` and
+/// `dx_j = r·g_j·dxn_j − x_j·r³·(Σ_i dxn_i g_i x_i)/h`.
+fn rmsnorm_bwd(x: &[f32], g: &[f32], dxn: &[f32], n: usize, h: usize) -> (Vec<f32>, Vec<f32>) {
+    counters::alloc_f32(n * h + h);
+    let mut dx = vec![0.0f32; n * h];
+    let mut dg = vec![0.0f32; h];
+    rmsnorm_bwd_into(x, g, dxn, n, h, &mut dx, &mut dg);
     (dx, dg)
 }
 
@@ -441,6 +693,81 @@ const ATT_TILE: usize = 64;
 /// log-sum-exp `m + ln l`, from which the backward recomputes any
 /// probability as `exp(qᵀk·scale − lse)`.
 #[allow(clippy::too_many_arguments)]
+pub fn attention_into(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    b: usize,
+    s: usize,
+    nh: usize,
+    hd: usize,
+    out: &mut [f32],
+    lse: &mut [f32],
+) {
+    counters::launch();
+    let w = nh * hd; // row width
+    debug_assert_eq!(out.len(), b * s * w);
+    debug_assert_eq!(lse.len(), b * nh * s);
+    let scale = 1.0 / (hd as f32).sqrt();
+    // per-row output accumulator, hoisted to grow-only thread-local
+    // scratch: it used to be a fresh `Vec` per kernel call
+    scratch::ACC.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        if buf.len() < hd {
+            buf.resize(hd, 0.0);
+        }
+        let acc = &mut buf[..hd];
+        for bi in 0..b {
+            for hi in 0..nh {
+                for i in 0..s {
+                    let qrow = &q[(bi * s + i) * w + hi * hd..(bi * s + i) * w + (hi + 1) * hd];
+                    let mut m = f32::NEG_INFINITY;
+                    let mut l = 0.0f32;
+                    acc.fill(0.0);
+                    let mut j0 = 0usize;
+                    while j0 <= i {
+                        let j1 = (j0 + ATT_TILE).min(i + 1);
+                        let mut logits = [0.0f32; ATT_TILE];
+                        let mut tile_max = f32::NEG_INFINITY;
+                        for (t, logit) in logits.iter_mut().take(j1 - j0).enumerate() {
+                            let j = j0 + t;
+                            let krow =
+                                &k[(bi * s + j) * w + hi * hd..(bi * s + j) * w + (hi + 1) * hd];
+                            *logit = dot(qrow, krow) * scale;
+                            tile_max = tile_max.max(*logit);
+                        }
+                        // rescale the running state to the new max, then fold
+                        // the tile in (exp(-inf) = 0 covers the first tile)
+                        let m_new = m.max(tile_max);
+                        let alpha = (m - m_new).exp();
+                        l *= alpha;
+                        for a in acc.iter_mut() {
+                            *a *= alpha;
+                        }
+                        for (t, &logit) in logits.iter().take(j1 - j0).enumerate() {
+                            let j = j0 + t;
+                            let p = (logit - m_new).exp();
+                            l += p;
+                            let vrow =
+                                &v[(bi * s + j) * w + hi * hd..(bi * s + j) * w + (hi + 1) * hd];
+                            axpy(acc, vrow, p);
+                        }
+                        m = m_new;
+                        j0 = j1;
+                    }
+                    let orow =
+                        &mut out[(bi * s + i) * w + hi * hd..(bi * s + i) * w + (hi + 1) * hd];
+                    for (o, &a) in orow.iter_mut().zip(acc.iter()) {
+                        *o = a / l;
+                    }
+                    lse[(bi * nh + hi) * s + i] = m + l.ln();
+                }
+            }
+        }
+    });
+}
+
+#[allow(clippy::too_many_arguments)]
 pub fn attention(
     q: &[f32],
     k: &[f32],
@@ -450,58 +777,11 @@ pub fn attention(
     nh: usize,
     hd: usize,
 ) -> (Vec<f32>, Vec<f32>) {
-    let w = nh * hd; // row width
-    let scale = 1.0 / (hd as f32).sqrt();
+    let w = nh * hd;
+    counters::alloc_f32(b * s * w + b * nh * s);
     let mut out = vec![0.0f32; b * s * w];
     let mut lse = vec![0.0f32; b * nh * s];
-    let mut acc = vec![0.0f32; hd];
-    for bi in 0..b {
-        for hi in 0..nh {
-            for i in 0..s {
-                let qrow = &q[(bi * s + i) * w + hi * hd..(bi * s + i) * w + (hi + 1) * hd];
-                let mut m = f32::NEG_INFINITY;
-                let mut l = 0.0f32;
-                acc.fill(0.0);
-                let mut j0 = 0usize;
-                while j0 <= i {
-                    let j1 = (j0 + ATT_TILE).min(i + 1);
-                    let mut logits = [0.0f32; ATT_TILE];
-                    let mut tile_max = f32::NEG_INFINITY;
-                    for (t, logit) in logits.iter_mut().take(j1 - j0).enumerate() {
-                        let j = j0 + t;
-                        let krow =
-                            &k[(bi * s + j) * w + hi * hd..(bi * s + j) * w + (hi + 1) * hd];
-                        *logit = dot(qrow, krow) * scale;
-                        tile_max = tile_max.max(*logit);
-                    }
-                    // rescale the running state to the new max, then fold
-                    // the tile in (exp(-inf) = 0 covers the first tile)
-                    let m_new = m.max(tile_max);
-                    let alpha = (m - m_new).exp();
-                    l *= alpha;
-                    for a in acc.iter_mut() {
-                        *a *= alpha;
-                    }
-                    for (t, &logit) in logits.iter().take(j1 - j0).enumerate() {
-                        let j = j0 + t;
-                        let p = (logit - m_new).exp();
-                        l += p;
-                        let vrow =
-                            &v[(bi * s + j) * w + hi * hd..(bi * s + j) * w + (hi + 1) * hd];
-                        axpy(&mut acc, vrow, p);
-                    }
-                    m = m_new;
-                    j0 = j1;
-                }
-                let orow =
-                    &mut out[(bi * s + i) * w + hi * hd..(bi * s + i) * w + (hi + 1) * hd];
-                for (o, &a) in orow.iter_mut().zip(acc.iter()) {
-                    *o = a / l;
-                }
-                lse[(bi * nh + hi) * s + i] = m + l.ln();
-            }
-        }
-    }
+    attention_into(q, k, v, b, s, nh, hd, &mut out, &mut lse);
     (out, lse)
 }
 
@@ -511,7 +791,7 @@ pub fn attention(
 /// `D_i = do_i · o_i` (= Σ_j p·dp) for the softmax pullback. Returns
 /// `(dq, dk, dv)`.
 #[allow(clippy::too_many_arguments)]
-pub fn attention_bwd(
+pub fn attention_bwd_into(
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -522,12 +802,19 @@ pub fn attention_bwd(
     s: usize,
     nh: usize,
     hd: usize,
-) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+) {
+    counters::launch();
     let w = nh * hd;
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut dq = vec![0.0f32; b * s * w];
-    let mut dk = vec![0.0f32; b * s * w];
-    let mut dv = vec![0.0f32; b * s * w];
+    debug_assert_eq!(dq.len(), b * s * w);
+    debug_assert_eq!(dk.len(), b * s * w);
+    debug_assert_eq!(dv.len(), b * s * w);
+    dq.fill(0.0);
+    dk.fill(0.0);
+    dv.fill(0.0);
     for bi in 0..b {
         for hi in 0..nh {
             for i in 0..s {
@@ -549,6 +836,27 @@ pub fn attention_bwd(
             }
         }
     }
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn attention_bwd(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    lse: &[f32],
+    o: &[f32],
+    do_: &[f32],
+    b: usize,
+    s: usize,
+    nh: usize,
+    hd: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let w = nh * hd;
+    counters::alloc_f32(3 * b * s * w);
+    let mut dq = vec![0.0f32; b * s * w];
+    let mut dk = vec![0.0f32; b * s * w];
+    let mut dv = vec![0.0f32; b * s * w];
+    attention_bwd_into(q, k, v, lse, o, do_, b, s, nh, hd, &mut dq, &mut dk, &mut dv);
     (dq, dk, dv)
 }
 
@@ -680,30 +988,42 @@ pub fn attention_bwd_ref(
 
 // -------------------------------------------------------------- artifacts
 
-fn embed_fwd(cfg: &ManifestConfig, emb: &HostTensor, tok: &HostTensor) -> Result<HostTensor> {
-    let h = cfg.hidden;
-    let (b, s) = (tok.shape[0], tok.shape[1]); // symbolic dims, bound per call
-    let e = emb.as_f32()?;
-    let t = tok.as_i32()?;
-    let mut out = vec![0.0f32; b * s * h];
-    for (n, &id) in t.iter().enumerate() {
+/// Embedding row gather into a caller-provided `[n, h]` buffer (every
+/// row overwritten; tokens read directly as `&[i32]`, no tensor wrap).
+pub fn embed_fwd_into(
+    emb: &[f32],
+    tokens: &[i32],
+    h: usize,
+    vocab: usize,
+    out: &mut [f32],
+) -> Result<()> {
+    counters::launch();
+    debug_assert_eq!(out.len(), tokens.len() * h);
+    for (n, &id) in tokens.iter().enumerate() {
         let id = id as usize;
-        if id >= cfg.vocab {
-            return Err(Error::Runtime(format!("embed_fwd: token {id} ≥ vocab {}", cfg.vocab)));
+        if id >= vocab {
+            return Err(Error::Runtime(format!("embed_fwd: token {id} ≥ vocab {vocab}")));
         }
-        out[n * h..(n + 1) * h].copy_from_slice(&e[id * h..(id + 1) * h]);
+        out[n * h..(n + 1) * h].copy_from_slice(&emb[id * h..(id + 1) * h]);
     }
-    HostTensor::f32(vec![b, s, h], out)
+    Ok(())
 }
 
-fn embed_bwd(cfg: &ManifestConfig, tok: &HostTensor, dx: &HostTensor) -> Result<HostTensor> {
-    let (h, v) = (cfg.hidden, cfg.vocab);
-    let t = tok.as_i32()?;
-    let d = dx.as_f32()?;
-    let mut demb = vec![0.0f32; v * h];
-    for (n, &id) in t.iter().enumerate() {
-        if id < 0 || id as usize >= v {
-            return Err(Error::Runtime(format!("embed_bwd: token {id} outside vocab {v}")));
+/// Embedding backward into a caller-provided `[vocab, h]` buffer
+/// (zero-filled here; rows accumulate).
+pub fn embed_bwd_into(
+    tokens: &[i32],
+    d: &[f32],
+    h: usize,
+    vocab: usize,
+    demb: &mut [f32],
+) -> Result<()> {
+    counters::launch();
+    debug_assert_eq!(demb.len(), vocab * h);
+    demb.fill(0.0);
+    for (n, &id) in tokens.iter().enumerate() {
+        if id < 0 || id as usize >= vocab {
+            return Err(Error::Runtime(format!("embed_bwd: token {id} outside vocab {vocab}")));
         }
         let id = id as usize;
         let row = &mut demb[id * h..(id + 1) * h];
@@ -712,6 +1032,27 @@ fn embed_bwd(cfg: &ManifestConfig, tok: &HostTensor, dx: &HostTensor) -> Result<
             row[i] += drow[i];
         }
     }
+    Ok(())
+}
+
+fn embed_fwd(cfg: &ManifestConfig, emb: &HostTensor, tok: &HostTensor) -> Result<HostTensor> {
+    let h = cfg.hidden;
+    let (b, s) = (tok.shape[0], tok.shape[1]); // symbolic dims, bound per call
+    let e = emb.as_f32()?;
+    let t = tok.as_i32()?;
+    counters::alloc_f32(b * s * h);
+    let mut out = vec![0.0f32; b * s * h];
+    embed_fwd_into(e, t, h, cfg.vocab, &mut out)?;
+    HostTensor::f32(vec![b, s, h], out)
+}
+
+fn embed_bwd(cfg: &ManifestConfig, tok: &HostTensor, dx: &HostTensor) -> Result<HostTensor> {
+    let (h, v) = (cfg.hidden, cfg.vocab);
+    let t = tok.as_i32()?;
+    let d = dx.as_f32()?;
+    counters::alloc_f32(v * h);
+    let mut demb = vec![0.0f32; v * h];
+    embed_bwd_into(t, d, h, v, &mut demb)?;
     HostTensor::f32(vec![v, h], demb)
 }
 
@@ -760,6 +1101,8 @@ fn block_forward_parts(
 
     let xn2 = rmsnorm(x, g2, n, h);
     let a = matmul(&xn2, w1, n, h, fl);
+    counters::launch(); // gelu map pass
+    counters::alloc_f32(a.len());
     let hh: Vec<f32> = a.iter().map(|&z| gelu(z)).collect();
     Ok(BlockFwd { xn1, q, k, v, att, lse, xn2, a, hh })
 }
@@ -776,6 +1119,8 @@ fn block_fwd(cfg: &ManifestConfig, tp: usize, inputs: &[&HostTensor]) -> Result<
     let w2 = inputs[7].as_f32()?;
     let att_out = matmul(&parts.att, wo, n, hl, h);
     let mlp_out = matmul(&parts.hh, w2, n, fl, h);
+    counters::launch(); // residual-sum pass
+    counters::alloc_f32(att_out.len());
     let y: Vec<f32> = att_out.iter().zip(mlp_out.iter()).map(|(a, m)| a + m).collect();
     HostTensor::f32(vec![b, s, h], y)
 }
@@ -803,6 +1148,8 @@ fn block_bwd(cfg: &ManifestConfig, tp: usize, inputs: &[&HostTensor]) -> Result<
     // ---- MLP branch
     let dw2 = matmul_tn(&parts.hh, dy, n, fl, h);
     let dhh = matmul_nt(dy, w2, n, h, fl);
+    counters::launch(); // dgelu map pass
+    counters::alloc_f32(dhh.len());
     let da: Vec<f32> =
         dhh.iter().zip(parts.a.iter()).map(|(&d, &z)| d * dgelu(z)).collect();
     let dw1 = matmul_tn(&parts.xn2, &da, n, h, fl);
@@ -821,11 +1168,14 @@ fn block_bwd(cfg: &ManifestConfig, tp: usize, inputs: &[&HostTensor]) -> Result<
     let mut dxn1 = matmul_nt(&dq, wq, n, hl, h);
     let dxn1_k = matmul_nt(&dk, wk, n, hl, h);
     let dxn1_v = matmul_nt(&dv, wv, n, hl, h);
+    counters::launch(); // dxn1 merge pass
     for i in 0..dxn1.len() {
         dxn1[i] += dxn1_k[i] + dxn1_v[i];
     }
     let (dx_att, dg1) = rmsnorm_bwd(x, g1, &dxn1, n, h);
 
+    counters::launch(); // dx residual-merge pass
+    counters::alloc_f32(dx_att.len());
     let dx: Vec<f32> = dx_att.iter().zip(dx_mlp.iter()).map(|(a, m)| a + m).collect();
 
     Ok(vec![
@@ -866,6 +1216,8 @@ fn head_step(
     }
     let xn = rmsnorm(xf, g, n, h);
     let logits = matmul(&xn, w, n, h, v);
+    counters::launch(); // softmax-CE / dlogits pass
+    counters::alloc_f32(n * v);
     let mut loss = 0.0f32;
     let mut dlogits = vec![0.0f32; n * v];
     for r in 0..n {
@@ -1232,6 +1584,164 @@ mod tests {
         for i in [0usize, 5, 11] {
             let num = numgrad(&mut f, &xv, i);
             assert!((dx[i] - num).abs() < 2e-2, "dx[{i}] {} vs {num}", dx[i]);
+        }
+    }
+
+    /// The `_into` variants must equal the allocating oracles bit for bit,
+    /// even when the destination buffer starts full of garbage (the fused
+    /// path reuses workspace slices across calls).
+    #[test]
+    fn into_kernels_bit_identical_to_oracles_on_dirty_buffers() {
+        for (case, &(b, s, nh, hd)) in
+            [(0usize, (1usize, 80usize, 2usize, 4usize)), (1, (3, 5, 2, 4)), (2, (2, 7, 4, 3))]
+                .iter()
+                .map(|(c, t)| (*c, t))
+        {
+            let mut rng = Rng::new(101 + case as u64);
+            let n = b * s;
+            let w = nh * hd;
+            let (m, k, nn) = (n, w, 2 * w + 3); // awkward GEMM geometry
+            let a = randvec(&mut rng, m * k, 0.7);
+            let bb = randvec(&mut rng, k * nn, 0.7);
+            let dirty = |len: usize| vec![777.0f32; len];
+
+            let mut out = dirty(m * nn);
+            matmul_into(&a, &bb, m, k, nn, &mut out);
+            assert_eq!(out, matmul(&a, &bb, m, k, nn), "case {case}: matmul_into");
+
+            let mut out = dirty(k * nn);
+            matmul_tn_into(&a, &bb, m, k, nn, &mut out);
+            assert_eq!(out, matmul_tn(&a, &bb, m, k, nn), "case {case}: matmul_tn_into");
+
+            let nt_a = randvec(&mut rng, m * 9, 0.7);
+            let nt_b = randvec(&mut rng, 5 * 9, 0.7);
+            let mut nt_out = dirty(m * 5);
+            matmul_nt_into(&nt_a, &nt_b, m, 9, 5, &mut nt_out);
+            assert_eq!(nt_out, matmul_nt(&nt_a, &nt_b, m, 9, 5), "case {case}: matmul_nt_into");
+
+            let g = randvec(&mut rng, w, 1.0);
+            let x = randvec(&mut rng, n * w, 0.6);
+            let mut xn = dirty(n * w);
+            rmsnorm_into(&x, &g, n, w, &mut xn);
+            assert_eq!(xn, rmsnorm(&x, &g, n, w), "case {case}: rmsnorm_into");
+
+            let dxn = randvec(&mut rng, n * w, 1.0);
+            let (mut dx, mut dg) = (dirty(n * w), dirty(w));
+            rmsnorm_bwd_into(&x, &g, &dxn, n, w, &mut dx, &mut dg);
+            let (dx_o, dg_o) = rmsnorm_bwd(&x, &g, &dxn, n, w);
+            assert_eq!(dx, dx_o, "case {case}: rmsnorm_bwd_into dx");
+            assert_eq!(dg, dg_o, "case {case}: rmsnorm_bwd_into dg");
+
+            let q = randvec(&mut rng, n * w, 0.5);
+            let kk2 = randvec(&mut rng, n * w, 0.5);
+            let v = randvec(&mut rng, n * w, 0.5);
+            let (mut att, mut lse) = (dirty(n * w), dirty(b * nh * s));
+            attention_into(&q, &kk2, &v, b, s, nh, hd, &mut att, &mut lse);
+            let (att_o, lse_o) = attention(&q, &kk2, &v, b, s, nh, hd);
+            assert_eq!(att, att_o, "case {case}: attention_into out");
+            assert_eq!(lse, lse_o, "case {case}: attention_into lse");
+
+            let dout = randvec(&mut rng, n * w, 1.0);
+            let (mut dq, mut dk, mut dv) = (dirty(n * w), dirty(n * w), dirty(n * w));
+            attention_bwd_into(
+                &q, &kk2, &v, &lse, &att, &dout, b, s, nh, hd, &mut dq, &mut dk, &mut dv,
+            );
+            let (dq_o, dk_o, dv_o) =
+                attention_bwd(&q, &kk2, &v, &lse, &att, &dout, b, s, nh, hd);
+            assert_eq!(dq, dq_o, "case {case}: attention_bwd_into dq");
+            assert_eq!(dk, dk_o, "case {case}: attention_bwd_into dk");
+            assert_eq!(dv, dv_o, "case {case}: attention_bwd_into dv");
+
+            let vocab = 37;
+            let emb = randvec(&mut rng, vocab * w, 0.4);
+            let toks: Vec<i32> = (0..n).map(|i| ((i * 7 + case) % vocab) as i32).collect();
+            let mut eout = dirty(n * w);
+            embed_fwd_into(&emb, &toks, w, vocab, &mut eout).unwrap();
+            for (row, &t) in toks.iter().enumerate() {
+                assert_eq!(
+                    &eout[row * w..(row + 1) * w],
+                    &emb[t as usize * w..(t as usize + 1) * w],
+                    "case {case}: embed_fwd_into row {row}"
+                );
+            }
+            let dyv = randvec(&mut rng, n * w, 1.0);
+            let mut demb = dirty(vocab * w);
+            embed_bwd_into(&toks, &dyv, w, vocab, &mut demb).unwrap();
+            let mut demb_o = vec![0.0f32; vocab * w];
+            for (row, &t) in toks.iter().enumerate() {
+                for i in 0..w {
+                    demb_o[t as usize * w + i] += dyv[row * w + i];
+                }
+            }
+            assert_eq!(demb, demb_o, "case {case}: embed_bwd_into");
+        }
+    }
+
+    /// Fused epilogues vs the unfused two-kernel sequences: bit-identical
+    /// by construction (epilogue after full GEMM, oracle element order).
+    #[test]
+    fn fused_epilogues_bit_identical_to_unfused_sequences() {
+        for (case, &(m, k, n)) in
+            [(0usize, (7usize, 131usize, 9usize)), (1, (1, 48, 96)), (2, (32, 96, 48))]
+                .iter()
+                .map(|(c, t)| (*c, t))
+        {
+            let mut rng = Rng::new(301 + case as u64);
+            let a = randvec(&mut rng, m * k, 0.6);
+            let b = randvec(&mut rng, k * n, 0.6);
+            let bias = randvec(&mut rng, n, 0.3);
+
+            // GEMM + GeLU (no bias): the block MLP's fused form
+            let (mut pre, mut hh) = (vec![777.0f32; m * n], vec![777.0f32; m * n]);
+            matmul_bias_gelu_into(&a, &b, None, m, k, n, &mut pre, &mut hh);
+            let pre_o = matmul(&a, &b, m, k, n);
+            let hh_o: Vec<f32> = pre_o.iter().map(|&z| gelu(z)).collect();
+            assert_eq!(pre, pre_o, "case {case}: bias_gelu pre (no bias)");
+            assert_eq!(hh, hh_o, "case {case}: bias_gelu out (no bias)");
+
+            // GEMM + bias + GeLU
+            let (mut pre, mut hh) = (vec![777.0f32; m * n], vec![777.0f32; m * n]);
+            matmul_bias_gelu_into(&a, &b, Some(&bias), m, k, n, &mut pre, &mut hh);
+            let mut pre_o = matmul(&a, &b, m, k, n);
+            for i in 0..m {
+                for j in 0..n {
+                    pre_o[i * n + j] += bias[j];
+                }
+            }
+            let hh_o: Vec<f32> = pre_o.iter().map(|&z| gelu(z)).collect();
+            assert_eq!(pre, pre_o, "case {case}: bias_gelu pre");
+            assert_eq!(hh, hh_o, "case {case}: bias_gelu out");
+
+            // GEMM + residual (commutes bitwise: res + gemm == gemm + res)
+            let res = randvec(&mut rng, m * n, 0.8);
+            let mut y = vec![777.0f32; m * n];
+            matmul_residual_into(&a, &b, m, k, n, &res, &mut y);
+            let gemm = matmul(&a, &b, m, k, n);
+            let y_o: Vec<f32> = res.iter().zip(gemm.iter()).map(|(r, g)| r + g).collect();
+            assert_eq!(y, y_o, "case {case}: residual epilogue");
+
+            // NT-GEMM + dGeLU
+            let dy = randvec(&mut rng, m * n, 0.9);
+            let w2 = randvec(&mut rng, k * n, 0.6);
+            let prek = randvec(&mut rng, m * k, 0.7);
+            let mut da = vec![777.0f32; m * k];
+            matmul_nt_dgelu_into(&dy, &w2, &prek, m, n, k, &mut da);
+            let dhh = matmul_nt(&dy, &w2, m, n, k);
+            let da_o: Vec<f32> =
+                dhh.iter().zip(prek.iter()).map(|(&d, &z)| d * dgelu(z)).collect();
+            assert_eq!(da, da_o, "case {case}: nt_dgelu epilogue");
+
+            // bf16 GEMM against a persistent dequant panel
+            let a16: Vec<u16> = a.iter().map(|&x| f32_to_bf16(x)).collect();
+            let b16: Vec<u16> = b.iter().map(|&x| f32_to_bf16(x)).collect();
+            let panel: Vec<f32> = b16.iter().map(|&x| bf16_to_f32(x)).collect();
+            let mut out16 = vec![777.0f32; m * n];
+            matmul_bf16_panel_into(&a16, &panel, m, k, n, &mut out16);
+            assert_eq!(
+                out16,
+                matmul_bf16(&a16, &b16, m, k, n),
+                "case {case}: bf16 panel GEMM"
+            );
         }
     }
 }

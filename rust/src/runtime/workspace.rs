@@ -1,0 +1,781 @@
+//! Kernel-level execution plan: per-rank workspace arenas, prepacked
+//! weight panels, and fused block/head/embed drivers (DESIGN.md §12).
+//!
+//! PR 7's compiled tapes removed dispatch-layer allocation; this module
+//! removes the *kernel*-layer allocation that remained. Every intermediate
+//! a transformer block or the head produces (normed activations, q/k/v,
+//! attention output, MLP pre-activations, all parameter gradients) becomes
+//! a slice carved out of a [`KernelWorkspace`] — one grow-only arena per
+//! device, sized at compile time from the `ShapeClass` (the
+//! `WorkspacePlan` frozen into the `CompiledProgram`) and reused across
+//! micro-batches and steps. Parameters are read through a [`PanelCache`]:
+//! contiguous panels keyed by interned param `KeyId`, packed lazily on
+//! first use and *invalidated* (marked stale, storage retained) on every
+//! `OptimStep`, so the steady state repacks in place and never allocates.
+//!
+//! The drivers ([`block_fwd_ws`], [`block_bwd_ws`], [`head_step_ws`])
+//! call only the `_into` kernels and fused epilogues of
+//! [`native`](super::native), in exactly the oracle kernels' operation
+//! order — bit-identical outputs, fewer launches, zero kernel bytes.
+
+use super::native::{self, counters};
+use super::ManifestConfig;
+use crate::{Error, Result};
+
+/// Frozen geometry of one transformer-block invocation on one device:
+/// micro-batch shape `[b, s]` (flattened to `n = b·s` rows) and the
+/// TP-local widths (`hl`/`fl`/`nh` are the per-shard slices of
+/// hidden/ffn/heads). `v` carries the vocab for the head/embed drivers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockDims {
+    /// Flattened rows (`b · s`).
+    pub n: usize,
+    /// Sequences in the micro-batch.
+    pub b: usize,
+    /// Sequence length.
+    pub s: usize,
+    /// Hidden size.
+    pub h: usize,
+    /// TP-local attention width (`hidden / tp`).
+    pub hl: usize,
+    /// TP-local FFN width (`ffn / tp`).
+    pub fl: usize,
+    /// TP-local head count (`heads / tp`).
+    pub nh: usize,
+    /// Per-head dim (`hidden / heads`).
+    pub hd: usize,
+    /// Vocabulary (head/embed drivers only).
+    pub v: usize,
+}
+
+impl BlockDims {
+    /// Dims for a `[n_seqs, seq_len]` micro-batch at TP degree `tp`.
+    /// Caller guarantees divisibility (the compiler gates fusion on it).
+    pub fn new(cfg: &ManifestConfig, tp: usize, n_seqs: usize, seq_len: usize) -> BlockDims {
+        let h = cfg.hidden;
+        BlockDims {
+            n: n_seqs * seq_len,
+            b: n_seqs,
+            s: seq_len,
+            h,
+            hl: h / tp,
+            fl: cfg.ffn / tp,
+            nh: cfg.heads / tp,
+            hd: h / cfg.heads,
+            v: cfg.vocab,
+        }
+    }
+
+    /// Floats of the forward intermediates shared with the backward
+    /// recompute: xn1, q, k, v, att, lse, xn2, a, hh.
+    fn parts_floats(&self) -> usize {
+        2 * self.n * self.h          // xn1, xn2
+            + 4 * self.n * self.hl   // q, k, v, att
+            + self.n * self.nh       // lse
+            + 2 * self.n * self.fl   // a, hh
+    }
+
+    /// Scratch floats [`block_fwd_ws`] carves (parts + att_out).
+    pub fn fwd_scratch_floats(&self) -> usize {
+        self.parts_floats() + self.n * self.h
+    }
+
+    /// Total forward reservation: the block output buffer + scratch.
+    pub fn fwd_ws_floats(&self) -> usize {
+        self.n * self.h + self.fwd_scratch_floats()
+    }
+
+    /// Scratch floats [`block_bwd_ws`] carves (recomputed parts + every
+    /// backward intermediate and parameter gradient).
+    pub fn bwd_scratch_floats(&self) -> usize {
+        let (n, h, hl, fl) = (self.n, self.h, self.hl, self.fl);
+        self.parts_floats()
+            + n * fl            // da
+            + 6 * n * h         // dxn2, dx_mlp, dxn1, dxn1_k, dxn1_v, dx_att
+            + 2 * h             // dg1, dg2
+            + 4 * h * hl        // dwq, dwk, dwv, dwo
+            + 2 * h * fl        // dw1, dw2
+            + 4 * n * hl        // datt, dq, dk, dv
+    }
+
+    /// Total backward reservation: the dx output buffer + scratch.
+    pub fn bwd_ws_floats(&self) -> usize {
+        self.n * self.h + self.bwd_scratch_floats()
+    }
+
+    /// Scratch floats [`head_step_ws`] carves: xn, logits, dlogits,
+    /// dwout, dxn, dgf.
+    pub fn head_ws_floats(&self) -> usize {
+        2 * self.n * self.h + 2 * self.n * self.v + self.h * self.v + self.h
+    }
+
+    /// Scratch floats the fused embed backward carves (the `[v, h]`
+    /// gradient accumulator).
+    pub fn embed_bwd_ws_floats(&self) -> usize {
+        self.v * self.h
+    }
+}
+
+/// Compile-time per-device workspace sizing: the max over a device's
+/// fused ops of their float reservations (DESIGN.md §12 sizing rule).
+/// Frozen into the `CompiledProgram`; the executor's arena grows each
+/// device's [`KernelWorkspace`] to this once per program install.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct WorkspacePlan {
+    /// Max float reservation per mesh device id.
+    pub per_device_floats: Vec<usize>,
+}
+
+impl WorkspacePlan {
+    /// Fold one fused op's reservation on `dev` into the plan.
+    pub fn note(&mut self, dev: usize, floats: usize) {
+        if self.per_device_floats.len() <= dev {
+            self.per_device_floats.resize(dev + 1, 0);
+        }
+        let e = &mut self.per_device_floats[dev];
+        *e = (*e).max(floats);
+    }
+
+    /// The frozen reservation for `dev` (0 when no fused op runs there).
+    pub fn floats_for(&self, dev: usize) -> usize {
+        self.per_device_floats.get(dev).copied().unwrap_or(0)
+    }
+}
+
+/// Per-device kernel arena: one grow-only flat `f32` buffer that every
+/// fused call on the device carves its intermediates out of. Growing
+/// happens once at program install (and never on the warm path).
+#[derive(Default)]
+pub struct KernelWorkspace {
+    buf: Vec<f32>,
+}
+
+impl KernelWorkspace {
+    /// Grow (never shrink) to at least `floats`.
+    pub fn ensure(&mut self, floats: usize) {
+        if self.buf.len() < floats {
+            self.buf.resize(floats, 0.0);
+        }
+    }
+
+    /// A `floats`-long mutable window (grows if needed — a no-op warm).
+    pub fn slice(&mut self, floats: usize) -> &mut [f32] {
+        self.ensure(floats);
+        &mut self.buf[..floats]
+    }
+
+    /// Read back the arena prefix (e.g. an output carved at offset 0).
+    pub fn data(&self) -> &[f32] {
+        &self.buf
+    }
+
+    /// Current capacity in floats.
+    pub fn capacity_floats(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+/// Sequentially split a workspace into disjoint `&mut` regions without
+/// allocating (repeated `split_at_mut` through `mem::take`).
+pub struct Carver<'a> {
+    rest: &'a mut [f32],
+    used: usize,
+}
+
+impl<'a> Carver<'a> {
+    /// Carve from `buf` front to back.
+    pub fn new(buf: &'a mut [f32]) -> Carver<'a> {
+        Carver { rest: buf, used: 0 }
+    }
+
+    /// The next `n` floats as an independent `&mut` slice.
+    pub fn take(&mut self, n: usize) -> &'a mut [f32] {
+        let buf = std::mem::take(&mut self.rest);
+        let (head, tail) = buf.split_at_mut(n);
+        self.rest = tail;
+        self.used += n;
+        head
+    }
+
+    /// Floats carved so far (sizing-rule cross-check).
+    pub fn used(&self) -> usize {
+        self.used
+    }
+}
+
+/// One prepacked parameter panel: a contiguous f32 copy of the weight,
+/// GEMM-ready. `stale` marks it for in-place repacking after an
+/// `OptimStep` mutated the source parameter.
+struct Panel {
+    data: Vec<f32>,
+    stale: bool,
+}
+
+/// Prepacked-weight panel cache, keyed by interned param `KeyId` (dense
+/// per-program indices, so lookup is an array access — no hashing, no
+/// string keys). Populated lazily on first GEMM touching the param;
+/// `invalidate` (on `OptimStep`/strategy switch) marks every panel stale
+/// without dropping storage, so steady-state repacks are `copy_from_slice`
+/// into the retained buffer — zero allocation.
+#[derive(Default)]
+pub struct PanelCache {
+    panels: Vec<Option<Panel>>,
+    /// Lookups served from a fresh panel.
+    pub hits: u64,
+    /// First-touch packs (allocate).
+    pub misses: u64,
+    /// In-place repacks of a stale panel (no allocation).
+    pub repacks: u64,
+}
+
+impl PanelCache {
+    /// Pack (or refresh) panel `id` from the f32 weight `src`.
+    pub fn ensure(&mut self, id: usize, src: &[f32]) {
+        if self.panels.len() <= id {
+            self.panels.resize_with(id + 1, || None);
+        }
+        match &mut self.panels[id] {
+            Some(p) if !p.stale => self.hits += 1,
+            Some(p) if p.data.len() == src.len() => {
+                p.data.copy_from_slice(src);
+                p.stale = false;
+                self.repacks += 1;
+            }
+            slot => {
+                *slot = Some(Panel { data: src.to_vec(), stale: false });
+                self.misses += 1;
+            }
+        }
+    }
+
+    /// Pack (or refresh) panel `id` by dequantizing a bf16 weight — the
+    /// persistent dequant panel for [`native::matmul_bf16_panel_into`].
+    pub fn ensure_bf16(&mut self, id: usize, src: &[u16]) {
+        if self.panels.len() <= id {
+            self.panels.resize_with(id + 1, || None);
+        }
+        let dequant_into = |dst: &mut [f32]| {
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d = native::bf16_to_f32(s);
+            }
+        };
+        match &mut self.panels[id] {
+            Some(p) if !p.stale => self.hits += 1,
+            Some(p) if p.data.len() == src.len() => {
+                dequant_into(&mut p.data);
+                p.stale = false;
+                self.repacks += 1;
+            }
+            slot => {
+                let mut data = vec![0.0f32; src.len()];
+                dequant_into(&mut data);
+                *slot = Some(Panel { data, stale: false });
+                self.misses += 1;
+            }
+        }
+    }
+
+    /// The packed panel for `id` (must have been `ensure`d).
+    pub fn get(&self, id: usize) -> &[f32] {
+        self.panels[id].as_ref().map(|p| p.data.as_slice()).expect("panel not packed")
+    }
+
+    /// Mark every panel stale (parameters changed: `OptimStep`, strategy
+    /// switch). Storage is retained for in-place repacking.
+    pub fn invalidate(&mut self) {
+        for p in self.panels.iter_mut().flatten() {
+            p.stale = true;
+        }
+    }
+
+    /// Drop all panels (program identity changed: `KeyId`s re-interned).
+    pub fn clear(&mut self) {
+        self.panels.clear();
+    }
+}
+
+/// Parameter gradients of one fused block backward, as workspace slices
+/// in `BLOCK_PARAMS` order (g1, wq, wk, wv, wo, g2, w1, w2) — exactly the
+/// order of the compiled op's `gkeys`.
+pub struct BwdGrads<'w> {
+    /// d(gain 1) `[h]`.
+    pub dg1: &'w [f32],
+    /// d(wq) `[h, hl]`.
+    pub dwq: &'w [f32],
+    /// d(wk) `[h, hl]`.
+    pub dwk: &'w [f32],
+    /// d(wv) `[h, hl]`.
+    pub dwv: &'w [f32],
+    /// d(wo) `[hl, h]`.
+    pub dwo: &'w [f32],
+    /// d(gain 2) `[h]`.
+    pub dg2: &'w [f32],
+    /// d(w1) `[h, fl]`.
+    pub dw1: &'w [f32],
+    /// d(w2) `[fl, h]`.
+    pub dw2: &'w [f32],
+}
+
+impl<'w> BwdGrads<'w> {
+    /// Gradient slice by `BLOCK_PARAMS` index.
+    pub fn by_index(&self, i: usize) -> &'w [f32] {
+        match i {
+            0 => self.dg1,
+            1 => self.dwq,
+            2 => self.dwk,
+            3 => self.dwv,
+            4 => self.dwo,
+            5 => self.dg2,
+            6 => self.dw1,
+            7 => self.dw2,
+            _ => unreachable!("BLOCK_PARAMS has 8 entries"),
+        }
+    }
+}
+
+/// Shape of the `BLOCK_PARAMS[i]` gradient at `d` (cold-path tensor
+/// creation only — the warm path accumulates in place, no shapes needed).
+pub fn grad_shape(d: &BlockDims, i: usize) -> Vec<usize> {
+    match i {
+        0 | 5 => vec![d.h],
+        1 | 2 | 3 => vec![d.h, d.hl],
+        4 => vec![d.hl, d.h],
+        6 => vec![d.h, d.fl],
+        7 => vec![d.fl, d.h],
+        _ => unreachable!("BLOCK_PARAMS has 8 entries"),
+    }
+}
+
+/// Recompute the shared forward intermediates into carved slices.
+/// Returns `(xn1, q, k, v, att, lse, xn2, a, hh)`.
+#[allow(clippy::type_complexity)]
+fn forward_parts<'a>(
+    d: &BlockDims,
+    p: &[&[f32]; 8],
+    x: &[f32],
+    c: &mut Carver<'a>,
+) -> (
+    &'a mut [f32],
+    &'a mut [f32],
+    &'a mut [f32],
+    &'a mut [f32],
+    &'a mut [f32],
+    &'a mut [f32],
+    &'a mut [f32],
+    &'a mut [f32],
+    &'a mut [f32],
+) {
+    let (n, h, hl, fl) = (d.n, d.h, d.hl, d.fl);
+    let xn1 = c.take(n * h);
+    let q = c.take(n * hl);
+    let k = c.take(n * hl);
+    let v = c.take(n * hl);
+    let att = c.take(n * hl);
+    let lse = c.take(n * d.nh);
+    let xn2 = c.take(n * h);
+    let a = c.take(n * fl);
+    let hh = c.take(n * fl);
+
+    native::rmsnorm_into(x, p[0], n, h, xn1);
+    native::matmul_into(xn1, p[1], n, h, hl, q);
+    native::matmul_into(xn1, p[2], n, h, hl, k);
+    native::matmul_into(xn1, p[3], n, h, hl, v);
+    native::attention_into(q, k, v, d.b, d.s, d.nh, d.hd, att, lse);
+    native::rmsnorm_into(x, p[5], n, h, xn2);
+    // fused GEMM+GeLU: `a` (pre-activation, kept for dGeLU) and `hh` in
+    // one launch, same accumulation order as matmul-then-map
+    native::matmul_bias_gelu_into(xn2, p[6], None, n, h, fl, a, hh);
+    (xn1, q, k, v, att, lse, xn2, a, hh)
+}
+
+/// Fused block forward: the partial block output into `out [n, h]`, all
+/// intermediates carved from `ws` (≥ [`BlockDims::fwd_scratch_floats`]).
+/// Bit-identical to the unfused `block_fwd_tp{d}` artifact in 9 kernel
+/// launches (vs 11 unfused), zero allocations.
+pub fn block_fwd_ws(d: &BlockDims, p: &[&[f32]; 8], x: &[f32], out: &mut [f32], ws: &mut [f32]) {
+    let (n, h, hl, fl) = (d.n, d.h, d.hl, d.fl);
+    debug_assert_eq!(out.len(), n * h);
+    let mut c = Carver::new(ws);
+    let (_, _, _, _, att, _, _, _, hh) = forward_parts(d, p, x, &mut c);
+    let att_out = c.take(n * h);
+    native::matmul_into(att, p[4], n, hl, h, att_out);
+    // fused GEMM+residual: out = hh@w2 + att_out — f32 addition commutes,
+    // so this equals the oracle's att_out + mlp_out bit for bit
+    native::matmul_residual_into(hh, p[7], n, fl, h, att_out, out);
+    debug_assert_eq!(c.used(), d.fwd_scratch_floats());
+}
+
+/// Fused block backward: upstream `dy [n, h]` → `dx` (written to the
+/// caller's buffer) and the eight parameter gradients as slices of `ws`
+/// (≥ [`BlockDims::bwd_scratch_floats`]). Bit-identical to the unfused
+/// `block_bwd_tp{d}` artifact in 24 launches (vs 26), zero allocations.
+pub fn block_bwd_ws<'w>(
+    d: &BlockDims,
+    p: &[&[f32]; 8],
+    x: &[f32],
+    dy: &[f32],
+    dx: &mut [f32],
+    ws: &'w mut [f32],
+) -> BwdGrads<'w> {
+    let (n, h, hl, fl) = (d.n, d.h, d.hl, d.fl);
+    debug_assert_eq!(dx.len(), n * h);
+    let mut c = Carver::new(ws);
+    let (xn1, q, k, v, att, lse, xn2, a, hh) = forward_parts(d, p, x, &mut c);
+
+    // ---- MLP branch
+    let dw2 = c.take(fl * h);
+    let da = c.take(n * fl);
+    let dw1 = c.take(h * fl);
+    let dxn2 = c.take(n * h);
+    let dx_mlp = c.take(n * h);
+    let dg2 = c.take(h);
+    native::matmul_tn_into(hh, dy, n, fl, h, dw2);
+    // fused NT-GEMM+dGeLU: da = (dy@w2ᵀ) ⊙ gelu'(a) in one launch
+    native::matmul_nt_dgelu_into(dy, p[7], a, n, h, fl, da);
+    native::matmul_tn_into(xn2, da, n, h, fl, dw1);
+    native::matmul_nt_into(da, p[6], n, fl, h, dxn2);
+    native::rmsnorm_bwd_into(x, p[5], dxn2, n, h, dx_mlp, dg2);
+
+    // ---- attention branch
+    let dwo = c.take(hl * h);
+    let datt = c.take(n * hl);
+    let dq = c.take(n * hl);
+    let dk = c.take(n * hl);
+    let dv = c.take(n * hl);
+    let dwq = c.take(h * hl);
+    let dwk = c.take(h * hl);
+    let dwv = c.take(h * hl);
+    let dxn1 = c.take(n * h);
+    let dxn1_k = c.take(n * h);
+    let dxn1_v = c.take(n * h);
+    let dx_att = c.take(n * h);
+    let dg1 = c.take(h);
+    native::matmul_tn_into(att, dy, n, hl, h, dwo);
+    native::matmul_nt_into(dy, p[4], n, h, hl, datt);
+    native::attention_bwd_into(q, k, v, lse, att, datt, d.b, d.s, d.nh, d.hd, dq, dk, dv);
+    native::matmul_tn_into(xn1, dq, n, h, hl, dwq);
+    native::matmul_tn_into(xn1, dk, n, h, hl, dwk);
+    native::matmul_tn_into(xn1, dv, n, h, hl, dwv);
+    native::matmul_nt_into(dq, p[1], n, hl, h, dxn1);
+    native::matmul_nt_into(dk, p[2], n, hl, h, dxn1_k);
+    native::matmul_nt_into(dv, p[3], n, hl, h, dxn1_v);
+    counters::launch(); // dxn1 merge pass (oracle associativity: k+v first)
+    for i in 0..dxn1.len() {
+        dxn1[i] += dxn1_k[i] + dxn1_v[i];
+    }
+    native::rmsnorm_bwd_into(x, p[0], dxn1, n, h, dx_att, dg1);
+
+    counters::launch(); // dx residual-merge pass
+    for i in 0..dx.len() {
+        dx[i] = dx_att[i] + dx_mlp[i];
+    }
+    debug_assert_eq!(c.used(), d.bwd_scratch_floats());
+    BwdGrads { dg1, dwq, dwk, dwv, dwo, dg2, dw1, dw2 }
+}
+
+/// Head gradients as workspace slices (mutable: the executor scales them
+/// by the token weight in place before accumulating).
+pub struct HeadGrads<'w> {
+    /// d(final gain) `[h]`.
+    pub dgf: &'w mut [f32],
+    /// d(wout) `[h, v]`.
+    pub dwout: &'w mut [f32],
+}
+
+/// Fused head step: rmsnorm → logits → masked softmax-CE →
+/// dwout/dxn/rmsnorm-bwd, every intermediate carved from `ws`
+/// (≥ [`BlockDims::head_ws_floats`]); `dx [n, h]` is written to the
+/// caller's buffer. Bit-identical to the `head_step` artifact — same
+/// masking (`-1` targets drop out of loss/grad and the mean), same error
+/// cases (all-masked, target ≥ vocab).
+#[allow(clippy::too_many_arguments)]
+pub fn head_step_ws<'w>(
+    n: usize,
+    h: usize,
+    v: usize,
+    gf: &[f32],
+    wout: &[f32],
+    x: &[f32],
+    targets: &[i32],
+    dx: &mut [f32],
+    ws: &'w mut [f32],
+) -> Result<(f32, HeadGrads<'w>)> {
+    debug_assert_eq!(targets.len(), n);
+    debug_assert_eq!(dx.len(), n * h);
+    let count = targets.iter().filter(|&&tgt| tgt >= 0).count();
+    if count == 0 {
+        return Err(Error::Runtime("head_step: every target is masked".into()));
+    }
+    let mut c = Carver::new(ws);
+    let xn = c.take(n * h);
+    let logits = c.take(n * v);
+    let dlogits = c.take(n * v);
+    let dwout = c.take(h * v);
+    let dxn = c.take(n * h);
+    let dgf = c.take(h);
+
+    native::rmsnorm_into(x, gf, n, h, xn);
+    native::matmul_into(xn, wout, n, h, v, logits);
+    counters::launch(); // softmax-CE / dlogits pass
+    dlogits.fill(0.0); // masked rows must stay zero in a reused buffer
+    let mut loss = 0.0f32;
+    for r in 0..n {
+        if targets[r] < 0 {
+            continue; // masked: dlogits row stays zero
+        }
+        let row = &logits[r * v..(r + 1) * v];
+        let tgt = targets[r] as usize;
+        if tgt >= v {
+            return Err(Error::Runtime(format!("head_step: target {tgt} ≥ vocab {v}")));
+        }
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f32;
+        for &l in row {
+            denom += (l - max).exp();
+        }
+        let logz = max + denom.ln();
+        loss += logz - row[tgt];
+        let drow = &mut dlogits[r * v..(r + 1) * v];
+        for j in 0..v {
+            let p = (row[j] - max).exp() / denom;
+            drow[j] = p / count as f32;
+        }
+        drow[tgt] -= 1.0 / count as f32;
+    }
+    loss /= count as f32;
+
+    native::matmul_tn_into(xn, dlogits, n, h, v, dwout);
+    native::matmul_nt_into(dlogits, wout, n, v, h, dxn);
+    native::rmsnorm_bwd_into(x, gf, dxn, n, h, dx, dgf);
+    Ok((loss, HeadGrads { dgf, dwout }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::HostTensor;
+    use crate::testutil::Rng;
+
+    fn randvec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.f32_signed() * scale).collect()
+    }
+
+    fn block_params(
+        rng: &mut Rng,
+        cfg: &ManifestConfig,
+        tp: usize,
+    ) -> Vec<HostTensor> {
+        let (h, f) = (cfg.hidden, cfg.ffn);
+        let (hl, fl) = (h / tp, f / tp);
+        vec![
+            HostTensor::f32(vec![h], randvec(rng, h, 1.0)).unwrap(),
+            HostTensor::f32(vec![h, hl], randvec(rng, h * hl, 0.05)).unwrap(),
+            HostTensor::f32(vec![h, hl], randvec(rng, h * hl, 0.05)).unwrap(),
+            HostTensor::f32(vec![h, hl], randvec(rng, h * hl, 0.05)).unwrap(),
+            HostTensor::f32(vec![hl, h], randvec(rng, hl * h, 0.05)).unwrap(),
+            HostTensor::f32(vec![h], randvec(rng, h, 1.0)).unwrap(),
+            HostTensor::f32(vec![h, fl], randvec(rng, h * fl, 0.05)).unwrap(),
+            HostTensor::f32(vec![fl, h], randvec(rng, fl * h, 0.05)).unwrap(),
+        ]
+    }
+
+    /// The fused block drivers vs the unfused `block_fwd_tp{d}` /
+    /// `block_bwd_tp{d}` oracle artifacts, bit for bit, across ragged
+    /// `[n_seqs, seq_len]` shapes and TP degrees — on dirty workspaces.
+    #[test]
+    fn fused_block_drivers_bit_identical_to_oracle_artifacts() {
+        let cfg = native::tiny_config();
+        for (case, &(tp, b, s)) in
+            [(0usize, (1usize, 2usize, 16usize)), (1, (2, 1, 5)), (2, (4, 3, 7)), (3, (2, 2, 33))]
+                .iter()
+                .map(|(c, t)| (*c, t))
+        {
+            let mut rng = Rng::new(901 + case as u64);
+            let d = BlockDims::new(&cfg, tp, b, s);
+            let params = block_params(&mut rng, &cfg, tp);
+            let x = HostTensor::f32(vec![b, s, cfg.hidden], randvec(&mut rng, d.n * d.h, 0.5))
+                .unwrap();
+            let dy = HostTensor::f32(vec![b, s, cfg.hidden], randvec(&mut rng, d.n * d.h, 1.0))
+                .unwrap();
+
+            let mut fwd_in: Vec<&HostTensor> = params.iter().collect();
+            fwd_in.push(&x);
+            let y_oracle = native::call(&cfg, &format!("block_fwd_tp{tp}"), &fwd_in).unwrap();
+
+            let pslices: [&[f32]; 8] =
+                std::array::from_fn(|i| params[i].as_f32().unwrap());
+            let mut ws = vec![777.0f32; d.fwd_scratch_floats()];
+            let mut y = vec![777.0f32; d.n * d.h];
+            block_fwd_ws(&d, &pslices, x.as_f32().unwrap(), &mut y, &mut ws);
+            assert_eq!(
+                y,
+                y_oracle[0].as_f32().unwrap(),
+                "case {case}: fused fwd vs oracle"
+            );
+
+            let mut bwd_in = fwd_in.clone();
+            bwd_in.push(&dy);
+            let g_oracle = native::call(&cfg, &format!("block_bwd_tp{tp}"), &bwd_in).unwrap();
+
+            let mut ws = vec![777.0f32; d.bwd_scratch_floats()];
+            let mut dx = vec![777.0f32; d.n * d.h];
+            let grads = block_bwd_ws(
+                &d,
+                &pslices,
+                x.as_f32().unwrap(),
+                dy.as_f32().unwrap(),
+                &mut dx,
+                &mut ws,
+            );
+            assert_eq!(dx, g_oracle[0].as_f32().unwrap(), "case {case}: fused dx");
+            for i in 0..8 {
+                assert_eq!(
+                    grads.by_index(i),
+                    g_oracle[i + 1].as_f32().unwrap(),
+                    "case {case}: fused grad {i}"
+                );
+                assert_eq!(
+                    grad_shape(&d, i),
+                    g_oracle[i + 1].shape,
+                    "case {case}: grad shape {i}"
+                );
+            }
+        }
+    }
+
+    /// The fused head driver vs the `head_step` oracle artifact across
+    /// masked ragged shapes — bit-identical loss/dx/dgf/dwout, same
+    /// error cases.
+    #[test]
+    fn fused_head_driver_matches_oracle_including_masking() {
+        let cfg = ManifestConfig { hidden: 12, vocab: 19, ..native::tiny_config() };
+        let (h, v) = (cfg.hidden, cfg.vocab);
+        for (case, &(b, s)) in
+            [(0usize, (1usize, 4usize)), (1, (2, 7)), (2, (3, 5))].iter().map(|(c, t)| (*c, t))
+        {
+            let mut rng = Rng::new(71 + case as u64);
+            let n = b * s;
+            let gf = HostTensor::f32(vec![h], randvec(&mut rng, h, 1.0)).unwrap();
+            let wout = HostTensor::f32(vec![h, v], randvec(&mut rng, h * v, 0.3)).unwrap();
+            let x = HostTensor::f32(vec![b, s, h], randvec(&mut rng, n * h, 0.5)).unwrap();
+            // ragged masking: pad the tail of each sequence
+            let tgts: Vec<i32> = (0..n)
+                .map(|i| if i % s >= s - case % s.max(1) { -1 } else { ((i * 3) % v) as i32 })
+                .collect();
+            let any_real = tgts.iter().any(|&t| t >= 0);
+            if !any_real {
+                continue;
+            }
+            let t = HostTensor::i32(vec![b, s], tgts.clone()).unwrap();
+            let oracle = native::call(&cfg, "head_step", &[&gf, &wout, &x, &t]).unwrap();
+
+            let d = BlockDims { n, b, s, h, hl: h, fl: h, nh: 1, hd: h, v };
+            let mut ws = vec![777.0f32; d.head_ws_floats()];
+            let mut dx = vec![777.0f32; n * h];
+            let (loss, grads) = head_step_ws(
+                n,
+                h,
+                v,
+                gf.as_f32().unwrap(),
+                wout.as_f32().unwrap(),
+                x.as_f32().unwrap(),
+                &tgts,
+                &mut dx,
+                &mut ws,
+            )
+            .unwrap();
+            assert_eq!(loss, oracle[0].as_f32().unwrap()[0], "case {case}: loss bits");
+            assert_eq!(dx, oracle[1].as_f32().unwrap(), "case {case}: dx bits");
+            assert_eq!(&*grads.dgf, oracle[2].as_f32().unwrap(), "case {case}: dgf bits");
+            assert_eq!(&*grads.dwout, oracle[3].as_f32().unwrap(), "case {case}: dwout bits");
+        }
+
+        // error cases mirror the oracle: all-masked and out-of-vocab
+        let mut rng = Rng::new(5);
+        let n = 3;
+        let gf = randvec(&mut rng, h, 1.0);
+        let wout = randvec(&mut rng, h * v, 0.3);
+        let x = randvec(&mut rng, n * h, 0.5);
+        let mut ws = vec![0.0f32; 2 * n * h + 2 * n * v + h * v + h];
+        let mut dx = vec![0.0f32; n * h];
+        assert!(head_step_ws(n, h, v, &gf, &wout, &x, &[-1, -1, -1], &mut dx, &mut ws).is_err());
+        assert!(
+            head_step_ws(n, h, v, &gf, &wout, &x, &[1, v as i32, 2], &mut dx, &mut ws).is_err()
+        );
+    }
+
+    /// Panel-cache lifecycle: miss → hit → invalidate → in-place repack
+    /// (storage retained, no reallocation) → clear.
+    #[test]
+    fn panel_cache_repacks_in_place_after_invalidation() {
+        let mut pc = PanelCache::default();
+        let w1: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        pc.ensure(3, &w1);
+        assert_eq!((pc.misses, pc.hits, pc.repacks), (1, 0, 0));
+        assert_eq!(pc.get(3), &w1[..]);
+        let ptr_before = pc.get(3).as_ptr();
+
+        pc.ensure(3, &w1);
+        assert_eq!((pc.misses, pc.hits, pc.repacks), (1, 1, 0));
+
+        pc.invalidate();
+        let w2: Vec<f32> = (0..64).map(|i| -(i as f32)).collect();
+        pc.ensure(3, &w2);
+        assert_eq!((pc.misses, pc.hits, pc.repacks), (1, 1, 1));
+        assert_eq!(pc.get(3), &w2[..]);
+        assert_eq!(pc.get(3).as_ptr(), ptr_before, "repack must reuse the buffer");
+
+        // bf16 panels: dequantized copies, same lifecycle
+        let w16: Vec<u16> = w1.iter().map(|&x| native::f32_to_bf16(x)).collect();
+        pc.ensure_bf16(7, &w16);
+        let want: Vec<f32> = w16.iter().map(|&x| native::bf16_to_f32(x)).collect();
+        assert_eq!(pc.get(7), &want[..]);
+        let mut out = vec![0.0f32; 64];
+        let a16: Vec<u16> = (0..8).map(|i| native::f32_to_bf16(i as f32 * 0.5)).collect();
+        native::matmul_bf16_panel_into(&a16, pc.get(7), 1, 8, 8, &mut out[..8]);
+        let dense = native::matmul_bf16(&a16, &w16[..64], 1, 8, 8);
+        assert_eq!(&out[..8], &dense[..], "panel GEMM vs dense bf16 GEMM");
+
+        pc.clear();
+        pc.ensure(3, &w1);
+        assert_eq!(pc.misses, 2, "clear drops storage; next ensure re-allocates");
+    }
+
+    /// The compile-time sizing rule is exact: the drivers carve precisely
+    /// the advertised float counts (an exactly-sized buffer suffices).
+    #[test]
+    fn workspace_sizing_rule_is_exact() {
+        let cfg = native::tiny_config();
+        let d = BlockDims::new(&cfg, 2, 2, 9);
+        let mut rng = Rng::new(17);
+        let params = block_params(&mut rng, &cfg, 2);
+        let pslices: [&[f32]; 8] = std::array::from_fn(|i| params[i].as_f32().unwrap());
+        let x = randvec(&mut rng, d.n * d.h, 0.5);
+        let dy = randvec(&mut rng, d.n * d.h, 1.0);
+
+        let mut ws = vec![0.0f32; d.fwd_scratch_floats()]; // exact, no slack
+        let mut y = vec![0.0f32; d.n * d.h];
+        block_fwd_ws(&d, &pslices, &x, &mut y, &mut ws);
+
+        let mut ws = vec![0.0f32; d.bwd_scratch_floats()]; // exact, no slack
+        let mut dx = vec![0.0f32; d.n * d.h];
+        let _ = block_bwd_ws(&d, &pslices, &x, &dy, &mut dx, &mut ws);
+
+        // plan folding takes the max per device
+        let mut plan = WorkspacePlan::default();
+        plan.note(1, 100);
+        plan.note(1, 50);
+        plan.note(3, 10);
+        assert_eq!(plan.floats_for(1), 100);
+        assert_eq!(plan.floats_for(3), 10);
+        assert_eq!(plan.floats_for(0), 0);
+        assert_eq!(plan.floats_for(9), 0);
+
+        // the workspace grows once and stays
+        let mut ksw = KernelWorkspace::default();
+        ksw.ensure(64);
+        let p0 = ksw.slice(64).as_ptr();
+        assert_eq!(ksw.slice(32).as_ptr(), p0, "smaller slice reuses the buffer");
+        assert_eq!(ksw.capacity_floats(), 64);
+    }
+}

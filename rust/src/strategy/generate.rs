@@ -191,24 +191,19 @@ pub(crate) fn build_candidate(
     })
 }
 
-/// Full search: generate candidates, filter by memory, pick the fastest.
-#[deprecated(note = "use strategy::synth::synthesize with SynthOptions::legacy")]
-pub fn search_best(
-    cluster: &Cluster,
-    cm: &CostModel,
-    global_batch: u64,
-    seq_len: u64,
-) -> Result<(ParallelStrategy, f64)> {
-    let opts = super::synth::SynthOptions::legacy(global_batch, seq_len);
-    let rep = super::synth::synthesize(cluster, cm, &opts)?;
-    rep.best().cloned().ok_or_else(|| Error::Strategy("no feasible candidate strategy".into()))
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::costmodel::ModelCfg;
     use crate::sim::simulate_step;
+    use crate::strategy::synth::{synthesize, SynthOptions};
+
+    /// The generator's end-to-end search, via the synth pipeline over the
+    /// frozen pre-synth space (tp ∈ {2,4,8} × dp ∈ {1,2,4}, mb 1, 1F1B).
+    fn search(cluster: &Cluster, cm: &CostModel) -> (ParallelStrategy, f64) {
+        let rep = synthesize(cluster, cm, &SynthOptions::legacy(64, 4096)).unwrap();
+        rep.best().expect("feasible candidate").clone()
+    }
 
     #[test]
     fn groups_respect_node_and_kind_boundaries() {
@@ -251,24 +246,22 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
     fn search_handles_the_c2_situation() {
         // 31 of 32 H20s: the generator must use more than 24 GPUs (beat the
         // Megatron discard-the-partial-node outcome).
         let mut cluster = Cluster::h20(32);
         cluster.fail_gpu(31);
         let cm = CostModel::new(ModelCfg::llama_32b());
-        let (best, t) = search_best(&cluster, &cm, 64, 4096).unwrap();
+        let (best, t) = search(&cluster, &cm);
         assert!(best.ranks().len() > 24, "uses {} GPUs", best.ranks().len());
         assert!(t > 0.0);
     }
 
     #[test]
-    #[allow(deprecated)]
     fn generated_hetero_layout_beats_uniform_megatron() {
         let cluster = Cluster::h800_16_h20_16();
         let cm = CostModel::new(ModelCfg::llama_32b());
-        let (best, t_gen) = search_best(&cluster, &cm, 64, 4096).unwrap();
+        let (best, t_gen) = search(&cluster, &cm);
         let cfg = crate::baselines::megatron::table4("llama-32b", 16, 16).unwrap();
         let t_mega =
             crate::baselines::megatron::step_time(&cluster, &cm, cfg, 64, 4096).unwrap();
@@ -297,11 +290,10 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
     fn generated_best_is_comparable_to_the_papers_table5() {
         let cluster = Cluster::h800_16_h20_16();
         let cm = CostModel::new(ModelCfg::llama_32b());
-        let (_, t_gen) = search_best(&cluster, &cm, 64, 4096).unwrap();
+        let (_, t_gen) = search(&cluster, &cm);
         let t_paper =
             simulate_step(&cluster, &cm, &crate::strategy::tables::hetu_32b_16h800_16h20())
                 .unwrap()

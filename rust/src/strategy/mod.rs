@@ -11,7 +11,6 @@
 pub mod generate;
 pub mod lower;
 pub mod memory;
-pub mod search;
 pub mod synth;
 pub mod tables;
 

@@ -3,9 +3,10 @@
 //! This is the consolidated strategy search for generated clusters: one
 //! enumeration pass over (TP degree × DP width × micro-batch size ×
 //! schedule), one memory-feasibility gate, and a branch-and-bound ranking
-//! loop that keeps a 1024-rank search sub-second. It subsumes the older
-//! `generate::search_best` / `search::choose_best` pair (both remain as
-//! thin deprecated wrappers over this module).
+//! loop that keeps a 1024-rank search sub-second. It subsumed (and has
+//! since replaced outright) the older `generate::search_best` /
+//! `search::choose_best` pair; [`SynthOptions::legacy`] preserves their
+//! exact search space for callers that want the frozen pre-synth behavior.
 //!
 //! Pruning is hierarchical, mirroring how the paper's planner scales:
 //!
@@ -68,9 +69,9 @@ impl SynthOptions {
         }
     }
 
-    /// The exact search space of the pre-synth `generate::search_best`
-    /// (tp ∈ {2,4,8} × dp ∈ {1,2,4}, micro-batch 1, 1F1B). Used by the
-    /// deprecated wrappers so legacy callers see identical results.
+    /// The exact search space of the removed pre-synth
+    /// `generate::search_best` (tp ∈ {2,4,8} × dp ∈ {1,2,4}, micro-batch
+    /// 1, 1F1B), frozen so migrated callers see identical results.
     pub fn legacy(global_batch: u64, seq_len: u64) -> SynthOptions {
         SynthOptions {
             global_batch,
@@ -115,8 +116,7 @@ impl SynthReport {
 /// Check every stage of `strat` fits its devices' memory (delegates to the
 /// per-stage planner in [`crate::strategy::memory`], which models schedule-
 /// dependent activation liveness). This is the single memory gate shared by
-/// [`synthesize`], [`rank`] and the deprecated `search`/`generate` entry
-/// points.
+/// [`synthesize`] and [`rank`].
 pub fn memory_feasible(cluster: &Cluster, cm: &CostModel, strat: &ParallelStrategy) -> bool {
     crate::strategy::memory::plan(cm, cluster, strat).1
 }
@@ -175,8 +175,8 @@ pub fn rank(
     out
 }
 
-/// Pick the fastest feasible candidate from an externally supplied list.
-/// (The target of the deprecated `search::choose_best`.)
+/// Pick the fastest feasible candidate from an externally supplied list
+/// (the direct replacement for the removed `search::choose_best`).
 pub fn best(
     cluster: &Cluster,
     cm: &CostModel,
@@ -372,16 +372,64 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn legacy_wrappers_agree_with_synth() {
-        let cluster = Cluster::h800_16_h20_16();
+    fn infeasible_strategies_filtered() {
+        // 32B on a single H20: cannot fit.
+        let cluster = Cluster::h20(1);
         let cm = CostModel::new(ModelCfg::llama_32b());
-        let (old_best, old_t) =
-            crate::strategy::generate::search_best(&cluster, &cm, 64, 4096).unwrap();
-        let rep = synthesize(&cluster, &cm, &SynthOptions::legacy(64, 4096)).unwrap();
-        let (new_best, new_t) = rep.best().expect("feasible");
-        assert_eq!(old_best.name, new_best.name);
-        assert!((old_t - new_t).abs() < 1e-12);
+        let s = crate::strategy::uniform(
+            "solo",
+            &[0],
+            1,
+            1,
+            1,
+            60,
+            1,
+            1,
+            4096,
+            ScheduleKind::OneFOneB,
+            false,
+            true,
+        )
+        .unwrap();
+        assert!(!memory_feasible(&cluster, &cm, &s));
+        assert!(best(&cluster, &cm, &[s]).is_err());
+    }
+
+    #[test]
+    fn best_prefers_faster_strategy() {
+        let cluster = Cluster::h20(32);
+        let cm = CostModel::new(ModelCfg::llama_32b());
+        let ranks: Vec<u32> = (0..32).collect();
+        let good = crate::strategy::tables::hetu_c1_32h20();
+        let bad = crate::strategy::uniform(
+            "tp32",
+            &ranks,
+            1,
+            32,
+            1,
+            60,
+            64,
+            1,
+            4096,
+            ScheduleKind::OneFOneB,
+            false,
+            false,
+        )
+        .unwrap();
+        let (winner, t) = best(&cluster, &cm, &[bad, good.clone()]).unwrap();
+        assert_eq!(winner.name, good.name);
+        assert!(t > 0.0);
+    }
+
+    #[test]
+    fn dead_ranks_disqualify() {
+        let mut cluster = Cluster::h20(32);
+        cluster.fail_gpu(31);
+        let cm = CostModel::new(ModelCfg::llama_32b());
+        let c1 = crate::strategy::tables::hetu_c1_32h20(); // uses rank 31
+        let c2 = crate::strategy::tables::hetu_c2_31h20();
+        let (winner, _) = best(&cluster, &cm, &[c1, c2.clone()]).unwrap();
+        assert_eq!(winner.name, c2.name);
     }
 
     #[test]

@@ -53,14 +53,17 @@ pub struct PoolEntry {
 /// replaying uniform-bandwidth sender selection.
 type PlanKey = (usize, usize, bool, bool);
 
-/// `(entry, schedule, zero1, micro-batch shape class)` — the compiled-
-/// artifact cache key (DESIGN.md §9). The entry index stands in for
-/// `(strategy, layout)` (the pool instantiates each exactly once); the
-/// rest are the inputs the compile pass freezes. Anything else — notably
-/// an elastic `dead` set — is *not* an input: a compiled tape names only
-/// the strategy's own ranks, so failover recompiles can share cache
-/// entries with healthy engines without pollution.
-type ArtifactKey = (usize, ScheduleKind, bool, ShapeClass);
+/// `(entry, schedule, zero1, kernel-fusion, micro-batch shape class)` —
+/// the compiled-artifact cache key (DESIGN.md §9). The entry index stands
+/// in for `(strategy, layout)` (the pool instantiates each exactly once);
+/// the rest are the inputs the compile pass freezes — kernel fusion
+/// included, since a fused tape carries `FusedCall`s and workspace
+/// reservations an unfused engine must not replay (DESIGN.md §12).
+/// Anything else — notably an elastic `dead` set — is *not* an input: a
+/// compiled tape names only the strategy's own ranks, so failover
+/// recompiles can share cache entries with healthy engines without
+/// pollution.
+type ArtifactKey = (usize, ScheduleKind, bool, bool, ShapeClass);
 
 /// A pool of instantiated strategies with a pairwise switch-plan cache.
 /// Cached plans are `Arc`-shared: a cache hit hands the pooled allocation
@@ -200,8 +203,9 @@ impl StrategyPool {
 
     /// The pooled compiled MPMD program for `engine`'s current strategy,
     /// compiling on first use and installing it as the engine's cached
-    /// artifact. Keyed by `(entry, schedule, zero1, shape class)` — the
-    /// exact inputs the compile pass freezes — so a hit is a refcount
+    /// artifact. Keyed by `(entry, schedule, zero1, kernel fusion, shape
+    /// class)` — the exact inputs the compile pass freezes — so a hit is
+    /// a refcount
     /// bump shared with every engine on the same key, and a hot switch
     /// back onto a previously-compiled entry skips the compile entirely
     /// even though the switch cleared the engine-local cache.
@@ -217,8 +221,13 @@ impl StrategyPool {
                 engine.strategy.name
             ))
         })?;
-        let key =
-            (entry, engine.strategy.schedule, engine.zero1, ShapeClass::of_engine(engine));
+        let key = (
+            entry,
+            engine.strategy.schedule,
+            engine.zero1,
+            engine.fusion_active(),
+            ShapeClass::of_engine(engine),
+        );
         if let Some(p) = self.artifacts.get(&key) {
             let p = Arc::clone(p);
             // install re-validates schedule/zero1/counts/shape at the
@@ -704,6 +713,47 @@ mod tests {
         let r = refr.train_step_reference(&mut |_p, _m| c2.microbatch(b, s)).unwrap();
         assert_eq!(a.loss.to_bits(), r.loss.to_bits(), "compiled loss bits diverge");
         assert_eq!(a.wire_elems, r.wire_elems);
+    }
+
+    #[test]
+    fn pooled_artifacts_carry_the_kernel_level_plan() {
+        // the pooled program is the FULL compiled artifact — the fused
+        // call table and per-rank workspace reservations ride along, so
+        // a cache hit re-dispatches zero-alloc fused replay with no
+        // kernel-level rework; a fusion-off engine lands on a distinct
+        // key (its tape must carry no FusedCalls to replay)
+        let cfg = native::tiny_config();
+        let mut pool = tiny_pool();
+        let mut eng = pool.spawn_engine(crate::runtime::Runtime::native(cfg), 0, 42, 1e-3).unwrap();
+        let p = pool.compiled_for(&mut eng).unwrap();
+        assert!(p.fused_kernels, "native engines fuse by default");
+        assert_eq!(p.fused.len(), p.ops.len());
+        assert!(
+            p.fused.iter().any(|f| f.is_some()),
+            "dp2 block GEMMs must lower to fused calls"
+        );
+        assert!(
+            (0..2).all(|d| p.ws_plan.floats_for(d) > 0),
+            "both dp ranks run blocks and need workspace"
+        );
+
+        // fusion off: engine-local cache cleared, pooled lookup is a miss
+        // on its own key, and the unfused tape is genuinely unfused
+        eng.set_kernel_fusion(false);
+        assert!(eng.compiled_cached().is_none(), "fusion toggle clears the artifact");
+        let (h0, m0) = (pool.artifact_hits(), pool.artifact_misses());
+        let p_off = pool.compiled_for(&mut eng).unwrap();
+        assert_eq!((pool.artifact_hits(), pool.artifact_misses()), (h0, m0 + 1));
+        assert!(!Arc::ptr_eq(&p, &p_off), "fusion is part of the artifact key");
+        assert!(!p_off.fused_kernels);
+        assert!(p_off.fused.iter().all(|f| f.is_none()));
+        assert!(p_off.ws_plan.per_device_floats.iter().all(|&f| f == 0));
+
+        // toggling back re-dispatches the pooled fused tape as a hit
+        eng.set_kernel_fusion(true);
+        let p2 = pool.compiled_for(&mut eng).unwrap();
+        assert!(Arc::ptr_eq(&p, &p2), "fused key hit hands back the pooled tape");
+        assert_eq!((pool.artifact_hits(), pool.artifact_misses()), (h0 + 1, m0 + 1));
     }
 
     #[test]

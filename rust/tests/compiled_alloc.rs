@@ -1,10 +1,13 @@
-//! Steady-state allocation contract of the compiled executor (ISSUE 7,
-//! DESIGN.md §9): after warm-up, the **dispatch layer** — the tape walk
-//! with its ready checks, clock propagation, and delivery-lane folding —
-//! performs **zero** heap allocation; and a full compiled step (dispatch
-//! + kernels) allocates strictly less than the event-driven interpreter
-//! on the same data, because every key, endpoint, and readiness
-//! structure is frozen at compile time. Kernel outputs and tensor
+//! Steady-state allocation contract of the compiled executor (ISSUE 7 +
+//! ISSUE 10, DESIGN.md §9/§12): after warm-up, the **dispatch layer** —
+//! the tape walk with its ready checks, clock propagation, and
+//! delivery-lane folding — performs **zero** heap allocation; the
+//! **kernel layer** of a warm fused step allocates **zero** bytes
+//! (every intermediate is a `KernelWorkspace` slice and every weight a
+//! cached panel — `StepStats::kernel_bytes_alloc == 0`); and whole
+//! steps order strictly: fused compiled < unfused compiled <
+//! event-driven on the same data, because fusion removes the per-call
+//! kernel `Vec`s the unfused tape still pays. Host-side tensor
 //! transfers still allocate by design. With §10 tracing enabled the
 //! contract holds unchanged: the span ring is sized once on the first
 //! traced step and warm walks store spans without allocating.
@@ -70,11 +73,16 @@ fn warm_compiled_dispatch_allocates_nothing() {
     let mut cmp =
         Engine::with_runtime(Runtime::native(cfg), s.clone(), 42, 1e-3).unwrap();
     cmp.set_exec_mode(ExecMode::Compiled);
+    let mut unf =
+        Engine::with_runtime(Runtime::native(cfg), s.clone(), 42, 1e-3).unwrap();
+    unf.set_exec_mode(ExecMode::Compiled);
+    unf.set_kernel_fusion(false);
     let mut ev = Engine::with_runtime(Runtime::native(cfg), s.clone(), 42, 1e-3).unwrap();
 
-    // warm-up: compile the tape, size the scratch/arena, create moments
+    // warm-up: compile the tape, size the workspace/arena, pack panels,
+    // create moments
     let pool = mk_batches(7);
-    for eng in [&mut cmp, &mut ev] {
+    for eng in [&mut cmp, &mut unf, &mut ev] {
         for _ in 0..2 {
             eng.train_step(&mut |p, m| pool[p][m].clone()).unwrap();
         }
@@ -91,19 +99,41 @@ fn warm_compiled_dispatch_allocates_nothing() {
     assert_eq!(walk_allocs, 0, "warm dispatch walk allocated {walk_allocs} times");
     assert_eq!(makespan, 0.0, "null executor has zero-duration ops");
 
-    // 2. a full compiled step allocates strictly less than the
-    //    event-driven interpreter on the same data: kernels and tensor
-    //    movement are shared, but the compiled path formats no keys and
-    //    builds no per-step readiness structures
+    // 2. kernel layer (ISSUE 10): a warm fused compiled step allocates
+    //    ZERO bytes in the kernels — intermediates live in the frozen
+    //    `KernelWorkspace`, weights in repacked panels — and launches
+    //    strictly fewer kernels than the unfused tape (fused epilogues
+    //    merge the gelu / residual / merge passes into their GEMMs).
+    //    Whole steps order strictly: fused < unfused compiled <
+    //    event-driven, and all three land on identical loss bits.
     let a1 = allocs();
-    cmp.train_step(&mut |p, m| pool[p][m].clone()).unwrap();
-    let compiled_step = allocs() - a1;
+    let st_f = cmp.train_step(&mut |p, m| pool[p][m].clone()).unwrap();
+    let fused_step = allocs() - a1;
     let a2 = allocs();
-    ev.train_step(&mut |p, m| pool[p][m].clone()).unwrap();
-    let event_step = allocs() - a2;
+    let st_u = unf.train_step(&mut |p, m| pool[p][m].clone()).unwrap();
+    let unfused_step = allocs() - a2;
+    let a3 = allocs();
+    let st_e = ev.train_step(&mut |p, m| pool[p][m].clone()).unwrap();
+    let event_step = allocs() - a3;
+    assert_eq!(st_f.loss.to_bits(), st_e.loss.to_bits(), "fused loss bits diverge");
+    assert_eq!(st_u.loss.to_bits(), st_e.loss.to_bits(), "unfused loss bits diverge");
+    assert_eq!(
+        st_f.kernel_bytes_alloc, 0,
+        "warm fused step allocated {} kernel floats",
+        st_f.kernel_bytes_alloc
+    );
+    assert!(st_u.kernel_bytes_alloc > 0, "unfused tape pays per-kernel output Vecs");
+    assert!(st_e.kernel_bytes_alloc > 0, "interpreter pays per-kernel output Vecs");
     assert!(
-        compiled_step < event_step,
-        "compiled step allocated {compiled_step}, event-driven {event_step}"
+        st_f.kernel_launches > 0 && st_f.kernel_launches < st_u.kernel_launches,
+        "fused launches {} must undercut unfused {}",
+        st_f.kernel_launches,
+        st_u.kernel_launches
+    );
+    assert!(
+        fused_step < unfused_step && unfused_step < event_step,
+        "step allocations must order fused {fused_step} < unfused {unfused_step} \
+         < event-driven {event_step}"
     );
 
     // 3. tracing on (§10): the first traced step sizes the span ring —
@@ -122,6 +152,10 @@ fn warm_compiled_dispatch_allocates_nothing() {
     );
     assert!(st_tr.breakdown.is_some(), "traced step must fold a breakdown");
     assert!(st_ev.breakdown.is_none(), "untraced step must not fabricate one");
+    assert_eq!(
+        st_tr.kernel_bytes_alloc, 0,
+        "tracing must not reopen kernel-layer allocation"
+    );
     cmp.replay_compiled_tape(&prog).unwrap(); // warm the traced walk
     let a3 = allocs();
     cmp.replay_compiled_tape(&prog).unwrap();

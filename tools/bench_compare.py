@@ -39,6 +39,9 @@ GUARDED = {
         "engine hot-switch A<->B (cached, batched)",
         "engine train_step dp2 ragged 12x[2,2]",
         "step wall lowered-C2 compiled dispatch",
+        "step wall lowered-C2 compiled unfused",
+        "kernel launches lowered-C2 fused step",
+        "kernel launches lowered-C2 unfused step",
         "compile lowered-C2 -> rank tape",
         "trace_overhead",
         "specialize 256-rank generated strategy",
